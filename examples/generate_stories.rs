@@ -1,0 +1,71 @@
+//! Qualitative evaluation driver: the paper's Table-3 prompt suite.
+//!
+//! Loads a trained checkpoint (from `train_tinystories` or `hsm train
+//! --checkpoint-out`), runs the 11 prompts, and prints prompt →
+//! completion pairs at several temperatures, demonstrating the
+//! user-controllable determinism the paper discusses in §2.
+//!
+//! ```bash
+//! cargo run --release --example generate_stories -- --checkpoint runs/e2e.ckpt
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use hsm::checkpoint::Checkpoint;
+use hsm::config::Manifest;
+use hsm::corpus;
+use hsm::generation::{generate, SampleCfg, TABLE3_PROMPTS};
+use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::tokenizer::trainer as bpe;
+use hsm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::new("generate_stories")
+        .flag("preset", "ci", "artifact preset")
+        .flag("variant", "hsm_ab", "model variant (must match checkpoint)")
+        .optional("checkpoint", "trained checkpoint (default: fresh init)")
+        .flag("corpus-bytes", "2000000", "corpus size (tokenizer must match training)")
+        .flag("max-new-tokens", "24", "completion length")
+        .flag("temperature", "0", "0 = greedy (the Table-3 setting)")
+        .parse(&argv)
+        .map_err(|e| anyhow!(e))?;
+
+    let manifest = Manifest::load_variant("artifacts".as_ref(), &a.str("preset"), &a.str("variant"))?;
+    let mut engine = PjrtEngine::new(manifest.clone())?;
+    match a.get("checkpoint") {
+        Some(p) => {
+            let ck = Checkpoint::load(p.as_ref())?;
+            if ck.meta_value("variant") != Some(&a.str("variant")) {
+                bail!("checkpoint variant mismatch: {:?}", ck.meta_value("variant"));
+            }
+            engine.set_params(ck.group("param"))?;
+            println!("loaded checkpoint at step {}", ck.step());
+        }
+        None => {
+            engine.init(42)?;
+            println!("(no checkpoint — sampling from a FRESH INIT; expect noise)");
+        }
+    }
+
+    // The tokenizer is reconstructed deterministically from the same corpus
+    // seed used in training (it is a pure function of corpus + vocab).
+    let text = corpus::generate(1234, a.usize("corpus-bytes").map_err(|e| anyhow!(e))? / 500);
+    let tok = bpe::train(&text, manifest.vocab)?;
+
+    let temp: f32 = a.f64("temperature").map_err(|e| anyhow!(e))? as f32;
+    println!("\n=== Table 3 prompt suite ({}, T={temp}) ===\n", manifest.display_name);
+    for (i, prompt) in TABLE3_PROMPTS.iter().enumerate() {
+        let cfg = SampleCfg {
+            temperature: temp,
+            top_k: 40,
+            max_new_tokens: a.usize("max-new-tokens").map_err(|e| anyhow!(e))?,
+            seed: i as u64,
+            stop_at_eot: true,
+        };
+        match generate(&mut engine, &tok, prompt, &cfg) {
+            Ok(g) => println!("{:>2}. {} ▸{}\n", i + 1, g.prompt, g.completion),
+            Err(e) => println!("{:>2}. (prompt too long for ctx: {e})\n", i + 1),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! The linear-time inference story: native incremental decoding vs the
+//! full-context PJRT decode.
+//!
+//! The paper's complexity argument (§3) says HSM needs O(1) work per layer
+//! per generated token, while attention needs O(t).  The PJRT `decode`
+//! artifact recomputes the whole window every token, so this example
+//! decodes the same continuation three ways and reports per-token cost:
+//!
+//! 1. PJRT full-context forward (what `hsm generate` uses),
+//! 2. native incremental engine, HSM variant (ring buffers, O(1)/layer),
+//! 3. native incremental engine, GPT variant (KV cache, O(t)/layer),
+//!
+//! and verifies 1 ≡ 2 on logits argmax along the way.
+//!
+//! ```bash
+//! cargo run --release --example incremental_decode -- --tokens 48
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use hsm::config::Manifest;
+use hsm::generation::argmax;
+use hsm::infer::{InferenceEngine, ModelWeights};
+use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::new("incremental_decode")
+        .flag("preset", "ci", "artifact preset")
+        .flag("tokens", "48", "tokens to decode")
+        .parse(&argv)
+        .map_err(|e| anyhow!(e))?;
+    let preset = a.str("preset");
+    let n_tokens = a.usize("tokens").map_err(|e| anyhow!(e))?;
+
+    for variant in ["hsm_ab", "gpt"] {
+        let m = Manifest::load_variant("artifacts".as_ref(), &preset, variant)?;
+        let ctx = m.ctx;
+        let vocab = m.vocab;
+        let n = n_tokens.min(ctx - 1);
+
+        let mut pjrt = PjrtEngine::new(m.clone())?;
+        pjrt.init(3)?;
+        let weights = ModelWeights::from_flat(&m, &pjrt.get_params()?)?;
+        let mut native = InferenceEngine::new(m.clone(), weights)?;
+
+        // --- PJRT full-context greedy decode ---
+        let mut toks: Vec<i32> = vec![1];
+        pjrt.decode(&{
+            let mut w = toks.clone();
+            w.resize(ctx, 0);
+            w
+        })?; // compile outside timing
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let mut window = toks.clone();
+            window.resize(ctx, 0);
+            let logits = pjrt.decode(&window)?;
+            let pos = toks.len() - 1;
+            let next = argmax(&logits[pos * vocab..(pos + 1) * vocab]);
+            toks.push(next as i32);
+        }
+        let pjrt_per_tok = t0.elapsed().as_secs_f64() / n as f64;
+
+        // --- native incremental greedy decode ---
+        let t0 = Instant::now();
+        let mut ntoks: Vec<u32> = vec![1];
+        for _ in 0..n {
+            let logits = native.step(*ntoks.last().unwrap())?;
+            ntoks.push(argmax(logits));
+        }
+        let native_per_tok = t0.elapsed().as_secs_f64() / n as f64;
+
+        // Greedy sequences must agree (logits parity is asserted to 2e-3
+        // in runtime_e2e; argmax equality is the user-visible form).
+        let agree = toks.iter().map(|&t| t as u32).eq(ntoks.iter().copied());
+        println!(
+            "{variant:10} ({preset}): PJRT full-ctx {:8.3} ms/tok | native incremental {:8.3} ms/tok ({:4.1}× ) | greedy match: {}",
+            pjrt_per_tok * 1e3,
+            native_per_tok * 1e3,
+            pjrt_per_tok / native_per_tok,
+            if agree { "YES" } else { "NO (fp tie-break)" },
+        );
+    }
+    println!(
+        "\nHSM's ring-buffer decode does O(1) work per layer per token; the\n\
+         attention KV-cache path grows with position — the paper's complexity\n\
+         claim, visible as the gap between the two native rows at long ctx."
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the whole public API in ~60 lines.
+//!
+//! Synthesises a corpus, trains a BPE tokenizer, builds the dataset,
+//! trains the paper's best pure-HSM variant (`hsm_ab`, ci preset) for a
+//! few steps through the PJRT runtime, evaluates, and generates text.
+//!
+//! ```bash
+//! make artifacts            # once
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use hsm::config::Manifest;
+use hsm::coordinator::{Trainer, TrainerOptions};
+use hsm::corpus;
+use hsm::data::Dataset;
+use hsm::generation::{generate, SampleCfg};
+use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::tokenizer::trainer as bpe;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT-compiled artifact set (python ran once, at build time).
+    let manifest = Manifest::load_variant("artifacts".as_ref(), "ci", "hsm_ab")?;
+    println!(
+        "model: {} — dim {}, ctx {}, vocab {}, {} params",
+        manifest.display_name, manifest.dim, manifest.ctx, manifest.vocab, manifest.param_count
+    );
+
+    // 2. Data: synthetic TinyStories → BPE tokenizer → windows.
+    let text = corpus::generate(1234, 1500);
+    let tok = bpe::train(&text, manifest.vocab)?;
+    let (train, val, stats) = Dataset::build(&text, &tok, manifest.ctx, 0.9, 42)?;
+    println!(
+        "data: {} stories → {} windows ({} train / {} val)",
+        stats.stories_total, stats.windows, train.len(), val.len()
+    );
+
+    // 3. Train for a handful of steps (first step pays the XLA compile).
+    let mut engine = PjrtEngine::new(manifest)?;
+    let mut trainer = Trainer::new(
+        &mut engine,
+        TrainerOptions {
+            epochs: 1,
+            max_steps: Some(30),
+            eval_batches: Some(4),
+            log_every: 10,
+            ..Default::default()
+        },
+    );
+    let outcome = trainer.run(&train, &val)?;
+    println!(
+        "trained {} steps: val loss {:.4} (uniform would be {:.4})",
+        outcome.total_steps,
+        outcome.final_val_loss(),
+        (engine.manifest().vocab as f32).ln()
+    );
+
+    // 4. Generate.
+    let cfg = SampleCfg { temperature: 0.8, top_k: 40, max_new_tokens: 32, seed: 7, ..Default::default() };
+    let g = generate(&mut engine, &tok, "Once upon a time", &cfg)?;
+    println!("\nprompt:     {}", g.prompt);
+    println!("completion: {}", g.completion.trim());
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! End-to-end training driver — the repo's headline validation run.
+//!
+//! Trains one variant on the TinyStories-like corpus through the full
+//! three-layer stack (rust coordinator → PJRT → AOT HLO containing the
+//! Pallas kernels), logging the loss curve, and finishes with sampled
+//! stories.  The run recorded in EXPERIMENTS.md §E2E used:
+//!
+//! ```bash
+//! cargo run --release --example train_tinystories -- \
+//!     --preset ci --variant hsm_ab --steps 300 --corpus-bytes 2000000
+//! ```
+//!
+//! (`--preset desktop` runs the paper-scale architecture: dim 256,
+//! ctx 128 — about 100× more FLOPs per step; same code path.)
+
+use anyhow::{anyhow, Result};
+use hsm::checkpoint::Checkpoint;
+use hsm::config::Manifest;
+use hsm::coordinator::{Trainer, TrainerOptions};
+use hsm::corpus;
+use hsm::data::Dataset;
+use hsm::generation::{generate, SampleCfg};
+use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::tokenizer::trainer as bpe;
+use hsm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::new("train_tinystories")
+        .flag("preset", "ci", "artifact preset")
+        .flag("variant", "hsm_ab", "model variant")
+        .flag("steps", "300", "optimizer steps")
+        .flag("epochs", "100", "epoch cap (steps usually bind first)")
+        .flag("corpus-bytes", "2000000", "synthetic corpus size")
+        .flag("seed", "42", "init seed")
+        .flag("out", "runs/e2e.ckpt", "checkpoint output")
+        .parse(&argv)
+        .map_err(|e| anyhow!(e))?;
+
+    let manifest = Manifest::load_variant("artifacts".as_ref(), &a.str("preset"), &a.str("variant"))?;
+    println!(
+        "=== E2E: {} ({} preset, {} params) ===",
+        manifest.display_name, manifest.preset, manifest.param_count
+    );
+
+    let text = corpus::generate(1234, a.usize("corpus-bytes").map_err(|e| anyhow!(e))? / 500);
+    println!("corpus: {} bytes", text.len());
+    let tok = bpe::train(&text, manifest.vocab)?;
+    let (train, val, stats) = Dataset::build(&text, &tok, manifest.ctx, 0.9, 42)?;
+    println!(
+        "dataset: {} windows ({} stories, {} filtered), {} train / {} val",
+        stats.windows, stats.stories_total, stats.stories_filtered, train.len(), val.len()
+    );
+
+    let mut engine = PjrtEngine::new(manifest.clone())?;
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(
+        &mut engine,
+        TrainerOptions {
+            epochs: a.usize("epochs").map_err(|e| anyhow!(e))?,
+            max_steps: Some(a.usize("steps").map_err(|e| anyhow!(e))?),
+            seed: a.u64("seed").map_err(|e| anyhow!(e))?,
+            eval_batches: Some(8),
+            log_every: 20,
+            record_steps: true,
+        },
+    );
+    let outcome = trainer.run(&train, &val)?;
+    println!("\n=== loss curve (per-epoch) ===");
+    for e in &outcome.epochs {
+        println!(
+            "epoch {:>2}: train {:.4}  val {:.4}  acc {:.4}  ({:.1}s, {} steps)",
+            e.epoch, e.train_loss, e.val_loss, e.val_acc, e.secs, e.steps
+        );
+    }
+    println!(
+        "total: {} steps in {:.1}s ({:.0} ms/step steady-state)",
+        outcome.total_steps,
+        outcome.total_secs,
+        1e3 * outcome.total_secs / outcome.total_steps as f64
+    );
+    let _ = t0;
+
+    // Checkpoint.
+    let names: Vec<String> = manifest.params.iter().map(|p| p.name.clone()).collect();
+    let shapes: Vec<Vec<usize>> = manifest.params.iter().map(|p| p.shape.clone()).collect();
+    let (m, v) = engine.get_state()?;
+    Checkpoint::from_training(
+        &manifest.variant,
+        &manifest.preset,
+        outcome.total_steps,
+        &names,
+        &shapes,
+        engine.get_params()?,
+        m,
+        v,
+    )
+    .save(a.str("out").as_ref())?;
+    println!("checkpoint → {}", a.str("out"));
+
+    // Sample a few stories.
+    println!("\n=== samples ===");
+    for (i, prompt) in ["Once upon a time", "One day, Lily went to", "There once was a"]
+        .iter()
+        .enumerate()
+    {
+        let cfg = SampleCfg {
+            temperature: 0.8,
+            top_k: 40,
+            max_new_tokens: 48,
+            seed: 100 + i as u64,
+            ..Default::default()
+        };
+        let g = generate(&mut engine, &tok, prompt, &cfg)?;
+        println!("[{i}] {}{}\n", g.prompt, g.completion);
+    }
+    Ok(())
+}

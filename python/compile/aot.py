@@ -1,0 +1,152 @@
+"""AOT lowering driver: JAX → HLO text artifacts for the rust runtime.
+
+For each (preset, variant) pair this emits::
+
+    artifacts/<preset>/<variant>/init.hlo.txt
+    artifacts/<preset>/<variant>/train_step.hlo.txt
+    artifacts/<preset>/<variant>/eval_step.hlo.txt
+    artifacts/<preset>/<variant>/decode.hlo.txt
+    artifacts/<preset>/<variant>/manifest.json
+
+**HLO text, not serialized protos**: jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+This is the ONLY place Python runs: ``make artifacts`` invokes it once and
+the rust binary is self-contained afterwards.
+
+Usage::
+
+    python -m compile.aot --preset ci --variants all --out ../artifacts
+    python -m compile.aot --preset desktop --variants hsm_ab,gpt,hybrid_mh_06
+    python -m compile.aot --preset ci --variants gpt --kernels jnp   # ablation
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, steps
+from .configs import PRESETS, VARIANTS, build_variant, config_to_dict
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACT_KINDS = ("init", "train_step", "eval_step", "decode")
+
+
+def build_manifest(cfg, hp, kernels: str, files: dict) -> dict:
+    specs = model.param_specs(cfg)
+    return {
+        "schema_version": 1,
+        "preset": hp.name,
+        "variant": cfg.name,
+        "display_name": configs.DISPLAY_NAMES[cfg.name],
+        "kernels": kernels,
+        "config": config_to_dict(cfg),
+        "train": {
+            "batch": hp.batch,
+            "lr": hp.lr,
+            "weight_decay": hp.weight_decay,
+            "beta1": hp.beta1,
+            "beta2": hp.beta2,
+            "eps": hp.eps,
+            "dropout": hp.dropout,
+            "epochs": hp.epochs,
+        },
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "decay": s.decay}
+            for s in specs
+        ],
+        "artifacts": files,
+        # Flat-signature documentation for the rust marshaller.
+        "signatures": {
+            "init": {"inputs": ["seed:u32"], "outputs": ["params*P"]},
+            "train_step": {
+                "inputs": ["params*P", "m*P", "v*P", "step:i32", "x:i32[B,T]", "y:i32[B,T]"],
+                "outputs": ["params*P", "m*P", "v*P", "loss:f32", "acc:f32"],
+            },
+            "eval_step": {
+                "inputs": ["params*P", "x:i32[B,T]", "y:i32[B,T]"],
+                "outputs": ["loss:f32", "acc:f32"],
+            },
+            "decode": {
+                "inputs": ["params*P", "tokens:i32[1,T]"],
+                "outputs": ["logits:f32[1,T,V]"],
+            },
+        },
+    }
+
+
+def lower_variant(variant: str, preset: str, out_root: str, kernels: str, kinds=ARTIFACT_KINDS) -> None:
+    hp = PRESETS[preset]
+    cfg = build_variant(variant, preset)
+    use_pallas = kernels == "pallas"
+    outdir = os.path.join(out_root, preset, variant)
+    os.makedirs(outdir, exist_ok=True)
+
+    fns = {
+        "init": steps.make_init_fn(cfg),
+        "train_step": steps.make_train_step(cfg, hp, use_pallas),
+        "eval_step": steps.make_eval_step(cfg, use_pallas),
+        "decode": steps.make_decode_fn(cfg, use_pallas),
+    }
+
+    files = {}
+    for kind in kinds:
+        t0 = time.time()
+        args = steps.example_args(cfg, hp, kind)
+        lowered = jax.jit(fns[kind]).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{kind}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        files[kind] = fname
+        print(
+            f"  {preset}/{variant}/{kind}: {len(text) / 1e6:.2f} MB "
+            f"({time.time() - t0:.1f}s)"
+        )
+
+    manifest = build_manifest(cfg, hp, kernels, files)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="ci", choices=sorted(PRESETS))
+    ap.add_argument("--variants", default="all", help='"all" or comma-separated ids')
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--kernels", default="pallas", choices=("pallas", "jnp"))
+    ap.add_argument(
+        "--kinds", default=",".join(ARTIFACT_KINDS), help="subset of artifact kinds"
+    )
+    args = ap.parse_args()
+
+    variants = VARIANTS if args.variants == "all" else args.variants.split(",")
+    kinds = tuple(args.kinds.split(","))
+    for v in variants:
+        if v not in VARIANTS:
+            raise SystemExit(f"unknown variant {v!r}; known: {VARIANTS}")
+    t0 = time.time()
+    for v in variants:
+        lower_variant(v, args.preset, args.out, args.kernels, kinds)
+    print(f"lowered {len(variants)} variants in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,308 @@
+"""Model / training configuration registry for the HSM reproduction.
+
+This module is the single source of truth for the twelve model variants of
+Forchheimer (2026), Table 1 (plus the Figure-7 extra hybrid), and for the
+size presets used by this reproduction:
+
+* ``paper``   — the exact 5.1 M-parameter configuration of the paper
+                (dim 256, ctx 128, vocab 5000, 7 layers).
+* ``desktop`` — paper architecture, smaller vocab/batch; the end-to-end
+                training preset used on this single-core sandbox.
+* ``ci``      — a miniature configuration for tests and the Table-1 sweep.
+
+The rust coordinator never imports this file; it reads the ``manifest.json``
+emitted by :mod:`compile.aot`, which serialises everything defined here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+# ---------------------------------------------------------------------------
+# Mixer kinds
+# ---------------------------------------------------------------------------
+
+#: scalar (a, b) weighting  —  y = a x + b x_shift                (paper §3.1)
+AB = "ab"
+#: per-channel (a, b) weighting — y = a ⊙ x + b ⊙ x_shift         (paper §3.2)
+VEC = "vec"
+#: matrix (A, B) weighting  —  y = A x + B x_shift + bias          (paper §3.3)
+MAT = "mat"
+#: single-input gate        —  g = tanh(mlp(x))                    (paper §3.5)
+GATE1 = "gate1"
+#: double-input gate        —  g = tanh(L [x; x_shift])            (paper §3.6)
+GATE2 = "gate2"
+#: fusion                   —  y = mlp([x; x_shift])               (paper §3.7)
+FUSION = "fusion"
+#: causal softmax multi-head attention (the GPT reference mixer)   (paper §2.1)
+ATTN = "attn"
+
+MIXER_KINDS = (AB, VEC, MAT, GATE1, GATE2, FUSION, ATTN)
+
+# FFN width as a multiple of `dim`, from Table 1 (paper dim = 256):
+#   HSM(a,b)/vec/multihead: 1024/256 = 4.0      HSM(A,B): 640/256 = 2.5
+#   single gate: 768/256 = 3.0                  double gate / fusion: 960/256 = 3.75
+#   GPT: 512/256 = 2.0
+FFN_RATIO = {
+    AB: 4.0,
+    VEC: 4.0,
+    MAT: 2.5,
+    GATE1: 3.0,
+    GATE2: 3.75,
+    FUSION: 3.75,
+    ATTN: 2.0,
+}
+
+
+def layer_shift(layer: int, ctx: int) -> int:
+    """Shift distance for single-shift layers: 2**layer, clipped to ctx//2.
+
+    The paper's 7-layer / ctx-128 model uses shifts 1, 2, 4, ..., 64 — i.e.
+    the deepest layer reaches half the context window.  For smaller presets
+    we clip at ctx//2 so the schedule keeps that property.
+    """
+    return min(2 ** layer, ctx // 2)
+
+
+def head_shifts(n_heads: int, ctx: int) -> List[int]:
+    """Per-head shifts for the multihead (a, b) scheme: 2**h, clipped to ctx.
+
+    The paper's 8-head schedule is [1, 2, 4, ..., 128] with ctx = 128 —
+    head 7's shift *equals* the window, so its shifted input is all zeros.
+    We reproduce that deliberately (clip at ctx, not ctx//2): the pathology
+    is part of what Table 1 measures for "HSM (a, b) Multihead".
+    """
+    return [min(2 ** h, ctx) for h in range(n_heads)]
+
+
+def rotate(xs: List[int], k: int) -> List[int]:
+    """Rotating permutation for Multihead-ext: [1,2,4..] -> [2,4,..,1] -> ..."""
+    k %= len(xs)
+    return xs[k:] + xs[:k]
+
+
+# ---------------------------------------------------------------------------
+# Layer / model specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One transformer block: mixer kind, head count, shifts, FFN width."""
+
+    kind: str
+    heads: int
+    shifts: List[int]  # one entry per head for ab-multihead; else length 1
+    ffn: int
+
+    def validate(self, dim: int, ctx: int) -> None:
+        assert self.kind in MIXER_KINDS, self.kind
+        assert dim % self.heads == 0, (dim, self.heads)
+        if self.kind != ATTN:
+            assert len(self.shifts) in (1, self.heads)
+            assert all(1 <= s <= ctx for s in self.shifts), self.shifts
+        assert self.ffn % 8 == 0, self.ffn
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Full decoder configuration (one Table-1 row at one size preset)."""
+
+    name: str  # variant id, e.g. "hsm_ab"
+    preset: str  # "paper" | "desktop" | "ci"
+    dim: int
+    ctx: int
+    vocab: int
+    layers: List[LayerSpec]
+    dropout: float = 0.1
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    def validate(self) -> None:
+        for spec in self.layers:
+            spec.validate(self.dim, self.ctx)
+
+    def param_count(self) -> int:
+        """Trainable parameter count (used by the parity tests)."""
+        total = self.vocab * self.dim + self.ctx * self.dim  # tok + pos emb
+        total += 2 * self.dim  # final LN
+        d = self.dim
+        for spec in self.layers:
+            total += 4 * d  # two LayerNorms
+            hd = d // spec.heads
+            if spec.kind == AB:
+                total += 2 * spec.heads
+            elif spec.kind == VEC:
+                total += 2 * d
+            elif spec.kind == MAT:
+                total += 2 * d * d + d
+            elif spec.kind == GATE1:
+                total += 2 * d * d + 2 * d
+            elif spec.kind == GATE2:
+                total += spec.heads * (2 * hd * hd + hd)
+            elif spec.kind == FUSION:
+                total += spec.heads * (2 * hd * hd + hd + hd * hd + hd)
+            elif spec.kind == ATTN:
+                total += 4 * d * d + 4 * d
+            total += d * spec.ffn + spec.ffn + spec.ffn * d + d  # FFN
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    dim: int
+    ctx: int
+    vocab: int
+    n_layers: int
+    batch: int
+    lr: float = 2e-3
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    dropout: float = 0.1
+    epochs: int = 20
+
+
+PRESETS = {
+    # The paper's configuration (§6.1): 5.1 M parameters, batch 256, lr 2e-3.
+    "paper": Preset("paper", dim=256, ctx=128, vocab=5000, n_layers=7, batch=256),
+    # Same architecture, sized so one training step fits a single-core CPU
+    # budget; used by examples/train_tinystories.rs.
+    "desktop": Preset("desktop", dim=256, ctx=128, vocab=2048, n_layers=7, batch=32),
+    # Miniature: tests + the full 12-variant Table-1 sweep.
+    "ci": Preset("ci", dim=64, ctx=64, vocab=512, n_layers=7, batch=8, dropout=0.1),
+}
+
+
+def _ffn(kind: str, dim: int) -> int:
+    return int(FFN_RATIO[kind] * dim)
+
+
+def _hsm_layer(kind: str, heads: int, layer: int, p: Preset) -> LayerSpec:
+    if kind in (GATE2, FUSION, AB, VEC, MAT, GATE1):
+        shifts = [layer_shift(layer, p.ctx)]
+    else:
+        raise ValueError(kind)
+    return LayerSpec(kind=kind, heads=heads, shifts=shifts, ffn=_ffn(kind, p.dim))
+
+
+def _attn_layer(p: Preset, heads: int = 8) -> LayerSpec:
+    return LayerSpec(kind=ATTN, heads=heads, shifts=[1], ffn=_ffn(ATTN, p.dim))
+
+
+def _ab_mh_layer(layer: int, p: Preset, heads: int = 8, ext: bool = False) -> LayerSpec:
+    base = head_shifts(heads, p.ctx)
+    shifts = rotate(base, layer) if ext else base
+    return LayerSpec(kind=AB, heads=heads, shifts=shifts, ffn=_ffn(AB, p.dim))
+
+
+def build_variant(variant: str, preset: str) -> ModelConfig:
+    """Construct one of the twelve Table-1 / Figure-7 model variants."""
+    p = PRESETS[preset]
+    L = p.n_layers
+
+    def uniform(fn) -> List[LayerSpec]:
+        return [fn(l) for l in range(L)]
+
+    if variant == "hsm_ab":
+        layers = uniform(lambda l: _hsm_layer(AB, 1, l, p))
+    elif variant == "hsm_vec":
+        layers = uniform(lambda l: _hsm_layer(VEC, 1, l, p))
+    elif variant == "hsm_mat":
+        layers = uniform(lambda l: _hsm_layer(MAT, 1, l, p))
+    elif variant == "hsm_gate1":
+        layers = uniform(lambda l: _hsm_layer(GATE1, 1, l, p))
+    elif variant == "hsm_gate2":
+        layers = uniform(lambda l: _hsm_layer(GATE2, 4, l, p))
+    elif variant == "hsm_fusion":
+        layers = uniform(lambda l: _hsm_layer(FUSION, 4, l, p))
+    elif variant == "hsm_ab_mh":
+        layers = uniform(lambda l: _ab_mh_layer(l, p))
+    elif variant == "hsm_ab_mhext":
+        layers = uniform(lambda l: _ab_mh_layer(l, p, ext=True))
+    elif variant == "gpt":
+        layers = uniform(lambda l: _attn_layer(p))
+    elif variant == "hybrid_06":
+        # GPT with the first and last layers replaced by HSM (a, b).
+        layers = [
+            _hsm_layer(AB, 1, l, p) if l in (0, L - 1) else _attn_layer(p)
+            for l in range(L)
+        ]
+    elif variant == "hybrid_mh_06":
+        layers = [
+            _ab_mh_layer(l, p) if l in (0, L - 1) else _attn_layer(p)
+            for l in range(L)
+        ]
+    elif variant == "hybrid_l3gpt":
+        # Figure 7's "HSM:[0,1,2,4,5,6]": HSM (a,b) everywhere except a
+        # softmax-attention layer in the middle (layer 3 of 7).
+        mid = L // 2
+        layers = [
+            _attn_layer(p) if l == mid else _hsm_layer(AB, 1, l, p)
+            for l in range(L)
+        ]
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    cfg = ModelConfig(
+        name=variant,
+        preset=preset,
+        dim=p.dim,
+        ctx=p.ctx,
+        vocab=p.vocab,
+        layers=layers,
+        dropout=p.dropout,
+    )
+    cfg.validate()
+    return cfg
+
+
+#: Table-1 row order (GPT last, as in the paper) plus the Figure-7 extra.
+VARIANTS = [
+    "hsm_ab",
+    "hsm_vec",
+    "hsm_mat",
+    "hsm_gate1",
+    "hsm_gate2",
+    "hsm_fusion",
+    "hsm_ab_mh",
+    "hsm_ab_mhext",
+    "hybrid_06",
+    "hybrid_mh_06",
+    "gpt",
+    "hybrid_l3gpt",
+]
+
+#: Paper display names, used by the rust report drivers via the manifest.
+DISPLAY_NAMES = {
+    "hsm_ab": "HSM (a,b)",
+    "hsm_vec": "HSM (a,b) vector",
+    "hsm_mat": "HSM (A,B)",
+    "hsm_gate1": "HSM Single input gate",
+    "hsm_gate2": "HSM Double input gate",
+    "hsm_fusion": "HSM Fusion",
+    "hsm_ab_mh": "HSM (a,b) Multihead",
+    "hsm_ab_mhext": "HSM (a,b) Multihead-ext",
+    "hybrid_06": "Hybrid [0,6]",
+    "hybrid_mh_06": "Hybrid Multihead [0,6]",
+    "gpt": "GPT",
+    "hybrid_l3gpt": "HSM:[0,1,2,4,5,6]",
+}
+
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["display_name"] = DISPLAY_NAMES[cfg.name]
+    d["param_count"] = cfg.param_count()
+    return d

@@ -1,0 +1,101 @@
+"""Pallas causal multi-head attention for the GPT reference / hybrid layers.
+
+Forward is a flash-attention-style kernel: one ``(batch, head)`` pair per
+grid step, key/value blocks streamed through VMEM with an online softmax so
+the ``[T, T]`` score matrix never materialises in HBM.  For the paper's
+configuration (T = 128, head_dim = 32) a single KV block covers the whole
+sequence, so the online loop degenerates to one iteration — but the tiling
+is written (and tested) for the general multi-block case, which is what a
+real-TPU deployment with long contexts would use (see DESIGN.md §Perf).
+
+Backward uses the standard recomputation strategy: the VJP recomputes the
+(masked, softmaxed) attention matrix from the saved ``q, k, v`` and applies
+the well-known closed-form gradients in plain ``jnp``.  For T = 128 the
+recompute is cheaper than saving the probabilities; a Pallas flash-backward
+is a documented extension point.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_k: int, scale: float):
+    """Causal attention for one (batch, head): online softmax over KV blocks."""
+    q = q_ref[0, 0] * scale  # [T, hd]
+    T, hd = q.shape
+    n_blocks = T // blk_k
+    q_pos = jax.lax.broadcasted_iota(jnp.int32, (T, blk_k), 0)
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], j * blk_k, blk_k, 0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], j * blk_k, blk_k, 0)
+        s = q @ k_blk.T  # [T, blk_k]
+        k_pos = j * blk_k + jax.lax.broadcasted_iota(jnp.int32, (T, blk_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        correction = jnp.exp(m_prev - m_new)
+        l_new = l_prev * correction + jnp.sum(p, axis=1)
+        acc = acc * correction[:, None] + p @ v_blk
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((T, hd), jnp.float32)
+    m0 = jnp.full((T,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((T,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_blocks, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _attention_fwd_impl(q, k, v, blk_k):
+    B, H, T, hd = q.shape
+    blk_k = min(blk_k, T)
+    assert T % blk_k == 0, (T, blk_k)
+    scale = 1.0 / (hd ** 0.5)
+    spec = pl.BlockSpec((1, 1, T, hd), lambda b, h: (b, h, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, blk_k=blk_k, scale=scale),
+        grid=(B, H),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def causal_attention(q, k, v, blk_k: int = 128):
+    """Causal MHA: softmax(mask(q kᵀ / √hd)) v over ``[B, H, T, hd]``."""
+    return _attention_fwd_impl(q, k, v, blk_k)
+
+
+def _attention_fwd(q, k, v, blk_k):
+    return _attention_fwd_impl(q, k, v, blk_k), (q, k, v)
+
+
+def _attention_bwd(blk_k, res, do):
+    q, k, v = res
+    B, H, T, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    # Recompute probabilities (flash backward's strategy, expressed in jnp).
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, do)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", do, v)
+    # softmax backward: ds = p * (dp - rowsum(p * dp))
+    ds = p * (dp - jnp.sum(p * dp, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q) * scale
+    return dq, dk, dv
+
+
+causal_attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references: the pytest/hypothesis suites sweep the
+Pallas kernels against these implementations (values *and* gradients) over
+shapes, shifts and head counts.  They are also selectable as a drop-in
+kernel backend (``aot.py --kernels jnp``) for the ablation benches that
+compare lowered-HLO size and step latency against the Pallas path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def shift_tokens_ref(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Causal temporal shift with zero fill over ``[B, T, D]``."""
+    T = x.shape[1]
+    if s == 0:
+        return x
+    if s >= T:
+        return jnp.zeros_like(x)
+    return jnp.pad(x[:, :-s, :], ((0, 0), (s, 0), (0, 0)))
+
+
+def shift_mix_ref(x, a, b, shift: int):
+    """Oracle for :func:`compile.kernels.shift_mix.shift_mix`."""
+    return a[None, None, :] * x + b[None, None, :] * shift_tokens_ref(x, shift)
+
+
+def gated_combine_ref(gate, x, xs):
+    """Oracle for :func:`compile.kernels.gated.gated_combine`."""
+    return gate * x + (1.0 - gate) * xs
+
+
+def causal_attention_ref(q, k, v):
+    """Oracle for :func:`compile.kernels.attention.causal_attention`.
+
+    Plain masked softmax attention over ``[B, H, T, hd]``.
+    """
+    B, H, T, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

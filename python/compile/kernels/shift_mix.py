@@ -1,0 +1,150 @@
+"""Pallas kernels for the HSM shift-mix operator (paper §3.1–§3.2, §4).
+
+The core HSM primitive combines each token with one earlier token at a fixed
+temporal shift ``s``::
+
+    y[b, t, :] = a ⊙ x[b, t, :] + b ⊙ x[b, t - s, :]        (x[t<0] = 0)
+
+``a`` and ``b`` are per-channel coefficient vectors; the scalar (a, b) scheme
+of §3.1 is the broadcast special case (the broadcast happens at the JAX level
+in :mod:`compile.model`, so its gradient reduction is handled by autodiff).
+Per-head shifts (multihead HSM, §4) are expressed by calling this kernel once
+per contiguous head-channel group with that head's static shift.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): this is a 2-tap depthwise
+causal convolution with dilation ``s`` — bandwidth-bound, VPU-only.  The grid
+iterates over the batch; each step holds one ``[T, D]`` tile (≤ 128 KiB for
+the paper configuration) plus its shifted companion in VMEM, so the pipeline
+double-buffers batch rows while combining in-register.  ``interpret=True``
+everywhere: the CPU PJRT plugin cannot run Mosaic custom-calls.
+
+A custom VJP supplies the backward pass as a second Pallas kernel: the
+adjoint of a causal 2-tap filter is the *anti-causal* 2-tap filter
+
+    dx[b, t, :] = a ⊙ dy[b, t, :] + b ⊙ dy[b, t + s, :]     (dy[t≥T] = 0)
+
+plus two channel-wise reductions ``da = Σ dy ⊙ x`` and ``db = Σ dy ⊙ x_s``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(x_ref, a_ref, b_ref, y_ref, *, shift: int):
+    """One batch row: y = a*x + b*shift(x).  Block = full [T, D] tile."""
+    x = x_ref[0]  # [T, D] (leading block dim of size 1)
+    xs = shifted(x, shift)
+    y_ref[0] = a_ref[...] * x + b_ref[...] * xs
+
+
+def _bwd_kernel(x_ref, dy_ref, a_ref, b_ref, dx_ref, da_ref, db_ref, *, shift: int):
+    """Adjoint for one batch row; da/db accumulate across the batch grid."""
+    i = pl.program_id(0)
+    x = x_ref[0]
+    dy = dy_ref[0]
+    # dx: anti-causal 2-tap filter (future dy rows flow back through tap b).
+    T = dy.shape[0]
+    if shift >= T:
+        dy_fwd = jnp.zeros_like(dy)
+    else:
+        dy_fwd = jnp.pad(dy[shift:, :], ((0, shift), (0, 0)))
+    dx_ref[0] = a_ref[...] * dy + b_ref[...] * dy_fwd
+    # Coefficient gradients: per-channel reductions, accumulated over grid.
+    da_row = jnp.sum(dy * x, axis=0)
+    db_row = jnp.sum(dy * shifted(x, shift), axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        da_ref[...] = jnp.zeros_like(da_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    da_ref[...] += da_row
+    db_ref[...] += db_row
+
+
+def shifted(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Causal shift along axis 0 with zero fill: out[t] = x[t-s], out[t<s]=0."""
+    T = x.shape[0]
+    if s == 0:
+        return x
+    if s >= T:
+        return jnp.zeros_like(x)
+    return jnp.pad(x[:-s, :], ((s, 0), (0, 0)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def shift_mix(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, shift: int):
+    """HSM shift-mix: ``a ⊙ x + b ⊙ x_shifted`` over ``x: [B, T, D]``.
+
+    Args:
+      x: activations ``[B, T, D]`` (``D`` may be a head-channel slice).
+      a, b: per-channel coefficient vectors ``[D]``.
+      shift: static temporal shift ``s ≥ 1``; ``s ≥ T`` zeroes the second tap
+        (the paper's head-7 / shift-128 case).
+    """
+    return _shift_mix_fwd_impl(x, a, b, shift)
+
+
+def _shift_mix_fwd_impl(x, a, b, shift):
+    B, T, D = x.shape
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, shift=shift),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, T, D), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+        interpret=True,
+    )(x, a, b)
+
+
+def _shift_mix_fwd(x, a, b, shift):
+    return _shift_mix_fwd_impl(x, a, b, shift), (x, a, b)
+
+
+def _shift_mix_bwd(shift, res, dy):
+    x, a, b = res
+    B, T, D = x.shape
+    dx, da, db = pl.pallas_call(
+        functools.partial(_bwd_kernel, shift=shift),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, T, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),  # revisited every step
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), x.dtype),
+            jax.ShapeDtypeStruct((D,), a.dtype),
+            jax.ShapeDtypeStruct((D,), b.dtype),
+        ],
+        interpret=True,
+    )(x, dy, a, b)
+    return dx, da, db
+
+
+shift_mix.defvjp(_shift_mix_fwd, _shift_mix_bwd)
+
+
+def shift_tokens(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """JAX-level causal shift for ``[B, T, D]`` (feeds gate/fusion mixers)."""
+    B, T, D = x.shape
+    if s == 0:
+        return x
+    if s >= T:
+        return jnp.zeros_like(x)
+    return jnp.pad(x[:, :-s, :], ((0, 0), (s, 0), (0, 0)))

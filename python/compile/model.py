@@ -1,0 +1,314 @@
+"""The L2 JAX model: a GPT-2-style decoder with pluggable token mixers.
+
+Implements every mixer of Forchheimer (2026): scalar/vector/matrix (a, b)
+weighting, single- and double-input gating, fusion, multihead (a, b) with
+per-head shifts, and the causal softmax attention of the GPT reference —
+plus arbitrary per-layer combinations, which is how the hybrid stacks are
+expressed (the paper's §5 observation that HSM layers are drop-in
+replacements for attention layers because input/output formats coincide).
+
+Architecture follows the paper's GPT-2-derived reference (§6.1):
+pre-layer-norm blocks, learned positional embeddings, tied input/output
+embedding, a final LayerNorm before the logit projection, dropout 0.1 on the
+embedding and on each residual branch.
+
+Parameters live in a *flat list* whose order is fixed by
+:func:`param_specs`; that order is the AOT artifact's HLO parameter order
+and is serialised to ``manifest.json`` for the rust runtime.  No pytree
+nesting — the rust side indexes buffers positionally.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import AB, ATTN, FUSION, GATE1, GATE2, MAT, VEC, LayerSpec, ModelConfig
+from .kernels.attention import causal_attention
+from .kernels.gated import gated_combine
+from .kernels.shift_mix import shift_mix, shift_tokens
+from .kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One trainable tensor: name, shape, init scheme, weight-decay flag."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "normal" | "zeros" | "ones" | "half" | "residual"
+    decay: bool
+
+
+def _mixer_param_specs(l: int, spec: LayerSpec, dim: int) -> List[ParamSpec]:
+    pre = f"layer{l}."
+    hd = dim // spec.heads
+    k = spec.kind
+    if k == AB:
+        # Scalar taps, one pair per head (single-head => the §3.1 scheme).
+        return [
+            ParamSpec(pre + "mix_a", (spec.heads,), "half", False),
+            ParamSpec(pre + "mix_b", (spec.heads,), "half", False),
+        ]
+    if k == VEC:
+        return [
+            ParamSpec(pre + "mix_a", (dim,), "half", False),
+            ParamSpec(pre + "mix_b", (dim,), "half", False),
+        ]
+    if k == MAT:
+        return [
+            ParamSpec(pre + "mix_A", (dim, dim), "normal", True),
+            ParamSpec(pre + "mix_B", (dim, dim), "normal", True),
+            ParamSpec(pre + "mix_bias", (dim,), "zeros", False),
+        ]
+    if k == GATE1:
+        return [
+            ParamSpec(pre + "gate_w1", (dim, dim), "normal", True),
+            ParamSpec(pre + "gate_b1", (dim,), "zeros", False),
+            ParamSpec(pre + "gate_w2", (dim, dim), "normal", True),
+            ParamSpec(pre + "gate_b2", (dim,), "zeros", False),
+        ]
+    if k == GATE2:
+        return [
+            ParamSpec(pre + "gate_w", (spec.heads, 2 * hd, hd), "normal", True),
+            ParamSpec(pre + "gate_b", (spec.heads, hd), "zeros", False),
+        ]
+    if k == FUSION:
+        return [
+            ParamSpec(pre + "fuse_w1", (spec.heads, 2 * hd, hd), "normal", True),
+            ParamSpec(pre + "fuse_b1", (spec.heads, hd), "zeros", False),
+            ParamSpec(pre + "fuse_w2", (spec.heads, hd, hd), "normal", True),
+            ParamSpec(pre + "fuse_b2", (spec.heads, hd), "zeros", False),
+        ]
+    if k == ATTN:
+        return [
+            ParamSpec(pre + "attn_wq", (dim, dim), "normal", True),
+            ParamSpec(pre + "attn_bq", (dim,), "zeros", False),
+            ParamSpec(pre + "attn_wk", (dim, dim), "normal", True),
+            ParamSpec(pre + "attn_bk", (dim,), "zeros", False),
+            ParamSpec(pre + "attn_wv", (dim, dim), "normal", True),
+            ParamSpec(pre + "attn_bv", (dim,), "zeros", False),
+            ParamSpec(pre + "attn_wo", (dim, dim), "residual", True),
+            ParamSpec(pre + "attn_bo", (dim,), "zeros", False),
+        ]
+    raise ValueError(k)
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """The flat, ordered parameter list — this order IS the HLO order."""
+    out: List[ParamSpec] = [
+        ParamSpec("tok_emb", (cfg.vocab, cfg.dim), "normal", True),
+        ParamSpec("pos_emb", (cfg.ctx, cfg.dim), "normal", False),
+    ]
+    for l, spec in enumerate(cfg.layers):
+        pre = f"layer{l}."
+        out += [
+            ParamSpec(pre + "ln1_g", (cfg.dim,), "ones", False),
+            ParamSpec(pre + "ln1_b", (cfg.dim,), "zeros", False),
+        ]
+        out += _mixer_param_specs(l, spec, cfg.dim)
+        out += [
+            ParamSpec(pre + "ln2_g", (cfg.dim,), "ones", False),
+            ParamSpec(pre + "ln2_b", (cfg.dim,), "zeros", False),
+            ParamSpec(pre + "ffn_w1", (cfg.dim, spec.ffn), "normal", True),
+            ParamSpec(pre + "ffn_b1", (spec.ffn,), "zeros", False),
+            ParamSpec(pre + "ffn_w2", (spec.ffn, cfg.dim), "residual", True),
+            ParamSpec(pre + "ffn_b2", (cfg.dim,), "zeros", False),
+        ]
+    out += [
+        ParamSpec("lnf_g", (cfg.dim,), "ones", False),
+        ParamSpec("lnf_b", (cfg.dim,), "zeros", False),
+    ]
+    return out
+
+
+def param_index(cfg: ModelConfig) -> Dict[str, int]:
+    return {s.name: i for i, s in enumerate(param_specs(cfg))}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jnp.ndarray]:
+    """GPT-2-style init: N(0, 0.02²) weights, residual projections scaled by
+    1/√(2·n_layers), zero biases, unit LN gains, (a, b) taps at 0.5/0.5."""
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    resid_scale = 1.0 / (2 * cfg.n_layers) ** 0.5
+    params = []
+    for spec, k in zip(specs, keys):
+        if spec.init == "normal":
+            p = 0.02 * jax.random.normal(k, spec.shape, jnp.float32)
+        elif spec.init == "residual":
+            p = 0.02 * resid_scale * jax.random.normal(k, spec.shape, jnp.float32)
+        elif spec.init == "zeros":
+            p = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.init == "ones":
+            p = jnp.ones(spec.shape, jnp.float32)
+        elif spec.init == "half":
+            p = jnp.full(spec.shape, 0.5, jnp.float32)
+        else:
+            raise ValueError(spec.init)
+        params.append(p)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _dropout(x, rate, key, training):
+    if not training or rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+class _P:
+    """Positional parameter accessor for one layer's slice of the flat list."""
+
+    def __init__(self, params: List[jnp.ndarray], index: Dict[str, int], prefix: str):
+        self._params = params
+        self._index = index
+        self._prefix = prefix
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self._params[self._index[self._prefix + name]]
+
+
+def apply_mixer(
+    spec: LayerSpec,
+    p: _P,
+    x: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Dispatch one token-mixing function on post-LN activations ``x``."""
+    B, T, D = x.shape
+    H = spec.heads
+    hd = D // H
+    k = spec.kind
+
+    smix = shift_mix if use_pallas else kref.shift_mix_ref
+    attn = (lambda q, kk, v: causal_attention(q, kk, v, T)) if use_pallas else kref.causal_attention_ref
+    gcomb = gated_combine if use_pallas else kref.gated_combine_ref
+
+    if k in (AB, VEC):
+        if k == VEC:
+            return smix(x, p["mix_a"], p["mix_b"], spec.shifts[0])
+        if H == 1:
+            a = jnp.broadcast_to(p["mix_a"], (D,))
+            b = jnp.broadcast_to(p["mix_b"], (D,))
+            return smix(x, a, b, spec.shifts[0])
+        # Multihead (a, b): contiguous channel groups, one static shift each.
+        outs = []
+        for h in range(H):
+            grp = x[:, :, h * hd : (h + 1) * hd]
+            a = jnp.broadcast_to(p["mix_a"][h], (hd,))
+            b = jnp.broadcast_to(p["mix_b"][h], (hd,))
+            outs.append(smix(grp, a, b, spec.shifts[h]))
+        return jnp.concatenate(outs, axis=-1)
+
+    s = spec.shifts[0]
+    if k == MAT:
+        xs = shift_tokens(x, s)
+        return x @ p["mix_A"] + xs @ p["mix_B"] + p["mix_bias"]
+
+    if k == GATE1:
+        h1 = jax.nn.relu(x @ p["gate_w1"] + p["gate_b1"])
+        gate = jnp.tanh(h1 @ p["gate_w2"] + p["gate_b2"])
+        return gcomb(gate, x, shift_tokens(x, s))
+
+    if k == GATE2:
+        xs = shift_tokens(x, s)
+        xh = x.reshape(B, T, H, hd)
+        xsh = xs.reshape(B, T, H, hd)
+        cat = jnp.concatenate([xh, xsh], axis=-1)  # [B, T, H, 2hd]
+        gate = jnp.tanh(jnp.einsum("bthi,hij->bthj", cat, p["gate_w"]) + p["gate_b"])
+        return gcomb(gate.reshape(B, T, D), x, xs)
+
+    if k == FUSION:
+        xs = shift_tokens(x, s)
+        xh = x.reshape(B, T, H, hd)
+        xsh = xs.reshape(B, T, H, hd)
+        cat = jnp.concatenate([xh, xsh], axis=-1)
+        h1 = jax.nn.relu(jnp.einsum("bthi,hij->bthj", cat, p["fuse_w1"]) + p["fuse_b1"])
+        y = jnp.einsum("bthi,hij->bthj", h1, p["fuse_w2"]) + p["fuse_b2"]
+        return y.reshape(B, T, D)
+
+    if k == ATTN:
+        q = (x @ p["attn_wq"] + p["attn_bq"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        kk = (x @ p["attn_wk"] + p["attn_bk"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        v = (x @ p["attn_wv"] + p["attn_bv"]).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        o = attn(q, kk, v)  # [B, H, T, hd]
+        o = o.transpose(0, 2, 1, 3).reshape(B, T, D)
+        return o @ p["attn_wo"] + p["attn_bo"]
+
+    raise ValueError(k)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: List[jnp.ndarray],
+    tokens: jnp.ndarray,  # int32 [B, T]
+    *,
+    training: bool = False,
+    rng: Optional[jax.Array] = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Full decoder forward pass → logits ``[B, T, vocab]``."""
+    index = param_index(cfg)
+    B, T = tokens.shape
+    if training:
+        keys = jax.random.split(rng, 2 * cfg.n_layers + 1)
+    x = params[index["tok_emb"]][tokens] + params[index["pos_emb"]][None, :T, :]
+    if training:
+        x = _dropout(x, cfg.dropout, keys[0], training)
+    for l, spec in enumerate(cfg.layers):
+        p = _P(params, index, f"layer{l}.")
+        h = _layer_norm(x, p["ln1_g"], p["ln1_b"])
+        h = apply_mixer(spec, p, h, use_pallas=use_pallas)
+        if training:
+            h = _dropout(h, cfg.dropout, keys[2 * l + 1], training)
+        x = x + h
+        f = _layer_norm(x, p["ln2_g"], p["ln2_b"])
+        f = jax.nn.relu(f @ p["ffn_w1"] + p["ffn_b1"]) @ p["ffn_w2"] + p["ffn_b2"]
+        if training:
+            f = _dropout(f, cfg.dropout, keys[2 * l + 2], training)
+        x = x + f
+    x = _layer_norm(x, params[index["lnf_g"]], params[index["lnf_b"]])
+    # Tied embedding: logits via the transposed input table (paper Fig. 1).
+    return x @ params[index["tok_emb"]].T
+
+
+def loss_and_accuracy(
+    cfg: ModelConfig,
+    params: List[jnp.ndarray],
+    x: jnp.ndarray,  # int32 [B, T] inputs
+    y: jnp.ndarray,  # int32 [B, T] next-token targets
+    *,
+    training: bool = False,
+    rng: Optional[jax.Array] = None,
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy loss (paper eq. 7 reduced form) + next-token accuracy."""
+    logits = forward(cfg, params, x, training=training, rng=rng, use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc

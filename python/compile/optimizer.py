@@ -1,0 +1,47 @@
+"""AdamW (Loshchilov & Hutter, 2019) over the flat parameter list.
+
+The paper trains every model with AdamW at a fixed learning rate of 0.002
+(§7).  Decoupled weight decay is applied only to parameters whose manifest
+entry sets ``decay`` (matrices / embeddings — not biases, LayerNorm gains or
+the (a, b) taps), matching standard GPT-2 practice.
+
+State is two moment lists ``m``/``v`` shaped like the parameters plus the
+integer step counter, which the rust coordinator owns and feeds back each
+step (it is also the dropout seed source, so a resumed run is bit-exact).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from .configs import Preset
+from .model import ParamSpec
+
+
+def adamw_update(
+    specs: List[ParamSpec],
+    params: List[jnp.ndarray],
+    grads: List[jnp.ndarray],
+    m: List[jnp.ndarray],
+    v: List[jnp.ndarray],
+    step: jnp.ndarray,  # int32 scalar, 0-based; bias correction uses step+1
+    hp: Preset,
+) -> Tuple[List[jnp.ndarray], List[jnp.ndarray], List[jnp.ndarray]]:
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - hp.beta1 ** t
+    bc2 = 1.0 - hp.beta2 ** t
+    new_p, new_m, new_v = [], [], []
+    for spec, p, g, mi, vi in zip(specs, params, grads, m, v):
+        mi = hp.beta1 * mi + (1.0 - hp.beta1) * g
+        vi = hp.beta2 * vi + (1.0 - hp.beta2) * (g * g)
+        m_hat = mi / bc1
+        v_hat = vi / bc2
+        update = m_hat / (jnp.sqrt(v_hat) + hp.eps)
+        if spec.decay:
+            update = update + hp.weight_decay * p
+        new_p.append(p - hp.lr * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v

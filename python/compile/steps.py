@@ -1,0 +1,91 @@
+"""Jittable entry points — the four functions that become HLO artifacts.
+
+Every function takes/returns *flat* structures (lists of arrays and scalars)
+so the lowered HLO's parameter order is exactly the manifest order; the rust
+runtime marshals buffers positionally.  See DESIGN.md §2 for the signatures.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, Preset
+from .model import init_params, loss_and_accuracy, forward, param_specs
+from .optimizer import adamw_update
+
+
+def make_init_fn(cfg: ModelConfig):
+    """``(seed: u32) -> (param_0, …, param_{P-1})``"""
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        return tuple(init_params(cfg, key))
+
+    return init_fn
+
+
+def make_train_step(cfg: ModelConfig, hp: Preset, use_pallas: bool = True):
+    """``(params, m, v, step, x, y) -> (params', m', v', loss, acc)``
+
+    ``step`` doubles as the dropout seed (folded into a PRNG key), so the
+    rust loop needs no separate RNG plumbing and runs are reproducible.
+    """
+    specs = param_specs(cfg)
+
+    def train_step(params, m, v, step, x, y):
+        rng = jax.random.PRNGKey(step)
+
+        def loss_fn(ps):
+            loss, acc = loss_and_accuracy(
+                cfg, list(ps), x, y, training=True, rng=rng, use_pallas=use_pallas
+            )
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(tuple(params))
+        new_p, new_m, new_v = adamw_update(specs, params, list(grads), m, v, step, hp)
+        return tuple(new_p), tuple(new_m), tuple(new_v), loss, acc
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, use_pallas: bool = True):
+    """``(params, x, y) -> (loss, acc)`` — no dropout, no state mutation."""
+
+    def eval_step(params, x, y):
+        return loss_and_accuracy(cfg, list(params), x, y, training=False, use_pallas=use_pallas)
+
+    return eval_step
+
+
+def make_decode_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """``(params, tokens[B, T]) -> logits[B, T, vocab]``
+
+    Full-context forward; the rust sampler reads the row at the current
+    position.  (HSM admits an O(1)-state incremental decoder — kept as an
+    extension; at ctx = 128 the full forward is already sub-millisecond.)
+    """
+
+    def decode_fn(params, tokens):
+        return forward(cfg, list(params), tokens, training=False, use_pallas=use_pallas)
+
+    return decode_fn
+
+
+def example_args(cfg: ModelConfig, hp: Preset, kind: str):
+    """ShapeDtypeStructs matching each artifact's signature, for lowering."""
+    P = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in param_specs(cfg)]
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    x = i32((hp.batch, cfg.ctx))
+    if kind == "init":
+        return (jax.ShapeDtypeStruct((), jnp.uint32),)
+    if kind == "train_step":
+        return (P, P, P, jax.ShapeDtypeStruct((), jnp.int32), x, x)
+    if kind == "eval_step":
+        return (P, x, x)
+    if kind == "decode":
+        return (P, i32((1, cfg.ctx)))
+    raise ValueError(kind)

@@ -1,0 +1,226 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Values AND gradients (through the custom VJPs), swept over shapes, shifts
+and head-group widths with hypothesis.  This is the core correctness signal
+for the whole stack: the same kernels lower into every HLO artifact the
+rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import causal_attention
+from compile.kernels.gated import gated_combine
+from compile.kernels.shift_mix import shift_mix, shift_tokens
+
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# shift_mix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shift", [1, 2, 4, 7, 15, 16, 64])
+def test_shift_mix_matches_ref(shift):
+    x = rand(0, (3, 16, 8))
+    a, b = rand(1, (8,)), rand(2, (8,))
+    got = shift_mix(x, a, b, shift)
+    want = ref.shift_mix_ref(x, a, b, shift)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_shift_mix_shift_equal_to_seq_zeroes_second_tap():
+    # The paper's multihead head-7 case: shift == ctx → x_shifted ≡ 0.
+    x = rand(0, (2, 8, 4))
+    a, b = rand(1, (4,)), rand(2, (4,))
+    got = shift_mix(x, a, b, 8)
+    np.testing.assert_allclose(got, a[None, None] * x, **TOL)
+
+
+def test_shift_mix_causality():
+    # Output at position t must not depend on inputs at positions > t.
+    x = rand(0, (1, 12, 4))
+    a, b = rand(1, (4,)), rand(2, (4,))
+    base = shift_mix(x, a, b, 3)
+    x2 = x.at[:, 9:, :].set(999.0)
+    pert = shift_mix(x2, a, b, 3)
+    np.testing.assert_allclose(base[:, :9], pert[:, :9], **TOL)
+
+
+@pytest.mark.parametrize("shift", [1, 3, 16])
+def test_shift_mix_grads_match_ref(shift):
+    x = rand(3, (2, 16, 8))
+    a, b = rand(4, (8,)), rand(5, (8,))
+
+    def loss_k(x, a, b):
+        return jnp.sum(shift_mix(x, a, b, shift) ** 2)
+
+    def loss_r(x, a, b):
+        return jnp.sum(ref.shift_mix_ref(x, a, b, shift) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, a, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, a, b)
+    for u, v in zip(gk, gr):
+        np.testing.assert_allclose(u, v, **TOL)
+
+
+def test_shift_mix_scalar_broadcast_grad_reduces():
+    # The (a, b) scalar scheme broadcasts at the JAX level; its gradient
+    # must reduce back to a scalar (chain rule through broadcast_to).
+    x = rand(6, (2, 8, 4))
+
+    def loss(a_scalar):
+        a = jnp.broadcast_to(a_scalar, (4,))
+        b = jnp.broadcast_to(1.0 - a_scalar, (4,))
+        return jnp.sum(shift_mix(x, a, b, 2) ** 2)
+
+    g = jax.grad(loss)(0.3)
+    assert g.shape == ()
+    gr = jax.grad(
+        lambda s: jnp.sum(
+            ref.shift_mix_ref(x, jnp.broadcast_to(s, (4,)), jnp.broadcast_to(1 - s, (4,)), 2) ** 2
+        )
+    )(0.3)
+    np.testing.assert_allclose(g, gr, **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    t=st.integers(2, 24),
+    d=st.integers(1, 16),
+    data=st.data(),
+)
+def test_shift_mix_hypothesis_sweep(b, t, d, data):
+    shift = data.draw(st.integers(1, t + 2))
+    x = rand(b * 131 + t, (b, t, d))
+    a, bb = rand(d, (d,)), rand(d + 1, (d,))
+    got = shift_mix(x, a, bb, shift)
+    want = ref.shift_mix_ref(x, a, bb, shift)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# gated_combine
+# ---------------------------------------------------------------------------
+
+
+def test_gated_combine_matches_ref():
+    x = rand(0, (2, 12, 8))
+    xs = ref.shift_tokens_ref(x, 2)
+    g = jax.nn.sigmoid(rand(1, (2, 12, 8)))
+    np.testing.assert_allclose(
+        gated_combine(g, x, xs), ref.gated_combine_ref(g, x, xs), **TOL
+    )
+
+
+def test_gated_combine_extremes():
+    x = rand(2, (1, 4, 4))
+    xs = rand(3, (1, 4, 4))
+    ones = jnp.ones_like(x)
+    np.testing.assert_allclose(gated_combine(ones, x, xs), x, **TOL)
+    np.testing.assert_allclose(gated_combine(0 * ones, x, xs), xs, **TOL)
+
+
+def test_gated_combine_grads():
+    g0, x0, xs0 = jax.nn.sigmoid(rand(4, (2, 6, 4))), rand(5, (2, 6, 4)), rand(6, (2, 6, 4))
+
+    def lk(g, x, xs):
+        return jnp.sum(jnp.sin(gated_combine(g, x, xs)))
+
+    def lr(g, x, xs):
+        return jnp.sum(jnp.sin(ref.gated_combine_ref(g, x, xs)))
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(g0, x0, xs0)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(g0, x0, xs0)
+    for u, v in zip(gk, gr):
+        np.testing.assert_allclose(u, v, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 3), t=st.integers(1, 16), d=st.integers(1, 12))
+def test_gated_combine_hypothesis(b, t, d):
+    g = jax.nn.sigmoid(rand(7 + b, (b, t, d)))
+    x, xs = rand(8 + t, (b, t, d)), rand(9 + d, (b, t, d))
+    np.testing.assert_allclose(
+        gated_combine(g, x, xs), ref.gated_combine_ref(g, x, xs), **TOL
+    )
+
+
+# ---------------------------------------------------------------------------
+# causal_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("blk_k", [4, 8, 16])
+def test_attention_matches_ref_across_block_sizes(blk_k):
+    q, k, v = rand(0, (2, 2, 16, 8)), rand(1, (2, 2, 16, 8)), rand(2, (2, 2, 16, 8))
+    got = causal_attention(q, k, v, blk_k)
+    want = ref.causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_attention_causality():
+    q, k, v = rand(3, (1, 1, 12, 4)), rand(4, (1, 1, 12, 4)), rand(5, (1, 1, 12, 4))
+    base = causal_attention(q, k, v, 12)
+    k2 = k.at[:, :, 8:, :].set(99.0)
+    v2 = v.at[:, :, 8:, :].set(99.0)
+    pert = causal_attention(q, k2, v2, 12)
+    np.testing.assert_allclose(base[:, :, :8], pert[:, :, :8], rtol=1e-3, atol=1e-4)
+
+
+def test_attention_first_position_is_v0():
+    # Position 0 can only attend to itself.
+    q, k, v = rand(6, (1, 2, 8, 4)), rand(7, (1, 2, 8, 4)), rand(8, (1, 2, 8, 4))
+    out = causal_attention(q, k, v, 8)
+    np.testing.assert_allclose(out[:, :, 0], v[:, :, 0], rtol=1e-3, atol=1e-4)
+
+
+def test_attention_grads_match_ref():
+    q, k, v = rand(9, (1, 2, 8, 4)), rand(10, (1, 2, 8, 4)), rand(11, (1, 2, 8, 4))
+
+    def lk(q, k, v):
+        return jnp.sum(causal_attention(q, k, v, 8) ** 2)
+
+    def lr(q, k, v):
+        return jnp.sum(ref.causal_attention_ref(q, k, v) ** 2)
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+    for u, v2 in zip(gk, gr):
+        np.testing.assert_allclose(u, v2, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    hd=st.sampled_from([2, 4, 8]),
+    nblk=st.integers(1, 3),
+)
+def test_attention_hypothesis_sweep(b, h, hd, nblk):
+    t = 4 * nblk
+    q, k, v = rand(b, (b, h, t, hd)), rand(h + 20, (b, h, t, hd)), rand(hd + 40, (b, h, t, hd))
+    got = causal_attention(q, k, v, 4)
+    want = ref.causal_attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# shift_tokens helper
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [0, 1, 5, 16, 30])
+def test_shift_tokens_matches_ref(s):
+    x = rand(12, (2, 16, 4))
+    np.testing.assert_allclose(shift_tokens(x, s), ref.shift_tokens_ref(x, s), **TOL)

@@ -1,0 +1,219 @@
+"""L2 correctness: model shapes, parameter budgets, mixer dispatch,
+training dynamics and the pallas-vs-jnp backend equivalence.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, steps
+from compile.configs import PRESETS, VARIANTS, build_variant
+
+
+CI = PRESETS["ci"]
+
+
+def make(variant):
+    return build_variant(variant, "ci")
+
+
+def toks(cfg, key, batch=2):
+    return jax.random.randint(jax.random.PRNGKey(key), (batch, cfg.ctx), 0, cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# Registry / config invariants
+# ---------------------------------------------------------------------------
+
+
+def test_all_variants_build_and_validate():
+    for preset in PRESETS:
+        for v in VARIANTS:
+            cfg = build_variant(v, preset)
+            assert cfg.n_layers == PRESETS[preset].n_layers
+
+
+def test_param_budget_parity_paper():
+    """Table 1's premise: every variant ≈ the same parameter budget."""
+    counts = {v: build_variant(v, "paper").param_count() for v in VARIANTS}
+    gpt = counts["gpt"]
+    for v, c in counts.items():
+        assert abs(c - gpt) / gpt < 0.10, f"{v}: {c} vs gpt {gpt}"
+
+
+def test_shift_schedule_doubles_per_layer():
+    cfg = make("hsm_ab")
+    shifts = [l.shifts[0] for l in cfg.layers]
+    for i in range(1, len(shifts)):
+        assert shifts[i] == min(2 * shifts[i - 1], cfg.ctx // 2) or shifts[i] == cfg.ctx // 2
+
+
+def test_multihead_ext_rotates_shifts():
+    cfg = make("hsm_ab_mhext")
+    base = cfg.layers[0].shifts
+    for l, spec in enumerate(cfg.layers):
+        assert spec.shifts == configs.rotate(base, l) or l == 0
+
+
+def test_hybrid_layer_placement():
+    cfg = make("hybrid_06")
+    kinds = [l.kind for l in cfg.layers]
+    assert kinds[0] == "ab" and kinds[-1] == "ab"
+    assert all(k == "attn" for k in kinds[1:-1])
+    cfg2 = make("hybrid_l3gpt")
+    kinds2 = [l.kind for l in cfg2.layers]
+    assert kinds2[len(kinds2) // 2] == "attn"
+    assert sum(k == "attn" for k in kinds2) == 1
+
+
+def test_unknown_variant_rejected():
+    with pytest.raises(ValueError):
+        build_variant("nope", "ci")
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_forward_shapes_and_finiteness(variant):
+    cfg = make(variant)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    logits = model.forward(cfg, params, toks(cfg, 1))
+    assert logits.shape == (2, cfg.ctx, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_init_matches_specs():
+    cfg = make("gpt")
+    specs = model.param_specs(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    assert len(specs) == len(params)
+    for s, p in zip(specs, params):
+        assert tuple(p.shape) == s.shape, s.name
+
+
+def test_initial_loss_near_uniform():
+    for variant in ["hsm_ab", "gpt"]:
+        cfg = make(variant)
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        loss, acc = model.loss_and_accuracy(cfg, params, toks(cfg, 1), toks(cfg, 2))
+        assert abs(float(loss) - math.log(cfg.vocab)) < 0.5
+        assert float(acc) < 0.05
+
+
+@pytest.mark.parametrize("variant", ["hsm_ab", "hsm_vec", "hsm_gate2", "hsm_fusion", "gpt"])
+def test_pallas_and_jnp_backends_agree(variant):
+    cfg = make(variant)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    t = toks(cfg, 3)
+    lp = model.forward(cfg, params, t, use_pallas=True)
+    lr = model.forward(cfg, params, t, use_pallas=False)
+    np.testing.assert_allclose(lp, lr, rtol=2e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", ["hsm_ab", "hsm_ab_mh", "hsm_gate1", "gpt"])
+def test_model_causality(variant):
+    """Changing future tokens must not affect past logits (any mixer)."""
+    cfg = make(variant)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    t = toks(cfg, 4, batch=1)
+    base = model.forward(cfg, params, t)
+    t2 = t.at[:, cfg.ctx // 2 :].set((t[:, cfg.ctx // 2 :] + 7) % cfg.vocab)
+    pert = model.forward(cfg, params, t2)
+    np.testing.assert_allclose(
+        base[:, : cfg.ctx // 2], pert[:, : cfg.ctx // 2], rtol=1e-4, atol=1e-5
+    )
+
+
+def test_dropout_only_in_training():
+    cfg = make("hsm_ab")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    t = toks(cfg, 5)
+    e1 = model.forward(cfg, params, t, training=False)
+    e2 = model.forward(cfg, params, t, training=False)
+    np.testing.assert_allclose(e1, e2)
+    d1 = model.forward(cfg, params, t, training=True, rng=jax.random.PRNGKey(1))
+    d2 = model.forward(cfg, params, t, training=True, rng=jax.random.PRNGKey(2))
+    assert not np.allclose(d1, d2), "dropout should vary with the rng"
+
+
+# ---------------------------------------------------------------------------
+# Train / eval / decode steps
+# ---------------------------------------------------------------------------
+
+
+def run_steps(variant, n=8):
+    cfg = make(variant)
+    hp = CI
+    ts = jax.jit(steps.make_train_step(cfg, hp))
+    params = list(steps.make_init_fn(cfg)(jnp.uint32(0)))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    x = jax.random.randint(jax.random.PRNGKey(1), (hp.batch, cfg.ctx), 0, cfg.vocab)
+    # Learnable target: y = x shifted (structure the model can latch onto).
+    y = jnp.roll(x, -1, axis=1)
+    losses = []
+    for i in range(n):
+        params, m, v, loss, acc = ts(params, m, v, jnp.int32(i), x, y)
+        losses.append(float(loss))
+    return cfg, params, losses
+
+
+@pytest.mark.parametrize("variant", ["hsm_ab", "gpt", "hybrid_mh_06"])
+def test_loss_decreases_over_steps(variant):
+    _, _, losses = run_steps(variant)
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_eval_step_matches_loss_fn():
+    cfg = make("hsm_ab")
+    params = list(steps.make_init_fn(cfg)(jnp.uint32(0)))
+    es = jax.jit(steps.make_eval_step(cfg))
+    x, y = toks(cfg, 1, CI.batch), toks(cfg, 2, CI.batch)
+    loss, acc = es(params, x, y)
+    loss2, acc2 = model.loss_and_accuracy(cfg, params, x, y)
+    np.testing.assert_allclose(loss, loss2, rtol=1e-5)
+    np.testing.assert_allclose(acc, acc2, rtol=1e-5)
+
+
+def test_decode_matches_forward():
+    cfg = make("hsm_ab")
+    params = list(steps.make_init_fn(cfg)(jnp.uint32(0)))
+    df = jax.jit(steps.make_decode_fn(cfg))
+    t = toks(cfg, 3, batch=1)
+    np.testing.assert_allclose(
+        df(params, t), model.forward(cfg, params, t), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_init_fn_deterministic_per_seed():
+    cfg = make("hsm_ab")
+    f = steps.make_init_fn(cfg)
+    a = f(jnp.uint32(7))
+    b = f(jnp.uint32(7))
+    c = f(jnp.uint32(8))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, z) for x, z in zip(a, c))
+
+
+def test_adamw_decays_only_flagged_params():
+    from compile.optimizer import adamw_update
+
+    cfg = make("hsm_ab")
+    specs = model.param_specs(cfg)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    zeros = [jnp.zeros_like(p) for p in params]
+    # Zero gradients: any movement must come from weight decay alone.
+    new_p, _, _ = adamw_update(specs, params, zeros, zeros, zeros, jnp.int32(0), CI)
+    for s, p, np_ in zip(specs, params, new_p):
+        moved = bool(jnp.any(jnp.abs(p - np_) > 0))
+        if s.decay:
+            assert moved == bool(jnp.any(jnp.abs(p) > 0)), s.name
+        else:
+            assert not moved, f"{s.name} moved without decay flag"

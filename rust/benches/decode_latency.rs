@@ -1,0 +1,44 @@
+//! Bench: inference-path latency — full-context decode per variant.
+//!
+//! The paper's complexity claim (linear-time HSM vs quadratic attention)
+//! shows up at inference as well as training.  This bench measures the
+//! `decode` artifact (one `[1, ctx]` forward) and derives tokens/second
+//! for the autoregressive loop, comparing pure-HSM, hybrid and GPT mixers.
+//!
+//! Run: `cargo bench --bench decode_latency`.
+
+use hsm::config::Manifest;
+use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::util::bench::Bench;
+
+const SET: &[&str] = &["hsm_ab", "hsm_ab_mh", "hsm_fusion", "hybrid_mh_06", "gpt"];
+
+fn main() {
+    let root = std::path::Path::new("artifacts");
+    let preset = std::env::var("HSM_BENCH_PRESET").unwrap_or_else(|_| "ci".into());
+    let mut bench = Bench::quick();
+    let mut rows = Vec::new();
+
+    for v in SET {
+        let Ok(m) = Manifest::load_variant(root, &preset, v) else {
+            eprintln!("skip {v}: no {preset} artifacts (run `make artifacts`)");
+            continue;
+        };
+        let ctx = m.ctx;
+        let toks: Vec<i32> = (0..ctx as i32).map(|i| i % m.vocab as i32).collect();
+        let Ok(mut eng) = PjrtEngine::new(m) else { continue };
+        eng.init(0).unwrap();
+        eng.decode(&toks).unwrap(); // compile outside measurement
+        let stats = bench.run(&format!("decode/{v}"), || {
+            eng.decode(&toks).unwrap();
+        });
+        rows.push((v.to_string(), stats.mean.as_secs_f64(), ctx));
+    }
+
+    println!("\nAutoregressive decoding throughput ({preset} preset):");
+    println!("{:<16} {:>12} {:>14}", "variant", "ms/forward", "tokens/s*");
+    for (v, s, _ctx) in &rows {
+        println!("{:<16} {:>12.2} {:>14.0}", v, s * 1e3, 1.0 / s);
+    }
+    println!("*one token generated per full-context forward (no KV caching)");
+}

@@ -1,0 +1,73 @@
+//! Bench: forward-only mixer cost (eval_step) — the per-layer complexity
+//! story behind the paper's §3 (O(T) HSM vs O(T²) attention per layer).
+//!
+//! Also benches the pallas-vs-jnp kernel ablation when both artifact
+//! flavours exist (`make artifacts-jnp` lowers the jnp reference backend
+//! into `artifacts-jnp/`), quantifying the interpret-mode Pallas overhead
+//! that DESIGN.md §8 discusses.
+//!
+//! Run: `cargo bench --bench mixer_step`.
+
+use std::path::Path;
+
+use hsm::config::Manifest;
+use hsm::data::Batch;
+use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::util::bench::Bench;
+
+const SET: &[&str] = &["hsm_ab", "hsm_vec", "hsm_mat", "hsm_gate1", "hsm_gate2", "hsm_fusion", "hsm_ab_mh", "gpt"];
+
+fn bench_root(bench: &mut Bench, root: &Path, preset: &str, tag: &str) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    for v in SET {
+        let Ok(m) = Manifest::load_variant(root, preset, v) else { continue };
+        let (b, t, vocab) = (m.train.batch, m.ctx, m.vocab as i32);
+        let Ok(mut eng) = PjrtEngine::new(m) else { continue };
+        eng.init(0).unwrap();
+        let batch = Batch {
+            x: (0..b * t).map(|i| (i as i32 * 13) % vocab).collect(),
+            y: (0..b * t).map(|i| (i as i32 * 13 + 1) % vocab).collect(),
+            batch: b,
+            ctx: t,
+        };
+        eng.eval_step(&batch).unwrap(); // compile
+        let stats = bench.run(&format!("eval{tag}/{v}"), || {
+            eng.eval_step(&batch).unwrap();
+        });
+        rows.push((v.to_string(), stats.mean.as_secs_f64()));
+    }
+    rows
+}
+
+fn main() {
+    let preset = std::env::var("HSM_BENCH_PRESET").unwrap_or_else(|_| "ci".into());
+    let mut bench = Bench::quick();
+
+    let pallas = bench_root(&mut bench, Path::new("artifacts"), &preset, "");
+    if pallas.is_empty() {
+        eprintln!("no {preset} artifacts — run `make artifacts`");
+        return;
+    }
+    if let Some(gpt) = pallas.iter().find(|(v, _)| v == "gpt").map(|(_, s)| *s) {
+        println!("\nForward-only mixer cost ({preset} preset):");
+        println!("{:<16} {:>12} {:>10}", "variant", "ms/eval", "vs GPT");
+        for (v, s) in &pallas {
+            println!("{:<16} {:>12.2} {:>9.2}×", v, s * 1e3, s / gpt);
+        }
+    }
+
+    // Kernel-backend ablation, if the jnp flavour has been lowered.
+    let jnp_root = Path::new("artifacts-jnp");
+    if jnp_root.exists() {
+        let jnp = bench_root(&mut bench, jnp_root, &preset, "-jnp");
+        println!("\nPallas(interpret) vs pure-jnp lowering:");
+        println!("{:<16} {:>12} {:>12} {:>8}", "variant", "pallas ms", "jnp ms", "ratio");
+        for (v, sp) in &pallas {
+            if let Some((_, sj)) = jnp.iter().find(|(vj, _)| vj == v) {
+                println!("{:<16} {:>12.2} {:>12.2} {:>7.2}×", v, sp * 1e3, sj * 1e3, sp / sj);
+            }
+        }
+    } else {
+        println!("\n(jnp-backend ablation skipped — run `make artifacts-jnp`)");
+    }
+}

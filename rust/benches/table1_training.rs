@@ -1,0 +1,62 @@
+//! Bench: Table 1's timing column — training-step latency per variant.
+//!
+//! The paper reports seconds/epoch for all 11 configurations and claims
+//! HSM (a,b) trains ~40 % faster than GPT, the hybrids 7–15 % faster.
+//! Absolute numbers are machine-specific; the *ratios* are the claim.
+//! This bench measures steady-state `train_step` latency (compile time
+//! excluded) for each variant with artifacts present and prints both the
+//! absolute latency and the ratio vs GPT.
+//!
+//! Run: `cargo bench --bench table1_training` (after `make artifacts`).
+
+use hsm::config::{Manifest, TABLE1_VARIANTS};
+use hsm::data::Batch;
+use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::util::bench::Bench;
+
+fn main() {
+    let root = std::path::Path::new("artifacts");
+    let preset = std::env::var("HSM_BENCH_PRESET").unwrap_or_else(|_| "ci".into());
+    let mut bench = Bench::quick();
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    // HSM_BENCH_VARIANTS=a,b,c time-boxes the run (each variant pays an
+    // ~40 s XLA compile before measurement starts).
+    let subset = std::env::var("HSM_BENCH_VARIANTS").ok();
+    let chosen: Vec<&str> = match &subset {
+        Some(s) => s.split(',').collect(),
+        None => TABLE1_VARIANTS.to_vec(),
+    };
+    for v in &chosen {
+        let Ok(m) = Manifest::load_variant(root, &preset, v) else {
+            eprintln!("skip {v}: no {preset} artifacts (run `make artifacts`)");
+            continue;
+        };
+        let (b, t, vocab) = (m.train.batch, m.ctx, m.vocab as i32);
+        let Ok(mut eng) = PjrtEngine::new(m) else { continue };
+        eng.init(0).unwrap();
+        let batch = Batch {
+            x: (0..b * t).map(|i| (i as i32 * 7) % vocab).collect(),
+            y: (0..b * t).map(|i| (i as i32 * 7 + 1) % vocab).collect(),
+            batch: b,
+            ctx: t,
+        };
+        // Pay the XLA compile outside the measurement.
+        let mut step = 0i32;
+        eng.train_step(step, &batch).unwrap();
+        let stats = bench.run(&format!("train_step/{v}"), || {
+            step += 1;
+            eng.train_step(step, &batch).unwrap();
+        });
+        rows.push((v.to_string(), stats.mean.as_secs_f64()));
+    }
+
+    if let Some(gpt) = rows.iter().find(|(v, _)| v == "gpt").map(|(_, s)| *s) {
+        println!("\nTable 1 timing shape (steady-state step latency, {preset} preset):");
+        println!("{:<16} {:>12} {:>10}", "variant", "ms/step", "vs GPT");
+        for (v, s) in &rows {
+            println!("{:<16} {:>12.1} {:>9.2}×", v, s * 1e3, s / gpt);
+        }
+        println!("\npaper: HSM(a,b) 0.60×, hybrids 0.85–0.93× of GPT epoch time");
+    }
+}

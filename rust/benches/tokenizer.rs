@@ -1,0 +1,45 @@
+//! Bench: tokenizer substrate — BPE training and encode/decode throughput.
+//!
+//! No artifacts needed.  Guards the data-pipeline side of Table 1's
+//! training-time claims: tokenization must never be the bottleneck
+//! (training steps are tens of milliseconds; encoding a whole epoch of
+//! text must stay far below that).
+
+use hsm::corpus;
+use hsm::tokenizer::trainer;
+use hsm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut bench = Bench::quick();
+
+    let text_small = corpus::generate(7, 200);
+    let text_big = corpus::generate(8, 2000);
+
+    bench.run("bpe_train/vocab512_200stories", || {
+        black_box(trainer::train(&text_small, 512).unwrap());
+    });
+
+    let tok = trainer::train(&text_big, 512).unwrap();
+    let sample = &text_big[..text_big.len().min(100_000)];
+
+    let stats = bench.run("encode/100kB", || {
+        black_box(tok.encode(sample));
+    });
+    println!(
+        "encode throughput: {:.1} MB/s",
+        sample.len() as f64 / stats.mean.as_secs_f64() / 1e6
+    );
+
+    let ids = tok.encode(sample);
+    let dstats = bench.run("decode/100kB", || {
+        black_box(tok.decode(&ids));
+    });
+    println!(
+        "decode throughput: {:.1} Mtok/s",
+        ids.len() as f64 / dstats.mean.as_secs_f64() / 1e6
+    );
+
+    bench.run("corpus_generate/500stories", || {
+        black_box(corpus::generate(9, 500));
+    });
+}

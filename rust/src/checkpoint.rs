@@ -1,0 +1,228 @@
+//! Checkpointing: a minimal safetensors-like binary container.
+//!
+//! Format (little-endian):
+//!
+//! ```text
+//! magic  "HSMCKPT1"                     8 bytes
+//! header_len: u64                       JSON header length
+//! header: JSON                          { "meta": {...}, "tensors": [
+//!                                         {"name", "shape", "offset", "len"}... ] }
+//! payload: f32 data, tensor-by-tensor   (offsets relative to payload start)
+//! ```
+//!
+//! Stores model parameters, optimizer moments and the step counter so a
+//! training run resumes bit-exactly (the step counter doubles as the
+//! dropout seed — see `python/compile/steps.py`).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+const MAGIC: &[u8; 8] = b"HSMCKPT1";
+
+/// A checkpoint: named f32 tensors plus metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    pub meta: Vec<(String, String)>,
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    /// Assemble a training checkpoint from engine state.
+    pub fn from_training(
+        variant: &str,
+        preset: &str,
+        step: usize,
+        names: &[String],
+        shapes: &[Vec<usize>],
+        params: Vec<Vec<f32>>,
+        m: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    ) -> Self {
+        let mut ck = Checkpoint::default();
+        ck.meta.push(("variant".into(), variant.into()));
+        ck.meta.push(("preset".into(), preset.into()));
+        ck.meta.push(("step".into(), step.to_string()));
+        for (group, tensors) in [("param", params), ("m", m), ("v", v)] {
+            for ((name, shape), data) in names.iter().zip(shapes).zip(tensors) {
+                ck.tensors.push((format!("{group}/{name}"), shape.clone(), data));
+            }
+        }
+        ck
+    }
+
+    pub fn meta_value(&self, key: &str) -> Option<&str> {
+        self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn step(&self) -> usize {
+        self.meta_value("step").and_then(|s| s.parse().ok()).unwrap_or(0)
+    }
+
+    /// Tensors of one group ("param" | "m" | "v"), in stored order.
+    pub fn group(&self, group: &str) -> Vec<Vec<f32>> {
+        let prefix = format!("{group}/");
+        self.tensors
+            .iter()
+            .filter(|(n, _, _)| n.starts_with(&prefix))
+            .map(|(_, _, d)| d.clone())
+            .collect()
+    }
+
+    /// One tensor by full name.
+    pub fn tensor(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.tensors
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, s, d)| (s.as_slice(), d.as_slice()))
+    }
+
+    // -- I/O ----------------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut offset = 0u64;
+        let mut entries = Vec::new();
+        for (name, shape, data) in &self.tensors {
+            entries.push(json::obj(vec![
+                ("name", json::s(name)),
+                ("shape", Value::Arr(shape.iter().map(|&d| json::num(d as f64)).collect())),
+                ("offset", json::num(offset as f64)),
+                ("len", json::num(data.len() as f64)),
+            ]));
+            offset += (data.len() * 4) as u64;
+        }
+        let header = json::obj(vec![
+            (
+                "meta",
+                Value::Obj(self.meta.iter().map(|(k, v)| (k.clone(), json::s(v))).collect()),
+            ),
+            ("tensors", Value::Arr(entries)),
+        ])
+        .to_string();
+
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        let mut w = std::io::BufWriter::new(f);
+        for (_, _, data) in &self.tensors {
+            // SAFETY-free little-endian write.
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for x in data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&bytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not an HSM checkpoint", path.display());
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = json::parse(std::str::from_utf8(&hbuf)?).map_err(|e| anyhow!("{e}"))?;
+
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+
+        let meta = header
+            .get("meta")
+            .as_obj()
+            .map(|m| {
+                m.iter()
+                    .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let mut tensors = Vec::new();
+        for e in header.get("tensors").as_arr().unwrap_or(&[]) {
+            let name = e.get("name").as_str().ok_or_else(|| anyhow!("tensor name"))?;
+            let shape = e.get("shape").as_usize_vec().ok_or_else(|| anyhow!("tensor shape"))?;
+            let offset = e.get("offset").as_usize().ok_or_else(|| anyhow!("tensor offset"))?;
+            let len = e.get("len").as_usize().ok_or_else(|| anyhow!("tensor len"))?;
+            let end = offset + len * 4;
+            if end > payload.len() {
+                bail!("checkpoint truncated: {name} needs {end} bytes, have {}", payload.len());
+            }
+            let data: Vec<f32> = payload[offset..end]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            tensors.push((name.to_string(), shape, data));
+        }
+        Ok(Checkpoint { meta, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint::from_training(
+            "hsm_ab",
+            "ci",
+            123,
+            &["tok_emb".into(), "mix_a".into()],
+            &[vec![4, 2], vec![1]],
+            vec![vec![1.0; 8], vec![0.5]],
+            vec![vec![0.1; 8], vec![0.2]],
+            vec![vec![0.3; 8], vec![0.4]],
+        )
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = sample();
+        let path = std::env::temp_dir().join("hsm_ckpt_test.bin");
+        ck.save(&path).unwrap();
+        let re = Checkpoint::load(&path).unwrap();
+        assert_eq!(re.meta_value("variant"), Some("hsm_ab"));
+        assert_eq!(re.step(), 123);
+        assert_eq!(re.tensors.len(), 6);
+        assert_eq!(re.group("param")[0], vec![1.0; 8]);
+        assert_eq!(re.group("v")[1], vec![0.4]);
+        let (shape, data) = re.tensor("param/tok_emb").unwrap();
+        assert_eq!(shape, &[4, 2]);
+        assert_eq!(data.len(), 8);
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let path = std::env::temp_dir().join("hsm_ckpt_bogus.bin");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn float_precision_exact() {
+        let mut ck = Checkpoint::default();
+        let vals = vec![f32::MIN_POSITIVE, -0.0, 1.5e-30, 3.14159265, f32::MAX];
+        ck.tensors.push(("t".into(), vec![5], vals.clone()));
+        let path = std::env::temp_dir().join("hsm_ckpt_prec.bin");
+        ck.save(&path).unwrap();
+        let re = Checkpoint::load(&path).unwrap();
+        let (_, data) = re.tensor("t").unwrap();
+        for (a, b) in vals.iter().zip(data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Configuration: artifact manifests, presets and the variant registry.
+//!
+//! The Python side (`python/compile/configs.py`) is the source of truth
+//! for model hyperparameters; it serialises everything the coordinator
+//! needs into `artifacts/<preset>/<variant>/manifest.json`.  This module
+//! parses those manifests and mirrors the static registry (variant ids,
+//! display names) used by CLI validation and the report drivers.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Table-1 row order (GPT last, as in the paper) plus the Fig-7 hybrid.
+pub const VARIANTS: &[&str] = &[
+    "hsm_ab",
+    "hsm_vec",
+    "hsm_mat",
+    "hsm_gate1",
+    "hsm_gate2",
+    "hsm_fusion",
+    "hsm_ab_mh",
+    "hsm_ab_mhext",
+    "hybrid_06",
+    "hybrid_mh_06",
+    "gpt",
+    "hybrid_l3gpt",
+];
+
+/// The 11 rows of Table 1 (excludes the Figure-7-only hybrid).
+pub const TABLE1_VARIANTS: &[&str] = &[
+    "hsm_ab",
+    "hsm_vec",
+    "hsm_mat",
+    "hsm_gate1",
+    "hsm_gate2",
+    "hsm_fusion",
+    "hsm_ab_mh",
+    "hsm_ab_mhext",
+    "hybrid_06",
+    "hybrid_mh_06",
+    "gpt",
+];
+
+pub const PRESETS: &[&str] = &["paper", "desktop", "ci"];
+
+/// One trainable parameter tensor as described by the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub decay: bool,
+}
+
+impl ParamInfo {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Training hyperparameters (paper §7 plus preset-specific batch size).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainHp {
+    pub batch: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub dropout: f64,
+    pub epochs: usize,
+}
+
+/// One layer's mixer spec, mirrored from the manifest for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerInfo {
+    pub kind: String,
+    pub heads: usize,
+    pub shifts: Vec<usize>,
+    pub ffn: usize,
+}
+
+/// Parsed `manifest.json` for one (preset, variant) artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub variant: String,
+    pub display_name: String,
+    pub kernels: String,
+    pub dim: usize,
+    pub ctx: usize,
+    pub vocab: usize,
+    pub layers: Vec<LayerInfo>,
+    pub param_count: usize,
+    pub params: Vec<ParamInfo>,
+    pub train: TrainHp,
+    /// Directory the manifest was loaded from (artifact files live here).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Value, dir: &Path) -> Result<Self> {
+        let str_field = |field: &Value, what: &str| -> Result<String> {
+            field
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("manifest missing {what}"))
+        };
+        let cfg = v.get("config");
+        let layers = cfg
+            .get("layers")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing config.layers"))?
+            .iter()
+            .map(|l| -> Result<LayerInfo> {
+                Ok(LayerInfo {
+                    kind: str_field(l.get("kind"), "layer.kind")?,
+                    heads: l.get("heads").as_usize().ok_or_else(|| anyhow!("layer.heads"))?,
+                    shifts: l
+                        .get("shifts")
+                        .as_usize_vec()
+                        .ok_or_else(|| anyhow!("layer.shifts"))?,
+                    ffn: l.get("ffn").as_usize().ok_or_else(|| anyhow!("layer.ffn"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let params = v
+            .get("params")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| -> Result<ParamInfo> {
+                Ok(ParamInfo {
+                    name: str_field(p.get("name"), "param.name")?,
+                    shape: p
+                        .get("shape")
+                        .as_usize_vec()
+                        .ok_or_else(|| anyhow!("param.shape"))?,
+                    decay: p.get("decay").as_bool().unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if params.is_empty() {
+            bail!("manifest has no parameters");
+        }
+
+        let t = v.get("train");
+        let train = TrainHp {
+            batch: t.get("batch").as_usize().ok_or_else(|| anyhow!("train.batch"))?,
+            lr: t.get("lr").as_f64().ok_or_else(|| anyhow!("train.lr"))?,
+            weight_decay: t.get("weight_decay").as_f64().unwrap_or(0.0),
+            beta1: t.get("beta1").as_f64().unwrap_or(0.9),
+            beta2: t.get("beta2").as_f64().unwrap_or(0.999),
+            eps: t.get("eps").as_f64().unwrap_or(1e-8),
+            dropout: t.get("dropout").as_f64().unwrap_or(0.0),
+            epochs: t.get("epochs").as_usize().unwrap_or(20),
+        };
+
+        Ok(Manifest {
+            preset: str_field(v.get("preset"), "preset")?,
+            variant: str_field(v.get("variant"), "variant")?,
+            display_name: str_field(v.get("display_name"), "display_name")?,
+            kernels: v.get("kernels").as_str().unwrap_or("pallas").to_string(),
+            dim: cfg.get("dim").as_usize().ok_or_else(|| anyhow!("config.dim"))?,
+            ctx: cfg.get("ctx").as_usize().ok_or_else(|| anyhow!("config.ctx"))?,
+            vocab: cfg.get("vocab").as_usize().ok_or_else(|| anyhow!("config.vocab"))?,
+            layers,
+            param_count: cfg.get("param_count").as_usize().unwrap_or(0),
+            params,
+            train,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Path of one artifact kind (`init`, `train_step`, `eval_step`, `decode`).
+    pub fn artifact(&self, kind: &str) -> PathBuf {
+        self.dir.join(format!("{kind}.hlo.txt"))
+    }
+
+    /// Total parameter elements (must match `param_count` from python).
+    pub fn total_elems(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+
+    /// Artifact directory for (root, preset, variant).
+    pub fn dir_for(root: &Path, preset: &str, variant: &str) -> PathBuf {
+        root.join(preset).join(variant)
+    }
+
+    /// Load a manifest given the artifacts root.
+    pub fn load_variant(root: &Path, preset: &str, variant: &str) -> Result<Self> {
+        if !VARIANTS.contains(&variant) {
+            bail!("unknown variant {variant:?}; known: {VARIANTS:?}");
+        }
+        let dir = Self::dir_for(root, preset, variant);
+        if !dir.join("manifest.json").exists() {
+            bail!(
+                "no artifacts for {preset}/{variant} under {} — run `make artifacts` \
+                 (or `python -m compile.aot --preset {preset} --variants {variant}`)",
+                root.display()
+            );
+        }
+        Self::load(&dir)
+    }
+}
+
+/// Resolve the artifacts root: $HSM_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("HSM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "ci", "variant": "hsm_ab", "display_name": "HSM (a,b)",
+      "kernels": "pallas",
+      "config": {"dim": 64, "ctx": 64, "vocab": 512, "param_count": 270414,
+        "layers": [{"kind": "ab", "heads": 1, "shifts": [1], "ffn": 256}]},
+      "train": {"batch": 8, "lr": 0.002, "weight_decay": 0.01, "beta1": 0.9,
+        "beta2": 0.999, "eps": 1e-08, "dropout": 0.1, "epochs": 20},
+      "params": [
+        {"name": "tok_emb", "shape": [512, 64], "decay": true},
+        {"name": "layer0.mix_a", "shape": [1], "decay": false}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.variant, "hsm_ab");
+        assert_eq!(m.dim, 64);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].elems(), 512 * 64);
+        assert!(m.params[0].decay);
+        assert!(!m.params[1].decay);
+        assert_eq!(m.train.batch, 8);
+        assert!((m.train.lr - 0.002).abs() < 1e-12);
+        assert_eq!(m.layers[0].kind, "ab");
+        assert_eq!(m.artifact("init"), Path::new("/tmp/x/init.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_empty_params() {
+        let v = json::parse(
+            r#"{"preset":"ci","variant":"x","display_name":"x",
+                "config":{"dim":1,"ctx":1,"vocab":1,"layers":[]},
+                "train":{"batch":1,"lr":0.1},"params":[]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn registry_consistency() {
+        assert_eq!(VARIANTS.len(), 12);
+        assert_eq!(TABLE1_VARIANTS.len(), 11);
+        for v in TABLE1_VARIANTS {
+            assert!(VARIANTS.contains(v));
+        }
+    }
+}

@@ -1,0 +1,445 @@
+//! The training coordinator: epoch/step loops, validation, metrics and the
+//! multi-variant experiment scheduler.
+//!
+//! This is the L3 "leader" of the stack.  It owns the event loop: it pulls
+//! shuffled batches from the [`Dataset`], drives a [`StepEngine`]
+//! (PJRT-backed in production, mocked in tests), records per-epoch
+//! validation loss/accuracy — the exact series Figures 7 and 8 plot — and
+//! wall-clock seconds per epoch — Table 1's timing column.
+//!
+//! Everything here is engine-agnostic and fully unit-tested against
+//! [`MockEngine`]; the runtime_e2e integration tests exercise the same
+//! loops against real artifacts.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::data::{Batch, Dataset};
+use crate::runtime::{StepEngine, StepMetrics};
+
+/// Options for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainerOptions {
+    /// Stop after this many epochs (paper: 20).
+    pub epochs: usize,
+    /// Optional hard cap on total optimizer steps (scaled presets).
+    pub max_steps: Option<usize>,
+    /// Parameter-init / shuffle seed.
+    pub seed: u64,
+    /// Evaluate on at most this many validation batches (None = all).
+    pub eval_batches: Option<usize>,
+    /// Print a progress line every N steps (0 = quiet).
+    pub log_every: usize,
+    /// Record per-step training metrics (for convergence plots).
+    pub record_steps: bool,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            epochs: 20,
+            max_steps: None,
+            seed: 42,
+            eval_batches: None,
+            log_every: 0,
+            record_steps: false,
+        }
+    }
+}
+
+/// Per-epoch record — one point of Figure 7 (loss vs epoch) and one
+/// (loss, acc) pair of Figure 8's point cloud.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub val_loss: f32,
+    pub val_acc: f32,
+    pub secs: f64,
+    pub steps: usize,
+}
+
+/// Outcome of a full training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub variant: String,
+    pub preset: String,
+    pub epochs: Vec<EpochRecord>,
+    pub step_losses: Vec<f32>,
+    pub total_steps: usize,
+    pub total_secs: f64,
+}
+
+impl TrainOutcome {
+    /// Final validation loss (Table 1's "Loss" column).
+    pub fn final_val_loss(&self) -> f32 {
+        self.epochs.last().map(|e| e.val_loss).unwrap_or(f32::NAN)
+    }
+
+    /// Best validation loss across epochs.
+    pub fn best_val_loss(&self) -> f32 {
+        self.epochs
+            .iter()
+            .map(|e| e.val_loss)
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    /// Mean wall-clock seconds per epoch (Table 1's timing column).
+    pub fn secs_per_epoch(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return f64::NAN;
+        }
+        self.epochs.iter().map(|e| e.secs).sum::<f64>() / self.epochs.len() as f64
+    }
+}
+
+/// The training loop driver.
+pub struct Trainer<'a, E: StepEngine + ?Sized> {
+    pub engine: &'a mut E,
+    pub options: TrainerOptions,
+}
+
+impl<'a, E: StepEngine + ?Sized> Trainer<'a, E> {
+    pub fn new(engine: &'a mut E, options: TrainerOptions) -> Self {
+        Trainer { engine, options }
+    }
+
+    /// Run validation over (a prefix of) the validation set.
+    pub fn validate(&mut self, val: &Dataset) -> Result<StepMetrics> {
+        let batch_size = self.engine.manifest().train.batch;
+        let limit = self.options.eval_batches.unwrap_or(usize::MAX);
+        let mut loss_sum = 0f64;
+        let mut acc_sum = 0f64;
+        let mut n = 0usize;
+        for batch in val.batches(batch_size).take(limit) {
+            let m = self.engine.eval_step(&batch)?;
+            loss_sum += m.loss as f64;
+            acc_sum += m.acc as f64;
+            n += 1;
+        }
+        if n == 0 {
+            bail!(
+                "validation set has {} sequences — fewer than one batch of {}",
+                val.len(),
+                batch_size
+            );
+        }
+        Ok(StepMetrics {
+            loss: (loss_sum / n as f64) as f32,
+            acc: (acc_sum / n as f64) as f32,
+        })
+    }
+
+    /// Full training run: init → epochs of shuffled steps → per-epoch
+    /// validation.  Returns the metric history.
+    pub fn run(&mut self, train: &Dataset, val: &Dataset) -> Result<TrainOutcome> {
+        let manifest = self.engine.manifest().clone();
+        let batch_size = manifest.train.batch;
+        if train.batches_per_epoch(batch_size) == 0 {
+            bail!(
+                "training set has {} sequences — fewer than one batch of {}",
+                train.len(),
+                batch_size
+            );
+        }
+        self.engine.init(self.options.seed as u32)?;
+
+        let mut outcome = TrainOutcome {
+            variant: manifest.variant.clone(),
+            preset: manifest.preset.clone(),
+            epochs: Vec::new(),
+            step_losses: Vec::new(),
+            total_steps: 0,
+            total_secs: 0.0,
+        };
+        let mut step: usize = 0;
+        let t_run = Instant::now();
+
+        'outer: for epoch in 0..self.options.epochs {
+            let t_epoch = Instant::now();
+            let mut train_loss_sum = 0f64;
+            let mut n_steps = 0usize;
+            for batch in train.epoch(batch_size, self.options.seed ^ (epoch as u64)) {
+                let m = self.engine.train_step(step as i32, &batch)?;
+                train_loss_sum += m.loss as f64;
+                n_steps += 1;
+                step += 1;
+                if self.options.record_steps {
+                    outcome.step_losses.push(m.loss);
+                }
+                if self.options.log_every > 0 && step % self.options.log_every == 0 {
+                    println!(
+                        "[{}/{}] epoch {epoch} step {step}: loss {:.4}",
+                        manifest.preset, manifest.variant, m.loss
+                    );
+                }
+                if self.options.max_steps.is_some_and(|max| step >= max) {
+                    // Final validation still runs below.
+                    let secs = t_epoch.elapsed().as_secs_f64();
+                    let vm = self.validate(val)?;
+                    outcome.epochs.push(EpochRecord {
+                        epoch,
+                        train_loss: (train_loss_sum / n_steps as f64) as f32,
+                        val_loss: vm.loss,
+                        val_acc: vm.acc,
+                        secs,
+                        steps: n_steps,
+                    });
+                    break 'outer;
+                }
+            }
+            let secs = t_epoch.elapsed().as_secs_f64();
+            let vm = self.validate(val)?;
+            outcome.epochs.push(EpochRecord {
+                epoch,
+                train_loss: (train_loss_sum / n_steps as f64) as f32,
+                val_loss: vm.loss,
+                val_acc: vm.acc,
+                secs,
+                steps: n_steps,
+            });
+            if self.options.log_every > 0 {
+                println!(
+                    "[{}/{}] epoch {epoch}: train {:.4} val {:.4} acc {:.4} ({:.1}s)",
+                    manifest.preset,
+                    manifest.variant,
+                    train_loss_sum / n_steps as f64,
+                    vm.loss,
+                    vm.acc,
+                    secs
+                );
+            }
+        }
+        outcome.total_steps = step;
+        outcome.total_secs = t_run.elapsed().as_secs_f64();
+        Ok(outcome)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MockEngine — deterministic fake engine for coordinator tests
+// ---------------------------------------------------------------------------
+
+/// Deterministic fake [`StepEngine`]: loss decays exponentially toward a
+/// per-variant floor, accuracy rises correspondingly.  Lets every
+/// coordinator/report/scheduler path run in unit tests without artifacts.
+pub struct MockEngine {
+    manifest: crate::config::Manifest,
+    pub steps_taken: usize,
+    pub initialized: bool,
+    pub floor: f32,
+    pub rate: f32,
+    params: Vec<Vec<f32>>,
+}
+
+impl MockEngine {
+    pub fn new(manifest: crate::config::Manifest, floor: f32, rate: f32) -> Self {
+        MockEngine { manifest, steps_taken: 0, initialized: false, floor, rate, params: Vec::new() }
+    }
+
+    fn loss_at(&self, step: usize) -> f32 {
+        let init = (self.manifest.vocab as f32).ln();
+        self.floor + (init - self.floor) * (-self.rate * step as f32).exp()
+    }
+
+    fn metrics_at(&self, step: usize) -> StepMetrics {
+        let loss = self.loss_at(step);
+        // Plausible monotone loss→accuracy mapping (Fig. 8's regression).
+        let acc = (1.0 - loss / (self.manifest.vocab as f32).ln()).clamp(0.0, 1.0) * 0.6;
+        StepMetrics { loss, acc }
+    }
+}
+
+impl StepEngine for MockEngine {
+    fn manifest(&self) -> &crate::config::Manifest {
+        &self.manifest
+    }
+
+    fn init(&mut self, _seed: u32) -> Result<()> {
+        self.initialized = true;
+        self.steps_taken = 0;
+        self.params = self
+            .manifest
+            .params
+            .iter()
+            .map(|p| vec![0.5f32; p.elems()])
+            .collect();
+        Ok(())
+    }
+
+    fn train_step(&mut self, step: i32, batch: &Batch) -> Result<StepMetrics> {
+        if !self.initialized {
+            bail!("not initialized");
+        }
+        if batch.batch != self.manifest.train.batch {
+            bail!("batch size mismatch");
+        }
+        if step as usize != self.steps_taken {
+            bail!("step counter out of order: got {step}, expected {}", self.steps_taken);
+        }
+        self.steps_taken += 1;
+        Ok(self.metrics_at(self.steps_taken))
+    }
+
+    fn eval_step(&mut self, _batch: &Batch) -> Result<StepMetrics> {
+        if !self.initialized {
+            bail!("not initialized");
+        }
+        // Validation slightly above training loss, as in practice.
+        let m = self.metrics_at(self.steps_taken);
+        Ok(StepMetrics { loss: m.loss * 1.02, acc: m.acc * 0.98 })
+    }
+
+    fn decode(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        if tokens.len() != self.manifest.ctx {
+            bail!("token length mismatch");
+        }
+        // Uniform-ish logits favouring (token + 1) — enough for sampler tests.
+        let v = self.manifest.vocab;
+        let mut logits = vec![0f32; self.manifest.ctx * v];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let nxt = ((tok as usize) + 1) % v;
+            logits[t * v + nxt] = 5.0;
+        }
+        Ok(logits)
+    }
+
+    fn get_params(&self) -> Result<Vec<Vec<f32>>> {
+        Ok(self.params.clone())
+    }
+
+    fn set_params(&mut self, params: Vec<Vec<f32>>) -> Result<()> {
+        self.params = params;
+        self.initialized = true;
+        Ok(())
+    }
+
+    fn get_state(&self) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        Ok((self.params.clone(), self.params.clone()))
+    }
+
+    fn set_state(&mut self, _m: Vec<Vec<f32>>, _v: Vec<Vec<f32>>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Build a manifest for tests without touching disk: a complete
+/// single-layer `hsm_ab` parameter set at dim 8 / ffn 16, so the native
+/// inference engine and checkpoint paths exercise every tensor kind.
+pub fn test_manifest(variant: &str, batch: usize, ctx: usize, vocab: usize) -> crate::config::Manifest {
+    use crate::util::json;
+    let doc = format!(
+        r#"{{"preset":"ci","variant":"{variant}","display_name":"{variant}",
+            "kernels":"pallas",
+            "config":{{"dim":8,"ctx":{ctx},"vocab":{vocab},"param_count":100,
+              "layers":[{{"kind":"ab","heads":1,"shifts":[1],"ffn":16}}]}},
+            "train":{{"batch":{batch},"lr":0.002,"weight_decay":0.01,
+              "beta1":0.9,"beta2":0.999,"eps":1e-8,"dropout":0.1,"epochs":20}},
+            "params":[
+              {{"name":"tok_emb","shape":[{vocab},8],"decay":true}},
+              {{"name":"pos_emb","shape":[{ctx},8],"decay":false}},
+              {{"name":"layer0.ln1_g","shape":[8],"decay":false}},
+              {{"name":"layer0.ln1_b","shape":[8],"decay":false}},
+              {{"name":"layer0.mix_a","shape":[1],"decay":false}},
+              {{"name":"layer0.mix_b","shape":[1],"decay":false}},
+              {{"name":"layer0.ln2_g","shape":[8],"decay":false}},
+              {{"name":"layer0.ln2_b","shape":[8],"decay":false}},
+              {{"name":"layer0.ffn_w1","shape":[8,16],"decay":true}},
+              {{"name":"layer0.ffn_b1","shape":[16],"decay":false}},
+              {{"name":"layer0.ffn_w2","shape":[16,8],"decay":true}},
+              {{"name":"layer0.ffn_b2","shape":[8],"decay":false}},
+              {{"name":"lnf_g","shape":[8],"decay":false}},
+              {{"name":"lnf_b","shape":[8],"decay":false}}]}}"#
+    );
+    crate::config::Manifest::from_json(
+        &json::parse(&doc).unwrap(),
+        std::path::Path::new("/tmp/hsm-test"),
+    )
+    .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus;
+    use crate::tokenizer::trainer as tok_trainer;
+
+    fn mock_setup() -> (MockEngine, Dataset, Dataset) {
+        let text = corpus::generate(3, 80);
+        let tok = tok_trainer::train(&text, 300).unwrap();
+        let (tr, va, _) = Dataset::build(&text, &tok, 32, 0.9, 7).unwrap();
+        let eng = MockEngine::new(test_manifest("hsm_ab", 4, 32, 300), 1.8, 0.01);
+        (eng, tr, va)
+    }
+
+    #[test]
+    fn trains_for_requested_epochs() {
+        let (mut eng, tr, va) = mock_setup();
+        let mut t = Trainer::new(&mut eng, TrainerOptions { epochs: 3, ..Default::default() });
+        let out = t.run(&tr, &va).unwrap();
+        assert_eq!(out.epochs.len(), 3);
+        assert_eq!(out.total_steps, 3 * tr.batches_per_epoch(4));
+        assert_eq!(out.variant, "hsm_ab");
+    }
+
+    #[test]
+    fn loss_decreases_monotonically_with_mock() {
+        let (mut eng, tr, va) = mock_setup();
+        let mut t = Trainer::new(&mut eng, TrainerOptions { epochs: 4, ..Default::default() });
+        let out = t.run(&tr, &va).unwrap();
+        for w in out.epochs.windows(2) {
+            assert!(w[1].val_loss < w[0].val_loss);
+        }
+        assert!(out.final_val_loss() <= out.best_val_loss() + 1e-6);
+    }
+
+    #[test]
+    fn max_steps_caps_run() {
+        let (mut eng, tr, va) = mock_setup();
+        let mut t = Trainer::new(
+            &mut eng,
+            TrainerOptions { epochs: 100, max_steps: Some(5), ..Default::default() },
+        );
+        let out = t.run(&tr, &va).unwrap();
+        assert_eq!(out.total_steps, 5);
+        assert_eq!(out.epochs.len(), 1);
+    }
+
+    #[test]
+    fn step_counter_is_sequential() {
+        // MockEngine bails if steps arrive out of order — run() must feed
+        // a strictly increasing counter across epochs.
+        let (mut eng, tr, va) = mock_setup();
+        let mut t = Trainer::new(&mut eng, TrainerOptions { epochs: 2, ..Default::default() });
+        t.run(&tr, &va).unwrap();
+    }
+
+    #[test]
+    fn validation_averages_batches() {
+        let (mut eng, _, va) = mock_setup();
+        eng.init(0).unwrap();
+        let mut t = Trainer::new(&mut eng, TrainerOptions::default());
+        let m = t.validate(&va).unwrap();
+        assert!(m.loss > 0.0 && m.acc >= 0.0);
+    }
+
+    #[test]
+    fn record_steps_collects_losses() {
+        let (mut eng, tr, va) = mock_setup();
+        let mut t = Trainer::new(
+            &mut eng,
+            TrainerOptions { epochs: 1, record_steps: true, ..Default::default() },
+        );
+        let out = t.run(&tr, &va).unwrap();
+        assert_eq!(out.step_losses.len(), out.total_steps);
+    }
+
+    #[test]
+    fn errors_if_dataset_smaller_than_batch() {
+        let (mut eng, _, _) = mock_setup();
+        let tiny = Dataset { sequences: vec![vec![0; 33]; 2], ctx: 32 };
+        let mut t = Trainer::new(&mut eng, TrainerOptions::default());
+        assert!(t.run(&tiny, &tiny).is_err());
+    }
+}

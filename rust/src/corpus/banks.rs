@@ -1,0 +1,69 @@
+//! Word banks for the synthetic TinyStories grammar.
+//!
+//! Restricted to the vocabulary register of TinyStories (words a
+//! 3–4-year-old knows), which is what lets a 5 M-parameter model produce
+//! coherent completions — the property the paper's qualitative Table 3
+//! depends on.
+
+pub const NAMES: &[&str] = &[
+    "Lily", "Ben", "Tom", "Mia", "Sam", "Anna", "Max", "Sue", "Tim", "Amy",
+    "Jack", "Lucy", "Leo", "Emma", "Finn", "Zoe", "Alice", "Peter", "Mary",
+    "Bobo", "Momo", "Pip",
+];
+
+pub const ANIMALS: &[&str] = &[
+    "dog", "cat", "bird", "bunny", "duck", "frog", "bear", "mouse", "fish",
+    "pony", "fox", "owl", "pig", "hen", "squirrel", "butterfly", "puppy",
+    "kitten", "turtle",
+];
+
+pub const OBJECTS: &[&str] = &[
+    "ball", "doll", "kite", "hat", "book", "cake", "apple", "banana", "toy",
+    "balloon", "stick", "drum", "block", "boat", "car", "flower", "cookie",
+    "spoon", "cup", "sock", "box", "teddy", "pumpkin",
+];
+
+pub const PLACES: &[&str] = &[
+    "park", "garden", "forest", "beach", "house", "farm", "pond", "hill",
+    "yard", "kitchen", "school", "library", "barn", "meadow", "playground",
+];
+
+pub const ADJECTIVES: &[&str] = &[
+    "big", "small", "little", "kind", "funny", "happy", "silly", "brave",
+    "soft", "shiny", "pretty", "old", "new", "tiny", "friendly", "gentle",
+];
+
+pub const FEELINGS: &[&str] = &[
+    "sad", "scared", "worried", "surprised", "upset", "lonely", "confused",
+];
+
+pub const COLORS: &[&str] = &[
+    "red", "blue", "green", "yellow", "pink", "purple", "orange", "brown",
+    "white", "black",
+];
+
+pub const MORALS: &[&str] = &[
+    "From that day on, they always shared their toys.",
+    "They learned that helping friends is the best thing to do.",
+    "It is always good to be kind to others.",
+    "Being brave can help you find what you love.",
+    "Good friends always help each other.",
+    "Sharing makes everyone happy.",
+    "And they all lived happily ever after.",
+    "They promised to always tell the truth.",
+    "Everyone was proud of them for being so kind.",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banks_are_nonempty_and_unique() {
+        for bank in [NAMES, ANIMALS, OBJECTS, PLACES, ADJECTIVES, FEELINGS, COLORS, MORALS] {
+            assert!(!bank.is_empty());
+            let set: std::collections::HashSet<&&str> = bank.iter().collect();
+            assert_eq!(set.len(), bank.len(), "duplicate in bank");
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Synthetic TinyStories corpus.
+//!
+//! The paper trains on TinyStories (Eldan & Li 2023), 1.9 GB of short
+//! stories in the register of a 3–4-year-old's vocabulary.  That dataset
+//! is not reachable from this offline sandbox, so this module synthesises
+//! the closest structural equivalent: a seeded, templated story grammar
+//! producing short narratives with the same shape — a named child or
+//! animal protagonist, a simple want/problem, an event, dialogue, a
+//! resolution and often a gentle moral (see DESIGN.md §6 for why this
+//! substitution preserves the paper's *relative* claims).
+//!
+//! The generator is deterministic per seed, emits `<|endoftext|>`-free raw
+//! text (document boundaries are newline-delimited; the data pipeline adds
+//! the sentinel), and can produce corpora of any requested size.  A loader
+//! for a real TinyStories dump is provided too ([`load_or_generate`]).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+
+pub mod banks;
+
+use banks::*;
+
+/// Generate one story (2–5 short paragraphs, ≈400–900 characters).
+pub fn story(rng: &mut Rng) -> String {
+    let name = rng.pick(NAMES);
+    let friend = loop {
+        let f = rng.pick(NAMES);
+        if f != name {
+            break f;
+        }
+    };
+    let animal = rng.pick(ANIMALS);
+    let object = rng.pick(OBJECTS);
+    let place = rng.pick(PLACES);
+    let adj = rng.pick(ADJECTIVES);
+    let feeling = rng.pick(FEELINGS);
+    let color = rng.pick(COLORS);
+
+    let mut s = String::with_capacity(900);
+
+    // Opening.
+    match rng.below(4) {
+        0 => s.push_str(&format!(
+            "Once upon a time, there was a little {} named {}. ",
+            rng.pick(&["girl", "boy", "bird", "dog", "cat"]),
+            name
+        )),
+        1 => s.push_str(&format!(
+            "One day, {} went to the {} with {}. ",
+            name, place, friend
+        )),
+        2 => s.push_str(&format!(
+            "{} was a {} {} who loved to play. ",
+            name, adj, animal
+        )),
+        _ => s.push_str(&format!(
+            "There once was a {} {} that lived near the {}. ",
+            color, animal, place
+        )),
+    }
+
+    // Desire / setup.
+    match rng.below(4) {
+        0 => s.push_str(&format!(
+            "{} loved to play with the {} {} every day. ",
+            name, color, object
+        )),
+        1 => s.push_str(&format!(
+            "{} wanted to find a {} {} more than anything. ",
+            name, adj, object
+        )),
+        2 => s.push_str(&format!(
+            "Every morning, {} would run to the {} to see the {}. ",
+            name, place, animal
+        )),
+        _ => s.push_str(&format!(
+            "{} had a {} {} that was very special. ",
+            name, adj, object
+        )),
+    }
+
+    // Complication.
+    match rng.below(5) {
+        0 => s.push_str(&format!(
+            "One day, the {} was gone! {} looked everywhere and felt very {}. ",
+            object, name, feeling
+        )),
+        1 => s.push_str(&format!(
+            "Suddenly, a big {} came to the {}. {} was {} and did not know what to do. ",
+            animal, place, name, feeling
+        )),
+        2 => s.push_str(&format!(
+            "But then it started to rain, and the {} got all wet. ",
+            object
+        )),
+        3 => s.push_str(&format!(
+            "{} tried to climb the big tree, but it was too {}. ",
+            name, rng.pick(&["tall", "high", "slippery", "scary"])
+        )),
+        _ => s.push_str(&format!(
+            "Then {} saw that {} was sad and alone by the {}. ",
+            name, friend, place
+        )),
+    }
+
+    // Dialogue.
+    match rng.below(4) {
+        0 => s.push_str(&format!(
+            "\"Don't worry,\" said {}. \"I will help you.\" ",
+            friend
+        )),
+        1 => s.push_str(&format!(
+            "\"{}, where are you?\" {} called out. ",
+            object, name
+        )),
+        2 => s.push_str(&format!(
+            "{} said, \"Please can you help me find my {}?\" \"Yes,\" said the {} {}. ",
+            name, object, adj, animal
+        )),
+        _ => s.push_str(&format!(
+            "\"Look!\" said {}. \"The {} is by the {}!\" ",
+            friend, object, place
+        )),
+    }
+
+    // Resolution.
+    match rng.below(4) {
+        0 => s.push_str(&format!(
+            "Together, {} and {} found the {} under a big leaf. {} was so {} and hugged {}. ",
+            name, friend, object, name, rng.pick(&["happy", "glad", "excited"]), friend
+        )),
+        1 => s.push_str(&format!(
+            "The {} {} helped {} and soon everything was all right again. ",
+            adj, animal, name
+        )),
+        2 => s.push_str(&format!(
+            "{} shared the {} with {} and they played in the {} all day. ",
+            name, object, friend, place
+        )),
+        _ => s.push_str(&format!(
+            "In the end, {} learned to be brave, and the {} became {}'s best friend. ",
+            name, animal, name
+        )),
+    }
+
+    // Moral (sometimes).
+    if rng.chance(0.6) {
+        let moral: &&str = rng.pick(MORALS);
+        s.push_str(moral);
+        s.push(' ');
+    }
+    s.push_str("The end.");
+    s
+}
+
+/// Generate a corpus of `n_stories` stories, newline-separated.
+pub fn generate(seed: u64, n_stories: usize) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out = String::with_capacity(n_stories * 700);
+    for i in 0..n_stories {
+        let mut srng = rng.split(i as u64);
+        out.push_str(&story(&mut srng));
+        out.push('\n');
+    }
+    out
+}
+
+/// Generate roughly `target_bytes` of corpus.
+pub fn generate_bytes(seed: u64, target_bytes: usize) -> String {
+    // Stories average ~650 bytes; overshoot slightly then trim whole stories.
+    let n = target_bytes / 500 + 1;
+    let mut text = String::with_capacity(target_bytes + 2048);
+    let mut rng = Rng::new(seed);
+    let mut i = 0;
+    while text.len() < target_bytes {
+        let mut srng = rng.split(i);
+        text.push_str(&story(&mut srng));
+        text.push('\n');
+        i += 1;
+        if i as usize > 4 * n {
+            break; // safety
+        }
+    }
+    text
+}
+
+/// Load a real TinyStories dump if `path` exists, else synthesise one.
+///
+/// A real dump is expected as plain UTF-8 text with stories separated by
+/// blank lines or `<|endoftext|>` markers (both are normalised to single
+/// newlines, the format [`generate`] emits).
+pub fn load_or_generate(path: Option<&Path>, seed: u64, target_bytes: usize) -> Result<String> {
+    if let Some(p) = path {
+        if p.exists() {
+            let raw = std::fs::read_to_string(p)
+                .with_context(|| format!("reading corpus from {}", p.display()))?;
+            let norm = raw
+                .replace("<|endoftext|>", "\n")
+                .replace("\r\n", "\n")
+                .split("\n\n")
+                .map(|s| s.trim().replace('\n', " "))
+                .filter(|s| !s.is_empty())
+                .collect::<Vec<_>>()
+                .join("\n");
+            return Ok(norm);
+        }
+    }
+    Ok(generate_bytes(seed, target_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(generate(7, 20), generate(7, 20));
+        assert_ne!(generate(7, 20), generate(8, 20));
+    }
+
+    #[test]
+    fn stories_have_structure() {
+        let text = generate(1, 50);
+        let stories: Vec<&str> = text.lines().collect();
+        assert_eq!(stories.len(), 50);
+        for st in &stories {
+            assert!(st.ends_with("The end."), "missing ending: {st:?}");
+            assert!(st.len() > 150, "too short: {st:?}");
+        }
+    }
+
+    #[test]
+    fn vocabulary_is_childlike() {
+        // No token longer than 12 chars should appear (simple register).
+        let text = generate(2, 100);
+        for w in text.split_whitespace() {
+            let w = w.trim_matches(|c: char| !c.is_alphabetic());
+            assert!(w.len() <= 12, "long word {w:?}");
+        }
+    }
+
+    #[test]
+    fn generate_bytes_hits_target() {
+        let text = generate_bytes(3, 50_000);
+        assert!(text.len() >= 50_000);
+        assert!(text.len() < 80_000);
+    }
+
+    #[test]
+    fn stories_vary() {
+        let text = generate(4, 200);
+        let stories: Vec<&str> = text.lines().collect();
+        let unique: std::collections::HashSet<&&str> = stories.iter().collect();
+        assert!(unique.len() > 190, "only {} unique stories", unique.len());
+    }
+}

@@ -1,0 +1,226 @@
+//! Autoregressive text generation (the paper's qualitative evaluation path).
+//!
+//! Drives the `decode` artifact: encode the prompt, place it in the fixed
+//! `[1, ctx]` window, run the full-context forward pass, sample the next
+//! token from the logits at the current position (temperature / top-k, as
+//! described for the GPT output stage in the paper's §2), append, repeat.
+//!
+//! Causality of every mixer guarantees positions ≥ current are ignorable,
+//! so the window is simply padded with the end-of-text sentinel.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::StepEngine;
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// Sampling configuration.
+#[derive(Debug, Clone)]
+pub struct SampleCfg {
+    /// Softmax temperature; 0 = greedy argmax.
+    pub temperature: f32,
+    /// Keep only the k most likely tokens (0 = disabled).
+    pub top_k: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+    /// Stop at the end-of-text sentinel.
+    pub stop_at_eot: bool,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        SampleCfg { temperature: 0.8, top_k: 40, max_new_tokens: 64, seed: 0, stop_at_eot: true }
+    }
+}
+
+/// Pick the next token from one row of logits.
+pub fn sample_logits(logits: &[f32], cfg: &SampleCfg, rng: &mut Rng) -> u32 {
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Top-k filter on (logit, index) pairs.
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    if cfg.top_k > 0 && cfg.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+        });
+        idx.truncate(cfg.top_k);
+    }
+    // Temperature softmax over the surviving set (numerically stable).
+    let max = idx
+        .iter()
+        .map(|&i| logits[i as usize])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((logits[i as usize] - max) / cfg.temperature).exp())
+        .collect();
+    let total: f32 = weights.iter().sum();
+    let mut u = rng.f32() * total;
+    for (w, &i) in weights.iter().zip(&idx) {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    *idx.last().unwrap()
+}
+
+/// Greedy argmax.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for i in 1..logits.len() {
+        if logits[i] > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Result of one generation call.
+#[derive(Debug, Clone)]
+pub struct Generation {
+    pub prompt: String,
+    pub completion: String,
+    pub tokens_generated: usize,
+    pub stopped_at_eot: bool,
+}
+
+/// Generate a completion for `prompt`.
+pub fn generate<E: StepEngine + ?Sized>(
+    engine: &mut E,
+    tok: &Tokenizer,
+    prompt: &str,
+    cfg: &SampleCfg,
+) -> Result<Generation> {
+    let ctx = engine.manifest().ctx;
+    let vocab = engine.manifest().vocab;
+    if tok.vocab_size() != vocab {
+        bail!(
+            "tokenizer vocab {} does not match model vocab {vocab}",
+            tok.vocab_size()
+        );
+    }
+    let mut ids: Vec<u32> = tok.encode(prompt);
+    if ids.is_empty() {
+        bail!("prompt encodes to zero tokens");
+    }
+    if ids.len() >= ctx {
+        bail!("prompt ({} tokens) must be shorter than ctx ({ctx})", ids.len());
+    }
+    let prompt_len = ids.len();
+    let mut rng = Rng::new(cfg.seed);
+    let mut stopped = false;
+
+    while ids.len() < ctx && ids.len() - prompt_len < cfg.max_new_tokens {
+        // Fixed-size window padded with EOT (causally invisible).
+        let mut window: Vec<i32> = ids.iter().map(|&t| t as i32).collect();
+        window.resize(ctx, tok.eot as i32);
+        let logits = engine.decode(&window)?;
+        let pos = ids.len() - 1;
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let next = sample_logits(row, cfg, &mut rng);
+        if cfg.stop_at_eot && next == tok.eot {
+            stopped = true;
+            break;
+        }
+        ids.push(next);
+    }
+
+    let completion = tok.decode(&ids[prompt_len..]);
+    Ok(Generation {
+        prompt: prompt.to_string(),
+        completion,
+        tokens_generated: ids.len() - prompt_len,
+        stopped_at_eot: stopped,
+    })
+}
+
+/// The paper's Table 3 prompt suite (factual + reasoning prompts).
+pub const TABLE3_PROMPTS: &[&str] = &[
+    "Alice was so tired when she got home so she went",
+    "Lily likes cats and dogs. She asked her mom for a dog and her mom says no, so instead she asked",
+    "Once upon a time there was a pumpkin. It was a very special pumpkin, it could speak. It was sad because it couldn't move. Every day, it would say",
+    "Jack and Lily liked to watch the moon at night. They noticed that the moon changed its shape every night. Sometimes the moon was big and round, and sometimes it was",
+    "Jack wanted to read a book, so he went to",
+    "Jack told Mary, 'If you give me your banana, I'll give you my apple'. Mary gave Jack her banana so",
+    "On weekends Jack went to visit his grandmother whereas on weekdays he would go to school. Last weekend, when Jack was on his way to",
+    "Lily and Ben were having an argument. Ben said that cake is much better than ice cream and Lily said that",
+    "Jack's mother was not home, and his father was at home. When Jack came home, he said hello to",
+    "Lily doesn't like swimming. When her father wants to take her to the swimming pool, she says",
+    "Both Ben and Lily wanted cake. Father said that there was only one piece of cake left. They",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{test_manifest, MockEngine};
+    use crate::corpus;
+    use crate::tokenizer::trainer as tok_trainer;
+
+    #[test]
+    fn argmax_finds_max() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::new(0);
+        let cfg = SampleCfg { temperature: 0.0, ..Default::default() };
+        assert_eq!(sample_logits(&[0.0, 9.0, 1.0], &cfg, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(1);
+        let cfg = SampleCfg { temperature: 1.0, top_k: 2, ..Default::default() };
+        let logits = [10.0, 9.0, -50.0, -50.0];
+        for _ in 0..100 {
+            let t = sample_logits(&logits, &cfg, &mut rng);
+            assert!(t < 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn temperature_zero_deterministic_high_temp_varied() {
+        let logits: Vec<f32> = (0..20).map(|i| (i as f32) * 0.1).collect();
+        let mut rng = Rng::new(2);
+        let hot = SampleCfg { temperature: 5.0, top_k: 0, ..Default::default() };
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(sample_logits(&logits, &hot, &mut rng));
+        }
+        assert!(seen.len() > 5, "high temperature should vary ({seen:?})");
+    }
+
+    #[test]
+    fn generate_with_mock_engine() {
+        let text = corpus::generate(5, 60);
+        let tok = tok_trainer::train(&text, 300).unwrap();
+        let mut eng = MockEngine::new(
+            test_manifest("hsm_ab", 4, 32, tok.vocab_size()),
+            1.8,
+            0.01,
+        );
+        eng.init(0).unwrap();
+        let cfg = SampleCfg { temperature: 0.0, max_new_tokens: 8, ..Default::default() };
+        let g = generate(&mut eng, &tok, "Once upon a time", &cfg).unwrap();
+        assert!(g.tokens_generated > 0);
+        assert_eq!(g.prompt, "Once upon a time");
+    }
+
+    #[test]
+    fn generate_rejects_vocab_mismatch() {
+        let text = corpus::generate(5, 60);
+        let tok = tok_trainer::train(&text, 300).unwrap();
+        let mut eng = MockEngine::new(test_manifest("hsm_ab", 4, 32, 999), 1.8, 0.01);
+        eng.init(0).unwrap();
+        assert!(generate(&mut eng, &tok, "hi", &SampleCfg::default()).is_err());
+    }
+
+    #[test]
+    fn table3_prompt_suite_is_complete() {
+        assert_eq!(TABLE3_PROMPTS.len(), 11);
+    }
+}

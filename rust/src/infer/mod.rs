@@ -1,0 +1,28 @@
+//! Native incremental inference engine.
+//!
+//! The PJRT `decode` artifact recomputes the **full context** for every
+//! generated token — O(T) work per token for HSM, O(T²) for attention.
+//! But HSM's defining property (paper §3) is that each layer needs only
+//! *one* past activation at a fixed shift, so autoregressive decoding
+//! admits **O(1) work and state per layer per token** (a ring buffer of
+//! post-LN activations), something dense attention fundamentally cannot
+//! match (its KV cache grows with T and each step scans all of it).
+//!
+//! This module realises that advantage as a from-scratch Rust forward
+//! pass: checkpoint weights in, one token at a time in, next-token logits
+//! out.  It supports **every** mixer variant (HSM ring buffers; a KV
+//! cache for attention/hybrid layers) and is validated for logits parity
+//! against the PJRT decode artifact in `rust/tests/runtime_e2e.rs`.
+//!
+//! Submodules:
+//! * [`tensor`] — the minimal dense-math substrate (matvec, layernorm,
+//!   softmax) used by the engine.
+//! * [`weights`] — typed per-layer weight views over a flat checkpoint.
+//! * [`engine`] — the incremental decoder itself + sampling loop.
+
+pub mod engine;
+pub mod tensor;
+pub mod weights;
+
+pub use engine::{InferenceEngine, LayerState};
+pub use weights::ModelWeights;

@@ -1,0 +1,147 @@
+//! Minimal dense-math substrate for the native inference engine.
+//!
+//! Row-major `f32` throughout, shaped to the decoder's needs: vector ×
+//! matrix products (the hot path — one token at a time), LayerNorm, ReLU,
+//! tanh, and a numerically-stable softmax.  No external BLAS: the matvec
+//! is written as an axpy-accumulation over matrix rows so the inner loop
+//! is contiguous in memory and auto-vectorizes.
+
+/// y = x @ W where `x: [k]`, `w: [k, n]` row-major → `y: [n]`.
+///
+/// Iterating over rows of `w` keeps both `w`'s row and `y` contiguous
+/// (axpy form), which the compiler vectorizes; the naive column-dot form
+/// would stride by `n` and run ~4× slower.
+pub fn matvec(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n, "matvec shape mismatch");
+    debug_assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * n..(i + 1) * n];
+        for (yj, &wij) in y.iter_mut().zip(row) {
+            *yj += xi * wij;
+        }
+    }
+    let _ = k;
+}
+
+/// y = x @ Wᵀ where `x: [k]`, `w: [n, k]` row-major → `y: [n]`.
+/// (Used for the tied-embedding logit projection `h @ Eᵀ`.)
+pub fn matvec_t(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+    let k = x.len();
+    debug_assert_eq!(w.len(), n * k, "matvec_t shape mismatch");
+    for j in 0..n {
+        let row = &w[j * k..(j + 1) * k];
+        let mut acc = 0.0f32;
+        for (xi, wji) in x.iter().zip(row) {
+            acc += xi * wji;
+        }
+        y[j] = acc;
+    }
+}
+
+/// In-place y += x.
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (a, b) in y.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// LayerNorm with learned gain/bias (eps matches the L2 model's 1e-5).
+pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for i in 0..x.len() {
+        out[i] = (x[i] - mean) * inv * g[i] + b[i];
+    }
+}
+
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub fn tanh_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// Numerically-stable in-place softmax.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let max = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in x.iter_mut() {
+        *v /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_small() {
+        // x: [2], W: [2, 3] = [[1,2,3],[4,5,6]] → y = [1*1+2*4, 1*2+2*5, 1*3+2*6]
+        let x = [1.0, 2.0];
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut y = [0.0; 3];
+        matvec(&x, &w, 3, &mut y);
+        assert_eq!(y, [9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn matvec_t_is_transpose_of_matvec() {
+        let x = [0.5, -1.0, 2.0];
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [2, 3] as n=2, k=3 for matvec_t
+        let mut yt = [0.0; 2];
+        matvec_t(&x, &w, 2, &mut yt);
+        // row0 · x = 1*0.5 + 2*-1 + 3*2 = 4.5 ; row1 · x = 4*0.5 + 5*-1 + 6*2 = 9
+        assert_eq!(yt, [4.5, 9.0]);
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let g = [1.0; 4];
+        let b = [0.0; 4];
+        let mut out = [0.0; 4];
+        layer_norm(&x, &g, &b, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = [1000.0, 1001.0, 999.0];
+        softmax_inplace(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn relu_and_tanh() {
+        let mut x = [-1.0, 0.5];
+        relu_inplace(&mut x);
+        assert_eq!(x, [0.0, 0.5]);
+        let mut y = [0.0f32, 100.0];
+        tanh_inplace(&mut y);
+        assert!((y[0]).abs() < 1e-7 && (y[1] - 1.0).abs() < 1e-5);
+    }
+}

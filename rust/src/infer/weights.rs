@@ -1,0 +1,180 @@
+//! Typed weight views for the native inference engine.
+//!
+//! The manifest gives the flat parameter order; this module indexes that
+//! flat list into named per-layer weight structs so `engine.rs` reads
+//! like the math in the paper.  Weights can come from a live
+//! [`crate::runtime::StepEngine`] (`get_params`) or a saved
+//! [`crate::checkpoint::Checkpoint`].
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::config::Manifest;
+
+/// One layer's mixer weights (variant-dependent subset populated).
+#[derive(Debug, Clone, Default)]
+pub struct MixerWeights {
+    // ab / vec (per-head scalars or per-channel vectors)
+    pub mix_a: Vec<f32>,
+    pub mix_b: Vec<f32>,
+    // mat
+    pub mix_mat_a: Vec<f32>, // [D, D]
+    pub mix_mat_b: Vec<f32>, // [D, D]
+    pub mix_bias: Vec<f32>,  // [D]
+    // gate1 (two-layer MLP) / gate2 (per-head linear)
+    pub gate_w1: Vec<f32>,
+    pub gate_b1: Vec<f32>,
+    pub gate_w2: Vec<f32>,
+    pub gate_b2: Vec<f32>,
+    pub gate_w: Vec<f32>, // [H, 2hd, hd]
+    pub gate_b: Vec<f32>, // [H, hd]
+    // fusion
+    pub fuse_w1: Vec<f32>,
+    pub fuse_b1: Vec<f32>,
+    pub fuse_w2: Vec<f32>,
+    pub fuse_b2: Vec<f32>,
+    // attention
+    pub wq: Vec<f32>,
+    pub bq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub bo: Vec<f32>,
+}
+
+/// One transformer block's weights.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub ffn_w1: Vec<f32>, // [D, F]
+    pub ffn_b1: Vec<f32>, // [F]
+    pub ffn_w2: Vec<f32>, // [F, D]
+    pub ffn_b2: Vec<f32>, // [D]
+    pub mixer: MixerWeights,
+}
+
+/// The full decoder's weights, shaped per the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub tok_emb: Vec<f32>, // [V, D]
+    pub pos_emb: Vec<f32>, // [C, D]
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+}
+
+impl ModelWeights {
+    /// Build from the flat parameter list (manifest order).
+    pub fn from_flat(manifest: &Manifest, flat: &[Vec<f32>]) -> Result<Self> {
+        if flat.len() != manifest.params.len() {
+            bail!(
+                "expected {} tensors, got {}",
+                manifest.params.len(),
+                flat.len()
+            );
+        }
+        let by_name: HashMap<&str, &Vec<f32>> = manifest
+            .params
+            .iter()
+            .zip(flat)
+            .map(|(p, d)| (p.name.as_str(), d))
+            .collect();
+        let get = |name: &str| -> Result<Vec<f32>> {
+            by_name
+                .get(name)
+                .map(|v| (*v).clone())
+                .ok_or_else(|| anyhow!("missing parameter {name}"))
+        };
+        let opt = |name: &str| -> Vec<f32> {
+            by_name.get(name).map(|v| (*v).clone()).unwrap_or_default()
+        };
+
+        let mut layers = Vec::with_capacity(manifest.layers.len());
+        for l in 0..manifest.layers.len() {
+            let p = |s: &str| format!("layer{l}.{s}");
+            layers.push(LayerWeights {
+                ln1_g: get(&p("ln1_g"))?,
+                ln1_b: get(&p("ln1_b"))?,
+                ln2_g: get(&p("ln2_g"))?,
+                ln2_b: get(&p("ln2_b"))?,
+                ffn_w1: get(&p("ffn_w1"))?,
+                ffn_b1: get(&p("ffn_b1"))?,
+                ffn_w2: get(&p("ffn_w2"))?,
+                ffn_b2: get(&p("ffn_b2"))?,
+                mixer: MixerWeights {
+                    mix_a: opt(&p("mix_a")),
+                    mix_b: opt(&p("mix_b")),
+                    mix_mat_a: opt(&p("mix_A")),
+                    mix_mat_b: opt(&p("mix_B")),
+                    mix_bias: opt(&p("mix_bias")),
+                    gate_w1: opt(&p("gate_w1")),
+                    gate_b1: opt(&p("gate_b1")),
+                    gate_w2: opt(&p("gate_w2")),
+                    gate_b2: opt(&p("gate_b2")),
+                    gate_w: opt(&p("gate_w")),
+                    gate_b: opt(&p("gate_b")),
+                    fuse_w1: opt(&p("fuse_w1")),
+                    fuse_b1: opt(&p("fuse_b1")),
+                    fuse_w2: opt(&p("fuse_w2")),
+                    fuse_b2: opt(&p("fuse_b2")),
+                    wq: opt(&p("attn_wq")),
+                    bq: opt(&p("attn_bq")),
+                    wk: opt(&p("attn_wk")),
+                    bk: opt(&p("attn_bk")),
+                    wv: opt(&p("attn_wv")),
+                    bv: opt(&p("attn_bv")),
+                    wo: opt(&p("attn_wo")),
+                    bo: opt(&p("attn_bo")),
+                },
+            });
+        }
+        Ok(ModelWeights {
+            tok_emb: get("tok_emb")?,
+            pos_emb: get("pos_emb")?,
+            lnf_g: get("lnf_g")?,
+            lnf_b: get("lnf_b")?,
+            layers,
+        })
+    }
+
+    /// Build from a training checkpoint (`param/` group, manifest order).
+    pub fn from_checkpoint(manifest: &Manifest, ck: &Checkpoint) -> Result<Self> {
+        let params = ck.group("param");
+        if params.is_empty() {
+            bail!("checkpoint has no param/ tensors");
+        }
+        Self::from_flat(manifest, &params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{test_manifest, MockEngine};
+    use crate::runtime::StepEngine;
+
+    #[test]
+    fn builds_from_mock_engine_flat_params() {
+        let m = test_manifest("hsm_ab", 2, 16, 300);
+        let mut eng = MockEngine::new(m.clone(), 1.8, 0.01);
+        eng.init(0).unwrap();
+        let w = ModelWeights::from_flat(&m, &eng.get_params().unwrap()).unwrap();
+        assert_eq!(w.tok_emb.len(), 300 * 8); // test manifest: [vocab, 8]
+        assert_eq!(w.layers.len(), 1);
+        assert_eq!(w.layers[0].mixer.mix_a.len(), 1);
+        assert_eq!(w.layers[0].ffn_w1.len(), 8 * 16);
+    }
+
+    #[test]
+    fn rejects_wrong_tensor_count() {
+        let m = test_manifest("hsm_ab", 2, 16, 300);
+        assert!(ModelWeights::from_flat(&m, &[vec![0.0]]).is_err());
+    }
+}

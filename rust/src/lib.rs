@@ -1,0 +1,52 @@
+//! # hsm — Hierarchical Shift Mixing
+//!
+//! A production-style reproduction of *"Hierarchical Shift Mixing — Beyond
+//! Dense Attention in Transformers"* (Forchheimer, 2026).
+//!
+//! HSM replaces the dense softmax-attention mixer of a GPT-style decoder
+//! with pairwise token mixing at layer-doubling temporal shifts, giving
+//! linear-time complexity while covering multi-scale token interactions
+//! across the layer stack.  This crate is **layer 3** of a three-layer
+//! stack:
+//!
+//! * **L1** — Pallas kernels (shift-mix, causal flash attention, gated
+//!   combine) authored in `python/compile/kernels/`.
+//! * **L2** — the JAX decoder with all twelve mixer variants in
+//!   `python/compile/model.py`, AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: tokenizer, corpus, data pipeline, the PJRT
+//!   runtime that executes the artifacts, the training coordinator,
+//!   generation, and the experiment/report drivers that regenerate every
+//!   table and figure of the paper.
+//!
+//! Python never runs on the training or inference path: `make artifacts`
+//! lowers the model once, and the `hsm` binary is self-contained
+//! afterwards.
+//!
+//! ## Quick start
+//!
+//! ```bash
+//! make artifacts                # python → artifacts/<preset>/<variant>/*
+//! cargo run --release -- train --preset ci --variant hsm_ab --steps 200
+//! cargo run --release -- generate --preset ci --variant hsm_ab \
+//!     --prompt "Once upon a time"
+//! cargo run --release -- report table1 --preset ci
+//! ```
+
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod data;
+pub mod generation;
+pub mod infer;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;
+
+pub use config::{Manifest, TrainHp};
+pub use coordinator::{TrainOutcome, Trainer, TrainerOptions};
+pub use data::{Batch, Dataset};
+pub use runtime::{PjrtEngine, StepEngine};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,326 @@
+//! `hsm` — the launcher.
+//!
+//! Subcommands:
+//!
+//! * `train`     — train one variant, log metrics, write a checkpoint.
+//! * `evaluate`  — validation loss/accuracy of a checkpoint.
+//! * `generate`  — sample completions from a (trained) model.
+//! * `report`    — regenerate a paper table/figure (table1|table2|table3|fig7|fig8).
+//! * `corpus`    — synthesise the TinyStories-like corpus to a file.
+//! * `tokenizer` — train / inspect a BPE tokenizer.
+//! * `info`      — print an artifact manifest summary.
+//!
+//! Run `hsm <subcommand> --help` for flags.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Result};
+
+use hsm::checkpoint::Checkpoint;
+use hsm::config::{artifacts_root, Manifest, TABLE1_VARIANTS, VARIANTS};
+use hsm::coordinator::{Trainer, TrainerOptions};
+use hsm::corpus;
+use hsm::generation::{self, SampleCfg};
+use hsm::report::{self, ExperimentCtx, PjrtFactory, FIG7_VARIANTS};
+use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::tokenizer::{trainer as tok_trainer, Tokenizer};
+use hsm::util::cli::Args;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        eprintln!("{}", top_usage());
+        return ExitCode::from(2);
+    };
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "evaluate" => cmd_evaluate(rest),
+        "generate" => cmd_generate(rest),
+        "report" => cmd_report(rest),
+        "corpus" => cmd_corpus(rest),
+        "tokenizer" => cmd_tokenizer(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}\n\n{}", top_usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn top_usage() -> String {
+    "hsm — Hierarchical Shift Mixing (Forchheimer 2026) reproduction\n\
+     \n\
+     usage: hsm <subcommand> [flags]\n\
+     \n\
+     subcommands:\n\
+       train      train one model variant\n\
+       evaluate   evaluate a checkpoint on the validation split\n\
+       generate   sample text from a model\n\
+       report     regenerate a paper table/figure (table1|table2|table3|fig7|fig8)\n\
+       corpus     synthesise the TinyStories-like corpus\n\
+       tokenizer  train / inspect the byte-level BPE tokenizer\n\
+       info       print an artifact manifest summary\n"
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+
+fn experiment_flags(a: Args) -> Args {
+    a.flag("preset", "ci", "size preset (paper|desktop|ci)")
+        .flag("corpus-bytes", "1048576", "synthetic corpus size in bytes")
+        .flag("corpus-seed", "1234", "corpus synthesis seed")
+        .optional("corpus", "path to a real TinyStories dump (optional)")
+        .flag("epochs", "2", "training epochs")
+        .flag("max-steps", "0", "hard cap on optimizer steps (0 = none)")
+        .flag("seed", "42", "init/shuffle seed")
+        .flag("eval-batches", "8", "validation batches per eval (0 = all)")
+        .flag("log-every", "25", "log every N steps (0 = quiet)")
+}
+
+fn ctx_from_args(a: &Args) -> Result<ExperimentCtx> {
+    let mut ctx = ExperimentCtx::new(&a.str("preset"));
+    ctx.corpus_bytes = a.usize("corpus-bytes").map_err(|e| anyhow!(e))?;
+    ctx.corpus_seed = a.u64("corpus-seed").map_err(|e| anyhow!(e))?;
+    ctx.corpus_path = a.get("corpus").map(PathBuf::from);
+    ctx.epochs = a.usize("epochs").map_err(|e| anyhow!(e))?;
+    let ms = a.usize("max-steps").map_err(|e| anyhow!(e))?;
+    ctx.max_steps = (ms > 0).then_some(ms);
+    ctx.train_seed = a.u64("seed").map_err(|e| anyhow!(e))?;
+    let eb = a.usize("eval-batches").map_err(|e| anyhow!(e))?;
+    ctx.eval_batches = (eb > 0).then_some(eb);
+    ctx.log_every = a.usize("log-every").map_err(|e| anyhow!(e))?;
+    Ok(ctx)
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = experiment_flags(Args::new("train"))
+        .required("variant", "model variant (e.g. hsm_ab, gpt)")
+        .optional("checkpoint-out", "write final checkpoint here")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let ctx = ctx_from_args(&a)?;
+    let variant = a.str("variant");
+    let factory = PjrtFactory::new(&ctx.preset);
+    let (engine, outcome) = report::train_variant(&factory, &ctx, &variant)?;
+    println!(
+        "\n{variant}: final val loss {:.4}, acc {:.4}, {:.1}s/epoch, {} steps",
+        outcome.final_val_loss(),
+        outcome.epochs.last().map(|e| e.val_acc).unwrap_or(f32::NAN),
+        outcome.secs_per_epoch(),
+        outcome.total_steps
+    );
+    if let Some(out) = a.get("checkpoint-out") {
+        let m = engine.manifest().clone();
+        let names: Vec<String> = m.params.iter().map(|p| p.name.clone()).collect();
+        let shapes: Vec<Vec<usize>> = m.params.iter().map(|p| p.shape.clone()).collect();
+        let params = engine.get_params()?;
+        let (mm, vv) = engine.get_state()?;
+        let ck = Checkpoint::from_training(
+            &m.variant, &m.preset, outcome.total_steps, &names, &shapes, params, mm, vv,
+        );
+        ck.save(&PathBuf::from(&out))?;
+        println!("checkpoint written to {out}");
+    }
+    Ok(())
+}
+
+fn load_engine_with_checkpoint(preset: &str, variant: &str, ck_path: Option<String>) -> Result<PjrtEngine> {
+    let manifest = Manifest::load_variant(&artifacts_root(), preset, variant)?;
+    let mut engine = PjrtEngine::new(manifest)?;
+    match ck_path {
+        Some(p) => {
+            let ck = Checkpoint::load(&PathBuf::from(&p))?;
+            if ck.meta_value("variant") != Some(variant) {
+                bail!(
+                    "checkpoint is for variant {:?}, requested {variant:?}",
+                    ck.meta_value("variant")
+                );
+            }
+            engine.set_params(ck.group("param"))?;
+            engine.set_state(ck.group("m"), ck.group("v"))?;
+        }
+        None => engine.init(42)?,
+    }
+    Ok(engine)
+}
+
+fn cmd_evaluate(argv: &[String]) -> Result<()> {
+    let a = experiment_flags(Args::new("evaluate"))
+        .required("variant", "model variant")
+        .optional("checkpoint", "checkpoint to evaluate (default: fresh init)")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let ctx = ctx_from_args(&a)?;
+    let mut engine =
+        load_engine_with_checkpoint(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
+    let (_tok, _train, val) = report::build_data(&ctx, engine.manifest())?;
+    let mut trainer = Trainer::new(&mut engine, TrainerOptions {
+        eval_batches: ctx.eval_batches,
+        ..Default::default()
+    });
+    let m = trainer.validate(&val)?;
+    println!("val loss {:.4}  acc {:.4}", m.loss, m.acc);
+    Ok(())
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let a = experiment_flags(Args::new("generate"))
+        .required("variant", "model variant")
+        .optional("checkpoint", "trained checkpoint (default: fresh init)")
+        .flag("prompt", "Once upon a time", "prompt text")
+        .flag("temperature", "0.8", "sampling temperature (0 = greedy)")
+        .flag("top-k", "40", "top-k filter (0 = off)")
+        .flag("max-new-tokens", "64", "maximum tokens to generate")
+        .flag("samples", "1", "number of samples")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let ctx = ctx_from_args(&a)?;
+    let mut engine =
+        load_engine_with_checkpoint(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
+    let (tok, _, _) = report::build_data(&ctx, engine.manifest())?;
+    let samples = a.usize("samples").map_err(|e| anyhow!(e))?;
+    for i in 0..samples {
+        let cfg = SampleCfg {
+            temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
+            top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
+            max_new_tokens: a.usize("max-new-tokens").map_err(|e| anyhow!(e))?,
+            seed: ctx.train_seed ^ i as u64,
+            stop_at_eot: true,
+        };
+        let g = generation::generate(&mut engine, &tok, &a.str("prompt"), &cfg)?;
+        println!("--- sample {i} ({} tokens) ---", g.tokens_generated);
+        println!("{}{}", g.prompt, g.completion);
+    }
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let a = experiment_flags(Args::new("report <table1|table2|table3|fig7|fig8>"))
+        .optional("variants", "comma-separated variant subset")
+        .flag("max-new-tokens", "24", "table3: tokens per completion")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let which = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("report needs a target: table1|table2|table3|fig7|fig8"))?
+        .clone();
+    let ctx = ctx_from_args(&a)?;
+    let factory = PjrtFactory::new(&ctx.preset);
+    let chosen: Vec<String> = match a.get("variants") {
+        Some(list) => list.split(',').map(str::to_string).collect(),
+        None => match which.as_str() {
+            "fig7" => FIG7_VARIANTS.iter().map(|s| s.to_string()).collect(),
+            "table3" | "all" => VARIANTS.iter().map(|s| s.to_string()).collect(),
+            _ => TABLE1_VARIANTS.iter().map(|s| s.to_string()).collect(),
+        },
+    };
+    let refs: Vec<&str> = chosen.iter().map(String::as_str).collect();
+    match which.as_str() {
+        "all" => {
+            let md = report::run_all(
+                &factory,
+                &ctx,
+                &refs,
+                a.usize("max-new-tokens").map_err(|e| anyhow!(e))?,
+            )?;
+            println!("\n{md}");
+        }
+        "table1" => {
+            let md = report::run_table1(&factory, &ctx, &refs)?;
+            println!("\n{md}");
+        }
+        "table2" => {
+            let md = report::run_table2(&factory, &ctx)?;
+            println!("\n{md}");
+        }
+        "table3" => {
+            let md = report::run_table3(
+                &factory,
+                &ctx,
+                &refs,
+                a.usize("max-new-tokens").map_err(|e| anyhow!(e))?,
+            )?;
+            println!("\n{md}");
+        }
+        "fig7" => {
+            let p = report::run_fig7(&factory, &ctx, &refs)?;
+            println!("wrote {}", p.display());
+        }
+        "fig8" => {
+            let (p, r) = report::run_fig8(&factory, &ctx, &refs)?;
+            println!("wrote {} (pearson(loss, acc) = {r:.4})", p.display());
+        }
+        other => bail!("unknown report target {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_corpus(argv: &[String]) -> Result<()> {
+    let a = Args::new("corpus")
+        .flag("seed", "1234", "generator seed")
+        .flag("stories", "2000", "number of stories")
+        .flag("out", "corpus.txt", "output path")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let text = corpus::generate(a.u64("seed").map_err(|e| anyhow!(e))?, a.usize("stories").map_err(|e| anyhow!(e))?);
+    std::fs::write(a.str("out"), &text)?;
+    println!("wrote {} bytes ({} stories) to {}", text.len(), a.str("stories"), a.str("out"));
+    Ok(())
+}
+
+fn cmd_tokenizer(argv: &[String]) -> Result<()> {
+    let a = Args::new("tokenizer")
+        .flag("vocab", "512", "vocabulary size")
+        .optional("corpus", "training corpus path (default: synthetic)")
+        .flag("out", "tokenizer.json", "output path")
+        .optional("encode", "text to encode with --load")
+        .optional("load", "load an existing tokenizer")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    if let Some(path) = a.get("load") {
+        let tok = Tokenizer::load(&PathBuf::from(path))?;
+        println!("vocab size: {}", tok.vocab_size());
+        if let Some(text) = a.get("encode") {
+            let ids = tok.encode(&text);
+            println!("{ids:?}");
+            println!("decoded: {:?}", tok.decode(&ids));
+        }
+        return Ok(());
+    }
+    let text = match a.get("corpus") {
+        Some(p) => std::fs::read_to_string(p)?,
+        None => corpus::generate(1234, 2000),
+    };
+    let tok = tok_trainer::train(&text, a.usize("vocab").map_err(|e| anyhow!(e))?)?;
+    tok.save(&PathBuf::from(a.str("out")))?;
+    println!("trained {}-token vocab → {}", tok.vocab_size(), a.str("out"));
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let a = Args::new("info")
+        .flag("preset", "ci", "size preset")
+        .required("variant", "model variant")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let m = Manifest::load_variant(&artifacts_root(), &a.str("preset"), &a.str("variant"))?;
+    println!("{} ({}) — preset {}", m.display_name, m.variant, m.preset);
+    println!("dim {} ctx {} vocab {} — {} parameters", m.dim, m.ctx, m.vocab, m.param_count);
+    println!("kernels: {}", m.kernels);
+    for (i, l) in m.layers.iter().enumerate() {
+        println!("  layer {i}: {} heads={} shifts={:?} ffn={}", l.kind, l.heads, l.shifts, l.ffn);
+    }
+    println!("train: batch {} lr {} dropout {}", m.train.batch, m.train.lr, m.train.dropout);
+    println!("{} tensors, {} total elements", m.params.len(), m.total_elems());
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Metric sinks: CSV series and markdown tables for the report drivers.
+//!
+//! Figures are emitted as CSV (one series per column) so any plotting tool
+//! can render them; tables are emitted as markdown matching the paper's
+//! row/column layout.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::TrainOutcome;
+
+/// Escape a CSV field.
+fn csv_field(s: &str) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Write rows of fields as CSV.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut out = String::new();
+    out.push_str(&header.iter().map(|h| csv_field(h)).collect::<Vec<_>>().join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.iter().map(|f| csv_field(f)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Render a markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("| {} |\n", header.join(" | ")));
+    out.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    out
+}
+
+/// Figure 7 series: validation loss per epoch, one column per variant.
+pub fn fig7_rows(outcomes: &[TrainOutcome]) -> (Vec<String>, Vec<Vec<String>>) {
+    let mut header: Vec<String> = vec!["epoch".into()];
+    header.extend(outcomes.iter().map(|o| o.variant.clone()));
+    let max_epochs = outcomes.iter().map(|o| o.epochs.len()).max().unwrap_or(0);
+    let mut rows = Vec::new();
+    for e in 0..max_epochs {
+        let mut row = vec![e.to_string()];
+        for o in outcomes {
+            row.push(
+                o.epochs
+                    .get(e)
+                    .map(|r| format!("{:.4}", r.val_loss))
+                    .unwrap_or_default(),
+            );
+        }
+        rows.push(row);
+    }
+    (header, rows)
+}
+
+/// Figure 8 point cloud: every (val_acc, val_loss) pair from every epoch of
+/// every model.
+pub fn fig8_rows(outcomes: &[TrainOutcome]) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for o in outcomes {
+        for r in &o.epochs {
+            rows.push(vec![
+                o.variant.clone(),
+                r.epoch.to_string(),
+                format!("{:.4}", r.val_loss),
+                format!("{:.4}", r.val_acc),
+            ]);
+        }
+    }
+    rows
+}
+
+/// Pearson correlation between two series (Fig. 8's loss↔accuracy check).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EpochRecord;
+
+    fn outcome(variant: &str, losses: &[f32]) -> TrainOutcome {
+        TrainOutcome {
+            variant: variant.into(),
+            preset: "ci".into(),
+            epochs: losses
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| EpochRecord {
+                    epoch: i,
+                    train_loss: l,
+                    val_loss: l,
+                    val_acc: 1.0 - l / 10.0,
+                    secs: 1.0,
+                    steps: 10,
+                })
+                .collect(),
+            step_losses: vec![],
+            total_steps: 10 * losses.len(),
+            total_secs: losses.len() as f64,
+        }
+    }
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("q\"q"), "\"q\"\"q\"");
+    }
+
+    #[test]
+    fn fig7_layout() {
+        let outs = vec![outcome("gpt", &[3.0, 2.0]), outcome("hsm_ab", &[3.1, 2.1, 1.9])];
+        let (header, rows) = fig7_rows(&outs);
+        assert_eq!(header, vec!["epoch", "gpt", "hsm_ab"]);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2][1], ""); // gpt has no epoch 2
+        assert_eq!(rows[2][2], "1.9000");
+    }
+
+    #[test]
+    fn fig8_collects_all_points() {
+        let outs = vec![outcome("gpt", &[3.0, 2.0]), outcome("hsm_ab", &[3.1])];
+        assert_eq!(fig8_rows(&outs).len(), 3);
+    }
+
+    #[test]
+    fn pearson_limits() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let up = [2.0, 4.0, 6.0, 8.0];
+        let down = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &up) - 1.0).abs() < 1e-12);
+        assert!((pearson(&xs, &down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+}

@@ -1,0 +1,91 @@
+//! GPT-2's reversible byte ↔ unicode mapping.
+//!
+//! BPE merges operate on strings; raw bytes 0x00–0x20, 0x7F–0xA0 and 0xAD
+//! are invisible or unprintable, so GPT-2 remaps every byte to a printable
+//! unicode codepoint: printable bytes map to themselves, the rest map to
+//! 0x100, 0x101, … in order.  The mapping is a bijection, so decoding is
+//! exact.
+
+/// Is this byte printable per GPT-2's rule?
+fn printable(b: u8) -> bool {
+    (0x21..=0x7E).contains(&b) || (0xA1..=0xAC).contains(&b) || (0xAE..=0xFF).contains(&b)
+}
+
+/// byte → printable char (bijective).
+pub fn byte_to_unicode(b: u8) -> char {
+    if printable(b) {
+        b as char
+    } else {
+        // The n-th non-printable byte maps to 0x100 + n.
+        let mut n = 0u32;
+        for x in 0..b {
+            if !printable(x) {
+                n += 1;
+            }
+        }
+        char::from_u32(0x100 + n).unwrap()
+    }
+}
+
+/// printable char → byte (inverse of [`byte_to_unicode`]).
+pub fn unicode_to_byte(c: char) -> Option<u8> {
+    let cp = c as u32;
+    if cp < 0x100 && printable(cp as u8) {
+        return Some(cp as u8);
+    }
+    if (0x100..0x200).contains(&cp) {
+        let target = cp - 0x100;
+        let mut n = 0u32;
+        for b in 0..=255u8 {
+            if !printable(b) {
+                if n == target {
+                    return Some(b);
+                }
+                n += 1;
+            }
+        }
+    }
+    None
+}
+
+/// Map a full byte string into byte-unicode space.
+pub fn to_unicode(bytes: &[u8]) -> String {
+    bytes.iter().map(|&b| byte_to_unicode(b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn bijective_over_all_bytes() {
+        let mut seen = HashSet::new();
+        for b in 0..=255u8 {
+            let c = byte_to_unicode(b);
+            assert!(seen.insert(c), "collision at byte {b}");
+            assert_eq!(unicode_to_byte(c), Some(b), "inverse failed at {b}");
+        }
+    }
+
+    #[test]
+    fn printable_bytes_map_to_themselves() {
+        assert_eq!(byte_to_unicode(b'a'), 'a');
+        assert_eq!(byte_to_unicode(b'!'), '!');
+        assert_ne!(byte_to_unicode(b' '), ' '); // space is remapped
+    }
+
+    #[test]
+    fn unmapped_chars_decode_to_none() {
+        assert_eq!(unicode_to_byte('中'), None);
+        assert_eq!(unicode_to_byte('\u{300}'), None);
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        let s = "héllo wörld 🌍\n\t".as_bytes();
+        let u = to_unicode(s);
+        let back: Vec<u8> = u.chars().filter_map(unicode_to_byte).collect();
+        assert_eq!(back, s);
+    }
+}

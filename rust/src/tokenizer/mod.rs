@@ -1,0 +1,357 @@
+//! Byte-level BPE tokenizer, from scratch.
+//!
+//! The paper tokenizes TinyStories with "a custom-trained byte-level BPE
+//! tokenizer" (§6.2).  This module implements the full GPT-2-style
+//! pipeline:
+//!
+//! 1. [`bytes::byte_to_unicode`] — the reversible byte ↔ printable-unicode
+//!    table GPT-2 uses so merges operate on visible characters.
+//! 2. [`trainer`] — BPE training: iterated most-frequent-pair merging over
+//!    a word-frequency table, with GPT-2's regex-like pre-tokenization
+//!    (implemented directly, no regex crate needed).
+//! 3. [`Tokenizer`] — encoding (greedy lowest-rank merging, linear-time
+//!    pair scan) and decoding (merge table → bytes → UTF-8).
+//! 4. Vocabulary (de)serialization to a single JSON file.
+//!
+//! Invariants (property-tested): `decode(encode(s)) == s` for every UTF-8
+//! string; token ids are dense in `[0, vocab)`; training is deterministic.
+
+pub mod bytes;
+pub mod trainer;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// A trained byte-level BPE tokenizer.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// token id → token string (in byte-unicode space).
+    pub vocab: Vec<String>,
+    /// token string → id.
+    pub lookup: HashMap<String, u32>,
+    /// merge pair → rank (lower merges first).
+    pub merges: HashMap<(String, String), u32>,
+    /// id of the end-of-text sentinel appended between documents.
+    pub eot: u32,
+}
+
+/// The end-of-text sentinel token string.
+pub const EOT_TOKEN: &str = "<|endoftext|>";
+
+impl Tokenizer {
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Encode text to token ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        for word in pre_tokenize(text) {
+            self.encode_word(&word, &mut out);
+        }
+        out
+    }
+
+    /// Encode one pre-token by greedy lowest-rank pair merging.
+    fn encode_word(&self, word: &str, out: &mut Vec<u32>) {
+        // Map to byte-unicode space, one symbol per input byte.
+        let mut parts: Vec<String> = word
+            .bytes()
+            .map(|b| bytes::byte_to_unicode(b).to_string())
+            .collect();
+        if parts.is_empty() {
+            return;
+        }
+        // Repeatedly apply the lowest-rank applicable merge.
+        loop {
+            let mut best: Option<(u32, usize)> = None;
+            for i in 0..parts.len().saturating_sub(1) {
+                if let Some(&rank) = self
+                    .merges
+                    .get(&(parts[i].clone(), parts[i + 1].clone()))
+                {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((_, i)) => {
+                    let merged = format!("{}{}", parts[i], parts[i + 1]);
+                    parts.splice(i..i + 2, [merged]);
+                }
+            }
+        }
+        for p in &parts {
+            match self.lookup.get(p) {
+                Some(&id) => out.push(id),
+                // Unreachable for a well-formed vocab (all 256 bytes are
+                // base tokens), but degrade gracefully.
+                None => out.extend(p.chars().filter_map(|c| {
+                    self.lookup.get(&c.to_string()).copied()
+                })),
+            }
+        }
+    }
+
+    /// Decode token ids back to text (lossy only on invalid UTF-8 splices).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut buf: Vec<u8> = Vec::with_capacity(ids.len() * 3);
+        for &id in ids {
+            if id == self.eot {
+                continue;
+            }
+            if let Some(tok) = self.vocab.get(id as usize) {
+                for ch in tok.chars() {
+                    if let Some(b) = bytes::unicode_to_byte(ch) {
+                        buf.push(b);
+                    }
+                }
+            }
+        }
+        String::from_utf8_lossy(&buf).into_owned()
+    }
+
+    // -- persistence --------------------------------------------------------
+
+    /// Serialize vocab + merges to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut merges: Vec<(&(String, String), &u32)> = self.merges.iter().collect();
+        merges.sort_by_key(|(_, &rank)| rank);
+        let doc = json::obj(vec![
+            ("version", json::num(1.0)),
+            (
+                "vocab",
+                Value::Arr(self.vocab.iter().map(|t| json::s(t)).collect()),
+            ),
+            (
+                "merges",
+                Value::Arr(
+                    merges
+                        .iter()
+                        .map(|((a, b), _)| Value::Arr(vec![json::s(a), json::s(b)]))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(path, doc.to_string())
+            .with_context(|| format!("writing tokenizer to {}", path.display()))
+    }
+
+    /// Load a tokenizer saved by [`Tokenizer::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tokenizer from {}", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let vocab: Vec<String> = doc
+            .get("vocab")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tokenizer json missing 'vocab'"))?
+            .iter()
+            .map(|v| v.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad vocab entry")))
+            .collect::<Result<_>>()?;
+        let merges_arr = doc
+            .get("merges")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tokenizer json missing 'merges'"))?;
+        let mut merges = HashMap::new();
+        for (rank, m) in merges_arr.iter().enumerate() {
+            let a = m.at(0).as_str().ok_or_else(|| anyhow!("bad merge"))?;
+            let b = m.at(1).as_str().ok_or_else(|| anyhow!("bad merge"))?;
+            merges.insert((a.to_string(), b.to_string()), rank as u32);
+        }
+        Self::from_parts(vocab, merges)
+    }
+
+    /// Build the derived lookup structures and validate the vocab.
+    pub fn from_parts(
+        vocab: Vec<String>,
+        merges: HashMap<(String, String), u32>,
+    ) -> Result<Self> {
+        let lookup: HashMap<String, u32> = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        if lookup.len() != vocab.len() {
+            bail!("duplicate tokens in vocabulary");
+        }
+        let eot = *lookup
+            .get(EOT_TOKEN)
+            .ok_or_else(|| anyhow!("vocabulary lacks {EOT_TOKEN}"))?;
+        Ok(Tokenizer { vocab, lookup, merges, eot })
+    }
+}
+
+/// GPT-2-style pre-tokenization, implemented directly (no regex crate):
+/// splits into pieces of the form
+/// `contraction | [space]letters | [space]digits | [space]other | whitespace`.
+/// A leading space is glued to the following word, as in GPT-2.
+pub fn pre_tokenize(text: &str) -> Vec<String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let n = chars.len();
+
+    let is_letter = |c: char| c.is_alphabetic();
+    let is_digit = |c: char| c.is_numeric();
+    let is_space = |c: char| c.is_whitespace();
+
+    while i < n {
+        let start = i;
+        // Contractions: 's 't 're 've 'm 'll 'd
+        if chars[i] == '\'' && i + 1 < n {
+            let rest: String = chars[i + 1..n.min(i + 3)].iter().collect();
+            for suf in ["ll", "re", "ve", "s", "t", "m", "d"] {
+                if rest.starts_with(suf)
+                    && suf
+                        .chars()
+                        .zip(&chars[i + 1..])
+                        .all(|(a, &b)| a == b)
+                {
+                    // only treat as contraction when preceded by a letter
+                    if start > 0 && is_letter(chars[start - 1]) {
+                        i += 1 + suf.len();
+                        out.push(chars[start..i].iter().collect());
+                        break;
+                    }
+                }
+            }
+            if i != start {
+                continue;
+            }
+        }
+        // Optional single leading space glued to the next run.
+        let mut j = i;
+        let lead_space = chars[j] == ' '
+            && j + 1 < n
+            && (is_letter(chars[j + 1]) || is_digit(chars[j + 1]) || !is_space(chars[j + 1]));
+        if lead_space {
+            j += 1;
+        }
+        if j < n && is_letter(chars[j]) {
+            while j < n && is_letter(chars[j]) && chars[j] != '\'' {
+                j += 1;
+            }
+            // stop before contraction apostrophe
+        } else if j < n && is_digit(chars[j]) {
+            while j < n && is_digit(chars[j]) {
+                j += 1;
+            }
+        } else if j < n && !is_space(chars[j]) {
+            // Punctuation / symbol run.  A leading apostrophe that did not
+            // form a contraction is consumed here (j == i guard below
+            // guarantees progress on any input).
+            if chars[j] == '\'' {
+                j += 1;
+            }
+            while j < n && !is_space(chars[j]) && !is_letter(chars[j]) && !is_digit(chars[j]) && chars[j] != '\'' {
+                j += 1;
+            }
+        } else {
+            // whitespace run (no glued space case)
+            j = i;
+            while j < n && is_space(chars[j]) {
+                j += 1;
+            }
+            // leave the final space to glue onto a following word
+            if j < n && j > i && chars[j - 1] == ' ' {
+                j -= 1;
+            }
+        }
+        if j <= i {
+            j = i + 1; // guaranteed progress on any input
+        }
+        out.push(chars[i..j].iter().collect());
+        i = j;
+    }
+    out.retain(|s: &String| !s.is_empty());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn tiny_tok() -> Tokenizer {
+        // Train on a small corpus; exercises the full pipeline.
+        trainer::train(
+            "the cat sat on the mat. the cat was happy! once upon a time there was a cat.",
+            300,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pre_tokenize_glues_spaces() {
+        let parts = pre_tokenize("the cat's hat 42!");
+        assert_eq!(parts[0], "the");
+        assert!(parts.contains(&" cat".to_string()));
+        assert!(parts.contains(&"'s".to_string()));
+        assert!(parts.contains(&" 42".to_string()));
+    }
+
+    #[test]
+    fn pre_tokenize_roundtrip_concat() {
+        for s in ["hello world", "a  b\n\nc", " leading", "trailing ", "it's x!?"] {
+            assert_eq!(pre_tokenize(s).concat(), s, "for {s:?}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_basic() {
+        let tok = tiny_tok();
+        for s in [
+            "the cat sat on the mat.",
+            "Once upon a time!",
+            "unseen wörds 😀 are fine",
+            "",
+        ] {
+            assert_eq!(tok.decode(&tok.encode(s)), s, "for {s:?}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_property() {
+        let tok = tiny_tok();
+        prop::check("bpe-roundtrip", |rng| {
+            let s = prop::arb_string(rng, 60);
+            assert_eq!(tok.decode(&tok.encode(&s)), s, "for {s:?}");
+        });
+    }
+
+    #[test]
+    fn compresses_training_text() {
+        let tok = tiny_tok();
+        let s = "the cat sat on the mat";
+        let ids = tok.encode(s);
+        assert!(ids.len() < s.len(), "{} !< {}", ids.len(), s.len());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let tok = tiny_tok();
+        let dir = std::env::temp_dir().join("hsm_tok_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tok.json");
+        tok.save(&path).unwrap();
+        let tok2 = Tokenizer::load(&path).unwrap();
+        assert_eq!(tok.vocab, tok2.vocab);
+        let s = "the cat sat";
+        assert_eq!(tok.encode(s), tok2.encode(s));
+    }
+
+    #[test]
+    fn eot_skipped_in_decode() {
+        let tok = tiny_tok();
+        let mut ids = tok.encode("the cat");
+        ids.push(tok.eot);
+        assert_eq!(tok.decode(&ids), "the cat");
+    }
+}

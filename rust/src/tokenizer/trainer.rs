@@ -1,0 +1,161 @@
+//! BPE training: iterated most-frequent-pair merging.
+//!
+//! The classic algorithm over a word-frequency table, with incremental
+//! pair-count maintenance so training a 5 000-token vocabulary over a
+//! multi-megabyte corpus stays fast: each merge touches only the words
+//! that actually contain the merged pair (tracked in an inverted index)
+//! rather than rescanning the corpus.
+//!
+//! Ties between equal-count pairs break lexicographically so training is
+//! fully deterministic — the reproducibility tests depend on it.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use super::{bytes, pre_tokenize, Tokenizer, EOT_TOKEN};
+
+/// Train a byte-level BPE tokenizer with `vocab_size` total tokens
+/// (256 base bytes + merges + the end-of-text sentinel).
+pub fn train(corpus: &str, vocab_size: usize) -> Result<Tokenizer> {
+    if vocab_size < 257 {
+        bail!("vocab_size must be at least 257 (256 bytes + EOT)");
+    }
+
+    // 1. Word frequency table over pre-tokens (in byte-unicode space).
+    let mut word_freq: HashMap<String, u64> = HashMap::new();
+    for w in pre_tokenize(corpus) {
+        *word_freq.entry(bytes::to_unicode(w.as_bytes())).or_insert(0) += 1;
+    }
+
+    // Words as mutable symbol sequences.
+    let mut words: Vec<(Vec<String>, u64)> = word_freq
+        .into_iter()
+        .map(|(w, f)| (w.chars().map(|c| c.to_string()).collect(), f))
+        .collect();
+    // Sort for determinism (HashMap iteration order is randomized).
+    words.sort();
+
+    // 2. Initial pair statistics + inverted index pair → words containing it.
+    let mut pair_count: HashMap<(String, String), i64> = HashMap::new();
+    let mut pair_words: HashMap<(String, String), HashSet<usize>> = HashMap::new();
+    for (wi, (syms, freq)) in words.iter().enumerate() {
+        for i in 0..syms.len().saturating_sub(1) {
+            let p = (syms[i].clone(), syms[i + 1].clone());
+            *pair_count.entry(p.clone()).or_insert(0) += *freq as i64;
+            pair_words.entry(p).or_default().insert(wi);
+        }
+    }
+
+    // 3. Merge loop.
+    let n_merges = vocab_size.saturating_sub(257);
+    let mut merges: Vec<(String, String)> = Vec::with_capacity(n_merges);
+    for _ in 0..n_merges {
+        // Most frequent pair; lexicographic tie-break for determinism.
+        let best = pair_count
+            .iter()
+            .filter(|(_, &c)| c > 0)
+            .max_by(|(pa, ca), (pb, cb)| ca.cmp(cb).then_with(|| pb.cmp(pa)))
+            .map(|(p, _)| p.clone());
+        let Some(pair) = best else { break };
+        let merged = format!("{}{}", pair.0, pair.1);
+        merges.push(pair.clone());
+
+        // Update only the words that contain this pair.
+        let affected: Vec<usize> = pair_words
+            .get(&pair)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default();
+        for wi in affected {
+            let (syms, freq) = &mut words[wi];
+            let f = *freq as i64;
+            // Remove this word's contribution to all its current pairs.
+            for i in 0..syms.len().saturating_sub(1) {
+                let p = (syms[i].clone(), syms[i + 1].clone());
+                *pair_count.get_mut(&p).unwrap() -= f;
+                if let Some(ws) = pair_words.get_mut(&p) {
+                    ws.remove(&wi);
+                }
+            }
+            // Apply the merge within the word.
+            let mut out: Vec<String> = Vec::with_capacity(syms.len());
+            let mut i = 0;
+            while i < syms.len() {
+                if i + 1 < syms.len() && syms[i] == pair.0 && syms[i + 1] == pair.1 {
+                    out.push(merged.clone());
+                    i += 2;
+                } else {
+                    out.push(syms[i].clone());
+                    i += 1;
+                }
+            }
+            *syms = out;
+            // Re-add contributions.
+            for i in 0..syms.len().saturating_sub(1) {
+                let p = (syms[i].clone(), syms[i + 1].clone());
+                *pair_count.entry(p.clone()).or_insert(0) += f;
+                pair_words.entry(p).or_default().insert(wi);
+            }
+        }
+        pair_count.remove(&pair);
+        pair_words.remove(&pair);
+    }
+
+    // 4. Assemble the vocabulary: 256 byte tokens, merged tokens, EOT.
+    let mut vocab: Vec<String> = (0..=255u8).map(|b| bytes::byte_to_unicode(b).to_string()).collect();
+    for (a, b) in &merges {
+        vocab.push(format!("{a}{b}"));
+    }
+    vocab.push(EOT_TOKEN.to_string());
+
+    let merge_ranks: HashMap<(String, String), u32> = merges
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| (p, i as u32))
+        .collect();
+
+    Tokenizer::from_parts(vocab, merge_ranks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_training() {
+        let corpus = "a banana and an apple and a banana band";
+        let t1 = train(corpus, 280).unwrap();
+        let t2 = train(corpus, 280).unwrap();
+        assert_eq!(t1.vocab, t2.vocab);
+    }
+
+    #[test]
+    fn respects_vocab_size() {
+        let corpus = "the quick brown fox jumps over the lazy dog. \
+                      the quick brown fox is quick and brown.";
+        let tok = train(corpus, 300).unwrap();
+        assert!(tok.vocab_size() <= 300);
+        assert!(tok.vocab_size() > 257, "no merges learned");
+    }
+
+    #[test]
+    fn frequent_word_becomes_single_token() {
+        let corpus = &"hello world ".repeat(50);
+        let tok = train(corpus, 300).unwrap();
+        // " world" (with glued space) should encode to very few tokens.
+        let ids = tok.encode(" world");
+        assert!(ids.len() <= 2, "got {} tokens", ids.len());
+    }
+
+    #[test]
+    fn small_vocab_rejected() {
+        assert!(train("x", 10).is_err());
+    }
+
+    #[test]
+    fn merge_count_matches_vocab() {
+        let corpus = "aaa bbb aaa bbb aaa";
+        let tok = train(corpus, 270).unwrap();
+        assert_eq!(tok.vocab_size(), 256 + tok.merges.len() + 1);
+    }
+}

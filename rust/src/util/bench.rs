@@ -1,0 +1,137 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline).  Provides warmup, fixed-duration sampling, and mean / p50 /
+//! p95 / throughput reporting.  Every `cargo bench` target builds on this.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_second(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Harness configuration.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_samples: 5,
+            max_samples: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(500),
+            min_samples: 3,
+            max_samples: 1_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; returns (and records) the statistics.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let stats = Stats {
+            name: name.to_string(),
+            samples: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() as f64 * 0.95) as usize..][0],
+            min: samples[0],
+        };
+        println!(
+            "{:<40} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} samples)",
+            stats.name, stats.mean, stats.p50, stats.p95, stats.samples
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Markdown table of all recorded results (for EXPERIMENTS.md).
+    pub fn markdown(&self, title: &str) -> String {
+        let mut out = format!("### {title}\n\n| bench | mean | p50 | p95 | /s |\n|---|---|---|---|---|\n");
+        for s in &self.results {
+            out.push_str(&format!(
+                "| {} | {:.3?} | {:.3?} | {:.3?} | {:.1} |\n",
+                s.name,
+                s.mean,
+                s.p50,
+                s.p95,
+                s.per_second()
+            ));
+        }
+        out
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_orders_percentiles() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_samples: 5,
+            max_samples: 100,
+            results: Vec::new(),
+        };
+        let s = b.run("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(s.samples >= 5);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+}

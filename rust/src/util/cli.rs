@@ -1,0 +1,187 @@
+//! A small declarative command-line flag parser for the `hsm` binary.
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults and required flags, plus auto-generated `--help`
+//! text.  (clap is unavailable offline; this covers everything the
+//! launcher needs.)
+
+use std::collections::BTreeMap;
+
+/// Flag specification.
+#[derive(Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub boolean: bool,
+}
+
+/// Declarative argument parser for one (sub)command.
+pub struct Args {
+    pub command: String,
+    flags: Vec<Flag>,
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(command: &str) -> Self {
+        Args {
+            command: command.to_string(),
+            flags: Vec::new(),
+            values: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: Some(default), required: false, boolean: false });
+        self
+    }
+
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, required: true, boolean: false });
+        self
+    }
+
+    pub fn optional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, required: false, boolean: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, required: false, boolean: true });
+        self
+    }
+
+    /// Parse a token stream (without the program/subcommand names).
+    pub fn parse(mut self, argv: &[String]) -> Result<Self, String> {
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                let value = if spec.boolean {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{name} expects a value"))?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.required && !self.values.contains_key(f.name) {
+                return Err(format!("missing required flag --{}\n\n{}", f.name, self.usage()));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("usage: hsm {} [flags]\n\nflags:\n", self.command);
+        for f in &self.flags {
+            let extra = match (&f.default, f.required) {
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, true) => " (required)".to_string(),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, extra));
+        }
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.flags
+            .iter()
+            .find(|f| f.name == name)
+            .and_then(|f| f.default.map(str::to_string))
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.str(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.str(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects an integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.str(name)
+            .parse()
+            .map_err(|_| format!("--{name} expects a number"))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.get(name).as_deref() == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let a = Args::new("train")
+            .flag("preset", "ci", "size preset")
+            .required("variant", "model variant")
+            .switch("verbose", "chatty")
+            .parse(&argv(&["--variant", "gpt", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.str("preset"), "ci");
+        assert_eq!(a.str("variant"), "gpt");
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let a = Args::new("x")
+            .flag("n", "1", "count")
+            .parse(&argv(&["--n=42", "pos1", "pos2"]))
+            .unwrap();
+        assert_eq!(a.usize("n").unwrap(), 42);
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn missing_required_and_unknown() {
+        assert!(Args::new("x").required("v", "v").parse(&argv(&[])).is_err());
+        assert!(Args::new("x").parse(&argv(&["--nope", "1"])).is_err());
+    }
+}

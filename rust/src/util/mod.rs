@@ -1,0 +1,21 @@
+//! From-scratch utility substrates.
+//!
+//! This sandbox is fully offline and the only third-party crates available
+//! are `xla` and `anyhow`, so the usual ecosystem pieces are implemented
+//! here from scratch:
+//!
+//! * [`json`] — a minimal, spec-honest JSON parser/serializer (manifests,
+//!   reports).
+//! * [`rng`]  — a splittable xoshiro256** PRNG (corpus synthesis, sampling,
+//!   property tests).
+//! * [`cli`]  — a small declarative flag parser for the `hsm` binary.
+//! * [`bench`] — a criterion-style micro-benchmark harness (warmup,
+//!   repetitions, mean/p50/p95) used by every `cargo bench` target.
+//! * [`prop`] — a miniature property-testing framework (seeded generators,
+//!   failure-case reporting) used by the tokenizer/data/coordinator tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

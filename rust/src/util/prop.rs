@@ -1,0 +1,98 @@
+//! Miniature property-testing framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; the harness runs it for N
+//! deterministic cases and, on failure, reports the failing case seed so it
+//! can be replayed exactly.  Generators for the common shapes (vectors,
+//! strings, token sequences) live here too.
+
+use super::rng::Rng;
+
+/// Number of cases per property (overridable via `HSM_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("HSM_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for `cases` deterministic seeds; panic with the seed on failure.
+pub fn check_n(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run with the default case count.
+pub fn check(name: &str, prop: impl FnMut(&mut Rng)) {
+    check_n(name, default_cases(), prop);
+}
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+/// Arbitrary (possibly multi-byte) unicode string, length in `[0, max_len]`.
+pub fn arb_string(rng: &mut Rng, max_len: usize) -> String {
+    let len = rng.below(max_len + 1);
+    (0..len)
+        .map(|_| match rng.below(8) {
+            0..=4 => (b'a' + rng.below(26) as u8) as char,            // ascii letters
+            5 => *rng.pick(&[' ', '.', ',', '!', '?', '\n', '\'']),   // punctuation
+            6 => char::from_u32(0xC0 + rng.below(0x100) as u32).unwrap_or('é'),
+            _ => *rng.pick(&['é', 'ü', '中', '🌍', 'λ', 'Ж']),
+        })
+        .collect()
+}
+
+/// Vector of u32 tokens below `vocab`.
+pub fn arb_tokens(rng: &mut Rng, vocab: u32, max_len: usize) -> Vec<u32> {
+    let len = rng.below(max_len + 1);
+    (0..len).map(|_| rng.next_u64() as u32 % vocab).collect()
+}
+
+/// Vector of f32 in [-scale, scale].
+pub fn arb_f32s(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_n("reverse-reverse", 32, |rng| {
+            let v = arb_tokens(rng, 100, 50);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        check_n("always-fails", 4, |rng| {
+            assert!(rng.below(10) > 100, "impossible");
+        });
+    }
+
+    #[test]
+    fn arb_string_valid_utf8_and_bounded() {
+        check_n("arb-string", 64, |rng| {
+            let s = arb_string(rng, 40);
+            assert!(s.chars().count() <= 40);
+        });
+    }
+}
