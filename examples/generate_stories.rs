@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 use hsm::checkpoint::Checkpoint;
 use hsm::config::Manifest;
 use hsm::corpus;
-use hsm::generation::{generate, SampleCfg, TABLE3_PROMPTS};
+use hsm::generation::{generate_windowed, SampleCfg, TABLE3_PROMPTS};
 use hsm::runtime::{PjrtEngine, StepEngine};
 use hsm::tokenizer::trainer as bpe;
 use hsm::util::cli::Args;
@@ -62,7 +62,7 @@ fn main() -> Result<()> {
             seed: i as u64,
             stop_at_eot: true,
         };
-        match generate(&mut engine, &tok, prompt, &cfg) {
+        match generate_windowed(&mut engine, &tok, prompt, &cfg) {
             Ok(g) => println!("{:>2}. {} ▸{}\n", i + 1, g.prompt, g.completion),
             Err(e) => println!("{:>2}. (prompt too long for ctx: {e})\n", i + 1),
         }

@@ -14,7 +14,7 @@ use hsm::config::Manifest;
 use hsm::coordinator::{Trainer, TrainerOptions};
 use hsm::corpus;
 use hsm::data::Dataset;
-use hsm::generation::{generate, SampleCfg};
+use hsm::generation::{generate_windowed, SampleCfg};
 use hsm::runtime::{PjrtEngine, StepEngine};
 use hsm::tokenizer::trainer as bpe;
 
@@ -57,7 +57,7 @@ fn main() -> Result<()> {
 
     // 4. Generate.
     let cfg = SampleCfg { temperature: 0.8, top_k: 40, max_new_tokens: 32, seed: 7, ..Default::default() };
-    let g = generate(&mut engine, &tok, "Once upon a time", &cfg)?;
+    let g = generate_windowed(&mut engine, &tok, "Once upon a time", &cfg)?;
     println!("\nprompt:     {}", g.prompt);
     println!("completion: {}", g.completion.trim());
     Ok(())

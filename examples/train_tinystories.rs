@@ -19,7 +19,7 @@ use hsm::config::Manifest;
 use hsm::coordinator::{Trainer, TrainerOptions};
 use hsm::corpus;
 use hsm::data::Dataset;
-use hsm::generation::{generate, SampleCfg};
+use hsm::generation::{generate_windowed, SampleCfg};
 use hsm::runtime::{PjrtEngine, StepEngine};
 use hsm::tokenizer::trainer as bpe;
 use hsm::util::cli::Args;
@@ -111,7 +111,7 @@ fn main() -> Result<()> {
             seed: 100 + i as u64,
             ..Default::default()
         };
-        let g = generate(&mut engine, &tok, prompt, &cfg)?;
+        let g = generate_windowed(&mut engine, &tok, prompt, &cfg)?;
         println!("[{i}] {}{}\n", g.prompt, g.completion);
     }
     Ok(())

@@ -198,6 +198,113 @@ impl Manifest {
         root.join(preset).join(variant)
     }
 
+    /// Build a complete in-memory manifest (no artifacts on disk) for the
+    /// given layer stack: correct per-kind mixer parameter shapes, named
+    /// exactly as `infer::ModelWeights::from_flat` expects.  This is what
+    /// lets the native decoder, parity tests and decode benches run fully
+    /// artifact-free.
+    ///
+    /// Panics if a layer's `heads` does not divide `dim` (caller bug).
+    pub fn synthetic(
+        variant: &str,
+        layers: Vec<LayerInfo>,
+        dim: usize,
+        ctx: usize,
+        vocab: usize,
+        batch: usize,
+    ) -> Self {
+        let mut params: Vec<ParamInfo> = Vec::new();
+        let mut push = |name: String, shape: Vec<usize>, decay: bool| {
+            params.push(ParamInfo { name, shape, decay });
+        };
+        push("tok_emb".into(), vec![vocab, dim], true);
+        push("pos_emb".into(), vec![ctx, dim], false);
+        for (l, spec) in layers.iter().enumerate() {
+            assert!(
+                spec.heads > 0 && dim % spec.heads == 0,
+                "layer {l}: heads {} must divide dim {dim}",
+                spec.heads
+            );
+            let hd = dim / spec.heads;
+            let p = |s: &str| format!("layer{l}.{s}");
+            push(p("ln1_g"), vec![dim], false);
+            push(p("ln1_b"), vec![dim], false);
+            match spec.kind.as_str() {
+                "ab" => {
+                    push(p("mix_a"), vec![spec.heads], false);
+                    push(p("mix_b"), vec![spec.heads], false);
+                }
+                "vec" => {
+                    push(p("mix_a"), vec![dim], false);
+                    push(p("mix_b"), vec![dim], false);
+                }
+                "mat" => {
+                    push(p("mix_A"), vec![dim, dim], true);
+                    push(p("mix_B"), vec![dim, dim], true);
+                    push(p("mix_bias"), vec![dim], false);
+                }
+                "gate1" => {
+                    push(p("gate_w1"), vec![dim, dim], true);
+                    push(p("gate_b1"), vec![dim], false);
+                    push(p("gate_w2"), vec![dim, dim], true);
+                    push(p("gate_b2"), vec![dim], false);
+                }
+                "gate2" => {
+                    push(p("gate_w"), vec![spec.heads, 2 * hd, hd], true);
+                    push(p("gate_b"), vec![spec.heads, hd], false);
+                }
+                "fusion" => {
+                    push(p("fuse_w1"), vec![spec.heads, 2 * hd, hd], true);
+                    push(p("fuse_b1"), vec![spec.heads, hd], false);
+                    push(p("fuse_w2"), vec![spec.heads, hd, hd], true);
+                    push(p("fuse_b2"), vec![spec.heads, hd], false);
+                }
+                "attn" => {
+                    for w in ["attn_wq", "attn_wk", "attn_wv", "attn_wo"] {
+                        push(p(w), vec![dim, dim], true);
+                    }
+                    for b in ["attn_bq", "attn_bk", "attn_bv", "attn_bo"] {
+                        push(p(b), vec![dim], false);
+                    }
+                }
+                other => panic!("unknown mixer kind {other:?}"),
+            }
+            push(p("ln2_g"), vec![dim], false);
+            push(p("ln2_b"), vec![dim], false);
+            push(p("ffn_w1"), vec![dim, spec.ffn], true);
+            push(p("ffn_b1"), vec![spec.ffn], false);
+            push(p("ffn_w2"), vec![spec.ffn, dim], true);
+            push(p("ffn_b2"), vec![dim], false);
+        }
+        push("lnf_g".into(), vec![dim], false);
+        push("lnf_b".into(), vec![dim], false);
+
+        let param_count = params.iter().map(|p| p.elems()).sum();
+        Manifest {
+            preset: "synthetic".to_string(),
+            variant: variant.to_string(),
+            display_name: variant.to_string(),
+            kernels: "native".to_string(),
+            dim,
+            ctx,
+            vocab,
+            layers,
+            param_count,
+            params,
+            train: TrainHp {
+                batch,
+                lr: 0.002,
+                weight_decay: 0.01,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                dropout: 0.0,
+                epochs: 20,
+            },
+            dir: PathBuf::from("/tmp/hsm-synthetic"),
+        }
+    }
+
     /// Load a manifest given the artifacts root.
     pub fn load_variant(root: &Path, preset: &str, variant: &str) -> Result<Self> {
         if !VARIANTS.contains(&variant) {
@@ -264,6 +371,27 @@ mod tests {
         )
         .unwrap();
         assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_covers_every_mixer_kind() {
+        for kind in ["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"] {
+            let layers = vec![
+                LayerInfo { kind: kind.to_string(), heads: 2, shifts: vec![1, 2], ffn: 32 },
+                LayerInfo { kind: kind.to_string(), heads: 2, shifts: vec![2, 4], ffn: 32 },
+            ];
+            let m = Manifest::synthetic(kind, layers, 16, 32, 64, 4);
+            assert_eq!(m.total_elems(), m.param_count, "{kind}");
+            assert_eq!(m.layers.len(), 2, "{kind}");
+            // Every layer has its LN + FFN block plus kind-specific mixer
+            // tensors, all uniquely named.
+            let mut names: Vec<&str> = m.params.iter().map(|p| p.name.as_str()).collect();
+            let n = names.len();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), n, "{kind}: duplicate parameter names");
+            assert!(m.params.iter().any(|p| p.name == "layer1.ffn_w2"), "{kind}");
+        }
     }
 
     #[test]

@@ -1,15 +1,28 @@
 //! Autoregressive text generation (the paper's qualitative evaluation path).
 //!
-//! Drives the `decode` artifact: encode the prompt, place it in the fixed
-//! `[1, ctx]` window, run the full-context forward pass, sample the next
-//! token from the logits at the current position (temperature / top-k, as
-//! described for the GPT output stage in the paper's §2), append, repeat.
+//! Everything generates through the [`Decoder`] trait: prefill the
+//! prompt, then one `step` per sampled token.  Two decoder families plug
+//! in:
 //!
-//! Causality of every mixer guarantees positions ≥ current are ignorable,
-//! so the window is simply padded with the end-of-text sentinel.
+//! * [`crate::infer::NativeDecoder`] — the O(1)-state incremental engine
+//!   (ring buffers / KV cache); N sessions share one weight set, which is
+//!   what [`generate_batch`] uses for round-robin multi-prompt serving.
+//! * [`WindowDecoder`] (here) — re-runs a full-context
+//!   [`StepEngine::decode`] pass per token: the PJRT-artifact path, and
+//!   the parity baseline for the native engine.  The fixed `[1, ctx]`
+//!   window is padded with an end-of-text sentinel; causality of every
+//!   mixer guarantees positions ≥ current are ignorable.
+//!
+//! Sampling (temperature / top-k, as described for the GPT output stage
+//! in the paper's §2) is NaN-robust: ordering uses `f32::total_cmp` and
+//! non-finite weights drop out of the draw, so a bad logit can never
+//! panic the serving path.  Top-k selection is O(V) via
+//! `select_nth_unstable_by` rather than a full sort.
 
 use anyhow::{bail, Result};
 
+use crate::config::Manifest;
+use crate::infer::Decoder;
 use crate::runtime::StepEngine;
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
@@ -22,6 +35,8 @@ pub struct SampleCfg {
     /// Keep only the k most likely tokens (0 = disabled).
     pub top_k: usize,
     pub max_new_tokens: usize,
+    /// Base RNG seed; [`generate_batch`] derives per-sequence streams as
+    /// `seed ^ sequence_index`.
     pub seed: u64,
     /// Stop at the end-of-text sentinel.
     pub stop_at_eot: bool,
@@ -34,26 +49,46 @@ impl Default for SampleCfg {
 }
 
 /// Pick the next token from one row of logits.
+///
+/// NaN-safe: comparison uses `total_cmp` (never panics) and non-finite
+/// softmax weights are treated as zero probability.
 pub fn sample_logits(logits: &[f32], cfg: &SampleCfg, rng: &mut Rng) -> u32 {
     if cfg.temperature <= 0.0 {
         return argmax(logits);
     }
-    // Top-k filter on (logit, index) pairs.
+    // Top-k filter: partition the k largest to the front in O(V) — no
+    // full O(V log V) sort of the vocabulary.  NaN ranks below every
+    // finite logit (total_cmp alone would rank +NaN above +inf and let
+    // garbage tokens displace real top-k candidates).
+    let key = |i: u32| {
+        let l = logits[i as usize];
+        if l.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            l
+        }
+    };
     let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
     if cfg.top_k > 0 && cfg.top_k < logits.len() {
-        idx.sort_unstable_by(|&a, &b| {
-            logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
-        });
+        idx.select_nth_unstable_by(cfg.top_k - 1, |&a, &b| key(b).total_cmp(&key(a)));
         idx.truncate(cfg.top_k);
     }
-    // Temperature softmax over the surviving set (numerically stable).
+    // Temperature softmax over the surviving set (numerically stable;
+    // f32::max skips NaN so the shift stays finite if any logit is).
     let max = idx
         .iter()
         .map(|&i| logits[i as usize])
         .fold(f32::NEG_INFINITY, f32::max);
     let weights: Vec<f32> = idx
         .iter()
-        .map(|&i| ((logits[i as usize] - max) / cfg.temperature).exp())
+        .map(|&i| {
+            let w = ((logits[i as usize] - max) / cfg.temperature).exp();
+            if w.is_finite() {
+                w
+            } else {
+                0.0
+            }
+        })
         .collect();
     let total: f32 = weights.iter().sum();
     let mut u = rng.f32() * total;
@@ -66,12 +101,16 @@ pub fn sample_logits(logits: &[f32], cfg: &SampleCfg, rng: &mut Rng) -> u32 {
     *idx.last().unwrap()
 }
 
-/// Greedy argmax.
+/// Greedy argmax.  NaN logits lose every comparison (including at index
+/// 0, via the −∞ starting value) and are never picked unless no logit
+/// beats −∞ at all, in which case index 0 is returned.
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
-    for i in 1..logits.len() {
-        if logits[i] > logits[best] {
+    let mut best_val = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > best_val {
             best = i;
+            best_val = l;
         }
     }
     best as u32
@@ -86,45 +125,124 @@ pub struct Generation {
     pub stopped_at_eot: bool,
 }
 
-/// Generate a completion for `prompt`.
-pub fn generate<E: StepEngine + ?Sized>(
-    engine: &mut E,
+/// [`Decoder`] over any full-context [`StepEngine::decode`] pass: keeps
+/// the fixed `[1, ctx]` window (padded with an EOT sentinel, causally
+/// invisible), re-decodes it every step, and serves the logit row at the
+/// current position.  O(ctx) engine work per token — the baseline the
+/// incremental engine is measured against, and the only decoder the PJRT
+/// artifacts support.
+pub struct WindowDecoder<'e, E: StepEngine + ?Sized> {
+    engine: &'e mut E,
+    pad: u32,
+    window: Vec<i32>,
+    len: usize,
+    row: Vec<f32>,
+}
+
+impl<'e, E: StepEngine + ?Sized> WindowDecoder<'e, E> {
+    /// `pad` fills unused window positions (conventionally the
+    /// tokenizer's end-of-text id).
+    pub fn new(engine: &'e mut E, pad: u32) -> Self {
+        let (ctx, vocab) = (engine.manifest().ctx, engine.manifest().vocab);
+        WindowDecoder { engine, pad, window: vec![pad as i32; ctx], len: 0, row: vec![0.0; vocab] }
+    }
+
+    fn push(&mut self, token: u32) -> Result<()> {
+        let m = self.engine.manifest();
+        if (token as usize) >= m.vocab {
+            bail!("token {token} out of vocab {}", m.vocab);
+        }
+        if self.len >= m.ctx {
+            bail!("context window ({}) exhausted — call reset()", m.ctx);
+        }
+        self.window[self.len] = token as i32;
+        self.len += 1;
+        Ok(())
+    }
+}
+
+impl<E: StepEngine + ?Sized> Decoder for WindowDecoder<'_, E> {
+    fn manifest(&self) -> &Manifest {
+        self.engine.manifest()
+    }
+
+    /// Prompt tokens only move the cursor — no decode pass until the
+    /// first `step` needs logits.
+    fn prefill(&mut self, tokens: &[u32]) -> Result<()> {
+        for &t in tokens {
+            self.push(t)?;
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, token: u32) -> Result<&[f32]> {
+        self.push(token)?;
+        let vocab = self.engine.manifest().vocab;
+        let logits = self.engine.decode(&self.window)?;
+        let pos = self.len - 1;
+        self.row.copy_from_slice(&logits[pos * vocab..(pos + 1) * vocab]);
+        Ok(&self.row)
+    }
+
+    fn reset(&mut self) {
+        self.len = 0;
+        self.window.fill(self.pad as i32);
+    }
+
+    fn position(&self) -> usize {
+        self.len
+    }
+}
+
+/// Shared prompt validation + encoding.
+fn encode_prompt(dec_manifest: &Manifest, tok: &Tokenizer, prompt: &str) -> Result<Vec<u32>> {
+    if tok.vocab_size() != dec_manifest.vocab {
+        bail!(
+            "tokenizer vocab {} does not match model vocab {}",
+            tok.vocab_size(),
+            dec_manifest.vocab
+        );
+    }
+    let ids = tok.encode(prompt);
+    if ids.is_empty() {
+        bail!("prompt encodes to zero tokens");
+    }
+    if ids.len() >= dec_manifest.ctx {
+        bail!(
+            "prompt ({} tokens) must be shorter than ctx ({})",
+            ids.len(),
+            dec_manifest.ctx
+        );
+    }
+    Ok(ids)
+}
+
+/// Generate a completion for `prompt` through any [`Decoder`].
+pub fn generate<D: Decoder + ?Sized>(
+    dec: &mut D,
     tok: &Tokenizer,
     prompt: &str,
     cfg: &SampleCfg,
 ) -> Result<Generation> {
-    let ctx = engine.manifest().ctx;
-    let vocab = engine.manifest().vocab;
-    if tok.vocab_size() != vocab {
-        bail!(
-            "tokenizer vocab {} does not match model vocab {vocab}",
-            tok.vocab_size()
-        );
-    }
-    let mut ids: Vec<u32> = tok.encode(prompt);
-    if ids.is_empty() {
-        bail!("prompt encodes to zero tokens");
-    }
-    if ids.len() >= ctx {
-        bail!("prompt ({} tokens) must be shorter than ctx ({ctx})", ids.len());
-    }
+    let ctx = dec.manifest().ctx;
+    let mut ids = encode_prompt(dec.manifest(), tok, prompt)?;
     let prompt_len = ids.len();
     let mut rng = Rng::new(cfg.seed);
     let mut stopped = false;
 
+    dec.reset();
+    dec.prefill(&ids[..prompt_len - 1])?;
+    let mut last = ids[prompt_len - 1];
+
     while ids.len() < ctx && ids.len() - prompt_len < cfg.max_new_tokens {
-        // Fixed-size window padded with EOT (causally invisible).
-        let mut window: Vec<i32> = ids.iter().map(|&t| t as i32).collect();
-        window.resize(ctx, tok.eot as i32);
-        let logits = engine.decode(&window)?;
-        let pos = ids.len() - 1;
-        let row = &logits[pos * vocab..(pos + 1) * vocab];
-        let next = sample_logits(row, cfg, &mut rng);
+        let logits = dec.step(last)?;
+        let next = sample_logits(logits, cfg, &mut rng);
         if cfg.stop_at_eot && next == tok.eot {
             stopped = true;
             break;
         }
         ids.push(next);
+        last = next;
     }
 
     let completion = tok.decode(&ids[prompt_len..]);
@@ -134,6 +252,106 @@ pub fn generate<E: StepEngine + ?Sized>(
         tokens_generated: ids.len() - prompt_len,
         stopped_at_eot: stopped,
     })
+}
+
+/// Convenience: generate through a full-context engine (the PJRT path)
+/// by wrapping it in a [`WindowDecoder`].
+pub fn generate_windowed<E: StepEngine + ?Sized>(
+    engine: &mut E,
+    tok: &Tokenizer,
+    prompt: &str,
+    cfg: &SampleCfg,
+) -> Result<Generation> {
+    let mut dec = WindowDecoder::new(engine, tok.eot);
+    generate(&mut dec, tok, prompt, cfg)
+}
+
+/// Round-robin multi-prompt decoding: one decoder per prompt (for the
+/// native engine, sessions sharing one `Arc<Model>` — the multi-user
+/// serving shape), stepped breadth-first so every sequence advances one
+/// token per round.
+///
+/// Sequence `i` samples from an independent RNG stream seeded
+/// `cfg.seed ^ i`, so results are identical whether prompts run batched
+/// or one at a time.
+pub fn generate_batch<D: Decoder>(
+    decoders: &mut [D],
+    tok: &Tokenizer,
+    prompts: &[&str],
+    cfg: &SampleCfg,
+) -> Result<Vec<Generation>> {
+    if decoders.len() != prompts.len() {
+        bail!(
+            "{} decoders for {} prompts — supply one decoder per prompt",
+            decoders.len(),
+            prompts.len()
+        );
+    }
+
+    struct Seq {
+        ids: Vec<u32>,
+        prompt_len: usize,
+        last: u32,
+        rng: Rng,
+        done: bool,
+        stopped: bool,
+    }
+
+    let mut seqs: Vec<Seq> = Vec::with_capacity(prompts.len());
+    for (i, (dec, prompt)) in decoders.iter_mut().zip(prompts).enumerate() {
+        let ids = encode_prompt(dec.manifest(), tok, prompt)?;
+        let prompt_len = ids.len();
+        dec.reset();
+        dec.prefill(&ids[..prompt_len - 1])?;
+        seqs.push(Seq {
+            last: ids[prompt_len - 1],
+            ids,
+            prompt_len,
+            rng: Rng::new(cfg.seed ^ i as u64),
+            done: false,
+            stopped: false,
+        });
+    }
+
+    loop {
+        let mut progressed = false;
+        for (dec, seq) in decoders.iter_mut().zip(seqs.iter_mut()) {
+            if seq.done {
+                continue;
+            }
+            let ctx = dec.manifest().ctx;
+            if seq.ids.len() >= ctx || seq.ids.len() - seq.prompt_len >= cfg.max_new_tokens {
+                seq.done = true;
+                continue;
+            }
+            let logits = dec.step(seq.last)?;
+            let next = sample_logits(logits, cfg, &mut seq.rng);
+            if cfg.stop_at_eot && next == tok.eot {
+                seq.done = true;
+                seq.stopped = true;
+                continue;
+            }
+            seq.ids.push(next);
+            seq.last = next;
+            progressed = true;
+        }
+        // A round with no progress means every sequence that wasn't done
+        // already was marked done in this pass (cap or EOT).
+        if !progressed {
+            break;
+        }
+    }
+
+    Ok(seqs
+        .into_iter()
+        .zip(prompts)
+        .map(|(s, p)| Generation {
+            prompt: p.to_string(),
+            completion: tok.decode(&s.ids[s.prompt_len..]),
+            tokens_generated: s.ids.len() - s.prompt_len,
+            stopped_at_eot: s.stopped,
+        })
+        .collect())
 }
 
 /// The paper's Table 3 prompt suite (factual + reasoning prompts).
@@ -154,8 +372,10 @@ pub const TABLE3_PROMPTS: &[&str] = &[
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::LayerInfo;
     use crate::coordinator::{test_manifest, MockEngine};
     use crate::corpus;
+    use crate::infer::{weights, Model, ModelWeights};
     use crate::tokenizer::trainer as tok_trainer;
 
     #[test]
@@ -183,6 +403,43 @@ mod tests {
     }
 
     #[test]
+    fn top_k_survives_unsorted_input() {
+        // select_nth partitions without sorting; the winners must still be
+        // exactly the k largest wherever they sit.
+        let mut rng = Rng::new(3);
+        let cfg = SampleCfg { temperature: 0.5, top_k: 3, ..Default::default() };
+        let logits = [-50.0, 8.0, -50.0, 9.0, -50.0, 10.0, -50.0];
+        for _ in 0..200 {
+            let t = sample_logits(&logits, &cfg, &mut rng);
+            assert!(matches!(t, 1 | 3 | 5), "sampled outside top-3: {t}");
+        }
+    }
+
+    #[test]
+    fn nan_logits_never_panic() {
+        let mut rng = Rng::new(4);
+        let logits = [1.0, f32::NAN, 3.0, f32::NAN, 2.0];
+        for top_k in [0, 2, 4] {
+            let cfg = SampleCfg { temperature: 1.0, top_k, ..Default::default() };
+            for _ in 0..100 {
+                let t = sample_logits(&logits, &cfg, &mut rng);
+                assert!((t as usize) < logits.len());
+            }
+        }
+        // NaN never displaces finite candidates from the top-k set.
+        let cfg = SampleCfg { temperature: 1.0, top_k: 2, ..Default::default() };
+        let l2 = [f32::NAN, 10.0, 9.0, f32::NAN];
+        for _ in 0..100 {
+            let t = sample_logits(&l2, &cfg, &mut rng);
+            assert!(t == 1 || t == 2, "NaN displaced a finite top-k candidate: {t}");
+        }
+        // Greedy ignores NaN everywhere — including index 0.
+        assert_eq!(argmax(&logits), 2);
+        assert_eq!(argmax(&[f32::NAN, 3.0, 5.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+    }
+
+    #[test]
     fn temperature_zero_deterministic_high_temp_varied() {
         let logits: Vec<f32> = (0..20).map(|i| (i as f32) * 0.1).collect();
         let mut rng = Rng::new(2);
@@ -205,7 +462,7 @@ mod tests {
         );
         eng.init(0).unwrap();
         let cfg = SampleCfg { temperature: 0.0, max_new_tokens: 8, ..Default::default() };
-        let g = generate(&mut eng, &tok, "Once upon a time", &cfg).unwrap();
+        let g = generate_windowed(&mut eng, &tok, "Once upon a time", &cfg).unwrap();
         assert!(g.tokens_generated > 0);
         assert_eq!(g.prompt, "Once upon a time");
     }
@@ -216,7 +473,48 @@ mod tests {
         let tok = tok_trainer::train(&text, 300).unwrap();
         let mut eng = MockEngine::new(test_manifest("hsm_ab", 4, 32, 999), 1.8, 0.01);
         eng.init(0).unwrap();
-        assert!(generate(&mut eng, &tok, "hi", &SampleCfg::default()).is_err());
+        assert!(generate_windowed(&mut eng, &tok, "hi", &SampleCfg::default()).is_err());
+    }
+
+    fn native_model(tok_vocab: usize) -> std::sync::Arc<Model> {
+        let layers = vec![
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+        ];
+        let m = crate::config::Manifest::synthetic("hsm_ab", layers, 8, 48, tok_vocab, 1);
+        let flat = weights::seeded_flat(&m, 11);
+        Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn generate_batch_matches_single_sessions() {
+        let text = corpus::generate(9, 80);
+        let tok = tok_trainer::train(&text, 300).unwrap();
+        let model = native_model(tok.vocab_size());
+        let cfg = SampleCfg { temperature: 0.8, top_k: 8, max_new_tokens: 6, seed: 5, ..Default::default() };
+        let prompts = ["Once upon a time", "Lily likes cats"];
+
+        // Batched: two sessions sharing one weight set, round-robin.
+        let mut sessions = vec![model.session(), model.session()];
+        let batched = generate_batch(&mut sessions, &tok, &prompts, &cfg).unwrap();
+        assert_eq!(batched.len(), 2);
+
+        // Sequential reference: per-sequence seed = cfg.seed ^ i.
+        for (i, (prompt, b)) in prompts.iter().zip(&batched).enumerate() {
+            let solo_cfg = SampleCfg { seed: cfg.seed ^ i as u64, ..cfg.clone() };
+            let solo = generate(&mut model.session(), &tok, prompt, &solo_cfg).unwrap();
+            assert_eq!(solo.completion, b.completion, "sequence {i} diverged under batching");
+            assert_eq!(solo.tokens_generated, b.tokens_generated);
+        }
+    }
+
+    #[test]
+    fn generate_batch_rejects_mismatched_lengths() {
+        let text = corpus::generate(9, 60);
+        let tok = tok_trainer::train(&text, 300).unwrap();
+        let model = native_model(tok.vocab_size());
+        let mut sessions = vec![model.session()];
+        assert!(generate_batch(&mut sessions, &tok, &["a", "b"], &SampleCfg::default()).is_err());
     }
 
     #[test]

@@ -1,7 +1,9 @@
-//! The incremental decoder.
+//! The incremental decoder, structured for multi-session serving.
 //!
-//! One call to [`InferenceEngine::step`] consumes one token and returns
-//! next-token logits, maintaining per-layer state:
+//! [`Model`] is the immutable half (manifest + weights) and lives behind
+//! an `Arc`: N concurrent [`DecodeSession`]s share one weight set, which
+//! is what multi-user serving needs — weights are by far the largest
+//! allocation, per-sequence state is tiny:
 //!
 //! * **HSM layers** — a ring buffer of post-LN1 activations with capacity
 //!   `max_shift` — **O(1) state and work per token**, the paper's
@@ -9,14 +11,23 @@
 //! * **Attention layers** — a growing K/V cache, O(p) work at position p
 //!   (this is exactly why hybrids lose the linear-time property, paper §5).
 //!
+//! Every scratch buffer the forward pass needs (including the per-mixer
+//! temporaries) lives in the session, so the step path performs **zero
+//! allocations** (the KV cache grows amortised).
+//!
 //! Numerics mirror `python/compile/model.py` op for op (pre-LN blocks,
 //! tied embedding, ReLU FFN); parity with the PJRT `decode` artifact is
-//! asserted to ~1e-3 in `rust/tests/runtime_e2e.rs`.
+//! asserted to ~1e-3 in `rust/tests/runtime_e2e.rs`, and with the
+//! independent full-sequence forward ([`crate::infer::WindowEngine`])
+//! token-for-token in `rust/tests/decode_parity.rs`.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use super::tensor::{add_assign, layer_norm, matvec, matvec_t, relu_inplace, softmax_inplace, tanh_inplace};
 use super::weights::{LayerWeights, ModelWeights};
+use super::Decoder;
 use crate::config::{LayerInfo, Manifest};
 
 /// Ring buffer of the last `capacity` activation vectors.
@@ -52,63 +63,167 @@ impl Ring {
         let idx = (self.next + self.capacity - age) % self.capacity;
         Some(&self.buf[idx])
     }
+
+    /// Forget everything (stale contents become unreadable).
+    fn clear(&mut self) {
+        self.next = 0;
+        self.filled = 0;
+    }
 }
 
 /// Per-layer decoding state.
 pub enum LayerState {
     /// HSM mixers: ring of post-LN1 activations (capacity = max shift).
     Hsm(Ring),
-    /// Attention: cached K and V per past position, per head-concatenated
-    /// `[D]` rows.
-    Attn { k: Vec<Vec<f32>>, v: Vec<Vec<f32>> },
+    /// Attention: flat K and V caches, one `[D]` row per past position
+    /// (head-concatenated), stride `D`.
+    Attn { k: Vec<f32>, v: Vec<f32> },
 }
 
-/// The native incremental inference engine.
-pub struct InferenceEngine {
+impl LayerState {
+    fn new(spec: &LayerInfo, d: usize) -> Self {
+        if spec.kind == "attn" {
+            LayerState::Attn { k: Vec::new(), v: Vec::new() }
+        } else {
+            let max_shift = spec.shifts.iter().copied().max().unwrap_or(1);
+            LayerState::Hsm(Ring::new(max_shift, d))
+        }
+    }
+
+    fn clear(&mut self) {
+        match self {
+            LayerState::Hsm(ring) => ring.clear(),
+            LayerState::Attn { k, v } => {
+                k.clear();
+                v.clear();
+            }
+        }
+    }
+}
+
+/// The immutable half of a decoder: manifest + weights, shared across
+/// any number of [`DecodeSession`]s via `Arc`.
+pub struct Model {
     pub manifest: Manifest,
-    w: ModelWeights,
+    pub weights: ModelWeights,
+}
+
+impl Model {
+    /// Validate weight/manifest consistency.
+    pub fn new(manifest: Manifest, weights: ModelWeights) -> Result<Self> {
+        if weights.layers.len() != manifest.layers.len() {
+            bail!(
+                "weights have {} layers, manifest {}",
+                weights.layers.len(),
+                manifest.layers.len()
+            );
+        }
+        let d = manifest.dim;
+        if weights.tok_emb.len() != manifest.vocab * d {
+            bail!(
+                "tok_emb has {} elems, expected vocab*dim = {}",
+                weights.tok_emb.len(),
+                manifest.vocab * d
+            );
+        }
+        if weights.pos_emb.len() != manifest.ctx * d {
+            bail!(
+                "pos_emb has {} elems, expected ctx*dim = {}",
+                weights.pos_emb.len(),
+                manifest.ctx * d
+            );
+        }
+        for (l, spec) in manifest.layers.iter().enumerate() {
+            if spec.heads == 0 || d % spec.heads != 0 {
+                bail!("layer {l}: heads {} must divide dim {d}", spec.heads);
+            }
+        }
+        Ok(Model { manifest, weights })
+    }
+
+    /// `new`, wrapped for sharing.
+    pub fn shared(manifest: Manifest, weights: ModelWeights) -> Result<Arc<Self>> {
+        Ok(Arc::new(Self::new(manifest, weights)?))
+    }
+
+    /// Open a new decode session against this (shared) weight set.
+    pub fn session(self: &Arc<Self>) -> NativeDecoder {
+        NativeDecoder::new(Arc::clone(self))
+    }
+}
+
+/// Mixer scratch: every temporary any mixer variant needs, hoisted out
+/// of the step path.  Field roles rotate by mixer kind (documented at
+/// the use sites); `zeros` is the before-history activation and is never
+/// written.
+struct MixScratch {
+    zeros: Vec<f32>,
+    /// mat: B·prev | gate1: hidden | attn: q
+    tmp: Vec<f32>,
+    /// gate1: gate | attn: k row
+    gate: Vec<f32>,
+    /// attn: v row
+    aux: Vec<f32>,
+    /// attn: per-head weighted-value accumulator
+    acc: Vec<f32>,
+    /// gate2/fusion: per-head `[h; prev]` concat (first `2·hd` used)
+    cat: Vec<f32>,
+    /// gate2: per-head gate | fusion: per-head hidden (first `hd` used)
+    mid: Vec<f32>,
+    /// fusion: per-head output (first `hd` used)
+    head_out: Vec<f32>,
+    /// attn: one score per cached position (grows with the KV cache)
+    scores: Vec<f32>,
+}
+
+impl MixScratch {
+    fn new(d: usize) -> Self {
+        MixScratch {
+            zeros: vec![0.0; d],
+            tmp: vec![0.0; d],
+            gate: vec![0.0; d],
+            aux: vec![0.0; d],
+            acc: vec![0.0; d],
+            cat: vec![0.0; 2 * d],
+            mid: vec![0.0; d],
+            head_out: vec![0.0; d],
+            scores: Vec::new(),
+        }
+    }
+}
+
+/// The mutable, per-sequence half of a decoder: layer state, position
+/// cursor and scratch.  Cheap relative to weights — allocate one per
+/// concurrent user and share the [`Model`].
+pub struct DecodeSession {
     state: Vec<LayerState>,
     /// Current position (tokens consumed so far).
     pos: usize,
     // scratch buffers (no allocation on the step path)
+    x: Vec<f32>,
     h: Vec<f32>,
     y: Vec<f32>,
     f1: Vec<f32>,
     f2: Vec<f32>,
     logits: Vec<f32>,
+    mix: MixScratch,
 }
 
-impl InferenceEngine {
-    pub fn new(manifest: Manifest, weights: ModelWeights) -> Result<Self> {
-        if weights.layers.len() != manifest.layers.len() {
-            bail!("weights/manifest layer count mismatch");
-        }
-        let d = manifest.dim;
-        let max_ffn = manifest.layers.iter().map(|l| l.ffn).max().unwrap_or(d);
-        let state = manifest
-            .layers
-            .iter()
-            .map(|l| {
-                if l.kind == "attn" {
-                    LayerState::Attn { k: Vec::new(), v: Vec::new() }
-                } else {
-                    let max_shift = l.shifts.iter().copied().max().unwrap_or(1);
-                    LayerState::Hsm(Ring::new(max_shift, d))
-                }
-            })
-            .collect();
-        let vocab = manifest.vocab;
-        Ok(InferenceEngine {
-            manifest,
-            w: weights,
-            state,
+impl DecodeSession {
+    pub fn new(m: &Manifest) -> Self {
+        let d = m.dim;
+        let max_ffn = m.layers.iter().map(|l| l.ffn).max().unwrap_or(d);
+        DecodeSession {
+            state: m.layers.iter().map(|l| LayerState::new(l, d)).collect(),
             pos: 0,
+            x: vec![0.0; d],
             h: vec![0.0; d],
             y: vec![0.0; d],
             f1: vec![0.0; max_ffn],
             f2: vec![0.0; d],
-            logits: vec![0.0; vocab],
-        })
+            logits: vec![0.0; m.vocab],
+            mix: MixScratch::new(d),
+        }
     }
 
     pub fn position(&self) -> usize {
@@ -117,51 +232,50 @@ impl InferenceEngine {
 
     /// Clear all decoding state (start a new sequence).
     pub fn reset(&mut self) {
-        let d = self.manifest.dim;
-        for (st, l) in self.state.iter_mut().zip(&self.manifest.layers) {
-            *st = if l.kind == "attn" {
-                LayerState::Attn { k: Vec::new(), v: Vec::new() }
-            } else {
-                LayerState::Hsm(Ring::new(l.shifts.iter().copied().max().unwrap_or(1), d))
-            };
+        for st in &mut self.state {
+            st.clear();
         }
         self.pos = 0;
     }
 
-    /// Consume one token, return next-token logits (borrow valid until the
-    /// next call).
-    pub fn step(&mut self, token: u32) -> Result<&[f32]> {
-        let d = self.manifest.dim;
-        let vocab = self.manifest.vocab;
+    /// Consume one token, return next-token logits (borrow valid until
+    /// the next call with this session).
+    pub fn step(&mut self, model: &Model, token: u32) -> Result<&[f32]> {
+        self.step_inner(model, token, true)?;
+        Ok(&self.logits)
+    }
+
+    /// One forward step; the final LN + `[D, V]` logit projection (the
+    /// most expensive single op at small D) is skipped during prefill.
+    fn step_inner(&mut self, model: &Model, token: u32, want_logits: bool) -> Result<()> {
+        let m = &model.manifest;
+        let w = &model.weights;
+        let d = m.dim;
+        let vocab = m.vocab;
         if (token as usize) >= vocab {
             bail!("token {token} out of vocab {vocab}");
         }
-        if self.pos >= self.manifest.ctx {
-            bail!("context window ({}) exhausted — call reset()", self.manifest.ctx);
+        if self.pos >= m.ctx {
+            bail!("context window ({}) exhausted — call reset()", m.ctx);
         }
 
         // Embedding + learned position.
-        let mut x = vec![0.0f32; d];
-        let te = &self.w.tok_emb[token as usize * d..(token as usize + 1) * d];
-        let pe = &self.w.pos_emb[self.pos * d..(self.pos + 1) * d];
+        let te = &w.tok_emb[token as usize * d..(token as usize + 1) * d];
+        let pe = &w.pos_emb[self.pos * d..(self.pos + 1) * d];
         for i in 0..d {
-            x[i] = te[i] + pe[i];
+            self.x[i] = te[i] + pe[i];
         }
 
-        let n_layers = self.manifest.layers.len();
-        for l in 0..n_layers {
-            // Split borrows: clone the spec (cheap) and take state by index.
-            let spec = self.manifest.layers[l].clone();
-            let lw = &self.w.layers[l];
+        for (l, spec) in m.layers.iter().enumerate() {
+            let lw = &w.layers[l];
 
-            // h = LN1(x)
-            layer_norm(&x, &lw.ln1_g, &lw.ln1_b, &mut self.h);
-            // y = mixer(h, state)
-            mixer_step(&spec, lw, &self.h, &mut self.state[l], &mut self.y, d);
-            add_assign(&mut x, &self.y);
+            // h = LN1(x); y = mixer(h, state); x += y
+            layer_norm(&self.x, &lw.ln1_g, &lw.ln1_b, &mut self.h);
+            mixer_step(spec, lw, &self.h, &mut self.state[l], &mut self.y, d, &mut self.mix);
+            add_assign(&mut self.x, &self.y);
 
             // FFN
-            layer_norm(&x, &lw.ln2_g, &lw.ln2_b, &mut self.f2);
+            layer_norm(&self.x, &lw.ln2_g, &lw.ln2_b, &mut self.f2);
             let f = spec.ffn;
             let f1 = &mut self.f1[..f];
             matvec(&self.f2, &lw.ffn_w1, f, f1);
@@ -169,14 +283,65 @@ impl InferenceEngine {
             relu_inplace(f1);
             matvec(f1, &lw.ffn_w2, d, &mut self.f2);
             add_assign(&mut self.f2, &lw.ffn_b2);
-            add_assign(&mut x, &self.f2);
+            add_assign(&mut self.x, &self.f2);
         }
 
-        // Final LN + tied-embedding projection.
-        layer_norm(&x, &self.w.lnf_g, &self.w.lnf_b, &mut self.h);
-        matvec_t(&self.h, &self.w.tok_emb, vocab, &mut self.logits);
+        if want_logits {
+            // Final LN + tied-embedding projection.
+            layer_norm(&self.x, &w.lnf_g, &w.lnf_b, &mut self.h);
+            matvec_t(&self.h, &w.tok_emb, vocab, &mut self.logits);
+        }
         self.pos += 1;
-        Ok(&self.logits)
+        Ok(())
+    }
+}
+
+/// The native incremental decoder: shared [`Model`] + own [`DecodeSession`].
+pub struct NativeDecoder {
+    model: Arc<Model>,
+    session: DecodeSession,
+}
+
+impl NativeDecoder {
+    /// Open a session against a shared model.
+    pub fn new(model: Arc<Model>) -> Self {
+        let session = DecodeSession::new(&model.manifest);
+        NativeDecoder { model, session }
+    }
+
+    /// Convenience: validate and wrap an owned (manifest, weights) pair.
+    pub fn from_parts(manifest: Manifest, weights: ModelWeights) -> Result<Self> {
+        Ok(Self::new(Model::shared(manifest, weights)?))
+    }
+
+    /// The shared model (clone the `Arc` to open more sessions).
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+}
+
+impl Decoder for NativeDecoder {
+    fn manifest(&self) -> &Manifest {
+        &self.model.manifest
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<()> {
+        for &t in tokens {
+            self.session.step_inner(&self.model, t, false)?;
+        }
+        Ok(())
+    }
+
+    fn step(&mut self, token: u32) -> Result<&[f32]> {
+        self.session.step(&self.model, token)
+    }
+
+    fn reset(&mut self) {
+        self.session.reset();
+    }
+
+    fn position(&self) -> usize {
+        self.session.position()
     }
 }
 
@@ -188,22 +353,22 @@ fn mixer_step(
     state: &mut LayerState,
     y: &mut [f32],
     d: usize,
+    mix: &mut MixScratch,
 ) {
     let mw = &lw.mixer;
     let heads = spec.heads;
     let hd = d / heads;
+    let MixScratch { zeros, tmp, gate, aux, acc, cat, mid, head_out, scores } = mix;
     match state {
         LayerState::Hsm(ring) => {
-            let zeros = vec![0.0f32; d];
+            let zeros = &zeros[..];
             match spec.kind.as_str() {
                 "ab" => {
                     for hix in 0..heads {
                         let s = spec.shifts[hix.min(spec.shifts.len() - 1)];
-                        // history age s == activation at position p - s; the
-                        // push below happens AFTER reads, so age s-1 relative
-                        // to the pre-push ring == p - s. We push first instead
-                        // to keep ages 1-based; see ordering note below.
-                        let prev = ring.back(s).unwrap_or(&zeros);
+                        // back(s) is the activation at position p − s (the
+                        // push below happens AFTER all reads).
+                        let prev = ring.back(s).unwrap_or(zeros);
                         let (a, b) = (mw.mix_a[hix], mw.mix_b[hix]);
                         for c in hix * hd..(hix + 1) * hd {
                             y[c] = a * h[c] + b * prev[c];
@@ -212,70 +377,67 @@ fn mixer_step(
                 }
                 "vec" => {
                     let s = spec.shifts[0];
-                    let prev = ring.back(s).unwrap_or(&zeros);
+                    let prev = ring.back(s).unwrap_or(zeros);
                     for c in 0..d {
                         y[c] = mw.mix_a[c] * h[c] + mw.mix_b[c] * prev[c];
                     }
                 }
                 "mat" => {
                     let s = spec.shifts[0];
-                    let prev = ring.back(s).unwrap_or(&zeros);
-                    let mut tmp = vec![0.0f32; d];
+                    let prev = ring.back(s).unwrap_or(zeros);
                     matvec(h, &mw.mix_mat_a, d, y);
-                    matvec(prev, &mw.mix_mat_b, d, &mut tmp);
-                    add_assign(y, &tmp);
+                    matvec(prev, &mw.mix_mat_b, d, tmp);
+                    add_assign(y, tmp);
                     add_assign(y, &mw.mix_bias);
                 }
                 "gate1" => {
                     let s = spec.shifts[0];
-                    let prev = ring.back(s).unwrap_or(&zeros);
-                    let mut g1 = vec![0.0f32; d];
-                    let mut gate = vec![0.0f32; d];
-                    matvec(h, &mw.gate_w1, d, &mut g1);
-                    add_assign(&mut g1, &mw.gate_b1);
-                    relu_inplace(&mut g1);
-                    matvec(&g1, &mw.gate_w2, d, &mut gate);
-                    add_assign(&mut gate, &mw.gate_b2);
-                    tanh_inplace(&mut gate);
+                    let prev = ring.back(s).unwrap_or(zeros);
+                    matvec(h, &mw.gate_w1, d, tmp);
+                    add_assign(tmp, &mw.gate_b1);
+                    relu_inplace(tmp);
+                    matvec(tmp, &mw.gate_w2, d, gate);
+                    add_assign(gate, &mw.gate_b2);
+                    tanh_inplace(gate);
                     for c in 0..d {
                         y[c] = gate[c] * h[c] + (1.0 - gate[c]) * prev[c];
                     }
                 }
                 "gate2" => {
                     let s = spec.shifts[0];
-                    let prev = ring.back(s).unwrap_or(&zeros);
-                    let mut cat = vec![0.0f32; 2 * hd];
-                    let mut gate = vec![0.0f32; hd];
+                    let prev = ring.back(s).unwrap_or(zeros);
+                    let cat = &mut cat[..2 * hd];
+                    let g = &mut mid[..hd];
                     for hix in 0..heads {
                         cat[..hd].copy_from_slice(&h[hix * hd..(hix + 1) * hd]);
                         cat[hd..].copy_from_slice(&prev[hix * hd..(hix + 1) * hd]);
                         let w = &mw.gate_w[hix * 2 * hd * hd..(hix + 1) * 2 * hd * hd];
-                        matvec(&cat, w, hd, &mut gate);
-                        add_assign(&mut gate, &mw.gate_b[hix * hd..(hix + 1) * hd]);
-                        tanh_inplace(&mut gate);
+                        matvec(cat, w, hd, g);
+                        add_assign(g, &mw.gate_b[hix * hd..(hix + 1) * hd]);
+                        tanh_inplace(g);
                         for c in 0..hd {
                             let gc = hix * hd + c;
-                            y[gc] = gate[c] * h[gc] + (1.0 - gate[c]) * prev[gc];
+                            y[gc] = g[c] * h[gc] + (1.0 - g[c]) * prev[gc];
                         }
                     }
                 }
                 "fusion" => {
                     let s = spec.shifts[0];
-                    let prev = ring.back(s).unwrap_or(&zeros);
-                    let mut cat = vec![0.0f32; 2 * hd];
-                    let mut mid = vec![0.0f32; hd];
-                    let mut out = vec![0.0f32; hd];
+                    let prev = ring.back(s).unwrap_or(zeros);
+                    let cat = &mut cat[..2 * hd];
+                    let m1 = &mut mid[..hd];
+                    let out = &mut head_out[..hd];
                     for hix in 0..heads {
                         cat[..hd].copy_from_slice(&h[hix * hd..(hix + 1) * hd]);
                         cat[hd..].copy_from_slice(&prev[hix * hd..(hix + 1) * hd]);
                         let w1 = &mw.fuse_w1[hix * 2 * hd * hd..(hix + 1) * 2 * hd * hd];
-                        matvec(&cat, w1, hd, &mut mid);
-                        add_assign(&mut mid, &mw.fuse_b1[hix * hd..(hix + 1) * hd]);
-                        relu_inplace(&mut mid);
+                        matvec(cat, w1, hd, m1);
+                        add_assign(m1, &mw.fuse_b1[hix * hd..(hix + 1) * hd]);
+                        relu_inplace(m1);
                         let w2 = &mw.fuse_w2[hix * hd * hd..(hix + 1) * hd * hd];
-                        matvec(&mid, w2, hd, &mut out);
-                        add_assign(&mut out, &mw.fuse_b2[hix * hd..(hix + 1) * hd]);
-                        y[hix * hd..(hix + 1) * hd].copy_from_slice(&out);
+                        matvec(m1, w2, hd, out);
+                        add_assign(out, &mw.fuse_b2[hix * hd..(hix + 1) * hd]);
+                        y[hix * hd..(hix + 1) * hd].copy_from_slice(out);
                     }
                 }
                 other => panic!("unknown HSM mixer kind {other}"),
@@ -285,40 +447,39 @@ fn mixer_step(
             ring.push(h);
         }
         LayerState::Attn { k, v } => {
-            // Project q, k, v for this position.
-            let mut q = vec![0.0f32; d];
-            let mut kk = vec![0.0f32; d];
-            let mut vv = vec![0.0f32; d];
-            matvec(h, &mw.wq, d, &mut q);
-            add_assign(&mut q, &mw.bq);
-            matvec(h, &mw.wk, d, &mut kk);
-            add_assign(&mut kk, &mw.bk);
-            matvec(h, &mw.wv, d, &mut vv);
-            add_assign(&mut vv, &mw.bv);
-            k.push(kk);
-            v.push(vv);
-            let t = k.len();
+            // Project q (tmp), k-row (gate), v-row (aux) for this position.
+            matvec(h, &mw.wq, d, tmp);
+            add_assign(tmp, &mw.bq);
+            matvec(h, &mw.wk, d, gate);
+            add_assign(gate, &mw.bk);
+            matvec(h, &mw.wv, d, aux);
+            add_assign(aux, &mw.bv);
+            k.extend_from_slice(gate);
+            v.extend_from_slice(aux);
+            let t = k.len() / d;
             let scale = 1.0 / (hd as f32).sqrt();
-            let mut o = vec![0.0f32; d];
-            let mut scores = vec![0.0f32; t];
+            acc.fill(0.0);
+            scores.resize(t, 0.0);
             for hix in 0..heads {
                 let r = hix * hd..(hix + 1) * hd;
-                for (j, kj) in k.iter().enumerate() {
+                for j in 0..t {
+                    let kj = &k[j * d..(j + 1) * d];
                     let mut dot = 0.0;
                     for c in r.clone() {
-                        dot += q[c] * kj[c];
+                        dot += tmp[c] * kj[c];
                     }
                     scores[j] = dot * scale;
                 }
                 softmax_inplace(&mut scores[..t]);
-                for (j, vj) in v.iter().enumerate() {
+                for j in 0..t {
+                    let vj = &v[j * d..(j + 1) * d];
                     let p = scores[j];
                     for c in r.clone() {
-                        o[c] += p * vj[c];
+                        acc[c] += p * vj[c];
                     }
                 }
             }
-            matvec(&o, &mw.wo, d, y);
+            matvec(acc, &mw.wo, d, y);
             add_assign(y, &mw.bo);
         }
     }
@@ -331,7 +492,7 @@ mod tests {
     use crate::infer::weights::ModelWeights;
     use crate::runtime::StepEngine;
 
-    fn engine() -> InferenceEngine {
+    fn model() -> Arc<Model> {
         let m = test_manifest("hsm_ab", 2, 16, 300);
         let mut mock = MockEngine::new(m.clone(), 1.8, 0.01);
         mock.init(0).unwrap();
@@ -344,7 +505,11 @@ mod tests {
             }
         }
         let w = ModelWeights::from_flat(&m, &params).unwrap();
-        InferenceEngine::new(m, w).unwrap()
+        Model::shared(m, w).unwrap()
+    }
+
+    fn engine() -> NativeDecoder {
+        model().session()
     }
 
     #[test]
@@ -360,6 +525,8 @@ mod tests {
         r.push(&[4.0, 4.0]); // evicts 1.0
         assert_eq!(r.back(3).unwrap(), &[2.0, 2.0]);
         assert!(r.back(4).is_none());
+        r.clear();
+        assert!(r.back(1).is_none());
     }
 
     #[test]
@@ -399,9 +566,42 @@ mod tests {
         for t in 0..10 {
             e.step(t).unwrap();
         }
-        match &e.state[0] {
+        match &e.session.state[0] {
             LayerState::Hsm(r) => assert_eq!(r.buf.len(), 1), // max shift = 1
             _ => panic!("expected HSM state"),
         }
+    }
+
+    #[test]
+    fn prefill_matches_step_by_step() {
+        let md = model();
+        let mut a = md.session();
+        a.step(5).unwrap();
+        a.step(9).unwrap();
+        let want = a.step(3).unwrap().to_vec();
+
+        let mut b = md.session();
+        b.prefill(&[5, 9]).unwrap();
+        assert_eq!(b.position(), 2);
+        assert_eq!(b.step(3).unwrap().to_vec(), want);
+    }
+
+    #[test]
+    fn concurrent_sessions_share_weights_without_crosstalk() {
+        let md = model();
+        let mut solo = md.session();
+        let s1: Vec<Vec<f32>> =
+            [5u32, 9, 3].iter().map(|&t| solo.step(t).unwrap().to_vec()).collect();
+
+        // Two interleaved sessions over the same Arc<Model>: one replays the
+        // solo stream, the other runs a different stream in between.
+        let mut a = md.session();
+        let mut b = md.session();
+        for (i, &t) in [5u32, 9, 3].iter().enumerate() {
+            b.step((t + 1) % 7).unwrap();
+            let got = a.step(t).unwrap().to_vec();
+            assert_eq!(got, s1[i], "session crosstalk at step {i}");
+        }
+        assert_eq!(std::sync::Arc::strong_count(&md), 4); // md + solo + a + b
     }
 }

@@ -1,4 +1,4 @@
-//! Native incremental inference engine.
+//! Native inference: the incremental decoder and the serving surface.
 //!
 //! The PJRT `decode` artifact recomputes the **full context** for every
 //! generated token — O(T) work per token for HSM, O(T²) for attention.
@@ -9,20 +9,70 @@
 //! match (its KV cache grows with T and each step scans all of it).
 //!
 //! This module realises that advantage as a from-scratch Rust forward
-//! pass: checkpoint weights in, one token at a time in, next-token logits
-//! out.  It supports **every** mixer variant (HSM ring buffers; a KV
-//! cache for attention/hybrid layers) and is validated for logits parity
-//! against the PJRT decode artifact in `rust/tests/runtime_e2e.rs`.
+//! pass and shapes it for serving:
+//!
+//! * [`Model`] — manifest + [`ModelWeights`] behind an `Arc`: **one**
+//!   weight set shared by any number of concurrent decode sessions.
+//! * [`DecodeSession`] — the per-sequence half: layer state (rings / KV
+//!   cache) plus all scratch buffers, so the step path allocates nothing.
+//! * [`NativeDecoder`] — `Arc<Model>` + `DecodeSession`, implementing
+//!   [`Decoder`].
+//! * [`WindowEngine`] — an artifact-free full-context reference forward
+//!   (independent O(T²) code path) used for parity checking and as the
+//!   windowed-decode baseline in benches.
 //!
 //! Submodules:
 //! * [`tensor`] — the minimal dense-math substrate (matvec, layernorm,
-//!   softmax) used by the engine.
+//!   softmax) used by both forward passes.
 //! * [`weights`] — typed per-layer weight views over a flat checkpoint.
-//! * [`engine`] — the incremental decoder itself + sampling loop.
+//! * [`engine`] — the incremental decoder itself.
+//! * [`window`] — the full-sequence reference forward.
 
 pub mod engine;
 pub mod tensor;
 pub mod weights;
+pub mod window;
 
-pub use engine::{InferenceEngine, LayerState};
+pub use engine::{DecodeSession, LayerState, Model, NativeDecoder};
 pub use weights::ModelWeights;
+pub use window::WindowEngine;
+
+use anyhow::Result;
+
+use crate::config::Manifest;
+
+/// The incremental-generation surface every generation consumer drives.
+///
+/// A decoder owns the position cursor of one sequence.  `prefill` pushes
+/// prompt tokens without needing their logits, `step` consumes one token
+/// and returns next-token logits (borrow valid until the next call),
+/// `reset` rewinds to an empty sequence.
+///
+/// Implementations:
+/// * [`NativeDecoder`] — O(1)-state incremental engine (rings/KV cache).
+/// * [`crate::generation::WindowDecoder`] — re-runs a full-context
+///   [`crate::runtime::StepEngine::decode`] pass per token (the PJRT
+///   artifact path, and the parity baseline).
+pub trait Decoder {
+    /// Static model description (ctx, vocab, layer specs).
+    fn manifest(&self) -> &Manifest;
+
+    /// Consume prompt tokens without sampling.  Implementations may skip
+    /// logit computation entirely (the native decoder does).
+    fn prefill(&mut self, tokens: &[u32]) -> Result<()> {
+        for &t in tokens {
+            self.step(t)?;
+        }
+        Ok(())
+    }
+
+    /// Consume one token, return next-token logits (borrow valid until
+    /// the next call on this decoder).
+    fn step(&mut self, token: u32) -> Result<&[f32]>;
+
+    /// Clear all sequence state (start a new sequence).
+    fn reset(&mut self);
+
+    /// Tokens consumed so far.
+    fn position(&self) -> usize;
+}

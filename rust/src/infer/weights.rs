@@ -154,6 +154,32 @@ impl ModelWeights {
     }
 }
 
+/// Deterministic plausible-init flat parameters for a manifest: LayerNorm
+/// gains near 1, biases near 0, everything else small Gaussian noise.
+/// Used by benches, examples and parity tests to build runnable models
+/// without artifacts or training.
+pub fn seeded_flat(manifest: &Manifest, seed: u64) -> Vec<Vec<f32>> {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    manifest
+        .params
+        .iter()
+        .map(|p| {
+            let mut r = rng.split(p.name.len() as u64);
+            let n = p.elems();
+            if p.name.ends_with("_g") {
+                // LayerNorm gains: near 1 so activations keep unit scale.
+                (0..n).map(|_| 1.0 + 0.05 * r.normal() as f32).collect()
+            } else if p.name.ends_with("mix_a") || p.name.ends_with("mix_b") {
+                // Mixing taps: near the paper's learned magnitudes.
+                (0..n).map(|_| 0.6 + 0.2 * r.normal() as f32).collect()
+            } else {
+                (0..n).map(|_| 0.12 * r.normal() as f32).collect()
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

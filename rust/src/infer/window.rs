@@ -1,0 +1,348 @@
+//! Full-sequence reference forward: an artifact-free `decode` pass.
+//!
+//! [`WindowEngine`] implements [`StepEngine::decode`] over a shared
+//! [`Model`] by materialising the whole `[T, D]` activation matrix and
+//! mixing with explicit `t − s` indexing — a code path **independent of
+//! the ring-buffer/KV-cache incremental engine** (`engine.rs`).  That
+//! independence is the point: `tests/decode_parity.rs` drives greedy
+//! generation through both and requires token-for-token agreement, which
+//! pins the incremental state machinery (ring ages, push ordering, KV
+//! growth) against the plain math.  It is also the "windowed decode"
+//! baseline in `benches/decode_latency.rs` — O(ctx) work per generated
+//! token versus the incremental engine's O(1) (pure HSM).
+//!
+//! Training entry points intentionally bail: this engine exists to
+//! decode.  Op order matches `engine.rs` exactly, so agreement is
+//! bit-level, not just within tolerance.
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use super::engine::Model;
+use super::tensor::{add_assign, layer_norm, matvec, matvec_t, relu_inplace, softmax_inplace, tanh_inplace};
+use crate::config::Manifest;
+use crate::data::Batch;
+use crate::runtime::{StepEngine, StepMetrics};
+
+/// Decode-only [`StepEngine`] over native weights (no artifacts, no PJRT).
+pub struct WindowEngine {
+    model: Arc<Model>,
+}
+
+impl WindowEngine {
+    pub fn new(model: Arc<Model>) -> Self {
+        WindowEngine { model }
+    }
+
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+}
+
+impl StepEngine for WindowEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.model.manifest
+    }
+
+    /// Weights are fixed at construction; init is a no-op for interface
+    /// compatibility (the generate path calls it unconditionally).
+    fn init(&mut self, _seed: u32) -> Result<()> {
+        Ok(())
+    }
+
+    fn train_step(&mut self, _step: i32, _batch: &Batch) -> Result<StepMetrics> {
+        bail!("WindowEngine is decode-only (no training artifacts)")
+    }
+
+    fn eval_step(&mut self, _batch: &Batch) -> Result<StepMetrics> {
+        bail!("WindowEngine is decode-only (no training artifacts)")
+    }
+
+    fn decode(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let ctx = self.model.manifest.ctx;
+        if tokens.len() != ctx {
+            bail!("decode expects exactly {ctx} tokens, got {}", tokens.len());
+        }
+        forward_full(&self.model, tokens)
+    }
+
+    fn get_params(&self) -> Result<Vec<Vec<f32>>> {
+        bail!("WindowEngine does not expose flat parameters")
+    }
+
+    fn set_params(&mut self, _params: Vec<Vec<f32>>) -> Result<()> {
+        bail!("WindowEngine weights are fixed at construction")
+    }
+
+    fn get_state(&self) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        bail!("WindowEngine has no optimizer state")
+    }
+
+    fn set_state(&mut self, _m: Vec<Vec<f32>>, _v: Vec<Vec<f32>>) -> Result<()> {
+        bail!("WindowEngine has no optimizer state")
+    }
+}
+
+/// Full-context forward over `tokens` (length ≤ ctx): logits for every
+/// position, row-major `[tokens.len() * vocab]`.
+pub fn forward_full(model: &Model, tokens: &[i32]) -> Result<Vec<f32>> {
+    let m = &model.manifest;
+    let w = &model.weights;
+    let d = m.dim;
+    let vocab = m.vocab;
+    let n = tokens.len();
+    if n == 0 || n > m.ctx {
+        bail!("window length {n} must be in 1..={}", m.ctx);
+    }
+    for &t in tokens {
+        if t < 0 || t as usize >= vocab {
+            bail!("token {t} out of vocab {vocab}");
+        }
+    }
+
+    // Embedding + learned position.
+    let mut x = vec![0.0f32; n * d];
+    for (p, &tok) in tokens.iter().enumerate() {
+        let te = &w.tok_emb[tok as usize * d..(tok as usize + 1) * d];
+        let pe = &w.pos_emb[p * d..(p + 1) * d];
+        for i in 0..d {
+            x[p * d + i] = te[i] + pe[i];
+        }
+    }
+
+    let mut h = vec![0.0f32; n * d];
+    let mut y = vec![0.0f32; n * d];
+    let zeros = vec![0.0f32; d];
+
+    for (l, spec) in m.layers.iter().enumerate() {
+        let lw = &w.layers[l];
+        let heads = spec.heads;
+        let hd = d / heads;
+
+        // H = LN1(X), row-wise.
+        for p in 0..n {
+            layer_norm(&x[p * d..(p + 1) * d], &lw.ln1_g, &lw.ln1_b, &mut h[p * d..(p + 1) * d]);
+        }
+
+        // Y = mixer(H) with explicit t − s / causal-attention indexing.
+        let mw = &lw.mixer;
+        match spec.kind.as_str() {
+            "ab" => {
+                for p in 0..n {
+                    for hix in 0..heads {
+                        let s = spec.shifts[hix.min(spec.shifts.len() - 1)];
+                        let prev = if p >= s { &h[(p - s) * d..(p - s + 1) * d] } else { &zeros[..] };
+                        let (a, b) = (mw.mix_a[hix], mw.mix_b[hix]);
+                        for c in hix * hd..(hix + 1) * hd {
+                            y[p * d + c] = a * h[p * d + c] + b * prev[c];
+                        }
+                    }
+                }
+            }
+            "vec" => {
+                let s = spec.shifts[0];
+                for p in 0..n {
+                    let prev = if p >= s { &h[(p - s) * d..(p - s + 1) * d] } else { &zeros[..] };
+                    for c in 0..d {
+                        y[p * d + c] = mw.mix_a[c] * h[p * d + c] + mw.mix_b[c] * prev[c];
+                    }
+                }
+            }
+            "mat" => {
+                let s = spec.shifts[0];
+                let mut tmp = vec![0.0f32; d];
+                for p in 0..n {
+                    let (hp, yp) = (&h[p * d..(p + 1) * d], &mut y[p * d..(p + 1) * d]);
+                    let prev = if p >= s { &h[(p - s) * d..(p - s + 1) * d] } else { &zeros[..] };
+                    matvec(hp, &mw.mix_mat_a, d, yp);
+                    matvec(prev, &mw.mix_mat_b, d, &mut tmp);
+                    add_assign(yp, &tmp);
+                    add_assign(yp, &mw.mix_bias);
+                }
+            }
+            "gate1" => {
+                let s = spec.shifts[0];
+                let mut g1 = vec![0.0f32; d];
+                let mut gate = vec![0.0f32; d];
+                for p in 0..n {
+                    let hp = &h[p * d..(p + 1) * d];
+                    let prev = if p >= s { &h[(p - s) * d..(p - s + 1) * d] } else { &zeros[..] };
+                    matvec(hp, &mw.gate_w1, d, &mut g1);
+                    add_assign(&mut g1, &mw.gate_b1);
+                    relu_inplace(&mut g1);
+                    matvec(&g1, &mw.gate_w2, d, &mut gate);
+                    add_assign(&mut gate, &mw.gate_b2);
+                    tanh_inplace(&mut gate);
+                    for c in 0..d {
+                        y[p * d + c] = gate[c] * hp[c] + (1.0 - gate[c]) * prev[c];
+                    }
+                }
+            }
+            "gate2" => {
+                let s = spec.shifts[0];
+                let mut cat = vec![0.0f32; 2 * hd];
+                let mut gate = vec![0.0f32; hd];
+                for p in 0..n {
+                    let hp = &h[p * d..(p + 1) * d];
+                    let prev = if p >= s { &h[(p - s) * d..(p - s + 1) * d] } else { &zeros[..] };
+                    for hix in 0..heads {
+                        cat[..hd].copy_from_slice(&hp[hix * hd..(hix + 1) * hd]);
+                        cat[hd..].copy_from_slice(&prev[hix * hd..(hix + 1) * hd]);
+                        let wg = &mw.gate_w[hix * 2 * hd * hd..(hix + 1) * 2 * hd * hd];
+                        matvec(&cat, wg, hd, &mut gate);
+                        add_assign(&mut gate, &mw.gate_b[hix * hd..(hix + 1) * hd]);
+                        tanh_inplace(&mut gate);
+                        for c in 0..hd {
+                            let gc = hix * hd + c;
+                            y[p * d + gc] = gate[c] * hp[gc] + (1.0 - gate[c]) * prev[gc];
+                        }
+                    }
+                }
+            }
+            "fusion" => {
+                let s = spec.shifts[0];
+                let mut cat = vec![0.0f32; 2 * hd];
+                let mut mid = vec![0.0f32; hd];
+                let mut out = vec![0.0f32; hd];
+                for p in 0..n {
+                    let hp = &h[p * d..(p + 1) * d];
+                    let prev = if p >= s { &h[(p - s) * d..(p - s + 1) * d] } else { &zeros[..] };
+                    for hix in 0..heads {
+                        cat[..hd].copy_from_slice(&hp[hix * hd..(hix + 1) * hd]);
+                        cat[hd..].copy_from_slice(&prev[hix * hd..(hix + 1) * hd]);
+                        let w1 = &mw.fuse_w1[hix * 2 * hd * hd..(hix + 1) * 2 * hd * hd];
+                        matvec(&cat, w1, hd, &mut mid);
+                        add_assign(&mut mid, &mw.fuse_b1[hix * hd..(hix + 1) * hd]);
+                        relu_inplace(&mut mid);
+                        let w2 = &mw.fuse_w2[hix * hd * hd..(hix + 1) * hd * hd];
+                        matvec(&mid, w2, hd, &mut out);
+                        add_assign(&mut out, &mw.fuse_b2[hix * hd..(hix + 1) * hd]);
+                        y[p * d + hix * hd..p * d + (hix + 1) * hd].copy_from_slice(&out);
+                    }
+                }
+            }
+            "attn" => {
+                // Project q/k/v for every position, then causal softmax
+                // attention per head (op order matches engine.rs exactly).
+                let mut q = vec![0.0f32; n * d];
+                let mut kk = vec![0.0f32; n * d];
+                let mut vv = vec![0.0f32; n * d];
+                for p in 0..n {
+                    let hp = &h[p * d..(p + 1) * d];
+                    let qp = &mut q[p * d..(p + 1) * d];
+                    matvec(hp, &mw.wq, d, qp);
+                    add_assign(qp, &mw.bq);
+                    let kp = &mut kk[p * d..(p + 1) * d];
+                    matvec(hp, &mw.wk, d, kp);
+                    add_assign(kp, &mw.bk);
+                    let vp = &mut vv[p * d..(p + 1) * d];
+                    matvec(hp, &mw.wv, d, vp);
+                    add_assign(vp, &mw.bv);
+                }
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut o = vec![0.0f32; d];
+                let mut scores = vec![0.0f32; n];
+                for p in 0..n {
+                    let t = p + 1; // causal: attend to positions 0..=p
+                    o.fill(0.0);
+                    for hix in 0..heads {
+                        let r = hix * hd..(hix + 1) * hd;
+                        for j in 0..t {
+                            let kj = &kk[j * d..(j + 1) * d];
+                            let mut dot = 0.0;
+                            for c in r.clone() {
+                                dot += q[p * d + c] * kj[c];
+                            }
+                            scores[j] = dot * scale;
+                        }
+                        softmax_inplace(&mut scores[..t]);
+                        for j in 0..t {
+                            let vj = &vv[j * d..(j + 1) * d];
+                            let pj = scores[j];
+                            for c in r.clone() {
+                                o[c] += pj * vj[c];
+                            }
+                        }
+                    }
+                    let yp = &mut y[p * d..(p + 1) * d];
+                    matvec(&o, &mw.wo, d, yp);
+                    add_assign(yp, &mw.bo);
+                }
+            }
+            other => bail!("layer {l}: unknown mixer kind {other:?}"),
+        }
+
+        // X += Y, then the FFN block row-wise.
+        let mut f2 = vec![0.0f32; d];
+        let mut f1 = vec![0.0f32; spec.ffn];
+        for p in 0..n {
+            let xp = &mut x[p * d..(p + 1) * d];
+            add_assign(xp, &y[p * d..(p + 1) * d]);
+            layer_norm(xp, &lw.ln2_g, &lw.ln2_b, &mut f2);
+            matvec(&f2, &lw.ffn_w1, spec.ffn, &mut f1);
+            add_assign(&mut f1, &lw.ffn_b1);
+            relu_inplace(&mut f1);
+            matvec(&f1, &lw.ffn_w2, d, &mut f2);
+            add_assign(&mut f2, &lw.ffn_b2);
+            add_assign(xp, &f2);
+        }
+    }
+
+    // Final LN + tied-embedding projection per row.
+    let mut logits = vec![0.0f32; n * vocab];
+    let mut hf = vec![0.0f32; d];
+    for p in 0..n {
+        layer_norm(&x[p * d..(p + 1) * d], &w.lnf_g, &w.lnf_b, &mut hf);
+        matvec_t(&hf, &w.tok_emb, vocab, &mut logits[p * vocab..(p + 1) * vocab]);
+    }
+    Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{test_manifest, MockEngine};
+    use crate::infer::{Decoder, ModelWeights};
+
+    fn model() -> Arc<Model> {
+        let m = test_manifest("hsm_ab", 2, 16, 300);
+        let mut mock = MockEngine::new(m.clone(), 1.8, 0.01);
+        mock.init(0).unwrap();
+        let mut params = mock.get_params().unwrap();
+        for (ti, t) in params.iter_mut().enumerate() {
+            for (i, x) in t.iter_mut().enumerate() {
+                *x += 0.04 * (((i * 13 + ti * 5) % 23) as f32 - 11.0) / 11.0;
+            }
+        }
+        Model::shared(m.clone(), ModelWeights::from_flat(&m, &params).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn full_forward_matches_incremental_bitwise() {
+        let md = model();
+        let toks = [3i32, 7, 1, 9, 2, 5];
+        let full = forward_full(&md, &toks).unwrap();
+        let mut session = md.session();
+        let vocab = md.manifest.vocab;
+        for (p, &t) in toks.iter().enumerate() {
+            let inc = session.step(t as u32).unwrap();
+            assert_eq!(
+                inc,
+                &full[p * vocab..(p + 1) * vocab],
+                "row {p} differs between full and incremental forward"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_enforces_the_artifact_contract() {
+        let md = model();
+        let mut eng = WindowEngine::new(md);
+        assert!(eng.decode(&[1, 2, 3]).is_err(), "must require exactly ctx tokens");
+        let ok: Vec<i32> = (0..16).collect();
+        assert_eq!(eng.decode(&ok).unwrap().len(), 16 * 300);
+        let bad: Vec<i32> = vec![900; 16];
+        assert!(eng.decode(&bad).is_err(), "out-of-vocab token must fail");
+        assert!(eng.train_step(0, &Batch { x: vec![], y: vec![], batch: 0, ctx: 0 }).is_err());
+    }
+}

@@ -14,21 +14,82 @@
 //! * **L2** — the JAX decoder with all twelve mixer variants in
 //!   `python/compile/model.py`, AOT-lowered to HLO text artifacts.
 //! * **L3** — this crate: tokenizer, corpus, data pipeline, the PJRT
-//!   runtime that executes the artifacts, the training coordinator,
-//!   generation, and the experiment/report drivers that regenerate every
-//!   table and figure of the paper.
+//!   runtime that executes the artifacts (feature `pjrt`, on by
+//!   default), the training coordinator, the native serving stack, and
+//!   the experiment/report drivers that regenerate every table and
+//!   figure of the paper.
 //!
 //! Python never runs on the training or inference path: `make artifacts`
 //! lowers the model once, and the `hsm` binary is self-contained
 //! afterwards.
 //!
-//! ## Quick start
+//! ## Module map
+//!
+//! | module        | role                                                        |
+//! |---------------|-------------------------------------------------------------|
+//! | [`config`]    | manifests, presets, variant registry, synthetic manifests   |
+//! | [`tokenizer`] | byte-level BPE (train / encode / decode / (de)serialize)    |
+//! | [`corpus`]    | TinyStories-like synthetic corpus                           |
+//! | [`data`]      | window datasets + epoch shuffling                           |
+//! | [`runtime`]   | [`StepEngine`] trait; `PjrtEngine` behind feature `pjrt`    |
+//! | [`coordinator`] | training loops, `MockEngine`, experiment scheduler        |
+//! | [`infer`]     | **serving**: [`infer::Decoder`] trait, shared-weight [`infer::Model`], per-user [`infer::DecodeSession`]s, [`infer::NativeDecoder`], full-context [`infer::WindowEngine`] |
+//! | [`generation`] | sampling + [`generation::generate`] / [`generation::generate_batch`] over any [`infer::Decoder`]; [`generation::WindowDecoder`] |
+//! | [`checkpoint`] | tensor (de)serialization                                   |
+//! | [`report`]    | Table 1/2/3, Figures 7/8 drivers                            |
+//! | [`metrics`]   | csv/markdown/stats helpers                                  |
+//!
+//! ## Generation = prefill + step
+//!
+//! All generation drives the [`infer::Decoder`] trait: `prefill` the
+//! prompt (no logit projection needed), then one `step` per sampled
+//! token.  The native implementation keeps **O(1) state per HSM layer**
+//! (a ring buffer at the layer's shift) so per-token cost is flat in
+//! position — the paper's linearity claim, turned into the serving
+//! architecture.  Weights live in an `Arc`-shared [`infer::Model`];
+//! every concurrent user costs only a [`infer::DecodeSession`] (rings +
+//! scratch), and [`generation::generate_batch`] round-robins any number
+//! of sessions over one weight set.
+//!
+//! ## Quick start (no artifacts needed)
+//!
+//! ```no_run
+//! use hsm::config::{LayerInfo, Manifest};
+//! use hsm::generation::{generate_batch, SampleCfg};
+//! use hsm::infer::{weights, Model, ModelWeights};
+//! use hsm::tokenizer::trainer as bpe;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // A two-layer HSM (a,b) model with doubling shifts, built in memory.
+//! let layers = vec![
+//!     LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 64 },
+//!     LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 64 },
+//! ];
+//! let text = hsm::corpus::generate(1234, 500);
+//! let tok = bpe::train(&text, 300)?;
+//! let m = Manifest::synthetic("hsm_ab", layers, 32, 128, tok.vocab_size(), 1);
+//! let flat = weights::seeded_flat(&m, 42);
+//! let model = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat)?)?;
+//!
+//! // Three users, one weight set: a session each, decoded round-robin.
+//! let mut sessions = vec![model.session(), model.session(), model.session()];
+//! let prompts = ["Once upon a time", "Lily likes cats", "Jack went to"];
+//! let cfg = SampleCfg { max_new_tokens: 16, ..Default::default() };
+//! for g in generate_batch(&mut sessions, &tok, &prompts, &cfg)? {
+//!     println!("{} → {}", g.prompt, g.completion);
+//! }
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! With artifacts (`make artifacts`), the same loop runs against trained
+//! PJRT weights:
 //!
 //! ```bash
 //! make artifacts                # python → artifacts/<preset>/<variant>/*
-//! cargo run --release -- train --preset ci --variant hsm_ab --steps 200
+//! cargo run --release -- train --preset ci --variant hsm_ab --max-steps 200
 //! cargo run --release -- generate --preset ci --variant hsm_ab \
-//!     --prompt "Once upon a time"
+//!     --engine native --samples 4 --prompt "Once upon a time"
 //! cargo run --release -- report table1 --preset ci
 //! ```
 
@@ -48,5 +109,8 @@ pub mod util;
 pub use config::{Manifest, TrainHp};
 pub use coordinator::{TrainOutcome, Trainer, TrainerOptions};
 pub use data::{Batch, Dataset};
-pub use runtime::{PjrtEngine, StepEngine};
+pub use infer::{Decoder, DecodeSession, Model, NativeDecoder};
+#[cfg(feature = "pjrt")]
+pub use runtime::PjrtEngine;
+pub use runtime::StepEngine;
 pub use tokenizer::Tokenizer;

@@ -22,6 +22,7 @@ use hsm::config::{artifacts_root, Manifest, TABLE1_VARIANTS, VARIANTS};
 use hsm::coordinator::{Trainer, TrainerOptions};
 use hsm::corpus;
 use hsm::generation::{self, SampleCfg};
+use hsm::infer::{Model, ModelWeights};
 use hsm::report::{self, ExperimentCtx, PjrtFactory, FIG7_VARIANTS};
 use hsm::runtime::{PjrtEngine, StepEngine};
 use hsm::tokenizer::{trainer as tok_trainer, Tokenizer};
@@ -177,6 +178,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .required("variant", "model variant")
         .optional("checkpoint", "trained checkpoint (default: fresh init)")
         .flag("prompt", "Once upon a time", "prompt text")
+        .flag("engine", "native", "decode path: native (incremental, O(1)/token for HSM) | window (full-context artifact)")
         .flag("temperature", "0.8", "sampling temperature (0 = greedy)")
         .flag("top-k", "40", "top-k filter (0 = off)")
         .flag("max-new-tokens", "64", "maximum tokens to generate")
@@ -188,15 +190,35 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         load_engine_with_checkpoint(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
     let (tok, _, _) = report::build_data(&ctx, engine.manifest())?;
     let samples = a.usize("samples").map_err(|e| anyhow!(e))?;
-    for i in 0..samples {
-        let cfg = SampleCfg {
-            temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
-            top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
-            max_new_tokens: a.usize("max-new-tokens").map_err(|e| anyhow!(e))?,
-            seed: ctx.train_seed ^ i as u64,
-            stop_at_eot: true,
-        };
-        let g = generation::generate(&mut engine, &tok, &a.str("prompt"), &cfg)?;
+    let prompt = a.str("prompt");
+    let cfg = SampleCfg {
+        temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
+        top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
+        max_new_tokens: a.usize("max-new-tokens").map_err(|e| anyhow!(e))?,
+        seed: ctx.train_seed,
+        stop_at_eot: true,
+    };
+    let gens = match a.str("engine").as_str() {
+        "native" => {
+            // Serving path: extract the weights once, share them across
+            // `samples` concurrent sessions, decode round-robin.  Each
+            // session samples from stream seed ^ i (same as sequential).
+            let manifest = engine.manifest().clone();
+            let weights = ModelWeights::from_flat(&manifest, &engine.get_params()?)?;
+            let model = Model::shared(manifest, weights)?;
+            let mut sessions: Vec<_> = (0..samples).map(|_| model.session()).collect();
+            let prompts: Vec<&str> = (0..samples).map(|_| prompt.as_str()).collect();
+            generation::generate_batch(&mut sessions, &tok, &prompts, &cfg)?
+        }
+        "window" => (0..samples)
+            .map(|i| {
+                let cfg_i = SampleCfg { seed: cfg.seed ^ i as u64, ..cfg.clone() };
+                generation::generate_windowed(&mut engine, &tok, &prompt, &cfg_i)
+            })
+            .collect::<Result<Vec<_>>>()?,
+        other => bail!("unknown --engine {other:?} (expected native or window)"),
+    };
+    for (i, g) in gens.iter().enumerate() {
         println!("--- sample {i} ({} tokens) ---", g.tokens_generated);
         println!("{}{}", g.prompt, g.completion);
     }

@@ -17,13 +17,18 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::{artifacts_root, Manifest};
+#[cfg(feature = "pjrt")]
+use crate::config::artifacts_root;
+use crate::config::Manifest;
 use crate::coordinator::{Trainer, TrainerOptions, TrainOutcome};
 use crate::corpus;
 use crate::data::Dataset;
 use crate::generation::{self, SampleCfg, TABLE3_PROMPTS};
+use crate::infer::{Model, ModelWeights};
 use crate::metrics;
-use crate::runtime::{PjrtEngine, StepEngine};
+#[cfg(feature = "pjrt")]
+use crate::runtime::PjrtEngine;
+use crate::runtime::StepEngine;
 use crate::tokenizer::{trainer as tok_trainer, Tokenizer};
 
 /// Creates engines per variant — PJRT in production, mock in tests.
@@ -32,17 +37,20 @@ pub trait EngineFactory {
 }
 
 /// Production factory: loads `artifacts/<preset>/<variant>/`.
+#[cfg(feature = "pjrt")]
 pub struct PjrtFactory {
     pub root: PathBuf,
     pub preset: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtFactory {
     pub fn new(preset: &str) -> Self {
         PjrtFactory { root: artifacts_root(), preset: preset.to_string() }
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl EngineFactory for PjrtFactory {
     fn create(&self, variant: &str) -> Result<Box<dyn StepEngine>> {
         let manifest = Manifest::load_variant(&self.root, &self.preset, variant)?;
@@ -291,6 +299,55 @@ pub fn run_table2(factory: &dyn EngineFactory, ctx: &ExperimentCtx) -> Result<St
 // Table 3
 // ---------------------------------------------------------------------------
 
+/// Greedy Table-3 completions for one trained engine.
+///
+/// Serving-path wiring: pull the weights out of the engine once, build a
+/// shared native [`Model`], and decode every prompt incrementally — O(1)
+/// state per token for pure-HSM stacks instead of a full-context
+/// `decode` artifact pass per token.  Engines that cannot export flat
+/// parameters (or whose manifest the native engine rejects) fall back to
+/// windowed decoding through their own `decode`.
+///
+/// Prompts longer than the context window are truncated from the left
+/// (keep the suffix — it determines the continuation).
+fn table3_completions(
+    engine: &mut dyn StepEngine,
+    tok: &Tokenizer,
+    max_new_tokens: usize,
+) -> Result<Vec<String>> {
+    let cfg = SampleCfg { temperature: 0.0, top_k: 0, max_new_tokens, seed: 0, stop_at_eot: true };
+    let manifest = engine.manifest().clone();
+    let ctx_len = manifest.ctx;
+    let native = engine
+        .get_params()
+        .ok()
+        .and_then(|flat| ModelWeights::from_flat(&manifest, &flat).ok())
+        .and_then(|w| Model::shared(manifest, w).ok());
+
+    let mut native_dec;
+    let mut window_dec;
+    let dec: &mut dyn crate::infer::Decoder = match native {
+        Some(model) => {
+            native_dec = model.session();
+            &mut native_dec
+        }
+        None => {
+            window_dec = generation::WindowDecoder::new(engine, tok.eot);
+            &mut window_dec
+        }
+    };
+
+    let mut cells = Vec::with_capacity(TABLE3_PROMPTS.len());
+    for prompt in TABLE3_PROMPTS {
+        let g = generation::generate(&mut *dec, tok, prompt, &cfg).or_else(|_| {
+            let short = truncate_prompt(prompt, tok, ctx_len);
+            generation::generate(&mut *dec, tok, &short, &cfg)
+        })?;
+        cells.push(g.completion.replace('\n', " "));
+    }
+    Ok(cells)
+}
+
 /// Table 3: greedy completions of the 11 qualitative prompts, one column
 /// per variant, plus a mechanical coherence proxy (see DESIGN.md §6 on why
 /// the paper's human color-coding is replaced by a heuristic).
@@ -304,24 +361,7 @@ pub fn run_table3(
     for v in variants {
         let (mut engine, _) = train_variant(factory, ctx, v)?;
         let (tok, _, _) = build_data(ctx, engine.manifest())?;
-        let cfg = SampleCfg {
-            temperature: 0.0,
-            top_k: 0,
-            max_new_tokens,
-            seed: 0,
-            stop_at_eot: true,
-        };
-        let mut cells = Vec::new();
-        for prompt in TABLE3_PROMPTS {
-            // Prompts longer than the context window are truncated from the
-            // left (keep the suffix — it determines the continuation).
-            let g = generation::generate(engine.as_mut(), &tok, prompt, &cfg)
-                .or_else(|_| {
-                    let short: String = truncate_prompt(prompt, &tok, engine.manifest().ctx);
-                    generation::generate(engine.as_mut(), &tok, &short, &cfg)
-                })?;
-            cells.push(g.completion.replace('\n', " "));
-        }
+        let cells = table3_completions(engine.as_mut(), &tok, max_new_tokens)?;
         columns.push((v.to_string(), cells));
     }
     let mut header = vec!["Prompt".to_string()];
@@ -431,23 +471,10 @@ pub fn run_all(
             table2_md = table2_markdown(engine.as_ref())?;
         }
 
-        // Table 3 column: greedy completions of the 11 prompts.
+        // Table 3 column: greedy completions of the 11 prompts, through
+        // the native incremental decoder (windowed fallback).
         let (tok, _, _) = build_data(ctx, engine.manifest())?;
-        let cfg = SampleCfg {
-            temperature: 0.0,
-            top_k: 0,
-            max_new_tokens: table3_tokens,
-            seed: 0,
-            stop_at_eot: true,
-        };
-        let mut cells = Vec::new();
-        for prompt in TABLE3_PROMPTS {
-            let g = generation::generate(engine.as_mut(), &tok, prompt, &cfg).or_else(|_| {
-                let short = truncate_prompt(prompt, &tok, engine.manifest().ctx);
-                generation::generate(engine.as_mut(), &tok, &short, &cfg)
-            })?;
-            cells.push(g.completion.replace('\n', " "));
-        }
+        let cells = table3_completions(engine.as_mut(), &tok, table3_tokens)?;
         table3_cols.push((v.to_string(), cells));
         outcomes.push(outcome);
     }

@@ -1,11 +1,15 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//! Execution surface + PJRT runtime (feature `pjrt`).
 //!
-//! This is the only module that touches the `xla` crate.  It compiles the
-//! four artifacts of a (preset, variant) pair on the PJRT CPU client and
-//! drives them with flat positional argument lists, exactly mirroring the
-//! manifest order (see `python/compile/steps.py`).
+//! The [`StepEngine`] trait abstracts artifact execution so the
+//! coordinator, scheduler, generation and report drivers are testable
+//! without artifacts (see `MockEngine` in `coordinator`, and the
+//! artifact-free [`crate::infer::WindowEngine`]).  The trait and its
+//! metrics type are always compiled; the PJRT-backed implementation
+//! below needs the `xla` crate and is gated behind the default `pjrt`
+//! feature — `--no-default-features` builds (Mock + native inference)
+//! never touch it.
 //!
-//! ### State placement — and a load-bearing leak workaround
+//! ### PJRT state placement — and a load-bearing leak workaround
 //!
 //! Inputs are passed as **device-resident [`xla::PjRtBuffer`]s via
 //! `execute_b`**, never as literals via `execute`: xla_extension 0.5.1's
@@ -21,15 +25,8 @@
 //! EXPERIMENTS.md §Perf).  On a modern PJRT one would lower untupled and
 //! donate input buffers; called out as the first TPU-port task in
 //! DESIGN.md §8.
-//!
-//! A [`StepEngine`] trait abstracts the execution surface so the
-//! coordinator, scheduler and report drivers are testable without
-//! artifacts (see `MockEngine` in `coordinator`).
 
-use std::path::Path;
-
-use anyhow::{anyhow, bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::Result;
 
 use crate::config::Manifest;
 use crate::data::Batch;
@@ -42,7 +39,8 @@ pub struct StepMetrics {
 }
 
 /// Execution surface the coordinator drives.  Implemented by
-/// [`PjrtEngine`] (real PJRT) and by `MockEngine` (tests).
+/// [`PjrtEngine`] (real PJRT, feature `pjrt`), by `MockEngine` (tests)
+/// and by [`crate::infer::WindowEngine`] (native decode-only).
 pub trait StepEngine {
     fn manifest(&self) -> &Manifest;
 
@@ -73,294 +71,310 @@ pub trait StepEngine {
     fn set_state(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) -> Result<()>;
 }
 
-/// A device buffer paired with the host literal it was uploaded from.
-///
-/// `buffer_from_host_literal` copies **asynchronously** on a worker
-/// thread; dropping the source literal before the copy completes is a
-/// use-after-free (observed as a SIGSEGV inside
-/// `AbstractTfrtCpuBuffer::CopyFromLiteral`).  Holding the literal for
-/// the buffer's whole lifetime makes the pair safe without needing a
-/// synchronization point after every upload.
-struct Held {
-    /// Keep-alive for the async host→device copy.  Never read back.
-    _lit: Literal,
-    buf: PjRtBuffer,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtEngine;
 
-/// Real PJRT-backed engine.
-pub struct PjrtEngine {
-    manifest: Manifest,
-    client: PjRtClient,
-    exe_init: PjRtLoadedExecutable,
-    exe_train: Option<PjRtLoadedExecutable>,
-    exe_eval: Option<PjRtLoadedExecutable>,
-    exe_decode: Option<PjRtLoadedExecutable>,
-    /// Device-resident state (+ keep-alive host copies), manifest order.
-    params: Vec<Held>,
-    m: Vec<Held>,
-    v: Vec<Held>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::path::Path;
 
-fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
-    let proto = HloModuleProto::from_text_file(path)
-        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
-    client
-        .compile(&XlaComputation::from_proto(&proto))
-        .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
-}
+    use anyhow::{anyhow, bail, Context, Result};
+    use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-impl PjrtEngine {
-    /// Compile the artifacts for `manifest` on a fresh CPU client.
+    use super::{StepEngine, StepMetrics};
+    use crate::config::Manifest;
+    use crate::data::Batch;
+
+    /// A device buffer paired with the host literal it was uploaded from.
     ///
-    /// `init` compiles eagerly; `train_step`/`eval_step`/`decode` compile
-    /// lazily on first use (decode-only sessions never pay for the
-    /// training executable).
-    pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
-        let exe_init = compile(&client, &manifest.artifact("init"))?;
-        Ok(PjrtEngine {
-            manifest,
-            client,
-            exe_init,
-            exe_train: None,
-            exe_eval: None,
-            exe_decode: None,
-            params: Vec::new(),
-            m: Vec::new(),
-            v: Vec::new(),
-        })
+    /// `buffer_from_host_literal` copies **asynchronously** on a worker
+    /// thread; dropping the source literal before the copy completes is a
+    /// use-after-free (observed as a SIGSEGV inside
+    /// `AbstractTfrtCpuBuffer::CopyFromLiteral`).  Holding the literal for
+    /// the buffer's whole lifetime makes the pair safe without needing a
+    /// synchronization point after every upload.
+    struct Held {
+        /// Keep-alive for the async host→device copy.  Never read back.
+        _lit: Literal,
+        buf: PjRtBuffer,
     }
 
-    fn n(&self) -> usize {
-        self.manifest.params.len()
+    /// Real PJRT-backed engine.
+    pub struct PjrtEngine {
+        manifest: Manifest,
+        client: PjRtClient,
+        exe_init: PjRtLoadedExecutable,
+        exe_train: Option<PjRtLoadedExecutable>,
+        exe_eval: Option<PjRtLoadedExecutable>,
+        exe_decode: Option<PjRtLoadedExecutable>,
+        /// Device-resident state (+ keep-alive host copies), manifest order.
+        params: Vec<Held>,
+        m: Vec<Held>,
+        v: Vec<Held>,
     }
 
-    fn check_initialized(&self) -> Result<()> {
-        if self.params.len() != self.n() {
-            bail!("engine not initialized — call init() or set_params() first");
-        }
-        Ok(())
+    fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        client
+            .compile(&XlaComputation::from_proto(&proto))
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
     }
 
-    /// Upload one literal as a rust-owned device buffer, keeping the
-    /// literal alive for the buffer's lifetime (leak-safe AND
-    /// async-copy-safe; see [`Held`] and the module docs).
-    fn upload(&self, lit: Literal) -> Result<Held> {
-        let buf = self
-            .client
-            .buffer_from_host_literal(None, &lit)
-            .map_err(|e| anyhow!("buffer upload: {e}"))?;
-        Ok(Held { _lit: lit, buf })
-    }
-
-    fn zeros_like_params(&self) -> Result<Vec<Held>> {
-        self.manifest
-            .params
-            .iter()
-            .map(|p| {
-                let lit = Literal::create_from_shape(xla::PrimitiveType::F32, &p.shape);
-                self.upload(lit)
+    impl PjrtEngine {
+        /// Compile the artifacts for `manifest` on a fresh CPU client.
+        ///
+        /// `init` compiles eagerly; `train_step`/`eval_step`/`decode` compile
+        /// lazily on first use (decode-only sessions never pay for the
+        /// training executable).
+        pub fn new(manifest: Manifest) -> Result<Self> {
+            let client = PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+            let exe_init = compile(&client, &manifest.artifact("init"))?;
+            Ok(PjrtEngine {
+                manifest,
+                client,
+                exe_init,
+                exe_train: None,
+                exe_eval: None,
+                exe_decode: None,
+                params: Vec::new(),
+                m: Vec::new(),
+                v: Vec::new(),
             })
-            .collect()
-    }
-
-    fn batch_buffers(&self, batch: &Batch) -> Result<(Held, Held)> {
-        let dims = [batch.batch as i64, batch.ctx as i64];
-        let x = Literal::vec1(&batch.x)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshaping batch x: {e}"))?;
-        let y = Literal::vec1(&batch.y)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshaping batch y: {e}"))?;
-        Ok((self.upload(x)?, self.upload(y)?))
-    }
-
-    /// Execute via the buffer path and decompose the single tuple result
-    /// into per-output literals.
-    fn run(exe: &PjRtLoadedExecutable, inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
-        let out = exe
-            .execute_b::<&PjRtBuffer>(inputs)
-            .map_err(|e| anyhow!("execute_b: {e}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("download result: {e}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("decompose tuple: {e}"))
-    }
-
-    /// Re-upload a decomposed result list as device-resident state.
-    fn upload_all(&self, lits: Vec<Literal>) -> Result<Vec<Held>> {
-        lits.into_iter().map(|l| self.upload(l)).collect()
-    }
-
-    fn literal_to_f32s(lit: &Literal) -> Result<Vec<f32>> {
-        lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
-    }
-
-    fn buffer_to_f32s(buf: &PjRtBuffer) -> Result<Vec<f32>> {
-        let lit = buf
-            .to_literal_sync()
-            .map_err(|e| anyhow!("buffer download: {e}"))?;
-        Self::literal_to_f32s(&lit)
-    }
-
-    fn f32s_to_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
-        let n: usize = shape.iter().product::<usize>().max(1);
-        if data.len() != n {
-            bail!("shape {:?} expects {n} elems, got {}", shape, data.len());
         }
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        Literal::vec1(data)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape: {e}"))
-    }
-}
 
-impl StepEngine for PjrtEngine {
-    fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
+        fn n(&self) -> usize {
+            self.manifest.params.len()
+        }
 
-    fn init(&mut self, seed: u32) -> Result<()> {
-        let seed_buf = self.upload(Literal::scalar(seed))?;
-        let params = Self::run(&self.exe_init, &[&seed_buf.buf]).context("running init artifact")?;
-        if params.len() != self.n() {
-            bail!(
-                "init artifact returned {} tensors, manifest says {}",
-                params.len(),
-                self.n()
-            );
+        fn check_initialized(&self) -> Result<()> {
+            if self.params.len() != self.n() {
+                bail!("engine not initialized — call init() or set_params() first");
+            }
+            Ok(())
         }
-        self.params = self.upload_all(params)?;
-        self.m = self.zeros_like_params()?;
-        self.v = self.zeros_like_params()?;
-        Ok(())
-    }
 
-    fn train_step(&mut self, step: i32, batch: &Batch) -> Result<StepMetrics> {
-        self.check_initialized()?;
-        if batch.batch != self.manifest.train.batch || batch.ctx != self.manifest.ctx {
-            bail!(
-                "batch [{}, {}] does not match artifact [{}, {}]",
-                batch.batch,
-                batch.ctx,
-                self.manifest.train.batch,
-                self.manifest.ctx
-            );
+        /// Upload one literal as a rust-owned device buffer, keeping the
+        /// literal alive for the buffer's lifetime (leak-safe AND
+        /// async-copy-safe; see [`Held`] and the module docs).
+        fn upload(&self, lit: Literal) -> Result<Held> {
+            let buf = self
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("buffer upload: {e}"))?;
+            Ok(Held { _lit: lit, buf })
         }
-        if self.exe_train.is_none() {
-            self.exe_train =
-                Some(compile(&self.client, &self.manifest.artifact("train_step"))?);
-        }
-        let (x, y) = self.batch_buffers(batch)?;
-        let step_buf = self.upload(Literal::scalar(step))?;
-        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(3 * self.n() + 3);
-        inputs.extend(self.params.iter().map(|h| &h.buf));
-        inputs.extend(self.m.iter().map(|h| &h.buf));
-        inputs.extend(self.v.iter().map(|h| &h.buf));
-        inputs.push(&step_buf.buf);
-        inputs.push(&x.buf);
-        inputs.push(&y.buf);
-        let mut out =
-            Self::run(self.exe_train.as_ref().unwrap(), &inputs).context("running train_step")?;
-        let expected = 3 * self.n() + 2;
-        if out.len() != expected {
-            bail!("train_step returned {} outputs, expected {expected}", out.len());
-        }
-        let acc = out.pop().unwrap().get_first_element::<f32>()?;
-        let loss = out.pop().unwrap().get_first_element::<f32>()?;
-        let v = out.split_off(2 * self.n());
-        let m = out.split_off(self.n());
-        self.params = self.upload_all(out)?;
-        self.m = self.upload_all(m)?;
-        self.v = self.upload_all(v)?;
-        Ok(StepMetrics { loss, acc })
-    }
 
-    fn eval_step(&mut self, batch: &Batch) -> Result<StepMetrics> {
-        self.check_initialized()?;
-        if self.exe_eval.is_none() {
-            self.exe_eval = Some(compile(&self.client, &self.manifest.artifact("eval_step"))?);
-        }
-        let (x, y) = self.batch_buffers(batch)?;
-        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.n() + 2);
-        inputs.extend(self.params.iter().map(|h| &h.buf));
-        inputs.push(&x.buf);
-        inputs.push(&y.buf);
-        let out =
-            Self::run(self.exe_eval.as_ref().unwrap(), &inputs).context("running eval_step")?;
-        if out.len() != 2 {
-            bail!("eval_step returned {} outputs, expected 2", out.len());
-        }
-        Ok(StepMetrics {
-            loss: out[0].get_first_element::<f32>()?,
-            acc: out[1].get_first_element::<f32>()?,
-        })
-    }
-
-    fn decode(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        self.check_initialized()?;
-        let ctx = self.manifest.ctx;
-        if tokens.len() != ctx {
-            bail!("decode expects exactly {ctx} tokens, got {}", tokens.len());
-        }
-        if self.exe_decode.is_none() {
-            self.exe_decode = Some(compile(&self.client, &self.manifest.artifact("decode"))?);
-        }
-        let toks = Literal::vec1(tokens)
-            .reshape(&[1, ctx as i64])
-            .map_err(|e| anyhow!("reshape tokens: {e}"))?;
-        let toks = self.upload(toks)?;
-        let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.n() + 1);
-        inputs.extend(self.params.iter().map(|h| &h.buf));
-        inputs.push(&toks.buf);
-        let out =
-            Self::run(self.exe_decode.as_ref().unwrap(), &inputs).context("running decode")?;
-        Self::literal_to_f32s(&out[0])
-    }
-
-    fn get_params(&self) -> Result<Vec<Vec<f32>>> {
-        self.check_initialized()?;
-        self.params.iter().map(|h| Self::buffer_to_f32s(&h.buf)).collect()
-    }
-
-    fn set_params(&mut self, params: Vec<Vec<f32>>) -> Result<()> {
-        if params.len() != self.n() {
-            bail!("expected {} tensors, got {}", self.n(), params.len());
-        }
-        let bufs: Result<Vec<Held>> = params
-            .iter()
-            .zip(&self.manifest.params)
-            .map(|(data, info)| self.upload(Self::f32s_to_literal(data, &info.shape)?))
-            .collect();
-        self.params = bufs?;
-        if self.m.len() != self.n() {
-            self.m = self.zeros_like_params()?;
-            self.v = self.zeros_like_params()?;
-        }
-        Ok(())
-    }
-
-    fn get_state(&self) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
-        self.check_initialized()?;
-        let m = self.m.iter().map(|h| Self::buffer_to_f32s(&h.buf)).collect::<Result<_>>()?;
-        let v = self.v.iter().map(|h| Self::buffer_to_f32s(&h.buf)).collect::<Result<_>>()?;
-        Ok((m, v))
-    }
-
-    fn set_state(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) -> Result<()> {
-        if m.len() != self.n() || v.len() != self.n() {
-            bail!("moment count mismatch");
-        }
-        fn mk(eng: &PjrtEngine, vecs: &[Vec<f32>]) -> Result<Vec<Held>> {
-            vecs.iter()
-                .zip(&eng.manifest.params)
-                .map(|(d, i)| eng.upload(PjrtEngine::f32s_to_literal(d, &i.shape)?))
+        fn zeros_like_params(&self) -> Result<Vec<Held>> {
+            self.manifest
+                .params
+                .iter()
+                .map(|p| {
+                    let lit = Literal::create_from_shape(xla::PrimitiveType::F32, &p.shape);
+                    self.upload(lit)
+                })
                 .collect()
         }
-        let new_m = mk(self, &m)?;
-        let new_v = mk(self, &v)?;
-        self.m = new_m;
-        self.v = new_v;
-        Ok(())
+
+        fn batch_buffers(&self, batch: &Batch) -> Result<(Held, Held)> {
+            let dims = [batch.batch as i64, batch.ctx as i64];
+            let x = Literal::vec1(&batch.x)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshaping batch x: {e}"))?;
+            let y = Literal::vec1(&batch.y)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshaping batch y: {e}"))?;
+            Ok((self.upload(x)?, self.upload(y)?))
+        }
+
+        /// Execute via the buffer path and decompose the single tuple result
+        /// into per-output literals.
+        fn run(exe: &PjRtLoadedExecutable, inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+            let out = exe
+                .execute_b::<&PjRtBuffer>(inputs)
+                .map_err(|e| anyhow!("execute_b: {e}"))?;
+            let lit = out[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("download result: {e}"))?;
+            lit.to_tuple().map_err(|e| anyhow!("decompose tuple: {e}"))
+        }
+
+        /// Re-upload a decomposed result list as device-resident state.
+        fn upload_all(&self, lits: Vec<Literal>) -> Result<Vec<Held>> {
+            lits.into_iter().map(|l| self.upload(l)).collect()
+        }
+
+        fn literal_to_f32s(lit: &Literal) -> Result<Vec<f32>> {
+            lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+        }
+
+        fn buffer_to_f32s(buf: &PjRtBuffer) -> Result<Vec<f32>> {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("buffer download: {e}"))?;
+            Self::literal_to_f32s(&lit)
+        }
+
+        fn f32s_to_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            if data.len() != n {
+                bail!("shape {:?} expects {n} elems, got {}", shape, data.len());
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e}"))
+        }
+    }
+
+    impl StepEngine for PjrtEngine {
+        fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        fn init(&mut self, seed: u32) -> Result<()> {
+            let seed_buf = self.upload(Literal::scalar(seed))?;
+            let params =
+                Self::run(&self.exe_init, &[&seed_buf.buf]).context("running init artifact")?;
+            if params.len() != self.n() {
+                bail!(
+                    "init artifact returned {} tensors, manifest says {}",
+                    params.len(),
+                    self.n()
+                );
+            }
+            self.params = self.upload_all(params)?;
+            self.m = self.zeros_like_params()?;
+            self.v = self.zeros_like_params()?;
+            Ok(())
+        }
+
+        fn train_step(&mut self, step: i32, batch: &Batch) -> Result<StepMetrics> {
+            self.check_initialized()?;
+            if batch.batch != self.manifest.train.batch || batch.ctx != self.manifest.ctx {
+                bail!(
+                    "batch [{}, {}] does not match artifact [{}, {}]",
+                    batch.batch,
+                    batch.ctx,
+                    self.manifest.train.batch,
+                    self.manifest.ctx
+                );
+            }
+            if self.exe_train.is_none() {
+                self.exe_train =
+                    Some(compile(&self.client, &self.manifest.artifact("train_step"))?);
+            }
+            let (x, y) = self.batch_buffers(batch)?;
+            let step_buf = self.upload(Literal::scalar(step))?;
+            let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(3 * self.n() + 3);
+            inputs.extend(self.params.iter().map(|h| &h.buf));
+            inputs.extend(self.m.iter().map(|h| &h.buf));
+            inputs.extend(self.v.iter().map(|h| &h.buf));
+            inputs.push(&step_buf.buf);
+            inputs.push(&x.buf);
+            inputs.push(&y.buf);
+            let mut out = Self::run(self.exe_train.as_ref().unwrap(), &inputs)
+                .context("running train_step")?;
+            let expected = 3 * self.n() + 2;
+            if out.len() != expected {
+                bail!("train_step returned {} outputs, expected {expected}", out.len());
+            }
+            let acc = out.pop().unwrap().get_first_element::<f32>()?;
+            let loss = out.pop().unwrap().get_first_element::<f32>()?;
+            let v = out.split_off(2 * self.n());
+            let m = out.split_off(self.n());
+            self.params = self.upload_all(out)?;
+            self.m = self.upload_all(m)?;
+            self.v = self.upload_all(v)?;
+            Ok(StepMetrics { loss, acc })
+        }
+
+        fn eval_step(&mut self, batch: &Batch) -> Result<StepMetrics> {
+            self.check_initialized()?;
+            if self.exe_eval.is_none() {
+                self.exe_eval = Some(compile(&self.client, &self.manifest.artifact("eval_step"))?);
+            }
+            let (x, y) = self.batch_buffers(batch)?;
+            let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.n() + 2);
+            inputs.extend(self.params.iter().map(|h| &h.buf));
+            inputs.push(&x.buf);
+            inputs.push(&y.buf);
+            let out =
+                Self::run(self.exe_eval.as_ref().unwrap(), &inputs).context("running eval_step")?;
+            if out.len() != 2 {
+                bail!("eval_step returned {} outputs, expected 2", out.len());
+            }
+            Ok(StepMetrics {
+                loss: out[0].get_first_element::<f32>()?,
+                acc: out[1].get_first_element::<f32>()?,
+            })
+        }
+
+        fn decode(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+            self.check_initialized()?;
+            let ctx = self.manifest.ctx;
+            if tokens.len() != ctx {
+                bail!("decode expects exactly {ctx} tokens, got {}", tokens.len());
+            }
+            if self.exe_decode.is_none() {
+                self.exe_decode = Some(compile(&self.client, &self.manifest.artifact("decode"))?);
+            }
+            let toks = Literal::vec1(tokens)
+                .reshape(&[1, ctx as i64])
+                .map_err(|e| anyhow!("reshape tokens: {e}"))?;
+            let toks = self.upload(toks)?;
+            let mut inputs: Vec<&PjRtBuffer> = Vec::with_capacity(self.n() + 1);
+            inputs.extend(self.params.iter().map(|h| &h.buf));
+            inputs.push(&toks.buf);
+            let out =
+                Self::run(self.exe_decode.as_ref().unwrap(), &inputs).context("running decode")?;
+            Self::literal_to_f32s(&out[0])
+        }
+
+        fn get_params(&self) -> Result<Vec<Vec<f32>>> {
+            self.check_initialized()?;
+            self.params.iter().map(|h| Self::buffer_to_f32s(&h.buf)).collect()
+        }
+
+        fn set_params(&mut self, params: Vec<Vec<f32>>) -> Result<()> {
+            if params.len() != self.n() {
+                bail!("expected {} tensors, got {}", self.n(), params.len());
+            }
+            let bufs: Result<Vec<Held>> = params
+                .iter()
+                .zip(&self.manifest.params)
+                .map(|(data, info)| self.upload(Self::f32s_to_literal(data, &info.shape)?))
+                .collect();
+            self.params = bufs?;
+            if self.m.len() != self.n() {
+                self.m = self.zeros_like_params()?;
+                self.v = self.zeros_like_params()?;
+            }
+            Ok(())
+        }
+
+        fn get_state(&self) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+            self.check_initialized()?;
+            let m = self.m.iter().map(|h| Self::buffer_to_f32s(&h.buf)).collect::<Result<_>>()?;
+            let v = self.v.iter().map(|h| Self::buffer_to_f32s(&h.buf)).collect::<Result<_>>()?;
+            Ok((m, v))
+        }
+
+        fn set_state(&mut self, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) -> Result<()> {
+            if m.len() != self.n() || v.len() != self.n() {
+                bail!("moment count mismatch");
+            }
+            fn mk(eng: &PjrtEngine, vecs: &[Vec<f32>]) -> Result<Vec<Held>> {
+                vecs.iter()
+                    .zip(&eng.manifest.params)
+                    .map(|(d, i)| eng.upload(PjrtEngine::f32s_to_literal(d, &i.shape)?))
+                    .collect()
+            }
+            let new_m = mk(self, &m)?;
+            let new_v = mk(self, &v)?;
+            self.m = new_m;
+            self.v = new_v;
+            Ok(())
+        }
     }
 }

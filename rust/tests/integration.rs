@@ -57,9 +57,36 @@ fn generation_over_trained_mock_is_deterministic_greedy() {
     let mut eng = MockEngine::new(test_manifest("gpt", 4, 32, tok.vocab_size()), 1.7, 0.02);
     eng.init(0).unwrap();
     let cfg = SampleCfg { temperature: 0.0, max_new_tokens: 6, ..Default::default() };
-    let a = generation::generate(&mut eng, &tok, "Once upon a time", &cfg).unwrap();
-    let b = generation::generate(&mut eng, &tok, "Once upon a time", &cfg).unwrap();
+    let a = generation::generate_windowed(&mut eng, &tok, "Once upon a time", &cfg).unwrap();
+    let b = generation::generate_windowed(&mut eng, &tok, "Once upon a time", &cfg).unwrap();
     assert_eq!(a.completion, b.completion);
+}
+
+#[test]
+fn shared_weight_batch_generation_over_native_model() {
+    use hsm::config::LayerInfo;
+    use hsm::infer::{weights, Model, ModelWeights};
+
+    let (tok, _, _) = pipeline(32, 300);
+    let layers = vec![
+        LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+        LayerInfo { kind: "gate2".into(), heads: 2, shifts: vec![2], ffn: 16 },
+    ];
+    let m = Manifest::synthetic("hsm_mix", layers, 8, 48, tok.vocab_size(), 1);
+    let flat = weights::seeded_flat(&m, 3);
+    let model = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap();
+
+    let prompts = ["Once upon a time", "Lily likes cats", "Jack went to"];
+    let mut sessions: Vec<_> = prompts.iter().map(|_| model.session()).collect();
+    let cfg = SampleCfg { temperature: 0.0, max_new_tokens: 5, ..Default::default() };
+    let gens = generation::generate_batch(&mut sessions, &tok, &prompts, &cfg).unwrap();
+    assert_eq!(gens.len(), 3);
+    for (g, p) in gens.iter().zip(&prompts) {
+        assert_eq!(&g.prompt, p);
+        // Greedy batched decoding must equal a fresh solo session.
+        let solo = generation::generate(&mut model.session(), &tok, p, &cfg).unwrap();
+        assert_eq!(solo.completion, g.completion);
+    }
 }
 
 #[test]

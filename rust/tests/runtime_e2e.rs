@@ -1,5 +1,8 @@
 //! End-to-end tests against REAL PJRT artifacts.
 //!
+//! The whole file needs the `pjrt` feature (it drives `PjrtEngine`);
+//! `--no-default-features` builds compile it to nothing.
+//!
 //! These require `make artifacts` (ci preset) to have run; if the
 //! artifacts are missing the tests skip with a notice rather than fail, so
 //! `cargo test` stays usable on a fresh checkout.
@@ -7,6 +10,8 @@
 //! NOTE: XLA 0.5.1 spends ~40 s compiling the ci train_step, so the
 //! training-path assertions share ONE engine in a single #[test] rather
 //! than paying the compile per test.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
@@ -149,7 +154,7 @@ fn manifests_consistent_with_artifacts() {
 /// independent code path, for both a pure-HSM and an attention variant.
 #[test]
 fn native_engine_matches_pjrt_decode() {
-    use hsm::infer::{InferenceEngine, ModelWeights};
+    use hsm::infer::{Decoder, ModelWeights, NativeDecoder};
 
     for variant in ["hsm_ab", "gpt", "hsm_fusion"] {
         let Some(m) = manifest(variant) else { return skip("native_engine_matches_pjrt_decode") };
@@ -157,7 +162,7 @@ fn native_engine_matches_pjrt_decode() {
         pjrt.init(3).unwrap();
 
         let weights = ModelWeights::from_flat(&m, &pjrt.get_params().unwrap()).unwrap();
-        let mut native = InferenceEngine::new(m.clone(), weights).unwrap();
+        let mut native = NativeDecoder::from_parts(m.clone(), weights).unwrap();
 
         // A short "prompt" of varied tokens.
         let toks: Vec<i32> = (0..m.ctx as i32).map(|i| (i * 37 + 11) % m.vocab as i32).collect();

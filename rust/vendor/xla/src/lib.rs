@@ -1,0 +1,263 @@
+//! Offline stub of the `xla` crate (xla-rs over xla_extension 0.5.1).
+//!
+//! The real crate downloads the xla_extension C library at build time,
+//! which is impossible in this offline environment.  This stub keeps the
+//! `pjrt` feature of the `hsm` crate *compilable* everywhere:
+//!
+//! * [`Literal`] is a real little host-tensor container (construction,
+//!   reshape, download helpers all work), so code that only shapes
+//!   literals behaves normally.
+//! * [`PjRtClient::cpu`] returns an error, so `PjrtEngine::new` fails
+//!   fast with an actionable message and every downstream device entry
+//!   point stays unreachable.  Callers that probe with `let Ok(..) = ..`
+//!   (benches, examples) degrade gracefully to the native engine.
+//!
+//! Replacing this stub with the real crate is a one-line manifest change;
+//! no `hsm` source changes are required.
+
+use std::fmt;
+use std::path::Path;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: built against the offline xla stub \
+     (vendor/xla). Install the real xla crate + xla_extension to execute HLO artifacts, \
+     or use the native incremental decoder (hsm::infer) which needs no artifacts";
+
+/// Stub error type (implements `std::error::Error` so `?` and
+/// `anyhow::Error: From<_>` conversions work at call sites).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type XlaResult<T> = std::result::Result<T, Error>;
+
+/// XLA element types (the subset the hsm manifests use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    U32,
+    F32,
+    F64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::U32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host-resident tensor (fully functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![v]) }
+    }
+
+    /// Zero-filled literal of the given shape (F32 only in the stub).
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let data = match ty {
+            PrimitiveType::S32 => Data::I32(vec![0; n]),
+            PrimitiveType::U32 => Data::U32(vec![0; n]),
+            _ => Data::F32(vec![0.0; n]),
+        };
+        Literal { data, dims: dims.iter().map(|&d| d as i64).collect() }
+    }
+
+    /// Reinterpret the element buffer under new dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {:?} ({n} elems) from {} elems",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Download the elements (typed).
+    pub fn to_vec<T: NativeType>(&self) -> XlaResult<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    /// First element (used for scalar loss/accuracy outputs).
+    pub fn get_first_element<T: NativeType>(&self) -> XlaResult<T> {
+        T::unwrap(&self.data)
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| Error("empty or mistyped literal".to_string()))
+    }
+
+    /// Decompose a tuple literal (never produced by the stub).
+    pub fn to_tuple(self) -> XlaResult<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (construction always fails in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> XlaResult<Self> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer (never constructable through the stub client).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable (never constructable through the stub client).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// PJRT client: construction reports the stub condition.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> XlaResult<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(), 7);
+        assert!(Literal::scalar(7i32).to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+    }
+}
