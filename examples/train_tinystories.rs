@@ -81,21 +81,11 @@ fn main() -> Result<()> {
     );
     let _ = t0;
 
-    // Checkpoint.
-    let names: Vec<String> = manifest.params.iter().map(|p| p.name.clone()).collect();
-    let shapes: Vec<Vec<usize>> = manifest.params.iter().map(|p| p.shape.clone()).collect();
+    // Checkpoint (embeds a manifest snapshot, so `hsm generate/serve
+    // --engine native` can run from it with no artifact directory).
     let (m, v) = engine.get_state()?;
-    Checkpoint::from_training(
-        &manifest.variant,
-        &manifest.preset,
-        outcome.total_steps,
-        &names,
-        &shapes,
-        engine.get_params()?,
-        m,
-        v,
-    )
-    .save(a.str("out").as_ref())?;
+    Checkpoint::from_training(&manifest, outcome.total_steps, engine.get_params()?, m, v)
+        .save(a.str("out").as_ref())?;
     println!("checkpoint → {}", a.str("out"));
 
     // Sample a few stories.

@@ -1,0 +1,248 @@
+//! Bench: continuous-batching serve throughput vs the fixed round-robin
+//! baseline, plus the blocked-matvec before/after.
+//!
+//! Three questions, answered over identical synthetic weights (no
+//! artifacts, no PJRT):
+//!
+//! 1. **Scaling** — tokens/sec of the threaded [`hsm::serve::Scheduler`]
+//!    across a threads × max-active grid, against single-threaded
+//!    [`hsm::generation::generate_batch`] round-robin over the same
+//!    requests.  The acceptance bar: T ≥ 4 threads beats the
+//!    single-threaded round-robin.
+//! 2. **Overhead** — the scheduler at 1 thread vs raw `generate_batch`:
+//!    what admission/queue bookkeeping costs when there is no
+//!    parallelism to win.
+//! 3. **Blocked matvec** — the cache-tiled `matvec` / `matvec_t`
+//!    (4 rows per pass) against the unblocked reference implementations
+//!    they replaced on the forward hot path.
+//!
+//! Every scheduling shape decodes byte-identical text (per-request RNG
+//! streams), which this bench asserts as a side effect — a throughput
+//! number from diverging outputs would be meaningless.
+//!
+//! Results land in `BENCH_serve.json` (override with `HSM_BENCH_OUT`);
+//! `HSM_BENCH_REQUESTS` scales the request count.
+//!
+//! Run: `cargo bench --bench serve_throughput`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::{generate_batch, SampleCfg, TABLE3_PROMPTS};
+use hsm::infer::tensor;
+use hsm::infer::{weights, Model, ModelWeights};
+use hsm::serve::{serve, Request, ServeCfg};
+use hsm::tokenizer::Tokenizer;
+use hsm::util::bench::black_box;
+
+const THREAD_GRID: &[usize] = &[1, 2, 4, 8];
+const ACTIVE_GRID: &[usize] = &[8, 32];
+
+fn synthetic_model(ctx: usize, vocab: usize) -> Arc<Model> {
+    let (dim, heads, ffn) = (64, 4, 128);
+    let layers: Vec<LayerInfo> = (0..4)
+        .map(|l| LayerInfo {
+            kind: "ab".to_string(),
+            heads,
+            shifts: vec![(1usize << l.min(5)).min(ctx / 2)],
+            ffn,
+        })
+        .collect();
+    let m = Manifest::synthetic("hsm_ab", layers, dim, ctx, vocab, 1);
+    let flat = weights::seeded_flat(&m, 17);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn requests(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request::new(i as u64, TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()]))
+        .collect()
+}
+
+/// Best-of-2 wall time for `pass` (first call doubles as warmup), plus
+/// the digest of generated text for the parity assertion.
+fn timed<F: FnMut() -> (usize, u64)>(mut pass: F) -> (f64, usize, u64) {
+    pass();
+    let mut best = f64::INFINITY;
+    let (mut tokens, mut digest) = (0, 0);
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        let (t, d) = pass();
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best {
+            best = dt;
+        }
+        tokens = t;
+        digest = d;
+    }
+    (best, tokens, digest)
+}
+
+fn fnv(digest: &mut u64, s: &str) {
+    for b in s.as_bytes() {
+        *digest = (*digest ^ *b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+fn main() {
+    let n: usize = std::env::var("HSM_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let out_path =
+        std::env::var("HSM_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+
+    let text = hsm::corpus::generate(1234, 400);
+    let tok: Tokenizer = hsm::tokenizer::trainer::train(&text, 512).unwrap();
+    let ctx = 256;
+    let model = synthetic_model(ctx, tok.vocab_size());
+    let sample = SampleCfg {
+        temperature: 0.8,
+        top_k: 40,
+        max_new_tokens: 64,
+        seed: 5,
+        stop_at_eot: true,
+    };
+
+    // 1. Baseline: fixed-membership round-robin on one thread (what
+    //    generate_batch was before the scheduler existed — every request
+    //    admitted up front, breadth-first single-token rounds).
+    let prompts: Vec<&str> =
+        (0..n).map(|i| TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()]).collect();
+    let (rr_secs, rr_tokens, rr_digest) = timed(|| {
+        let mut sessions: Vec<_> = (0..n).map(|_| model.session()).collect();
+        let gens = generate_batch(&mut sessions, &tok, &prompts, &sample).unwrap();
+        let mut digest = 0xcbf2_9ce4_8422_2325u64;
+        let mut toks = 0;
+        for g in &gens {
+            toks += g.tokens_generated;
+            fnv(&mut digest, &g.completion);
+        }
+        (toks, digest)
+    });
+    let rr_tps = rr_tokens as f64 / rr_secs;
+    println!(
+        "round-robin generate_batch (1 thread, {n} requests): {rr_tokens} tokens, \
+         {rr_secs:.3}s → {rr_tps:.1} tok/s"
+    );
+
+    // 2. Scheduler grid.
+    println!("\ncontinuous batching (quantum 16):");
+    println!(
+        "{:>8} {:>11} {:>12} {:>14} {:>10}",
+        "threads", "max_active", "tok/s", "vs round-robin", "parity"
+    );
+    let mut grid: Vec<(usize, usize, f64)> = Vec::new();
+    let mut overhead_ratio = f64::NAN;
+    for &threads in THREAD_GRID {
+        for &max_active in ACTIVE_GRID {
+            let cfg = ServeCfg { max_active, threads, quantum: 16, sample: sample.clone() };
+            let (secs, tokens, digest) = timed(|| {
+                let comps = serve(&model, &tok, requests(n), &cfg).unwrap();
+                let mut d = 0xcbf2_9ce4_8422_2325u64;
+                let mut toks = 0;
+                for c in &comps {
+                    toks += c.tokens_generated;
+                    fnv(&mut d, &c.completion);
+                }
+                (toks, d)
+            });
+            assert_eq!(tokens, rr_tokens, "scheduler token count diverged from round-robin");
+            assert_eq!(digest, rr_digest, "scheduler text diverged from round-robin");
+            let tps = tokens as f64 / secs;
+            if threads == 1 && max_active == ACTIVE_GRID[ACTIVE_GRID.len() - 1] {
+                // Scheduler bookkeeping cost with no parallelism to win.
+                overhead_ratio = rr_secs / secs;
+            }
+            println!(
+                "{threads:>8} {max_active:>11} {tps:>12.1} {:>13.2}× {:>10}",
+                tps / rr_tps,
+                "ok"
+            );
+            grid.push((threads, max_active, tps));
+        }
+    }
+
+    let best_t4 = grid
+        .iter()
+        .filter(|(t, _, _)| *t >= 4)
+        .map(|(_, _, tps)| *tps)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nbest T≥4 continuous batching: {best_t4:.1} tok/s vs {rr_tps:.1} round-robin \
+         ({:.2}×) — {}",
+        best_t4 / rr_tps,
+        if best_t4 > rr_tps { "PASS" } else { "FAIL (expected on <4-core machines)" }
+    );
+    println!("scheduler overhead at 1 thread: {overhead_ratio:.2}× round-robin speed");
+
+    // 3. Blocked matvec vs the unblocked reference (the FFN/mixer shape
+    //    and the tied-embedding logit shape).
+    let bench_matvec = |k: usize, nn: usize, blocked: bool, transpose: bool| -> f64 {
+        let x: Vec<f32> = (0..k).map(|i| 0.01 * ((i * 13 % 37) as f32) - 0.17).collect();
+        let w: Vec<f32> = (0..k * nn).map(|i| 0.003 * ((i * 7 % 53) as f32) - 0.08).collect();
+        let mut y = vec![0.0f32; nn];
+        let reps = 50_000_000 / (k * nn).max(1);
+        let t0 = Instant::now();
+        for _ in 0..reps.max(16) {
+            match (blocked, transpose) {
+                (true, false) => tensor::matvec(&x, &w, nn, &mut y),
+                (false, false) => tensor::matvec_naive(&x, &w, nn, &mut y),
+                (true, true) => tensor::matvec_t(&x, &w, nn, &mut y),
+                (false, true) => tensor::matvec_t_naive(&x, &w, nn, &mut y),
+            }
+            black_box(&y);
+        }
+        t0.elapsed().as_secs_f64() / reps.max(16) as f64 * 1e9
+    };
+    let mv_naive = bench_matvec(128, 512, false, false);
+    let mv_blocked = bench_matvec(128, 512, true, false);
+    let mvt_naive = bench_matvec(64, 512, false, true);
+    let mvt_blocked = bench_matvec(64, 512, true, true);
+    println!(
+        "\nblocked matvec (128×512):   {mv_naive:>8.0} ns naive → {mv_blocked:>8.0} ns \
+         blocked ({:.2}×)",
+        mv_naive / mv_blocked
+    );
+    println!(
+        "blocked matvec_t (512×64):  {mvt_naive:>8.0} ns naive → {mvt_blocked:>8.0} ns \
+         blocked ({:.2}×)",
+        mvt_naive / mvt_blocked
+    );
+
+    // JSON for the perf trajectory.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"serve_throughput\",\n");
+    json.push_str(&format!(
+        "  \"requests\": {n}, \"ctx\": {ctx}, \"dim\": 64, \"layers\": 4, \"max_new_tokens\": {},\n",
+        sample.max_new_tokens
+    ));
+    json.push_str(&format!(
+        "  \"round_robin_tok_per_s\": {rr_tps:.1},\n  \"scheduler_overhead_at_1_thread\": {overhead_ratio:.3},\n"
+    ));
+    json.push_str("  \"scheduler\": [\n");
+    for (i, (threads, max_active, tps)) in grid.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"threads\": {threads}, \"max_active\": {max_active}, \"tok_per_s\": {tps:.1}, \"speedup_vs_round_robin\": {:.3}}}{}\n",
+            tps / rr_tps,
+            if i + 1 < grid.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"best_t4_plus_tok_per_s\": {best_t4:.1}, \"t4_beats_round_robin\": {},\n",
+        best_t4 > rr_tps
+    ));
+    json.push_str(&format!(
+        "  \"matvec\": {{\"naive_ns\": {mv_naive:.0}, \"blocked_ns\": {mv_blocked:.0}, \"speedup\": {:.3},\n",
+        mv_naive / mv_blocked
+    ));
+    json.push_str(&format!(
+        "             \"t_naive_ns\": {mvt_naive:.0}, \"t_blocked_ns\": {mvt_blocked:.0}, \"t_speedup\": {:.3}}}\n",
+        mvt_naive / mvt_blocked
+    ));
+    json.push_str("}\n");
+    std::fs::write(&out_path, &json).expect("writing bench json");
+    println!("\nwrote {out_path}");
+}

@@ -12,13 +12,18 @@
 //!
 //! Stores model parameters, optimizer moments and the step counter so a
 //! training run resumes bit-exactly (the step counter doubles as the
-//! dropout seed — see `python/compile/steps.py`).
+//! dropout seed — see `python/compile/steps.py`).  Since v0.3 the full
+//! [`Manifest`] is embedded as a JSON meta entry, so the native decoder
+//! (and `hsm generate/serve --engine native`) can run straight from a
+//! checkpoint with **no PJRT artifact directory** — see
+//! [`Checkpoint::manifest`].
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::config::Manifest;
 use crate::util::json::{self, Value};
 
 const MAGIC: &[u8; 8] = b"HSMCKPT1";
@@ -31,24 +36,33 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Assemble a training checkpoint from engine state.
+    /// Assemble a training checkpoint from engine state.  Tensor names
+    /// and shapes come from the manifest (its `params` list IS the flat
+    /// parameter order), and a full manifest snapshot is embedded so the
+    /// checkpoint is self-describing for artifact-free native inference.
     pub fn from_training(
-        variant: &str,
-        preset: &str,
+        manifest: &Manifest,
         step: usize,
-        names: &[String],
-        shapes: &[Vec<usize>],
         params: Vec<Vec<f32>>,
         m: Vec<Vec<f32>>,
         v: Vec<Vec<f32>>,
     ) -> Self {
         let mut ck = Checkpoint::default();
-        ck.meta.push(("variant".into(), variant.into()));
-        ck.meta.push(("preset".into(), preset.into()));
+        ck.meta.push(("variant".into(), manifest.variant.clone()));
+        ck.meta.push(("preset".into(), manifest.preset.clone()));
         ck.meta.push(("step".into(), step.to_string()));
+        ck.meta.push(("manifest".into(), manifest.to_json().to_string()));
         for (group, tensors) in [("param", params), ("m", m), ("v", v)] {
-            for ((name, shape), data) in names.iter().zip(shapes).zip(tensors) {
-                ck.tensors.push((format!("{group}/{name}"), shape.clone(), data));
+            // Fail at write time, not as a missing-tensor error on load.
+            assert_eq!(
+                tensors.len(),
+                manifest.params.len(),
+                "checkpoint group {group:?} has {} tensors, manifest expects {}",
+                tensors.len(),
+                manifest.params.len()
+            );
+            for (p, data) in manifest.params.iter().zip(tensors) {
+                ck.tensors.push((format!("{group}/{}", p.name), p.shape.clone(), data));
             }
         }
         ck
@@ -56,6 +70,23 @@ impl Checkpoint {
 
     pub fn meta_value(&self, key: &str) -> Option<&str> {
         self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// The embedded manifest snapshot, when present.
+    ///
+    /// `Ok(None)` means a pre-v0.3 checkpoint with no snapshot — callers
+    /// that need artifact-free loading should surface that as "re-train
+    /// or point at an artifact directory".  A snapshot that fails to
+    /// parse is an error (the checkpoint is corrupt, not merely old).
+    pub fn manifest(&self) -> Result<Option<Manifest>> {
+        let Some(text) = self.meta_value("manifest") else {
+            return Ok(None);
+        };
+        let v = json::parse(text)
+            .map_err(|e| anyhow!("embedded checkpoint manifest is corrupt: {e}"))?;
+        Manifest::from_json(&v, Path::new("(embedded-in-checkpoint)"))
+            .context("embedded checkpoint manifest is invalid")
+            .map(Some)
     }
 
     pub fn step(&self) -> usize {
@@ -175,34 +206,61 @@ impl Checkpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::LayerInfo;
+    use crate::infer::weights;
 
-    fn sample() -> Checkpoint {
-        Checkpoint::from_training(
-            "hsm_ab",
-            "ci",
-            123,
-            &["tok_emb".into(), "mix_a".into()],
-            &[vec![4, 2], vec![1]],
-            vec![vec![1.0; 8], vec![0.5]],
-            vec![vec![0.1; 8], vec![0.2]],
-            vec![vec![0.3; 8], vec![0.4]],
-        )
+    fn sample() -> (Manifest, Checkpoint) {
+        let layers = vec![LayerInfo { kind: "ab".into(), heads: 1, shifts: vec![1], ffn: 4 }];
+        let m = Manifest::synthetic("hsm_ab", layers, 4, 8, 16, 1);
+        let params = weights::seeded_flat(&m, 3);
+        let zeros: Vec<Vec<f32>> = m.params.iter().map(|p| vec![0.0; p.elems()]).collect();
+        let ck = Checkpoint::from_training(&m, 123, params, zeros.clone(), zeros);
+        (m, ck)
     }
 
     #[test]
     fn roundtrip() {
-        let ck = sample();
+        let (m, ck) = sample();
         let path = std::env::temp_dir().join("hsm_ckpt_test.bin");
         ck.save(&path).unwrap();
         let re = Checkpoint::load(&path).unwrap();
         assert_eq!(re.meta_value("variant"), Some("hsm_ab"));
         assert_eq!(re.step(), 123);
-        assert_eq!(re.tensors.len(), 6);
-        assert_eq!(re.group("param")[0], vec![1.0; 8]);
-        assert_eq!(re.group("v")[1], vec![0.4]);
+        assert_eq!(re.tensors.len(), 3 * m.params.len());
+        assert_eq!(re.group("param").len(), m.params.len());
         let (shape, data) = re.tensor("param/tok_emb").unwrap();
-        assert_eq!(shape, &[4, 2]);
-        assert_eq!(data.len(), 8);
+        assert_eq!(shape, &[16, 4]);
+        assert_eq!(data.len(), 64);
+        assert_eq!(re.group("param")[0], data);
+    }
+
+    #[test]
+    fn embedded_manifest_roundtrips() {
+        let (m, ck) = sample();
+        let path = std::env::temp_dir().join("hsm_ckpt_manifest.bin");
+        ck.save(&path).unwrap();
+        let re = Checkpoint::load(&path).unwrap();
+        let m2 = re.manifest().unwrap().expect("manifest snapshot present");
+        assert_eq!(m2.variant, m.variant);
+        assert_eq!(m2.dim, m.dim);
+        assert_eq!(m2.ctx, m.ctx);
+        assert_eq!(m2.vocab, m.vocab);
+        assert_eq!(m2.layers, m.layers);
+        assert_eq!(m2.params, m.params);
+        // The snapshot is enough to rebuild the native model's weights.
+        let w = crate::infer::ModelWeights::from_checkpoint(&m2, &re).unwrap();
+        assert_eq!(w.tok_emb.len(), m.vocab * m.dim);
+    }
+
+    #[test]
+    fn pre_snapshot_checkpoint_has_no_manifest() {
+        // Old checkpoints (no "manifest" meta) load fine and report None;
+        // a corrupt snapshot is an error, not a silent None.
+        let ck = Checkpoint::default();
+        assert!(ck.manifest().unwrap().is_none());
+        let mut bad = Checkpoint::default();
+        bad.meta.push(("manifest".into(), "{not json".into()));
+        assert!(bad.manifest().is_err());
     }
 
     #[test]

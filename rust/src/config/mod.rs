@@ -188,6 +188,72 @@ impl Manifest {
         self.dir.join(format!("{kind}.hlo.txt"))
     }
 
+    /// Serialize to the exact JSON schema [`Manifest::from_json`] parses
+    /// (everything except `dir`, which is a load-site property).  This is
+    /// what checkpoints embed so `hsm generate/serve --engine native` can
+    /// run straight from a checkpoint with no artifact directory.
+    pub fn to_json(&self) -> Value {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                json::obj(vec![
+                    ("kind", json::s(&l.kind)),
+                    ("heads", json::num(l.heads as f64)),
+                    (
+                        "shifts",
+                        Value::Arr(l.shifts.iter().map(|&s| json::num(s as f64)).collect()),
+                    ),
+                    ("ffn", json::num(l.ffn as f64)),
+                ])
+            })
+            .collect();
+        let params = self
+            .params
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("name", json::s(&p.name)),
+                    (
+                        "shape",
+                        Value::Arr(p.shape.iter().map(|&d| json::num(d as f64)).collect()),
+                    ),
+                    ("decay", Value::Bool(p.decay)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("preset", json::s(&self.preset)),
+            ("variant", json::s(&self.variant)),
+            ("display_name", json::s(&self.display_name)),
+            ("kernels", json::s(&self.kernels)),
+            (
+                "config",
+                json::obj(vec![
+                    ("dim", json::num(self.dim as f64)),
+                    ("ctx", json::num(self.ctx as f64)),
+                    ("vocab", json::num(self.vocab as f64)),
+                    ("param_count", json::num(self.param_count as f64)),
+                    ("layers", Value::Arr(layers)),
+                ]),
+            ),
+            (
+                "train",
+                json::obj(vec![
+                    ("batch", json::num(self.train.batch as f64)),
+                    ("lr", json::num(self.train.lr)),
+                    ("weight_decay", json::num(self.train.weight_decay)),
+                    ("beta1", json::num(self.train.beta1)),
+                    ("beta2", json::num(self.train.beta2)),
+                    ("eps", json::num(self.train.eps)),
+                    ("dropout", json::num(self.train.dropout)),
+                    ("epochs", json::num(self.train.epochs as f64)),
+                ]),
+            ),
+            ("params", Value::Arr(params)),
+        ])
+    }
+
     /// Total parameter elements (must match `param_count` from python).
     pub fn total_elems(&self) -> usize {
         self.params.iter().map(|p| p.elems()).sum()
@@ -392,6 +458,29 @@ mod tests {
             assert_eq!(names.len(), n, "{kind}: duplicate parameter names");
             assert!(m.params.iter().any(|p| p.name == "layer1.ffn_w2"), "{kind}");
         }
+    }
+
+    #[test]
+    fn to_json_roundtrips_through_from_json() {
+        let layers = vec![
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 32 },
+            LayerInfo { kind: "attn".into(), heads: 2, shifts: vec![], ffn: 32 },
+        ];
+        let m = Manifest::synthetic("hybrid", layers, 16, 48, 120, 4);
+        let text = m.to_json().to_string();
+        let re = Manifest::from_json(&json::parse(&text).unwrap(), Path::new("/elsewhere")).unwrap();
+        assert_eq!(re.preset, m.preset);
+        assert_eq!(re.variant, m.variant);
+        assert_eq!(re.display_name, m.display_name);
+        assert_eq!(re.kernels, m.kernels);
+        assert_eq!(re.dim, m.dim);
+        assert_eq!(re.ctx, m.ctx);
+        assert_eq!(re.vocab, m.vocab);
+        assert_eq!(re.param_count, m.param_count);
+        assert_eq!(re.layers, m.layers);
+        assert_eq!(re.params, m.params);
+        assert_eq!(re.train, m.train);
+        assert_eq!(re.dir, Path::new("/elsewhere"));
     }
 
     #[test]

@@ -18,12 +18,18 @@
 //! non-finite weights drop out of the draw, so a bad logit can never
 //! panic the serving path.  Top-k selection is O(V) via
 //! `select_nth_unstable_by` rather than a full sort.
+//!
+//! [`generate`] and [`generate_batch`] are thin wrappers over the
+//! continuous-batching core in [`crate::serve`] (single-session and
+//! fixed-membership modes respectively); production multi-user serving
+//! goes through [`crate::serve::Scheduler`] directly.
 
 use anyhow::{bail, Result};
 
 use crate::config::Manifest;
 use crate::infer::Decoder;
 use crate::runtime::StepEngine;
+use crate::serve;
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
 
@@ -194,8 +200,13 @@ impl<E: StepEngine + ?Sized> Decoder for WindowDecoder<'_, E> {
     }
 }
 
-/// Shared prompt validation + encoding.
-fn encode_prompt(dec_manifest: &Manifest, tok: &Tokenizer, prompt: &str) -> Result<Vec<u32>> {
+/// Shared prompt validation + encoding (also the serve scheduler's
+/// admission check).
+pub(crate) fn encode_prompt(
+    dec_manifest: &Manifest,
+    tok: &Tokenizer,
+    prompt: &str,
+) -> Result<Vec<u32>> {
     if tok.vocab_size() != dec_manifest.vocab {
         bail!(
             "tokenizer vocab {} does not match model vocab {}",
@@ -217,41 +228,38 @@ fn encode_prompt(dec_manifest: &Manifest, tok: &Tokenizer, prompt: &str) -> Resu
     Ok(ids)
 }
 
+/// Convert a scheduler completion into the legacy [`Generation`] shape.
+fn to_generation(c: serve::Completion) -> Generation {
+    Generation {
+        stopped_at_eot: c.finish == serve::FinishReason::Eot,
+        prompt: c.prompt,
+        completion: c.completion,
+        tokens_generated: c.tokens_generated,
+    }
+}
+
 /// Generate a completion for `prompt` through any [`Decoder`].
+///
+/// Thin wrapper over the serve core in single-session mode (one job, no
+/// time slicing); the RNG stream is `cfg.seed` (request id 0), matching
+/// [`generate_batch`]'s sequence-0 stream.
 pub fn generate<D: Decoder + ?Sized>(
     dec: &mut D,
     tok: &Tokenizer,
     prompt: &str,
     cfg: &SampleCfg,
 ) -> Result<Generation> {
-    let ctx = dec.manifest().ctx;
-    let mut ids = encode_prompt(dec.manifest(), tok, prompt)?;
-    let prompt_len = ids.len();
-    let mut rng = Rng::new(cfg.seed);
-    let mut stopped = false;
-
-    dec.reset();
-    dec.prefill(&ids[..prompt_len - 1])?;
-    let mut last = ids[prompt_len - 1];
-
-    while ids.len() < ctx && ids.len() - prompt_len < cfg.max_new_tokens {
-        let logits = dec.step(last)?;
-        let next = sample_logits(logits, cfg, &mut rng);
-        if cfg.stop_at_eot && next == tok.eot {
-            stopped = true;
-            break;
-        }
-        ids.push(next);
-        last = next;
-    }
-
-    let completion = tok.decode(&ids[prompt_len..]);
-    Ok(Generation {
+    let ids = encode_prompt(dec.manifest(), tok, prompt)?;
+    let job = serve::Job {
+        ix: 0,
+        id: 0,
+        budget: cfg.max_new_tokens,
         prompt: prompt.to_string(),
-        completion,
-        tokens_generated: ids.len() - prompt_len,
-        stopped_at_eot: stopped,
-    })
+        ids,
+    };
+    let mut out = vec![None];
+    serve::run_local(&mut [&mut *dec], tok, vec![job], cfg, 0, &mut out)?;
+    Ok(to_generation(out.pop().unwrap().expect("single sequence completed")))
 }
 
 /// Convenience: generate through a full-context engine (the PJRT path)
@@ -271,9 +279,12 @@ pub fn generate_windowed<E: StepEngine + ?Sized>(
 /// serving shape), stepped breadth-first so every sequence advances one
 /// token per round.
 ///
-/// Sequence `i` samples from an independent RNG stream seeded
-/// `cfg.seed ^ i`, so results are identical whether prompts run batched
-/// or one at a time.
+/// Thin wrapper over the serve core in fixed-membership mode: every
+/// sequence is admitted up front (`decoders.len()` is the active-set
+/// size) with a one-token quantum — the classic round-robin.  Sequence
+/// `i` samples from an independent RNG stream seeded `cfg.seed ^ i`, so
+/// results are identical whether prompts run batched, one at a time, or
+/// through [`crate::serve::Scheduler`] with any thread count.
 pub fn generate_batch<D: Decoder>(
     decoders: &mut [D],
     tok: &Tokenizer,
@@ -287,70 +298,22 @@ pub fn generate_batch<D: Decoder>(
             prompts.len()
         );
     }
-
-    struct Seq {
-        ids: Vec<u32>,
-        prompt_len: usize,
-        last: u32,
-        rng: Rng,
-        done: bool,
-        stopped: bool,
-    }
-
-    let mut seqs: Vec<Seq> = Vec::with_capacity(prompts.len());
-    for (i, (dec, prompt)) in decoders.iter_mut().zip(prompts).enumerate() {
-        let ids = encode_prompt(dec.manifest(), tok, prompt)?;
-        let prompt_len = ids.len();
-        dec.reset();
-        dec.prefill(&ids[..prompt_len - 1])?;
-        seqs.push(Seq {
-            last: ids[prompt_len - 1],
+    let mut jobs = Vec::with_capacity(prompts.len());
+    for (i, prompt) in prompts.iter().enumerate() {
+        let ids = encode_prompt(decoders[i].manifest(), tok, prompt)?;
+        jobs.push(serve::Job {
+            ix: i,
+            id: i as u64,
+            budget: cfg.max_new_tokens,
+            prompt: (*prompt).to_string(),
             ids,
-            prompt_len,
-            rng: Rng::new(cfg.seed ^ i as u64),
-            done: false,
-            stopped: false,
         });
     }
-
-    loop {
-        let mut progressed = false;
-        for (dec, seq) in decoders.iter_mut().zip(seqs.iter_mut()) {
-            if seq.done {
-                continue;
-            }
-            let ctx = dec.manifest().ctx;
-            if seq.ids.len() >= ctx || seq.ids.len() - seq.prompt_len >= cfg.max_new_tokens {
-                seq.done = true;
-                continue;
-            }
-            let logits = dec.step(seq.last)?;
-            let next = sample_logits(logits, cfg, &mut seq.rng);
-            if cfg.stop_at_eot && next == tok.eot {
-                seq.done = true;
-                seq.stopped = true;
-                continue;
-            }
-            seq.ids.push(next);
-            seq.last = next;
-            progressed = true;
-        }
-        // A round with no progress means every sequence that wasn't done
-        // already was marked done in this pass (cap or EOT).
-        if !progressed {
-            break;
-        }
-    }
-
-    Ok(seqs
+    let mut out = vec![None; prompts.len()];
+    serve::run_local(decoders, tok, jobs, cfg, 1, &mut out)?;
+    Ok(out
         .into_iter()
-        .zip(prompts)
-        .map(|(s, p)| Generation {
-            prompt: p.to_string(),
-            completion: tok.decode(&s.ids[s.prompt_len..]),
-            tokens_generated: s.ids.len() - s.prompt_len,
-            stopped_at_eot: s.stopped,
-        })
+        .map(|c| to_generation(c.expect("every sequence completed")))
         .collect())
 }
 

@@ -76,3 +76,29 @@ pub trait Decoder {
     /// Tokens consumed so far.
     fn position(&self) -> usize;
 }
+
+/// Forwarding impl: a `&mut D` decodes through the borrowed decoder, so
+/// the serve scheduler's fixed-membership wrappers
+/// ([`crate::generation::generate`] / `generate_batch`) can run caller-
+/// owned decoders through the same core that owns sessions outright.
+impl<D: Decoder + ?Sized> Decoder for &mut D {
+    fn manifest(&self) -> &Manifest {
+        (**self).manifest()
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<()> {
+        (**self).prefill(tokens)
+    }
+
+    fn step(&mut self, token: u32) -> Result<&[f32]> {
+        (**self).step(token)
+    }
+
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+
+    fn position(&self) -> usize {
+        (**self).position()
+    }
+}

@@ -2,16 +2,76 @@
 //!
 //! Row-major `f32` throughout, shaped to the decoder's needs: vector ×
 //! matrix products (the hot path — one token at a time), LayerNorm, ReLU,
-//! tanh, and a numerically-stable softmax.  No external BLAS: the matvec
-//! is written as an axpy-accumulation over matrix rows so the inner loop
-//! is contiguous in memory and auto-vectorizes.
+//! tanh, and a numerically-stable softmax.  No external BLAS: the matvecs
+//! are cache-tiled over **four matrix rows per pass** on top of the
+//! contiguous axpy/dot forms the compiler already vectorizes — `y` (for
+//! [`matvec`]) or `x` (for [`matvec_t`]) is streamed once per four rows
+//! instead of once per row, and the four independent accumulator chains
+//! give the superscalar units something to overlap.  The per-element op
+//! sequence is **exactly** the naive forms' (row 0 first, same zero
+//! skips), so results are bit-identical to [`matvec_naive`] /
+//! [`matvec_t_naive`] in every case — non-finite weights and the sign
+//! of zero included — which keeps the decode parity suite exact.  The
+//! naive forms stay as the reference implementation and the
+//! before/after baseline in `benches/serve_throughput.rs`.
 
 /// y = x @ W where `x: [k]`, `w: [k, n]` row-major → `y: [n]`.
 ///
-/// Iterating over rows of `w` keeps both `w`'s row and `y` contiguous
-/// (axpy form), which the compiler vectorizes; the naive column-dot form
-/// would stride by `n` and run ~4× slower.
+/// Blocked axpy: when all four of a block's `x` taps are nonzero (the
+/// common dense case — layernormed activations), four rows of `w`
+/// accumulate into `y` per pass, so each `y[j]` is loaded/stored once
+/// per four input elements.  Blocks with any zero tap (ReLU outputs on
+/// the FFN path are ~half zeros) fall back to the naive row-at-a-time
+/// form with its per-row zero skip — so the op sequence per `y[j]` is
+/// **exactly** [`matvec_naive`]'s in every case, including non-finite
+/// weights and the sign of zero.
 pub fn matvec(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n, "matvec shape mismatch");
+    debug_assert_eq!(y.len(), n);
+    y.fill(0.0);
+    let y = &mut y[..n];
+    let blocks = k / 4 * 4;
+    let mut i = 0;
+    while i < blocks {
+        let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+        if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+            let r0 = &w[i * n..(i + 1) * n];
+            let r1 = &w[(i + 1) * n..(i + 2) * n];
+            let r2 = &w[(i + 2) * n..(i + 3) * n];
+            let r3 = &w[(i + 3) * n..(i + 4) * n];
+            for j in 0..n {
+                // Left-to-right adds match the naive row-at-a-time order.
+                y[j] = y[j] + x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+            }
+        } else {
+            for ii in i..i + 4 {
+                let xi = x[ii];
+                if xi == 0.0 {
+                    continue;
+                }
+                let row = &w[ii * n..(ii + 1) * n];
+                for (yj, &wij) in y.iter_mut().zip(row) {
+                    *yj += xi * wij;
+                }
+            }
+        }
+        i += 4;
+    }
+    for i in blocks..k {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * n..(i + 1) * n];
+        for (yj, &wij) in y.iter_mut().zip(row) {
+            *yj += xi * wij;
+        }
+    }
+}
+
+/// Reference (unblocked) [`matvec`]: one row of `w` per pass.
+pub fn matvec_naive(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
     let k = x.len();
     debug_assert_eq!(w.len(), k * n, "matvec shape mismatch");
     debug_assert_eq!(y.len(), n);
@@ -29,8 +89,48 @@ pub fn matvec(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
 }
 
 /// y = x @ Wᵀ where `x: [k]`, `w: [n, k]` row-major → `y: [n]`.
-/// (Used for the tied-embedding logit projection `h @ Eᵀ`.)
+/// (Used for the tied-embedding logit projection `h @ Eᵀ` — at small D
+/// the single most expensive op per generated token.)
+///
+/// Blocked dots: four output rows share one streaming pass over `x`,
+/// with four independent accumulators (each summed in the same order as
+/// [`matvec_t_naive`], so outputs are bit-identical).
 pub fn matvec_t(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+    let k = x.len();
+    debug_assert_eq!(w.len(), n * k, "matvec_t shape mismatch");
+    debug_assert_eq!(y.len(), n);
+    let blocks = n / 4 * 4;
+    let mut j = 0;
+    while j < blocks {
+        let r0 = &w[j * k..(j + 1) * k];
+        let r1 = &w[(j + 1) * k..(j + 2) * k];
+        let r2 = &w[(j + 2) * k..(j + 3) * k];
+        let r3 = &w[(j + 3) * k..(j + 4) * k];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for (i, &xi) in x.iter().enumerate() {
+            a0 += xi * r0[i];
+            a1 += xi * r1[i];
+            a2 += xi * r2[i];
+            a3 += xi * r3[i];
+        }
+        y[j] = a0;
+        y[j + 1] = a1;
+        y[j + 2] = a2;
+        y[j + 3] = a3;
+        j += 4;
+    }
+    for j in blocks..n {
+        let row = &w[j * k..(j + 1) * k];
+        let mut acc = 0.0f32;
+        for (xi, wji) in x.iter().zip(row) {
+            acc += xi * wji;
+        }
+        y[j] = acc;
+    }
+}
+
+/// Reference (unblocked) [`matvec_t`]: one dot product per output row.
+pub fn matvec_t_naive(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
     let k = x.len();
     debug_assert_eq!(w.len(), n * k, "matvec_t shape mismatch");
     for j in 0..n {
@@ -101,6 +201,30 @@ mod tests {
         let mut y = [0.0; 3];
         matvec(&x, &w, 3, &mut y);
         assert_eq!(y, [9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn blocked_matches_naive_bit_for_bit() {
+        // Odd k and n exercise both the 4-wide blocks and the remainders;
+        // a sprinkled zero exercises the sparsity skip.
+        let (k, n) = (13, 11);
+        let x: Vec<f32> = (0..k)
+            .map(|i| if i % 5 == 2 { 0.0 } else { 0.37 * (i as f32) - 1.9 })
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|i| 0.11 * ((i * 7 % 23) as f32) - 1.2).collect();
+        let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
+        matvec(&x, &w, n, &mut fast);
+        matvec_naive(&x, &w, n, &mut slow);
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.to_bits(), b.to_bits(), "matvec diverged from reference");
+        }
+
+        let wt: Vec<f32> = (0..n * k).map(|i| 0.09 * ((i * 5 % 19) as f32) - 0.8).collect();
+        matvec_t(&x, &wt, n, &mut fast);
+        matvec_t_naive(&x, &wt, n, &mut slow);
+        for (a, b) in fast.iter().zip(&slow) {
+            assert_eq!(a.to_bits(), b.to_bits(), "matvec_t diverged from reference");
+        }
     }
 
     #[test]

@@ -33,9 +33,10 @@
 //! | [`data`]      | window datasets + epoch shuffling                           |
 //! | [`runtime`]   | [`StepEngine`] trait; `PjrtEngine` behind feature `pjrt`    |
 //! | [`coordinator`] | training loops, `MockEngine`, experiment scheduler        |
-//! | [`infer`]     | **serving**: [`infer::Decoder`] trait, shared-weight [`infer::Model`], per-user [`infer::DecodeSession`]s, [`infer::NativeDecoder`], full-context [`infer::WindowEngine`] |
+//! | [`infer`]     | [`infer::Decoder`] trait, shared-weight [`infer::Model`], per-user [`infer::DecodeSession`]s, [`infer::NativeDecoder`], full-context [`infer::WindowEngine`] |
 //! | [`generation`] | sampling + [`generation::generate`] / [`generation::generate_batch`] over any [`infer::Decoder`]; [`generation::WindowDecoder`] |
-//! | [`checkpoint`] | tensor (de)serialization                                   |
+//! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`), worker threads over disjoint sessions |
+//! | [`checkpoint`] | tensor (de)serialization (+ embedded manifest snapshot)    |
 //! | [`report`]    | Table 1/2/3, Figures 7/8 drivers                            |
 //! | [`metrics`]   | csv/markdown/stats helpers                                  |
 //!
@@ -51,12 +52,13 @@
 //! scratch), and [`generation::generate_batch`] round-robins any number
 //! of sessions over one weight set.
 //!
-//! ## Quick start (no artifacts needed)
+//! ## Quick start: serving (no artifacts needed)
 //!
 //! ```no_run
 //! use hsm::config::{LayerInfo, Manifest};
-//! use hsm::generation::{generate_batch, SampleCfg};
+//! use hsm::generation::SampleCfg;
 //! use hsm::infer::{weights, Model, ModelWeights};
+//! use hsm::serve::{Request, Scheduler, ServeCfg};
 //! use hsm::tokenizer::trainer as bpe;
 //!
 //! # fn main() -> anyhow::Result<()> {
@@ -71,16 +73,31 @@
 //! let flat = weights::seeded_flat(&m, 42);
 //! let model = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat)?)?;
 //!
-//! // Three users, one weight set: a session each, decoded round-robin.
-//! let mut sessions = vec![model.session(), model.session(), model.session()];
+//! // Continuous batching: at most 4 concurrent sessions over one weight
+//! // set, 4 worker threads; a finishing request immediately admits the
+//! // next one.  Request ids (not scheduling order) fix the sampled text.
+//! let sched = Scheduler::new(model, ServeCfg {
+//!     max_active: 4,
+//!     threads: 4,
+//!     sample: SampleCfg { max_new_tokens: 16, ..Default::default() },
+//!     ..Default::default()
+//! });
 //! let prompts = ["Once upon a time", "Lily likes cats", "Jack went to"];
-//! let cfg = SampleCfg { max_new_tokens: 16, ..Default::default() };
-//! for g in generate_batch(&mut sessions, &tok, &prompts, &cfg)? {
-//!     println!("{} → {}", g.prompt, g.completion);
+//! let requests: Vec<Request> = (0..8usize)
+//!     .map(|i| Request::new(i as u64, prompts[i % prompts.len()]))
+//!     .collect();
+//! for c in sched.serve(&tok, requests)? {
+//!     println!("#{} {} → {} ({:?})", c.request_id, c.prompt, c.completion, c.finish);
 //! }
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! One-off generation keeps the simpler wrappers —
+//! [`generation::generate`] (single session) and
+//! [`generation::generate_batch`] (fixed membership) — which are thin
+//! shims over the same scheduler core, so their outputs are byte-
+//! identical to the threaded path.
 //!
 //! With artifacts (`make artifacts`), the same loop runs against trained
 //! PJRT weights:
@@ -103,6 +120,7 @@ pub mod infer;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tokenizer;
 pub mod util;
 
@@ -110,6 +128,7 @@ pub use config::{Manifest, TrainHp};
 pub use coordinator::{TrainOutcome, Trainer, TrainerOptions};
 pub use data::{Batch, Dataset};
 pub use infer::{Decoder, DecodeSession, Model, NativeDecoder};
+pub use serve::{Completion, Request, Scheduler, ServeCfg};
 #[cfg(feature = "pjrt")]
 pub use runtime::PjrtEngine;
 pub use runtime::StepEngine;

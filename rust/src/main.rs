@@ -5,6 +5,7 @@
 //! * `train`     — train one variant, log metrics, write a checkpoint.
 //! * `evaluate`  — validation loss/accuracy of a checkpoint.
 //! * `generate`  — sample completions from a (trained) model.
+//! * `serve`     — continuous-batching multi-request serving benchmark/driver.
 //! * `report`    — regenerate a paper table/figure (table1|table2|table3|fig7|fig8).
 //! * `corpus`    — synthesise the TinyStories-like corpus to a file.
 //! * `tokenizer` — train / inspect a BPE tokenizer.
@@ -14,17 +15,20 @@
 
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use hsm::checkpoint::Checkpoint;
 use hsm::config::{artifacts_root, Manifest, TABLE1_VARIANTS, VARIANTS};
 use hsm::coordinator::{Trainer, TrainerOptions};
 use hsm::corpus;
-use hsm::generation::{self, SampleCfg};
+use hsm::generation::{self, SampleCfg, TABLE3_PROMPTS};
 use hsm::infer::{Model, ModelWeights};
 use hsm::report::{self, ExperimentCtx, PjrtFactory, FIG7_VARIANTS};
 use hsm::runtime::{PjrtEngine, StepEngine};
+use hsm::serve::{FinishReason, Request, Scheduler, ServeCfg};
 use hsm::tokenizer::{trainer as tok_trainer, Tokenizer};
 use hsm::util::cli::Args;
 
@@ -38,6 +42,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(rest),
         "evaluate" => cmd_evaluate(rest),
         "generate" => cmd_generate(rest),
+        "serve" => cmd_serve(rest),
         "report" => cmd_report(rest),
         "corpus" => cmd_corpus(rest),
         "tokenizer" => cmd_tokenizer(rest),
@@ -66,6 +71,7 @@ fn top_usage() -> String {
        train      train one model variant\n\
        evaluate   evaluate a checkpoint on the validation split\n\
        generate   sample text from a model\n\
+       serve      continuous-batching multi-request serving (native engine)\n\
        report     regenerate a paper table/figure (table1|table2|table3|fig7|fig8)\n\
        corpus     synthesise the TinyStories-like corpus\n\
        tokenizer  train / inspect the byte-level BPE tokenizer\n\
@@ -121,13 +127,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     );
     if let Some(out) = a.get("checkpoint-out") {
         let m = engine.manifest().clone();
-        let names: Vec<String> = m.params.iter().map(|p| p.name.clone()).collect();
-        let shapes: Vec<Vec<usize>> = m.params.iter().map(|p| p.shape.clone()).collect();
         let params = engine.get_params()?;
         let (mm, vv) = engine.get_state()?;
-        let ck = Checkpoint::from_training(
-            &m.variant, &m.preset, outcome.total_steps, &names, &shapes, params, mm, vv,
-        );
+        // Embeds a manifest snapshot: `generate`/`serve --engine native`
+        // run from this checkpoint with no artifact directory.
+        let ck = Checkpoint::from_training(&m, outcome.total_steps, params, mm, vv);
         ck.save(&PathBuf::from(&out))?;
         println!("checkpoint written to {out}");
     }
@@ -173,6 +177,56 @@ fn cmd_evaluate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Build the shared native [`Model`] for `--engine native` paths.
+///
+/// Preference order: a checkpoint's embedded manifest snapshot (fully
+/// artifact-free — the ROADMAP's "native checkpoint→generate" item),
+/// else the PJRT artifact engine (initialised or checkpoint-restored).
+/// Pre-snapshot checkpoints still work whenever artifacts are on disk;
+/// without them the error says exactly what is missing.
+fn native_model(preset: &str, variant: &str, ck_path: Option<String>) -> Result<Arc<Model>> {
+    let ck = match &ck_path {
+        Some(p) => {
+            let ck = Checkpoint::load(&PathBuf::from(p))?;
+            if ck.meta_value("variant") != Some(variant) {
+                bail!(
+                    "checkpoint is for variant {:?}, requested {variant:?}",
+                    ck.meta_value("variant")
+                );
+            }
+            if let Some(m) = ck.manifest()? {
+                let w = ModelWeights::from_checkpoint(&m, &ck)?;
+                return Model::shared(m, w);
+            }
+            // Pre-snapshot checkpoint: the artifact manifest below
+            // supplies the model shape; the weights come from `ck`.
+            Some(ck)
+        }
+        None => None,
+    };
+    let manifest = Manifest::load_variant(&artifacts_root(), preset, variant).with_context(|| {
+        format!(
+            "the native engine needs either a checkpoint with an embedded manifest \
+             (written by `hsm train --checkpoint-out` since v0.3) or PJRT artifacts \
+             for {preset}/{variant}"
+        )
+    })?;
+    match ck {
+        Some(ck) => {
+            let weights = ModelWeights::from_checkpoint(&manifest, &ck)?;
+            Model::shared(manifest, weights)
+        }
+        None => {
+            // Fresh init: only the engine knows the init distribution.
+            let mut engine = PjrtEngine::new(manifest)?;
+            engine.init(42)?;
+            let manifest = engine.manifest().clone();
+            let weights = ModelWeights::from_flat(&manifest, &engine.get_params()?)?;
+            Model::shared(manifest, weights)
+        }
+    }
+}
+
 fn cmd_generate(argv: &[String]) -> Result<()> {
     let a = experiment_flags(Args::new("generate"))
         .required("variant", "model variant")
@@ -186,9 +240,6 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .parse(argv)
         .map_err(|e| anyhow!(e))?;
     let ctx = ctx_from_args(&a)?;
-    let mut engine =
-        load_engine_with_checkpoint(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
-    let (tok, _, _) = report::build_data(&ctx, engine.manifest())?;
     let samples = a.usize("samples").map_err(|e| anyhow!(e))?;
     let prompt = a.str("prompt");
     let cfg = SampleCfg {
@@ -200,28 +251,94 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     };
     let gens = match a.str("engine").as_str() {
         "native" => {
-            // Serving path: extract the weights once, share them across
-            // `samples` concurrent sessions, decode round-robin.  Each
+            // Serving path: one shared weight set (from the checkpoint's
+            // embedded manifest when available — no artifacts needed),
+            // `samples` concurrent sessions decoded round-robin.  Each
             // session samples from stream seed ^ i (same as sequential).
-            let manifest = engine.manifest().clone();
-            let weights = ModelWeights::from_flat(&manifest, &engine.get_params()?)?;
-            let model = Model::shared(manifest, weights)?;
+            let model = native_model(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
+            let (tok, _, _) = report::build_data(&ctx, &model.manifest)?;
             let mut sessions: Vec<_> = (0..samples).map(|_| model.session()).collect();
             let prompts: Vec<&str> = (0..samples).map(|_| prompt.as_str()).collect();
             generation::generate_batch(&mut sessions, &tok, &prompts, &cfg)?
         }
-        "window" => (0..samples)
-            .map(|i| {
-                let cfg_i = SampleCfg { seed: cfg.seed ^ i as u64, ..cfg.clone() };
-                generation::generate_windowed(&mut engine, &tok, &prompt, &cfg_i)
-            })
-            .collect::<Result<Vec<_>>>()?,
+        "window" => {
+            let mut engine =
+                load_engine_with_checkpoint(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
+            let (tok, _, _) = report::build_data(&ctx, engine.manifest())?;
+            (0..samples)
+                .map(|i| {
+                    let cfg_i = SampleCfg { seed: cfg.seed ^ i as u64, ..cfg.clone() };
+                    generation::generate_windowed(&mut engine, &tok, &prompt, &cfg_i)
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
         other => bail!("unknown --engine {other:?} (expected native or window)"),
     };
     for (i, g) in gens.iter().enumerate() {
         println!("--- sample {i} ({} tokens) ---", g.tokens_generated);
         println!("{}{}", g.prompt, g.completion);
     }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let a = experiment_flags(Args::new("serve"))
+        .required("variant", "model variant")
+        .optional("checkpoint", "trained checkpoint (embedded-manifest checkpoints need no artifacts)")
+        .flag("requests", "16", "number of requests (prompts cycle the Table-3 suite)")
+        .flag("max-active", "8", "admission cap: concurrent decode sessions")
+        .flag("threads", "4", "worker threads stepping sessions in parallel")
+        .flag("quantum", "16", "tokens per scheduling slice (0 = run each admitted request to completion)")
+        .flag("temperature", "0.8", "sampling temperature (0 = greedy)")
+        .flag("top-k", "40", "top-k filter (0 = off)")
+        .flag("max-new-tokens", "48", "maximum tokens per request")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let ctx = ctx_from_args(&a)?;
+    let model = native_model(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
+    let (tok, _, _) = report::build_data(&ctx, &model.manifest)?;
+
+    let n = a.usize("requests").map_err(|e| anyhow!(e))?;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| Request::new(i as u64, TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()]))
+        .collect();
+    let cfg = ServeCfg {
+        max_active: a.usize("max-active").map_err(|e| anyhow!(e))?,
+        threads: a.usize("threads").map_err(|e| anyhow!(e))?,
+        quantum: a.usize("quantum").map_err(|e| anyhow!(e))?,
+        sample: SampleCfg {
+            temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
+            top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
+            max_new_tokens: a.usize("max-new-tokens").map_err(|e| anyhow!(e))?,
+            seed: ctx.train_seed,
+            stop_at_eot: true,
+        },
+    };
+    let (max_active, threads) = (cfg.max_active, cfg.threads);
+    let sched = Scheduler::new(model, cfg);
+
+    let t0 = Instant::now();
+    let completions = sched.serve(&tok, requests)?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    let mut tokens = 0usize;
+    for c in &completions {
+        tokens += c.tokens_generated;
+        let head: String = c.completion.replace('\n', " ").chars().take(56).collect();
+        let why = match &c.finish {
+            FinishReason::Eot => "eot".to_string(),
+            FinishReason::MaxTokens => "cap".to_string(),
+            FinishReason::CtxFull => "ctx".to_string(),
+            FinishReason::Rejected(e) => format!("rejected: {e}"),
+        };
+        println!("#{:<4} {:>3} tok [{why}] {head}", c.request_id, c.tokens_generated);
+    }
+    println!(
+        "\nserved {} requests / {tokens} tokens in {secs:.2}s — {:.1} tok/s \
+         (max_active {max_active}, threads {threads})",
+        completions.len(),
+        tokens as f64 / secs.max(1e-9),
+    );
     Ok(())
 }
 

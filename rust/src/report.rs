@@ -26,6 +26,7 @@ use crate::data::Dataset;
 use crate::generation::{self, SampleCfg, TABLE3_PROMPTS};
 use crate::infer::{Model, ModelWeights};
 use crate::metrics;
+use crate::serve;
 #[cfg(feature = "pjrt")]
 use crate::runtime::PjrtEngine;
 use crate::runtime::StepEngine;
@@ -302,11 +303,13 @@ pub fn run_table2(factory: &dyn EngineFactory, ctx: &ExperimentCtx) -> Result<St
 /// Greedy Table-3 completions for one trained engine.
 ///
 /// Serving-path wiring: pull the weights out of the engine once, build a
-/// shared native [`Model`], and decode every prompt incrementally — O(1)
-/// state per token for pure-HSM stacks instead of a full-context
-/// `decode` artifact pass per token.  Engines that cannot export flat
-/// parameters (or whose manifest the native engine rejects) fall back to
-/// windowed decoding through their own `decode`.
+/// shared native [`Model`], and decode the whole prompt suite through
+/// the continuous-batching [`serve::Scheduler`] — concurrent sessions,
+/// O(1) state per token for pure-HSM stacks, and byte-identical output
+/// to sequential decoding (greedy sampling + per-request RNG streams).
+/// Engines that cannot export flat parameters (or whose manifest the
+/// native engine rejects) fall back to windowed decoding through their
+/// own `decode`.
 ///
 /// Prompts longer than the context window are truncated from the left
 /// (keep the suffix — it determines the continuation).
@@ -324,26 +327,42 @@ fn table3_completions(
         .and_then(|flat| ModelWeights::from_flat(&manifest, &flat).ok())
         .and_then(|w| Model::shared(manifest, w).ok());
 
-    let mut native_dec;
-    let mut window_dec;
-    let dec: &mut dyn crate::infer::Decoder = match native {
+    let mut cells = Vec::with_capacity(TABLE3_PROMPTS.len());
+    match native {
         Some(model) => {
-            native_dec = model.session();
-            &mut native_dec
+            let requests: Vec<serve::Request> = TABLE3_PROMPTS
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let fits = tok.encode(p).len() < ctx_len;
+                    let prompt =
+                        if fits { (*p).to_string() } else { truncate_prompt(p, tok, ctx_len) };
+                    serve::Request { id: i as u64, prompt, max_new_tokens: None }
+                })
+                .collect();
+            let scfg = serve::ServeCfg {
+                max_active: 4,
+                threads: 2,
+                quantum: 8,
+                sample: cfg,
+            };
+            for c in serve::serve(&model, tok, requests, &scfg)? {
+                if let serve::FinishReason::Rejected(why) = &c.finish {
+                    return Err(anyhow!("table3 prompt rejected: {why}"));
+                }
+                cells.push(c.completion.replace('\n', " "));
+            }
         }
         None => {
-            window_dec = generation::WindowDecoder::new(engine, tok.eot);
-            &mut window_dec
+            let mut dec = generation::WindowDecoder::new(engine, tok.eot);
+            for prompt in TABLE3_PROMPTS {
+                let g = generation::generate(&mut dec, tok, prompt, &cfg).or_else(|_| {
+                    let short = truncate_prompt(prompt, tok, ctx_len);
+                    generation::generate(&mut dec, tok, &short, &cfg)
+                })?;
+                cells.push(g.completion.replace('\n', " "));
+            }
         }
-    };
-
-    let mut cells = Vec::with_capacity(TABLE3_PROMPTS.len());
-    for prompt in TABLE3_PROMPTS {
-        let g = generation::generate(&mut *dec, tok, prompt, &cfg).or_else(|_| {
-            let short = truncate_prompt(prompt, tok, ctx_len);
-            generation::generate(&mut *dec, tok, &short, &cfg)
-        })?;
-        cells.push(g.completion.replace('\n', " "));
     }
     Ok(cells)
 }

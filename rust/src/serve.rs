@@ -1,0 +1,587 @@
+//! Continuous-batching serve subsystem: a threaded scheduler over
+//! shared-weight decode sessions.
+//!
+//! The paper's O(1)-state incremental step (ring buffers instead of a
+//! growing KV scan) makes per-token work cheap enough that serving
+//! throughput is decided by *scheduling*, not math.  This module replaces
+//! the fixed-membership round-robin loop that
+//! [`crate::generation::generate_batch`] used to be with a real serving
+//! core:
+//!
+//! * [`Request`] / [`Completion`] — the admission/finish lifecycle of one
+//!   prompt, with a [`FinishReason`] (EOT, token cap, context eviction,
+//!   or admission rejection).
+//! * [`ServeCfg`] — admission control: at most `max_active` concurrent
+//!   [`crate::infer::DecodeSession`]s, `threads` workers stepping them,
+//!   `quantum`-token time slices.
+//! * [`Scheduler`] — continuous batching over one `Arc<`[`Model`]`>`:
+//!   the moment a sequence finishes, its session is recycled and the next
+//!   pending request is admitted — **no barrier at batch end**.  With
+//!   `threads > 1` a worker pool steps *disjoint* sessions in parallel
+//!   (the model is immutable and `Send + Sync`; every mutable byte of a
+//!   sequence lives in its own session).
+//!
+//! **Determinism invariant:** sequence `id` samples from an RNG stream
+//! seeded `cfg.sample.seed ^ id`, and no per-sequence state is shared, so
+//! completions are byte-identical whatever the admission order, quantum,
+//! `max_active`, or thread count — and identical to decoding each request
+//! alone in a fresh session.  `rust/tests/serve_parity.rs` pins this for
+//! every mixer kind.
+//!
+//! [`generate`](crate::generation::generate) (single-session) and
+//! [`generate_batch`](crate::generation::generate_batch)
+//! (fixed-membership) are thin wrappers over the same core
+//! ([`run_local`]), so the pre-scheduler parity tests keep pinning the
+//! decode semantics.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::generation::{encode_prompt, sample_logits, SampleCfg};
+use crate::infer::{Decoder, Model, NativeDecoder};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// One generation request, submitted to a [`Scheduler`].
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Caller-chosen id; the sequence's RNG stream is seeded
+    /// `cfg.sample.seed ^ id`, so ids (not scheduling order) determine
+    /// sampled text.  Duplicate ids get duplicate streams.
+    pub id: u64,
+    pub prompt: String,
+    /// Per-request cap on generated tokens (None = `cfg.sample`'s cap).
+    pub max_new_tokens: Option<usize>,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: &str) -> Self {
+        Request { id, prompt: prompt.to_string(), max_new_tokens: None }
+    }
+}
+
+/// Why a sequence left the active set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Sampled the end-of-text sentinel.
+    Eot,
+    /// Hit the request's new-token cap.
+    MaxTokens,
+    /// Evicted: the context window filled before any other stop.
+    CtxFull,
+    /// Never admitted — the prompt failed validation (empty encoding,
+    /// vocab mismatch, or longer than the context window).
+    Rejected(String),
+}
+
+/// The finished lifecycle of one [`Request`].
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub request_id: u64,
+    pub prompt: String,
+    pub completion: String,
+    pub tokens_generated: usize,
+    pub finish: FinishReason,
+}
+
+impl Completion {
+    /// Compatibility accessor matching
+    /// [`crate::generation::Generation::stopped_at_eot`].
+    pub fn stopped_at_eot(&self) -> bool {
+        self.finish == FinishReason::Eot
+    }
+}
+
+/// Scheduler configuration: admission control + worker pool shape.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Concurrent-session cap: at most this many sequences hold decode
+    /// state at once; the rest queue for admission.
+    pub max_active: usize,
+    /// Worker threads stepping sessions (1 = current thread, no spawn).
+    pub threads: usize,
+    /// Tokens a worker decodes on one sequence before rotating to the
+    /// next ready one (0 = run each admitted sequence to completion).
+    /// Pure scheduling knob — never changes sampled text.
+    pub quantum: usize,
+    /// Sampling parameters shared by every request.
+    pub sample: SampleCfg,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { max_active: 8, threads: 4, quantum: 16, sample: SampleCfg::default() }
+    }
+}
+
+/// Continuous-batching scheduler bound to one shared-weight [`Model`].
+///
+/// Holding a `Scheduler` is the multi-user serving shape: construct it
+/// once and call [`serve`](Scheduler::serve) per request batch; sessions
+/// are created lazily per call (weights are never copied — they live in
+/// the `Arc`).
+pub struct Scheduler {
+    model: Arc<Model>,
+    cfg: ServeCfg,
+}
+
+impl Scheduler {
+    pub fn new(model: Arc<Model>, cfg: ServeCfg) -> Self {
+        Scheduler { model, cfg }
+    }
+
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+
+    pub fn cfg(&self) -> &ServeCfg {
+        &self.cfg
+    }
+
+    /// Serve a batch of requests to completion; results come back in
+    /// request order.  Invalid prompts are rejected per-request
+    /// ([`FinishReason::Rejected`]) without failing the batch; engine
+    /// errors (a model/session fault) abort the whole call.
+    pub fn serve(&self, tok: &Tokenizer, requests: Vec<Request>) -> Result<Vec<Completion>> {
+        serve(&self.model, tok, requests, &self.cfg)
+    }
+}
+
+/// One-shot convenience for [`Scheduler::serve`].
+pub fn serve(
+    model: &Arc<Model>,
+    tok: &Tokenizer,
+    requests: Vec<Request>,
+    cfg: &ServeCfg,
+) -> Result<Vec<Completion>> {
+    if cfg.max_active == 0 {
+        bail!("serve: max_active must be at least 1");
+    }
+    if cfg.threads == 0 {
+        bail!("serve: threads must be at least 1");
+    }
+
+    // Validate at admission: a bad prompt becomes a Rejected completion
+    // (one user's malformed request must not fail everyone else's).
+    let mut out: Vec<Option<Completion>> = vec![None; requests.len()];
+    let mut jobs: Vec<Job> = Vec::with_capacity(requests.len());
+    for (ix, req) in requests.into_iter().enumerate() {
+        match encode_prompt(&model.manifest, tok, &req.prompt) {
+            Ok(ids) => jobs.push(Job {
+                ix,
+                id: req.id,
+                budget: req.max_new_tokens.unwrap_or(cfg.sample.max_new_tokens),
+                prompt: req.prompt,
+                ids,
+            }),
+            Err(e) => {
+                out[ix] = Some(Completion {
+                    request_id: req.id,
+                    prompt: req.prompt,
+                    completion: String::new(),
+                    tokens_generated: 0,
+                    finish: FinishReason::Rejected(format!("{e:#}")),
+                });
+            }
+        }
+    }
+
+    if !jobs.is_empty() {
+        let n_sessions = cfg.max_active.min(jobs.len());
+        if cfg.threads == 1 {
+            let mut sessions: Vec<NativeDecoder> =
+                (0..n_sessions).map(|_| model.session()).collect();
+            run_local(&mut sessions, tok, jobs, &cfg.sample, cfg.quantum, &mut out)?;
+        } else {
+            run_parallel(model, tok, jobs, cfg, n_sessions, &mut out)?;
+        }
+    }
+
+    Ok(out
+        .into_iter()
+        .map(|c| c.expect("scheduler drained every request"))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Core: per-sequence state machine, shared by the local and threaded drivers
+// ---------------------------------------------------------------------------
+
+/// An admitted-but-not-started request: slot index, validated prompt ids
+/// and the per-request token budget.
+pub(crate) struct Job {
+    /// Output slot (input order).
+    pub(crate) ix: usize,
+    pub(crate) id: u64,
+    pub(crate) budget: usize,
+    pub(crate) prompt: String,
+    pub(crate) ids: Vec<u32>,
+}
+
+/// One in-flight sequence.  Everything mutable is per-request (decoder
+/// state, token buffer, RNG stream), which is the whole determinism
+/// argument: any interleaving of disjoint `Active`s produces identical
+/// text.
+struct Active<D> {
+    dec: D,
+    ix: usize,
+    id: u64,
+    prompt: String,
+    ids: Vec<u32>,
+    prompt_len: usize,
+    last: u32,
+    rng: Rng,
+    budget: usize,
+}
+
+/// Bind a decoder to a job: reset, prefill all but the last prompt token
+/// (its logits come from the first `step`), seed the sequence RNG.
+fn admit<D: Decoder>(mut dec: D, job: Job, cfg: &SampleCfg) -> Result<Active<D>> {
+    let prompt_len = job.ids.len();
+    dec.reset();
+    dec.prefill(&job.ids[..prompt_len - 1])?;
+    Ok(Active {
+        last: job.ids[prompt_len - 1],
+        dec,
+        ix: job.ix,
+        id: job.id,
+        prompt: job.prompt,
+        ids: job.ids,
+        prompt_len,
+        rng: Rng::new(cfg.seed ^ job.id),
+        budget: job.budget,
+    })
+}
+
+/// Decode up to `quantum` tokens (0 = until finished).  Returns
+/// `Some(reason)` when the sequence is done, `None` when its time slice
+/// expired.  The stop conditions and sampling order mirror the original
+/// `generate` loop exactly, so wrappers stay byte-compatible.
+fn advance<D: Decoder>(
+    seq: &mut Active<D>,
+    tok: &Tokenizer,
+    cfg: &SampleCfg,
+    quantum: usize,
+) -> Result<Option<FinishReason>> {
+    let ctx = seq.dec.manifest().ctx;
+    let mut sliced = 0usize;
+    loop {
+        if seq.ids.len() >= ctx {
+            return Ok(Some(FinishReason::CtxFull));
+        }
+        if seq.ids.len() - seq.prompt_len >= seq.budget {
+            return Ok(Some(FinishReason::MaxTokens));
+        }
+        let logits = seq.dec.step(seq.last)?;
+        let next = sample_logits(logits, cfg, &mut seq.rng);
+        if cfg.stop_at_eot && next == tok.eot {
+            return Ok(Some(FinishReason::Eot));
+        }
+        seq.ids.push(next);
+        seq.last = next;
+        sliced += 1;
+        if quantum > 0 && sliced >= quantum {
+            return Ok(None);
+        }
+    }
+}
+
+/// Tear a finished sequence down into its completion, recovering the
+/// decoder for the free pool.
+fn complete<D>(seq: Active<D>, tok: &Tokenizer, finish: FinishReason) -> (D, usize, Completion) {
+    let Active { dec, ix, id, prompt, ids, prompt_len, .. } = seq;
+    let completion = Completion {
+        request_id: id,
+        prompt,
+        completion: tok.decode(&ids[prompt_len..]),
+        tokens_generated: ids.len() - prompt_len,
+        finish,
+    };
+    (dec, ix, completion)
+}
+
+// ---------------------------------------------------------------------------
+// Single-threaded driver (also the generate / generate_batch wrapper core)
+// ---------------------------------------------------------------------------
+
+/// Continuous batching on the current thread: breadth-first over the
+/// active set in `quantum`-token slices; a finishing sequence's decoder
+/// immediately admits the next pending job.  `decoders.len()` is the
+/// effective `max_active`.
+pub(crate) fn run_local<D: Decoder>(
+    decoders: &mut [D],
+    tok: &Tokenizer,
+    jobs: Vec<Job>,
+    cfg: &SampleCfg,
+    quantum: usize,
+    out: &mut [Option<Completion>],
+) -> Result<()> {
+    if decoders.is_empty() && !jobs.is_empty() {
+        bail!("serve: {} requests but no decode sessions", jobs.len());
+    }
+    let mut free: VecDeque<&mut D> = decoders.iter_mut().collect();
+    let mut pending: VecDeque<Job> = jobs.into();
+    let mut ready: VecDeque<Active<&mut D>> = VecDeque::new();
+    loop {
+        // Admission: fill every free session before stepping (job order
+        // meets decoder order, so fixed-membership callers get the same
+        // decoder↔prompt pairing the old round-robin loop had).
+        while !pending.is_empty() {
+            let Some(dec) = free.pop_front() else { break };
+            let job = pending.pop_front().unwrap();
+            ready.push_back(admit(dec, job, cfg)?);
+        }
+        let Some(mut seq) = ready.pop_front() else { break };
+        match advance(&mut seq, tok, cfg, quantum)? {
+            Some(finish) => {
+                let (dec, ix, completion) = complete(seq, tok, finish);
+                out[ix] = Some(completion);
+                free.push_back(dec);
+            }
+            None => ready.push_back(seq),
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Threaded driver: worker pool over disjoint sessions
+// ---------------------------------------------------------------------------
+
+/// State behind the scheduler mutex.  Workers hold the lock only to move
+/// sequences between queues — prefill and decode run outside it.
+struct Shared {
+    pending: VecDeque<Job>,
+    free: Vec<NativeDecoder>,
+    ready: VecDeque<Active<NativeDecoder>>,
+    done: Vec<(usize, Completion)>,
+    /// Admitted but unfinished sequences (in `ready` or claimed by a
+    /// worker).  `inflight == 0 && pending.is_empty()` is the drain
+    /// condition.
+    inflight: usize,
+    failed: Option<anyhow::Error>,
+}
+
+fn run_parallel(
+    model: &Arc<Model>,
+    tok: &Tokenizer,
+    jobs: Vec<Job>,
+    cfg: &ServeCfg,
+    n_sessions: usize,
+    out: &mut [Option<Completion>],
+) -> Result<()> {
+    let workers = cfg.threads.min(jobs.len()).max(1);
+    let shared = Mutex::new(Shared {
+        pending: jobs.into(),
+        free: (0..n_sessions).map(|_| model.session()).collect(),
+        ready: VecDeque::new(),
+        done: Vec::new(),
+        inflight: 0,
+        failed: None,
+    });
+    let wake = Condvar::new();
+
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| worker(&shared, &wake, tok, cfg));
+        }
+    });
+
+    // A worker panic would have re-raised when the scope closed above,
+    // so the lock cannot be poisoned here.
+    let shared = shared.into_inner().expect("workers joined without panicking");
+    if let Some(e) = shared.failed {
+        return Err(e);
+    }
+    for (ix, completion) in shared.done {
+        out[ix] = Some(completion);
+    }
+    Ok(())
+}
+
+/// What a worker claimed under the lock.
+enum Work {
+    Admit(Job, NativeDecoder),
+    Step(Active<NativeDecoder>),
+}
+
+/// Unwind guard: a worker that panics **outside** the lock (decoder or
+/// tensor code) would otherwise strand its claimed sequence's `inflight`
+/// count and leave the siblings waiting forever.  On a panicking unwind
+/// this flags `failed` and wakes everyone, so the siblings exit, the
+/// scope joins, and `std::thread::scope` re-raises the panic instead of
+/// hanging.  (A panic taken *while holding* the lock poisons it, which
+/// already crashes the siblings on their `expect` — also not a hang.)
+struct PanicGuard<'a> {
+    shared: &'a Mutex<Shared>,
+    wake: &'a Condvar,
+}
+
+impl Drop for PanicGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            if let Ok(mut g) = self.shared.lock() {
+                if g.failed.is_none() {
+                    g.failed = Some(anyhow!("serve: a worker thread panicked"));
+                }
+            }
+            self.wake.notify_all();
+        }
+    }
+}
+
+fn worker(shared: &Mutex<Shared>, wake: &Condvar, tok: &Tokenizer, cfg: &ServeCfg) {
+    let _guard = PanicGuard { shared, wake };
+    loop {
+        let work = {
+            let mut g = shared.lock().expect("scheduler lock poisoned");
+            loop {
+                if g.failed.is_some() {
+                    return;
+                }
+                if let Some(seq) = g.ready.pop_front() {
+                    break Work::Step(seq);
+                }
+                // Continuous admission: any free session + pending job
+                // pairs up immediately — no end-of-batch barrier.
+                if !g.pending.is_empty() && !g.free.is_empty() {
+                    let job = g.pending.pop_front().unwrap();
+                    let dec = g.free.pop().unwrap();
+                    g.inflight += 1;
+                    break Work::Admit(job, dec);
+                }
+                if g.inflight == 0 && g.pending.is_empty() {
+                    return; // drained
+                }
+                g = wake.wait(g).expect("scheduler lock poisoned");
+            }
+        };
+
+        // Heavy work (prefill / quantum of decode steps) off the lock.
+        let stepped = match work {
+            Work::Admit(job, dec) => admit(dec, job, &cfg.sample).and_then(|mut seq| {
+                advance(&mut seq, tok, &cfg.sample, cfg.quantum).map(|f| (seq, f))
+            }),
+            Work::Step(mut seq) => {
+                advance(&mut seq, tok, &cfg.sample, cfg.quantum).map(|f| (seq, f))
+            }
+        };
+
+        match stepped {
+            Ok((seq, None)) => {
+                let mut g = shared.lock().expect("scheduler lock poisoned");
+                g.ready.push_back(seq);
+                drop(g);
+                wake.notify_one();
+            }
+            Ok((seq, Some(finish))) => {
+                let (dec, ix, completion) = complete(seq, tok, finish);
+                let mut g = shared.lock().expect("scheduler lock poisoned");
+                g.done.push((ix, completion));
+                g.free.push(dec);
+                g.inflight -= 1;
+                drop(g);
+                // A session freed AND possibly the last sequence: wake
+                // everyone so admitters and the drain check both run.
+                wake.notify_all();
+            }
+            Err(e) => {
+                let mut g = shared.lock().expect("scheduler lock poisoned");
+                g.inflight -= 1;
+                if g.failed.is_none() {
+                    g.failed = Some(e);
+                }
+                drop(g);
+                wake.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LayerInfo;
+    use crate::config::Manifest;
+    use crate::infer::{weights, ModelWeights};
+    use crate::tokenizer::trainer as tok_trainer;
+
+    fn model(vocab: usize, ctx: usize) -> Arc<Model> {
+        let layers = vec![
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+        ];
+        let m = Manifest::synthetic("hsm_ab", layers, 8, ctx, vocab, 1);
+        let flat = weights::seeded_flat(&m, 21);
+        Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+    }
+
+    fn tok() -> Tokenizer {
+        let text = crate::corpus::generate(11, 60);
+        tok_trainer::train(&text, 280).unwrap()
+    }
+
+    #[test]
+    fn scheduler_and_convenience_fn_agree() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let cfg = ServeCfg {
+            max_active: 2,
+            threads: 1,
+            quantum: 3,
+            sample: SampleCfg { max_new_tokens: 6, seed: 4, ..Default::default() },
+        };
+        let reqs = |s: u64| {
+            vec![Request::new(s, "Once upon a time"), Request::new(s + 1, "Lily likes cats")]
+        };
+        let a = serve(&model, &tok, reqs(0), &cfg).unwrap();
+        let b = Scheduler::new(Arc::clone(&model), cfg).serve(&tok, reqs(0)).unwrap();
+        assert_eq!(a.len(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.completion, y.completion);
+            assert_eq!(x.request_id, y.request_id);
+        }
+    }
+
+    #[test]
+    fn rejected_request_does_not_fail_the_batch() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let cfg = ServeCfg {
+            threads: 1,
+            sample: SampleCfg { max_new_tokens: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let reqs = vec![Request::new(0, "Once upon a time"), Request::new(1, "")];
+        let comps = serve(&model, &tok, reqs, &cfg).unwrap();
+        assert_eq!(comps.len(), 2);
+        assert!(comps[0].tokens_generated > 0 || comps[0].finish == FinishReason::Eot);
+        assert!(matches!(comps[1].finish, FinishReason::Rejected(_)));
+        assert_eq!(comps[1].tokens_generated, 0);
+    }
+
+    #[test]
+    fn zero_capacity_or_threads_is_an_error() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let bad = |max_active, threads| ServeCfg {
+            max_active,
+            threads,
+            ..Default::default()
+        };
+        let req = vec![Request::new(0, "hi there")];
+        assert!(serve(&model, &tok, req.clone(), &bad(0, 1)).is_err());
+        assert!(serve(&model, &tok, req, &bad(1, 0)).is_err());
+    }
+
+    #[test]
+    fn empty_request_batch_is_empty() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let comps = serve(&model, &tok, Vec::new(), &ServeCfg::default()).unwrap();
+        assert!(comps.is_empty());
+    }
+}

@@ -37,18 +37,20 @@ fn checkpoint_roundtrip_through_engine() {
     let m = test_manifest("hsm_ab", 4, 32, 300);
     let mut eng = MockEngine::new(m.clone(), 1.8, 0.01);
     eng.init(0).unwrap();
-    let names: Vec<String> = m.params.iter().map(|p| p.name.clone()).collect();
-    let shapes: Vec<Vec<usize>> = m.params.iter().map(|p| p.shape.clone()).collect();
     let params = eng.get_params().unwrap();
     let (mm, vv) = eng.get_state().unwrap();
-    let ck = Checkpoint::from_training("hsm_ab", "ci", 10, &names, &shapes, params.clone(), mm, vv);
+    let ck = Checkpoint::from_training(&m, 10, params.clone(), mm, vv);
     let path = std::env::temp_dir().join("hsm_integ_ckpt.bin");
     ck.save(&path).unwrap();
     let re = Checkpoint::load(&path).unwrap();
-    let mut eng2 = MockEngine::new(m, 1.8, 0.01);
+    let mut eng2 = MockEngine::new(m.clone(), 1.8, 0.01);
     eng2.set_params(re.group("param")).unwrap();
     assert_eq!(eng2.get_params().unwrap(), params);
     assert_eq!(re.step(), 10);
+    // The embedded manifest snapshot round-trips the model shape.
+    let m2 = re.manifest().unwrap().expect("manifest snapshot");
+    assert_eq!(m2.variant, m.variant);
+    assert_eq!(m2.params, m.params);
 }
 
 #[test]

@@ -1,0 +1,211 @@
+//! Serve-scheduler parity: continuous batching at arbitrary
+//! (`max_active`, `threads`, `quantum`) must produce **byte-identical**
+//! completions to sequential single-session decoding, for every mixer
+//! kind — the determinism invariant the serve module promises (per-
+//! request RNG streams `seed ^ id`, disjoint per-sequence state).
+//!
+//! Also pins the admission/eviction edge cases: context-window eviction
+//! frees slots for pending requests (more requests than `max_active`),
+//! per-request token budgets, rejected prompts, and the fixed-membership
+//! wrapper's length-mismatch check.
+
+use std::sync::Arc;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::{self, SampleCfg};
+use hsm::infer::{weights, Model, ModelWeights};
+use hsm::serve::{serve, FinishReason, Request, Scheduler, ServeCfg};
+use hsm::tokenizer::Tokenizer;
+
+const KINDS: &[&str] = &["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"];
+
+/// Scheduling shapes to sweep: single-file, more threads than sessions,
+/// more sessions than threads, and a wide parallel pool.
+const SHAPES: &[(usize, usize, usize)] = &[
+    // (max_active, threads, quantum)
+    (1, 1, 0),
+    (2, 4, 1),
+    (3, 2, 5),
+    (8, 4, 2),
+];
+
+const PROMPTS: &[&str] = &[
+    "Once upon a time",
+    "Lily likes cats",
+    "Jack went to",
+    "Once upon a time",
+    "Ben and Lily wanted cake",
+    "The moon was big",
+];
+
+fn layers_for(kind: &str) -> Vec<LayerInfo> {
+    match kind {
+        "ab" => vec![
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![1, 2, 4, 8], ffn: 24 },
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![2, 4, 8, 16], ffn: 24 },
+        ],
+        _ => vec![
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![1], ffn: 24 },
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![3], ffn: 24 },
+        ],
+    }
+}
+
+fn model_for(kind: &str, ctx: usize, vocab: usize) -> Arc<Model> {
+    let m = Manifest::synthetic(kind, layers_for(kind), 16, ctx, vocab, 2);
+    let flat = weights::seeded_flat(&m, 31);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn tok() -> Tokenizer {
+    let text = hsm::corpus::generate(9, 80);
+    hsm::tokenizer::trainer::train(&text, 300).unwrap()
+}
+
+/// The ground truth the scheduler must match: each request decoded alone
+/// in a fresh session, with its RNG stream seeded `cfg.seed ^ id`.
+fn sequential_reference(
+    model: &Arc<Model>,
+    tok: &Tokenizer,
+    prompts: &[&str],
+    cfg: &SampleCfg,
+) -> Vec<generation::Generation> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let solo = SampleCfg { seed: cfg.seed ^ i as u64, ..cfg.clone() };
+            generation::generate(&mut model.session(), tok, p, &solo).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn continuous_batching_matches_sequential_for_every_mixer_kind() {
+    let tok = tok();
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 8,
+        max_new_tokens: 8,
+        seed: 11,
+        stop_at_eot: true,
+    };
+    for kind in KINDS {
+        let model = model_for(kind, 48, tok.vocab_size());
+        let reference = sequential_reference(&model, &tok, PROMPTS, &cfg);
+        for &(max_active, threads, quantum) in SHAPES {
+            let scfg = ServeCfg { max_active, threads, quantum, sample: cfg.clone() };
+            let requests: Vec<Request> =
+                PROMPTS.iter().enumerate().map(|(i, p)| Request::new(i as u64, p)).collect();
+            let comps = serve(&model, &tok, requests, &scfg).unwrap();
+            assert_eq!(comps.len(), reference.len(), "{kind}: completion count");
+            for (i, (c, r)) in comps.iter().zip(&reference).enumerate() {
+                assert_eq!(c.request_id, i as u64, "{kind}: order not preserved");
+                assert_eq!(
+                    c.completion, r.completion,
+                    "{kind}: request {i} diverged at max_active={max_active} \
+                     threads={threads} quantum={quantum}"
+                );
+                assert_eq!(c.tokens_generated, r.tokens_generated, "{kind}: request {i} length");
+                assert_eq!(c.stopped_at_eot(), r.stopped_at_eot, "{kind}: request {i} eot flag");
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_frees_slots_and_preserves_order() {
+    // Tiny context, no EOT stop, huge budget: every sequence runs to
+    // context eviction, and 9 requests must flow through 2 sessions.
+    let tok = tok();
+    let ctx = 24;
+    let model = model_for("ab", ctx, tok.vocab_size());
+    let cfg = SampleCfg {
+        temperature: 0.9,
+        top_k: 0,
+        max_new_tokens: 500,
+        seed: 3,
+        stop_at_eot: false,
+    };
+    let prompts: Vec<&str> = (0..9).map(|i| PROMPTS[i % PROMPTS.len()]).collect();
+    let reference = sequential_reference(&model, &tok, &prompts, &cfg);
+
+    let scfg = ServeCfg { max_active: 2, threads: 3, quantum: 4, sample: cfg };
+    let requests: Vec<Request> =
+        prompts.iter().enumerate().map(|(i, p)| Request::new(i as u64, p)).collect();
+    let comps = Scheduler::new(Arc::clone(&model), scfg).serve(&tok, requests).unwrap();
+
+    assert_eq!(comps.len(), 9);
+    for (i, (c, r)) in comps.iter().zip(&reference).enumerate() {
+        assert_eq!(c.request_id, i as u64, "order not preserved");
+        assert_eq!(c.finish, FinishReason::CtxFull, "request {i} should evict on a full window");
+        assert_eq!(c.completion, r.completion, "request {i} diverged under eviction pressure");
+        let prompt_tokens = tok.encode(&c.prompt).len();
+        assert_eq!(c.tokens_generated, ctx - prompt_tokens, "request {i} fills the window");
+    }
+}
+
+#[test]
+fn per_request_budget_overrides_the_shared_cap() {
+    let tok = tok();
+    let model = model_for("ab", 64, tok.vocab_size());
+    let sample = SampleCfg {
+        temperature: 0.7,
+        top_k: 0,
+        max_new_tokens: 12,
+        seed: 7,
+        stop_at_eot: false,
+    };
+    let scfg = ServeCfg { max_active: 2, threads: 2, quantum: 3, sample };
+    let mut short = Request::new(0, "Once upon a time");
+    short.max_new_tokens = Some(3);
+    let long = Request::new(1, "Once upon a time");
+    let comps = serve(&model, &tok, vec![short, long], &scfg).unwrap();
+    assert_eq!(comps[0].tokens_generated, 3);
+    assert_eq!(comps[0].finish, FinishReason::MaxTokens);
+    assert_eq!(comps[1].tokens_generated, 12);
+    // Same id-stream prefix: the capped request is a prefix of the long
+    // one only when ids differ... they don't share a stream (0 vs 1), so
+    // just pin that both decoded independently and deterministically.
+    let again = serve(
+        &model,
+        &tok,
+        vec![
+            { let mut r = Request::new(0, "Once upon a time"); r.max_new_tokens = Some(3); r },
+            Request::new(1, "Once upon a time"),
+        ],
+        &scfg,
+    )
+    .unwrap();
+    assert_eq!(comps[0].completion, again[0].completion);
+    assert_eq!(comps[1].completion, again[1].completion);
+}
+
+#[test]
+fn rejection_and_length_mismatch_edges() {
+    let tok = tok();
+    let model = model_for("ab", 32, tok.vocab_size());
+
+    // A prompt longer than the context window is rejected per-request;
+    // the rest of the batch still completes.
+    let monster = "Once upon a time there was a pumpkin. ".repeat(40);
+    let reqs = vec![Request::new(0, &monster), Request::new(1, "Lily likes cats")];
+    let scfg = ServeCfg {
+        max_active: 2,
+        threads: 2,
+        quantum: 2,
+        sample: SampleCfg { max_new_tokens: 4, ..Default::default() },
+    };
+    let comps = serve(&model, &tok, reqs, &scfg).unwrap();
+    assert!(matches!(comps[0].finish, FinishReason::Rejected(_)), "oversize prompt must reject");
+    assert_eq!(comps[0].tokens_generated, 0);
+    assert!(!matches!(comps[1].finish, FinishReason::Rejected(_)));
+
+    // The fixed-membership wrapper still pins its length check.
+    let mut sessions = vec![model.session()];
+    assert!(
+        generation::generate_batch(&mut sessions, &tok, &["a", "b"], &SampleCfg::default())
+            .is_err(),
+        "decoder/prompt length mismatch must error"
+    );
+}
