@@ -80,9 +80,10 @@ fn main() -> Result<()> {
         threads: a.usize("threads").map_err(|e| anyhow!(e))?,
         quantum: 16,
         sample,
+        ..Default::default()
     };
     let (max_active, threads) = (cfg.max_active, cfg.threads);
-    let sched = Scheduler::new(Arc::clone(&model), cfg);
+    let sched = Scheduler::new(Arc::clone(&model), cfg)?;
 
     let t0 = Instant::now();
     let completions = sched.serve(&tok, requests)?;

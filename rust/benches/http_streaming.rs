@@ -1,0 +1,285 @@
+//! Bench: the HTTP streaming front-end vs the in-process scheduler —
+//! **time-to-first-token** (TTFT) and **streamed tok/s**.
+//!
+//! Three measurements over identical synthetic weights (no artifacts, no
+//! PJRT):
+//!
+//! 1. **In-process batch** — `serve()` over N requests: the tok/s
+//!    ceiling with zero transport and zero streaming.
+//! 2. **In-process streaming** — a resident `StreamScheduler`, all N
+//!    requests submitted at once, one collector thread per stream:
+//!    per-request TTFT (submit → first `TokenEvent`) and drained tok/s.
+//! 3. **HTTP streaming** — the same requests through a loopback
+//!    `HttpServer` (`POST /v1/stream`, chunked SSE), C client threads:
+//!    per-request TTFT (connect → first delta) and end-to-end streamed
+//!    tok/s.
+//!
+//! Every path must produce byte-identical text (same request ids → same
+//! RNG streams); the bench asserts that, because a throughput number
+//! from diverging outputs would be meaningless.
+//!
+//! Results land in `BENCH_http.json` (override with `HSM_BENCH_OUT`);
+//! `HSM_BENCH_REQUESTS` scales the request count.
+//!
+//! Run: `cargo bench --bench http_streaming`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::{SampleCfg, TABLE3_PROMPTS};
+use hsm::infer::{weights, Model, ModelWeights};
+use hsm::serve::{serve, Request, ServeCfg, StreamScheduler, TokenEvent};
+use hsm::server::api::GenerateRequest;
+use hsm::server::{client, HttpServer};
+use hsm::tokenizer::Tokenizer;
+
+fn synthetic_model(ctx: usize, vocab: usize) -> Arc<Model> {
+    let (dim, heads, ffn) = (64, 4, 128);
+    let layers: Vec<LayerInfo> = (0..4)
+        .map(|l| LayerInfo {
+            kind: "ab".to_string(),
+            heads,
+            shifts: vec![(1usize << l.min(5)).min(ctx / 2)],
+            ffn,
+        })
+        .collect();
+    let m = Manifest::synthetic("hsm_ab", layers, dim, ctx, vocab, 1);
+    let flat = weights::seeded_flat(&m, 17);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn requests(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request::new(i as u64, TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()]))
+        .collect()
+}
+
+fn fnv(digest: &mut u64, s: &str) {
+    for b in s.as_bytes() {
+        *digest = (*digest ^ *b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Digest completions in request-id order so every path hashes the same
+/// sequence regardless of arrival order.
+fn digest_ordered(texts: &mut [(u64, String)]) -> u64 {
+    texts.sort_by_key(|(id, _)| *id);
+    let mut d = 0xcbf2_9ce4_8422_2325u64;
+    for (_, t) in texts.iter() {
+        fnv(&mut d, t);
+    }
+    d
+}
+
+struct Percentiles {
+    mean: f64,
+    p50: f64,
+    p95: f64,
+}
+
+fn percentiles(samples: &mut [f64]) -> Percentiles {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let at = |q: f64| samples[((samples.len() - 1) as f64 * q).round() as usize];
+    Percentiles {
+        mean: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50: at(0.5),
+        p95: at(0.95),
+    }
+}
+
+fn main() {
+    let n: usize = std::env::var("HSM_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24)
+        .max(1);
+    let clients: usize = 6.min(n);
+    let out_path =
+        std::env::var("HSM_BENCH_OUT").unwrap_or_else(|_| "BENCH_http.json".to_string());
+
+    let text = hsm::corpus::generate(1234, 400);
+    let tok: Tokenizer = hsm::tokenizer::trainer::train(&text, 512).unwrap();
+    let ctx = 256;
+    let model = synthetic_model(ctx, tok.vocab_size());
+    let sample = SampleCfg {
+        temperature: 0.8,
+        top_k: 40,
+        max_new_tokens: 48,
+        seed: 5,
+        stop_at_eot: true,
+    };
+    let cfg = ServeCfg { max_active: 8, threads: 4, quantum: 16, sample, ..Default::default() };
+
+    // 1. In-process batch: throughput ceiling, whole completions only.
+    let run_batch = || {
+        let comps = serve(&model, &tok, requests(n), &cfg).unwrap();
+        let mut texts: Vec<(u64, String)> =
+            comps.iter().map(|c| (c.request_id, c.completion.clone())).collect();
+        let tokens: usize = comps.iter().map(|c| c.tokens_generated).sum();
+        (tokens, digest_ordered(&mut texts))
+    };
+    run_batch(); // warmup
+    let t0 = Instant::now();
+    let (batch_tokens, batch_digest) = run_batch();
+    let batch_secs = t0.elapsed().as_secs_f64();
+    let batch_tps = batch_tokens as f64 / batch_secs;
+    println!(
+        "in-process batch:     {batch_tokens} tokens in {batch_secs:.3}s → {batch_tps:>8.1} tok/s"
+    );
+
+    // 2. In-process streaming: resident scheduler, TTFT per request.
+    let sched =
+        StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg.clone()).unwrap();
+    let t0 = Instant::now();
+    let collectors: Vec<_> = requests(n)
+        .into_iter()
+        .map(|r| {
+            let stream = sched.submit(r).unwrap();
+            let submitted = Instant::now();
+            std::thread::spawn(move || {
+                let mut first: Option<f64> = None;
+                let mut text = String::new();
+                let mut id = 0u64;
+                let mut tokens = 0usize;
+                for ev in stream {
+                    if first.is_none() {
+                        first = Some(submitted.elapsed().as_secs_f64() * 1e3);
+                    }
+                    match ev {
+                        TokenEvent::Token { text_delta, .. } => {
+                            tokens += 1;
+                            text.push_str(&text_delta);
+                        }
+                        TokenEvent::Done { text_delta, completion } => {
+                            text.push_str(&text_delta);
+                            id = completion.request_id;
+                        }
+                    }
+                }
+                (id, text, tokens, first.unwrap_or(f64::NAN))
+            })
+        })
+        .collect();
+    let mut inproc_texts = Vec::new();
+    let mut inproc_ttft = Vec::new();
+    let mut inproc_tokens = 0usize;
+    for c in collectors {
+        let (id, text, tokens, ttft) = c.join().unwrap();
+        inproc_texts.push((id, text));
+        inproc_ttft.push(ttft);
+        inproc_tokens += tokens;
+    }
+    let inproc_secs = t0.elapsed().as_secs_f64();
+    sched.shutdown();
+    let inproc_tps = inproc_tokens as f64 / inproc_secs;
+    assert_eq!(
+        digest_ordered(&mut inproc_texts),
+        batch_digest,
+        "in-process streamed text diverged from batch"
+    );
+    let inproc_p = percentiles(&mut inproc_ttft);
+    println!(
+        "in-process streaming: {inproc_tokens} tokens in {inproc_secs:.3}s → {inproc_tps:>8.1} tok/s \
+         | TTFT mean {:.1}ms p50 {:.1}ms p95 {:.1}ms",
+        inproc_p.mean, inproc_p.p50, inproc_p.p95
+    );
+
+    // 3. HTTP streaming over loopback.
+    let sched =
+        Arc::new(StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg.clone()).unwrap());
+    let server = HttpServer::bind("127.0.0.1:0", sched).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // One non-streaming request-response RTT for scale.
+    let mut rtt_req = GenerateRequest::new(TABLE3_PROMPTS[0]);
+    rtt_req.id = Some(0);
+    let t0 = Instant::now();
+    client::generate(&addr, &rtt_req).unwrap();
+    let generate_rtt_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|w| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut texts: Vec<(u64, String)> = Vec::new();
+                let mut ttfts: Vec<f64> = Vec::new();
+                let mut tokens = 0usize;
+                for i in (w..n).step_by(clients.max(1)) {
+                    let mut req = GenerateRequest::new(TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()]);
+                    req.id = Some(i as u64);
+                    let sent = Instant::now();
+                    let mut first: Option<f64> = None;
+                    let mut text = String::new();
+                    let completion = client::stream(&addr, &req, |token, delta| {
+                        if first.is_none() {
+                            first = Some(sent.elapsed().as_secs_f64() * 1e3);
+                        }
+                        if token.is_some() {
+                            tokens += 1;
+                        }
+                        text.push_str(delta);
+                    })
+                    .unwrap();
+                    texts.push((completion.request_id, text));
+                    ttfts.push(first.unwrap_or(f64::NAN));
+                }
+                (texts, ttfts, tokens)
+            })
+        })
+        .collect();
+    let mut http_texts = Vec::new();
+    let mut http_ttft = Vec::new();
+    let mut http_tokens = 0usize;
+    for w in workers {
+        let (texts, ttfts, tokens) = w.join().unwrap();
+        http_texts.extend(texts);
+        http_ttft.extend(ttfts);
+        http_tokens += tokens;
+    }
+    let http_secs = t0.elapsed().as_secs_f64();
+    server.shutdown();
+    let http_tps = http_tokens as f64 / http_secs;
+    assert_eq!(
+        digest_ordered(&mut http_texts),
+        batch_digest,
+        "HTTP streamed text diverged from the in-process scheduler"
+    );
+    let http_p = percentiles(&mut http_ttft);
+    println!(
+        "http streaming:       {http_tokens} tokens in {http_secs:.3}s → {http_tps:>8.1} tok/s \
+         | TTFT mean {:.1}ms p50 {:.1}ms p95 {:.1}ms | {clients} clients",
+        http_p.mean, http_p.p50, http_p.p95
+    );
+    println!("\nhttp vs in-process streaming: {:.2}× tok/s", http_tps / inproc_tps);
+    println!("generate (non-streaming) RTT: {generate_rtt_ms:.1}ms");
+    println!("parity: all three paths produced byte-identical text");
+
+    // JSON for the perf trajectory.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"http_streaming\",\n");
+    json.push_str(&format!(
+        "  \"requests\": {n}, \"clients\": {clients}, \"ctx\": {ctx}, \"dim\": 64, \
+         \"layers\": 4, \"max_new_tokens\": {},\n",
+        cfg.sample.max_new_tokens
+    ));
+    json.push_str(&format!("  \"batch_tok_per_s\": {batch_tps:.1},\n"));
+    json.push_str(&format!(
+        "  \"inproc_stream\": {{\"tok_per_s\": {inproc_tps:.1}, \"ttft_ms_mean\": {:.2}, \
+         \"ttft_ms_p50\": {:.2}, \"ttft_ms_p95\": {:.2}}},\n",
+        inproc_p.mean, inproc_p.p50, inproc_p.p95
+    ));
+    json.push_str(&format!(
+        "  \"http_stream\": {{\"tok_per_s\": {http_tps:.1}, \"ttft_ms_mean\": {:.2}, \
+         \"ttft_ms_p50\": {:.2}, \"ttft_ms_p95\": {:.2}, \"generate_rtt_ms\": {:.2}}},\n",
+        http_p.mean, http_p.p50, http_p.p95, generate_rtt_ms
+    ));
+    json.push_str(&format!(
+        "  \"http_vs_inproc_stream\": {:.3},\n  \"parity\": true\n",
+        http_tps / inproc_tps
+    ));
+    json.push_str("}\n");
+    std::fs::write(&out_path, &json).expect("writing bench json");
+    println!("\nwrote {out_path}");
+}

@@ -137,7 +137,13 @@ fn main() {
     let mut overhead_ratio = f64::NAN;
     for &threads in THREAD_GRID {
         for &max_active in ACTIVE_GRID {
-            let cfg = ServeCfg { max_active, threads, quantum: 16, sample: sample.clone() };
+            let cfg = ServeCfg {
+                max_active,
+                threads,
+                quantum: 16,
+                sample: sample.clone(),
+                ..Default::default()
+            };
             let (secs, tokens, digest) = timed(|| {
                 let comps = serve(&model, &tok, requests(n), &cfg).unwrap();
                 let mut d = 0xcbf2_9ce4_8422_2325u64;

@@ -256,6 +256,8 @@ pub fn generate<D: Decoder + ?Sized>(
         budget: cfg.max_new_tokens,
         prompt: prompt.to_string(),
         ids,
+        deadline: None,
+        sink: None,
     };
     let mut out = vec![None];
     serve::run_local(&mut [&mut *dec], tok, vec![job], cfg, 0, &mut out)?;
@@ -307,6 +309,8 @@ pub fn generate_batch<D: Decoder>(
             budget: cfg.max_new_tokens,
             prompt: (*prompt).to_string(),
             ids,
+            deadline: None,
+            sink: None,
         });
     }
     let mut out = vec![None; prompts.len()];

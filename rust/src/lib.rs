@@ -35,7 +35,8 @@
 //! | [`coordinator`] | training loops, `MockEngine`, experiment scheduler        |
 //! | [`infer`]     | [`infer::Decoder`] trait, shared-weight [`infer::Model`], per-user [`infer::DecodeSession`]s, [`infer::NativeDecoder`], full-context [`infer::WindowEngine`] |
 //! | [`generation`] | sampling + [`generation::generate`] / [`generation::generate_batch`] over any [`infer::Decoder`]; [`generation::WindowDecoder`] |
-//! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`), worker threads over disjoint sessions |
+//! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`, `max_queue_wait`), worker threads over disjoint sessions; resident [`serve::StreamScheduler`] emitting per-token [`serve::TokenEvent`]s |
+//! | [`server`]    | **cross-process serving**: hand-rolled HTTP/1.1 front-end — `POST /v1/generate`, `POST /v1/stream` (SSE chunks), `GET /healthz`, blocking [`server::client`] |
 //! | [`checkpoint`] | tensor (de)serialization (+ embedded manifest snapshot)    |
 //! | [`report`]    | Table 1/2/3, Figures 7/8 drivers                            |
 //! | [`metrics`]   | csv/markdown/stats helpers                                  |
@@ -81,7 +82,7 @@
 //!     threads: 4,
 //!     sample: SampleCfg { max_new_tokens: 16, ..Default::default() },
 //!     ..Default::default()
-//! });
+//! })?;
 //! let prompts = ["Once upon a time", "Lily likes cats", "Jack went to"];
 //! let requests: Vec<Request> = (0..8usize)
 //!     .map(|i| Request::new(i as u64, prompts[i % prompts.len()]))
@@ -92,6 +93,51 @@
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! ## Serve over HTTP
+//!
+//! The same scheduler core serves cross-process through the
+//! dependency-free HTTP front-end in [`server`]: a resident
+//! [`serve::StreamScheduler`] keeps the worker pool alive between
+//! requests and streams [`serve::TokenEvent`]s per request, so clients
+//! see tokens the moment they are sampled.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use hsm::serve::{ServeCfg, StreamScheduler};
+//! use hsm::server::HttpServer;
+//! # use hsm::config::{LayerInfo, Manifest};
+//! # use hsm::infer::{weights, Model, ModelWeights};
+//! # use hsm::tokenizer::trainer as bpe;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! # let layers = vec![LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 64 }];
+//! # let tok = bpe::train(&hsm::corpus::generate(1234, 500), 300)?;
+//! # let m = Manifest::synthetic("hsm_ab", layers, 32, 128, tok.vocab_size(), 1);
+//! # let flat = weights::seeded_flat(&m, 42);
+//! # let model = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat)?)?;
+//! let sched = Arc::new(StreamScheduler::start(model, tok, ServeCfg::default())?);
+//! let server = HttpServer::bind("127.0.0.1:8080", sched)?;
+//! println!("listening on http://{}", server.local_addr());
+//! server.join(); // park until shutdown
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Then from any process (also via `hsm request`):
+//!
+//! ```bash
+//! # whole completion at once
+//! curl -s http://127.0.0.1:8080/v1/generate \
+//!   -d '{"prompt": "Once upon a time", "id": 7, "max_new_tokens": 48}'
+//! # per-token SSE stream (text_delta events, then done)
+//! curl -sN http://127.0.0.1:8080/v1/stream \
+//!   -d '{"prompt": "Once upon a time", "max_new_tokens": 48}'
+//! ```
+//!
+//! Determinism crosses the wire: the request `id` fixes the RNG stream
+//! (`seed ^ id`), so streamed bytes are identical to the in-process
+//! scheduler and to sequential decoding.
 //!
 //! One-off generation keeps the simpler wrappers —
 //! [`generation::generate`] (single session) and
@@ -121,6 +167,7 @@ pub mod metrics;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod server;
 pub mod tokenizer;
 pub mod util;
 
@@ -128,7 +175,8 @@ pub use config::{Manifest, TrainHp};
 pub use coordinator::{TrainOutcome, Trainer, TrainerOptions};
 pub use data::{Batch, Dataset};
 pub use infer::{Decoder, DecodeSession, Model, NativeDecoder};
-pub use serve::{Completion, Request, Scheduler, ServeCfg};
+pub use serve::{Completion, Request, Scheduler, ServeCfg, StreamScheduler, TokenEvent, TokenStream};
+pub use server::HttpServer;
 #[cfg(feature = "pjrt")]
 pub use runtime::PjrtEngine;
 pub use runtime::StepEngine;

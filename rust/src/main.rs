@@ -5,7 +5,10 @@
 //! * `train`     — train one variant, log metrics, write a checkpoint.
 //! * `evaluate`  — validation loss/accuracy of a checkpoint.
 //! * `generate`  — sample completions from a (trained) model.
-//! * `serve`     — continuous-batching multi-request serving benchmark/driver.
+//! * `serve`     — continuous-batching serving: one-shot request batch, or
+//!   a streaming HTTP front-end with `--http ADDR`.
+//! * `request`   — client for a running `serve --http` server
+//!   (`/v1/generate`, or `--stream` for per-token deltas).
 //! * `report`    — regenerate a paper table/figure (table1|table2|table3|fig7|fig8).
 //! * `corpus`    — synthesise the TinyStories-like corpus to a file.
 //! * `tokenizer` — train / inspect a BPE tokenizer.
@@ -28,7 +31,8 @@ use hsm::generation::{self, SampleCfg, TABLE3_PROMPTS};
 use hsm::infer::{Model, ModelWeights};
 use hsm::report::{self, ExperimentCtx, PjrtFactory, FIG7_VARIANTS};
 use hsm::runtime::{PjrtEngine, StepEngine};
-use hsm::serve::{FinishReason, Request, Scheduler, ServeCfg};
+use hsm::serve::{FinishReason, Request, Scheduler, ServeCfg, StreamScheduler};
+use hsm::server::{api::GenerateRequest, client as http_client, HttpServer};
 use hsm::tokenizer::{trainer as tok_trainer, Tokenizer};
 use hsm::util::cli::Args;
 
@@ -43,6 +47,7 @@ fn main() -> ExitCode {
         "evaluate" => cmd_evaluate(rest),
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
+        "request" => cmd_request(rest),
         "report" => cmd_report(rest),
         "corpus" => cmd_corpus(rest),
         "tokenizer" => cmd_tokenizer(rest),
@@ -71,7 +76,8 @@ fn top_usage() -> String {
        train      train one model variant\n\
        evaluate   evaluate a checkpoint on the validation split\n\
        generate   sample text from a model\n\
-       serve      continuous-batching multi-request serving (native engine)\n\
+       serve      continuous-batching serving (one-shot batch, or --http ADDR front-end)\n\
+       request    client for a running `serve --http` server (--stream for per-token deltas)\n\
        report     regenerate a paper table/figure (table1|table2|table3|fig7|fig8)\n\
        corpus     synthesise the TinyStories-like corpus\n\
        tokenizer  train / inspect the byte-level BPE tokenizer\n\
@@ -285,10 +291,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let a = experiment_flags(Args::new("serve"))
         .required("variant", "model variant")
         .optional("checkpoint", "trained checkpoint (embedded-manifest checkpoints need no artifacts)")
-        .flag("requests", "16", "number of requests (prompts cycle the Table-3 suite)")
+        .optional("http", "serve over HTTP at this address (e.g. 127.0.0.1:8080) until killed, instead of a one-shot batch")
+        .flag("requests", "16", "batch mode: number of requests (prompts cycle the Table-3 suite)")
         .flag("max-active", "8", "admission cap: concurrent decode sessions")
         .flag("threads", "4", "worker threads stepping sessions in parallel")
-        .flag("quantum", "16", "tokens per scheduling slice (0 = run each admitted request to completion)")
+        .flag("quantum", "16", "tokens per scheduling slice")
+        .flag("max-queue-wait-ms", "0", "finish requests queued longer than this as timed_out (0 = wait forever)")
         .flag("temperature", "0.8", "sampling temperature (0 = greedy)")
         .flag("top-k", "40", "top-k filter (0 = off)")
         .flag("max-new-tokens", "48", "maximum tokens per request")
@@ -298,14 +306,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let model = native_model(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
     let (tok, _, _) = report::build_data(&ctx, &model.manifest)?;
 
-    let n = a.usize("requests").map_err(|e| anyhow!(e))?;
-    let requests: Vec<Request> = (0..n)
-        .map(|i| Request::new(i as u64, TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()]))
-        .collect();
+    let wait_ms = a.u64("max-queue-wait-ms").map_err(|e| anyhow!(e))?;
     let cfg = ServeCfg {
         max_active: a.usize("max-active").map_err(|e| anyhow!(e))?,
         threads: a.usize("threads").map_err(|e| anyhow!(e))?,
         quantum: a.usize("quantum").map_err(|e| anyhow!(e))?,
+        max_queue_wait: (wait_ms > 0).then(|| std::time::Duration::from_millis(wait_ms)),
         sample: SampleCfg {
             temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
             top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
@@ -314,8 +320,36 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             stop_at_eot: true,
         },
     };
+
+    if let Some(addr) = a.get("http") {
+        // Long-running front-end: resident scheduler + accept loop, up
+        // until the process is killed.
+        let sched = Arc::new(StreamScheduler::start(model, tok, cfg)?);
+        let server = HttpServer::bind(&addr, sched)?;
+        let at = server.local_addr();
+        println!("serving {} over http://{at}", a.str("variant"));
+        println!("\ntry it:");
+        println!(
+            "  curl -s http://{at}/v1/generate -d '{{\"prompt\": \"Once upon a time\", \
+             \"id\": 7, \"max_new_tokens\": 48}}'"
+        );
+        println!(
+            "  curl -sN http://{at}/v1/stream -d '{{\"prompt\": \"Once upon a time\", \
+             \"max_new_tokens\": 48}}'"
+        );
+        println!("  curl -s http://{at}/healthz");
+        println!("  hsm request --addr {at} --stream --prompt \"Once upon a time\"");
+        server.join();
+        return Ok(());
+    }
+
+    // One-shot batch mode.
+    let n = a.usize("requests").map_err(|e| anyhow!(e))?;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| Request::new(i as u64, TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()]))
+        .collect();
     let (max_active, threads) = (cfg.max_active, cfg.threads);
-    let sched = Scheduler::new(model, cfg);
+    let sched = Scheduler::new(model, cfg)?;
 
     let t0 = Instant::now();
     let completions = sched.serve(&tok, requests)?;
@@ -329,6 +363,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             FinishReason::Eot => "eot".to_string(),
             FinishReason::MaxTokens => "cap".to_string(),
             FinishReason::CtxFull => "ctx".to_string(),
+            FinishReason::TimedOut => "timed out in queue".to_string(),
             FinishReason::Rejected(e) => format!("rejected: {e}"),
         };
         println!("#{:<4} {:>3} tok [{why}] {head}", c.request_id, c.tokens_generated);
@@ -339,6 +374,52 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         completions.len(),
         tokens as f64 / secs.max(1e-9),
     );
+    Ok(())
+}
+
+fn cmd_request(argv: &[String]) -> Result<()> {
+    let a = Args::new("request")
+        .flag("addr", "127.0.0.1:8080", "address of a running `hsm serve --http` server")
+        .flag("prompt", "Once upon a time", "prompt text")
+        .switch("stream", "use /v1/stream and print per-token deltas as they arrive")
+        .optional("id", "request id (fixes the sampling stream; default: server-assigned)")
+        .optional("max-new-tokens", "per-request token cap (default: server's)")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let addr = a.str("addr");
+    let mut req = GenerateRequest::new(&a.str("prompt"));
+    if let Some(id) = a.get("id") {
+        req.id = Some(id.parse().map_err(|_| anyhow!("--id expects an integer"))?);
+    }
+    if let Some(m) = a.get("max-new-tokens") {
+        req.max_new_tokens =
+            Some(m.parse().map_err(|_| anyhow!("--max-new-tokens expects an integer"))?);
+    }
+
+    let completion = if a.bool("stream") {
+        use std::io::Write as _;
+        print!("{}", req.prompt);
+        std::io::stdout().flush().ok();
+        let c = http_client::stream(&addr, &req, |_, delta| {
+            print!("{delta}");
+            std::io::stdout().flush().ok();
+        })?;
+        println!();
+        c
+    } else {
+        let c = http_client::generate(&addr, &req)?;
+        println!("{}{}", c.prompt, c.completion);
+        c
+    };
+    println!(
+        "\n#{} — {} tokens, finish: {}",
+        completion.request_id,
+        completion.tokens_generated,
+        completion.finish.label()
+    );
+    if let FinishReason::Rejected(why) = &completion.finish {
+        println!("rejected: {why}");
+    }
     Ok(())
 }
 

@@ -345,6 +345,7 @@ fn table3_completions(
                 threads: 2,
                 quantum: 8,
                 sample: cfg,
+                ..Default::default()
             };
             for c in serve::serve(&model, tok, requests, &scfg)? {
                 if let serve::FinishReason::Rejected(why) = &c.finish {

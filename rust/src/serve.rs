@@ -21,12 +21,30 @@
 //!   (the model is immutable and `Send + Sync`; every mutable byte of a
 //!   sequence lives in its own session).
 //!
+//! Two serving shapes share that core:
+//!
+//! * [`Scheduler`] / [`serve`] — **batch**: submit a `Vec<Request>`, get
+//!   every [`Completion`] back when the batch drains.
+//! * [`StreamScheduler`] — **resident**: worker threads stay up between
+//!   requests; [`submit`](StreamScheduler::submit) at any time returns a
+//!   [`TokenStream`] that yields [`TokenEvent`]s (one per sampled token,
+//!   with the UTF-8-safe `text_delta` it unlocked, then a final `Done`
+//!   carrying the [`Completion`]).  This is what the cross-process HTTP
+//!   front-end in [`crate::server`] serves from.
+//!
 //! **Determinism invariant:** sequence `id` samples from an RNG stream
 //! seeded `cfg.sample.seed ^ id`, and no per-sequence state is shared, so
 //! completions are byte-identical whatever the admission order, quantum,
 //! `max_active`, or thread count — and identical to decoding each request
-//! alone in a fresh session.  `rust/tests/serve_parity.rs` pins this for
-//! every mixer kind.
+//! alone in a fresh session.  Streaming never changes this: events are a
+//! pure tap on the decode loop, and a slow (or vanished) consumer never
+//! stalls or perturbs sampling.  `rust/tests/serve_parity.rs` and
+//! `rust/tests/stream_parity.rs` pin this for every mixer kind.
+//!
+//! **Fairness beyond FIFO:** [`ServeCfg::max_queue_wait`] bounds how long
+//! a request may sit queued for admission; past the budget it finishes as
+//! [`FinishReason::TimedOut`] (never decoded) instead of waiting forever
+//! behind a saturated active set.
 //!
 //! [`generate`](crate::generation::generate) (single-session) and
 //! [`generate_batch`](crate::generation::generate_batch)
@@ -35,13 +53,15 @@
 //! decode semantics.
 
 use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::generation::{encode_prompt, sample_logits, SampleCfg};
 use crate::infer::{Decoder, Model, NativeDecoder};
-use crate::tokenizer::Tokenizer;
+use crate::tokenizer::{StreamDecoder, Tokenizer};
 use crate::util::rng::Rng;
 
 /// One generation request, submitted to a [`Scheduler`].
@@ -71,9 +91,25 @@ pub enum FinishReason {
     MaxTokens,
     /// Evicted: the context window filled before any other stop.
     CtxFull,
+    /// Queued for admission longer than [`ServeCfg::max_queue_wait`];
+    /// never decoded.
+    TimedOut,
     /// Never admitted — the prompt failed validation (empty encoding,
     /// vocab mismatch, or longer than the context window).
     Rejected(String),
+}
+
+impl FinishReason {
+    /// Stable wire label (used by the HTTP API in [`crate::server`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Eot => "eot",
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::CtxFull => "ctx_full",
+            FinishReason::TimedOut => "timed_out",
+            FinishReason::Rejected(_) => "rejected",
+        }
+    }
 }
 
 /// The finished lifecycle of one [`Request`].
@@ -106,13 +142,124 @@ pub struct ServeCfg {
     /// next ready one (0 = run each admitted sequence to completion).
     /// Pure scheduling knob — never changes sampled text.
     pub quantum: usize,
+    /// Fairness-beyond-FIFO budget: a request still waiting for
+    /// admission this long after submission finishes as
+    /// [`FinishReason::TimedOut`] instead of queueing forever behind a
+    /// saturated active set (None = wait indefinitely).  Checked when
+    /// the request would be admitted; it never interrupts a sequence
+    /// that is already decoding.
+    pub max_queue_wait: Option<Duration>,
     /// Sampling parameters shared by every request.
     pub sample: SampleCfg,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        ServeCfg { max_active: 8, threads: 4, quantum: 16, sample: SampleCfg::default() }
+        ServeCfg {
+            max_active: 8,
+            threads: 4,
+            quantum: 16,
+            max_queue_wait: None,
+            sample: SampleCfg::default(),
+        }
+    }
+}
+
+impl ServeCfg {
+    /// Construction-time validation shared by every scheduler shape: a
+    /// zero `max_active` would admit nothing (every request queues
+    /// forever) and zero `threads` would spawn no workers.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_active == 0 {
+            bail!("serve: max_active must be at least 1 (0 admits nothing — requests would queue forever)");
+        }
+        if self.threads == 0 {
+            bail!("serve: threads must be at least 1 (0 spawns no workers — nothing would ever decode)");
+        }
+        Ok(())
+    }
+
+    /// Validation for retained schedulers ([`Scheduler`],
+    /// [`StreamScheduler`]): additionally requires a positive `quantum`.
+    /// Run-to-completion slicing (`quantum == 0`) stays available through
+    /// the one-shot [`serve`] call, but in a long-running scheduler it
+    /// would let one unbounded request monopolize a session with no
+    /// rotation — a degenerate loop for every stream queued behind it.
+    pub fn validate_resident(&self) -> Result<()> {
+        self.validate()?;
+        if self.quantum == 0 {
+            bail!(
+                "serve: quantum must be at least 1 for a resident scheduler \
+                 (0 = run-to-completion would let one request monopolize a session)"
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming surface
+// ---------------------------------------------------------------------------
+
+/// One streaming event from a decoding request.
+///
+/// Concatenating every `text_delta` (all `Token`s, then the final
+/// `Done`'s flush) is byte-identical to the finished
+/// [`Completion::completion`] — pinned by `rust/tests/stream_parity.rs`.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// One sampled token and the text it unlocked.  `text_delta` may be
+    /// empty while a multi-byte UTF-8 character is still incomplete
+    /// (see [`crate::tokenizer::StreamDecoder`]).
+    Token { request_id: u64, token: u32, text_delta: String },
+    /// Terminal event: any bytes still buffered mid-character flush as
+    /// `text_delta`, and `completion` carries the finished lifecycle.
+    Done { text_delta: String, completion: Completion },
+}
+
+/// Receiving end of one request's event stream (from
+/// [`StreamScheduler::submit`]).  Iterate it, or [`recv`](Self::recv) /
+/// [`wait`](Self::wait) directly; the stream ends after the
+/// [`TokenEvent::Done`] event (or early, with no `Done`, if the
+/// scheduler failed).
+pub struct TokenStream {
+    request_id: u64,
+    rx: Receiver<TokenEvent>,
+}
+
+impl TokenStream {
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
+    /// Block for the next event; `None` once the stream is over.
+    pub fn recv(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream, invoking `on_delta` for every text fragment in
+    /// order; returns the final [`Completion`], or `None` if the
+    /// scheduler dropped the request without finishing it (worker
+    /// failure or panic).
+    pub fn wait<F: FnMut(&str)>(self, mut on_delta: F) -> Option<Completion> {
+        while let Ok(ev) = self.rx.recv() {
+            match ev {
+                TokenEvent::Token { text_delta, .. } => on_delta(&text_delta),
+                TokenEvent::Done { text_delta, completion } => {
+                    on_delta(&text_delta);
+                    return Some(completion);
+                }
+            }
+        }
+        None
+    }
+}
+
+impl Iterator for TokenStream {
+    type Item = TokenEvent;
+
+    fn next(&mut self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
     }
 }
 
@@ -128,8 +275,12 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    pub fn new(model: Arc<Model>, cfg: ServeCfg) -> Self {
-        Scheduler { model, cfg }
+    /// Validates `cfg` at construction ([`ServeCfg::validate_resident`])
+    /// so a zero `threads`/`max_active`/`quantum` fails here with a clear
+    /// error instead of hanging or degenerating at serve time.
+    pub fn new(model: Arc<Model>, cfg: ServeCfg) -> Result<Self> {
+        cfg.validate_resident()?;
+        Ok(Scheduler { model, cfg })
     }
 
     pub fn model(&self) -> &Arc<Model> {
@@ -156,15 +307,11 @@ pub fn serve(
     requests: Vec<Request>,
     cfg: &ServeCfg,
 ) -> Result<Vec<Completion>> {
-    if cfg.max_active == 0 {
-        bail!("serve: max_active must be at least 1");
-    }
-    if cfg.threads == 0 {
-        bail!("serve: threads must be at least 1");
-    }
+    cfg.validate()?;
 
     // Validate at admission: a bad prompt becomes a Rejected completion
     // (one user's malformed request must not fail everyone else's).
+    let deadline = cfg.max_queue_wait.map(|d| Instant::now() + d);
     let mut out: Vec<Option<Completion>> = vec![None; requests.len()];
     let mut jobs: Vec<Job> = Vec::with_capacity(requests.len());
     for (ix, req) in requests.into_iter().enumerate() {
@@ -175,6 +322,8 @@ pub fn serve(
                 budget: req.max_new_tokens.unwrap_or(cfg.sample.max_new_tokens),
                 prompt: req.prompt,
                 ids,
+                deadline,
+                sink: None,
             }),
             Err(e) => {
                 out[ix] = Some(Completion {
@@ -218,12 +367,36 @@ pub(crate) struct Job {
     pub(crate) budget: usize,
     pub(crate) prompt: String,
     pub(crate) ids: Vec<u32>,
+    /// Admission deadline (from [`ServeCfg::max_queue_wait`]); a job
+    /// popped past it finishes as [`FinishReason::TimedOut`] without
+    /// ever touching a decoder.
+    pub(crate) deadline: Option<Instant>,
+    /// Streaming event sink (None on the batch path).
+    pub(crate) sink: Option<Sender<TokenEvent>>,
+}
+
+/// Per-sequence streaming tap: the event channel plus the incremental
+/// detokenizer feeding its `text_delta`s.  A vanished consumer (send
+/// error) marks the tap dead; decoding continues unchanged so the
+/// determinism invariant is untouched.
+struct StreamOut {
+    tx: Sender<TokenEvent>,
+    sd: StreamDecoder,
+    dead: bool,
+}
+
+impl StreamOut {
+    fn emit(&mut self, ev: TokenEvent) {
+        if !self.dead && self.tx.send(ev).is_err() {
+            self.dead = true;
+        }
+    }
 }
 
 /// One in-flight sequence.  Everything mutable is per-request (decoder
-/// state, token buffer, RNG stream), which is the whole determinism
-/// argument: any interleaving of disjoint `Active`s produces identical
-/// text.
+/// state, token buffer, RNG stream, stream tap), which is the whole
+/// determinism argument: any interleaving of disjoint `Active`s produces
+/// identical text.
 struct Active<D> {
     dec: D,
     ix: usize,
@@ -234,6 +407,7 @@ struct Active<D> {
     last: u32,
     rng: Rng,
     budget: usize,
+    stream: Option<StreamOut>,
 }
 
 /// Bind a decoder to a job: reset, prefill all but the last prompt token
@@ -252,7 +426,37 @@ fn admit<D: Decoder>(mut dec: D, job: Job, cfg: &SampleCfg) -> Result<Active<D>>
         prompt_len,
         rng: Rng::new(cfg.seed ^ job.id),
         budget: job.budget,
+        stream: job.sink.map(|tx| StreamOut { tx, sd: StreamDecoder::new(), dead: false }),
     })
+}
+
+/// Has this queued job outlived its admission budget?
+fn expired(job: &Job) -> bool {
+    job.deadline.is_some_and(|d| Instant::now() > d)
+}
+
+/// Finish a queued job as TimedOut without decoding.  Streaming jobs
+/// deliver the completion through their sink (returns None); batch jobs
+/// hand it back for the output slot.
+fn expire(job: Job) -> Option<(usize, Completion)> {
+    let Job { ix, id, prompt, sink, .. } = job;
+    let completion = Completion {
+        request_id: id,
+        prompt,
+        completion: String::new(),
+        tokens_generated: 0,
+        finish: FinishReason::TimedOut,
+    };
+    match sink {
+        Some(tx) => {
+            let _ = tx.send(TokenEvent::Done {
+                text_delta: String::new(),
+                completion,
+            });
+            None
+        }
+        None => Some((ix, completion)),
+    }
 }
 
 /// Decode up to `quantum` tokens (0 = until finished).  Returns
@@ -281,6 +485,10 @@ fn advance<D: Decoder>(
         }
         seq.ids.push(next);
         seq.last = next;
+        if let Some(out) = seq.stream.as_mut() {
+            let text_delta = out.sd.push(tok, next);
+            out.emit(TokenEvent::Token { request_id: seq.id, token: next, text_delta });
+        }
         sliced += 1;
         if quantum > 0 && sliced >= quantum {
             return Ok(None);
@@ -289,9 +497,11 @@ fn advance<D: Decoder>(
 }
 
 /// Tear a finished sequence down into its completion, recovering the
-/// decoder for the free pool.
+/// decoder for the free pool.  A streaming sequence emits its terminal
+/// [`TokenEvent::Done`] here (with the detokenizer's final flush), so
+/// consumers always see the completion on the stream itself.
 fn complete<D>(seq: Active<D>, tok: &Tokenizer, finish: FinishReason) -> (D, usize, Completion) {
-    let Active { dec, ix, id, prompt, ids, prompt_len, .. } = seq;
+    let Active { dec, ix, id, prompt, ids, prompt_len, stream, .. } = seq;
     let completion = Completion {
         request_id: id,
         prompt,
@@ -299,6 +509,10 @@ fn complete<D>(seq: Active<D>, tok: &Tokenizer, finish: FinishReason) -> (D, usi
         tokens_generated: ids.len() - prompt_len,
         finish,
     };
+    if let Some(mut out) = stream {
+        let text_delta = out.sd.finish();
+        out.emit(TokenEvent::Done { text_delta, completion: completion.clone() });
+    }
     (dec, ix, completion)
 }
 
@@ -327,8 +541,16 @@ pub(crate) fn run_local<D: Decoder>(
     loop {
         // Admission: fill every free session before stepping (job order
         // meets decoder order, so fixed-membership callers get the same
-        // decoder↔prompt pairing the old round-robin loop had).
+        // decoder↔prompt pairing the old round-robin loop had).  A job
+        // past its queue-wait deadline finishes as TimedOut right here,
+        // consuming no session.
         while !pending.is_empty() {
+            if expired(pending.front().unwrap()) {
+                if let Some((ix, completion)) = expire(pending.pop_front().unwrap()) {
+                    out[ix] = Some(completion);
+                }
+                continue;
+            }
             let Some(dec) = free.pop_front() else { break };
             let job = pending.pop_front().unwrap();
             ready.push_back(admit(dec, job, cfg)?);
@@ -356,12 +578,35 @@ struct Shared {
     pending: VecDeque<Job>,
     free: Vec<NativeDecoder>,
     ready: VecDeque<Active<NativeDecoder>>,
+    /// Batch completions by output slot.  Streaming sequences deliver
+    /// through their sinks instead, so a resident scheduler never
+    /// accumulates here.
     done: Vec<(usize, Completion)>,
     /// Admitted but unfinished sequences (in `ready` or claimed by a
     /// worker).  `inflight == 0 && pending.is_empty()` is the drain
     /// condition.
     inflight: usize,
+    /// When set, workers exit once drained.  Batch runs start with it
+    /// set (drain-and-return); a resident [`StreamScheduler`] sets it on
+    /// shutdown.
+    shutdown: bool,
     failed: Option<anyhow::Error>,
+}
+
+impl Shared {
+    /// Mark the scheduler failed and abandon every queued/readied
+    /// sequence.  Dropping the jobs drops their event `Sender`s, so
+    /// every waiting [`TokenStream`] sees disconnect (recv → `None`)
+    /// instead of blocking forever — without this, a resident
+    /// scheduler's consumers (and a front-end joining their connection
+    /// threads) would hang on requests no worker will ever run.
+    fn fail(&mut self, e: anyhow::Error) {
+        if self.failed.is_none() {
+            self.failed = Some(e);
+        }
+        self.pending.clear();
+        self.ready.clear();
+    }
 }
 
 fn run_parallel(
@@ -379,6 +624,7 @@ fn run_parallel(
         ready: VecDeque::new(),
         done: Vec::new(),
         inflight: 0,
+        shutdown: true, // batch mode: drain and return
         failed: None,
     });
     let wake = Condvar::new();
@@ -423,9 +669,7 @@ impl Drop for PanicGuard<'_> {
     fn drop(&mut self) {
         if std::thread::panicking() {
             if let Ok(mut g) = self.shared.lock() {
-                if g.failed.is_none() {
-                    g.failed = Some(anyhow!("serve: a worker thread panicked"));
-                }
+                g.fail(anyhow!("serve: a worker thread panicked"));
             }
             self.wake.notify_all();
         }
@@ -441,6 +685,16 @@ fn worker(shared: &Mutex<Shared>, wake: &Condvar, tok: &Tokenizer, cfg: &ServeCf
                 if g.failed.is_some() {
                     return;
                 }
+                // Queue-wait fairness: jobs past their admission deadline
+                // finish as TimedOut inline, consuming no session.  This
+                // runs before the ready-pop so a saturated scheduler
+                // (ready never empty) still honors the budget instead of
+                // delivering the timeout only when a session frees.
+                while g.pending.front().is_some_and(expired) {
+                    if let Some(done) = expire(g.pending.pop_front().unwrap()) {
+                        g.done.push(done);
+                    }
+                }
                 if let Some(seq) = g.ready.pop_front() {
                     break Work::Step(seq);
                 }
@@ -452,8 +706,12 @@ fn worker(shared: &Mutex<Shared>, wake: &Condvar, tok: &Tokenizer, cfg: &ServeCf
                     g.inflight += 1;
                     break Work::Admit(job, dec);
                 }
-                if g.inflight == 0 && g.pending.is_empty() {
-                    return; // drained
+                if g.shutdown && g.inflight == 0 && g.pending.is_empty() {
+                    // Drained: expired-job pops above may have emptied the
+                    // queue, so wake any sibling parked on the condvar to
+                    // observe the drain too.
+                    wake.notify_all();
+                    return;
                 }
                 g = wake.wait(g).expect("scheduler lock poisoned");
             }
@@ -472,14 +730,23 @@ fn worker(shared: &Mutex<Shared>, wake: &Condvar, tok: &Tokenizer, cfg: &ServeCf
         match stepped {
             Ok((seq, None)) => {
                 let mut g = shared.lock().expect("scheduler lock poisoned");
-                g.ready.push_back(seq);
+                if g.failed.is_none() {
+                    g.ready.push_back(seq);
+                } // else: a sibling failed while we were decoding — drop
+                  // the sequence (and its sink) rather than strand it.
                 drop(g);
                 wake.notify_one();
             }
             Ok((seq, Some(finish))) => {
+                // Streaming sequences already delivered their completion
+                // through the sink inside `complete`; only batch slots
+                // collect into `done`.
+                let streamed = seq.stream.is_some();
                 let (dec, ix, completion) = complete(seq, tok, finish);
                 let mut g = shared.lock().expect("scheduler lock poisoned");
-                g.done.push((ix, completion));
+                if !streamed {
+                    g.done.push((ix, completion));
+                }
                 g.free.push(dec);
                 g.inflight -= 1;
                 drop(g);
@@ -490,14 +757,154 @@ fn worker(shared: &Mutex<Shared>, wake: &Condvar, tok: &Tokenizer, cfg: &ServeCf
             Err(e) => {
                 let mut g = shared.lock().expect("scheduler lock poisoned");
                 g.inflight -= 1;
-                if g.failed.is_none() {
-                    g.failed = Some(e);
-                }
+                g.fail(e);
                 drop(g);
                 wake.notify_all();
                 return;
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resident scheduler: streaming submissions against always-on workers
+// ---------------------------------------------------------------------------
+
+/// Everything the resident workers share, behind one `Arc`.
+struct ResidentInner {
+    shared: Mutex<Shared>,
+    wake: Condvar,
+    tok: Tokenizer,
+    cfg: ServeCfg,
+    model: Arc<Model>,
+}
+
+/// A resident continuous-batching scheduler: the worker pool stays up
+/// between requests, so callers (in-process, or a cross-process
+/// front-end like [`crate::server::HttpServer`]) can
+/// [`submit`](Self::submit) at any time and stream tokens back as they
+/// decode.
+///
+/// All [`ServeCfg::max_active`] sessions are created up front and
+/// recycled across requests; admission, time slicing and determinism are
+/// exactly the batch [`Scheduler`]'s (same worker loop), so streamed
+/// text is byte-identical to batch and to sequential decoding.
+///
+/// Shutdown is graceful: [`shutdown`](Self::shutdown) (also run on drop)
+/// stops accepting, drains every queued and in-flight request, and joins
+/// the workers.
+pub struct StreamScheduler {
+    inner: Arc<ResidentInner>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl StreamScheduler {
+    /// Validate the config ([`ServeCfg::validate_resident`]), build the
+    /// session pool, and spawn the worker threads.
+    pub fn start(model: Arc<Model>, tok: Tokenizer, cfg: ServeCfg) -> Result<Self> {
+        cfg.validate_resident()?;
+        let free = (0..cfg.max_active).map(|_| model.session()).collect();
+        let inner = Arc::new(ResidentInner {
+            shared: Mutex::new(Shared {
+                pending: VecDeque::new(),
+                free,
+                ready: VecDeque::new(),
+                done: Vec::new(),
+                inflight: 0,
+                shutdown: false,
+                failed: None,
+            }),
+            wake: Condvar::new(),
+            tok,
+            cfg,
+            model,
+        });
+        let workers = (0..inner.cfg.threads)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || {
+                    worker(&inner.shared, &inner.wake, &inner.tok, &inner.cfg)
+                })
+            })
+            .collect();
+        Ok(StreamScheduler { inner, workers: Mutex::new(workers) })
+    }
+
+    pub fn model(&self) -> &Arc<Model> {
+        &self.inner.model
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.inner.tok
+    }
+
+    pub fn cfg(&self) -> &ServeCfg {
+        &self.inner.cfg
+    }
+
+    /// Submit one request; its events stream back on the returned
+    /// [`TokenStream`].  An invalid prompt yields an immediate
+    /// [`TokenEvent::Done`] with [`FinishReason::Rejected`] (mirroring
+    /// batch semantics — one user's bad prompt is data, not an error);
+    /// `Err` means the scheduler itself is not accepting (shut down, or
+    /// a worker failed).
+    pub fn submit(&self, req: Request) -> Result<TokenStream> {
+        let (tx, rx) = channel();
+        let stream = TokenStream { request_id: req.id, rx };
+        let job = match encode_prompt(&self.inner.model.manifest, &self.inner.tok, &req.prompt) {
+            Ok(ids) => Job {
+                ix: 0, // unused: streaming completions travel by sink
+                id: req.id,
+                budget: req.max_new_tokens.unwrap_or(self.inner.cfg.sample.max_new_tokens),
+                prompt: req.prompt,
+                ids,
+                deadline: self.inner.cfg.max_queue_wait.map(|d| Instant::now() + d),
+                sink: Some(tx),
+            },
+            Err(e) => {
+                let completion = Completion {
+                    request_id: req.id,
+                    prompt: req.prompt,
+                    completion: String::new(),
+                    tokens_generated: 0,
+                    finish: FinishReason::Rejected(format!("{e:#}")),
+                };
+                let _ = tx.send(TokenEvent::Done { text_delta: String::new(), completion });
+                return Ok(stream);
+            }
+        };
+        {
+            let mut g = self.inner.shared.lock().expect("scheduler lock poisoned");
+            if g.shutdown {
+                bail!("serve: scheduler is shut down");
+            }
+            if let Some(e) = &g.failed {
+                bail!("serve: scheduler failed: {e:#}");
+            }
+            g.pending.push_back(job);
+        }
+        self.inner.wake.notify_one();
+        Ok(stream)
+    }
+
+    /// Graceful shutdown: stop accepting, drain every queued and active
+    /// request (their streams still complete), join the workers.
+    /// Idempotent; also invoked on drop.
+    pub fn shutdown(&self) {
+        if let Ok(mut g) = self.inner.shared.lock() {
+            g.shutdown = true;
+        }
+        self.inner.wake.notify_all();
+        let workers = std::mem::take(&mut *self.workers.lock().expect("worker list lock"));
+        for h in workers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StreamScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -533,12 +940,13 @@ mod tests {
             threads: 1,
             quantum: 3,
             sample: SampleCfg { max_new_tokens: 6, seed: 4, ..Default::default() },
+            ..Default::default()
         };
         let reqs = |s: u64| {
             vec![Request::new(s, "Once upon a time"), Request::new(s + 1, "Lily likes cats")]
         };
         let a = serve(&model, &tok, reqs(0), &cfg).unwrap();
-        let b = Scheduler::new(Arc::clone(&model), cfg).serve(&tok, reqs(0)).unwrap();
+        let b = Scheduler::new(Arc::clone(&model), cfg).unwrap().serve(&tok, reqs(0)).unwrap();
         assert_eq!(a.len(), 2);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.completion, y.completion);
@@ -577,11 +985,203 @@ mod tests {
         assert!(serve(&model, &tok, req, &bad(1, 0)).is_err());
     }
 
+    /// Degenerate configs fail at construction with a clear message, not
+    /// at serve time (and never as a hang).
+    #[test]
+    fn resident_schedulers_validate_cfg_at_construction() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        for (max_active, threads, quantum) in [(0, 1, 1), (1, 0, 1), (1, 1, 0)] {
+            let cfg = ServeCfg { max_active, threads, quantum, ..Default::default() };
+            assert!(cfg.validate_resident().is_err());
+            assert!(Scheduler::new(Arc::clone(&model), cfg.clone()).is_err());
+            assert!(StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).is_err());
+        }
+        // quantum 0 stays valid for the one-shot batch call.
+        let cfg = ServeCfg { quantum: 0, threads: 1, ..Default::default() };
+        assert!(cfg.validate().is_ok());
+        assert!(serve(&model, &tok, vec![Request::new(0, "hi there")], &cfg).is_ok());
+    }
+
     #[test]
     fn empty_request_batch_is_empty() {
         let tok = tok();
         let model = model(tok.vocab_size(), 48);
         let comps = serve(&model, &tok, Vec::new(), &ServeCfg::default()).unwrap();
         assert!(comps.is_empty());
+    }
+
+    /// Saturated max_active=1 scheduler, deterministic deadlines: the
+    /// request holding the session completes; the one queued past its
+    /// budget finishes TimedOut without decoding a single token.
+    #[test]
+    fn queued_past_deadline_times_out_without_decoding() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let sample = SampleCfg { max_new_tokens: 5, seed: 2, ..Default::default() };
+        let long_ago = Instant::now()
+            .checked_sub(Duration::from_secs(60))
+            .unwrap_or_else(Instant::now);
+        let job = |ix: usize, deadline: Option<Instant>| Job {
+            ix,
+            id: ix as u64,
+            budget: sample.max_new_tokens,
+            prompt: "Once upon a time".to_string(),
+            ids: tok.encode("Once upon a time"),
+            deadline,
+            sink: None,
+        };
+        let jobs = vec![
+            job(0, Some(Instant::now() + Duration::from_secs(3600))),
+            job(1, Some(long_ago)),
+            job(2, None),
+        ];
+        let mut out = vec![None, None, None];
+        let mut sessions = vec![model.session()]; // max_active = 1: saturated
+        run_local(&mut sessions, &tok, jobs, &sample, 2, &mut out).unwrap();
+        let out: Vec<Completion> = out.into_iter().map(Option::unwrap).collect();
+        assert_ne!(out[0].finish, FinishReason::TimedOut);
+        assert!(out[0].tokens_generated > 0);
+        assert_eq!(out[1].finish, FinishReason::TimedOut);
+        assert_eq!(out[1].tokens_generated, 0);
+        assert_eq!(out[1].completion, "");
+        assert_ne!(out[2].finish, FinishReason::TimedOut);
+    }
+
+    /// End-to-end budget semantics on both drivers: a zero budget expires
+    /// every request (admission always happens strictly after intake); a
+    /// generous budget changes nothing.
+    #[test]
+    fn zero_queue_wait_times_out_every_request() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let reqs = || vec![Request::new(0, "Once upon a time"), Request::new(1, "Lily likes cats")];
+        let base = ServeCfg {
+            max_active: 2,
+            quantum: 2,
+            sample: SampleCfg { max_new_tokens: 4, seed: 6, ..Default::default() },
+            ..Default::default()
+        };
+        for threads in [1, 2] {
+            let zero = ServeCfg {
+                threads,
+                max_queue_wait: Some(Duration::ZERO),
+                ..base.clone()
+            };
+            for c in serve(&model, &tok, reqs(), &zero).unwrap() {
+                assert_eq!(c.finish, FinishReason::TimedOut, "threads={threads}");
+                assert_eq!(c.tokens_generated, 0);
+            }
+            let lax = ServeCfg {
+                threads,
+                max_queue_wait: Some(Duration::from_secs(3600)),
+                ..base.clone()
+            };
+            let unlimited = ServeCfg { threads, ..base.clone() };
+            let a = serve(&model, &tok, reqs(), &lax).unwrap();
+            let b = serve(&model, &tok, reqs(), &unlimited).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.completion, y.completion);
+                assert_ne!(x.finish, FinishReason::TimedOut);
+            }
+        }
+    }
+
+    /// Streaming taps are pure observers: deltas concatenate to the
+    /// batch/sequential completion text, token events count the sampled
+    /// tokens, and the stream ends with exactly one Done.
+    #[test]
+    fn stream_scheduler_matches_batch_serve() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let cfg = ServeCfg {
+            max_active: 2,
+            threads: 2,
+            quantum: 2,
+            sample: SampleCfg { max_new_tokens: 6, seed: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let prompts = ["Once upon a time", "Lily likes cats", "Jack went to"];
+        let reqs: Vec<Request> =
+            prompts.iter().enumerate().map(|(i, p)| Request::new(i as u64, p)).collect();
+        let batch = serve(&model, &tok, reqs.clone(), &cfg).unwrap();
+
+        let sched =
+            StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).unwrap();
+        let streams: Vec<TokenStream> =
+            reqs.into_iter().map(|r| sched.submit(r).unwrap()).collect();
+        for (stream, want) in streams.into_iter().zip(&batch) {
+            let mut events = 0usize;
+            let mut streamed = String::new();
+            let mut done = None;
+            for ev in stream {
+                match ev {
+                    TokenEvent::Token { text_delta, .. } => {
+                        events += 1;
+                        streamed.push_str(&text_delta);
+                    }
+                    TokenEvent::Done { text_delta, completion } => {
+                        streamed.push_str(&text_delta);
+                        done = Some(completion);
+                    }
+                }
+            }
+            let done = done.expect("stream ended without Done");
+            assert_eq!(done.request_id, want.request_id);
+            assert_eq!(streamed, want.completion, "request {}", want.request_id);
+            assert_eq!(done.completion, want.completion);
+            assert_eq!(events, want.tokens_generated);
+            assert_eq!(done.finish, want.finish);
+        }
+        sched.shutdown();
+        assert!(sched.submit(Request::new(9, "hi")).is_err(), "post-shutdown submit must fail");
+    }
+
+    /// Dropping a TokenStream mid-decode (client gone) must not perturb
+    /// any other request's text.
+    #[test]
+    fn dropped_stream_consumer_does_not_change_siblings() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let cfg = ServeCfg {
+            max_active: 2,
+            threads: 2,
+            quantum: 1,
+            sample: SampleCfg { max_new_tokens: 8, seed: 12, ..Default::default() },
+            ..Default::default()
+        };
+        let reference = serve(
+            &model,
+            &tok,
+            vec![Request::new(0, "Once upon a time"), Request::new(1, "Lily likes cats")],
+            &cfg,
+        )
+        .unwrap();
+
+        let sched = StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).unwrap();
+        let dropped = sched.submit(Request::new(0, "Once upon a time")).unwrap();
+        let kept = sched.submit(Request::new(1, "Lily likes cats")).unwrap();
+        drop(dropped);
+        let completion = kept.wait(|_| {}).expect("surviving stream finishes");
+        assert_eq!(completion.completion, reference[1].completion);
+        sched.shutdown();
+    }
+
+    /// Invalid prompts reject through the stream itself (uniform with
+    /// batch semantics).
+    #[test]
+    fn stream_submit_rejects_bad_prompt_via_done_event() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let sched = StreamScheduler::start(
+            Arc::clone(&model),
+            tok.clone(),
+            ServeCfg { threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        let stream = sched.submit(Request::new(7, "")).unwrap();
+        let completion = stream.wait(|_| {}).expect("rejection still delivers Done");
+        assert!(matches!(completion.finish, FinishReason::Rejected(_)));
+        assert_eq!(completion.tokens_generated, 0);
     }
 }

@@ -1,0 +1,244 @@
+//! JSON wire types for the HTTP API, built on [`crate::util::json`]
+//! (serde is unavailable under the vendored-offline constraint).
+//!
+//! Shapes:
+//!
+//! * request (`POST /v1/generate`, `POST /v1/stream`):
+//!   `{"prompt": "...", "id": 7, "max_new_tokens": 32}` — `id` and
+//!   `max_new_tokens` optional.  `id` fixes the sampling RNG stream
+//!   (`seed ^ id`); omit it and the server assigns a fresh one.
+//! * completion: `{"request_id": 7, "prompt": "...", "completion": "...",
+//!   "tokens_generated": 32, "finish": "eot"}` (+ `"error"` detail when
+//!   `finish` is `"rejected"`).
+//! * stream events (one SSE `data:` payload each):
+//!   `{"request_id": 7, "token": 512, "text_delta": "..."}` per token,
+//!   then `{"request_id": 7, "done": true, "text_delta": "...",
+//!   "completion": {...}}`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::serve::{Completion, FinishReason, TokenEvent};
+use crate::util::json::{self, Value};
+
+/// Body of `POST /v1/generate` and `POST /v1/stream`.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    /// Fixes the sampling RNG stream (`seed ^ id`); None = the server
+    /// assigns a fresh unique id.
+    pub id: Option<u64>,
+    pub prompt: String,
+    /// Per-request cap on generated tokens (None = server default).
+    pub max_new_tokens: Option<usize>,
+}
+
+impl GenerateRequest {
+    pub fn new(prompt: &str) -> Self {
+        GenerateRequest { id: None, prompt: prompt.to_string(), max_new_tokens: None }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![("prompt", json::s(&self.prompt))];
+        if let Some(id) = self.id {
+            pairs.push(("id", json::num(id as f64)));
+        }
+        if let Some(m) = self.max_new_tokens {
+            pairs.push(("max_new_tokens", json::num(m as f64)));
+        }
+        json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let prompt = v
+            .get("prompt")
+            .as_str()
+            .ok_or_else(|| anyhow!("missing or non-string 'prompt'"))?
+            .to_string();
+        // JSON numbers travel as f64; beyond 2^53 the id would silently
+        // round, changing the RNG stream (`seed ^ id`) the client asked
+        // for — reject instead of corrupting the determinism contract.
+        let id = match v.get("id") {
+            Value::Null => None,
+            x => {
+                let f = x.as_f64().ok_or_else(|| anyhow!("'id' must be a number"))?;
+                // ≥ 2^53 already rounded during JSON parsing, so the
+                // value here cannot be trusted to be what was sent.
+                if f < 0.0 || f.fract() != 0.0 || f >= 9007199254740992.0 {
+                    bail!("'id' must be a non-negative integer below 2^53 (got {f})");
+                }
+                Some(f as u64)
+            }
+        };
+        let max_new_tokens = match v.get("max_new_tokens") {
+            Value::Null => None,
+            x => Some(
+                x.as_usize()
+                    .ok_or_else(|| anyhow!("'max_new_tokens' must be a number"))?,
+            ),
+        };
+        Ok(GenerateRequest { id, prompt, max_new_tokens })
+    }
+}
+
+/// Parse the stable wire label back into a [`FinishReason`]
+/// (the inverse of [`FinishReason::label`]).
+pub fn finish_from_label(label: &str, error: Option<&str>) -> Result<FinishReason> {
+    Ok(match label {
+        "eot" => FinishReason::Eot,
+        "max_tokens" => FinishReason::MaxTokens,
+        "ctx_full" => FinishReason::CtxFull,
+        "timed_out" => FinishReason::TimedOut,
+        "rejected" => FinishReason::Rejected(error.unwrap_or("").to_string()),
+        other => bail!("unknown finish reason {other:?}"),
+    })
+}
+
+pub fn completion_to_json(c: &Completion) -> Value {
+    let mut pairs = vec![
+        ("request_id", json::num(c.request_id as f64)),
+        ("prompt", json::s(&c.prompt)),
+        ("completion", json::s(&c.completion)),
+        ("tokens_generated", json::num(c.tokens_generated as f64)),
+        ("finish", json::s(c.finish.label())),
+    ];
+    if let FinishReason::Rejected(why) = &c.finish {
+        pairs.push(("error", json::s(why)));
+    }
+    json::obj(pairs)
+}
+
+pub fn completion_from_json(v: &Value) -> Result<Completion> {
+    let finish = finish_from_label(
+        v.get("finish").as_str().ok_or_else(|| anyhow!("missing 'finish'"))?,
+        v.get("error").as_str(),
+    )?;
+    Ok(Completion {
+        request_id: v
+            .get("request_id")
+            .as_f64()
+            .ok_or_else(|| anyhow!("missing 'request_id'"))? as u64,
+        prompt: v.get("prompt").as_str().unwrap_or("").to_string(),
+        completion: v.get("completion").as_str().unwrap_or("").to_string(),
+        tokens_generated: v.get("tokens_generated").as_usize().unwrap_or(0),
+        finish,
+    })
+}
+
+/// Serialize one stream event as an SSE `data:` payload body.
+pub fn event_to_json(ev: &TokenEvent) -> Value {
+    match ev {
+        TokenEvent::Token { request_id, token, text_delta } => json::obj(vec![
+            ("request_id", json::num(*request_id as f64)),
+            ("token", json::num(*token as f64)),
+            ("text_delta", json::s(text_delta)),
+        ]),
+        TokenEvent::Done { text_delta, completion } => json::obj(vec![
+            ("request_id", json::num(completion.request_id as f64)),
+            ("done", Value::Bool(true)),
+            ("text_delta", json::s(text_delta)),
+            ("completion", completion_to_json(completion)),
+        ]),
+    }
+}
+
+pub fn event_from_json(v: &Value) -> Result<TokenEvent> {
+    if v.get("done").as_bool() == Some(true) {
+        return Ok(TokenEvent::Done {
+            text_delta: v.get("text_delta").as_str().unwrap_or("").to_string(),
+            completion: completion_from_json(v.get("completion"))?,
+        });
+    }
+    Ok(TokenEvent::Token {
+        request_id: v
+            .get("request_id")
+            .as_f64()
+            .ok_or_else(|| anyhow!("missing 'request_id'"))? as u64,
+        token: v.get("token").as_f64().ok_or_else(|| anyhow!("missing 'token'"))? as u32,
+        text_delta: v.get("text_delta").as_str().unwrap_or("").to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_request_roundtrip() {
+        let mut req = GenerateRequest::new("Once upon a time");
+        req.id = Some(42);
+        req.max_new_tokens = Some(8);
+        let back = GenerateRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.id, Some(42));
+        assert_eq!(back.prompt, "Once upon a time");
+        assert_eq!(back.max_new_tokens, Some(8));
+
+        let bare = GenerateRequest::from_json(&json::parse(r#"{"prompt":"hi"}"#).unwrap()).unwrap();
+        assert_eq!(bare.id, None);
+        assert_eq!(bare.max_new_tokens, None);
+        assert!(GenerateRequest::from_json(&json::parse(r#"{"id":1}"#).unwrap()).is_err());
+
+        // Ids that would corrupt through f64 are rejected, not rounded.
+        for bad in [r#"{"prompt":"x","id":-1}"#, r#"{"prompt":"x","id":1.5}"#,
+                    r#"{"prompt":"x","id":9007199254740993}"#] {
+            assert!(
+                GenerateRequest::from_json(&json::parse(bad).unwrap()).is_err(),
+                "should reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn completion_roundtrip_preserves_finish_detail() {
+        for finish in [
+            FinishReason::Eot,
+            FinishReason::MaxTokens,
+            FinishReason::CtxFull,
+            FinishReason::TimedOut,
+            FinishReason::Rejected("prompt encodes to zero tokens".into()),
+        ] {
+            let c = Completion {
+                request_id: 3,
+                prompt: "p".into(),
+                completion: "some text\nwith \"quotes\"".into(),
+                tokens_generated: 5,
+                finish: finish.clone(),
+            };
+            let text = completion_to_json(&c).to_string();
+            let back = completion_from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.finish, finish);
+            assert_eq!(back.completion, c.completion);
+            assert_eq!(back.request_id, 3);
+        }
+    }
+
+    #[test]
+    fn event_roundtrip() {
+        let tokev = TokenEvent::Token { request_id: 9, token: 77, text_delta: "é".into() };
+        let text = event_to_json(&tokev).to_string();
+        match event_from_json(&json::parse(&text).unwrap()).unwrap() {
+            TokenEvent::Token { request_id, token, text_delta } => {
+                assert_eq!((request_id, token, text_delta.as_str()), (9, 77, "é"));
+            }
+            _ => panic!("expected Token"),
+        }
+
+        let done = TokenEvent::Done {
+            text_delta: "\u{FFFD}".into(),
+            completion: Completion {
+                request_id: 9,
+                prompt: "p".into(),
+                completion: "full".into(),
+                tokens_generated: 2,
+                finish: FinishReason::Eot,
+            },
+        };
+        let text = event_to_json(&done).to_string();
+        match event_from_json(&json::parse(&text).unwrap()).unwrap() {
+            TokenEvent::Done { text_delta, completion } => {
+                assert_eq!(text_delta, "\u{FFFD}");
+                assert_eq!(completion.completion, "full");
+                assert_eq!(completion.finish, FinishReason::Eot);
+            }
+            _ => panic!("expected Done"),
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Blocking HTTP client for the front-end, on plain `std::net` — used by
+//! the `hsm request` CLI, the loopback integration tests, and the
+//! `http_streaming` bench.  One request per connection (the server
+//! always answers `Connection: close`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::api::{self, GenerateRequest};
+use super::http;
+use crate::serve::{Completion, TokenEvent};
+use crate::util::json;
+
+/// Per-read deadline (covers the gap between streamed events too, so it
+/// must absorb admission queueing on a loaded server).
+const READ_TIMEOUT: Duration = Duration::from_secs(300);
+/// Per-write deadline for the request itself.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Status line + headers of a response.
+struct ResponseHead {
+    status: u16,
+    headers: Vec<(String, String)>,
+}
+
+impl ResponseHead {
+    fn header(&self, name: &str) -> Option<&str> {
+        http::header(&self.headers, name)
+    }
+}
+
+/// Send one request, returning the parsed response head and the reader
+/// positioned at the body.
+fn send(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(ResponseHead, BufReader<TcpStream>)> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    // Bounded waits: a wedged or half-open server must produce an error,
+    // not hang `hsm request` forever.  The read budget is generous —
+    // a queued streaming request can legitimately idle for a while
+    // before its first token.
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+    let mut w = stream.try_clone().context("cloning client stream")?;
+    match body {
+        Some(body) => write!(
+            w,
+            "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )?,
+        None => write!(w, "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?,
+    }
+    w.flush()?;
+
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        bail!("server closed the connection without a response");
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line {:?}", line.trim_end()))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            bail!("connection closed mid-response-head");
+        }
+        if line.trim_end_matches(['\r', '\n']).is_empty() {
+            break;
+        }
+        // Lenient on the client side: skip (rather than error on) any
+        // header line we cannot parse — we only need a few well-formed ones.
+        if let Some(parsed) = http::parse_header_line(&line) {
+            headers.push(parsed);
+        }
+    }
+    Ok((ResponseHead { status, headers }, r))
+}
+
+/// Read a fixed-length (or to-EOF) response body.
+fn read_body(head: &ResponseHead, r: &mut BufReader<TcpStream>) -> Result<Vec<u8>> {
+    match head.header("content-length").and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) => {
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body)?;
+            Ok(body)
+        }
+        None => {
+            // Connection: close framing.
+            let mut body = Vec::new();
+            r.read_to_end(&mut body)?;
+            Ok(body)
+        }
+    }
+}
+
+fn parse_json_body(head: &ResponseHead, r: &mut BufReader<TcpStream>) -> Result<json::Value> {
+    let body = read_body(head, r)?;
+    let text = std::str::from_utf8(&body).map_err(|_| anyhow!("response body is not UTF-8"))?;
+    json::parse(text).map_err(|e| anyhow!("{e}"))
+}
+
+fn status_error(status: u16, v: &json::Value) -> anyhow::Error {
+    anyhow!("server returned {status}: {}", v.get("error").as_str().unwrap_or("(no detail)"))
+}
+
+/// `POST /v1/generate`: block until the whole completion is back.
+pub fn generate(addr: &str, req: &GenerateRequest) -> Result<Completion> {
+    let (head, mut r) = send(addr, "POST", "/v1/generate", Some(&req.to_json().to_string()))?;
+    let v = parse_json_body(&head, &mut r)?;
+    if head.status != 200 {
+        return Err(status_error(head.status, &v));
+    }
+    api::completion_from_json(&v)
+}
+
+/// `POST /v1/stream`: invoke `on_delta(token, text)` for every event as
+/// it arrives (`token` is `None` for the final mid-character flush), and
+/// return the finished [`Completion`].  Concatenating every `text`
+/// argument reconstructs the completion byte-for-byte.
+pub fn stream<F: FnMut(Option<u32>, &str)>(
+    addr: &str,
+    req: &GenerateRequest,
+    mut on_delta: F,
+) -> Result<Completion> {
+    let (head, mut r) = send(addr, "POST", "/v1/stream", Some(&req.to_json().to_string()))?;
+    if head.status != 200 {
+        let v = parse_json_body(&head, &mut r)?;
+        return Err(status_error(head.status, &v));
+    }
+
+    let mut done: Option<Completion> = None;
+    // SSE events are "data: <json>\n\n"; the server sends one per chunk,
+    // but reassemble across chunk boundaries anyway.
+    let mut buf: Vec<u8> = Vec::new();
+    http::read_chunks(&mut r, |chunk| {
+        buf.extend_from_slice(chunk);
+        while let Some(pos) = buf.windows(2).position(|w| w == b"\n\n") {
+            let event: Vec<u8> = buf.drain(..pos + 2).collect();
+            let text = std::str::from_utf8(&event[..pos])
+                .map_err(|_| anyhow!("stream event is not UTF-8"))?;
+            for line in text.lines() {
+                let Some(data) = line.strip_prefix("data: ") else { continue };
+                let v = json::parse(data).map_err(|e| anyhow!("{e}"))?;
+                match api::event_from_json(&v)? {
+                    TokenEvent::Token { token, text_delta, .. } => {
+                        on_delta(Some(token), &text_delta);
+                    }
+                    TokenEvent::Done { text_delta, completion } => {
+                        on_delta(None, &text_delta);
+                        done = Some(completion);
+                    }
+                }
+            }
+        }
+        Ok(())
+    })?;
+    done.ok_or_else(|| anyhow!("stream ended without a done event (server failure mid-request?)"))
+}
+
+/// `GET /healthz` — returns the parsed health document.
+pub fn health(addr: &str) -> Result<json::Value> {
+    let (head, mut r) = send(addr, "GET", "/healthz", None)?;
+    let v = parse_json_body(&head, &mut r)?;
+    if head.status != 200 {
+        return Err(status_error(head.status, &v));
+    }
+    Ok(v)
+}

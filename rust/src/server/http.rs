@@ -1,0 +1,254 @@
+//! Minimal HTTP/1.1 wire layer on plain `std::io`, shared by the server
+//! and the blocking client (hyper/tokio are unavailable under the
+//! vendored-offline constraint, and this front-end needs only a sliver
+//! of the protocol: one request per connection, `Content-Length` bodies
+//! in, fixed or chunked bodies out).
+//!
+//! Responses always carry `Connection: close`, so framing on the read
+//! side never has to handle keep-alive pipelining.  Streaming responses
+//! use `Transfer-Encoding: chunked` with **one chunk per event**, so a
+//! client sees each token the moment the server samples it.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Cap on the request line + headers (a loopback API front-end, not a
+/// general proxy — anything bigger is a broken or hostile client).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on request and chunk bodies.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header names lowercased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header(&self.headers, name)
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|_| anyhow!("request body is not valid UTF-8"))
+    }
+}
+
+/// Parse one `Name: value` header line into `(lowercased name, value)`.
+/// Shared by the server's request parser and the client's response
+/// parser so the two sides of the wire can never drift.
+pub fn parse_header_line(line: &str) -> Option<(String, String)> {
+    let line = line.trim_end_matches(['\r', '\n']);
+    let (name, value) = line.split_once(':')?;
+    Some((name.trim().to_ascii_lowercase(), value.trim().to_string()))
+}
+
+/// Case-insensitive lookup over headers parsed by [`parse_header_line`].
+pub fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    let name = name.to_ascii_lowercase();
+    headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+}
+
+/// One head line from the size-capped reader; errors when the cap (not
+/// the peer) ended the stream.
+fn head_line<T: BufRead>(head: &mut std::io::Take<T>) -> Result<String> {
+    let mut line = String::new();
+    let n = head.read_line(&mut line)?;
+    if n == 0 && head.limit() == 0 {
+        bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+    }
+    Ok(line)
+}
+
+/// Read and parse one request.  `Ok(None)` means the peer closed the
+/// connection before sending anything (a clean EOF, not an error).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<HttpRequest>> {
+    // `take` caps the head *as it is read*: a single giant line can never
+    // buffer more than the budget before the error fires.
+    let mut head = (&mut *r).take(MAX_HEAD_BYTES as u64);
+
+    let line = head_line(&mut head)?;
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        bail!("malformed request line {:?}", line.trim_end());
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let line = head_line(&mut head)?;
+        if line.trim_end_matches(['\r', '\n']).is_empty() {
+            break;
+        }
+        headers.push(
+            parse_header_line(&line)
+                .ok_or_else(|| anyhow!("malformed header line {:?}", line.trim_end()))?,
+        );
+    }
+    drop(head);
+
+    let req = HttpRequest { method, path, headers, body: Vec::new() };
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad Content-Length {v:?}"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        bail!("request body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(HttpRequest { body, ..req }))
+}
+
+/// Write a complete fixed-length response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Start a streaming (SSE-over-chunked) response; follow with
+/// [`write_chunk`] per event and [`finish_chunks`] at the end.
+pub fn write_stream_head<W: Write>(w: &mut W) -> Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+          Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()?;
+    Ok(())
+}
+
+/// One chunk, flushed immediately — per-token latency is the whole point
+/// of the streaming endpoint.
+pub fn write_chunk<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    write!(w, "{:x}\r\n", payload.len())?;
+    w.write_all(payload)?;
+    w.write_all(b"\r\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Terminate a chunked body.
+pub fn finish_chunks<W: Write>(w: &mut W) -> Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Decode a chunked body incrementally, invoking `on_chunk` per chunk as
+/// it arrives (the client side of [`write_chunk`]).
+pub fn read_chunks<R: BufRead, F: FnMut(&[u8]) -> Result<()>>(
+    r: &mut R,
+    mut on_chunk: F,
+) -> Result<()> {
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            bail!("connection closed mid-chunk-stream");
+        }
+        let size_field = line.trim().split(';').next().unwrap_or("").trim();
+        let size = usize::from_str_radix(size_field, 16)
+            .map_err(|_| anyhow!("bad chunk size line {:?}", line.trim_end()))?;
+        if size == 0 {
+            // Final chunk; we never send trailers, so just the blank line.
+            let mut end = String::new();
+            let _ = r.read_line(&mut end);
+            return Ok(());
+        }
+        if size > MAX_BODY_BYTES {
+            bail!("chunk of {size} bytes exceeds the {MAX_BODY_BYTES}-byte cap");
+        }
+        let mut buf = vec![0u8; size + 2];
+        r.read_exact(&mut buf)?;
+        if &buf[size..] != b"\r\n" {
+            bail!("chunk missing CRLF terminator");
+        }
+        on_chunk(&buf[..size])?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+                    Content-Length: 14\r\n\r\n{\"prompt\":\"a\"}";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("content-TYPE"), Some("application/json"));
+        assert_eq!(req.body_str().unwrap(), "{\"prompt\":\"a\"}");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(read_request(&mut Cursor::new(&b""[..])).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_garbage_and_oversize() {
+        assert!(read_request(&mut Cursor::new(&b"nonsense\r\n\r\n"[..])).is_err());
+        let huge = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
+        assert!(read_request(&mut Cursor::new(huge.as_bytes())).is_err());
+        let big_body = b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(&big_body[..])).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "OK", "application/json", b"{}").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn chunk_roundtrip() {
+        let mut wire = Vec::new();
+        write_stream_head(&mut wire).unwrap();
+        write_chunk(&mut wire, b"data: one\n\n").unwrap();
+        write_chunk(&mut wire, b"data: two\n\n").unwrap();
+        finish_chunks(&mut wire).unwrap();
+
+        // Skip the head, then decode the chunks back.
+        let head_end = wire.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        let mut r = Cursor::new(&wire[head_end..]);
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        read_chunks(&mut r, |c| {
+            got.push(c.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![b"data: one\n\n".to_vec(), b"data: two\n\n".to_vec()]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Cross-process serving: a dependency-free HTTP/1.1 front-end over the
+//! resident [`StreamScheduler`].
+//!
+//! This is the first workload where the model leaves the process: a
+//! long-running `hsm serve --http ADDR` exposes
+//!
+//! * `POST /v1/generate` — JSON in, JSON out; blocks until the
+//!   completion is finished.
+//! * `POST /v1/stream` — SSE-style per-token events over
+//!   `Transfer-Encoding: chunked`, one chunk per [`TokenEvent`], so
+//!   time-to-first-token is one prefill + one decode step, not a whole
+//!   completion.
+//! * `GET /healthz` — model/ctx/vocab liveness probe.
+//!
+//! Concurrency model: one accept-loop thread, one thread per connection
+//! (connections are long-lived streams, cheap at the concurrency a
+//! loopback/LAN front-end sees; the *decode* concurrency is the
+//! scheduler's worker pool, shared by every connection through
+//! continuous batching).  The determinism invariant carries across the
+//! wire: request `id` fixes the sampled text, so streamed bytes are
+//! identical to in-process [`crate::serve::serve`] output —
+//! `rust/tests/http_server.rs` pins this over loopback.
+//!
+//! Submodules:
+//! * [`http`] — minimal HTTP/1.1 parsing and (chunked) response writing.
+//! * [`api`] — JSON wire types on [`crate::util::json`].
+//! * [`client`] — blocking client (used by `hsm request`, tests, and
+//!   the `http_streaming` bench).
+
+pub mod api;
+pub mod client;
+pub mod http;
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::serve::{Request, StreamScheduler, TokenEvent};
+use crate::util::json;
+
+/// Per-connection socket read timeout: a client that connects and never
+/// sends a request cannot pin its handler thread (or shutdown) forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Per-write timeout on responses/chunks, for the same reason.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The running HTTP front-end.  Bind with [`HttpServer::bind`]; stop
+/// with [`shutdown`](HttpServer::shutdown) (graceful: in-flight
+/// requests drain first).
+pub struct HttpServer {
+    inner: Arc<ServerInner>,
+    accept: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+struct ServerInner {
+    sched: Arc<StreamScheduler>,
+    listener: TcpListener,
+    addr: SocketAddr,
+    stopping: AtomicBool,
+    /// Server-assigned request ids start far above anything a client
+    /// passing small explicit ids would collide with.
+    next_id: AtomicU64,
+    conns: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`; port `0` picks a free port —
+    /// see [`local_addr`](Self::local_addr)) and start accepting.
+    pub fn bind(addr: &str, sched: Arc<StreamScheduler>) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding http server to {addr}"))?;
+        let local = listener.local_addr()?;
+        let inner = Arc::new(ServerInner {
+            sched,
+            listener,
+            addr: local,
+            stopping: AtomicBool::new(false),
+            next_id: AtomicU64::new(1 << 32),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept = {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || accept_loop(&inner))
+        };
+        Ok(HttpServer { inner, accept: Mutex::new(Some(accept)) })
+    }
+
+    /// The bound address (the actual port when bound with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.addr
+    }
+
+    /// Block until the accept loop exits (i.e. until another thread
+    /// calls [`shutdown`](Self::shutdown), or the process dies) — what
+    /// `hsm serve --http` parks on.
+    pub fn join(&self) {
+        let handle = self.accept.lock().expect("accept handle lock").take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, join connection handlers
+    /// (each serves one request then closes), then drain the scheduler.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        if self.inner.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the blocking accept() with one last loopback connect.
+        // A wildcard bind address (0.0.0.0 / ::) is not connectable on
+        // every platform, so aim the wake-up at localhost explicitly.
+        let mut wake = self.inner.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(if wake.is_ipv4() {
+                IpAddr::V4(Ipv4Addr::LOCALHOST)
+            } else {
+                IpAddr::V6(Ipv6Addr::LOCALHOST)
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        self.join();
+        let conns = std::mem::take(&mut *self.inner.conns.lock().expect("conn list lock"));
+        for h in conns {
+            let _ = h.join();
+        }
+        self.inner.sched.shutdown();
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(inner: &Arc<ServerInner>) {
+    loop {
+        let stream = match inner.listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if inner.stopping.load(Ordering::SeqCst) {
+                    return;
+                }
+                // Persistent accept errors (e.g. EMFILE under fd
+                // exhaustion) must not busy-spin a core; back off and
+                // let in-flight connections release fds.
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        if inner.stopping.load(Ordering::SeqCst) {
+            return; // the shutdown wake-up connect
+        }
+        let conn_inner = Arc::clone(inner);
+        let handle = std::thread::spawn(move || {
+            let _ = handle_connection(&conn_inner, stream);
+        });
+        let mut conns = inner.conns.lock().expect("conn list lock");
+        // Reap finished handlers so a long-lived server's list stays flat.
+        conns.retain(|h| !h.is_finished());
+        conns.push(handle);
+    }
+}
+
+fn handle_connection(inner: &ServerInner, stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+    // Per-token chunks must hit the wire immediately, not sit in Nagle
+    // coalescing buffers.
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
+    let mut writer = BufWriter::new(stream);
+    let req = match http::read_request(&mut reader) {
+        Ok(Some(r)) => r,
+        Ok(None) => return Ok(()),
+        Err(e) => return respond_error(&mut writer, 400, &format!("{e:#}")),
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(inner, &mut writer, &req),
+        ("POST", "/v1/stream") => handle_stream(inner, &mut writer, &req),
+        ("GET", "/healthz") => handle_health(inner, &mut writer),
+        (_, "/v1/generate" | "/v1/stream") => respond_error(&mut writer, 405, "use POST"),
+        _ => respond_error(
+            &mut writer,
+            404,
+            "unknown route (have: POST /v1/generate, POST /v1/stream, GET /healthz)",
+        ),
+    }
+}
+
+fn respond_error<W: Write>(w: &mut W, status: u16, msg: &str) -> Result<()> {
+    let reason = match status {
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let body = json::obj(vec![("error", json::s(msg))]).to_string();
+    http::write_response(w, status, reason, "application/json", body.as_bytes())
+}
+
+/// Parse the JSON body into a scheduler [`Request`], assigning a fresh
+/// id when the client did not pick one.
+fn parse_generate(inner: &ServerInner, req: &http::HttpRequest) -> Result<Request> {
+    let v = json::parse(req.body_str()?).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let g = api::GenerateRequest::from_json(&v)?;
+    let id = g.id.unwrap_or_else(|| inner.next_id.fetch_add(1, Ordering::Relaxed));
+    let mut r = Request::new(id, &g.prompt);
+    r.max_new_tokens = g.max_new_tokens;
+    Ok(r)
+}
+
+fn handle_generate(
+    inner: &ServerInner,
+    w: &mut impl Write,
+    req: &http::HttpRequest,
+) -> Result<()> {
+    let request = match parse_generate(inner, req) {
+        Ok(r) => r,
+        Err(e) => return respond_error(w, 400, &format!("{e:#}")),
+    };
+    let stream = match inner.sched.submit(request) {
+        Ok(s) => s,
+        Err(e) => return respond_error(w, 503, &format!("{e:#}")),
+    };
+    match stream.wait(|_| {}) {
+        Some(completion) => http::write_response(
+            w,
+            200,
+            "OK",
+            "application/json",
+            api::completion_to_json(&completion).to_string().as_bytes(),
+        ),
+        None => respond_error(w, 500, "scheduler dropped the request before it finished"),
+    }
+}
+
+fn handle_stream(inner: &ServerInner, w: &mut impl Write, req: &http::HttpRequest) -> Result<()> {
+    let request = match parse_generate(inner, req) {
+        Ok(r) => r,
+        Err(e) => return respond_error(w, 400, &format!("{e:#}")),
+    };
+    let stream = match inner.sched.submit(request) {
+        Ok(s) => s,
+        Err(e) => return respond_error(w, 503, &format!("{e:#}")),
+    };
+    http::write_stream_head(w)?;
+    for ev in stream {
+        let payload = format!("data: {}\n\n", api::event_to_json(&ev));
+        if http::write_chunk(w, payload.as_bytes()).is_err() {
+            // Client went away mid-stream.  Dropping the TokenStream
+            // marks the sink dead; decoding finishes deterministically
+            // without a consumer.
+            return Ok(());
+        }
+        if matches!(ev, TokenEvent::Done { .. }) {
+            break;
+        }
+    }
+    http::finish_chunks(w)
+}
+
+fn handle_health(inner: &ServerInner, w: &mut impl Write) -> Result<()> {
+    let m = &inner.sched.model().manifest;
+    let body = json::obj(vec![
+        ("status", json::s("ok")),
+        ("variant", json::s(&m.variant)),
+        ("ctx", json::num(m.ctx as f64)),
+        ("vocab", json::num(m.vocab as f64)),
+    ])
+    .to_string();
+    http::write_response(w, 200, "OK", "application/json", body.as_bytes())
+}

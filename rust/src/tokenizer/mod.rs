@@ -99,20 +99,28 @@ impl Tokenizer {
         }
     }
 
+    /// Append one token's raw bytes to `buf` (the EOT sentinel and
+    /// unknown ids contribute nothing).  The single source of truth for
+    /// token→bytes, shared by [`decode`](Self::decode) and the streaming
+    /// [`StreamDecoder`] so the two paths can never drift.
+    pub fn token_bytes(&self, id: u32, buf: &mut Vec<u8>) {
+        if id == self.eot {
+            return;
+        }
+        if let Some(tok) = self.vocab.get(id as usize) {
+            for ch in tok.chars() {
+                if let Some(b) = bytes::unicode_to_byte(ch) {
+                    buf.push(b);
+                }
+            }
+        }
+    }
+
     /// Decode token ids back to text (lossy only on invalid UTF-8 splices).
     pub fn decode(&self, ids: &[u32]) -> String {
         let mut buf: Vec<u8> = Vec::with_capacity(ids.len() * 3);
         for &id in ids {
-            if id == self.eot {
-                continue;
-            }
-            if let Some(tok) = self.vocab.get(id as usize) {
-                for ch in tok.chars() {
-                    if let Some(b) = bytes::unicode_to_byte(ch) {
-                        buf.push(b);
-                    }
-                }
-            }
+            self.token_bytes(id, &mut buf);
         }
         String::from_utf8_lossy(&buf).into_owned()
     }
@@ -185,6 +193,89 @@ impl Tokenizer {
             .get(EOT_TOKEN)
             .ok_or_else(|| anyhow!("vocabulary lacks {EOT_TOKEN}"))?;
         Ok(Tokenizer { vocab, lookup, merges, eot })
+    }
+}
+
+/// Incremental detokenizer for streaming: feed token ids one at a time
+/// and get back exactly the text [`Tokenizer::decode`] would produce for
+/// the whole sequence, in byte-identical fragments.
+///
+/// A BPE token can end in the middle of a multi-byte UTF-8 sequence, so
+/// a per-token `decode` of the suffix would emit replacement characters
+/// that the full decode would not.  `StreamDecoder` holds such trailing
+/// bytes back until the sequence resolves: [`push`](StreamDecoder::push)
+/// emits the longest prefix whose interpretation can never change
+/// (complete characters, plus one U+FFFD per maximal invalid subpart —
+/// the same policy `String::from_utf8_lossy` applies), and
+/// [`finish`](StreamDecoder::finish) flushes a still-incomplete tail as
+/// the single U+FFFD the full-sequence decode would render it as.
+///
+/// Invariant (property-tested): for any id sequence,
+/// `pushes.concat() + finish() == tok.decode(&ids)`.
+#[derive(Debug, Clone, Default)]
+pub struct StreamDecoder {
+    /// Bytes decoded from tokens but not yet emitted as text (a possibly
+    /// incomplete trailing UTF-8 sequence).
+    pending: Vec<u8>,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        StreamDecoder { pending: Vec::new() }
+    }
+
+    /// Feed one token; returns the text it unlocked (possibly empty
+    /// while a multi-byte character is still incomplete).
+    pub fn push(&mut self, tok: &Tokenizer, id: u32) -> String {
+        tok.token_bytes(id, &mut self.pending);
+        self.drain(false)
+    }
+
+    /// End of sequence: flush any trailing incomplete UTF-8 sequence as
+    /// U+FFFD (exactly how the full-sequence lossy decode renders it).
+    pub fn finish(&mut self) -> String {
+        self.drain(true)
+    }
+
+    fn drain(&mut self, flush: bool) -> String {
+        let mut out = String::new();
+        let mut start = 0usize;
+        loop {
+            match std::str::from_utf8(&self.pending[start..]) {
+                Ok(s) => {
+                    out.push_str(s);
+                    start = self.pending.len();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(
+                        std::str::from_utf8(&self.pending[start..start + valid])
+                            .expect("valid_up_to prefix is valid UTF-8"),
+                    );
+                    start += valid;
+                    match e.error_len() {
+                        // Definitely invalid bytes: one replacement char
+                        // per maximal invalid subpart, like from_utf8_lossy.
+                        Some(n) => {
+                            out.push('\u{FFFD}');
+                            start += n;
+                        }
+                        // Incomplete tail: hold it back — the next token
+                        // may complete the character.
+                        None => {
+                            if flush {
+                                out.push('\u{FFFD}');
+                                start = self.pending.len();
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        self.pending.drain(..start);
+        out
     }
 }
 
@@ -353,5 +444,56 @@ mod tests {
         let mut ids = tok.encode("the cat");
         ids.push(tok.eot);
         assert_eq!(tok.decode(&ids), "the cat");
+    }
+
+    /// Concatenated stream deltas must be byte-identical to the one-shot
+    /// decode, including across multi-byte characters split over tokens.
+    #[test]
+    fn stream_decoder_matches_decode_basic() {
+        let tok = tiny_tok();
+        for s in ["the cat sat", "unseen wörds 😀 are fine", "é中🌍", ""] {
+            let ids = tok.encode(s);
+            let mut sd = StreamDecoder::new();
+            let mut streamed = String::new();
+            for &id in &ids {
+                streamed.push_str(&sd.push(&tok, id));
+            }
+            streamed.push_str(&sd.finish());
+            assert_eq!(streamed, tok.decode(&ids), "for {s:?}");
+        }
+    }
+
+    #[test]
+    fn stream_decoder_holds_back_incomplete_utf8() {
+        let tok = tiny_tok();
+        // "😀" is 4 bytes; with a vocab trained on ASCII the emoji comes
+        // out as byte-level tokens, so early pushes must emit nothing.
+        let ids = tok.encode("😀");
+        assert!(ids.len() > 1, "emoji should split into byte tokens");
+        let mut sd = StreamDecoder::new();
+        let mut deltas: Vec<String> = ids.iter().map(|&id| sd.push(&tok, id)).collect();
+        deltas.push(sd.finish());
+        for d in &deltas[..deltas.len() - 2] {
+            assert!(d.is_empty(), "mid-character delta must be empty, got {d:?}");
+        }
+        assert_eq!(deltas.concat(), "😀");
+    }
+
+    /// Arbitrary id sequences — including the EOT sentinel and ids that
+    /// splice invalid UTF-8 — stream to the same text as `decode`.
+    #[test]
+    fn stream_decoder_matches_decode_property() {
+        let tok = tiny_tok();
+        let vocab = tok.vocab_size() as u32;
+        prop::check("stream-decode-parity", |rng| {
+            let ids = prop::arb_tokens(rng, vocab, 40);
+            let mut sd = StreamDecoder::new();
+            let mut streamed = String::new();
+            for &id in &ids {
+                streamed.push_str(&sd.push(&tok, id));
+            }
+            streamed.push_str(&sd.finish());
+            assert_eq!(streamed, tok.decode(&ids), "for ids {ids:?}");
+        });
     }
 }

@@ -1,0 +1,207 @@
+//! Loopback integration tests for the HTTP serving front-end: real
+//! sockets on 127.0.0.1 (port 0 → OS-assigned), the real accept loop,
+//! concurrent streaming clients, and the cross-process determinism
+//! guarantee — streamed bytes identical to in-process decoding.
+//! PJRT-free (synthetic weights), so it runs under both feature sets.
+
+use std::sync::Arc;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::{self, SampleCfg};
+use hsm::infer::{weights, Model, ModelWeights};
+use hsm::serve::{FinishReason, ServeCfg, StreamScheduler};
+use hsm::server::api::GenerateRequest;
+use hsm::server::{client, HttpServer};
+use hsm::tokenizer::Tokenizer;
+
+fn tok() -> Tokenizer {
+    let text = hsm::corpus::generate(9, 80);
+    hsm::tokenizer::trainer::train(&text, 300).unwrap()
+}
+
+fn model(vocab: usize, ctx: usize) -> Arc<Model> {
+    let layers = vec![
+        LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+        LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+    ];
+    let m = Manifest::synthetic("hsm_ab", layers, 8, ctx, vocab, 1);
+    let flat = weights::seeded_flat(&m, 21);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+/// Server + everything needed to compute in-process references.
+fn start(sample: SampleCfg, cfg: ServeCfg) -> (HttpServer, Tokenizer, Arc<Model>, String) {
+    let tok = tok();
+    let model = model(tok.vocab_size(), 64);
+    let cfg = ServeCfg { sample, ..cfg };
+    let sched =
+        Arc::new(StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).unwrap());
+    let server = HttpServer::bind("127.0.0.1:0", sched).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, tok, model, addr)
+}
+
+fn sample() -> SampleCfg {
+    SampleCfg { temperature: 0.8, top_k: 8, max_new_tokens: 8, seed: 9, stop_at_eot: true }
+}
+
+fn reference(model: &Arc<Model>, tok: &Tokenizer, prompt: &str, id: u64) -> String {
+    let solo = SampleCfg { seed: sample().seed ^ id, ..sample() };
+    generation::generate(&mut model.session(), tok, prompt, &solo).unwrap().completion
+}
+
+#[test]
+fn generate_endpoint_matches_in_process_decoding() {
+    let (server, tok, model, addr) = start(sample(), ServeCfg::default());
+    let mut req = GenerateRequest::new("Once upon a time");
+    req.id = Some(3);
+    let got = client::generate(&addr, &req).unwrap();
+    assert_eq!(got.request_id, 3);
+    assert_eq!(got.completion, reference(&model, &tok, "Once upon a time", 3));
+    assert!(got.tokens_generated > 0);
+    server.shutdown();
+}
+
+#[test]
+fn stream_endpoint_deltas_concat_to_in_process_text() {
+    let (server, tok, model, addr) = start(sample(), ServeCfg::default());
+    let mut req = GenerateRequest::new("Lily likes cats");
+    req.id = Some(5);
+    let mut events = 0usize;
+    let mut streamed = String::new();
+    let completion = client::stream(&addr, &req, |token, delta| {
+        if token.is_some() {
+            events += 1;
+        }
+        streamed.push_str(delta);
+    })
+    .unwrap();
+    let want = reference(&model, &tok, "Lily likes cats", 5);
+    assert_eq!(streamed, want, "streamed deltas must reassemble the completion");
+    assert_eq!(completion.completion, want);
+    assert_eq!(events, completion.tokens_generated, "one Token event per sampled token");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_stream_clients_get_byte_identical_text() {
+    let (server, tok, model, addr) = start(sample(), ServeCfg::default());
+    let prompts = ["Once upon a time", "Lily likes cats", "Jack went to", "Once upon a time"];
+    let want: Vec<String> =
+        prompts.iter().enumerate().map(|(i, p)| reference(&model, &tok, p, i as u64)).collect();
+
+    std::thread::scope(|s| {
+        let handles: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, prompt)| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut req = GenerateRequest::new(prompt);
+                    req.id = Some(i as u64);
+                    let mut streamed = String::new();
+                    let completion =
+                        client::stream(&addr, &req, |_, delta| streamed.push_str(delta)).unwrap();
+                    (streamed, completion)
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let (streamed, completion) = h.join().unwrap();
+            assert_eq!(streamed, want[i], "concurrent client {i} diverged");
+            assert_eq!(completion.completion, want[i]);
+        }
+    });
+    server.shutdown();
+}
+
+#[test]
+fn server_assigns_distinct_ids_when_client_omits_them() {
+    let (server, _tok, _model, addr) = start(sample(), ServeCfg::default());
+    let a = client::generate(&addr, &GenerateRequest::new("Once upon a time")).unwrap();
+    let b = client::generate(&addr, &GenerateRequest::new("Once upon a time")).unwrap();
+    assert_ne!(a.request_id, b.request_id);
+    server.shutdown();
+}
+
+#[test]
+fn bad_requests_and_routes_get_http_errors() {
+    let (server, _tok, _model, addr) = start(sample(), ServeCfg::default());
+
+    // Malformed JSON → 400 from /v1/generate.
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(
+            s,
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\
+             Connection: close\r\n\r\nnot json!"
+        )
+        .unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 400 "), "got: {resp}");
+    }
+
+    // Unknown route → 404; wrong method → 405.
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(s, "GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404 "), "got: {resp}");
+
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(s, "GET /v1/stream HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 405 "), "got: {resp}");
+    }
+
+    // A rejected prompt is data, not a transport error: 200 + finish.
+    let rejected = client::generate(&addr, &GenerateRequest::new("")).unwrap();
+    assert!(matches!(rejected.finish, FinishReason::Rejected(_)));
+    assert_eq!(rejected.tokens_generated, 0);
+
+    server.shutdown();
+}
+
+#[test]
+fn healthz_reports_the_model() {
+    let (server, tok, _model, addr) = start(sample(), ServeCfg::default());
+    let v = client::health(&addr).unwrap();
+    assert_eq!(v.get("status").as_str(), Some("ok"));
+    assert_eq!(v.get("vocab").as_usize(), Some(tok.vocab_size()));
+    server.shutdown();
+}
+
+#[test]
+fn zero_queue_wait_times_out_over_http() {
+    let cfg = ServeCfg {
+        max_active: 1,
+        threads: 1,
+        max_queue_wait: Some(std::time::Duration::ZERO),
+        ..Default::default()
+    };
+    let (server, _tok, _model, addr) = start(sample(), cfg);
+    let got = client::generate(&addr, &GenerateRequest::new("Once upon a time")).unwrap();
+    assert_eq!(got.finish, FinishReason::TimedOut);
+    assert_eq!(got.tokens_generated, 0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_is_graceful_and_final() {
+    let (server, tok, model, addr) = start(sample(), ServeCfg::default());
+    // A request completes fine before shutdown...
+    let mut req = GenerateRequest::new("Jack went to");
+    req.id = Some(1);
+    let before = client::generate(&addr, &req).unwrap();
+    assert_eq!(before.completion, reference(&model, &tok, "Jack went to", 1));
+    // ...then shutdown is idempotent and the port stops answering.
+    server.shutdown();
+    server.shutdown();
+    drop(server);
+    assert!(client::generate(&addr, &req).is_err(), "server must be gone after shutdown");
+}

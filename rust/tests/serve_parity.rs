@@ -94,7 +94,8 @@ fn continuous_batching_matches_sequential_for_every_mixer_kind() {
         let model = model_for(kind, 48, tok.vocab_size());
         let reference = sequential_reference(&model, &tok, PROMPTS, &cfg);
         for &(max_active, threads, quantum) in SHAPES {
-            let scfg = ServeCfg { max_active, threads, quantum, sample: cfg.clone() };
+            let scfg =
+                ServeCfg { max_active, threads, quantum, sample: cfg.clone(), ..Default::default() };
             let requests: Vec<Request> =
                 PROMPTS.iter().enumerate().map(|(i, p)| Request::new(i as u64, p)).collect();
             let comps = serve(&model, &tok, requests, &scfg).unwrap();
@@ -130,10 +131,11 @@ fn eviction_frees_slots_and_preserves_order() {
     let prompts: Vec<&str> = (0..9).map(|i| PROMPTS[i % PROMPTS.len()]).collect();
     let reference = sequential_reference(&model, &tok, &prompts, &cfg);
 
-    let scfg = ServeCfg { max_active: 2, threads: 3, quantum: 4, sample: cfg };
+    let scfg =
+        ServeCfg { max_active: 2, threads: 3, quantum: 4, sample: cfg, ..Default::default() };
     let requests: Vec<Request> =
         prompts.iter().enumerate().map(|(i, p)| Request::new(i as u64, p)).collect();
-    let comps = Scheduler::new(Arc::clone(&model), scfg).serve(&tok, requests).unwrap();
+    let comps = Scheduler::new(Arc::clone(&model), scfg).unwrap().serve(&tok, requests).unwrap();
 
     assert_eq!(comps.len(), 9);
     for (i, (c, r)) in comps.iter().zip(&reference).enumerate() {
@@ -156,7 +158,7 @@ fn per_request_budget_overrides_the_shared_cap() {
         seed: 7,
         stop_at_eot: false,
     };
-    let scfg = ServeCfg { max_active: 2, threads: 2, quantum: 3, sample };
+    let scfg = ServeCfg { max_active: 2, threads: 2, quantum: 3, sample, ..Default::default() };
     let mut short = Request::new(0, "Once upon a time");
     short.max_new_tokens = Some(3);
     let long = Request::new(1, "Once upon a time");
@@ -195,6 +197,7 @@ fn rejection_and_length_mismatch_edges() {
         threads: 2,
         quantum: 2,
         sample: SampleCfg { max_new_tokens: 4, ..Default::default() },
+        ..Default::default()
     };
     let comps = serve(&model, &tok, reqs, &scfg).unwrap();
     assert!(matches!(comps[0].finish, FinishReason::Rejected(_)), "oversize prompt must reject");

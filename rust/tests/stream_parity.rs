@@ -1,0 +1,125 @@
+//! Streaming parity: for **every mixer kind**, concatenating the
+//! `text_delta`s from the streaming path is byte-identical to the
+//! non-streaming [`hsm::serve::Completion::completion`] — and to
+//! sequential single-session `generate`.  Streaming is a pure tap on the
+//! decode loop; this pins that it can never change sampled text.
+
+use std::sync::Arc;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::{self, SampleCfg};
+use hsm::infer::{weights, Model, ModelWeights};
+use hsm::serve::{serve, Request, ServeCfg, StreamScheduler, TokenEvent, TokenStream};
+use hsm::tokenizer::Tokenizer;
+
+const KINDS: &[&str] = &["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"];
+
+const PROMPTS: &[&str] = &[
+    "Once upon a time",
+    "Lily likes cats",
+    "Jack went to",
+    "Ben and Lily wanted cake",
+];
+
+fn layers_for(kind: &str) -> Vec<LayerInfo> {
+    match kind {
+        "ab" => vec![
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![1, 2, 4, 8], ffn: 24 },
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![2, 4, 8, 16], ffn: 24 },
+        ],
+        _ => vec![
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![1], ffn: 24 },
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![3], ffn: 24 },
+        ],
+    }
+}
+
+fn model_for(kind: &str, ctx: usize, vocab: usize) -> Arc<Model> {
+    let m = Manifest::synthetic(kind, layers_for(kind), 16, ctx, vocab, 2);
+    let flat = weights::seeded_flat(&m, 31);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn tok() -> Tokenizer {
+    let text = hsm::corpus::generate(9, 80);
+    hsm::tokenizer::trainer::train(&text, 300).unwrap()
+}
+
+#[test]
+fn streamed_deltas_concat_to_batch_and_sequential_text_for_every_mixer_kind() {
+    let tok = tok();
+    let cfg = SampleCfg {
+        temperature: 0.8,
+        top_k: 8,
+        max_new_tokens: 8,
+        seed: 11,
+        stop_at_eot: true,
+    };
+    for kind in KINDS {
+        let model = model_for(kind, 48, tok.vocab_size());
+
+        // Sequential ground truth: each request alone in a fresh session,
+        // RNG stream seed ^ id.
+        let sequential: Vec<String> = PROMPTS
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let solo = SampleCfg { seed: cfg.seed ^ i as u64, ..cfg.clone() };
+                generation::generate(&mut model.session(), &tok, p, &solo).unwrap().completion
+            })
+            .collect();
+
+        // Non-streaming scheduler output.
+        let scfg = ServeCfg {
+            max_active: 2,
+            threads: 3,
+            quantum: 2,
+            sample: cfg.clone(),
+            ..Default::default()
+        };
+        let requests: Vec<Request> =
+            PROMPTS.iter().enumerate().map(|(i, p)| Request::new(i as u64, p)).collect();
+        let batch = serve(&model, &tok, requests.clone(), &scfg).unwrap();
+
+        // Streaming path: submit everything up front so the sequences
+        // genuinely interleave across workers, then drain each stream.
+        let sched = StreamScheduler::start(Arc::clone(&model), tok.clone(), scfg).unwrap();
+        let streams: Vec<TokenStream> =
+            requests.into_iter().map(|r| sched.submit(r).unwrap()).collect();
+        for ((stream, want), solo) in streams.into_iter().zip(&batch).zip(&sequential) {
+            let mut streamed = String::new();
+            let mut token_events = 0usize;
+            let mut done = None;
+            for ev in stream {
+                match ev {
+                    TokenEvent::Token { text_delta, .. } => {
+                        token_events += 1;
+                        streamed.push_str(&text_delta);
+                    }
+                    TokenEvent::Done { text_delta, completion } => {
+                        streamed.push_str(&text_delta);
+                        done = Some(completion);
+                    }
+                }
+            }
+            let done = done.expect("stream must end with Done");
+            assert_eq!(
+                streamed, want.completion,
+                "{kind}: request {} streamed text diverged from batch",
+                want.request_id
+            );
+            assert_eq!(
+                &streamed, solo,
+                "{kind}: request {} streamed text diverged from sequential",
+                want.request_id
+            );
+            assert_eq!(done.completion, want.completion, "{kind}: Done completion mismatch");
+            assert_eq!(done.finish, want.finish, "{kind}: finish reason mismatch");
+            assert_eq!(
+                token_events, want.tokens_generated,
+                "{kind}: one Token event per sampled token"
+            );
+        }
+        sched.shutdown();
+    }
+}
