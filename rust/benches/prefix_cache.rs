@@ -1,0 +1,299 @@
+//! Bench: the shared prefix cache on a shared-prompt-head workload —
+//! **time-to-first-token** (TTFT) and **prefill tok/s**, with the cache
+//! on vs off.
+//!
+//! The workload models the dominant short-completion serving pattern:
+//! every request shares one long system-prompt head and differs only in
+//! a short user tail.  Without the cache each request re-prefills the
+//! whole head; with it, the first request pays the prefill once and
+//! every later request restores the head snapshot and prefills only its
+//! tail.
+//!
+//! Three measurements over identical synthetic weights (no artifacts):
+//!
+//! 1. **Session microbench** — cold prefill of the head vs a snapshot
+//!    restore: the raw cost the cache removes.
+//! 2. **Scheduler TTFT** — a resident `StreamScheduler`, requests
+//!    submitted one at a time: per-request submit → first event, cold
+//!    (`prefix_cache_size = 0`) vs warm (cache enabled).  The warm run's
+//!    first request is the seeding miss and is reported separately.
+//! 3. **HTTP keep-alive RTT** — the same shared-head request twice over
+//!    one kept-alive connection ([`client::Client`]): cold-cache RTT vs
+//!    hit RTT, connection reused.
+//!
+//! Cold and warm runs must produce byte-identical text (the cache is
+//! bit-exact); the bench asserts it.
+//!
+//! Results land in `BENCH_prefix.json` (override with `HSM_BENCH_OUT`);
+//! `HSM_BENCH_REQUESTS` scales the request count.
+//!
+//! Run: `cargo bench --bench prefix_cache`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::{SampleCfg, TABLE3_PROMPTS};
+use hsm::infer::{weights, Decoder, Model, ModelWeights};
+use hsm::serve::{Request, ServeCfg, StreamScheduler, TokenEvent};
+use hsm::server::api::GenerateRequest;
+use hsm::server::{client, HttpServer};
+use hsm::tokenizer::Tokenizer;
+
+fn synthetic_model(ctx: usize, vocab: usize) -> Arc<Model> {
+    let (dim, heads, ffn) = (64, 4, 128);
+    let layers: Vec<LayerInfo> = (0..4)
+        .map(|l| LayerInfo {
+            kind: "ab".to_string(),
+            heads,
+            shifts: vec![(1usize << l.min(5)).min(ctx / 2)],
+            ffn,
+        })
+        .collect();
+    let m = Manifest::synthetic("hsm_ab", layers, dim, ctx, vocab, 1);
+    let flat = weights::seeded_flat(&m, 17);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn fnv(digest: &mut u64, s: &str) {
+    for b in s.as_bytes() {
+        *digest = (*digest ^ *b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+struct Percentiles {
+    mean: f64,
+    p50: f64,
+    p95: f64,
+}
+
+fn percentiles(samples: &mut [f64]) -> Percentiles {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let at = |q: f64| samples[((samples.len() - 1) as f64 * q).round() as usize];
+    Percentiles {
+        mean: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50: at(0.5),
+        p95: at(0.95),
+    }
+}
+
+/// Submit `prompts` one at a time to a fresh scheduler with the given
+/// cache size; returns (per-request TTFT ms, per-request cached prefix
+/// lens, text digest, total tokens).
+fn run_sequential(
+    model: &Arc<Model>,
+    tok: &Tokenizer,
+    prompts: &[String],
+    sample: &SampleCfg,
+    prefix_cache_size: usize,
+) -> (Vec<f64>, Vec<usize>, u64, usize) {
+    let cfg = ServeCfg {
+        max_active: 2,
+        threads: 2,
+        quantum: 8,
+        prefix_cache_size,
+        sample: sample.clone(),
+        ..Default::default()
+    };
+    let sched = StreamScheduler::start(Arc::clone(model), tok.clone(), cfg).unwrap();
+    let mut ttfts = Vec::with_capacity(prompts.len());
+    let mut cached = Vec::with_capacity(prompts.len());
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    let mut tokens = 0usize;
+    for (i, p) in prompts.iter().enumerate() {
+        let stream = sched.submit(Request::new(i as u64, p)).unwrap();
+        let submitted = Instant::now();
+        let mut first: Option<f64> = None;
+        let mut text = String::new();
+        for ev in stream {
+            if first.is_none() {
+                first = Some(submitted.elapsed().as_secs_f64() * 1e3);
+            }
+            match ev {
+                TokenEvent::Token { text_delta, .. } => {
+                    tokens += 1;
+                    text.push_str(&text_delta);
+                }
+                TokenEvent::Done { text_delta, completion } => {
+                    text.push_str(&text_delta);
+                    cached.push(completion.cached_prefix_len);
+                }
+            }
+        }
+        fnv(&mut digest, &text);
+        ttfts.push(first.unwrap_or(f64::NAN));
+    }
+    sched.shutdown();
+    (ttfts, cached, digest, tokens)
+}
+
+fn main() {
+    let n: usize = std::env::var("HSM_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16)
+        .max(2);
+    let out_path =
+        std::env::var("HSM_BENCH_OUT").unwrap_or_else(|_| "BENCH_prefix.json".to_string());
+
+    let text = hsm::corpus::generate(1234, 400);
+    let tok: Tokenizer = hsm::tokenizer::trainer::train(&text, 512).unwrap();
+    let ctx = 1024;
+    let model = synthetic_model(ctx, tok.vocab_size());
+
+    // One long shared system-prompt head + short per-request tails.
+    let head: String = TABLE3_PROMPTS[..8].join(" ");
+    let head_tokens = tok.encode(&head).len();
+    let prompts: Vec<String> = (0..n)
+        .map(|i| format!("{head} {}", TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()]))
+        .collect();
+    let prompt_tokens = tok.encode(&prompts[0]).len();
+    assert!(prompt_tokens + 24 < ctx, "prompt must fit the context window");
+    let sample = SampleCfg {
+        temperature: 0.8,
+        top_k: 40,
+        max_new_tokens: 16,
+        seed: 5,
+        stop_at_eot: true,
+    };
+    println!(
+        "shared head: {head_tokens} tokens; full prompt ≈ {prompt_tokens} tokens; \
+         {n} requests, {} new tokens each",
+        sample.max_new_tokens
+    );
+
+    // 1. Session microbench: cold head prefill vs snapshot restore.
+    let head_ids = tok.encode(&head);
+    let mut warmup = model.session();
+    warmup.prefill(&head_ids).unwrap();
+    let reps = 5;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut s = model.session();
+        s.prefill(&head_ids).unwrap();
+    }
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    let snap = {
+        let mut s = model.session();
+        s.prefill(&head_ids).unwrap();
+        s.snapshot().unwrap()
+    };
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let s = model.session_from(snap.clone()).unwrap();
+        assert_eq!(s.position(), head_ids.len());
+    }
+    let restore_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    let prefill_tps = head_ids.len() as f64 / (prefill_ms / 1e3);
+    println!(
+        "head prefill: {prefill_ms:.3}ms ({prefill_tps:.0} tok/s) vs snapshot restore: \
+         {restore_ms:.3}ms — {:.1}× cheaper",
+        prefill_ms / restore_ms.max(1e-9)
+    );
+
+    // 2. Scheduler TTFT, cold vs warm cache.
+    let (mut cold_ttft, cold_cached, cold_digest, cold_tokens) =
+        run_sequential(&model, &tok, &prompts, &sample, 0);
+    assert!(cold_cached.iter().all(|&c| c == 0), "disabled cache must stay cold");
+    let (warm_ttft, warm_cached, warm_digest, warm_tokens) =
+        run_sequential(&model, &tok, &prompts, &sample, 64);
+    assert_eq!(cold_digest, warm_digest, "prefix cache changed sampled text");
+    assert_eq!(cold_tokens, warm_tokens);
+    assert_eq!(warm_cached[0], 0, "first warm request seeds the cache");
+    // Later requests share only the head (distinct tails), so they hit
+    // the last stride-aligned boundary inside it — within one stride
+    // (plus tokenizer boundary slack) of the full shared head.
+    assert!(
+        warm_cached[1..].iter().all(|&c| c > 0 && c + 40 >= head_tokens),
+        "every later request must hit near the shared head ({head_tokens} tokens): \
+         {warm_cached:?}"
+    );
+
+    let cold_p = percentiles(&mut cold_ttft);
+    // Hits only: drop the seeding (cold) first request.
+    let mut hits_ttft: Vec<f64> = warm_ttft[1..].to_vec();
+    let hit_p = percentiles(&mut hits_ttft);
+    let cold_prefill_tps = (prompt_tokens - 1) as f64 / (cold_p.mean / 1e3);
+    let hit_prefill_tps = (prompt_tokens - 1) as f64 / (hit_p.mean / 1e3);
+    println!(
+        "TTFT cold:  mean {:.2}ms p50 {:.2}ms p95 {:.2}ms (effective prefill {:.0} tok/s)",
+        cold_p.mean, cold_p.p50, cold_p.p95, cold_prefill_tps
+    );
+    println!(
+        "TTFT hit:   mean {:.2}ms p50 {:.2}ms p95 {:.2}ms (effective prefill {:.0} tok/s)",
+        hit_p.mean, hit_p.p50, hit_p.p95, hit_prefill_tps
+    );
+    let speedup = cold_p.mean / hit_p.mean.max(1e-9);
+    println!("TTFT speedup on cache hits: {speedup:.2}×");
+    println!("parity: cold and warm runs produced byte-identical text");
+
+    // 3. HTTP keep-alive: the same request twice over one connection —
+    //    second call hits both the prefix cache and the reused socket.
+    let http_cfg = ServeCfg {
+        max_active: 2,
+        threads: 2,
+        quantum: 8,
+        prefix_cache_size: 64,
+        sample: sample.clone(),
+        ..Default::default()
+    };
+    let sched =
+        Arc::new(StreamScheduler::start(Arc::clone(&model), tok.clone(), http_cfg).unwrap());
+    let server = HttpServer::bind("127.0.0.1:0", sched).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut http = client::Client::new(&addr);
+    let mut req = GenerateRequest::new(&prompts[0]);
+    req.id = Some(0);
+    let t0 = Instant::now();
+    let first = http.generate(&req).unwrap();
+    let http_cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    req.id = Some(1);
+    let t0 = Instant::now();
+    let second = http.generate(&req).unwrap();
+    let http_hit_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(first.cached_prefix_len, 0);
+    assert!(second.cached_prefix_len >= head_tokens.min(prompt_tokens - 1));
+    server.shutdown();
+    println!(
+        "http keep-alive generate RTT: cold {http_cold_ms:.2}ms → hit {http_hit_ms:.2}ms \
+         ({:.2}×)",
+        http_cold_ms / http_hit_ms.max(1e-9)
+    );
+
+    // JSON for the perf trajectory.
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"prefix_cache\",\n");
+    json.push_str(&format!(
+        "  \"requests\": {n}, \"ctx\": {ctx}, \"dim\": 64, \"layers\": 4, \
+         \"head_tokens\": {head_tokens}, \"prompt_tokens\": {prompt_tokens}, \
+         \"max_new_tokens\": {},\n",
+        sample.max_new_tokens
+    ));
+    json.push_str(&format!(
+        "  \"session\": {{\"head_prefill_ms\": {prefill_ms:.4}, \"restore_ms\": {restore_ms:.4}, \
+         \"restore_speedup\": {:.3}}},\n",
+        prefill_ms / restore_ms.max(1e-9)
+    ));
+    json.push_str(&format!(
+        "  \"ttft_cold_ms\": {{\"mean\": {:.3}, \"p50\": {:.3}, \"p95\": {:.3}}},\n",
+        cold_p.mean, cold_p.p50, cold_p.p95
+    ));
+    json.push_str(&format!(
+        "  \"ttft_hit_ms\": {{\"mean\": {:.3}, \"p50\": {:.3}, \"p95\": {:.3}}},\n",
+        hit_p.mean, hit_p.p50, hit_p.p95
+    ));
+    json.push_str(&format!(
+        "  \"prefill_tok_per_s\": {{\"cold\": {cold_prefill_tps:.1}, \"hit\": {hit_prefill_tps:.1}}},\n"
+    ));
+    json.push_str(&format!("  \"ttft_speedup_on_hit\": {speedup:.3},\n"));
+    json.push_str(&format!(
+        "  \"http_keep_alive\": {{\"cold_rtt_ms\": {http_cold_ms:.3}, \"hit_rtt_ms\": {http_hit_ms:.3}}},\n"
+    ));
+    json.push_str(&format!(
+        "  \"ttft_improved\": {},\n  \"parity\": true\n",
+        hit_p.mean < cold_p.mean
+    ));
+    json.push_str("}\n");
+    std::fs::write(&out_path, &json).expect("writing bench json");
+    println!("\nwrote {out_path}");
+}

@@ -21,7 +21,7 @@
 //! independent full-sequence forward ([`crate::infer::WindowEngine`])
 //! token-for-token in `rust/tests/decode_parity.rs`.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Result};
 
@@ -72,6 +72,7 @@ impl Ring {
 }
 
 /// Per-layer decoding state.
+#[derive(Debug, Clone)]
 pub enum LayerState {
     /// HSM mixers: ring of post-LN1 activations (capacity = max shift).
     Hsm(Ring),
@@ -101,11 +102,134 @@ impl LayerState {
     }
 }
 
+/// The complete decoding state of one sequence after consuming some
+/// token prefix: per-layer state plus the position cursor, detached
+/// from any session.  Cloneable, so it is the snapshot/fork currency of
+/// the serving stack — prefix caching today ([`crate::serve::PrefixCache`]),
+/// speculative decoding and session migration later.
+///
+/// HSM layers make snapshots unusually cheap: a ring of `max_shift`
+/// activation rows is **O(max_shift · D) regardless of how many tokens
+/// were consumed** — unlike a KV cache, which grows with the prefix
+/// (attention layers in hybrids still carry their O(pos · D) caches,
+/// exactly the asymmetry of the paper's linear-time claim).
+///
+/// Restoring a snapshot is bit-exact: decoding from a restored state is
+/// byte-identical to cold-prefilling the same prefix
+/// (`rust/tests/fork_parity.rs` pins this for every mixer kind).
+#[derive(Debug, Clone)]
+pub struct SessionState {
+    layers: Vec<LayerState>,
+    pos: usize,
+    /// Fingerprint of the model this state was captured under
+    /// (0 = unstamped — accepted by any structurally matching model).
+    /// [`NativeDecoder`] stamps snapshots and refuses to restore a
+    /// stamp from different weights, so structurally identical models
+    /// can never silently swap state.
+    fingerprint: u64,
+}
+
+impl SessionState {
+    /// Fresh (position-zero) state for a manifest.
+    fn fresh(m: &Manifest) -> Self {
+        SessionState {
+            layers: m.layers.iter().map(|l| LayerState::new(l, m.dim)).collect(),
+            pos: 0,
+            fingerprint: 0,
+        }
+    }
+
+    /// Tokens consumed by the sequence this state was captured from.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Fingerprint of the model this state was captured under (0 when
+    /// unstamped).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Heap footprint in f32 elements (prefix-cache accounting).
+    pub fn elems(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerState::Hsm(r) => r.buf.len() * r.buf.first().map_or(0, Vec::len),
+                LayerState::Attn { k, v } => k.len() + v.len(),
+            })
+            .sum()
+    }
+
+    /// Structural compatibility with a manifest: layer count, kinds and
+    /// dimensions must match, and internal invariants (ring fill, KV
+    /// row count vs position) must hold.  Structure alone cannot tell
+    /// two same-shaped models apart — [`NativeDecoder`] additionally
+    /// checks the fingerprint stamp when restoring.
+    pub fn validate(&self, m: &Manifest) -> Result<()> {
+        if self.layers.len() != m.layers.len() {
+            bail!(
+                "session state has {} layers, manifest {}",
+                self.layers.len(),
+                m.layers.len()
+            );
+        }
+        if self.pos > m.ctx {
+            bail!("session state position {} exceeds ctx {}", self.pos, m.ctx);
+        }
+        for (l, (st, spec)) in self.layers.iter().zip(&m.layers).enumerate() {
+            match st {
+                LayerState::Hsm(ring) => {
+                    if spec.kind == "attn" {
+                        bail!("layer {l}: state is HSM but spec is attention");
+                    }
+                    let cap = spec.shifts.iter().copied().max().unwrap_or(1).max(1);
+                    let dim = ring.buf.first().map_or(0, Vec::len);
+                    if ring.capacity != cap || dim != m.dim {
+                        bail!(
+                            "layer {l}: ring shape {}x{dim} does not match spec {cap}x{}",
+                            ring.capacity,
+                            m.dim
+                        );
+                    }
+                    if ring.filled != self.pos.min(ring.capacity) {
+                        bail!(
+                            "layer {l}: ring fill {} inconsistent with position {}",
+                            ring.filled,
+                            self.pos
+                        );
+                    }
+                }
+                LayerState::Attn { k, v } => {
+                    if spec.kind != "attn" {
+                        bail!("layer {l}: state is attention but spec is {:?}", spec.kind);
+                    }
+                    if k.len() != self.pos * m.dim || v.len() != self.pos * m.dim {
+                        bail!(
+                            "layer {l}: KV cache of {}/{} elems inconsistent with \
+                             position {} (dim {})",
+                            k.len(),
+                            v.len(),
+                            self.pos,
+                            m.dim
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// The immutable half of a decoder: manifest + weights, shared across
 /// any number of [`DecodeSession`]s via `Arc`.
 pub struct Model {
     pub manifest: Manifest,
     pub weights: ModelWeights,
+    /// Lazily computed content fingerprint (manifest shape + weight
+    /// bits); keys the serving stack's prefix cache and guards snapshot
+    /// restores so state can never cross into a different model.
+    fingerprint: OnceLock<u64>,
 }
 
 impl Model {
@@ -138,7 +262,7 @@ impl Model {
                 bail!("layer {l}: heads {} must divide dim {d}", spec.heads);
             }
         }
-        Ok(Model { manifest, weights })
+        Ok(Model { manifest, weights, fingerprint: OnceLock::new() })
     }
 
     /// `new`, wrapped for sharing.
@@ -146,9 +270,35 @@ impl Model {
         Ok(Arc::new(Self::new(manifest, weights)?))
     }
 
+    /// Stable content fingerprint of (manifest, weights) — the prefix
+    /// cache's model key, and the snapshot-compatibility check in
+    /// [`NativeDecoder::restore`](crate::infer::Decoder::restore).
+    ///
+    /// Computed lazily on first use (an FNV-1a pass over the manifest's
+    /// canonical JSON and every weight bit is O(parameters) — paths that
+    /// never snapshot, e.g. training or serving with the prefix cache
+    /// disabled, never pay it), then cached for the model's lifetime.
+    pub fn fingerprint(&self) -> u64 {
+        *self.fingerprint.get_or_init(|| {
+            use crate::util::hash;
+            // Two models share a fingerprint only when both shape and
+            // every weight bit agree.
+            let mut h = hash::FNV_OFFSET;
+            hash::fold_bytes(&mut h, self.manifest.to_json().to_string().as_bytes());
+            hash::fold(&mut h, self.weights.content_hash());
+            h
+        })
+    }
+
     /// Open a new decode session against this (shared) weight set.
     pub fn session(self: &Arc<Self>) -> NativeDecoder {
         NativeDecoder::new(Arc::clone(self))
+    }
+
+    /// Open a session primed with a [`SessionState`] snapshot (e.g. a
+    /// prefix-cache hit): decoding continues from `state.position()`.
+    pub fn session_from(self: &Arc<Self>, state: SessionState) -> Result<NativeDecoder> {
+        NativeDecoder::with_state(Arc::clone(self), state)
     }
 }
 
@@ -192,13 +342,11 @@ impl MixScratch {
     }
 }
 
-/// The mutable, per-sequence half of a decoder: layer state, position
-/// cursor and scratch.  Cheap relative to weights — allocate one per
-/// concurrent user and share the [`Model`].
+/// The mutable, per-sequence half of a decoder: a [`SessionState`]
+/// (layer state + position cursor) plus scratch.  Cheap relative to
+/// weights — allocate one per concurrent user and share the [`Model`].
 pub struct DecodeSession {
-    state: Vec<LayerState>,
-    /// Current position (tokens consumed so far).
-    pos: usize,
+    state: SessionState,
     // scratch buffers (no allocation on the step path)
     x: Vec<f32>,
     h: Vec<f32>,
@@ -210,12 +358,20 @@ pub struct DecodeSession {
 }
 
 impl DecodeSession {
-    pub fn new(m: &Manifest) -> Self {
+    /// A session starting fresh, or — when `start` is given — continuing
+    /// from a [`SessionState`] snapshot (validated against `m`).
+    pub fn new(m: &Manifest, start: Option<SessionState>) -> Result<Self> {
+        let state = match start {
+            Some(s) => {
+                s.validate(m)?;
+                s
+            }
+            None => SessionState::fresh(m),
+        };
         let d = m.dim;
         let max_ffn = m.layers.iter().map(|l| l.ffn).max().unwrap_or(d);
-        DecodeSession {
-            state: m.layers.iter().map(|l| LayerState::new(l, d)).collect(),
-            pos: 0,
+        Ok(DecodeSession {
+            state,
             x: vec![0.0; d],
             h: vec![0.0; d],
             y: vec![0.0; d],
@@ -223,19 +379,40 @@ impl DecodeSession {
             f2: vec![0.0; d],
             logits: vec![0.0; m.vocab],
             mix: MixScratch::new(d),
-        }
+        })
     }
 
     pub fn position(&self) -> usize {
-        self.pos
+        self.state.pos
+    }
+
+    /// Clone the sequence state out of this session.  The session keeps
+    /// decoding; the snapshot is fully independent.
+    pub fn snapshot(&self) -> SessionState {
+        self.state.clone()
+    }
+
+    /// Replace this session's sequence state with a snapshot (validated
+    /// against `m`).  Scratch buffers are untouched, so restoring costs
+    /// only the state copy itself.
+    pub fn restore(&mut self, m: &Manifest, state: &SessionState) -> Result<()> {
+        state.validate(m)?;
+        self.state.clone_from(state);
+        Ok(())
+    }
+
+    /// A new session continuing from this one's exact current state;
+    /// decoding either session never affects the other.
+    pub fn fork(&self, m: &Manifest) -> Result<Self> {
+        Self::new(m, Some(self.state.clone()))
     }
 
     /// Clear all decoding state (start a new sequence).
     pub fn reset(&mut self) {
-        for st in &mut self.state {
+        for st in &mut self.state.layers {
             st.clear();
         }
-        self.pos = 0;
+        self.state.pos = 0;
     }
 
     /// Consume one token, return next-token logits (borrow valid until
@@ -255,13 +432,13 @@ impl DecodeSession {
         if (token as usize) >= vocab {
             bail!("token {token} out of vocab {vocab}");
         }
-        if self.pos >= m.ctx {
+        if self.state.pos >= m.ctx {
             bail!("context window ({}) exhausted — call reset()", m.ctx);
         }
 
         // Embedding + learned position.
         let te = &w.tok_emb[token as usize * d..(token as usize + 1) * d];
-        let pe = &w.pos_emb[self.pos * d..(self.pos + 1) * d];
+        let pe = &w.pos_emb[self.state.pos * d..(self.state.pos + 1) * d];
         for i in 0..d {
             self.x[i] = te[i] + pe[i];
         }
@@ -271,7 +448,7 @@ impl DecodeSession {
 
             // h = LN1(x); y = mixer(h, state); x += y
             layer_norm(&self.x, &lw.ln1_g, &lw.ln1_b, &mut self.h);
-            mixer_step(spec, lw, &self.h, &mut self.state[l], &mut self.y, d, &mut self.mix);
+            mixer_step(spec, lw, &self.h, &mut self.state.layers[l], &mut self.y, d, &mut self.mix);
             add_assign(&mut self.x, &self.y);
 
             // FFN
@@ -291,7 +468,7 @@ impl DecodeSession {
             layer_norm(&self.x, &w.lnf_g, &w.lnf_b, &mut self.h);
             matvec_t(&self.h, &w.tok_emb, vocab, &mut self.logits);
         }
-        self.pos += 1;
+        self.state.pos += 1;
         Ok(())
     }
 }
@@ -305,8 +482,31 @@ pub struct NativeDecoder {
 impl NativeDecoder {
     /// Open a session against a shared model.
     pub fn new(model: Arc<Model>) -> Self {
-        let session = DecodeSession::new(&model.manifest);
+        let session = DecodeSession::new(&model.manifest, None)
+            .expect("fresh session state is always valid for its own manifest");
         NativeDecoder { model, session }
+    }
+
+    /// Snapshots stamped by a different model's weights must never
+    /// decode here — structural validation alone cannot tell two
+    /// same-shaped models apart.
+    fn check_state_origin(model: &Model, state: &SessionState) -> Result<()> {
+        if state.fingerprint != 0 && state.fingerprint != model.fingerprint() {
+            bail!(
+                "session state was captured under a different model \
+                 (fingerprint {:#018x}, this model {:#018x})",
+                state.fingerprint,
+                model.fingerprint()
+            );
+        }
+        Ok(())
+    }
+
+    /// Open a session primed with a [`SessionState`] snapshot.
+    pub fn with_state(model: Arc<Model>, state: SessionState) -> Result<Self> {
+        Self::check_state_origin(&model, &state)?;
+        let session = DecodeSession::new(&model.manifest, Some(state))?;
+        Ok(NativeDecoder { model, session })
     }
 
     /// Convenience: validate and wrap an owned (manifest, weights) pair.
@@ -317,6 +517,14 @@ impl NativeDecoder {
     /// The shared model (clone the `Arc` to open more sessions).
     pub fn model(&self) -> &Arc<Model> {
         &self.model
+    }
+
+    /// Fork: a new decoder over the same shared weights, continuing
+    /// from this one's exact sequence state.  Byte-identical decoding
+    /// on both sides, zero interference.
+    pub fn fork(&self) -> Self {
+        let session = self.session.fork(&self.model.manifest).expect("own state is always valid");
+        NativeDecoder { model: Arc::clone(&self.model), session }
     }
 }
 
@@ -342,6 +550,21 @@ impl Decoder for NativeDecoder {
 
     fn position(&self) -> usize {
         self.session.position()
+    }
+
+    fn snapshot(&self) -> Option<SessionState> {
+        let mut state = self.session.snapshot();
+        state.fingerprint = self.model.fingerprint();
+        Some(state)
+    }
+
+    fn restore(&mut self, state: &SessionState) -> Result<()> {
+        Self::check_state_origin(&self.model, state)?;
+        self.session.restore(&self.model.manifest, state)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        self.model.fingerprint()
     }
 }
 
@@ -566,10 +789,92 @@ mod tests {
         for t in 0..10 {
             e.step(t).unwrap();
         }
-        match &e.session.state[0] {
+        match &e.session.state.layers[0] {
             LayerState::Hsm(r) => assert_eq!(r.buf.len(), 1), // max shift = 1
             _ => panic!("expected HSM state"),
         }
+    }
+
+    #[test]
+    fn snapshot_restore_is_bit_exact() {
+        let md = model();
+        let mut a = md.session();
+        a.prefill(&[5, 9, 3]).unwrap();
+        let snap = a.snapshot().unwrap();
+        assert_eq!(snap.position(), 3);
+        let want = a.step(2).unwrap().to_vec();
+
+        // Restore into a session that decoded something else entirely.
+        let mut b = md.session();
+        b.prefill(&[1, 1, 1, 1]).unwrap();
+        b.restore(&snap).unwrap();
+        assert_eq!(b.position(), 3);
+        let got = b.step(2).unwrap().to_vec();
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "restored decode must be bit-exact"
+        );
+    }
+
+    #[test]
+    fn fork_decodes_independently() {
+        let md = model();
+        let mut a = md.session();
+        a.prefill(&[5, 9]).unwrap();
+        let mut b = a.fork();
+        // Diverge the fork; the original must be unaffected.
+        b.step(6).unwrap();
+        b.step(6).unwrap();
+        let solo = {
+            let mut s = md.session();
+            s.prefill(&[5, 9]).unwrap();
+            s.step(3).unwrap().to_vec()
+        };
+        assert_eq!(a.step(3).unwrap().to_vec(), solo, "fork perturbed the original");
+    }
+
+    #[test]
+    fn restore_rejects_incompatible_state() {
+        let md = model();
+        let mut a = md.session();
+        a.prefill(&[5, 9]).unwrap();
+        let snap = a.snapshot().unwrap();
+
+        // A structurally different model (larger shift ring) rejects it.
+        let other = {
+            let layers =
+                vec![LayerInfo { kind: "ab".into(), heads: 1, shifts: vec![4], ffn: 16 }];
+            let m = Manifest::synthetic("hsm_ab", layers, 8, 16, 300, 1);
+            let flat = super::super::weights::seeded_flat(&m, 7);
+            Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+        };
+        let mut b = other.session();
+        assert!(b.restore(&snap).is_err(), "cross-shape restore must fail");
+        assert_ne!(md.fingerprint(), other.fingerprint(), "fingerprints must differ");
+
+        // Same shape, different weight bits: structural validation
+        // passes, so only the fingerprint stamp stands between the
+        // snapshot and silently-wrong logits.
+        let twin = {
+            let m = test_manifest("hsm_ab", 2, 16, 300);
+            let mut mock = MockEngine::new(m.clone(), 1.8, 0.01);
+            mock.init(0).unwrap();
+            let mut params = mock.get_params().unwrap();
+            for t in params.iter_mut() {
+                for x in t.iter_mut() {
+                    *x += 0.125;
+                }
+            }
+            let w = ModelWeights::from_flat(&m, &params).unwrap();
+            Model::shared(m, w).unwrap()
+        };
+        let mut t = twin.session();
+        assert!(
+            t.restore(&snap).is_err(),
+            "same-shape different-weights restore must fail on the fingerprint"
+        );
+        assert!(twin.session_from(snap).is_err(), "session_from must check the stamp too");
     }
 
     #[test]

@@ -33,11 +33,11 @@ pub mod tensor;
 pub mod weights;
 pub mod window;
 
-pub use engine::{DecodeSession, LayerState, Model, NativeDecoder};
+pub use engine::{DecodeSession, LayerState, Model, NativeDecoder, SessionState};
 pub use weights::ModelWeights;
 pub use window::WindowEngine;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::Manifest;
 
@@ -75,6 +75,30 @@ pub trait Decoder {
 
     /// Tokens consumed so far.
     fn position(&self) -> usize;
+
+    /// Snapshot this decoder's sequence state, if the implementation
+    /// supports forking (`None` otherwise — the default).  A snapshot
+    /// restored into a compatible decoder continues decoding
+    /// byte-identically to the original.
+    fn snapshot(&self) -> Option<SessionState> {
+        None
+    }
+
+    /// Restore a snapshot taken from a compatible decoder, replacing any
+    /// current sequence state.  The default errors: a decoder that
+    /// cannot fork (e.g. the full-context window baseline) simply opts
+    /// out, and callers (the serve scheduler's prefix cache) fall back
+    /// to a cold prefill.
+    fn restore(&mut self, _state: &SessionState) -> Result<()> {
+        bail!("this decoder does not support state restore")
+    }
+
+    /// Stable fingerprint of the model this decoder runs (0 when the
+    /// implementation does not provide one).  Prefix-cache snapshots
+    /// are keyed by it so state never crosses model boundaries.
+    fn fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 /// Forwarding impl: a `&mut D` decodes through the borrowed decoder, so
@@ -100,5 +124,17 @@ impl<D: Decoder + ?Sized> Decoder for &mut D {
 
     fn position(&self) -> usize {
         (**self).position()
+    }
+
+    fn snapshot(&self) -> Option<SessionState> {
+        (**self).snapshot()
+    }
+
+    fn restore(&mut self, state: &SessionState) -> Result<()> {
+        (**self).restore(state)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        (**self).fingerprint()
     }
 }

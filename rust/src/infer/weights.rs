@@ -152,6 +152,40 @@ impl ModelWeights {
         }
         Self::from_flat(manifest, &params)
     }
+
+    /// FNV-1a over every tensor's f32 bit patterns, in a fixed traversal
+    /// order with per-tensor separators (so `[a,b]+[c]` never collides
+    /// with `[a]+[b,c]`).  Combined with the manifest hash this is the
+    /// model fingerprint that keys the serving stack's prefix cache:
+    /// any weight-bit difference yields a different key, so a snapshot
+    /// can never be decoded against the wrong weights.
+    pub fn content_hash(&self) -> u64 {
+        use crate::util::hash;
+        let mut h = hash::FNV_OFFSET;
+        let tensor = |h: &mut u64, t: &[f32]| {
+            for &x in t {
+                hash::fold(h, x.to_bits() as u64);
+            }
+            hash::fold(h, 0xff); // separator
+        };
+        tensor(&mut h, &self.tok_emb);
+        tensor(&mut h, &self.pos_emb);
+        tensor(&mut h, &self.lnf_g);
+        tensor(&mut h, &self.lnf_b);
+        for lw in &self.layers {
+            let mw = &lw.mixer;
+            for t in [
+                &lw.ln1_g, &lw.ln1_b, &lw.ln2_g, &lw.ln2_b, &lw.ffn_w1, &lw.ffn_b1,
+                &lw.ffn_w2, &lw.ffn_b2, &mw.mix_a, &mw.mix_b, &mw.mix_mat_a, &mw.mix_mat_b,
+                &mw.mix_bias, &mw.gate_w1, &mw.gate_b1, &mw.gate_w2, &mw.gate_b2, &mw.gate_w,
+                &mw.gate_b, &mw.fuse_w1, &mw.fuse_b1, &mw.fuse_w2, &mw.fuse_b2, &mw.wq,
+                &mw.bq, &mw.wk, &mw.bk, &mw.wv, &mw.bv, &mw.wo, &mw.bo,
+            ] {
+                tensor(&mut h, t);
+            }
+        }
+        h
+    }
 }
 
 /// Deterministic plausible-init flat parameters for a manifest: LayerNorm

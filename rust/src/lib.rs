@@ -33,9 +33,9 @@
 //! | [`data`]      | window datasets + epoch shuffling                           |
 //! | [`runtime`]   | [`StepEngine`] trait; `PjrtEngine` behind feature `pjrt`    |
 //! | [`coordinator`] | training loops, `MockEngine`, experiment scheduler        |
-//! | [`infer`]     | [`infer::Decoder`] trait, shared-weight [`infer::Model`], per-user [`infer::DecodeSession`]s, [`infer::NativeDecoder`], full-context [`infer::WindowEngine`] |
+//! | [`infer`]     | [`infer::Decoder`] trait, shared-weight [`infer::Model`], per-user [`infer::DecodeSession`]s with forkable [`infer::SessionState`] snapshots, [`infer::NativeDecoder`], full-context [`infer::WindowEngine`] |
 //! | [`generation`] | sampling + [`generation::generate`] / [`generation::generate_batch`] over any [`infer::Decoder`]; [`generation::WindowDecoder`] |
-//! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`, `max_queue_wait`), worker threads over disjoint sessions; resident [`serve::StreamScheduler`] emitting per-token [`serve::TokenEvent`]s |
+//! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`, `max_queue_wait`), worker threads over disjoint sessions; shared [`serve::PrefixCache`] of prompt-head snapshots; resident [`serve::StreamScheduler`] emitting per-token [`serve::TokenEvent`]s, cancel-on-disconnect |
 //! | [`server`]    | **cross-process serving**: hand-rolled HTTP/1.1 front-end — `POST /v1/generate`, `POST /v1/stream` (SSE chunks), `GET /healthz`, blocking [`server::client`] |
 //! | [`checkpoint`] | tensor (de)serialization (+ embedded manifest snapshot)    |
 //! | [`report`]    | Table 1/2/3, Figures 7/8 drivers                            |
@@ -139,6 +139,38 @@
 //! (`seed ^ id`), so streamed bytes are identical to the in-process
 //! scheduler and to sequential decoding.
 //!
+//! ## Prefix caching: shared prompt heads prefill once
+//!
+//! HSM layer state after consuming a prefix is a **fixed-size** set of
+//! shift rings, so it can be snapshotted and forked
+//! ([`infer::SessionState`], [`infer::DecodeSession::snapshot`] /
+//! `restore` / `fork`) — unlike a KV cache, which grows with the
+//! prefix.  Both schedulers exploit this with a shared
+//! [`serve::PrefixCache`] (on by default;
+//! [`serve::ServeCfg::prefix_cache_size`], CLI `hsm serve
+//! --prefix-cache N`): requests sharing a prompt head restore the
+//! head's snapshot and prefill only their tail, which is most of the
+//! time-to-first-token for short completions.  Restores are bit-exact —
+//! cached and cold decoding produce byte-identical text — and responses
+//! report what happened:
+//!
+//! ```bash
+//! curl -s http://127.0.0.1:8080/v1/generate \
+//!   -d '{"prompt": "Once upon a time", "id": 7}'
+//! # → {..., "cached_prefix_len": 4, "finish": "eot"}   (second call on)
+//! curl -s http://127.0.0.1:8080/healthz
+//! # → {..., "prefix_cache": {"hits": 1, "misses": 1, "hit_rate": 0.5, ...}}
+//! ```
+//!
+//! `GET /healthz` exposes hit/miss/eviction counters, and
+//! `cargo bench --bench prefix_cache` records cold-vs-hit TTFT into
+//! `BENCH_prefix.json`.  Dropping a [`serve::TokenStream`] (or closing
+//! the HTTP socket mid-stream) cancels the request at its next sampled
+//! token ([`serve::FinishReason::Cancelled`]) instead of decoding
+//! unobserved, and `Connection: keep-alive` is honored on
+//! `/v1/generate` / `/healthz` ([`server::client::Client`] reuses one
+//! connection across calls).
+//!
 //! One-off generation keeps the simpler wrappers —
 //! [`generation::generate`] (single session) and
 //! [`generation::generate_batch`] (fixed membership) — which are thin
@@ -174,8 +206,11 @@ pub mod util;
 pub use config::{Manifest, TrainHp};
 pub use coordinator::{TrainOutcome, Trainer, TrainerOptions};
 pub use data::{Batch, Dataset};
-pub use infer::{Decoder, DecodeSession, Model, NativeDecoder};
-pub use serve::{Completion, Request, Scheduler, ServeCfg, StreamScheduler, TokenEvent, TokenStream};
+pub use infer::{Decoder, DecodeSession, Model, NativeDecoder, SessionState};
+pub use serve::{
+    Completion, PrefixCache, PrefixCacheStats, Request, Scheduler, ServeCfg, StreamScheduler,
+    TokenEvent, TokenStream,
+};
 pub use server::HttpServer;
 #[cfg(feature = "pjrt")]
 pub use runtime::PjrtEngine;

@@ -297,6 +297,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("threads", "4", "worker threads stepping sessions in parallel")
         .flag("quantum", "16", "tokens per scheduling slice")
         .flag("max-queue-wait-ms", "0", "finish requests queued longer than this as timed_out (0 = wait forever)")
+        .flag("prefix-cache", "32", "shared prompt-prefix cache entries (0 = disabled)")
         .flag("temperature", "0.8", "sampling temperature (0 = greedy)")
         .flag("top-k", "40", "top-k filter (0 = off)")
         .flag("max-new-tokens", "48", "maximum tokens per request")
@@ -312,6 +313,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         threads: a.usize("threads").map_err(|e| anyhow!(e))?,
         quantum: a.usize("quantum").map_err(|e| anyhow!(e))?,
         max_queue_wait: (wait_ms > 0).then(|| std::time::Duration::from_millis(wait_ms)),
+        prefix_cache_size: a.usize("prefix-cache").map_err(|e| anyhow!(e))?,
         sample: SampleCfg {
             temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
             top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
@@ -364,9 +366,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             FinishReason::MaxTokens => "cap".to_string(),
             FinishReason::CtxFull => "ctx".to_string(),
             FinishReason::TimedOut => "timed out in queue".to_string(),
+            FinishReason::Cancelled => "cancelled by consumer".to_string(),
             FinishReason::Rejected(e) => format!("rejected: {e}"),
         };
-        println!("#{:<4} {:>3} tok [{why}] {head}", c.request_id, c.tokens_generated);
+        let cached = if c.cached_prefix_len > 0 {
+            format!(" ({} prefix tok cached)", c.cached_prefix_len)
+        } else {
+            String::new()
+        };
+        println!("#{:<4} {:>3} tok [{why}]{cached} {head}", c.request_id, c.tokens_generated);
     }
     println!(
         "\nserved {} requests / {tokens} tokens in {secs:.2}s — {:.1} tok/s \
@@ -407,15 +415,22 @@ fn cmd_request(argv: &[String]) -> Result<()> {
         println!();
         c
     } else {
-        let c = http_client::generate(&addr, &req)?;
+        // Keep-alive client: one `hsm request` is a single call, but the
+        // connection-reuse path is the same one the benches exercise.
+        let c = http_client::Client::new(&addr).generate(&req)?;
         println!("{}{}", c.prompt, c.completion);
         c
     };
     println!(
-        "\n#{} — {} tokens, finish: {}",
+        "\n#{} — {} tokens, finish: {}{}",
         completion.request_id,
         completion.tokens_generated,
-        completion.finish.label()
+        completion.finish.label(),
+        if completion.cached_prefix_len > 0 {
+            format!(" ({} prefix tokens served from cache)", completion.cached_prefix_len)
+        } else {
+            String::new()
+        }
     );
     if let FinishReason::Rejected(why) = &completion.finish {
         println!("rejected: {why}");

@@ -46,11 +46,31 @@
 //! [`FinishReason::TimedOut`] (never decoded) instead of waiting forever
 //! behind a saturated active set.
 //!
+//! **Shared prefix cache:** HSM's O(1)-state decoding means the entire
+//! session state after consuming a prompt head is a small
+//! [`crate::infer::SessionState`] snapshot.  Both scheduler shapes keep a
+//! [`PrefixCache`] (size via [`ServeCfg::prefix_cache_size`]): at
+//! admission, a request restores the snapshot of its longest cached
+//! token prefix and prefills only the uncached tail, then contributes
+//! its own prompt-head snapshot back.  Restores are bit-exact, so a
+//! cache hit can never change sampled text — only
+//! [`Completion::cached_prefix_len`] and the time-to-first-token.
+//!
+//! **Cancel on disconnect:** a dropped [`TokenStream`] (in-process
+//! consumer gone, or the HTTP peer closed its socket mid-stream) stops
+//! that request's decoding at the next sampled token and frees its
+//! session for the queue, finishing as [`FinishReason::Cancelled`] —
+//! tokens are never burned on an unobservable stream.
+//!
 //! [`generate`](crate::generation::generate) (single-session) and
 //! [`generate_batch`](crate::generation::generate_batch)
 //! (fixed-membership) are thin wrappers over the same core
 //! ([`run_local`]), so the pre-scheduler parity tests keep pinning the
 //! decode semantics.
+
+pub mod prefix;
+
+pub use prefix::{PrefixCache, PrefixCacheStats};
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -94,6 +114,11 @@ pub enum FinishReason {
     /// Queued for admission longer than [`ServeCfg::max_queue_wait`];
     /// never decoded.
     TimedOut,
+    /// The streaming consumer disconnected (its [`TokenStream`] was
+    /// dropped, or the HTTP peer closed the socket); decoding stopped
+    /// early and the session was freed.  `completion` holds the text
+    /// sampled before the disconnect was noticed.
+    Cancelled,
     /// Never admitted — the prompt failed validation (empty encoding,
     /// vocab mismatch, or longer than the context window).
     Rejected(String),
@@ -107,6 +132,7 @@ impl FinishReason {
             FinishReason::MaxTokens => "max_tokens",
             FinishReason::CtxFull => "ctx_full",
             FinishReason::TimedOut => "timed_out",
+            FinishReason::Cancelled => "cancelled",
             FinishReason::Rejected(_) => "rejected",
         }
     }
@@ -119,6 +145,10 @@ pub struct Completion {
     pub prompt: String,
     pub completion: String,
     pub tokens_generated: usize,
+    /// Prompt tokens served from the shared [`PrefixCache`] instead of
+    /// being prefilled (0 = cold prefill / caching disabled).  Purely
+    /// informational: cached and cold decoding are byte-identical.
+    pub cached_prefix_len: usize,
     pub finish: FinishReason,
 }
 
@@ -149,6 +179,12 @@ pub struct ServeCfg {
     /// the request would be admitted; it never interrupts a sequence
     /// that is already decoding.
     pub max_queue_wait: Option<Duration>,
+    /// Entry cap of the shared [`PrefixCache`] (0 = disabled).  Each
+    /// entry is one [`crate::infer::SessionState`] snapshot at a
+    /// prompt-head boundary; requests sharing a prompt head skip the
+    /// cached part of their prefill.  Bit-exact — never changes sampled
+    /// text, only TTFT and [`Completion::cached_prefix_len`].
+    pub prefix_cache_size: usize,
     /// Sampling parameters shared by every request.
     pub sample: SampleCfg,
 }
@@ -160,6 +196,7 @@ impl Default for ServeCfg {
             threads: 4,
             quantum: 16,
             max_queue_wait: None,
+            prefix_cache_size: 32,
             sample: SampleCfg::default(),
         }
     }
@@ -272,6 +309,10 @@ impl Iterator for TokenStream {
 pub struct Scheduler {
     model: Arc<Model>,
     cfg: ServeCfg,
+    /// Shared prompt-head snapshot cache; persists across
+    /// [`serve`](Scheduler::serve) calls, so requests in *later* batches
+    /// still hit the heads earlier batches paid for.
+    cache: Option<Arc<PrefixCache>>,
 }
 
 impl Scheduler {
@@ -280,7 +321,9 @@ impl Scheduler {
     /// error instead of hanging or degenerating at serve time.
     pub fn new(model: Arc<Model>, cfg: ServeCfg) -> Result<Self> {
         cfg.validate_resident()?;
-        Ok(Scheduler { model, cfg })
+        let cache = (cfg.prefix_cache_size > 0)
+            .then(|| Arc::new(PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size)));
+        Ok(Scheduler { model, cfg, cache })
     }
 
     pub fn model(&self) -> &Arc<Model> {
@@ -291,21 +334,43 @@ impl Scheduler {
         &self.cfg
     }
 
+    /// The shared prefix cache (None when disabled) — stats feed
+    /// monitoring (`GET /healthz` uses the [`StreamScheduler`] twin).
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.cache.as_ref()
+    }
+
     /// Serve a batch of requests to completion; results come back in
     /// request order.  Invalid prompts are rejected per-request
     /// ([`FinishReason::Rejected`]) without failing the batch; engine
     /// errors (a model/session fault) abort the whole call.
     pub fn serve(&self, tok: &Tokenizer, requests: Vec<Request>) -> Result<Vec<Completion>> {
-        serve(&self.model, tok, requests, &self.cfg)
+        serve_with_cache(&self.model, tok, requests, &self.cfg, self.cache.as_deref())
     }
 }
 
-/// One-shot convenience for [`Scheduler::serve`].
+/// One-shot convenience for [`Scheduler::serve`].  The prefix cache (if
+/// [`ServeCfg::prefix_cache_size`] > 0) lives for this call only —
+/// shared heads *within* the batch still skip re-prefilling; hold a
+/// [`Scheduler`] or [`StreamScheduler`] to share across calls.
 pub fn serve(
     model: &Arc<Model>,
     tok: &Tokenizer,
     requests: Vec<Request>,
     cfg: &ServeCfg,
+) -> Result<Vec<Completion>> {
+    let cache = (cfg.prefix_cache_size > 0)
+        .then(|| PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size));
+    serve_with_cache(model, tok, requests, cfg, cache.as_ref())
+}
+
+/// The batch core behind [`Scheduler::serve`] and [`serve`].
+fn serve_with_cache(
+    model: &Arc<Model>,
+    tok: &Tokenizer,
+    requests: Vec<Request>,
+    cfg: &ServeCfg,
+    cache: Option<&PrefixCache>,
 ) -> Result<Vec<Completion>> {
     cfg.validate()?;
 
@@ -331,6 +396,7 @@ pub fn serve(
                     prompt: req.prompt,
                     completion: String::new(),
                     tokens_generated: 0,
+                    cached_prefix_len: 0,
                     finish: FinishReason::Rejected(format!("{e:#}")),
                 });
             }
@@ -342,9 +408,9 @@ pub fn serve(
         if cfg.threads == 1 {
             let mut sessions: Vec<NativeDecoder> =
                 (0..n_sessions).map(|_| model.session()).collect();
-            run_local(&mut sessions, tok, jobs, &cfg.sample, cfg.quantum, &mut out)?;
+            run_local(&mut sessions, tok, jobs, &cfg.sample, cfg.quantum, cache, &mut out)?;
         } else {
-            run_parallel(model, tok, jobs, cfg, n_sessions, &mut out)?;
+            run_parallel(model, tok, jobs, cfg, n_sessions, cache, &mut out)?;
         }
     }
 
@@ -407,15 +473,61 @@ struct Active<D> {
     last: u32,
     rng: Rng,
     budget: usize,
+    /// Prompt tokens restored from the prefix cache at admission.
+    cached_prefix_len: usize,
     stream: Option<StreamOut>,
 }
 
 /// Bind a decoder to a job: reset, prefill all but the last prompt token
 /// (its logits come from the first `step`), seed the sequence RNG.
-fn admit<D: Decoder>(mut dec: D, job: Job, cfg: &SampleCfg) -> Result<Active<D>> {
+///
+/// With a [`PrefixCache`], the prompt head (`ids[..len-1]`) first tries
+/// a longest-prefix snapshot restore, prefilling only the uncached tail
+/// — bit-exact, so admission order and cache contents can never change
+/// sampled text.  Whatever this request prefills beyond the hit is
+/// published back as snapshots at [`prefix::SNAPSHOT_STRIDE`]-aligned
+/// boundaries (so requests sharing only a prompt *head* still hit the
+/// last common boundary) plus one at its full head (so duplicate
+/// prompts skip the whole prefill).
+fn admit<D: Decoder>(
+    mut dec: D,
+    job: Job,
+    cfg: &SampleCfg,
+    cache: Option<&PrefixCache>,
+) -> Result<Active<D>> {
     let prompt_len = job.ids.len();
+    let head = &job.ids[..prompt_len - 1];
     dec.reset();
-    dec.prefill(&job.ids[..prompt_len - 1])?;
+    let mut cached_prefix_len = 0;
+    match cache {
+        Some(cache) if !head.is_empty() => {
+            let fp = dec.fingerprint();
+            if let Some((len, state)) = cache.lookup(fp, head) {
+                // A decoder that cannot restore (no snapshot support)
+                // just cold-prefills; the lookup already counted a hit,
+                // which is fine — the cache exists for native sessions.
+                match dec.restore(&state) {
+                    Ok(()) => cached_prefix_len = len,
+                    Err(_) => dec.reset(),
+                }
+            }
+            // Prefill the uncached tail in stride-aligned chunks,
+            // snapshotting at each boundary.  Chunking a prefill is a
+            // pure re-grouping of the same per-token steps, so numerics
+            // are untouched.
+            let mut at = cached_prefix_len;
+            while at < head.len() {
+                let next = ((at / prefix::SNAPSHOT_STRIDE) + 1) * prefix::SNAPSHOT_STRIDE;
+                let next = next.min(head.len());
+                dec.prefill(&head[at..next])?;
+                at = next;
+                if let Some(snap) = dec.snapshot() {
+                    cache.insert(fp, &head[..at], snap);
+                }
+            }
+        }
+        _ => dec.prefill(head)?,
+    }
     Ok(Active {
         last: job.ids[prompt_len - 1],
         dec,
@@ -426,6 +538,7 @@ fn admit<D: Decoder>(mut dec: D, job: Job, cfg: &SampleCfg) -> Result<Active<D>>
         prompt_len,
         rng: Rng::new(cfg.seed ^ job.id),
         budget: job.budget,
+        cached_prefix_len,
         stream: job.sink.map(|tx| StreamOut { tx, sd: StreamDecoder::new(), dead: false }),
     })
 }
@@ -445,6 +558,7 @@ fn expire(job: Job) -> Option<(usize, Completion)> {
         prompt,
         completion: String::new(),
         tokens_generated: 0,
+        cached_prefix_len: 0,
         finish: FinishReason::TimedOut,
     };
     match sink {
@@ -488,6 +602,13 @@ fn advance<D: Decoder>(
         if let Some(out) = seq.stream.as_mut() {
             let text_delta = out.sd.push(tok, next);
             out.emit(TokenEvent::Token { request_id: seq.id, token: next, text_delta });
+            // Cancel on disconnect: a dead sink means nobody can ever
+            // observe this stream — stop decoding and free the session
+            // instead of finishing unobserved.  Purely per-sequence, so
+            // siblings' sampled text is untouched.
+            if out.dead {
+                return Ok(Some(FinishReason::Cancelled));
+            }
         }
         sliced += 1;
         if quantum > 0 && sliced >= quantum {
@@ -501,12 +622,13 @@ fn advance<D: Decoder>(
 /// [`TokenEvent::Done`] here (with the detokenizer's final flush), so
 /// consumers always see the completion on the stream itself.
 fn complete<D>(seq: Active<D>, tok: &Tokenizer, finish: FinishReason) -> (D, usize, Completion) {
-    let Active { dec, ix, id, prompt, ids, prompt_len, stream, .. } = seq;
+    let Active { dec, ix, id, prompt, ids, prompt_len, cached_prefix_len, stream, .. } = seq;
     let completion = Completion {
         request_id: id,
         prompt,
         completion: tok.decode(&ids[prompt_len..]),
         tokens_generated: ids.len() - prompt_len,
+        cached_prefix_len,
         finish,
     };
     if let Some(mut out) = stream {
@@ -530,6 +652,7 @@ pub(crate) fn run_local<D: Decoder>(
     jobs: Vec<Job>,
     cfg: &SampleCfg,
     quantum: usize,
+    cache: Option<&PrefixCache>,
     out: &mut [Option<Completion>],
 ) -> Result<()> {
     if decoders.is_empty() && !jobs.is_empty() {
@@ -553,7 +676,7 @@ pub(crate) fn run_local<D: Decoder>(
             }
             let Some(dec) = free.pop_front() else { break };
             let job = pending.pop_front().unwrap();
-            ready.push_back(admit(dec, job, cfg)?);
+            ready.push_back(admit(dec, job, cfg, cache)?);
         }
         let Some(mut seq) = ready.pop_front() else { break };
         match advance(&mut seq, tok, cfg, quantum)? {
@@ -615,6 +738,7 @@ fn run_parallel(
     jobs: Vec<Job>,
     cfg: &ServeCfg,
     n_sessions: usize,
+    cache: Option<&PrefixCache>,
     out: &mut [Option<Completion>],
 ) -> Result<()> {
     let workers = cfg.threads.min(jobs.len()).max(1);
@@ -631,7 +755,7 @@ fn run_parallel(
 
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| worker(&shared, &wake, tok, cfg));
+            s.spawn(|| worker(&shared, &wake, tok, cfg, cache));
         }
     });
 
@@ -676,7 +800,13 @@ impl Drop for PanicGuard<'_> {
     }
 }
 
-fn worker(shared: &Mutex<Shared>, wake: &Condvar, tok: &Tokenizer, cfg: &ServeCfg) {
+fn worker(
+    shared: &Mutex<Shared>,
+    wake: &Condvar,
+    tok: &Tokenizer,
+    cfg: &ServeCfg,
+    cache: Option<&PrefixCache>,
+) {
     let _guard = PanicGuard { shared, wake };
     loop {
         let work = {
@@ -719,7 +849,7 @@ fn worker(shared: &Mutex<Shared>, wake: &Condvar, tok: &Tokenizer, cfg: &ServeCf
 
         // Heavy work (prefill / quantum of decode steps) off the lock.
         let stepped = match work {
-            Work::Admit(job, dec) => admit(dec, job, &cfg.sample).and_then(|mut seq| {
+            Work::Admit(job, dec) => admit(dec, job, &cfg.sample, cache).and_then(|mut seq| {
                 advance(&mut seq, tok, &cfg.sample, cfg.quantum).map(|f| (seq, f))
             }),
             Work::Step(mut seq) => {
@@ -777,6 +907,10 @@ struct ResidentInner {
     tok: Tokenizer,
     cfg: ServeCfg,
     model: Arc<Model>,
+    /// Shared prompt-head snapshot cache (None when disabled); lives as
+    /// long as the scheduler, so every submission can hit heads earlier
+    /// submissions paid for.
+    cache: Option<Arc<PrefixCache>>,
 }
 
 /// A resident continuous-batching scheduler: the worker pool stays up
@@ -804,6 +938,8 @@ impl StreamScheduler {
     pub fn start(model: Arc<Model>, tok: Tokenizer, cfg: ServeCfg) -> Result<Self> {
         cfg.validate_resident()?;
         let free = (0..cfg.max_active).map(|_| model.session()).collect();
+        let cache = (cfg.prefix_cache_size > 0)
+            .then(|| Arc::new(PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size)));
         let inner = Arc::new(ResidentInner {
             shared: Mutex::new(Shared {
                 pending: VecDeque::new(),
@@ -818,12 +954,19 @@ impl StreamScheduler {
             tok,
             cfg,
             model,
+            cache,
         });
         let workers = (0..inner.cfg.threads)
             .map(|_| {
                 let inner = Arc::clone(&inner);
                 std::thread::spawn(move || {
-                    worker(&inner.shared, &inner.wake, &inner.tok, &inner.cfg)
+                    worker(
+                        &inner.shared,
+                        &inner.wake,
+                        &inner.tok,
+                        &inner.cfg,
+                        inner.cache.as_deref(),
+                    )
                 })
             })
             .collect();
@@ -840,6 +983,12 @@ impl StreamScheduler {
 
     pub fn cfg(&self) -> &ServeCfg {
         &self.inner.cfg
+    }
+
+    /// The shared prefix cache (None when disabled); its
+    /// [`stats`](PrefixCache::stats) feed `GET /healthz`.
+    pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        self.inner.cache.as_ref()
     }
 
     /// Submit one request; its events stream back on the returned
@@ -867,6 +1016,7 @@ impl StreamScheduler {
                     prompt: req.prompt,
                     completion: String::new(),
                     tokens_generated: 0,
+                    cached_prefix_len: 0,
                     finish: FinishReason::Rejected(format!("{e:#}")),
                 };
                 let _ = tx.send(TokenEvent::Done { text_delta: String::new(), completion });
@@ -1038,7 +1188,7 @@ mod tests {
         ];
         let mut out = vec![None, None, None];
         let mut sessions = vec![model.session()]; // max_active = 1: saturated
-        run_local(&mut sessions, &tok, jobs, &sample, 2, &mut out).unwrap();
+        run_local(&mut sessions, &tok, jobs, &sample, 2, None, &mut out).unwrap();
         let out: Vec<Completion> = out.into_iter().map(Option::unwrap).collect();
         assert_ne!(out[0].finish, FinishReason::TimedOut);
         assert!(out[0].tokens_generated > 0);
@@ -1165,6 +1315,105 @@ mod tests {
         let completion = kept.wait(|_| {}).expect("surviving stream finishes");
         assert_eq!(completion.completion, reference[1].completion);
         sched.shutdown();
+    }
+
+    /// A dropped consumer cancels decoding at the next sampled token:
+    /// the sequence finishes as Cancelled with its session freed, never
+    /// burning the rest of its budget on an unobservable stream.
+    #[test]
+    fn dropped_sink_cancels_decoding_early() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 200);
+        let sample = SampleCfg {
+            max_new_tokens: 150,
+            seed: 4,
+            stop_at_eot: false,
+            ..Default::default()
+        };
+        let (tx, rx) = channel();
+        drop(rx); // consumer vanished before the first token
+        let job = Job {
+            ix: 0,
+            id: 0,
+            budget: sample.max_new_tokens,
+            prompt: "Once upon a time".to_string(),
+            ids: tok.encode("Once upon a time"),
+            deadline: None,
+            sink: Some(tx),
+        };
+        let mut out = vec![None];
+        let mut sessions = vec![model.session()];
+        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, &mut out).unwrap();
+        let c = out.pop().unwrap().unwrap();
+        assert_eq!(c.finish, FinishReason::Cancelled);
+        assert_eq!(c.tokens_generated, 1, "dead sink is noticed after one token");
+
+        // A batch job (no sink) with the same budget runs to its cap —
+        // cancellation is strictly a streaming-consumer concern.
+        let job = Job {
+            ix: 0,
+            id: 0,
+            budget: sample.max_new_tokens,
+            prompt: "Once upon a time".to_string(),
+            ids: tok.encode("Once upon a time"),
+            deadline: None,
+            sink: None,
+        };
+        let mut out = vec![None];
+        let mut sessions = vec![model.session()];
+        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, &mut out).unwrap();
+        let c = out.pop().unwrap().unwrap();
+        assert_ne!(c.finish, FinishReason::Cancelled);
+        assert!(c.tokens_generated > 1);
+    }
+
+    /// The scheduler's prefix cache persists across serve calls: the
+    /// second batch hits the heads the first batch paid for, and the
+    /// text stays byte-identical to an uncached scheduler.
+    #[test]
+    fn prefix_cache_hits_across_batches_without_changing_text() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let cfg = |prefix_cache_size| ServeCfg {
+            max_active: 2,
+            threads: 1,
+            quantum: 3,
+            prefix_cache_size,
+            sample: SampleCfg { max_new_tokens: 6, seed: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let reqs = || {
+            vec![Request::new(0, "Once upon a time"), Request::new(1, "Once upon a time")]
+        };
+        let cold = Scheduler::new(Arc::clone(&model), cfg(0)).unwrap();
+        let warm = Scheduler::new(Arc::clone(&model), cfg(8)).unwrap();
+        assert!(cold.prefix_cache().is_none());
+        let reference = cold.serve(&tok, reqs()).unwrap();
+        for pass in 0..2 {
+            let got = warm.serve(&tok, reqs()).unwrap();
+            for (c, r) in got.iter().zip(&reference) {
+                assert_eq!(c.completion, r.completion, "pass {pass}: cache changed text");
+                assert_eq!(c.finish, r.finish);
+                assert_eq!(r.cached_prefix_len, 0, "caching disabled ⇒ always cold");
+            }
+            // Request 0 seeds the cache on the first pass; its duplicate
+            // (and every later pass) restores the whole head.
+            let head_len = tok.encode("Once upon a time").len() - 1;
+            if pass == 0 {
+                assert_eq!(got[0].cached_prefix_len, 0);
+            } else {
+                assert_eq!(got[0].cached_prefix_len, head_len);
+            }
+            assert_eq!(got[1].cached_prefix_len, head_len);
+        }
+        let stats = warm.prefix_cache().unwrap().stats();
+        assert!(stats.hits >= 3, "expected ≥3 hits, got {}", stats.hits);
+        // Identical heads share entries: one per stride boundary at most.
+        assert!(
+            stats.entries >= 1 && stats.entries <= 2,
+            "identical heads must share entries, got {}",
+            stats.entries
+        );
     }
 
     /// Invalid prompts reject through the stream itself (uniform with

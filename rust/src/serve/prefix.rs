@@ -1,0 +1,301 @@
+//! Shared prefix cache: decode-session snapshots at prompt-head
+//! boundaries, keyed by (model fingerprint, token prefix), with
+//! longest-prefix-match lookup.
+//!
+//! The serving-side payoff of HSM's O(1)-state decoding: after consuming
+//! a token prefix, an HSM layer's entire state is a ring of `max_shift`
+//! activation rows — a small, **fixed-size** [`SessionState`] that can
+//! be snapshotted and forked, unlike a full KV cache whose size grows
+//! with the prefix.  When hundreds of requests share a system-prompt
+//! head, the first request pays the prefill once and every later request
+//! restores the snapshot and prefills only its uncached tail, which is
+//! the dominant cost for short completions.
+//!
+//! Correctness rests on two properties:
+//!
+//! * **Bit-exact restore** — decoding from a restored snapshot is
+//!   byte-identical to cold-prefilling the same tokens
+//!   (`rust/tests/fork_parity.rs` pins this for every mixer kind), so a
+//!   cache hit can never change sampled text.
+//! * **Fingerprint keying** — every lookup and insert carries the
+//!   requesting model's fingerprint (manifest shape + weight bits);
+//!   a mismatch is a miss, so state never crosses model boundaries.
+//!
+//! The cache is a size-bounded LRU over whole entries, shared by all
+//! scheduler workers behind one `Mutex` (lookups clone the snapshot out,
+//! so the lock is never held across a prefill).  Hit/miss/insertion/
+//! eviction counters feed `GET /healthz` and the serve benches.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::infer::SessionState;
+
+/// Snapshot stride during prefill: admission publishes a snapshot every
+/// this many tokens of the prompt head (at absolute positions — every
+/// request sharing a head agrees on the boundaries) plus one at the full
+/// head.  Requests that share a long head but differ in their tails hit
+/// the last common boundary and prefill only from there; exact duplicate
+/// prompts hit the full head.  Smaller stride = finer sharing but more
+/// cache entries per distinct head.
+pub const SNAPSHOT_STRIDE: usize = 16;
+
+/// Counter snapshot (from [`PrefixCache::stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixCacheStats {
+    /// Entries currently cached.
+    pub entries: usize,
+    /// Entry cap the cache was built with.
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl PrefixCacheStats {
+    /// Hits over lookups (0.0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    state: SessionState,
+    /// Recency stamp (global tick at last touch) — the LRU ordering.
+    stamp: u64,
+}
+
+struct Inner {
+    entries: HashMap<Vec<u32>, Entry>,
+    /// Distinct prefix lengths present → entry count at that length, so
+    /// a longest-prefix lookup probes only lengths that actually exist
+    /// (one hash per candidate length, longest first).
+    lens: BTreeMap<usize, usize>,
+    tick: u64,
+}
+
+/// Size-bounded LRU of [`SessionState`] snapshots keyed by
+/// (model fingerprint, token prefix).  Shared (behind `Arc`) by every
+/// worker of a [`crate::serve::Scheduler`] / [`crate::serve::StreamScheduler`].
+pub struct PrefixCache {
+    fingerprint: u64,
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PrefixCache {
+    /// A cache for one model (`fingerprint` from
+    /// [`crate::infer::Model::fingerprint`]), holding at most `capacity`
+    /// snapshots (clamped to ≥ 1).
+    pub fn new(fingerprint: u64, capacity: usize) -> Self {
+        PrefixCache {
+            fingerprint,
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner { entries: HashMap::new(), lens: BTreeMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The model fingerprint this cache serves.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("prefix cache lock").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Longest-prefix-match lookup: the cached snapshot for the longest
+    /// stored prefix of `tokens`, cloned out together with its length.
+    /// A hit refreshes the entry's recency.  A fingerprint mismatch (or
+    /// empty `tokens`) is a plain miss — never an error — so callers
+    /// fall back to a cold prefill.
+    pub fn lookup(&self, fingerprint: u64, tokens: &[u32]) -> Option<(usize, SessionState)> {
+        if fingerprint != self.fingerprint || tokens.is_empty() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut g = self.inner.lock().expect("prefix cache lock");
+        g.tick += 1;
+        let tick = g.tick;
+        // Candidate lengths that exist in the cache, longest first.
+        let lens: Vec<usize> = g.lens.range(..=tokens.len()).map(|(&l, _)| l).collect();
+        for &len in lens.iter().rev() {
+            if let Some(e) = g.entries.get_mut(&tokens[..len]) {
+                e.stamp = tick;
+                let state = e.state.clone();
+                drop(g);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some((len, state));
+            }
+        }
+        drop(g);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Insert (or refresh) the snapshot for a full token prefix.
+    /// `state.position()` must equal `tokens.len()` — the snapshot must
+    /// be taken exactly at the prefix boundary.  At capacity, the
+    /// least-recently-used entry is evicted.  Fingerprint mismatches and
+    /// empty prefixes are ignored.
+    pub fn insert(&self, fingerprint: u64, tokens: &[u32], state: SessionState) {
+        if fingerprint != self.fingerprint || tokens.is_empty() {
+            return;
+        }
+        debug_assert_eq!(
+            state.position(),
+            tokens.len(),
+            "snapshot position must sit at the prefix boundary"
+        );
+        let mut g = self.inner.lock().expect("prefix cache lock");
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(e) = g.entries.get_mut(tokens) {
+            // Racing inserts of the same prefix (two identical prompts
+            // admitted concurrently): keep one, refresh recency.
+            e.stamp = tick;
+            return;
+        }
+        if g.entries.len() >= self.capacity {
+            // O(entries) LRU scan; the cap is small by construction.
+            if let Some(victim) =
+                g.entries.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
+            {
+                g.entries.remove(&victim);
+                if let Some(n) = g.lens.get_mut(&victim.len()) {
+                    *n -= 1;
+                    if *n == 0 {
+                        g.lens.remove(&victim.len());
+                    }
+                }
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        *g.lens.entry(tokens.len()).or_insert(0) += 1;
+        g.entries.insert(tokens.to_vec(), Entry { state, stamp: tick });
+        drop(g);
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time counter snapshot.
+    pub fn stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats {
+            entries: self.len(),
+            capacity: self.capacity,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LayerInfo, Manifest};
+    use crate::infer::{weights, Decoder, Model, ModelWeights};
+    use std::sync::Arc;
+
+    fn model(seed: u64) -> Arc<Model> {
+        let layers = vec![
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+        ];
+        let m = Manifest::synthetic("hsm_ab", layers, 8, 64, 300, 1);
+        let flat = weights::seeded_flat(&m, seed);
+        Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+    }
+
+    /// Snapshot of `model` after prefilling `tokens`.
+    fn snap(model: &Arc<Model>, tokens: &[u32]) -> SessionState {
+        let mut s = model.session();
+        s.prefill(tokens).unwrap();
+        s.snapshot().unwrap()
+    }
+
+    #[test]
+    fn longest_prefix_match_wins() {
+        let md = model(1);
+        let fp = md.fingerprint();
+        let cache = PrefixCache::new(fp, 8);
+        cache.insert(fp, &[1, 2], snap(&md, &[1, 2]));
+        cache.insert(fp, &[1, 2, 3, 4], snap(&md, &[1, 2, 3, 4]));
+
+        let (len, st) = cache.lookup(fp, &[1, 2, 3, 4, 5]).expect("hit");
+        assert_eq!(len, 4);
+        assert_eq!(st.position(), 4);
+        let (len, _) = cache.lookup(fp, &[1, 2, 9]).expect("hit on shorter prefix");
+        assert_eq!(len, 2);
+        assert!(cache.lookup(fp, &[9, 9]).is_none());
+        assert!(cache.lookup(fp, &[]).is_none(), "empty prefix is a miss");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (2, 2));
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let md = model(1);
+        let fp = md.fingerprint();
+        let cache = PrefixCache::new(fp, 2);
+        cache.insert(fp, &[1], snap(&md, &[1]));
+        cache.insert(fp, &[2], snap(&md, &[2]));
+        // Touch [1] so [2] becomes the LRU victim.
+        assert!(cache.lookup(fp, &[1]).is_some());
+        cache.insert(fp, &[3], snap(&md, &[3]));
+
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.lookup(fp, &[1]).is_some(), "recently used entry survives");
+        assert!(cache.lookup(fp, &[2]).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(fp, &[3]).is_some());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_a_miss_and_insert_noop() {
+        let md = model(1);
+        let other = model(2);
+        assert_ne!(md.fingerprint(), other.fingerprint());
+        let cache = PrefixCache::new(md.fingerprint(), 4);
+        cache.insert(md.fingerprint(), &[1, 2], snap(&md, &[1, 2]));
+
+        assert!(cache.lookup(other.fingerprint(), &[1, 2]).is_none());
+        cache.insert(other.fingerprint(), &[7, 8], snap(&other, &[7, 8]));
+        assert_eq!(cache.len(), 1, "foreign-model insert must be ignored");
+        assert!(cache.lookup(md.fingerprint(), &[1, 2]).is_some());
+    }
+
+    #[test]
+    fn duplicate_insert_refreshes_without_growing() {
+        let md = model(1);
+        let fp = md.fingerprint();
+        let cache = PrefixCache::new(fp, 2);
+        cache.insert(fp, &[1, 2], snap(&md, &[1, 2]));
+        cache.insert(fp, &[1, 2], snap(&md, &[1, 2]));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().insertions, 1);
+    }
+}

@@ -8,8 +8,10 @@
 //!   `max_new_tokens` optional.  `id` fixes the sampling RNG stream
 //!   (`seed ^ id`); omit it and the server assigns a fresh one.
 //! * completion: `{"request_id": 7, "prompt": "...", "completion": "...",
-//!   "tokens_generated": 32, "finish": "eot"}` (+ `"error"` detail when
-//!   `finish` is `"rejected"`).
+//!   "tokens_generated": 32, "cached_prefix_len": 12, "finish": "eot"}`
+//!   (+ `"error"` detail when `finish` is `"rejected"`;
+//!   `cached_prefix_len` counts prompt tokens served from the shared
+//!   prefix cache — 0 on a cold prefill).
 //! * stream events (one SSE `data:` payload each):
 //!   `{"request_id": 7, "token": 512, "text_delta": "..."}` per token,
 //!   then `{"request_id": 7, "done": true, "text_delta": "...",
@@ -87,6 +89,7 @@ pub fn finish_from_label(label: &str, error: Option<&str>) -> Result<FinishReaso
         "max_tokens" => FinishReason::MaxTokens,
         "ctx_full" => FinishReason::CtxFull,
         "timed_out" => FinishReason::TimedOut,
+        "cancelled" => FinishReason::Cancelled,
         "rejected" => FinishReason::Rejected(error.unwrap_or("").to_string()),
         other => bail!("unknown finish reason {other:?}"),
     })
@@ -98,6 +101,7 @@ pub fn completion_to_json(c: &Completion) -> Value {
         ("prompt", json::s(&c.prompt)),
         ("completion", json::s(&c.completion)),
         ("tokens_generated", json::num(c.tokens_generated as f64)),
+        ("cached_prefix_len", json::num(c.cached_prefix_len as f64)),
         ("finish", json::s(c.finish.label())),
     ];
     if let FinishReason::Rejected(why) = &c.finish {
@@ -119,6 +123,7 @@ pub fn completion_from_json(v: &Value) -> Result<Completion> {
         prompt: v.get("prompt").as_str().unwrap_or("").to_string(),
         completion: v.get("completion").as_str().unwrap_or("").to_string(),
         tokens_generated: v.get("tokens_generated").as_usize().unwrap_or(0),
+        cached_prefix_len: v.get("cached_prefix_len").as_usize().unwrap_or(0),
         finish,
     })
 }
@@ -193,6 +198,7 @@ mod tests {
             FinishReason::MaxTokens,
             FinishReason::CtxFull,
             FinishReason::TimedOut,
+            FinishReason::Cancelled,
             FinishReason::Rejected("prompt encodes to zero tokens".into()),
         ] {
             let c = Completion {
@@ -200,6 +206,7 @@ mod tests {
                 prompt: "p".into(),
                 completion: "some text\nwith \"quotes\"".into(),
                 tokens_generated: 5,
+                cached_prefix_len: 4,
                 finish: finish.clone(),
             };
             let text = completion_to_json(&c).to_string();
@@ -207,6 +214,7 @@ mod tests {
             assert_eq!(back.finish, finish);
             assert_eq!(back.completion, c.completion);
             assert_eq!(back.request_id, 3);
+            assert_eq!(back.cached_prefix_len, 4);
         }
     }
 
@@ -228,6 +236,7 @@ mod tests {
                 prompt: "p".into(),
                 completion: "full".into(),
                 tokens_generated: 2,
+                cached_prefix_len: 0,
                 finish: FinishReason::Eot,
             },
         };

@@ -1,7 +1,15 @@
 //! Blocking HTTP client for the front-end, on plain `std::net` — used by
 //! the `hsm request` CLI, the loopback integration tests, and the
-//! `http_streaming` bench.  One request per connection (the server
-//! always answers `Connection: close`).
+//! serving benches.  Two shapes:
+//!
+//! * free functions ([`generate`], [`stream`], [`health`]) — one request
+//!   per connection (`Connection: close`), zero state;
+//! * [`Client`] — a persistent connection sending
+//!   `Connection: keep-alive`, reused across [`generate`](Client::generate)
+//!   / [`health`](Client::health) calls, transparently reconnecting when
+//!   the server closed it (idle timeout, restart, per-connection request
+//!   cap).  This is what repeated short completions want: no
+//!   connect/teardown per call.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -32,14 +40,8 @@ impl ResponseHead {
     }
 }
 
-/// Send one request, returning the parsed response head and the reader
-/// positioned at the body.
-fn send(
-    addr: &str,
-    method: &str,
-    path: &str,
-    body: Option<&str>,
-) -> Result<(ResponseHead, BufReader<TcpStream>)> {
+/// Open a connection with the client's standard socket options.
+fn connect(addr: &str) -> Result<TcpStream> {
     let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     stream.set_nodelay(true).ok();
     // Bounded waits: a wedged or half-open server must produce an error,
@@ -48,28 +50,44 @@ fn send(
     // before its first token.
     stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
     stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
-    let mut w = stream.try_clone().context("cloning client stream")?;
+    Ok(stream)
+}
+
+/// Write one request head (+ optional JSON body) to `w`.
+fn write_request<W: Write>(
+    w: &mut W,
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    keep_alive: bool,
+) -> Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     match body {
         Some(body) => write!(
             w,
             "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
-             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+             Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
             body.len()
         )?,
-        None => write!(w, "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?,
+        None => {
+            write!(w, "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: {conn}\r\n\r\n")?
+        }
     }
     w.flush()?;
+    Ok(())
+}
 
-    let mut r = BufReader::new(stream);
-    let mut line = String::new();
-    if r.read_line(&mut line)? == 0 {
-        bail!("server closed the connection without a response");
-    }
-    let status: u16 = line
-        .split_whitespace()
+/// Parse an already-read status line.
+fn parse_status_line(line: &str) -> Result<u16> {
+    line.split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow!("malformed status line {:?}", line.trim_end()))?;
+        .ok_or_else(|| anyhow!("malformed status line {:?}", line.trim_end()))
+}
+
+/// Read header lines up to the blank separator, leaving `r` at the body.
+fn read_headers(r: &mut BufReader<TcpStream>) -> Result<Vec<(String, String)>> {
     let mut headers = Vec::new();
     loop {
         let mut line = String::new();
@@ -85,7 +103,32 @@ fn send(
             headers.push(parsed);
         }
     }
-    Ok((ResponseHead { status, headers }, r))
+    Ok(headers)
+}
+
+/// Parse a response's status line + headers, leaving `r` at the body.
+fn read_head(r: &mut BufReader<TcpStream>) -> Result<ResponseHead> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        bail!("server closed the connection without a response");
+    }
+    Ok(ResponseHead { status: parse_status_line(&line)?, headers: read_headers(r)? })
+}
+
+/// Send one request over a fresh connection, returning the parsed
+/// response head and the reader positioned at the body.
+fn send(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(ResponseHead, BufReader<TcpStream>)> {
+    let stream = connect(addr)?;
+    let mut w = stream.try_clone().context("cloning client stream")?;
+    write_request(&mut w, addr, method, path, body, false)?;
+    let mut r = BufReader::new(stream);
+    let head = read_head(&mut r)?;
+    Ok((head, r))
 }
 
 /// Read a fixed-length (or to-EOF) response body.
@@ -177,4 +220,132 @@ pub fn health(addr: &str) -> Result<json::Value> {
         return Err(status_error(head.status, &v));
     }
     Ok(v)
+}
+
+/// A persistent keep-alive connection to one server.
+///
+/// Requests go out with `Connection: keep-alive`; as long as the server
+/// honors it (this crate's does, for `/v1/generate` and `/healthz`),
+/// every call after the first skips the TCP connect.  When the reused
+/// socket turns out dead — server idle-closed it, restarted, or hit its
+/// per-connection request cap — the call transparently retries once on
+/// a fresh connection, so callers never see the reconnect.
+pub struct Client {
+    addr: String,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl Client {
+    /// A client for `addr` (e.g. `127.0.0.1:8080`).  Connects lazily on
+    /// the first request.
+    pub fn new(addr: &str) -> Self {
+        Client { addr: addr.to_string(), conn: None }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One attempt over the current connection.  `Err((retryable, e))`:
+    /// retryable is true **only** when the failure proves the server
+    /// closed the idle connection before reading our request (write
+    /// error, or EOF/reset before a single response byte) — re-sending
+    /// is then safe even for the non-idempotent generate POST.  Once any
+    /// response byte has arrived, or on a read timeout (the request may
+    /// be queued or decoding server-side), the failure is final: a blind
+    /// retry could silently submit the request twice.
+    fn attempt(
+        r: &mut BufReader<TcpStream>,
+        addr: &str,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::result::Result<(ResponseHead, Vec<u8>), (bool, anyhow::Error)> {
+        let mut w = r
+            .get_ref()
+            .try_clone()
+            .map_err(|e| (true, anyhow::Error::from(e).context("cloning client stream")))?;
+        write_request(&mut w, addr, method, path, body, true).map_err(|e| (true, e))?;
+        let mut line = String::new();
+        match r.read_line(&mut line) {
+            // Clean EOF before any response byte: the server closed the
+            // idle connection (it always answers requests it accepts).
+            Ok(0) => return Err((true, anyhow!("server closed the idle connection"))),
+            Ok(_) => {}
+            Err(e) => {
+                let stale = matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::BrokenPipe
+                );
+                return Err((stale, e.into()));
+            }
+        }
+        let fatal = |e: anyhow::Error| (false, e);
+        let head = ResponseHead {
+            status: parse_status_line(&line).map_err(fatal)?,
+            headers: read_headers(r).map_err(fatal)?,
+        };
+        let body = read_body(&head, r).map_err(fatal)?;
+        Ok((head, body))
+    }
+
+    /// One request-response over the kept-alive connection, reconnecting
+    /// (at most once per call) when the reused socket turns out to have
+    /// been closed before the request was sent.
+    fn roundtrip(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<json::Value> {
+        for _ in 0..2 {
+            let reused = self.conn.is_some();
+            if self.conn.is_none() {
+                self.conn = Some(BufReader::new(connect(&self.addr)?));
+            }
+            let r = self.conn.as_mut().expect("connection just ensured");
+            match Self::attempt(r, &self.addr, method, path, body) {
+                Ok((head, bytes)) => {
+                    // The server may have answered `Connection: close`
+                    // (error path, shutdown, per-connection request
+                    // cap): drop the socket so the next call reconnects
+                    // instead of failing.
+                    let keep = head
+                        .header("connection")
+                        .is_some_and(|v| v.eq_ignore_ascii_case("keep-alive"));
+                    if !keep {
+                        self.conn = None;
+                    }
+                    let text = std::str::from_utf8(&bytes)
+                        .map_err(|_| anyhow!("response body is not UTF-8"))?;
+                    let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+                    if head.status != 200 {
+                        return Err(status_error(head.status, &v));
+                    }
+                    return Ok(v);
+                }
+                Err((retryable, e)) => {
+                    self.conn = None;
+                    if !reused || !retryable {
+                        // Fresh-connection failures are real errors, and
+                        // a reused connection that died mid-exchange must
+                        // not be retried (the request may have reached
+                        // the scheduler).
+                        return Err(e);
+                    }
+                    // The reused socket was already closed when we sent:
+                    // loop once more on a fresh connection.
+                }
+            }
+        }
+        unreachable!("second attempt always returns");
+    }
+
+    /// `POST /v1/generate` over the kept-alive connection.
+    pub fn generate(&mut self, req: &GenerateRequest) -> Result<Completion> {
+        let v = self.roundtrip("POST", "/v1/generate", Some(&req.to_json().to_string()))?;
+        api::completion_from_json(&v)
+    }
+
+    /// `GET /healthz` over the kept-alive connection.
+    pub fn health(&mut self) -> Result<json::Value> {
+        self.roundtrip("GET", "/healthz", None)
+    }
 }

@@ -1,13 +1,17 @@
 //! Minimal HTTP/1.1 wire layer on plain `std::io`, shared by the server
 //! and the blocking client (hyper/tokio are unavailable under the
 //! vendored-offline constraint, and this front-end needs only a sliver
-//! of the protocol: one request per connection, `Content-Length` bodies
-//! in, fixed or chunked bodies out).
+//! of the protocol: `Content-Length` bodies in, fixed or chunked bodies
+//! out, opt-in keep-alive).
 //!
-//! Responses always carry `Connection: close`, so framing on the read
-//! side never has to handle keep-alive pipelining.  Streaming responses
-//! use `Transfer-Encoding: chunked` with **one chunk per event**, so a
-//! client sees each token the moment the server samples it.
+//! Fixed-length responses are `Content-Length`-framed and may carry
+//! `Connection: keep-alive` when the client asked for it (explicitly —
+//! clients that never send the header keep the old close-per-request
+//! framing), so `hsm request` and the bench client can reuse one
+//! connection across calls.  Streaming responses use
+//! `Transfer-Encoding: chunked` with **one chunk per event**, so a
+//! client sees each token the moment the server samples it; they always
+//! close the connection afterwards.
 
 use std::io::{BufRead, Read, Write};
 
@@ -37,6 +41,14 @@ impl HttpRequest {
 
     pub fn body_str(&self) -> Result<&str> {
         std::str::from_utf8(&self.body).map_err(|_| anyhow!("request body is not valid UTF-8"))
+    }
+
+    /// Did the client explicitly ask to keep the connection open?
+    /// Conservative on purpose: absent header means close (the HTTP/1.1
+    /// default would be keep-alive, but every pre-keep-alive client of
+    /// this server frames responses by connection close).
+    pub fn wants_keep_alive(&self) -> bool {
+        self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("keep-alive"))
     }
 }
 
@@ -113,19 +125,22 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<HttpRequest>> {
     Ok(Some(HttpRequest { body, ..req }))
 }
 
-/// Write a complete fixed-length response.
+/// Write a complete fixed-length response.  `keep_alive` controls the
+/// `Connection` header; the `Content-Length` framing makes reuse safe.
 pub fn write_response<W: Write>(
     w: &mut W,
     status: u16,
     reason: &str,
     content_type: &str,
     body: &[u8],
+    keep_alive: bool,
 ) -> Result<()> {
     write!(
         w,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
     )?;
     w.write_all(body)?;
     w.flush()?;
@@ -225,11 +240,29 @@ mod tests {
     #[test]
     fn response_roundtrip() {
         let mut buf = Vec::new();
-        write_response(&mut buf, 200, "OK", "application/json", b"{}").unwrap();
+        write_response(&mut buf, 200, "OK", "application/json", b"{}", false).unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
         assert!(text.ends_with("\r\n\r\n{}"));
+
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "OK", "application/json", b"{}", true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"));
+    }
+
+    #[test]
+    fn keep_alive_detection_is_explicit_and_case_insensitive() {
+        let parse = |conn: &str| {
+            let raw = format!("GET / HTTP/1.1\r\n{conn}\r\n\r\n");
+            read_request(&mut Cursor::new(raw.as_bytes())).unwrap().unwrap()
+        };
+        assert!(parse("Connection: keep-alive").wants_keep_alive());
+        assert!(parse("CONNECTION: Keep-Alive").wants_keep_alive());
+        assert!(!parse("Connection: close").wants_keep_alive());
+        assert!(!parse("Host: x").wants_keep_alive(), "absent header means close");
     }
 
     #[test]

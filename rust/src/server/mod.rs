@@ -47,6 +47,13 @@ use crate::util::json;
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
 /// Per-write timeout on responses/chunks, for the same reason.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Idle budget *between* requests on a kept-alive connection — shorter
+/// than the first-request budget so parked keep-alive clients release
+/// their handler threads (and never stall shutdown) quickly.
+const KEEP_ALIVE_IDLE: Duration = Duration::from_secs(2);
+/// Requests served over one kept-alive connection before the server
+/// closes it anyway (bounds how long a single client can pin an fd).
+const KEEP_ALIVE_MAX_REQUESTS: usize = 1000;
 
 /// The running HTTP front-end.  Bind with [`HttpServer::bind`]; stop
 /// with [`shutdown`](HttpServer::shutdown) (graceful: in-flight
@@ -167,6 +174,11 @@ fn accept_loop(inner: &Arc<ServerInner>) {
     }
 }
 
+/// One connection's request loop.  A request that explicitly asks for
+/// `Connection: keep-alive` gets a keep-alive response and another trip
+/// around the loop; everything else (errors, streaming, plain requests,
+/// server shutdown) serves once and closes — exactly the pre-keep-alive
+/// framing, so old clients never see a behavior change.
 fn handle_connection(inner: &ServerInner, stream: TcpStream) -> Result<()> {
     stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
     stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
@@ -175,22 +187,48 @@ fn handle_connection(inner: &ServerInner, stream: TcpStream) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone().context("cloning connection stream")?);
     let mut writer = BufWriter::new(stream);
-    let req = match http::read_request(&mut reader) {
-        Ok(Some(r)) => r,
-        Ok(None) => return Ok(()),
-        Err(e) => return respond_error(&mut writer, 400, &format!("{e:#}")),
-    };
-    match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/generate") => handle_generate(inner, &mut writer, &req),
-        ("POST", "/v1/stream") => handle_stream(inner, &mut writer, &req),
-        ("GET", "/healthz") => handle_health(inner, &mut writer),
-        (_, "/v1/generate" | "/v1/stream") => respond_error(&mut writer, 405, "use POST"),
-        _ => respond_error(
-            &mut writer,
-            404,
-            "unknown route (have: POST /v1/generate, POST /v1/stream, GET /healthz)",
-        ),
+    for served in 0..KEEP_ALIVE_MAX_REQUESTS {
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            // Clean EOF (or idle timeout between keep-alive requests).
+            Ok(None) => return Ok(()),
+            Err(e) if served == 0 => return respond_error(&mut writer, 400, &format!("{e:#}")),
+            // On a reused connection a read error is usually the client
+            // going away (or its idle read timing out) — just close.
+            Err(_) => return Ok(()),
+        };
+        // The response's Connection header must tell the truth: on the
+        // last allowed request of a capped connection, advertise close
+        // (the loop exits right after), never a keep-alive we won't honor.
+        let keep_alive = req.wants_keep_alive()
+            && !inner.stopping.load(Ordering::SeqCst)
+            && served + 1 < KEEP_ALIVE_MAX_REQUESTS;
+        let reused = match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/generate") => handle_generate(inner, &mut writer, &req, keep_alive)?,
+            ("POST", "/v1/stream") => return handle_stream(inner, &mut writer, &req),
+            ("GET", "/healthz") => {
+                handle_health(inner, &mut writer, keep_alive)?;
+                keep_alive
+            }
+            (_, "/v1/generate" | "/v1/stream") => {
+                return respond_error(&mut writer, 405, "use POST")
+            }
+            _ => {
+                return respond_error(
+                    &mut writer,
+                    404,
+                    "unknown route (have: POST /v1/generate, POST /v1/stream, GET /healthz)",
+                )
+            }
+        };
+        if !reused {
+            return Ok(());
+        }
+        // Between keep-alive requests, idle cheaply: a parked client
+        // times out in seconds, not the first-request budget.
+        reader.get_ref().set_read_timeout(Some(KEEP_ALIVE_IDLE)).ok();
     }
+    Ok(())
 }
 
 fn respond_error<W: Write>(w: &mut W, status: u16, msg: &str) -> Result<()> {
@@ -203,7 +241,9 @@ fn respond_error<W: Write>(w: &mut W, status: u16, msg: &str) -> Result<()> {
         _ => "Error",
     };
     let body = json::obj(vec![("error", json::s(msg))]).to_string();
-    http::write_response(w, status, reason, "application/json", body.as_bytes())
+    // Errors always close: after a framing problem the read side cannot
+    // be trusted to sit at a request boundary.
+    http::write_response(w, status, reason, "application/json", body.as_bytes(), false)
 }
 
 /// Parse the JSON body into a scheduler [`Request`], assigning a fresh
@@ -217,18 +257,21 @@ fn parse_generate(inner: &ServerInner, req: &http::HttpRequest) -> Result<Reques
     Ok(r)
 }
 
+/// Serve one `/v1/generate` request; returns whether the connection can
+/// be reused (a keep-alive success — every error path closes).
 fn handle_generate(
     inner: &ServerInner,
     w: &mut impl Write,
     req: &http::HttpRequest,
-) -> Result<()> {
+    keep_alive: bool,
+) -> Result<bool> {
     let request = match parse_generate(inner, req) {
         Ok(r) => r,
-        Err(e) => return respond_error(w, 400, &format!("{e:#}")),
+        Err(e) => return respond_error(w, 400, &format!("{e:#}")).map(|()| false),
     };
     let stream = match inner.sched.submit(request) {
         Ok(s) => s,
-        Err(e) => return respond_error(w, 503, &format!("{e:#}")),
+        Err(e) => return respond_error(w, 503, &format!("{e:#}")).map(|()| false),
     };
     match stream.wait(|_| {}) {
         Some(completion) => http::write_response(
@@ -237,8 +280,11 @@ fn handle_generate(
             "OK",
             "application/json",
             api::completion_to_json(&completion).to_string().as_bytes(),
-        ),
-        None => respond_error(w, 500, "scheduler dropped the request before it finished"),
+            keep_alive,
+        )
+        .map(|()| keep_alive),
+        None => respond_error(w, 500, "scheduler dropped the request before it finished")
+            .map(|()| false),
     }
 }
 
@@ -256,8 +302,9 @@ fn handle_stream(inner: &ServerInner, w: &mut impl Write, req: &http::HttpReques
         let payload = format!("data: {}\n\n", api::event_to_json(&ev));
         if http::write_chunk(w, payload.as_bytes()).is_err() {
             // Client went away mid-stream.  Dropping the TokenStream
-            // marks the sink dead; decoding finishes deterministically
-            // without a consumer.
+            // marks the sink dead; the scheduler cancels the request at
+            // its next sampled token and frees the session
+            // ([`crate::serve::FinishReason::Cancelled`]).
             return Ok(());
         }
         if matches!(ev, TokenEvent::Done { .. }) {
@@ -267,14 +314,31 @@ fn handle_stream(inner: &ServerInner, w: &mut impl Write, req: &http::HttpReques
     http::finish_chunks(w)
 }
 
-fn handle_health(inner: &ServerInner, w: &mut impl Write) -> Result<()> {
+fn handle_health(inner: &ServerInner, w: &mut impl Write, keep_alive: bool) -> Result<()> {
     let m = &inner.sched.model().manifest;
-    let body = json::obj(vec![
+    let mut pairs = vec![
         ("status", json::s("ok")),
         ("variant", json::s(&m.variant)),
         ("ctx", json::num(m.ctx as f64)),
         ("vocab", json::num(m.vocab as f64)),
-    ])
-    .to_string();
-    http::write_response(w, 200, "OK", "application/json", body.as_bytes())
+    ];
+    // Prefix-cache observability: hit rate is the one number that says
+    // whether shared-prompt-head traffic is actually being exploited.
+    if let Some(cache) = inner.sched.prefix_cache() {
+        let s = cache.stats();
+        pairs.push((
+            "prefix_cache",
+            json::obj(vec![
+                ("capacity", json::num(s.capacity as f64)),
+                ("entries", json::num(s.entries as f64)),
+                ("hits", json::num(s.hits as f64)),
+                ("misses", json::num(s.misses as f64)),
+                ("insertions", json::num(s.insertions as f64)),
+                ("evictions", json::num(s.evictions as f64)),
+                ("hit_rate", json::num(s.hit_rate())),
+            ]),
+        ));
+    }
+    let body = json::obj(pairs).to_string();
+    http::write_response(w, 200, "OK", "application/json", body.as_bytes(), keep_alive)
 }

@@ -1,0 +1,41 @@
+//! FNV-1a folding, shared by every content-fingerprint site (the model
+//! fingerprint that keys the serving prefix cache hashes both manifest
+//! bytes and weight bits through these — one definition, so the fold
+//! can never silently diverge between call sites).
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// Fold one word into the running hash.
+#[inline]
+pub fn fold(h: &mut u64, word: u64) {
+    *h = (*h ^ word).wrapping_mul(FNV_PRIME);
+}
+
+/// Fold a byte slice.
+pub fn fold_bytes(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        fold(h, b as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinguishes_order_and_content() {
+        let hash = |bs: &[u8]| {
+            let mut h = FNV_OFFSET;
+            fold_bytes(&mut h, bs);
+            h
+        };
+        assert_ne!(hash(b"ab"), hash(b"ba"));
+        assert_ne!(hash(b"a"), hash(b"ab"));
+        assert_eq!(hash(b"ab"), hash(b"ab"));
+        // Reference vector: FNV-1a("a") = 0xaf63dc4c8601ec8c.
+        assert_eq!(hash(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -13,9 +13,11 @@
 //!   repetitions, mean/p50/p95) used by every `cargo bench` target.
 //! * [`prop`] — a miniature property-testing framework (seeded generators,
 //!   failure-case reporting) used by the tokenizer/data/coordinator tests.
+//! * [`hash`] — FNV-1a folding shared by every content-fingerprint site.
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

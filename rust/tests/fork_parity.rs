@@ -1,0 +1,250 @@
+//! Fork/restore parity: decoding from a restored [`SessionState`]
+//! snapshot (or a forked session) must be **bit-identical** to cold
+//! prefill, for every mixer kind — the invariant the serving stack's
+//! prefix cache is built on (a cache hit can never change sampled
+//! text).  Plus end-to-end: serving with the prefix cache enabled is
+//! byte-identical to serving without it, and a dropped stream consumer
+//! cancels its request instead of decoding unobserved.
+
+use std::sync::Arc;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::SampleCfg;
+use hsm::infer::{weights, Decoder, Model, ModelWeights, SessionState};
+use hsm::serve::{serve, FinishReason, Request, ServeCfg, StreamScheduler, TokenEvent};
+use hsm::tokenizer::Tokenizer;
+use hsm::util::prop;
+
+const KINDS: &[&str] = &["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"];
+
+fn layers_for(kind: &str) -> Vec<LayerInfo> {
+    match kind {
+        "ab" => vec![
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![1, 2, 4, 8], ffn: 24 },
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![2, 4, 8, 16], ffn: 24 },
+        ],
+        _ => vec![
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![1], ffn: 24 },
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![3], ffn: 24 },
+        ],
+    }
+}
+
+fn model_for(kind: &str, ctx: usize, vocab: usize) -> Arc<Model> {
+    let m = Manifest::synthetic(kind, layers_for(kind), 16, ctx, vocab, 2);
+    let flat = weights::seeded_flat(&m, 31);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn tok() -> Tokenizer {
+    let text = hsm::corpus::generate(9, 80);
+    hsm::tokenizer::trainer::train(&text, 300).unwrap()
+}
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Step both decoders through `tokens`, asserting bit-identical logits
+/// at every position.
+fn assert_lockstep<A: Decoder, B: Decoder>(a: &mut A, b: &mut B, tokens: &[u32], what: &str) {
+    for (i, &t) in tokens.iter().enumerate() {
+        let want = bits(a.step(t).unwrap());
+        let got = bits(b.step(t).unwrap());
+        assert_eq!(want, got, "{what}: logits diverged at step {i}");
+    }
+}
+
+/// Restored-snapshot decode is bit-identical to cold prefill, at every
+/// split point of the prompt, for every mixer kind.
+#[test]
+fn restored_prefix_decode_is_bit_identical_for_every_mixer_kind() {
+    let vocab = 300usize;
+    let prompt: Vec<u32> = (0..20u32).map(|i| (i * 37 + 11) % vocab as u32).collect();
+    let tail_probe: [u32; 6] = [5, 9, 3, 250, 1, 17];
+    for kind in KINDS {
+        let model = model_for(kind, 64, vocab);
+        for split in [1usize, 5, 19, 20] {
+            // Cold reference: one uninterrupted prefill.
+            let mut cold = model.session();
+            cold.prefill(&prompt).unwrap();
+
+            // Snapshot at the split, restore into a fresh session,
+            // prefill only the tail.
+            let snap: SessionState = {
+                let mut head = model.session();
+                head.prefill(&prompt[..split]).unwrap();
+                head.snapshot().unwrap()
+            };
+            assert_eq!(snap.position(), split);
+            let mut warm = model.session_from(snap).unwrap();
+            warm.prefill(&prompt[split..]).unwrap();
+            assert_eq!(warm.position(), prompt.len());
+
+            assert_lockstep(&mut cold, &mut warm, &tail_probe, &format!("{kind} split {split}"));
+        }
+    }
+}
+
+/// A forked session and its original decode independently and
+/// identically: stepping the fork never perturbs the original.
+#[test]
+fn forked_sessions_are_independent_and_identical_for_every_mixer_kind() {
+    let vocab = 300usize;
+    let prompt: Vec<u32> = (0..12u32).map(|i| (i * 53 + 7) % vocab as u32).collect();
+    for kind in KINDS {
+        let model = model_for(kind, 64, vocab);
+        let mut original = model.session();
+        original.prefill(&prompt).unwrap();
+        let mut fork = original.fork();
+
+        // Both continuations from the same state must match bit-for-bit.
+        let mut fork2 = original.fork();
+        assert_lockstep(&mut fork, &mut fork2, &[4, 8, 15], &format!("{kind} fork-vs-fork"));
+
+        // Diverge the (first) fork, then check the original against a
+        // cold session that never saw any fork.
+        fork.step(99).unwrap();
+        let mut cold = model.session();
+        cold.prefill(&prompt).unwrap();
+        assert_lockstep(&mut cold, &mut original, &[16, 23, 42], &format!("{kind} original"));
+    }
+}
+
+/// Property: for random prompts and random split points, restore +
+/// tail-prefill is bit-identical to cold prefill (run on the hybrid
+/// attention kind too, whose KV cache grows with the prefix).
+#[test]
+fn prop_random_split_restore_parity() {
+    let vocab = 300u32;
+    for kind in ["ab", "attn"] {
+        let model = model_for(kind, 64, vocab as usize);
+        prop::check_n(&format!("split-restore-{kind}"), 24, |rng| {
+            let mut prompt = prop::arb_tokens(rng, vocab, 40);
+            prompt.push(rng.next_u64() as u32 % vocab); // never empty
+            let split = 1 + rng.below(prompt.len());
+
+            let mut cold = model.session();
+            cold.prefill(&prompt).unwrap();
+
+            let mut head = model.session();
+            head.prefill(&prompt[..split]).unwrap();
+            let mut warm = model.session_from(head.snapshot().unwrap()).unwrap();
+            warm.prefill(&prompt[split..]).unwrap();
+
+            let t = rng.next_u64() as u32 % vocab;
+            assert_eq!(
+                bits(cold.step(t).unwrap()),
+                bits(warm.step(t).unwrap()),
+                "split {split} of {}",
+                prompt.len()
+            );
+        });
+    }
+}
+
+/// End-to-end: the scheduler with the prefix cache enabled produces
+/// byte-identical completions to the scheduler without it, for every
+/// mixer kind, on a workload full of shared prompt heads.
+#[test]
+fn cached_serving_is_byte_identical_to_cold_serving_for_every_mixer_kind() {
+    let tok = tok();
+    let prompts = [
+        "Once upon a time",
+        "Once upon a time there was",
+        "Once upon a time there was a pumpkin",
+        "Once upon a time",
+        "Lily likes cats",
+    ];
+    let sample =
+        SampleCfg { temperature: 0.8, top_k: 8, max_new_tokens: 8, seed: 11, stop_at_eot: true };
+    for kind in KINDS {
+        let model = model_for(kind, 64, tok.vocab_size());
+        let cfg = |prefix_cache_size| ServeCfg {
+            max_active: 2,
+            threads: 2,
+            quantum: 2,
+            prefix_cache_size,
+            sample: sample.clone(),
+            ..Default::default()
+        };
+        let requests: Vec<Request> =
+            prompts.iter().enumerate().map(|(i, p)| Request::new(i as u64, p)).collect();
+        let cold = serve(&model, &tok, requests.clone(), &cfg(0)).unwrap();
+        let warm = serve(&model, &tok, requests, &cfg(16)).unwrap();
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.completion, w.completion, "{kind}: cache changed sampled text");
+            assert_eq!(c.finish, w.finish, "{kind}: finish reason changed");
+            assert_eq!(c.tokens_generated, w.tokens_generated);
+            assert_eq!(c.cached_prefix_len, 0, "{kind}: disabled cache must stay cold");
+        }
+    }
+}
+
+/// The resident scheduler's cache accumulates across submissions and
+/// reports hits; repeated shared-head prompts stream identical bytes.
+#[test]
+fn stream_scheduler_cache_hits_across_submissions() {
+    let tok = tok();
+    let model = model_for("ab", 64, tok.vocab_size());
+    let cfg = ServeCfg {
+        max_active: 1,
+        threads: 1,
+        quantum: 2,
+        prefix_cache_size: 8,
+        sample: SampleCfg { max_new_tokens: 6, seed: 3, ..Default::default() },
+        ..Default::default()
+    };
+    let sched = StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).unwrap();
+    let run = |sched: &StreamScheduler| {
+        let stream = sched.submit(Request::new(7, "Once upon a time")).unwrap();
+        let mut text = String::new();
+        let done = stream.wait(|d| text.push_str(d)).expect("stream finishes");
+        (text, done)
+    };
+    let (t1, d1) = run(&sched);
+    let (t2, d2) = run(&sched);
+    assert_eq!(t1, t2, "identical request id ⇒ identical bytes, cached or not");
+    assert_eq!(d1.completion, d2.completion);
+    assert_eq!(d1.cached_prefix_len, 0, "first submission is cold");
+    let head_len = tok.encode("Once upon a time").len() - 1;
+    assert_eq!(d2.cached_prefix_len, head_len, "second submission hits the whole head");
+    let stats = sched.prefix_cache().unwrap().stats();
+    assert!(stats.hits >= 1 && stats.insertions >= 1);
+    sched.shutdown();
+}
+
+/// Liveness of cancel-on-disconnect end to end: with one session and a
+/// huge token budget, an abandoned stream must not starve the next
+/// request (the scheduler cancels it at the next sampled token).
+#[test]
+fn dropped_stream_frees_the_slot_for_the_next_request() {
+    let tok = tok();
+    let model = model_for("ab", 128, tok.vocab_size());
+    let cfg = ServeCfg {
+        max_active: 1,
+        threads: 1,
+        quantum: 1,
+        prefix_cache_size: 0,
+        sample: SampleCfg {
+            max_new_tokens: 100,
+            seed: 5,
+            stop_at_eot: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let sched = StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).unwrap();
+    // Consume one token so the request is definitely decoding, then
+    // vanish; the scheduler should notice at the next sampled token.
+    let abandoned = sched.submit(Request::new(0, "Once upon a time")).unwrap();
+    let first = abandoned.recv();
+    assert!(matches!(first, Some(TokenEvent::Token { .. })));
+    drop(abandoned);
+
+    let survivor = sched.submit(Request::new(1, "Lily likes cats")).unwrap();
+    let done = survivor.wait(|_| {}).expect("survivor finishes");
+    assert_ne!(done.finish, FinishReason::Cancelled);
+    assert!(done.tokens_generated > 0);
+    sched.shutdown();
+}

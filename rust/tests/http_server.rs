@@ -176,6 +176,112 @@ fn healthz_reports_the_model() {
     server.shutdown();
 }
 
+/// One TCP connection, two requests: an explicit `Connection:
+/// keep-alive` gets a keep-alive response and the socket stays usable
+/// for the next request (the pre-keep-alive close framing would EOF).
+#[test]
+fn keep_alive_serves_two_requests_on_one_connection() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    let (server, tok, model, addr) = start(sample(), ServeCfg::default());
+
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    // Read one Content-Length-framed response, returning (head, body).
+    let read_response = |r: &mut BufReader<std::net::TcpStream>| -> (String, String) {
+        let mut head = String::new();
+        loop {
+            let mut line = String::new();
+            assert_ne!(r.read_line(&mut line).unwrap(), 0, "connection closed early");
+            if line.trim_end_matches(['\r', '\n']).is_empty() {
+                break;
+            }
+            head.push_str(&line);
+        }
+        let len: usize = head
+            .lines()
+            .find_map(|l| {
+                l.to_ascii_lowercase().strip_prefix("content-length:").map(str::to_string)
+            })
+            .and_then(|v| v.trim().parse().ok())
+            .expect("keep-alive responses must be length-framed");
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).unwrap();
+        (head, String::from_utf8(body).unwrap())
+    };
+
+    for id in [11u64, 12] {
+        let body = format!("{{\"prompt\": \"Once upon a time\", \"id\": {id}}}");
+        write!(
+            w,
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        w.flush().unwrap();
+        let (head, body) = read_response(&mut r);
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "request {id}: {head}");
+        assert!(
+            head.to_ascii_lowercase().contains("connection: keep-alive"),
+            "request {id} must be answered keep-alive: {head}"
+        );
+        let got = hsm::server::api::completion_from_json(
+            &hsm::util::json::parse(&body).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(got.request_id, id);
+        assert_eq!(got.completion, reference(&model, &tok, "Once upon a time", id));
+    }
+    server.shutdown();
+}
+
+/// The keep-alive `Client` survives server-side idle closes by
+/// transparently reconnecting, and round-trips both endpoints.
+#[test]
+fn keep_alive_client_reuses_and_reconnects() {
+    let (server, tok, model, addr) = start(sample(), ServeCfg::default());
+    let mut c = client::Client::new(&addr);
+    for id in [21u64, 22, 23] {
+        let mut req = GenerateRequest::new("Lily likes cats");
+        req.id = Some(id);
+        let got = c.generate(&req).unwrap();
+        assert_eq!(got.completion, reference(&model, &tok, "Lily likes cats", id));
+    }
+    let v = c.health().unwrap();
+    assert_eq!(v.get("status").as_str(), Some("ok"));
+    // Fully tear the server down (dropping it releases the listener) so
+    // the reconnect path sees connection-refused, not a dead backlog.
+    server.shutdown();
+    drop(server);
+
+    // Dead server: the client reports an error instead of hanging.
+    assert!(c.generate(&GenerateRequest::new("hi")).is_err());
+}
+
+/// Shared prompt heads across HTTP requests hit the scheduler's prefix
+/// cache; /healthz exposes the counters and responses carry
+/// `cached_prefix_len`.
+#[test]
+fn healthz_reports_prefix_cache_hits_across_requests() {
+    let cfg = ServeCfg { max_active: 1, threads: 1, ..Default::default() };
+    let (server, tok, _model, addr) = start(sample(), cfg);
+    let mut req = GenerateRequest::new("Once upon a time");
+    req.id = Some(1);
+    let first = client::generate(&addr, &req).unwrap();
+    assert_eq!(first.cached_prefix_len, 0, "first request is a cold prefill");
+    req.id = Some(2);
+    let second = client::generate(&addr, &req).unwrap();
+    let head_len = tok.encode("Once upon a time").len() - 1;
+    assert_eq!(second.cached_prefix_len, head_len, "second request hits the cached head");
+
+    let v = client::health(&addr).unwrap();
+    let cache = v.get("prefix_cache");
+    assert!(cache.get("hits").as_usize().unwrap_or(0) >= 1, "healthz must report hits");
+    assert!(cache.get("capacity").as_usize().unwrap_or(0) > 0);
+    server.shutdown();
+}
+
 #[test]
 fn zero_queue_wait_times_out_over_http() {
     let cfg = ServeCfg {
