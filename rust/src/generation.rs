@@ -260,7 +260,7 @@ pub fn generate<D: Decoder + ?Sized>(
         sink: None,
     };
     let mut out = vec![None];
-    serve::run_local(&mut [&mut *dec], tok, vec![job], cfg, 0, None, &mut out)?;
+    serve::run_local(&mut [&mut *dec], tok, vec![job], cfg, 0, None, None, &mut out)?;
     Ok(to_generation(out.pop().unwrap().expect("single sequence completed")))
 }
 
@@ -314,7 +314,7 @@ pub fn generate_batch<D: Decoder>(
         });
     }
     let mut out = vec![None; prompts.len()];
-    serve::run_local(decoders, tok, jobs, cfg, 1, None, &mut out)?;
+    serve::run_local(decoders, tok, jobs, cfg, 1, None, None, &mut out)?;
     Ok(out
         .into_iter()
         .map(|c| to_generation(c.expect("every sequence completed")))

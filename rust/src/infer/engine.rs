@@ -25,6 +25,7 @@ use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Result};
 
+use super::speculate::{Drafter, DrafterKind, NGramDrafter, ShallowDrafter};
 use super::tensor::{add_assign, layer_norm, matvec, matvec_t, relu_inplace, softmax_inplace, tanh_inplace};
 use super::weights::{LayerWeights, ModelWeights};
 use super::Decoder;
@@ -418,13 +419,36 @@ impl DecodeSession {
     /// Consume one token, return next-token logits (borrow valid until
     /// the next call with this session).
     pub fn step(&mut self, model: &Model, token: u32) -> Result<&[f32]> {
-        self.step_inner(model, token, true)?;
+        let depth = model.manifest.layers.len();
+        self.step_inner(model, token, true, depth)?;
         Ok(&self.logits)
     }
 
-    /// One forward step; the final LN + `[D, V]` logit projection (the
-    /// most expensive single op at small D) is skipped during prefill.
-    fn step_inner(&mut self, model: &Model, token: u32, want_logits: bool) -> Result<()> {
+    /// One forward step through only the first `layers` layers (0 or
+    /// anything past the stack depth runs the full stack), followed by
+    /// the final LN + logit projection — the self-drafting path of
+    /// speculative decoding
+    /// ([`crate::infer::speculate::ShallowDrafter`]).  Deeper layers'
+    /// state is left untouched, so a shallow-stepped session is no
+    /// longer a valid full-model session; resync with
+    /// [`restore`](Self::restore) before full-model use.
+    pub fn step_shallow(&mut self, model: &Model, token: u32, layers: usize) -> Result<&[f32]> {
+        let depth = model.manifest.layers.len();
+        let n = if layers == 0 { depth } else { layers.min(depth) };
+        self.step_inner(model, token, true, n)?;
+        Ok(&self.logits)
+    }
+
+    /// One forward step over the first `layers` layers; the final LN +
+    /// `[D, V]` logit projection (the most expensive single op at small
+    /// D) is skipped during prefill.
+    fn step_inner(
+        &mut self,
+        model: &Model,
+        token: u32,
+        want_logits: bool,
+        layers: usize,
+    ) -> Result<()> {
         let m = &model.manifest;
         let w = &model.weights;
         let d = m.dim;
@@ -443,7 +467,7 @@ impl DecodeSession {
             self.x[i] = te[i] + pe[i];
         }
 
-        for (l, spec) in m.layers.iter().enumerate() {
+        for (l, spec) in m.layers.iter().enumerate().take(layers) {
             let lw = &w.layers[l];
 
             // h = LN1(x); y = mixer(h, state); x += y
@@ -534,8 +558,9 @@ impl Decoder for NativeDecoder {
     }
 
     fn prefill(&mut self, tokens: &[u32]) -> Result<()> {
+        let depth = self.model.manifest.layers.len();
         for &t in tokens {
-            self.session.step_inner(&self.model, t, false)?;
+            self.session.step_inner(&self.model, t, false, depth)?;
         }
         Ok(())
     }
@@ -558,6 +583,10 @@ impl Decoder for NativeDecoder {
         Some(state)
     }
 
+    fn supports_snapshot(&self) -> bool {
+        true
+    }
+
     fn restore(&mut self, state: &SessionState) -> Result<()> {
         Self::check_state_origin(&self.model, state)?;
         self.session.restore(&self.model.manifest, state)
@@ -565,6 +594,17 @@ impl Decoder for NativeDecoder {
 
     fn fingerprint(&self) -> u64 {
         self.model.fingerprint()
+    }
+
+    /// The native engine supports both drafters: the model-free n-gram
+    /// lookup, and shallow self-drafting over the same shared weights.
+    fn drafter(&self, kind: &DrafterKind) -> Option<Box<dyn Drafter>> {
+        match *kind {
+            DrafterKind::NGram { max_ngram } => Some(Box::new(NGramDrafter::new(max_ngram))),
+            DrafterKind::Shallow { layers } => {
+                Some(Box::new(ShallowDrafter::new(Arc::clone(&self.model), layers)))
+            }
+        }
     }
 }
 
@@ -875,6 +915,54 @@ mod tests {
             "same-shape different-weights restore must fail on the fingerprint"
         );
         assert!(twin.session_from(snap).is_err(), "session_from must check the stamp too");
+    }
+
+    /// The shallow drafter's resync argument: layer l's state depends
+    /// only on layers below it, so after restoring a *full-model*
+    /// snapshot, shallow-stepping the first K layers produces exactly
+    /// the logits a session that only ever stepped K layers would —
+    /// and with K = L, `step_shallow` is bit-identical to `step`.
+    #[test]
+    fn shallow_steps_agree_with_a_shallow_only_session() {
+        let md = model();
+        let k = 1usize; // first of 2 layers
+
+        // Session A: full-model prefill, then shallow steps.
+        let mut a = md.session();
+        a.prefill(&[5, 9, 3]).unwrap();
+        let mut a_sess = DecodeSession::new(&md.manifest, None).unwrap();
+        a_sess.restore(&md.manifest, &a.snapshot().unwrap()).unwrap();
+
+        // Session B: shallow-only from scratch over the same tokens.
+        let mut b_sess = DecodeSession::new(&md.manifest, None).unwrap();
+        for t in [5u32, 9, 3] {
+            b_sess.step_shallow(&md, t, k).unwrap();
+        }
+
+        let la = a_sess.step_shallow(&md, 2, k).unwrap().to_vec();
+        let lb = b_sess.step_shallow(&md, 2, k).unwrap().to_vec();
+        assert_eq!(
+            la.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            lb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "shallow state must be the prefix of full state"
+        );
+
+        // Full-depth shallow == the ordinary step.
+        let mut c = md.session();
+        c.prefill(&[5, 9, 3]).unwrap();
+        let want = c.step(2).unwrap().to_vec();
+        let mut d_sess = DecodeSession::new(&md.manifest, None).unwrap();
+        d_sess.restore(&md.manifest, &{
+            let mut s = md.session();
+            s.prefill(&[5, 9, 3]).unwrap();
+            s.snapshot().unwrap()
+        })
+        .unwrap();
+        let got = d_sess.step_shallow(&md, 2, 99).unwrap().to_vec();
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

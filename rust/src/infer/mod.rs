@@ -27,13 +27,21 @@
 //! * [`weights`] — typed per-layer weight views over a flat checkpoint.
 //! * [`engine`] — the incremental decoder itself.
 //! * [`window`] — the full-sequence reference forward.
+//! * [`speculate`] — drafters and configuration for speculative
+//!   decoding on forked sessions (the verify loop lives in
+//!   [`crate::serve`]).
 
 pub mod engine;
+pub mod speculate;
 pub mod tensor;
 pub mod weights;
 pub mod window;
 
 pub use engine::{DecodeSession, LayerState, Model, NativeDecoder, SessionState};
+pub use speculate::{
+    DraftCtx, Drafter, DrafterKind, NGramDrafter, ShallowDrafter, SpecCfg, SpecCounters,
+    SpecStats,
+};
 pub use weights::ModelWeights;
 pub use window::WindowEngine;
 
@@ -84,6 +92,16 @@ pub trait Decoder {
         None
     }
 
+    /// Cheap capability probe: would [`snapshot`](Self::snapshot)
+    /// return `Some`?  The default derives the answer by actually
+    /// snapshotting (and discarding) — implementations with snapshot
+    /// support should override this with a constant so capability
+    /// checks (the serve scheduler's speculation gate) never pay a
+    /// state clone.
+    fn supports_snapshot(&self) -> bool {
+        self.snapshot().is_some()
+    }
+
     /// Restore a snapshot taken from a compatible decoder, replacing any
     /// current sequence state.  The default errors: a decoder that
     /// cannot fork (e.g. the full-context window baseline) simply opts
@@ -98,6 +116,21 @@ pub trait Decoder {
     /// are keyed by it so state never crosses model boundaries.
     fn fingerprint(&self) -> u64 {
         0
+    }
+
+    /// Build a [`Drafter`] of the requested kind for speculative
+    /// decoding, or `None` when this implementation cannot supply it.
+    /// The model-free n-gram drafter works for any decoder; shallow
+    /// self-drafting needs shared-weight session forking, so only
+    /// [`NativeDecoder`] provides it.  (Speculation additionally needs
+    /// [`snapshot`](Self::snapshot)/[`restore`](Self::restore) support
+    /// in the verify loop, so the serve scheduler falls back to plain
+    /// decoding on decoders without it.)
+    fn drafter(&self, kind: &DrafterKind) -> Option<Box<dyn Drafter>> {
+        match *kind {
+            DrafterKind::NGram { max_ngram } => Some(Box::new(NGramDrafter::new(max_ngram))),
+            DrafterKind::Shallow { .. } => None,
+        }
     }
 }
 
@@ -130,11 +163,19 @@ impl<D: Decoder + ?Sized> Decoder for &mut D {
         (**self).snapshot()
     }
 
+    fn supports_snapshot(&self) -> bool {
+        (**self).supports_snapshot()
+    }
+
     fn restore(&mut self, state: &SessionState) -> Result<()> {
         (**self).restore(state)
     }
 
     fn fingerprint(&self) -> u64 {
         (**self).fingerprint()
+    }
+
+    fn drafter(&self, kind: &DrafterKind) -> Option<Box<dyn Drafter>> {
+        (**self).drafter(kind)
     }
 }

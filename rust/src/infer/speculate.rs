@@ -1,0 +1,510 @@
+//! Speculative decoding on forked sessions: drafters and their config.
+//!
+//! The paper's inference-side claim is that HSM makes per-token decode
+//! state tiny and **forkable** ([`SessionState`]), which is exactly what
+//! speculative decoding needs: a cheap drafter proposes a block of
+//! tokens, the full model scores the whole block on a forked session,
+//! and an accept/reject pass keeps the longest draft prefix that the
+//! full model agrees with — emitting several tokens per verify round
+//! when the drafter is right, one when it is wrong.
+//!
+//! **Exactness.**  Every drafter here is deterministic (a point-mass
+//! proposal), so exact rejection sampling degenerates to: sample from
+//! the full model's distribution at each scored position — with the
+//! request's own RNG stream, in the same order plain decoding would —
+//! and accept the draft token iff it equals that sample.  The emitted
+//! token is *always* the full-model sample, so the output distribution
+//! is untouched, and because the per-request RNG stream
+//! (`seed ^ request_id`, PR 2) is consumed identically, the emitted
+//! **bytes** are identical to plain decoding (greedy is trivially so).
+//! `rust/tests/spec_parity.rs` pins this for every mixer kind, both
+//! drafters, and both sampling modes.
+//!
+//! Two drafters:
+//!
+//! * [`ShallowDrafter`] — self-drafting through the first K layers of
+//!   the *same* `Arc<`[`Model`]`>` (no second model, no extra weights).
+//!   Natural for HSM: pairwise interactions accumulate across layers,
+//!   so a shallow prefix of the stack is a coherent cheap approximation
+//!   of the full model.  Resync after a verify round is free — the
+//!   first K layers of a full-model [`SessionState`] snapshot *are* the
+//!   shallow state (layer l sees only layers below it), so restoring
+//!   the main session's snapshot is a complete catch-up.
+//! * [`NGramDrafter`] — model-free prompt-lookup: propose the
+//!   continuation of the most recent earlier occurrence of the current
+//!   suffix n-gram in the request's own token history.  Free to run,
+//!   and strong on repetitive or copy-heavy contexts.
+//!
+//! The verify loop itself lives in the serve scheduler
+//! (`crate::serve`), where it threads through both scheduler shapes and
+//! the streaming surface; this module owns the drafter abstraction, the
+//! configuration ([`SpecCfg`], [`DrafterKind`]) and the acceptance
+//! accounting ([`SpecStats`], [`SpecCounters`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::engine::{DecodeSession, Model, SessionState};
+use crate::generation::argmax;
+
+/// Speculative-decoding configuration (per scheduler, off by default:
+/// `ServeCfg::speculation` is `None`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecCfg {
+    /// Which drafter proposes blocks.
+    pub drafter: DrafterKind,
+    /// Draft block length: tokens proposed (and scored by the full
+    /// model) per verify round.  Must be ≥ 1 — "speculation with a
+    /// zero-length draft" is plain decoding; disable with `None`
+    /// instead.
+    pub draft_len: usize,
+}
+
+impl SpecCfg {
+    /// Construction-time validation (run by `ServeCfg::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if self.draft_len == 0 {
+            bail!(
+                "speculation: draft_len must be ≥ 1 \
+                 (disable speculation by leaving it unset instead)"
+            );
+        }
+        if let DrafterKind::NGram { max_ngram } = self.drafter {
+            if max_ngram == 0 {
+                bail!("speculation: ngram drafter needs max_ngram ≥ 1");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Which draft proposer to run per request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrafterKind {
+    /// Self-draft through the first `layers` layers of the serving
+    /// model (0 = half the stack).  Needs a decoder that can fork
+    /// shared-weight sessions (the native engine).
+    Shallow { layers: usize },
+    /// Prompt-lookup n-gram matching over the request's own history,
+    /// trying suffix lengths `max_ngram` down to 1.  Model-free.
+    NGram { max_ngram: usize },
+}
+
+impl DrafterKind {
+    /// Stable wire/CLI label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DrafterKind::Shallow { .. } => "shallow",
+            DrafterKind::NGram { .. } => "ngram",
+        }
+    }
+
+    /// Parse a CLI spec: `ngram`, `ngram:N`, `shallow`, `shallow:K`
+    /// (N = max n-gram length, default 3; K = drafter layers, default
+    /// 0 = half the stack).
+    pub fn parse(s: &str) -> Result<DrafterKind> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        let num = |p: Option<&str>, default: usize| -> Result<usize> {
+            match p {
+                None => Ok(default),
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("drafter parameter {v:?} is not an integer")),
+            }
+        };
+        match name {
+            "ngram" => {
+                let max_ngram = num(param, 3)?;
+                if max_ngram == 0 {
+                    bail!("ngram drafter needs max_ngram ≥ 1");
+                }
+                Ok(DrafterKind::NGram { max_ngram })
+            }
+            "shallow" => Ok(DrafterKind::Shallow { layers: num(param, 0)? }),
+            other => bail!("unknown drafter {other:?} (expected ngram[:N] or shallow[:K])"),
+        }
+    }
+}
+
+/// Everything a drafter may condition a proposal on.
+pub struct DraftCtx<'a> {
+    /// The request's full token history — prompt plus every emitted
+    /// token, *including* the pending last token (not yet consumed by
+    /// the main decoder).  Never empty.
+    pub ids: &'a [u32],
+    /// The main decoder's state before consuming the pending token
+    /// (`state.position() == ids.len() - 1`), supplied only to drafters
+    /// that ask for it ([`Drafter::wants_state`]).  Self-drafting
+    /// restores from it; model-free drafters never see (or pay for) it.
+    pub state: Option<&'a SessionState>,
+    /// The end-of-text sentinel when the request stops at it (`None`
+    /// when `stop_at_eot` is off).  Draft tokens at or past an EOT can
+    /// never be accepted, so drafters truncate there.
+    pub eot: Option<u32>,
+}
+
+/// A draft-block proposer for speculative decoding.  Implementations
+/// must be deterministic: the verify loop's byte-exactness argument
+/// needs the proposal to depend only on the (deterministic) context,
+/// never on shared mutable state or randomness.
+pub trait Drafter: Send {
+    /// Stable label for stats and debugging.
+    fn label(&self) -> &'static str;
+
+    /// Does [`propose`](Self::propose) read [`DraftCtx::state`]?  The
+    /// verify loop snapshots the main session once per round *only*
+    /// for drafters that say so (default `false`) — a model-free
+    /// drafter never pays the state-clone cost.
+    fn wants_state(&self) -> bool {
+        false
+    }
+
+    /// Append up to `max` proposed continuation tokens to `out`
+    /// (fewer — including zero — is always acceptable and simply
+    /// shortens the verified block).  The caller guarantees `ids` is
+    /// non-empty and that `max` keeps the scored block inside the
+    /// model's context window.
+    fn propose(&mut self, ctx: &DraftCtx, max: usize, out: &mut Vec<u32>) -> Result<()>;
+}
+
+/// Model-free prompt-lookup drafter: find the most recent earlier
+/// occurrence of the longest current suffix n-gram (n = `max_ngram`
+/// down to 1) in the request's own history and propose the tokens that
+/// followed it.  O(history · n) per proposal, no weights touched.
+pub struct NGramDrafter {
+    max_ngram: usize,
+}
+
+impl NGramDrafter {
+    pub fn new(max_ngram: usize) -> Self {
+        NGramDrafter { max_ngram: max_ngram.max(1) }
+    }
+}
+
+impl Drafter for NGramDrafter {
+    fn label(&self) -> &'static str {
+        "ngram"
+    }
+
+    fn propose(&mut self, ctx: &DraftCtx, max: usize, out: &mut Vec<u32>) -> Result<()> {
+        if max == 0 {
+            return Ok(());
+        }
+        let ids = ctx.ids;
+        let len = ids.len();
+        // Longest suffix first; a strictly earlier occurrence guarantees
+        // at least one continuation token to copy.
+        for n in (1..=self.max_ngram.min(len.saturating_sub(1))).rev() {
+            let suffix = &ids[len - n..];
+            for start in (0..len - n).rev() {
+                if &ids[start..start + n] == suffix {
+                    for &t in &ids[start + n..(start + n + max).min(len)] {
+                        if ctx.eot == Some(t) {
+                            break; // at/past EOT a draft can never be accepted
+                        }
+                        out.push(t);
+                    }
+                    return Ok(());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Self-drafting through the first K layers of the serving model: the
+/// drafter forks a [`DecodeSession`] over the *same* `Arc<Model>` and
+/// steps only the shallow prefix of the stack
+/// ([`DecodeSession::step_shallow`]), drafting greedily.
+///
+/// Resync is free: because layer l's state depends only on layers
+/// below it, the first K layers of the main session's full snapshot
+/// are bit-identical to what shallow decoding over the same tokens
+/// would have produced — so every proposal starts by restoring the
+/// main state, and the drafter can never drift from the verified
+/// context (rejected draft tokens never contaminate the next round).
+pub struct ShallowDrafter {
+    model: Arc<Model>,
+    session: DecodeSession,
+    layers: usize,
+}
+
+impl ShallowDrafter {
+    /// `layers` = 0 picks half the stack (at least 1).
+    pub fn new(model: Arc<Model>, layers: usize) -> Self {
+        let depth = model.manifest.layers.len().max(1);
+        let layers = match layers {
+            0 => depth.div_ceil(2),
+            n => n.min(depth),
+        };
+        let session = DecodeSession::new(&model.manifest, None)
+            .expect("fresh session state is always valid for its own manifest");
+        ShallowDrafter { model, session, layers }
+    }
+
+    /// How many layers of the stack this drafter runs.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+}
+
+impl Drafter for ShallowDrafter {
+    fn label(&self) -> &'static str {
+        "shallow"
+    }
+
+    fn wants_state(&self) -> bool {
+        true
+    }
+
+    fn propose(&mut self, ctx: &DraftCtx, max: usize, out: &mut Vec<u32>) -> Result<()> {
+        if max == 0 {
+            return Ok(());
+        }
+        let m = &self.model.manifest;
+        let state = ctx
+            .state
+            .ok_or_else(|| anyhow::anyhow!("shallow drafting needs the main session state"))?;
+        // Complete resync from the verified context (see type docs).
+        self.session.restore(m, state)?;
+        let mut last = *ctx.ids.last().expect("draft context is never empty");
+        // Defensive context clamp; the caller's `max` is already sized
+        // to the scored block.
+        let cap = m.ctx.saturating_sub(self.session.position());
+        for _ in 0..max.min(cap) {
+            let logits = self.session.step_shallow(&self.model, last, self.layers)?;
+            let next = argmax(logits);
+            if ctx.eot == Some(next) {
+                break;
+            }
+            out.push(next);
+            last = next;
+        }
+        Ok(())
+    }
+}
+
+/// Per-request speculative-decoding accounting; also the aggregate
+/// shape reported by `GET /healthz` via [`SpecCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Verify rounds run (each scores one drafted block with the full
+    /// model).
+    pub rounds: u64,
+    /// Draft tokens proposed across all rounds.
+    pub drafted: u64,
+    /// Draft tokens accepted (the full-model sample matched the draft).
+    pub accepted: u64,
+    /// Tokens emitted across all rounds — accepted drafts plus the one
+    /// corrective/bonus full-model sample each round ends with.
+    pub emitted: u64,
+}
+
+impl SpecStats {
+    /// Accepted over drafted (0.0 before any draft).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Tokens emitted per verify round — the headline speculative
+    /// metric (1.0 = no better than plain decoding).
+    pub fn emitted_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.emitted as f64 / self.rounds as f64
+        }
+    }
+
+    /// Accumulate another request's stats.
+    pub fn add(&mut self, other: &SpecStats) {
+        self.rounds += other.rounds;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.emitted += other.emitted;
+    }
+}
+
+/// Thread-safe aggregate of [`SpecStats`] across every request a
+/// scheduler has finished — the `GET /healthz` acceptance counters.
+#[derive(Debug, Default)]
+pub struct SpecCounters {
+    rounds: AtomicU64,
+    drafted: AtomicU64,
+    accepted: AtomicU64,
+    emitted: AtomicU64,
+}
+
+impl SpecCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, s: &SpecStats) {
+        self.rounds.fetch_add(s.rounds, Ordering::Relaxed);
+        self.drafted.fetch_add(s.drafted, Ordering::Relaxed);
+        self.accepted.fetch_add(s.accepted, Ordering::Relaxed);
+        self.emitted.fetch_add(s.emitted, Ordering::Relaxed);
+    }
+
+    /// Point-in-time snapshot.
+    pub fn snapshot(&self) -> SpecStats {
+        SpecStats {
+            rounds: self.rounds.load(Ordering::Relaxed),
+            drafted: self.drafted.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            emitted: self.emitted.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LayerInfo, Manifest};
+    use crate::infer::{weights, Decoder, ModelWeights};
+
+    fn model() -> Arc<Model> {
+        let layers = vec![
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+        ];
+        let m = Manifest::synthetic("hsm_ab", layers, 8, 64, 300, 1);
+        let flat = weights::seeded_flat(&m, 77);
+        Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+    }
+
+    /// Context + main-session snapshot after consuming all but the
+    /// last of `ids`.
+    fn ctx_for(model: &Arc<Model>, ids: &[u32]) -> SessionState {
+        let mut s = model.session();
+        s.prefill(&ids[..ids.len() - 1]).unwrap();
+        s.snapshot().unwrap()
+    }
+
+    #[test]
+    fn ngram_proposes_the_continuation_of_the_latest_match() {
+        let md = model();
+        let mut d = NGramDrafter::new(3);
+        // History: [1 2 3 9 | 1 2 3 4 5 | 1 2 3] — suffix [1,2,3] last
+        // occurred at position 4, followed by [4, 5].
+        let ids = [1u32, 2, 3, 9, 1, 2, 3, 4, 5, 1, 2, 3];
+        let state = ctx_for(&md, &ids);
+        let mut out = Vec::new();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 4, &mut out).unwrap();
+        assert_eq!(out, vec![4, 5, 1, 2], "longest suffix wins, most recent occurrence");
+
+        // EOT truncation: the copied continuation stops before EOT.
+        out.clear();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: Some(5) }, 4, &mut out).unwrap();
+        assert_eq!(out, vec![4]);
+
+        // No match anywhere: empty proposal, not an error.
+        out.clear();
+        let lonely = [7u32, 8];
+        let st = ctx_for(&md, &lonely);
+        d.propose(&DraftCtx { ids: &lonely, state: Some(&st), eot: None }, 4, &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn ngram_is_deterministic_and_respects_max() {
+        let md = model();
+        let mut d = NGramDrafter::new(2);
+        let ids = [5u32, 6, 5, 6, 5, 6];
+        let state = ctx_for(&md, &ids);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 3, &mut a).unwrap();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 3, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert!(a.len() <= 3);
+        assert!(!a.is_empty(), "periodic history must match");
+    }
+
+    #[test]
+    fn shallow_drafter_is_deterministic_and_never_drifts() {
+        let md = model();
+        let mut d = ShallowDrafter::new(Arc::clone(&md), 1);
+        assert_eq!(d.layers(), 1);
+        let ids = [5u32, 9, 3, 7];
+        let state = ctx_for(&md, &ids);
+        let mut a = Vec::new();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 4, &mut a).unwrap();
+        assert_eq!(a.len(), 4, "shallow drafting always fills the block (no EOT stop here)");
+
+        // A second proposal from the same context is identical even
+        // though the first one mutated the drafter's internal session —
+        // the restore-based resync erases any drift.
+        let mut b = Vec::new();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 4, &mut b).unwrap();
+        assert_eq!(a, b);
+
+        // Full-depth shallow drafting (layers = L) greedily matches the
+        // full model: draft_i = argmax of the real next-token logits.
+        let mut full = ShallowDrafter::new(Arc::clone(&md), 99);
+        assert_eq!(full.layers(), 2);
+        let mut c = Vec::new();
+        full.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 3, &mut c).unwrap();
+        let mut sess = md.session();
+        sess.prefill(&ids[..ids.len() - 1]).unwrap();
+        let mut last = *ids.last().unwrap();
+        for (i, &want) in c.iter().enumerate() {
+            let got = argmax(sess.step(last).unwrap());
+            assert_eq!(got, want, "full-depth draft diverged at {i}");
+            last = got;
+        }
+    }
+
+    #[test]
+    fn drafter_kind_parses_cli_specs() {
+        assert_eq!(DrafterKind::parse("ngram").unwrap(), DrafterKind::NGram { max_ngram: 3 });
+        assert_eq!(DrafterKind::parse("ngram:5").unwrap(), DrafterKind::NGram { max_ngram: 5 });
+        assert_eq!(DrafterKind::parse("shallow").unwrap(), DrafterKind::Shallow { layers: 0 });
+        assert_eq!(
+            DrafterKind::parse("shallow:2").unwrap(),
+            DrafterKind::Shallow { layers: 2 }
+        );
+        assert!(DrafterKind::parse("ngram:0").is_err());
+        assert!(DrafterKind::parse("ngram:x").is_err());
+        assert!(DrafterKind::parse("magic").is_err());
+    }
+
+    #[test]
+    fn spec_cfg_validates() {
+        let ok = SpecCfg { drafter: DrafterKind::NGram { max_ngram: 3 }, draft_len: 4 };
+        assert!(ok.validate().is_ok());
+        let zero = SpecCfg { drafter: DrafterKind::NGram { max_ngram: 3 }, draft_len: 0 };
+        assert!(zero.validate().is_err());
+        let bad = SpecCfg { drafter: DrafterKind::NGram { max_ngram: 0 }, draft_len: 2 };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn stats_and_counters_aggregate() {
+        let a = SpecStats { rounds: 2, drafted: 8, accepted: 6, emitted: 8 };
+        let mut b = SpecStats { rounds: 1, drafted: 4, accepted: 0, emitted: 1 };
+        b.add(&a);
+        assert_eq!(b, SpecStats { rounds: 3, drafted: 12, accepted: 6, emitted: 9 });
+        assert!((a.acceptance_rate() - 0.75).abs() < 1e-12);
+        assert!((a.emitted_per_round() - 4.0).abs() < 1e-12);
+        assert_eq!(SpecStats::default().acceptance_rate(), 0.0);
+        assert_eq!(SpecStats::default().emitted_per_round(), 0.0);
+
+        let c = SpecCounters::new();
+        c.add(&a);
+        c.add(&b);
+        let snap = c.snapshot();
+        assert_eq!(snap.rounds, 5);
+        assert_eq!(snap.emitted, 17);
+    }
+}

@@ -35,7 +35,7 @@
 //! | [`coordinator`] | training loops, `MockEngine`, experiment scheduler        |
 //! | [`infer`]     | [`infer::Decoder`] trait, shared-weight [`infer::Model`], per-user [`infer::DecodeSession`]s with forkable [`infer::SessionState`] snapshots, [`infer::NativeDecoder`], full-context [`infer::WindowEngine`] |
 //! | [`generation`] | sampling + [`generation::generate`] / [`generation::generate_batch`] over any [`infer::Decoder`]; [`generation::WindowDecoder`] |
-//! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`, `max_queue_wait`), worker threads over disjoint sessions; shared [`serve::PrefixCache`] of prompt-head snapshots; resident [`serve::StreamScheduler`] emitting per-token [`serve::TokenEvent`]s, cancel-on-disconnect |
+//! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`, `max_queue_wait`), worker threads over disjoint sessions; shared [`serve::PrefixCache`] of prompt-head snapshots; byte-exact speculative decoding ([`serve::ServeCfg::speculation`], drafters in [`infer::speculate`]); resident [`serve::StreamScheduler`] emitting per-token [`serve::TokenEvent`]s, cancel-on-disconnect |
 //! | [`server`]    | **cross-process serving**: hand-rolled HTTP/1.1 front-end — `POST /v1/generate`, `POST /v1/stream` (SSE chunks), `GET /healthz`, blocking [`server::client`] |
 //! | [`checkpoint`] | tensor (de)serialization (+ embedded manifest snapshot)    |
 //! | [`report`]    | Table 1/2/3, Figures 7/8 drivers                            |
@@ -171,6 +171,34 @@
 //! `/v1/generate` / `/healthz` ([`server::client::Client`] reuses one
 //! connection across calls).
 //!
+//! ## Speculative decoding: more tokens per verify round, same bytes
+//!
+//! Forkable session state also powers speculative decoding
+//! ([`infer::speculate`]): a cheap drafter proposes a block of tokens,
+//! the full model scores the whole block on the sequence's own forked
+//! state, and every scored position is sampled with the request's RNG
+//! stream — so the emitted bytes are **identical** to plain decoding
+//! (greedy trivially so), while accepted drafts emit several tokens
+//! per full-model verify round.  Two drafters ship: `ngram` (model-free
+//! prompt lookup — strong on repetitive/copy-heavy text) and `shallow`
+//! (the first K layers of the same shared-weight model).  Enable with
+//! [`serve::ServeCfg::speculation`] or the CLI:
+//!
+//! ```bash
+//! hsm serve --variant hsm_ab --checkpoint ck.bin --http 127.0.0.1:8080 \
+//!     --speculate 4 --drafter ngram        # or: --drafter shallow:2
+//! hsm generate --variant hsm_ab --checkpoint ck.bin --speculate 4
+//! curl -s http://127.0.0.1:8080/healthz
+//! # → {..., "speculation": {"drafter": "ngram", "rounds": 12,
+//! #       "accepted": 31, "tokens_per_round": 3.58, ...}}
+//! ```
+//!
+//! Responses carry per-request acceptance accounting
+//! ([`serve::Completion::spec`]), `rust/tests/spec_parity.rs` pins
+//! byte-parity for every mixer kind × drafter × sampling mode, and
+//! `cargo bench --bench speculative` records accepted-tokens-per-round
+//! and end-to-end tok/s vs plain decoding into `BENCH_spec.json`.
+//!
 //! One-off generation keeps the simpler wrappers —
 //! [`generation::generate`] (single session) and
 //! [`generation::generate_batch`] (fixed membership) — which are thin
@@ -206,7 +234,9 @@ pub mod util;
 pub use config::{Manifest, TrainHp};
 pub use coordinator::{TrainOutcome, Trainer, TrainerOptions};
 pub use data::{Batch, Dataset};
-pub use infer::{Decoder, DecodeSession, Model, NativeDecoder, SessionState};
+pub use infer::{
+    Decoder, DecodeSession, DrafterKind, Model, NativeDecoder, SessionState, SpecCfg, SpecStats,
+};
 pub use serve::{
     Completion, PrefixCache, PrefixCacheStats, Request, Scheduler, ServeCfg, StreamScheduler,
     TokenEvent, TokenStream,

@@ -28,7 +28,7 @@ use hsm::config::{artifacts_root, Manifest, TABLE1_VARIANTS, VARIANTS};
 use hsm::coordinator::{Trainer, TrainerOptions};
 use hsm::corpus;
 use hsm::generation::{self, SampleCfg, TABLE3_PROMPTS};
-use hsm::infer::{Model, ModelWeights};
+use hsm::infer::{DrafterKind, Model, ModelWeights, SpecCfg, SpecStats};
 use hsm::report::{self, ExperimentCtx, PjrtFactory, FIG7_VARIANTS};
 use hsm::runtime::{PjrtEngine, StepEngine};
 use hsm::serve::{FinishReason, Request, Scheduler, ServeCfg, StreamScheduler};
@@ -243,11 +243,14 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("top-k", "40", "top-k filter (0 = off)")
         .flag("max-new-tokens", "64", "maximum tokens to generate")
         .flag("samples", "1", "number of samples")
+        .flag("speculate", "0", "speculative decoding: draft block length (0 = off; native engine only)")
+        .flag("drafter", "ngram", "draft proposer: ngram[:N] | shallow[:K]")
         .parse(argv)
         .map_err(|e| anyhow!(e))?;
     let ctx = ctx_from_args(&a)?;
     let samples = a.usize("samples").map_err(|e| anyhow!(e))?;
     let prompt = a.str("prompt");
+    let speculation = speculation_from_args(&a)?;
     let cfg = SampleCfg {
         temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
         top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
@@ -263,11 +266,40 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
             // session samples from stream seed ^ i (same as sequential).
             let model = native_model(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
             let (tok, _, _) = report::build_data(&ctx, &model.manifest)?;
+            if speculation.is_some() {
+                // Speculative decoding rides the scheduler (same core,
+                // byte-identical text); request i uses RNG stream
+                // seed ^ i, matching the round-robin path exactly.
+                let serve_cfg = ServeCfg {
+                    max_active: samples.max(1),
+                    threads: 1,
+                    quantum: 16,
+                    prefix_cache_size: 0,
+                    speculation,
+                    sample: cfg.clone(),
+                    ..Default::default()
+                };
+                let requests: Vec<Request> =
+                    (0..samples).map(|i| Request::new(i as u64, &prompt)).collect();
+                let completions = hsm::serve::serve(&model, &tok, requests, &serve_cfg)?;
+                for (i, c) in completions.iter().enumerate() {
+                    println!("--- sample {i} ({} tokens) ---", c.tokens_generated);
+                    println!("{}{}", c.prompt, c.completion);
+                }
+                print_spec_summary(&completions);
+                return Ok(());
+            }
             let mut sessions: Vec<_> = (0..samples).map(|_| model.session()).collect();
             let prompts: Vec<&str> = (0..samples).map(|_| prompt.as_str()).collect();
             generation::generate_batch(&mut sessions, &tok, &prompts, &cfg)?
         }
         "window" => {
+            if speculation.is_some() {
+                bail!(
+                    "--speculate needs the native engine (the window baseline \
+                     cannot fork session state); drop --speculate or use --engine native"
+                );
+            }
             let mut engine =
                 load_engine_with_checkpoint(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
             let (tok, _, _) = report::build_data(&ctx, engine.manifest())?;
@@ -287,6 +319,34 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Shared `--speculate N` / `--drafter ngram[:N]|shallow[:K]` parsing
+/// for `serve` and `generate`.
+fn speculation_from_args(a: &Args) -> Result<Option<SpecCfg>> {
+    let draft_len = a.usize("speculate").map_err(|e| anyhow!(e))?;
+    if draft_len == 0 {
+        return Ok(None);
+    }
+    Ok(Some(SpecCfg { drafter: DrafterKind::parse(&a.str("drafter"))?, draft_len }))
+}
+
+/// One aggregate line of speculative-decoding accounting for a batch.
+fn print_spec_summary(completions: &[hsm::serve::Completion]) {
+    let mut agg = SpecStats::default();
+    for c in completions {
+        if let Some(s) = &c.spec {
+            agg.add(s);
+        }
+    }
+    if agg.rounds > 0 {
+        println!(
+            "speculation: {} verify rounds, {:.2} tokens/round, {:.0}% of drafts accepted",
+            agg.rounds,
+            agg.emitted_per_round(),
+            100.0 * agg.acceptance_rate()
+        );
+    }
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let a = experiment_flags(Args::new("serve"))
         .required("variant", "model variant")
@@ -298,6 +358,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("quantum", "16", "tokens per scheduling slice")
         .flag("max-queue-wait-ms", "0", "finish requests queued longer than this as timed_out (0 = wait forever)")
         .flag("prefix-cache", "32", "shared prompt-prefix cache entries (0 = disabled)")
+        .flag("speculate", "0", "speculative decoding: draft block length (0 = off)")
+        .flag("drafter", "ngram", "draft proposer: ngram[:N] (prompt lookup) | shallow[:K] (first K layers)")
         .flag("temperature", "0.8", "sampling temperature (0 = greedy)")
         .flag("top-k", "40", "top-k filter (0 = off)")
         .flag("max-new-tokens", "48", "maximum tokens per request")
@@ -314,6 +376,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         quantum: a.usize("quantum").map_err(|e| anyhow!(e))?,
         max_queue_wait: (wait_ms > 0).then(|| std::time::Duration::from_millis(wait_ms)),
         prefix_cache_size: a.usize("prefix-cache").map_err(|e| anyhow!(e))?,
+        speculation: speculation_from_args(&a)?,
         sample: SampleCfg {
             temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
             top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
@@ -382,6 +445,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         completions.len(),
         tokens as f64 / secs.max(1e-9),
     );
+    print_spec_summary(&completions);
     Ok(())
 }
 

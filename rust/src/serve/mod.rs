@@ -62,6 +62,19 @@
 //! session for the queue, finishing as [`FinishReason::Cancelled`] —
 //! tokens are never burned on an unobservable stream.
 //!
+//! **Speculative decoding:** with [`ServeCfg::speculation`] set, each
+//! sequence runs draft/verify rounds instead of single steps: a
+//! [`Drafter`] ([`crate::infer::speculate`]) proposes a block, the full
+//! model scores the whole block on the sequence's own forked state
+//! (snapshot → score → restore to the accepted prefix, the machinery
+//! PR 4 built), and each scored position is *sampled from the full
+//! model's logits with the request's own RNG stream* — so the accepted
+//! tokens, the correction token, and every byte that leaves the
+//! scheduler are identical to plain decoding ([`advance_speculative`]
+//! documents the argument; `rust/tests/spec_parity.rs` pins it).
+//! Acceptance accounting lands on [`Completion::spec`] per request and
+//! aggregates on the scheduler for `GET /healthz`.
+//!
 //! [`generate`](crate::generation::generate) (single-session) and
 //! [`generate_batch`](crate::generation::generate_batch)
 //! (fixed-membership) are thin wrappers over the same core
@@ -80,7 +93,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::generation::{encode_prompt, sample_logits, SampleCfg};
-use crate::infer::{Decoder, Model, NativeDecoder};
+use crate::infer::speculate::{DraftCtx, Drafter, SpecCfg, SpecCounters, SpecStats};
+use crate::infer::{Decoder, Model, NativeDecoder, SessionState};
 use crate::tokenizer::{StreamDecoder, Tokenizer};
 use crate::util::rng::Rng;
 
@@ -149,6 +163,11 @@ pub struct Completion {
     /// being prefilled (0 = cold prefill / caching disabled).  Purely
     /// informational: cached and cold decoding are byte-identical.
     pub cached_prefix_len: usize,
+    /// Speculative-decoding acceptance accounting for this request
+    /// (None when [`ServeCfg::speculation`] was off or the decoder
+    /// could not fork).  Purely informational: speculative and plain
+    /// decoding are byte-identical.
+    pub spec: Option<SpecStats>,
     pub finish: FinishReason,
 }
 
@@ -185,6 +204,12 @@ pub struct ServeCfg {
     /// cached part of their prefill.  Bit-exact — never changes sampled
     /// text, only TTFT and [`Completion::cached_prefix_len`].
     pub prefix_cache_size: usize,
+    /// Speculative decoding (None = plain stepping).  Byte-exact: the
+    /// drafter only decides how many full-model samples a verify round
+    /// attempts, never what they are, so sampled text is identical with
+    /// speculation on or off — only [`Completion::spec`] and the
+    /// tokens-per-round economics change.
+    pub speculation: Option<SpecCfg>,
     /// Sampling parameters shared by every request.
     pub sample: SampleCfg,
 }
@@ -197,6 +222,7 @@ impl Default for ServeCfg {
             quantum: 16,
             max_queue_wait: None,
             prefix_cache_size: 32,
+            speculation: None,
             sample: SampleCfg::default(),
         }
     }
@@ -212,6 +238,9 @@ impl ServeCfg {
         }
         if self.threads == 0 {
             bail!("serve: threads must be at least 1 (0 spawns no workers — nothing would ever decode)");
+        }
+        if let Some(spec) = &self.speculation {
+            spec.validate()?;
         }
         Ok(())
     }
@@ -397,6 +426,7 @@ fn serve_with_cache(
                     completion: String::new(),
                     tokens_generated: 0,
                     cached_prefix_len: 0,
+                    spec: None,
                     finish: FinishReason::Rejected(format!("{e:#}")),
                 });
             }
@@ -408,7 +438,16 @@ fn serve_with_cache(
         if cfg.threads == 1 {
             let mut sessions: Vec<NativeDecoder> =
                 (0..n_sessions).map(|_| model.session()).collect();
-            run_local(&mut sessions, tok, jobs, &cfg.sample, cfg.quantum, cache, &mut out)?;
+            run_local(
+                &mut sessions,
+                tok,
+                jobs,
+                &cfg.sample,
+                cfg.quantum,
+                cache,
+                cfg.speculation.as_ref(),
+                &mut out,
+            )?;
         } else {
             run_parallel(model, tok, jobs, cfg, n_sessions, cache, &mut out)?;
         }
@@ -459,10 +498,22 @@ impl StreamOut {
     }
 }
 
+/// Per-sequence speculative-decoding state: the drafter plus reusable
+/// round buffers (draft block, scored logit rows, per-position
+/// snapshots) and the request's acceptance accounting.
+struct SpecRunner {
+    drafter: Box<dyn Drafter>,
+    draft_len: usize,
+    stats: SpecStats,
+    draft: Vec<u32>,
+    logits: Vec<Vec<f32>>,
+    snaps: Vec<SessionState>,
+}
+
 /// One in-flight sequence.  Everything mutable is per-request (decoder
-/// state, token buffer, RNG stream, stream tap), which is the whole
-/// determinism argument: any interleaving of disjoint `Active`s produces
-/// identical text.
+/// state, token buffer, RNG stream, stream tap, drafter), which is the
+/// whole determinism argument: any interleaving of disjoint `Active`s
+/// produces identical text.
 struct Active<D> {
     dec: D,
     ix: usize,
@@ -475,6 +526,9 @@ struct Active<D> {
     budget: usize,
     /// Prompt tokens restored from the prefix cache at admission.
     cached_prefix_len: usize,
+    /// Speculative decoding (None = plain stepping; also None when the
+    /// decoder cannot snapshot/fork, e.g. the window baseline).
+    spec: Option<SpecRunner>,
     stream: Option<StreamOut>,
 }
 
@@ -494,6 +548,7 @@ fn admit<D: Decoder>(
     job: Job,
     cfg: &SampleCfg,
     cache: Option<&PrefixCache>,
+    spec: Option<&SpecCfg>,
 ) -> Result<Active<D>> {
     let prompt_len = job.ids.len();
     let head = &job.ids[..prompt_len - 1];
@@ -528,6 +583,21 @@ fn admit<D: Decoder>(
         }
         _ => dec.prefill(head)?,
     }
+    // Speculation needs snapshot/restore (the verify loop's rewind) and
+    // a drafter; a decoder offering neither just decodes plainly —
+    // byte-identical either way, so the fallback is invisible.
+    let spec = spec
+        .filter(|_| dec.supports_snapshot())
+        .and_then(|sc| {
+            dec.drafter(&sc.drafter).map(|drafter| SpecRunner {
+                drafter,
+                draft_len: sc.draft_len,
+                stats: SpecStats::default(),
+                draft: Vec::new(),
+                logits: Vec::new(),
+                snaps: Vec::new(),
+            })
+        });
     Ok(Active {
         last: job.ids[prompt_len - 1],
         dec,
@@ -539,6 +609,7 @@ fn admit<D: Decoder>(
         rng: Rng::new(cfg.seed ^ job.id),
         budget: job.budget,
         cached_prefix_len,
+        spec,
         stream: job.sink.map(|tx| StreamOut { tx, sd: StreamDecoder::new(), dead: false }),
     })
 }
@@ -559,6 +630,7 @@ fn expire(job: Job) -> Option<(usize, Completion)> {
         completion: String::new(),
         tokens_generated: 0,
         cached_prefix_len: 0,
+        spec: None,
         finish: FinishReason::TimedOut,
     };
     match sink {
@@ -583,6 +655,9 @@ fn advance<D: Decoder>(
     cfg: &SampleCfg,
     quantum: usize,
 ) -> Result<Option<FinishReason>> {
+    if seq.spec.is_some() {
+        return advance_speculative(seq, tok, cfg, quantum);
+    }
     let ctx = seq.dec.manifest().ctx;
     let mut sliced = 0usize;
     loop {
@@ -617,18 +692,181 @@ fn advance<D: Decoder>(
     }
 }
 
+/// [`advance`], speculatively: draft/verify rounds instead of single
+/// steps.  Byte-exactness argument, inductively per round:
+///
+/// * The full model scores the whole block `[last, d_1, .., d_k]` on
+///   the sequence's own decoder, snapshotting after every step — the
+///   logit row at position i is conditioned on `last, d_1..d_i`.
+/// * The accept pass samples each scored row **with the request's RNG
+///   stream, in emission order** ([`sample_logits`], exactly one draw
+///   per emitted token — the same consumption plain decoding makes).
+///   Along the accepted prefix `d_1..d_i` equal the previously emitted
+///   tokens, so each row is bit-identical to the row plain decoding
+///   would have produced (forked decode is bit-exact, PR 4), and so is
+///   every sample.  The first non-matching sample is *itself* the correct
+///   full-model token (its row conditions only on accepted tokens), so
+///   it is emitted as the round's correction and the rest of the draft
+///   is discarded.
+/// * The decoder then rewinds (snapshot restore) to the state whose
+///   consumed tokens are exactly the emitted history — wasted draft
+///   suffix compute never contaminates state.
+///
+/// With a deterministic (point-mass) drafter this *is* exact rejection
+/// sampling: the target-distribution sample either equals the proposal
+/// (accept) or replaces it (reject + resample), so the output
+/// distribution — and here, with the shared RNG stream, the byte
+/// stream — is unchanged.  Greedy (temperature 0) is the classic
+/// draft-then-argmax-verify special case.
+///
+/// Stop conditions (ctx, budget, EOT, cancel) fire at the same token
+/// boundaries as plain decoding; the quantum check runs per round, so
+/// a slice may overshoot by up to the block length — pure scheduling,
+/// which never changes text.
+///
+/// **Cost shape (deliberate):** the scoring pass always spends k+1
+/// full-model steps, so on this sequential scalar backend a rejected
+/// suffix is wasted work and low-acceptance workloads decode *slower*
+/// than plain stepping — `benches/speculative.rs` quantifies exactly
+/// that trade.  Scoring the whole block up front (rather than
+/// interleaving sample-then-step, which would never waste a step but
+/// also never need forks) is the shape whose verify pass can be fused
+/// into one multi-token pass — the batched-verify backend the ROADMAP
+/// lists next — and it is what exercises the snapshot/rewind machinery
+/// this subsystem exists to prove out.
+fn advance_speculative<D: Decoder>(
+    seq: &mut Active<D>,
+    tok: &Tokenizer,
+    cfg: &SampleCfg,
+    quantum: usize,
+) -> Result<Option<FinishReason>> {
+    let ctx = seq.dec.manifest().ctx;
+    let mut sliced = 0usize;
+    loop {
+        if seq.ids.len() >= ctx {
+            return Ok(Some(FinishReason::CtxFull));
+        }
+        let generated = seq.ids.len() - seq.prompt_len;
+        if generated >= seq.budget {
+            return Ok(Some(FinishReason::MaxTokens));
+        }
+        let spec = seq.spec.as_mut().expect("speculative advance without a runner");
+        // Block sizing: a round emits at most k+1 tokens, so k ≤
+        // budget-remaining − 1 wastes nothing on unreachable drafts; and
+        // the scoring pass consumes k+1 tokens from position ids.len()−1,
+        // so k ≤ ctx − ids.len() keeps it inside the context window.
+        let remaining = seq.budget - generated;
+        let k_max = spec.draft_len.min(remaining - 1).min(ctx - seq.ids.len());
+        // State clone only for drafters that read it (self-drafting);
+        // the n-gram drafter rounds never pay it.
+        let base = if spec.drafter.wants_state() {
+            Some(
+                seq.dec
+                    .snapshot()
+                    .ok_or_else(|| anyhow!("speculative decoding needs snapshot support"))?,
+            )
+        } else {
+            None
+        };
+        spec.draft.clear();
+        spec.drafter.propose(
+            &DraftCtx {
+                ids: &seq.ids,
+                state: base.as_ref(),
+                eot: cfg.stop_at_eot.then_some(tok.eot),
+            },
+            k_max,
+            &mut spec.draft,
+        )?;
+        spec.draft.truncate(k_max);
+        let k = spec.draft.len();
+
+        // Scoring pass: feed `last, d_1..d_k`, recording the logit row
+        // and a state snapshot at every position (the restore targets).
+        spec.snaps.clear();
+        for i in 0..=k {
+            let t = if i == 0 { seq.last } else { spec.draft[i - 1] };
+            let logits = seq.dec.step(t)?;
+            if spec.logits.len() <= i {
+                spec.logits.push(logits.to_vec());
+            } else {
+                spec.logits[i].clear();
+                spec.logits[i].extend_from_slice(logits);
+            }
+            let snap = seq
+                .dec
+                .snapshot()
+                .ok_or_else(|| anyhow!("speculative decoding needs snapshot support"))?;
+            spec.snaps.push(snap);
+        }
+
+        // Accept pass: emit full-model samples until one disagrees with
+        // the draft (or a stop condition fires at its plain-decode
+        // boundary).
+        let mut finish: Option<FinishReason> = None;
+        let mut emitted = 0usize;
+        let mut matched = 0u64;
+        for i in 0..=k {
+            if i > 0 && (seq.ids.len() >= ctx || seq.ids.len() - seq.prompt_len >= seq.budget) {
+                // Plain decoding would stop here without sampling; the
+                // outer loop re-fires the reason on its next entry.
+                break;
+            }
+            let next = sample_logits(&spec.logits[i], cfg, &mut seq.rng);
+            if cfg.stop_at_eot && next == tok.eot {
+                finish = Some(FinishReason::Eot);
+                break;
+            }
+            seq.ids.push(next);
+            seq.last = next;
+            emitted += 1;
+            sliced += 1;
+            if let Some(out) = seq.stream.as_mut() {
+                let text_delta = out.sd.push(tok, next);
+                out.emit(TokenEvent::Token { request_id: seq.id, token: next, text_delta });
+                if out.dead {
+                    finish = Some(FinishReason::Cancelled);
+                    break;
+                }
+            }
+            if i < k && next == spec.draft[i] {
+                matched += 1;
+            } else {
+                break;
+            }
+        }
+        spec.stats.rounds += 1;
+        spec.stats.drafted += k as u64;
+        spec.stats.accepted += matched;
+        spec.stats.emitted += emitted as u64;
+        if let Some(f) = finish {
+            // Terminal: the decoder's state is past the emitted history,
+            // but a finished sequence's state is never read again (the
+            // session is reset at its next admission).
+            return Ok(Some(f));
+        }
+        // Rewind to the snapshot whose consumed tokens are exactly the
+        // emitted history (`last, x_0..x_{m-2}`); x_{m-1} stays pending.
+        seq.dec.restore(&spec.snaps[emitted - 1])?;
+        if quantum > 0 && sliced >= quantum {
+            return Ok(None);
+        }
+    }
+}
+
 /// Tear a finished sequence down into its completion, recovering the
 /// decoder for the free pool.  A streaming sequence emits its terminal
 /// [`TokenEvent::Done`] here (with the detokenizer's final flush), so
 /// consumers always see the completion on the stream itself.
 fn complete<D>(seq: Active<D>, tok: &Tokenizer, finish: FinishReason) -> (D, usize, Completion) {
-    let Active { dec, ix, id, prompt, ids, prompt_len, cached_prefix_len, stream, .. } = seq;
+    let Active { dec, ix, id, prompt, ids, prompt_len, cached_prefix_len, spec, stream, .. } = seq;
     let completion = Completion {
         request_id: id,
         prompt,
         completion: tok.decode(&ids[prompt_len..]),
         tokens_generated: ids.len() - prompt_len,
         cached_prefix_len,
+        spec: spec.map(|s| s.stats),
         finish,
     };
     if let Some(mut out) = stream {
@@ -653,6 +891,7 @@ pub(crate) fn run_local<D: Decoder>(
     cfg: &SampleCfg,
     quantum: usize,
     cache: Option<&PrefixCache>,
+    spec: Option<&SpecCfg>,
     out: &mut [Option<Completion>],
 ) -> Result<()> {
     if decoders.is_empty() && !jobs.is_empty() {
@@ -676,7 +915,7 @@ pub(crate) fn run_local<D: Decoder>(
             }
             let Some(dec) = free.pop_front() else { break };
             let job = pending.pop_front().unwrap();
-            ready.push_back(admit(dec, job, cfg, cache)?);
+            ready.push_back(admit(dec, job, cfg, cache, spec)?);
         }
         let Some(mut seq) = ready.pop_front() else { break };
         match advance(&mut seq, tok, cfg, quantum)? {
@@ -755,7 +994,7 @@ fn run_parallel(
 
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| worker(&shared, &wake, tok, cfg, cache));
+            s.spawn(|| worker(&shared, &wake, tok, cfg, cache, None));
         }
     });
 
@@ -806,6 +1045,7 @@ fn worker(
     tok: &Tokenizer,
     cfg: &ServeCfg,
     cache: Option<&PrefixCache>,
+    counters: Option<&SpecCounters>,
 ) {
     let _guard = PanicGuard { shared, wake };
     loop {
@@ -849,9 +1089,10 @@ fn worker(
 
         // Heavy work (prefill / quantum of decode steps) off the lock.
         let stepped = match work {
-            Work::Admit(job, dec) => admit(dec, job, &cfg.sample, cache).and_then(|mut seq| {
-                advance(&mut seq, tok, &cfg.sample, cfg.quantum).map(|f| (seq, f))
-            }),
+            Work::Admit(job, dec) => admit(dec, job, &cfg.sample, cache, cfg.speculation.as_ref())
+                .and_then(|mut seq| {
+                    advance(&mut seq, tok, &cfg.sample, cfg.quantum).map(|f| (seq, f))
+                }),
             Work::Step(mut seq) => {
                 advance(&mut seq, tok, &cfg.sample, cfg.quantum).map(|f| (seq, f))
             }
@@ -873,6 +1114,10 @@ fn worker(
                 // collect into `done`.
                 let streamed = seq.stream.is_some();
                 let (dec, ix, completion) = complete(seq, tok, finish);
+                // Scheduler-wide acceptance counters (GET /healthz).
+                if let (Some(c), Some(st)) = (counters, completion.spec.as_ref()) {
+                    c.add(st);
+                }
                 let mut g = shared.lock().expect("scheduler lock poisoned");
                 if !streamed {
                     g.done.push((ix, completion));
@@ -911,6 +1156,9 @@ struct ResidentInner {
     /// long as the scheduler, so every submission can hit heads earlier
     /// submissions paid for.
     cache: Option<Arc<PrefixCache>>,
+    /// Aggregate speculative-decoding counters across every finished
+    /// request (zeros while speculation is off) — `GET /healthz`.
+    spec_counters: Arc<SpecCounters>,
 }
 
 /// A resident continuous-batching scheduler: the worker pool stays up
@@ -940,6 +1188,7 @@ impl StreamScheduler {
         let free = (0..cfg.max_active).map(|_| model.session()).collect();
         let cache = (cfg.prefix_cache_size > 0)
             .then(|| Arc::new(PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size)));
+        let spec_counters = Arc::new(SpecCounters::new());
         let inner = Arc::new(ResidentInner {
             shared: Mutex::new(Shared {
                 pending: VecDeque::new(),
@@ -955,6 +1204,7 @@ impl StreamScheduler {
             cfg,
             model,
             cache,
+            spec_counters,
         });
         let workers = (0..inner.cfg.threads)
             .map(|_| {
@@ -966,6 +1216,7 @@ impl StreamScheduler {
                         &inner.tok,
                         &inner.cfg,
                         inner.cache.as_deref(),
+                        Some(&inner.spec_counters),
                     )
                 })
             })
@@ -989,6 +1240,13 @@ impl StreamScheduler {
     /// [`stats`](PrefixCache::stats) feed `GET /healthz`.
     pub fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
         self.inner.cache.as_ref()
+    }
+
+    /// Aggregate speculative-decoding acceptance counters across every
+    /// request this scheduler has finished (all zeros while
+    /// [`ServeCfg::speculation`] is off) — `GET /healthz`.
+    pub fn spec_stats(&self) -> SpecStats {
+        self.inner.spec_counters.snapshot()
     }
 
     /// Submit one request; its events stream back on the returned
@@ -1017,6 +1275,7 @@ impl StreamScheduler {
                     completion: String::new(),
                     tokens_generated: 0,
                     cached_prefix_len: 0,
+                    spec: None,
                     finish: FinishReason::Rejected(format!("{e:#}")),
                 };
                 let _ = tx.send(TokenEvent::Done { text_delta: String::new(), completion });
@@ -1188,7 +1447,7 @@ mod tests {
         ];
         let mut out = vec![None, None, None];
         let mut sessions = vec![model.session()]; // max_active = 1: saturated
-        run_local(&mut sessions, &tok, jobs, &sample, 2, None, &mut out).unwrap();
+        run_local(&mut sessions, &tok, jobs, &sample, 2, None, None, &mut out).unwrap();
         let out: Vec<Completion> = out.into_iter().map(Option::unwrap).collect();
         assert_ne!(out[0].finish, FinishReason::TimedOut);
         assert!(out[0].tokens_generated > 0);
@@ -1343,7 +1602,7 @@ mod tests {
         };
         let mut out = vec![None];
         let mut sessions = vec![model.session()];
-        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, &mut out).unwrap();
+        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, None, &mut out).unwrap();
         let c = out.pop().unwrap().unwrap();
         assert_eq!(c.finish, FinishReason::Cancelled);
         assert_eq!(c.tokens_generated, 1, "dead sink is noticed after one token");
@@ -1361,7 +1620,7 @@ mod tests {
         };
         let mut out = vec![None];
         let mut sessions = vec![model.session()];
-        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, &mut out).unwrap();
+        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, None, &mut out).unwrap();
         let c = out.pop().unwrap().unwrap();
         assert_ne!(c.finish, FinishReason::Cancelled);
         assert!(c.tokens_generated > 1);
@@ -1414,6 +1673,66 @@ mod tests {
             "identical heads must share entries, got {}",
             stats.entries
         );
+    }
+
+    /// Speculative decoding is a pure accelerator: byte-identical
+    /// completions with it on or off, for both drafters and both
+    /// driver shapes, with acceptance accounting on the completion.
+    #[test]
+    fn speculative_serving_matches_plain_serving() {
+        use crate::infer::speculate::DrafterKind;
+        let tok = tok();
+        let model = model(tok.vocab_size(), 64);
+        let reqs = || {
+            vec![
+                Request::new(0, "Once upon a time"),
+                Request::new(1, "Lily likes cats and dogs"),
+                Request::new(2, "Once upon a time"),
+            ]
+        };
+        let base = ServeCfg {
+            max_active: 2,
+            quantum: 2,
+            prefix_cache_size: 0,
+            sample: SampleCfg { max_new_tokens: 10, seed: 7, ..Default::default() },
+            ..Default::default()
+        };
+        for threads in [1usize, 2] {
+            let plain = serve(
+                &model,
+                &tok,
+                reqs(),
+                &ServeCfg { threads, ..base.clone() },
+            )
+            .unwrap();
+            assert!(plain.iter().all(|c| c.spec.is_none()), "speculation off ⇒ no stats");
+            for drafter in [
+                DrafterKind::NGram { max_ngram: 3 },
+                DrafterKind::Shallow { layers: 0 },
+            ] {
+                let cfg = ServeCfg {
+                    threads,
+                    speculation: Some(SpecCfg { drafter, draft_len: 3 }),
+                    ..base.clone()
+                };
+                let spec = serve(&model, &tok, reqs(), &cfg).unwrap();
+                for (p, s) in plain.iter().zip(&spec) {
+                    assert_eq!(
+                        p.completion, s.completion,
+                        "{drafter:?} threads={threads}: speculation changed text"
+                    );
+                    assert_eq!(p.finish, s.finish);
+                    assert_eq!(p.tokens_generated, s.tokens_generated);
+                    let st = s.spec.expect("speculation on ⇒ stats present");
+                    assert!(st.rounds >= 1);
+                    assert_eq!(
+                        st.emitted as usize, s.tokens_generated,
+                        "every emitted token is accounted to a round"
+                    );
+                    assert!(st.accepted <= st.drafted);
+                }
+            }
+        }
     }
 
     /// Invalid prompts reject through the stream itself (uniform with

@@ -11,7 +11,9 @@
 //!   "tokens_generated": 32, "cached_prefix_len": 12, "finish": "eot"}`
 //!   (+ `"error"` detail when `finish` is `"rejected"`;
 //!   `cached_prefix_len` counts prompt tokens served from the shared
-//!   prefix cache — 0 on a cold prefill).
+//!   prefix cache — 0 on a cold prefill; + `"spec": {"rounds": ..,
+//!   "drafted": .., "accepted": .., "emitted": ..}` when the server
+//!   decoded the request speculatively).
 //! * stream events (one SSE `data:` payload each):
 //!   `{"request_id": 7, "token": 512, "text_delta": "..."}` per token,
 //!   then `{"request_id": 7, "done": true, "text_delta": "...",
@@ -19,6 +21,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::infer::speculate::SpecStats;
 use crate::serve::{Completion, FinishReason, TokenEvent};
 use crate::util::json::{self, Value};
 
@@ -104,6 +107,17 @@ pub fn completion_to_json(c: &Completion) -> Value {
         ("cached_prefix_len", json::num(c.cached_prefix_len as f64)),
         ("finish", json::s(c.finish.label())),
     ];
+    if let Some(s) = &c.spec {
+        pairs.push((
+            "spec",
+            json::obj(vec![
+                ("rounds", json::num(s.rounds as f64)),
+                ("drafted", json::num(s.drafted as f64)),
+                ("accepted", json::num(s.accepted as f64)),
+                ("emitted", json::num(s.emitted as f64)),
+            ]),
+        ));
+    }
     if let FinishReason::Rejected(why) = &c.finish {
         pairs.push(("error", json::s(why)));
     }
@@ -115,6 +129,15 @@ pub fn completion_from_json(v: &Value) -> Result<Completion> {
         v.get("finish").as_str().ok_or_else(|| anyhow!("missing 'finish'"))?,
         v.get("error").as_str(),
     )?;
+    let spec = match v.get("spec") {
+        Value::Null => None,
+        s => Some(SpecStats {
+            rounds: s.get("rounds").as_usize().unwrap_or(0) as u64,
+            drafted: s.get("drafted").as_usize().unwrap_or(0) as u64,
+            accepted: s.get("accepted").as_usize().unwrap_or(0) as u64,
+            emitted: s.get("emitted").as_usize().unwrap_or(0) as u64,
+        }),
+    };
     Ok(Completion {
         request_id: v
             .get("request_id")
@@ -124,6 +147,7 @@ pub fn completion_from_json(v: &Value) -> Result<Completion> {
         completion: v.get("completion").as_str().unwrap_or("").to_string(),
         tokens_generated: v.get("tokens_generated").as_usize().unwrap_or(0),
         cached_prefix_len: v.get("cached_prefix_len").as_usize().unwrap_or(0),
+        spec,
         finish,
     })
 }
@@ -207,6 +231,7 @@ mod tests {
                 completion: "some text\nwith \"quotes\"".into(),
                 tokens_generated: 5,
                 cached_prefix_len: 4,
+                spec: Some(SpecStats { rounds: 2, drafted: 6, accepted: 4, emitted: 6 }),
                 finish: finish.clone(),
             };
             let text = completion_to_json(&c).to_string();
@@ -215,7 +240,14 @@ mod tests {
             assert_eq!(back.completion, c.completion);
             assert_eq!(back.request_id, 3);
             assert_eq!(back.cached_prefix_len, 4);
+            assert_eq!(back.spec, c.spec, "speculation stats must survive the wire");
         }
+        // Absent "spec" (speculation off, or an old server) stays None.
+        let bare = completion_from_json(
+            &json::parse(r#"{"request_id": 1, "finish": "eot"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(bare.spec, None);
     }
 
     #[test]
@@ -237,6 +269,7 @@ mod tests {
                 completion: "full".into(),
                 tokens_generated: 2,
                 cached_prefix_len: 0,
+                spec: None,
                 finish: FinishReason::Eot,
             },
         };

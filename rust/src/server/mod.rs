@@ -339,6 +339,24 @@ fn handle_health(inner: &ServerInner, w: &mut impl Write, keep_alive: bool) -> R
             ]),
         ));
     }
+    // Speculative-decoding observability: accepted tokens per verify
+    // round is the number that says whether drafting is paying off.
+    if let Some(spec) = &inner.sched.cfg().speculation {
+        let s = inner.sched.spec_stats();
+        pairs.push((
+            "speculation",
+            json::obj(vec![
+                ("drafter", json::s(spec.drafter.label())),
+                ("draft_len", json::num(spec.draft_len as f64)),
+                ("rounds", json::num(s.rounds as f64)),
+                ("drafted", json::num(s.drafted as f64)),
+                ("accepted", json::num(s.accepted as f64)),
+                ("emitted", json::num(s.emitted as f64)),
+                ("acceptance_rate", json::num(s.acceptance_rate())),
+                ("tokens_per_round", json::num(s.emitted_per_round())),
+            ]),
+        ));
+    }
     let body = json::obj(pairs).to_string();
     http::write_response(w, 200, "OK", "application/json", body.as_bytes(), keep_alive)
 }

@@ -1,0 +1,251 @@
+//! Property/fuzz tests for the hand-rolled HTTP/1.1 wire layer
+//! (`server::http`): request parsing must survive arbitrary read-split
+//! boundaries, byte soup, heads/bodies at exactly the caps, and
+//! malformed chunked encodings — always a clean `Ok`/`Err`, never a
+//! panic, never unbounded buffering.  (Hangs are structurally
+//! impossible here: every reader is in-memory, so the risk surface is
+//! panics and cap bypasses.)
+
+use std::io::{BufReader, Cursor, Read};
+
+use hsm::server::http::{read_chunks, read_request, MAX_BODY_BYTES, MAX_HEAD_BYTES};
+use hsm::util::prop;
+use hsm::util::rng::Rng;
+
+/// A reader that hands back the payload in pre-chosen fragment sizes,
+/// simulating TCP delivering a request in arbitrary pieces.
+struct Shreds {
+    data: Vec<u8>,
+    pos: usize,
+    cuts: Vec<usize>,
+    i: usize,
+}
+
+impl Shreds {
+    fn new(data: Vec<u8>, rng: &mut Rng) -> Self {
+        let cuts = (0..64).map(|_| 1 + rng.below(13)).collect();
+        Shreds { data, pos: 0, cuts, i: 0 }
+    }
+}
+
+impl Read for Shreds {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        let want = self.cuts.get(self.i).copied().unwrap_or(usize::MAX).max(1);
+        self.i += 1;
+        let n = want.min(buf.len()).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Valid requests parse identically however the bytes are split across
+/// reads (random fragment sizes, tiny BufReader capacities).
+#[test]
+fn prop_request_parsing_is_split_invariant() {
+    prop::check_n("http-split-invariance", 48, |rng| {
+        let n_headers = rng.below(6);
+        let mut headers = String::new();
+        let mut names = Vec::new();
+        for h in 0..n_headers {
+            let name = format!("x-h{h}");
+            let value: String = (0..rng.below(20))
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            headers.push_str(&format!("{name}: {value}\r\n"));
+            names.push((name, value));
+        }
+        let body: Vec<u8> = (0..rng.below(64)).map(|_| rng.next_u64() as u8).collect();
+        let raw = format!(
+            "POST /v1/generate HTTP/1.1\r\n{headers}Content-Length: {}\r\n\r\n",
+            body.len()
+        );
+        let mut wire = raw.into_bytes();
+        wire.extend_from_slice(&body);
+
+        let cap = 1 + rng.below(17);
+        let mut r = BufReader::with_capacity(cap, Shreds::new(wire, rng));
+        let req = read_request(&mut r).unwrap().expect("valid request parses");
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.body, body);
+        for (name, value) in &names {
+            assert_eq!(req.header(name), Some(value.as_str()), "header {name} lost");
+        }
+    });
+}
+
+/// Arbitrary byte soup — printable garbage, raw bytes, truncations —
+/// must produce a clean result, never a panic.
+#[test]
+fn prop_garbage_never_panics_the_parser() {
+    prop::check_n("http-garbage", 96, |rng| {
+        let len = rng.below(200);
+        let data: Vec<u8> = (0..len)
+            .map(|_| match rng.below(4) {
+                // Bias toward protocol-ish bytes so parsing gets deep.
+                0 => *rng.pick(&[b'\r', b'\n', b':', b' ', b'/']),
+                1 => b"POST /v1 HTTP/1.1 Content-Length"[rng.below(32)],
+                _ => rng.next_u64() as u8,
+            })
+            .collect();
+        let cap = 1 + rng.below(9);
+        let mut r = BufReader::with_capacity(cap, Shreds::new(data, rng));
+        // Ok(Some), Ok(None) and Err are all acceptable; panics are not.
+        let _ = read_request(&mut r);
+    });
+}
+
+/// Truncated valid prefixes (connection died mid-request) never panic,
+/// never invent body bytes, and only report a clean EOF (`Ok(None)`)
+/// for the zero-byte cut — exercised at every cut point of a real
+/// request.  (An EOF exactly at a header boundary parses as a
+/// headerless request by design; a declared Content-Length must then
+/// still be honored exactly or the parse must error.)
+#[test]
+fn truncated_requests_fail_cleanly_at_every_byte() {
+    let full = b"POST /v1/generate HTTP/1.1\r\nContent-Type: application/json\r\n\
+                 Content-Length: 14\r\n\r\n{\"prompt\":\"a\"}";
+    for cut in 0..full.len() {
+        let mut r = Cursor::new(&full[..cut]);
+        match read_request(&mut r) {
+            Ok(None) => assert_eq!(cut, 0, "only an immediate EOF is a clean None"),
+            Ok(Some(req)) => {
+                if let Some(cl) = req.header("content-length") {
+                    assert_eq!(
+                        req.body.len(),
+                        cl.parse::<usize>().unwrap(),
+                        "cut {cut}: body must match the declared Content-Length"
+                    );
+                } else {
+                    assert!(req.body.is_empty(), "cut {cut}: no declared body, none read");
+                }
+            }
+            Err(_) => {}
+        }
+    }
+    let mut r = Cursor::new(&full[..]);
+    let req = read_request(&mut r).unwrap().expect("the untruncated request parses");
+    assert_eq!(req.body_str().unwrap(), "{\"prompt\":\"a\"}");
+}
+
+/// Heads and bodies exactly at their caps parse; content past the cap
+/// errors — and the error fires without buffering the excess.
+#[test]
+fn caps_are_exact_boundaries() {
+    // Head: request line + one fat header padded to land the head's
+    // total byte count exactly at the cap.
+    let head_with = |pad: usize| {
+        let s = format!("GET / HTTP/1.1\r\nx-pad: {}\r\n\r\n", "a".repeat(pad));
+        let n = s.len();
+        (s, n)
+    };
+    let base = head_with(0).1; // head size with an empty pad
+    let (at_cap, n) = head_with(MAX_HEAD_BYTES - base);
+    assert_eq!(n, MAX_HEAD_BYTES);
+    let req = read_request(&mut Cursor::new(at_cap.as_bytes())).unwrap();
+    assert!(req.is_some(), "a head of exactly {MAX_HEAD_BYTES} bytes parses");
+
+    // Header *content* crossing the cap must error (the size-capped
+    // reader cuts the line and the next read observes the exhausted
+    // budget) — and with real content beyond the cut, never misparse.
+    let (over, n) = head_with(MAX_HEAD_BYTES);
+    assert!(n > MAX_HEAD_BYTES);
+    assert!(
+        read_request(&mut Cursor::new(over.as_bytes())).is_err(),
+        "header content past the head cap must error"
+    );
+
+    // Body: exactly MAX_BODY_BYTES parses; one more is rejected from
+    // the Content-Length alone (no allocation of the oversized body).
+    let mut ok = format!("POST / HTTP/1.1\r\nContent-Length: {MAX_BODY_BYTES}\r\n\r\n")
+        .into_bytes();
+    let head_len = ok.len();
+    ok.resize(head_len + MAX_BODY_BYTES, b'x');
+    let req = read_request(&mut Cursor::new(&ok[..])).unwrap().unwrap();
+    assert_eq!(req.body.len(), MAX_BODY_BYTES);
+
+    let over = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+    assert!(read_request(&mut Cursor::new(over.as_bytes())).is_err());
+
+    // Nonsense Content-Length values error rather than default.
+    for bad in ["-1", "1e3", "0x10", "huge", "18446744073709551616"] {
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {bad}\r\n\r\nxx");
+        assert!(
+            read_request(&mut Cursor::new(raw.as_bytes())).is_err(),
+            "Content-Length {bad:?} must be rejected"
+        );
+    }
+}
+
+/// Malformed chunked encodings error cleanly in the client-side
+/// decoder: bad size lines, missing CRLF terminators, oversized chunks,
+/// truncation mid-chunk.
+#[test]
+fn malformed_chunked_encoding_errors_cleanly() {
+    let decode = |wire: &[u8]| {
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        let mut r = Cursor::new(wire.to_vec());
+        read_chunks(&mut r, |c| {
+            got.push(c.to_vec());
+            Ok(())
+        })
+        .map(|()| got)
+    };
+
+    // A valid two-chunk stream decodes (the baseline).
+    assert_eq!(
+        decode(b"3\r\nabc\r\n2\r\nde\r\n0\r\n\r\n").unwrap(),
+        vec![b"abc".to_vec(), b"de".to_vec()]
+    );
+    // Chunk-size extensions after ';' are tolerated.
+    assert!(decode(b"3;ext=1\r\nabc\r\n0\r\n\r\n").is_ok());
+
+    // Garbage size line.
+    assert!(decode(b"zz\r\nabc\r\n0\r\n\r\n").is_err());
+    // Negative / overflowing sizes.
+    assert!(decode(b"-3\r\nabc\r\n0\r\n\r\n").is_err());
+    assert!(decode(b"ffffffffffffffffff\r\nx\r\n0\r\n\r\n").is_err());
+    // Size past the body cap is refused before reading the payload.
+    let huge = format!("{:x}\r\n", MAX_BODY_BYTES + 1);
+    assert!(decode(huge.as_bytes()).is_err());
+    // Missing CRLF after the payload.
+    assert!(decode(b"3\r\nabcXX0\r\n\r\n").is_err());
+    // Truncation mid-chunk and mid-stream.
+    assert!(decode(b"5\r\nab").is_err());
+    assert!(decode(b"3\r\nabc\r\n").is_err(), "stream must end with a 0 chunk");
+    // Empty wire: connection closed before any chunk.
+    assert!(decode(b"").is_err());
+}
+
+/// Random chunk streams round-trip through write_chunk/read_chunks
+/// whatever the fragment boundaries (split-invariance on the client
+/// decode path).
+#[test]
+fn prop_chunk_roundtrip_is_split_invariant() {
+    use hsm::server::http::{finish_chunks, write_chunk};
+    prop::check_n("chunk-split-invariance", 48, |rng| {
+        let n = rng.below(5);
+        let chunks: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..1 + rng.below(40)).map(|_| rng.next_u64() as u8).collect())
+            .collect();
+        let mut wire = Vec::new();
+        for c in &chunks {
+            write_chunk(&mut wire, c).unwrap();
+        }
+        finish_chunks(&mut wire).unwrap();
+
+        let cap = 1 + rng.below(9);
+        let mut r = BufReader::with_capacity(cap, Shreds::new(wire, rng));
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        read_chunks(&mut r, |c| {
+            got.push(c.to_vec());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, chunks);
+    });
+}

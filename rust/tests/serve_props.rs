@@ -1,0 +1,272 @@
+//! Serving-infrastructure property and stress tests:
+//!
+//! * [`serve::PrefixCache`] invariants under random insert/lookup
+//!   sequences — the size bound always holds, a longest-prefix-match
+//!   result is always a true prefix that was actually inserted, with no
+//!   eviction the match is exactly the longest present prefix, and the
+//!   hit/miss/insertion/eviction counters stay consistent with the
+//!   observed operations.
+//! * [`serve::StreamScheduler`] shutdown/submit race: concurrent
+//!   `submit()` calls during a graceful drain either complete (their
+//!   streams still deliver a final `Done`) or return a clean error —
+//!   no deadlock, no stranded sinks.  Guarded by a watchdog so a
+//!   regression fails fast instead of hanging CI.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::SampleCfg;
+use hsm::infer::{weights, Decoder, Model, ModelWeights, SessionState};
+use hsm::serve::{PrefixCache, Request, ServeCfg, StreamScheduler};
+use hsm::tokenizer::Tokenizer;
+use hsm::util::prop;
+
+fn model(seed: u64) -> Arc<Model> {
+    let layers = vec![
+        LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+        LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+    ];
+    let m = Manifest::synthetic("hsm_ab", layers, 8, 64, 300, 1);
+    let flat = weights::seeded_flat(&m, seed);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn tok() -> Tokenizer {
+    let text = hsm::corpus::generate(9, 80);
+    hsm::tokenizer::trainer::train(&text, 300).unwrap()
+}
+
+/// Snapshots for every prefix of `base` (index i → prefix of length
+/// i+1), taken from one incremental prefill so the test's insert cost
+/// is linear, not quadratic.
+fn prefix_snapshots(model: &Arc<Model>, base: &[u32]) -> Vec<SessionState> {
+    let mut sess = model.session();
+    let mut snaps = Vec::with_capacity(base.len());
+    for &t in base {
+        sess.prefill(&[t]).unwrap();
+        snaps.push(sess.snapshot().unwrap());
+    }
+    snaps
+}
+
+/// Random insert/lookup sequences against small capacities: the size
+/// bound, true-prefix property, position consistency and counter
+/// arithmetic all hold at every step.
+#[test]
+fn prop_prefix_cache_invariants_under_random_ops() {
+    let md = model(1);
+    let fp = md.fingerprint();
+    // Two base sequences sharing a head, so lookups exercise real
+    // longest-prefix competition.
+    let base_a: Vec<u32> = (0..10u32).map(|i| (i * 37 + 11) % 300).collect();
+    let base_b: Vec<u32> = {
+        let mut b = base_a.clone();
+        for x in b.iter_mut().skip(5) {
+            *x = (*x + 101) % 300;
+        }
+        b
+    };
+    let snaps_a = prefix_snapshots(&md, &base_a);
+    let snaps_b = prefix_snapshots(&md, &base_b);
+
+    prop::check_n("prefix-cache-invariants", 24, |rng| {
+        let capacity = 1 + rng.below(5);
+        let cache = PrefixCache::new(fp, capacity);
+        let mut ever_inserted: HashSet<Vec<u32>> = HashSet::new();
+        let mut lookups = 0u64;
+        let mut insert_ops = 0u64;
+        for _ in 0..40 {
+            let (base, snaps) = if rng.chance(0.5) {
+                (&base_a, &snaps_a)
+            } else {
+                (&base_b, &snaps_b)
+            };
+            if rng.chance(0.5) {
+                // Insert a random prefix (occasionally under a foreign
+                // fingerprint, which must be ignored).
+                let len = 1 + rng.below(base.len());
+                let foreign = rng.chance(0.2);
+                let use_fp = if foreign { fp ^ 0xdead } else { fp };
+                cache.insert(use_fp, &base[..len], snaps[len - 1].clone());
+                if !foreign {
+                    insert_ops += 1;
+                    ever_inserted.insert(base[..len].to_vec());
+                }
+            } else {
+                let len = 1 + rng.below(base.len());
+                lookups += 1;
+                if let Some((hit_len, state)) = cache.lookup(fp, &base[..len]) {
+                    assert!(hit_len <= len, "match longer than the query");
+                    assert!(
+                        ever_inserted.contains(&base[..hit_len].to_vec()),
+                        "hit on a prefix that was never inserted"
+                    );
+                    assert_eq!(
+                        state.position(),
+                        hit_len,
+                        "snapshot position must sit at the prefix boundary"
+                    );
+                }
+            }
+            let s = cache.stats();
+            assert!(s.entries <= capacity, "size bound violated: {} > {capacity}", s.entries);
+            assert_eq!(s.entries, cache.len());
+            assert_eq!(s.hits + s.misses, lookups, "every lookup is a hit or a miss");
+            // Duplicate inserts refresh without counting; an evicted key
+            // re-inserted counts again — so insertions is bounded by the
+            // op count below and the distinct-key count above.
+            assert!(
+                s.insertions <= insert_ops,
+                "insertions {} cannot exceed accepted insert ops {insert_ops}",
+                s.insertions
+            );
+            assert!(
+                s.insertions >= ever_inserted.len() as u64,
+                "every distinct key's first insert must count"
+            );
+            assert_eq!(
+                s.entries as u64,
+                s.insertions - s.evictions,
+                "entries must equal insertions minus evictions"
+            );
+        }
+    });
+}
+
+/// With capacity ≥ every distinct prefix (no eviction pressure), the
+/// cache's longest-prefix-match is *exactly* the longest inserted
+/// prefix of the query — pinned against a shadow set.
+#[test]
+fn prop_prefix_cache_longest_match_is_exact_without_eviction() {
+    let md = model(2);
+    let fp = md.fingerprint();
+    let base: Vec<u32> = (0..12u32).map(|i| (i * 53 + 7) % 300).collect();
+    let snaps = prefix_snapshots(&md, &base);
+
+    prop::check_n("prefix-cache-longest-match", 24, |rng| {
+        let cache = PrefixCache::new(fp, 64); // never evicts here
+        let mut shadow: HashSet<usize> = HashSet::new(); // inserted prefix lengths
+        for _ in 0..30 {
+            if rng.chance(0.4) {
+                let len = 1 + rng.below(base.len());
+                cache.insert(fp, &base[..len], snaps[len - 1].clone());
+                shadow.insert(len);
+            } else {
+                let qlen = 1 + rng.below(base.len());
+                let want = shadow.iter().copied().filter(|&l| l <= qlen).max();
+                let got = cache.lookup(fp, &base[..qlen]).map(|(l, _)| l);
+                assert_eq!(got, want, "longest-prefix-match diverged from the shadow set");
+            }
+        }
+        assert_eq!(cache.stats().evictions, 0, "capacity 64 must never evict here");
+    });
+}
+
+/// Heavy eviction churn: hammer a capacity-2 cache with distinct
+/// prefixes; the bound and counters must hold and hits must still
+/// return true prefixes.
+#[test]
+fn prefix_cache_eviction_churn_stays_bounded_and_consistent() {
+    let md = model(3);
+    let fp = md.fingerprint();
+    let base: Vec<u32> = (0..10u32).map(|i| (i * 29 + 3) % 300).collect();
+    let snaps = prefix_snapshots(&md, &base);
+    let cache = PrefixCache::new(fp, 2);
+    for round in 0..20 {
+        for len in 1..=base.len() {
+            cache.insert(fp, &base[..len], snaps[len - 1].clone());
+            assert!(cache.len() <= 2, "round {round}: capacity exceeded");
+        }
+    }
+    let s = cache.stats();
+    assert_eq!(s.entries as u64, s.insertions - s.evictions);
+    assert!(s.evictions > 0, "churn must evict");
+    let (len, state) = cache.lookup(fp, &base).expect("full base must hit something");
+    assert!(len >= 1 && len <= base.len());
+    assert_eq!(state.position(), len);
+}
+
+/// Concurrent `submit()` during graceful shutdown: every call either
+/// returns a stream that still finishes with a `Done` event, or a
+/// clean error — and the whole dance completes well inside the
+/// watchdog budget (no deadlock, no stranded sinks).
+#[test]
+fn stream_scheduler_shutdown_submit_race_is_clean() {
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let scenario = std::thread::spawn(move || {
+        let tok = tok();
+        let md = model(4);
+        let cfg = ServeCfg {
+            max_active: 2,
+            threads: 2,
+            quantum: 1,
+            prefix_cache_size: 4,
+            sample: SampleCfg { max_new_tokens: 4, seed: 7, ..Default::default() },
+            ..Default::default()
+        };
+        let sched = Arc::new(StreamScheduler::start(md, tok, cfg).unwrap());
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let rejected = Arc::new(AtomicUsize::new(0));
+        let stranded = Arc::new(AtomicUsize::new(0));
+
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let sched = Arc::clone(&sched);
+                let accepted = Arc::clone(&accepted);
+                let rejected = Arc::clone(&rejected);
+                let stranded = Arc::clone(&stranded);
+                s.spawn(move || {
+                    for i in 0..40u64 {
+                        match sched.submit(Request::new(t * 1000 + i, "Once upon a time")) {
+                            Ok(stream) => {
+                                accepted.fetch_add(1, Ordering::Relaxed);
+                                // An accepted stream must still deliver
+                                // its Done through the graceful drain.
+                                if stream.wait(|_| {}).is_none() {
+                                    stranded.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => {
+                                rejected.fetch_add(1, Ordering::Relaxed);
+                                // Once shutdown, submission stays closed;
+                                // stop hammering.
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+            // Let the submitters get going, then pull the plug
+            // mid-flight.
+            std::thread::sleep(Duration::from_millis(30));
+            sched.shutdown();
+        });
+
+        let a = accepted.load(Ordering::Relaxed);
+        let r = rejected.load(Ordering::Relaxed);
+        let s = stranded.load(Ordering::Relaxed);
+        assert!(a > 0, "some submissions must land before shutdown");
+        assert_eq!(s, 0, "accepted streams must never be stranded ({a} accepted)");
+        // Post-shutdown, a fresh submit is a clean rejection.
+        assert!(sched.submit(Request::new(999_999, "hi")).is_err());
+        (a, r)
+    });
+
+    // Watchdog: the scenario must finish comfortably within CI budgets;
+    // a deadlock fails the test instead of hanging the job.
+    let handle = std::thread::spawn(move || {
+        let result = scenario.join();
+        let _ = done_tx.send(result);
+    });
+    match done_rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(Ok((accepted, rejected))) => {
+            println!("shutdown/submit race: {accepted} accepted, {rejected} rejected");
+            handle.join().unwrap();
+        }
+        Ok(Err(e)) => std::panic::resume_unwind(e),
+        Err(_) => panic!("shutdown/submit race deadlocked (watchdog fired)"),
+    }
+}

@@ -1,0 +1,389 @@
+//! Speculative-decoding parity: decode with speculation on must be
+//! **byte-identical** to plain decode — for every mixer kind, both
+//! drafters, greedy and sampled paths — because the verify loop samples
+//! every emitted token from the full model's logits with the request's
+//! own RNG stream (the drafter only decides how many tokens a round
+//! attempts).  Plus property tests that randomize draft-block length,
+//! sampling shape, and budgets (mid-block `max_tokens` edges), cancel
+//! edges on streamed speculative requests, and the acceptance counters
+//! surfaced per request and on `GET /healthz`.
+
+use std::sync::Arc;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::SampleCfg;
+use hsm::infer::{weights, DrafterKind, Model, ModelWeights, SpecCfg};
+use hsm::serve::{serve, FinishReason, Request, ServeCfg, StreamScheduler, TokenEvent};
+use hsm::server::{api::GenerateRequest, client, HttpServer};
+use hsm::tokenizer::Tokenizer;
+use hsm::util::prop;
+
+const KINDS: &[&str] = &["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"];
+
+fn layers_for(kind: &str) -> Vec<LayerInfo> {
+    match kind {
+        "ab" => vec![
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![1, 2, 4, 8], ffn: 24 },
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![2, 4, 8, 16], ffn: 24 },
+        ],
+        _ => vec![
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![1], ffn: 24 },
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![3], ffn: 24 },
+        ],
+    }
+}
+
+fn model_for(kind: &str, ctx: usize, vocab: usize) -> Arc<Model> {
+    let m = Manifest::synthetic(kind, layers_for(kind), 16, ctx, vocab, 2);
+    let flat = weights::seeded_flat(&m, 31);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn tok() -> Tokenizer {
+    let text = hsm::corpus::generate(9, 80);
+    hsm::tokenizer::trainer::train(&text, 300).unwrap()
+}
+
+fn drafters() -> [DrafterKind; 3] {
+    [
+        DrafterKind::NGram { max_ngram: 3 },
+        DrafterKind::Shallow { layers: 0 },
+        // Full-depth self-draft: the drafter is the model, so greedy
+        // acceptance is total — the strongest stress on the rewind path.
+        DrafterKind::Shallow { layers: 2 },
+    ]
+}
+
+fn requests() -> Vec<Request> {
+    [
+        "Once upon a time",
+        "Lily likes cats and dogs. She asked her mom",
+        "Once upon a time",
+    ]
+    .iter()
+    .enumerate()
+    .map(|(i, p)| Request::new(i as u64, p))
+    .collect()
+}
+
+/// Compare speculative and plain serving on completion text, finish
+/// reason and token counts, and sanity-check the acceptance stats.
+fn assert_spec_parity(model: &Arc<Model>, tok: &Tokenizer, base: &ServeCfg, what: &str) {
+    let plain = serve(model, tok, requests(), base).unwrap();
+    assert!(plain.iter().all(|c| c.spec.is_none()));
+    for drafter in drafters() {
+        for draft_len in [2usize, 5] {
+            let cfg = ServeCfg {
+                speculation: Some(SpecCfg { drafter, draft_len }),
+                ..base.clone()
+            };
+            let spec = serve(model, tok, requests(), &cfg).unwrap();
+            for (p, s) in plain.iter().zip(&spec) {
+                assert_eq!(
+                    p.completion, s.completion,
+                    "{what} {drafter:?} draft_len={draft_len}: speculation changed text"
+                );
+                assert_eq!(p.finish, s.finish, "{what} {drafter:?} draft_len={draft_len}");
+                assert_eq!(p.tokens_generated, s.tokens_generated);
+                let st = s.spec.expect("speculation on ⇒ per-request stats");
+                assert_eq!(st.emitted as usize, s.tokens_generated);
+                assert!(st.accepted <= st.drafted);
+                // Every round but the last emits at least one token (a
+                // final round may emit zero when its first sample is EOT).
+                assert!(st.rounds as usize <= s.tokens_generated + 1);
+                assert!(st.rounds >= 1);
+            }
+        }
+    }
+}
+
+/// Byte parity for all 7 mixer kinds × both drafters × greedy and
+/// sampled decoding, on both driver shapes.
+#[test]
+fn speculative_decode_is_byte_identical_for_every_mixer_kind() {
+    let tok = tok();
+    for kind in KINDS {
+        let model = model_for(kind, 64, tok.vocab_size());
+        for temperature in [0.0f32, 0.8] {
+            let base = ServeCfg {
+                max_active: 2,
+                threads: 1,
+                quantum: 3,
+                prefix_cache_size: 0,
+                sample: SampleCfg {
+                    temperature,
+                    top_k: 8,
+                    max_new_tokens: 8,
+                    seed: 11,
+                    stop_at_eot: true,
+                },
+                ..Default::default()
+            };
+            assert_spec_parity(&model, &tok, &base, &format!("{kind} t={temperature}"));
+        }
+    }
+    // Threaded driver on one representative HSM kind and the hybrid
+    // attention kind (whose snapshots carry growing KV caches).
+    for kind in ["ab", "attn"] {
+        let model = model_for(kind, 64, tok.vocab_size());
+        let base = ServeCfg {
+            max_active: 2,
+            threads: 2,
+            quantum: 2,
+            prefix_cache_size: 8,
+            sample: SampleCfg {
+                temperature: 0.8,
+                top_k: 8,
+                max_new_tokens: 8,
+                seed: 5,
+                stop_at_eot: true,
+            },
+            ..Default::default()
+        };
+        assert_spec_parity(&model, &tok, &base, &format!("{kind} threaded"));
+    }
+}
+
+/// Tight budgets force verify rounds to end mid-block: the emitted
+/// count and finish reason must still match plain decoding exactly.
+#[test]
+fn mid_block_max_tokens_edges_stay_byte_exact() {
+    let tok = tok();
+    let model = model_for("ab", 64, tok.vocab_size());
+    for budget in 1usize..=5 {
+        for draft_len in [1usize, 3, 7] {
+            let base = ServeCfg {
+                max_active: 1,
+                threads: 1,
+                quantum: 2,
+                prefix_cache_size: 0,
+                sample: SampleCfg {
+                    temperature: 0.8,
+                    top_k: 8,
+                    max_new_tokens: budget,
+                    seed: 3,
+                    stop_at_eot: false, // force the budget to be the stop
+                },
+                ..Default::default()
+            };
+            let plain = serve(&model, &tok, requests(), &base).unwrap();
+            let cfg = ServeCfg {
+                speculation: Some(SpecCfg {
+                    drafter: DrafterKind::NGram { max_ngram: 3 },
+                    draft_len,
+                }),
+                ..base
+            };
+            let spec = serve(&model, &tok, requests(), &cfg).unwrap();
+            for (p, s) in plain.iter().zip(&spec) {
+                assert_eq!(p.completion, s.completion, "budget={budget} draft_len={draft_len}");
+                assert_eq!(p.finish, s.finish);
+                assert_eq!(s.finish, FinishReason::MaxTokens);
+                assert_eq!(s.tokens_generated, budget);
+            }
+        }
+    }
+}
+
+/// Property: random draft lengths, sampling shapes, budgets, quanta and
+/// prompts — speculative serving is byte-identical to plain serving
+/// (run on an HSM kind and the hybrid attention kind).
+#[test]
+fn prop_random_speculation_parity() {
+    let tok = tok();
+    let words = ["Once", "upon", "a", "time", "Lily", "likes", "cats", "and", "dogs", "Jack"];
+    for kind in ["ab", "attn"] {
+        let model = model_for(kind, 48, tok.vocab_size());
+        prop::check_n(&format!("spec-parity-{kind}"), 16, |rng| {
+            let n_words = 1 + rng.below(8);
+            let prompt =
+                (0..n_words).map(|_| *rng.pick(&words)).collect::<Vec<_>>().join(" ");
+            let sample = SampleCfg {
+                temperature: *rng.pick(&[0.0f32, 0.7, 1.1]),
+                top_k: *rng.pick(&[0usize, 5, 40]),
+                max_new_tokens: 1 + rng.below(14),
+                seed: rng.next_u64(),
+                stop_at_eot: rng.chance(0.5),
+            };
+            let base = ServeCfg {
+                max_active: 1 + rng.below(2),
+                threads: 1,
+                quantum: 1 + rng.below(4),
+                prefix_cache_size: *rng.pick(&[0usize, 8]),
+                sample,
+                ..Default::default()
+            };
+            let drafter = if rng.chance(0.5) {
+                DrafterKind::NGram { max_ngram: 1 + rng.below(4) }
+            } else {
+                DrafterKind::Shallow { layers: rng.below(3) }
+            };
+            let reqs = || {
+                vec![Request::new(0, &prompt), Request::new(1, &prompt)]
+            };
+            let plain = serve(&model, &tok, reqs(), &base).unwrap();
+            let cfg = ServeCfg {
+                speculation: Some(SpecCfg { drafter, draft_len: 1 + rng.below(8) }),
+                ..base
+            };
+            let spec = serve(&model, &tok, reqs(), &cfg).unwrap();
+            for (p, s) in plain.iter().zip(&spec) {
+                assert_eq!(p.completion, s.completion, "{drafter:?}");
+                assert_eq!(p.finish, s.finish);
+                assert_eq!(p.tokens_generated, s.tokens_generated);
+            }
+        });
+    }
+}
+
+/// Dropping a speculative stream mid-decode cancels it without
+/// perturbing siblings, and a huge-budget abandoned speculative stream
+/// never starves the next request (cancel fires inside a verify round).
+#[test]
+fn speculative_streams_cancel_cleanly_mid_block() {
+    let tok = tok();
+    let model = model_for("ab", 128, tok.vocab_size());
+    let cfg = ServeCfg {
+        max_active: 1,
+        threads: 1,
+        quantum: 1,
+        prefix_cache_size: 0,
+        speculation: Some(SpecCfg {
+            drafter: DrafterKind::NGram { max_ngram: 3 },
+            draft_len: 4,
+        }),
+        sample: SampleCfg {
+            max_new_tokens: 100,
+            seed: 5,
+            stop_at_eot: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let sched = StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).unwrap();
+    let abandoned = sched.submit(Request::new(0, "Once upon a time")).unwrap();
+    let first = abandoned.recv();
+    assert!(matches!(first, Some(TokenEvent::Token { .. })));
+    drop(abandoned);
+
+    let survivor = sched.submit(Request::new(1, "Lily likes cats")).unwrap();
+    let done = survivor.wait(|_| {}).expect("survivor finishes");
+    assert_ne!(done.finish, FinishReason::Cancelled);
+    assert!(done.tokens_generated > 0);
+    sched.shutdown();
+}
+
+/// Streamed speculative text is byte-identical to batch plain text, and
+/// the scheduler + `/healthz` report acceptance counters.
+#[test]
+fn streamed_speculation_matches_plain_and_reports_counters() {
+    let tok = tok();
+    let model = model_for("ab", 64, tok.vocab_size());
+    let sample =
+        SampleCfg { temperature: 0.8, top_k: 8, max_new_tokens: 8, seed: 9, stop_at_eot: true };
+    let plain_cfg = ServeCfg {
+        max_active: 2,
+        threads: 1,
+        quantum: 2,
+        prefix_cache_size: 0,
+        sample: sample.clone(),
+        ..Default::default()
+    };
+    let reference = serve(&model, &tok, requests(), &plain_cfg).unwrap();
+
+    let spec_cfg = ServeCfg {
+        speculation: Some(SpecCfg {
+            drafter: DrafterKind::NGram { max_ngram: 3 },
+            draft_len: 3,
+        }),
+        threads: 2,
+        ..plain_cfg
+    };
+    let sched =
+        Arc::new(StreamScheduler::start(Arc::clone(&model), tok.clone(), spec_cfg).unwrap());
+    let server = HttpServer::bind("127.0.0.1:0", Arc::clone(&sched)).unwrap();
+    let addr = server.local_addr().to_string();
+
+    for (i, want) in reference.iter().enumerate() {
+        let mut req = GenerateRequest::new(&want.prompt);
+        req.id = Some(i as u64);
+        let got = client::generate(&addr, &req).unwrap();
+        assert_eq!(got.completion, want.completion, "HTTP speculative decode diverged");
+        let st = got.spec.expect("speculative responses carry stats over the wire");
+        assert_eq!(st.emitted as usize, got.tokens_generated);
+    }
+
+    let agg = sched.spec_stats();
+    assert!(agg.rounds >= 1, "scheduler-wide counters must accumulate");
+    assert_eq!(agg.emitted as usize, reference.iter().map(|c| c.tokens_generated).sum::<usize>());
+
+    let v = client::health(&addr).unwrap();
+    let spec = v.get("speculation");
+    assert_eq!(spec.get("drafter").as_str(), Some("ngram"));
+    assert_eq!(spec.get("draft_len").as_usize(), Some(3));
+    assert_eq!(spec.get("rounds").as_usize(), Some(agg.rounds as usize));
+    assert!(spec.get("tokens_per_round").as_f64().unwrap_or(0.0) > 0.0);
+    server.shutdown();
+}
+
+/// Build a model whose greedy decode is a pure token→token map: zeroed
+/// position embeddings and zeroed mixer/FFN mats leave the residual
+/// stream a function of the current token alone, so the deterministic
+/// next-token map over a finite vocabulary must enter a cycle (in
+/// practice within ~√V ≈ 17 tokens) — the structurally guaranteed
+/// repetitive regime where prompt-lookup drafting shines.
+fn markov_model(ctx: usize, vocab: usize, seed: u64) -> Arc<Model> {
+    let m = Manifest::synthetic("ab", layers_for("ab"), 16, ctx, vocab, 2);
+    let flat = weights::seeded_flat(&m, seed);
+    let mut w = ModelWeights::from_flat(&m, &flat).unwrap();
+    w.pos_emb.fill(0.0);
+    for lw in &mut w.layers {
+        lw.mixer.mix_a.fill(0.0);
+        lw.mixer.mix_b.fill(0.0);
+        lw.ffn_w1.fill(0.0);
+        lw.ffn_w2.fill(0.0);
+    }
+    Model::shared(m, w).unwrap()
+}
+
+/// A repetitive greedy decode: the n-gram drafter must land more than
+/// one token per verify round once the model's output becomes periodic
+/// — the economic point of speculation.  The Markov-map model makes
+/// the periodicity structural, so this is deterministic, not hopeful.
+#[test]
+fn ngram_drafter_accepts_multiple_tokens_on_repetitive_decode() {
+    let tok = tok();
+    let mut best = 0.0f64;
+    for weight_seed in [31u64, 7, 91, 13] {
+        let model = markov_model(256, tok.vocab_size(), weight_seed);
+        let cfg = ServeCfg {
+            max_active: 1,
+            threads: 1,
+            quantum: 8,
+            prefix_cache_size: 0,
+            speculation: Some(SpecCfg {
+                drafter: DrafterKind::NGram { max_ngram: 4 },
+                draft_len: 6,
+            }),
+            sample: SampleCfg {
+                temperature: 0.0,
+                top_k: 0,
+                max_new_tokens: 160,
+                seed: 0,
+                stop_at_eot: false,
+            },
+            ..Default::default()
+        };
+        let prompt = "the cat sat on the mat. the cat sat on the mat. the cat sat on the mat.";
+        let done = serve(&model, &tok, vec![Request::new(0, prompt)], &cfg).unwrap();
+        let st = done[0].spec.expect("stats");
+        best = best.max(st.emitted_per_round());
+        if best > 1.0 {
+            break;
+        }
+    }
+    assert!(
+        best > 1.0,
+        "greedy repetitive decode should accept >1 token per verify round, got {best:.3}"
+    );
+}
