@@ -12,9 +12,16 @@
 //! 2. **Overhead** — the scheduler at 1 thread vs raw `generate_batch`:
 //!    what admission/queue bookkeeping costs when there is no
 //!    parallelism to win.
-//! 3. **Blocked matvec** — the cache-tiled `matvec` / `matvec_t`
-//!    (4 rows per pass) against the unblocked reference implementations
-//!    they replaced on the forward hot path.
+//! 3. **Kernel tiers** — naive vs blocked vs dispatched `matvec` /
+//!    `matvec_t` on the forward hot-path shapes.  "Dispatched" is what
+//!    the engine actually calls: the blocked forms by default, the
+//!    explicit-SIMD forms under `--features simd` (the row reports
+//!    [`tensor::kernel_backend`], so a `scalar` row and an `avx2` row
+//!    are directly comparable across runs).  Bit parity against naive
+//!    is asserted before timing.
+//! 4. **Batched verify shape** — one fused `matmul` / `matmul_t` over
+//!    m = draft+1 rows vs m sequential single-row calls: the kernel-
+//!    level half of the fused speculative verify pass.
 //!
 //! Every scheduling shape decodes byte-identical text (per-request RNG
 //! streams), which this bench asserts as a side effect — a throughput
@@ -183,38 +190,104 @@ fn main() {
     );
     println!("scheduler overhead at 1 thread: {overhead_ratio:.2}× round-robin speed");
 
-    // 3. Blocked matvec vs the unblocked reference (the FFN/mixer shape
-    //    and the tied-embedding logit shape).
-    let bench_matvec = |k: usize, nn: usize, blocked: bool, transpose: bool| -> f64 {
+    // 3. Kernel tiers on the hot-path shapes (the FFN/mixer shape and
+    //    the tied-embedding logit shape).  Parity vs naive is asserted
+    //    on every tier before it is timed.
+    let backend = tensor::kernel_backend();
+    let run_tier = |tier: &str, transpose: bool, x: &[f32], w: &[f32], nn: usize, y: &mut [f32]| {
+        match (tier, transpose) {
+            ("naive", false) => tensor::matvec_naive(x, w, nn, y),
+            ("blocked", false) => tensor::matvec_blocked(x, w, nn, y),
+            (_, false) => tensor::matvec(x, w, nn, y),
+            ("naive", true) => tensor::matvec_t_naive(x, w, nn, y),
+            ("blocked", true) => tensor::matvec_t_blocked(x, w, nn, y),
+            (_, true) => tensor::matvec_t(x, w, nn, y),
+        }
+    };
+    let bench_matvec = |k: usize, nn: usize, tier: &str, transpose: bool| -> f64 {
         let x: Vec<f32> = (0..k).map(|i| 0.01 * ((i * 13 % 37) as f32) - 0.17).collect();
         let w: Vec<f32> = (0..k * nn).map(|i| 0.003 * ((i * 7 % 53) as f32) - 0.08).collect();
         let mut y = vec![0.0f32; nn];
-        let reps = 50_000_000 / (k * nn).max(1);
+        let mut want = vec![0.0f32; nn];
+        run_tier("naive", transpose, &x, &w, nn, &mut want);
+        run_tier(tier, transpose, &x, &w, nn, &mut y);
+        for (a, b) in y.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tier} diverged from naive");
+        }
+        let reps = (50_000_000 / (k * nn).max(1)).max(16);
         let t0 = Instant::now();
-        for _ in 0..reps.max(16) {
-            match (blocked, transpose) {
-                (true, false) => tensor::matvec(&x, &w, nn, &mut y),
-                (false, false) => tensor::matvec_naive(&x, &w, nn, &mut y),
-                (true, true) => tensor::matvec_t(&x, &w, nn, &mut y),
-                (false, true) => tensor::matvec_t_naive(&x, &w, nn, &mut y),
-            }
+        for _ in 0..reps {
+            run_tier(tier, transpose, &x, &w, nn, &mut y);
             black_box(&y);
         }
-        t0.elapsed().as_secs_f64() / reps.max(16) as f64 * 1e9
+        t0.elapsed().as_secs_f64() / reps as f64 * 1e9
     };
-    let mv_naive = bench_matvec(128, 512, false, false);
-    let mv_blocked = bench_matvec(128, 512, true, false);
-    let mvt_naive = bench_matvec(64, 512, false, true);
-    let mvt_blocked = bench_matvec(64, 512, true, true);
+    let mv_naive = bench_matvec(128, 512, "naive", false);
+    let mv_blocked = bench_matvec(128, 512, "blocked", false);
+    let mv_disp = bench_matvec(128, 512, "dispatched", false);
+    let mvt_naive = bench_matvec(64, 512, "naive", true);
+    let mvt_blocked = bench_matvec(64, 512, "blocked", true);
+    let mvt_disp = bench_matvec(64, 512, "dispatched", true);
     println!(
-        "\nblocked matvec (128×512):   {mv_naive:>8.0} ns naive → {mv_blocked:>8.0} ns \
-         blocked ({:.2}×)",
-        mv_naive / mv_blocked
+        "\nmatvec (128×512):   {mv_naive:>8.0} ns naive → {mv_blocked:>8.0} ns blocked → \
+         {mv_disp:>8.0} ns {backend} ({:.2}× over naive)",
+        mv_naive / mv_disp
     );
     println!(
-        "blocked matvec_t (512×64):  {mvt_naive:>8.0} ns naive → {mvt_blocked:>8.0} ns \
-         blocked ({:.2}×)",
-        mvt_naive / mvt_blocked
+        "matvec_t (512×64):  {mvt_naive:>8.0} ns naive → {mvt_blocked:>8.0} ns blocked → \
+         {mvt_disp:>8.0} ns {backend} ({:.2}× over naive)",
+        mvt_naive / mvt_disp
+    );
+
+    // 4. The fused-verify kernel shape: m = draft+1 rows through one
+    //    matmul vs m sequential single-row calls over the same weights.
+    let bench_batched = |m: usize, k: usize, nn: usize, transpose: bool, fused: bool| -> f64 {
+        let xs: Vec<f32> = (0..m * k).map(|i| 0.01 * ((i * 13 % 37) as f32) - 0.17).collect();
+        let w: Vec<f32> = (0..k * nn).map(|i| 0.003 * ((i * 7 % 53) as f32) - 0.08).collect();
+        let mut ys = vec![0.0f32; m * nn];
+        let mut want = vec![0.0f32; m * nn];
+        for r in 0..m {
+            let (x, y) = (&xs[r * k..(r + 1) * k], &mut want[r * nn..(r + 1) * nn]);
+            run_tier("naive", transpose, x, &w, nn, y);
+        }
+        let pass = |ys: &mut [f32]| {
+            if fused && transpose {
+                tensor::matmul_t(&xs, m, &w, nn, ys);
+            } else if fused {
+                tensor::matmul(&xs, m, &w, nn, ys);
+            } else {
+                for r in 0..m {
+                    let (x, y) = (&xs[r * k..(r + 1) * k], &mut ys[r * nn..(r + 1) * nn]);
+                    run_tier("dispatched", transpose, x, &w, nn, y);
+                }
+            }
+        };
+        pass(&mut ys);
+        for (a, b) in ys.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "batched (fused={fused}) diverged from naive");
+        }
+        let reps = (50_000_000 / (m * k * nn).max(1)).max(16);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            pass(&mut ys);
+            black_box(&ys);
+        }
+        t0.elapsed().as_secs_f64() / reps as f64 * 1e9
+    };
+    let rows = 5; // draft_len 4 + the committed token
+    let bm_seq = bench_batched(rows, 64, 128, false, false);
+    let bm_fused = bench_batched(rows, 64, 128, false, true);
+    let bmt_seq = bench_batched(rows, 64, 512, true, false);
+    let bmt_fused = bench_batched(rows, 64, 512, true, true);
+    println!(
+        "batched matmul ({rows}×64×128):    {bm_seq:>8.0} ns sequential → {bm_fused:>8.0} ns \
+         fused ({:.2}×)",
+        bm_seq / bm_fused
+    );
+    println!(
+        "batched matmul_t ({rows}×64×512):  {bmt_seq:>8.0} ns sequential → {bmt_fused:>8.0} ns \
+         fused ({:.2}×)",
+        bmt_seq / bmt_fused
     );
 
     // JSON for the perf trajectory.
@@ -240,13 +313,24 @@ fn main() {
         "  \"best_t4_plus_tok_per_s\": {best_t4:.1}, \"t4_beats_round_robin\": {},\n",
         best_t4 > rr_tps
     ));
+    json.push_str(&format!("  \"kernel_backend\": \"{backend}\",\n"));
     json.push_str(&format!(
-        "  \"matvec\": {{\"naive_ns\": {mv_naive:.0}, \"blocked_ns\": {mv_blocked:.0}, \"speedup\": {:.3},\n",
-        mv_naive / mv_blocked
+        "  \"matvec\": {{\"naive_ns\": {mv_naive:.0}, \"blocked_ns\": {mv_blocked:.0}, \"dispatched_ns\": {mv_disp:.0}, \"speedup\": {:.3}, \"dispatched_speedup\": {:.3},\n",
+        mv_naive / mv_blocked,
+        mv_naive / mv_disp
     ));
     json.push_str(&format!(
-        "             \"t_naive_ns\": {mvt_naive:.0}, \"t_blocked_ns\": {mvt_blocked:.0}, \"t_speedup\": {:.3}}}\n",
-        mvt_naive / mvt_blocked
+        "             \"t_naive_ns\": {mvt_naive:.0}, \"t_blocked_ns\": {mvt_blocked:.0}, \"t_dispatched_ns\": {mvt_disp:.0}, \"t_speedup\": {:.3}, \"t_dispatched_speedup\": {:.3}}},\n",
+        mvt_naive / mvt_blocked,
+        mvt_naive / mvt_disp
+    ));
+    json.push_str(&format!(
+        "  \"batched_verify\": {{\"rows\": {rows}, \"sequential_ns\": {bm_seq:.0}, \"fused_ns\": {bm_fused:.0}, \"speedup\": {:.3},\n",
+        bm_seq / bm_fused
+    ));
+    json.push_str(&format!(
+        "                     \"t_sequential_ns\": {bmt_seq:.0}, \"t_fused_ns\": {bmt_fused:.0}, \"t_speedup\": {:.3}}}\n",
+        bmt_seq / bmt_fused
     ));
     json.push_str("}\n");
     std::fs::write(&out_path, &json).expect("writing bench json");

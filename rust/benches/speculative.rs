@@ -8,7 +8,11 @@
 //! Two workloads:
 //!
 //! 1. **Grid** — the Table-3 prompt suite served at temperature 0.8:
-//!    tok/s and acceptance for drafter × draft-length × mixer kind.
+//!    tok/s and acceptance for drafter × draft-length × mixer kind,
+//!    with the verify pass both **sequential** (step + snapshot per
+//!    position, `fused: false`) and **fused** (one `step_batch` over
+//!    draft+1 rows, the default) — the before/after of the fused
+//!    verify optimisation, byte parity asserted between all three.
 //! 2. **Repetitive greedy** — a highly repetitive prompt decoded
 //!    greedily with the n-gram drafter: once the model's output cycles,
 //!    prompt-lookup predicts it exactly, and accepted-tokens-per-round
@@ -137,37 +141,52 @@ fn main() {
             DrafterKind::Shallow { layers: 2 },
         ] {
             for draft_len in [2usize, 4, 8] {
-                let spec = run(
-                    &model,
-                    &tok,
-                    &prompts,
-                    &sample,
-                    Some(SpecCfg { drafter, draft_len }),
-                );
-                assert_eq!(
-                    spec.digest, plain.digest,
-                    "[{kind}] {drafter:?} draft_len={draft_len}: speculation changed bytes"
-                );
-                assert_eq!(spec.tokens, plain.tokens);
-                let tps = spec.tokens as f64 / spec.secs.max(1e-9);
-                let per_round = spec.stats.emitted_per_round();
-                let accept = spec.stats.acceptance_rate();
-                println!(
-                    "[{kind}] {}:{draft_len}  {tps:>6.0} tok/s ({:.2}× plain)  \
-                     {per_round:.2} tok/round  {:.0}% drafts accepted",
-                    drafter.label(),
-                    tps / plain_tps.max(1e-9),
-                    accept * 100.0
-                );
-                grid_json.push(format!(
-                    "    {{\"kind\": \"{kind}\", \"drafter\": \"{}\", \"draft_len\": {draft_len}, \
-                     \"tok_per_s\": {tps:.1}, \"plain_tok_per_s\": {plain_tps:.1}, \
-                     \"speedup\": {:.3}, \"tokens_per_round\": {per_round:.3}, \
-                     \"acceptance_rate\": {accept:.3}, \"rounds\": {}, \"parity\": true}}",
-                    drafter.label(),
-                    tps / plain_tps.max(1e-9),
-                    spec.stats.rounds
-                ));
+                for fused in [false, true] {
+                    let spec = run(
+                        &model,
+                        &tok,
+                        &prompts,
+                        &sample,
+                        Some(SpecCfg { drafter, draft_len, fused }),
+                    );
+                    assert_eq!(
+                        spec.digest, plain.digest,
+                        "[{kind}] {drafter:?} draft_len={draft_len} fused={fused}: \
+                         speculation changed bytes"
+                    );
+                    assert_eq!(spec.tokens, plain.tokens);
+                    if fused {
+                        assert_eq!(
+                            spec.stats.fused_passes, spec.stats.rounds,
+                            "[{kind}] fused accounting"
+                        );
+                    } else {
+                        assert_eq!(spec.stats.fused_passes, 0);
+                    }
+                    let tps = spec.tokens as f64 / spec.secs.max(1e-9);
+                    let per_round = spec.stats.emitted_per_round();
+                    let accept = spec.stats.acceptance_rate();
+                    let verify = if fused { "fused" } else { "seq" };
+                    println!(
+                        "[{kind}] {}:{draft_len} {verify:<5}  {tps:>6.0} tok/s ({:.2}× plain)  \
+                         {per_round:.2} tok/round  {:.0}% drafts accepted",
+                        drafter.label(),
+                        tps / plain_tps.max(1e-9),
+                        accept * 100.0
+                    );
+                    grid_json.push(format!(
+                        "    {{\"kind\": \"{kind}\", \"drafter\": \"{}\", \"draft_len\": {draft_len}, \
+                         \"fused\": {fused}, \"tok_per_s\": {tps:.1}, \
+                         \"plain_tok_per_s\": {plain_tps:.1}, \
+                         \"speedup\": {:.3}, \"tokens_per_round\": {per_round:.3}, \
+                         \"acceptance_rate\": {accept:.3}, \"rounds\": {}, \
+                         \"rows_per_fused_pass\": {:.3}, \"parity\": true}}",
+                        drafter.label(),
+                        tps / plain_tps.max(1e-9),
+                        spec.stats.rounds,
+                        spec.stats.rows_per_fused_pass()
+                    ));
+                }
             }
         }
     }
@@ -204,28 +223,41 @@ fn main() {
     let mut best = SpecStats::default();
     let mut best_per_round = 0.0f64;
     let mut best_speedup = 0.0f64;
+    let mut best_fused_vs_seq = 0.0f64;
     for weight_seed in [17u64, 31, 7, 91, 13, 57] {
         let model = markov_model(weight_seed);
         let plain = run(&model, &tok, std::slice::from_ref(&rep_prompt), &rep_sample, None);
+        let spec_cfg =
+            SpecCfg { drafter: DrafterKind::NGram { max_ngram: 4 }, draft_len: 6, fused: true };
         let spec = run(
             &model,
             &tok,
             std::slice::from_ref(&rep_prompt),
             &rep_sample,
-            Some(SpecCfg { drafter: DrafterKind::NGram { max_ngram: 4 }, draft_len: 6 }),
+            Some(spec_cfg.clone()),
         );
         assert_eq!(spec.digest, plain.digest, "repetitive workload parity (seed {weight_seed})");
+        let seq = run(
+            &model,
+            &tok,
+            std::slice::from_ref(&rep_prompt),
+            &rep_sample,
+            Some(SpecCfg { fused: false, ..spec_cfg }),
+        );
+        assert_eq!(seq.digest, plain.digest, "sequential-verify parity (seed {weight_seed})");
         let per_round = spec.stats.emitted_per_round();
         if per_round > best_per_round {
             best_per_round = per_round;
             best = spec.stats;
             best_speedup = (spec.tokens as f64 / spec.secs.max(1e-9))
                 / (plain.tokens as f64 / plain.secs.max(1e-9));
+            best_fused_vs_seq = seq.secs / spec.secs.max(1e-9);
         }
     }
     println!(
         "repetitive greedy + ngram: best {best_per_round:.2} tokens/verify round \
-         ({} accepted / {} drafted over {} rounds), {best_speedup:.2}× plain tok/s",
+         ({} accepted / {} drafted over {} rounds), {best_speedup:.2}× plain tok/s, \
+         fused verify {best_fused_vs_seq:.2}× sequential",
         best.accepted, best.drafted, best.rounds
     );
     assert!(
@@ -238,8 +270,9 @@ fn main() {
     json.push_str("  \"bench\": \"speculative\",\n");
     json.push_str(&format!(
         "  \"requests\": {n}, \"ctx\": {ctx}, \"dim\": 32, \"layers\": 4, \
-         \"max_new_tokens\": {},\n",
-        sample.max_new_tokens
+         \"max_new_tokens\": {}, \"kernel_backend\": \"{}\",\n",
+        sample.max_new_tokens,
+        hsm::infer::tensor::kernel_backend()
     ));
     json.push_str("  \"grid\": [\n");
     json.push_str(&grid_json.join(",\n"));
@@ -247,7 +280,8 @@ fn main() {
     json.push_str(&format!(
         "  \"repetitive_ngram\": {{\"tokens_per_round\": {best_per_round:.3}, \
          \"rounds\": {}, \"drafted\": {}, \"accepted\": {}, \"emitted\": {}, \
-         \"speedup_vs_plain\": {best_speedup:.3}}},\n",
+         \"speedup_vs_plain\": {best_speedup:.3}, \
+         \"fused_vs_sequential\": {best_fused_vs_seq:.3}}},\n",
         best.rounds, best.drafted, best.accepted, best.emitted
     ));
     json.push_str(&format!(

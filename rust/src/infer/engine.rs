@@ -26,7 +26,10 @@ use std::sync::{Arc, OnceLock};
 use anyhow::{bail, Result};
 
 use super::speculate::{Drafter, DrafterKind, NGramDrafter, ShallowDrafter};
-use super::tensor::{add_assign, layer_norm, matvec, matvec_t, relu_inplace, softmax_inplace, tanh_inplace};
+use super::tensor::{
+    add_assign, layer_norm, matmul, matmul_t, matvec, matvec_t, relu_inplace, softmax_inplace,
+    tanh_inplace,
+};
 use super::weights::{LayerWeights, ModelWeights};
 use super::Decoder;
 use crate::config::{LayerInfo, Manifest};
@@ -69,6 +72,19 @@ impl Ring {
     fn clear(&mut self) {
         self.next = 0;
         self.filled = 0;
+    }
+
+    /// Copy another ring's contents into this one without reallocating
+    /// (the derived `Clone::clone_from` would rebuild the row vecs).
+    /// Both rings must share capacity and dim — always true for rings
+    /// of the same session layer.
+    fn copy_from(&mut self, other: &Ring) {
+        debug_assert_eq!(self.capacity, other.capacity);
+        for (dst, src) in self.buf.iter_mut().zip(&other.buf) {
+            dst.copy_from_slice(src);
+        }
+        self.next = other.next;
+        self.filled = other.filled;
     }
 }
 
@@ -343,6 +359,71 @@ impl MixScratch {
     }
 }
 
+/// Reusable arena for [`DecodeSession::step_batch`]: every `[m, ·]`
+/// row-major buffer the fused multi-token pass needs, plus the rewind
+/// book-keeping ([`DecodeSession::rewind_batch`]).  Allocated lazily on
+/// the first batched call and **reused across verify rounds** — buffers
+/// only ever grow (`resize` keeps capacity), and the saved ring images
+/// are refreshed in place via [`Ring::copy_from`], so steady-state
+/// speculative decoding allocates nothing per round.
+#[derive(Default)]
+struct BatchScratch {
+    /// Rows scored by the pending batch (0 = none / already rewound).
+    rows: usize,
+    /// Session position before the pending batch.
+    pre_pos: usize,
+    /// `[m, d]` residual stream rows.
+    xs: Vec<f32>,
+    /// `[m, d]` per-layer post-LN1 rows (mixer input), then the final
+    /// post-LN rows feeding the logit projection.
+    hs: Vec<f32>,
+    /// `[m, d]` mixer outputs.
+    ys: Vec<f32>,
+    /// `[m, max_ffn]` FFN hidden rows.
+    f1s: Vec<f32>,
+    /// `[m, d]` FFN LN/output rows.
+    f2s: Vec<f32>,
+    /// `[m, vocab]` logits, row per scored token.
+    logits: Vec<f32>,
+    /// Per layer: the HSM ring image from before the batch (`None` for
+    /// attention layers, whose append-only KV caches rewind by
+    /// truncation).
+    saved: Vec<Option<Ring>>,
+    /// Per layer: the batch's post-LN1 rows, replayed into the restored
+    /// ring by [`DecodeSession::rewind_batch`].
+    h_hist: Vec<Vec<f32>>,
+}
+
+impl BatchScratch {
+    fn prepare(
+        &mut self,
+        rows: usize,
+        pre_pos: usize,
+        depth: usize,
+        d: usize,
+        max_ffn: usize,
+        vocab: usize,
+    ) {
+        self.rows = rows;
+        self.pre_pos = pre_pos;
+        self.xs.resize(rows * d, 0.0);
+        self.hs.resize(rows * d, 0.0);
+        self.ys.resize(rows * d, 0.0);
+        self.f1s.resize(rows * max_ffn, 0.0);
+        self.f2s.resize(rows * d, 0.0);
+        self.logits.resize(rows * vocab, 0.0);
+        if self.saved.len() != depth {
+            self.saved = vec![None; depth];
+        }
+        if self.h_hist.len() != depth {
+            self.h_hist = vec![Vec::new(); depth];
+        }
+        for hh in &mut self.h_hist {
+            hh.resize(rows * d, 0.0);
+        }
+    }
+}
+
 /// The mutable, per-sequence half of a decoder: a [`SessionState`]
 /// (layer state + position cursor) plus scratch.  Cheap relative to
 /// weights — allocate one per concurrent user and share the [`Model`].
@@ -356,6 +437,8 @@ pub struct DecodeSession {
     f2: Vec<f32>,
     logits: Vec<f32>,
     mix: MixScratch,
+    /// Fused-batch arena; `None` until the first [`Self::step_batch`].
+    batch: Option<Box<BatchScratch>>,
 }
 
 impl DecodeSession {
@@ -380,6 +463,7 @@ impl DecodeSession {
             f2: vec![0.0; d],
             logits: vec![0.0; m.vocab],
             mix: MixScratch::new(d),
+            batch: None,
         })
     }
 
@@ -399,6 +483,9 @@ impl DecodeSession {
     pub fn restore(&mut self, m: &Manifest, state: &SessionState) -> Result<()> {
         state.validate(m)?;
         self.state.clone_from(state);
+        if let Some(bs) = &mut self.batch {
+            bs.rows = 0; // any pending batch no longer matches the state
+        }
         Ok(())
     }
 
@@ -414,6 +501,9 @@ impl DecodeSession {
             st.clear();
         }
         self.state.pos = 0;
+        if let Some(bs) = &mut self.batch {
+            bs.rows = 0;
+        }
     }
 
     /// Consume one token, return next-token logits (borrow valid until
@@ -495,6 +585,179 @@ impl DecodeSession {
         self.state.pos += 1;
         Ok(())
     }
+
+    /// Score a block of tokens in **one fused pass per layer** instead
+    /// of `tokens.len()` sequential [`step`](Self::step)s — the
+    /// speculative verify pass, where the block is draft length + 1.
+    ///
+    /// Per layer, LN and the mixer run row by row (each row's ring/KV
+    /// push lands before the next row reads, so every row sees exactly
+    /// the history a sequential step would), while the two FFN
+    /// projections run as batched [`matmul`]s and the final logit
+    /// projection as one batched [`matmul_t`] — each weight matrix
+    /// streams through cache **once** for all rows instead of once per
+    /// row.  Every logit row is bit-identical to the sequential loop's.
+    ///
+    /// Returns the logits row-major as `[tokens.len() * vocab]` (chunk
+    /// by `vocab`; borrow valid until the next call).  Afterwards the
+    /// session state is as if every token was stepped; use
+    /// [`rewind_batch`](Self::rewind_batch) to keep only an accepted
+    /// prefix.  Scratch lives in a lazily-allocated arena
+    /// ([`BatchScratch`]) reused across rounds, so steady-state verify
+    /// rounds allocate nothing.
+    pub fn step_batch(&mut self, model: &Model, tokens: &[u32]) -> Result<&[f32]> {
+        let m = &model.manifest;
+        let w = &model.weights;
+        let d = m.dim;
+        let vocab = m.vocab;
+        let rows = tokens.len();
+        if rows == 0 {
+            bail!("step_batch needs at least one token");
+        }
+        for &t in tokens {
+            if (t as usize) >= vocab {
+                bail!("token {t} out of vocab {vocab}");
+            }
+        }
+        if self.state.pos + rows > m.ctx {
+            bail!("context window ({}) exhausted — call reset()", m.ctx);
+        }
+        let depth = m.layers.len();
+        let max_ffn = m.layers.iter().map(|l| l.ffn).max().unwrap_or(d);
+        let pre_pos = self.state.pos;
+        let bs = self.batch.get_or_insert_with(Box::default);
+        bs.prepare(rows, pre_pos, depth, d, max_ffn, vocab);
+
+        // Embedding + learned position, one row per token.
+        for (r, &t) in tokens.iter().enumerate() {
+            let te = &w.tok_emb[t as usize * d..(t as usize + 1) * d];
+            let pe = &w.pos_emb[(pre_pos + r) * d..(pre_pos + r + 1) * d];
+            let x = &mut bs.xs[r * d..(r + 1) * d];
+            for i in 0..d {
+                x[i] = te[i] + pe[i];
+            }
+        }
+
+        for (l, spec) in m.layers.iter().enumerate() {
+            let lw = &w.layers[l];
+
+            // Save the pre-batch ring image for rewind (attention
+            // layers rewind by KV truncation — nothing to save).
+            match &self.state.layers[l] {
+                LayerState::Hsm(ring) => match &mut bs.saved[l] {
+                    Some(s) => s.copy_from(ring),
+                    slot => *slot = Some(ring.clone()),
+                },
+                LayerState::Attn { .. } => bs.saved[l] = None,
+            }
+
+            // h = LN1(x); y = mixer(h, state); x += y.
+            for r in 0..rows {
+                layer_norm(
+                    &bs.xs[r * d..(r + 1) * d],
+                    &lw.ln1_g,
+                    &lw.ln1_b,
+                    &mut bs.hs[r * d..(r + 1) * d],
+                );
+            }
+            for r in 0..rows {
+                mixer_step(
+                    spec,
+                    lw,
+                    &bs.hs[r * d..(r + 1) * d],
+                    &mut self.state.layers[l],
+                    &mut bs.ys[r * d..(r + 1) * d],
+                    d,
+                    &mut self.mix,
+                );
+            }
+            bs.h_hist[l].copy_from_slice(&bs.hs[..rows * d]);
+            for r in 0..rows {
+                add_assign(&mut bs.xs[r * d..(r + 1) * d], &bs.ys[r * d..(r + 1) * d]);
+            }
+
+            // FFN: LN row-wise, both projections fused across rows.
+            let f = spec.ffn;
+            for r in 0..rows {
+                layer_norm(
+                    &bs.xs[r * d..(r + 1) * d],
+                    &lw.ln2_g,
+                    &lw.ln2_b,
+                    &mut bs.f2s[r * d..(r + 1) * d],
+                );
+            }
+            matmul(&bs.f2s[..rows * d], rows, &lw.ffn_w1, f, &mut bs.f1s[..rows * f]);
+            for r in 0..rows {
+                let f1 = &mut bs.f1s[r * f..(r + 1) * f];
+                add_assign(f1, &lw.ffn_b1);
+                relu_inplace(f1);
+            }
+            matmul(&bs.f1s[..rows * f], rows, &lw.ffn_w2, d, &mut bs.f2s[..rows * d]);
+            for r in 0..rows {
+                add_assign(&mut bs.f2s[r * d..(r + 1) * d], &lw.ffn_b2);
+            }
+            for r in 0..rows {
+                add_assign(&mut bs.xs[r * d..(r + 1) * d], &bs.f2s[r * d..(r + 1) * d]);
+            }
+        }
+
+        // Final LN + tied-embedding projection, fused across rows.
+        for r in 0..rows {
+            layer_norm(
+                &bs.xs[r * d..(r + 1) * d],
+                &w.lnf_g,
+                &w.lnf_b,
+                &mut bs.hs[r * d..(r + 1) * d],
+            );
+        }
+        matmul_t(&bs.hs[..rows * d], rows, &w.tok_emb, vocab, &mut bs.logits[..rows * vocab]);
+        self.state.pos += rows;
+        Ok(&bs.logits[..rows * vocab])
+    }
+
+    /// Roll the session back to `pre_batch_position + keep` after a
+    /// [`step_batch`](Self::step_batch): each HSM ring is restored to
+    /// its saved pre-batch image and the first `keep` rows' pushes are
+    /// **replayed** (byte-identical to having only ever stepped those
+    /// rows, because a ring's content is a pure function of its push
+    /// sequence); attention KV caches, being append-only, rewind by
+    /// truncation.  Errors if no batch is pending or the session moved
+    /// since the batch.
+    pub fn rewind_batch(&mut self, model: &Model, keep: usize) -> Result<()> {
+        let d = model.manifest.dim;
+        let bs = match &mut self.batch {
+            Some(bs) if bs.rows > 0 => bs,
+            _ => bail!("rewind_batch without a pending step_batch"),
+        };
+        if keep > bs.rows {
+            bail!("cannot keep {keep} of {} batched rows", bs.rows);
+        }
+        if self.state.pos != bs.pre_pos + bs.rows {
+            bail!(
+                "session moved since step_batch (position {}, batch ended at {})",
+                self.state.pos,
+                bs.pre_pos + bs.rows
+            );
+        }
+        for (l, st) in self.state.layers.iter_mut().enumerate() {
+            match st {
+                LayerState::Hsm(ring) => {
+                    let saved = bs.saved[l].as_ref().expect("HSM layer saved its ring");
+                    ring.copy_from(saved);
+                    for r in 0..keep {
+                        ring.push(&bs.h_hist[l][r * d..(r + 1) * d]);
+                    }
+                }
+                LayerState::Attn { k, v } => {
+                    k.truncate((bs.pre_pos + keep) * d);
+                    v.truncate((bs.pre_pos + keep) * d);
+                }
+            }
+        }
+        self.state.pos = bs.pre_pos + keep;
+        bs.rows = 0;
+        Ok(())
+    }
 }
 
 /// The native incremental decoder: shared [`Model`] + own [`DecodeSession`].
@@ -567,6 +830,18 @@ impl Decoder for NativeDecoder {
 
     fn step(&mut self, token: u32) -> Result<&[f32]> {
         self.session.step(&self.model, token)
+    }
+
+    fn supports_step_batch(&self) -> bool {
+        true
+    }
+
+    fn step_batch(&mut self, tokens: &[u32]) -> Result<&[f32]> {
+        self.session.step_batch(&self.model, tokens)
+    }
+
+    fn rewind_batch(&mut self, keep: usize) -> Result<()> {
+        self.session.rewind_batch(&self.model, keep)
     }
 
     fn reset(&mut self) {
@@ -963,6 +1238,117 @@ mod tests {
             want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             got.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    fn model_of_kind(kind: &str) -> Arc<Model> {
+        let layers = match kind {
+            "ab" => vec![
+                LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![1, 2, 4, 8], ffn: 24 },
+                LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![2, 4, 8, 16], ffn: 24 },
+            ],
+            _ => vec![
+                LayerInfo { kind: kind.into(), heads: 2, shifts: vec![1], ffn: 24 },
+                LayerInfo { kind: kind.into(), heads: 2, shifts: vec![3], ffn: 24 },
+            ],
+        };
+        let m = Manifest::synthetic(kind, layers, 16, 64, 300, 1);
+        let flat = super::super::weights::seeded_flat(&m, 31);
+        Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The fused verify pass is a pure re-grouping: for every mixer
+    /// kind, `step_batch` over a block is bit-identical per row to
+    /// stepping the block sequentially, and `rewind_batch(keep)`
+    /// reproduces — byte for byte — the state of a sequential session
+    /// that stopped after `keep` of those tokens (shift rings larger
+    /// and smaller than the block both covered via the layer shifts).
+    #[test]
+    fn step_batch_matches_sequential_steps_for_every_mixer_kind() {
+        let prompt = [5u32, 9, 3, 7];
+        let block = [2u32, 11, 6, 4, 8];
+        for kind in ["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"] {
+            let md = model_of_kind(kind);
+
+            let mut seq = md.session();
+            seq.prefill(&prompt).unwrap();
+            let want: Vec<Vec<f32>> =
+                block.iter().map(|&t| seq.step(t).unwrap().to_vec()).collect();
+
+            let mut fused = md.session();
+            fused.prefill(&prompt).unwrap();
+            let logits = fused.step_batch(&block).unwrap();
+            assert_eq!(logits.len(), block.len() * 300);
+            for (r, row) in want.iter().enumerate() {
+                assert_eq!(
+                    bits(&logits[r * 300..(r + 1) * 300]),
+                    bits(row),
+                    "{kind}: fused logits row {r} diverged from sequential"
+                );
+            }
+            assert_eq!(fused.position(), prompt.len() + block.len());
+
+            for keep in [0usize, 2, block.len()] {
+                let mut fused = md.session();
+                fused.prefill(&prompt).unwrap();
+                fused.step_batch(&block).unwrap();
+                fused.rewind_batch(keep).unwrap();
+                assert_eq!(fused.position(), prompt.len() + keep);
+
+                let mut r = md.session();
+                r.prefill(&prompt).unwrap();
+                for &t in &block[..keep] {
+                    r.step(t).unwrap();
+                }
+                assert_eq!(
+                    bits(fused.step(1).unwrap()),
+                    bits(r.step(1).unwrap()),
+                    "{kind}: decode after rewind({keep}) diverged"
+                );
+            }
+        }
+    }
+
+    /// Back-to-back verify rounds reuse the same arena; interleaving
+    /// fused blocks with ordinary steps stays bit-exact.
+    #[test]
+    fn repeated_fused_rounds_stay_bit_exact() {
+        let md = model_of_kind("ab");
+        let mut seq = md.session();
+        let mut fused = md.session();
+        seq.prefill(&[5, 9]).unwrap();
+        fused.prefill(&[5, 9]).unwrap();
+        let script: &[(&[u32], usize)] = &[(&[3, 7, 2], 1), (&[4, 4, 8, 1], 3), (&[6], 0)];
+        for &(block, keep) in script {
+            fused.step_batch(block).unwrap();
+            fused.rewind_batch(keep).unwrap();
+            for &t in &block[..keep] {
+                seq.step(t).unwrap();
+            }
+            assert_eq!(bits(fused.step(2).unwrap()), bits(seq.step(2).unwrap()));
+        }
+    }
+
+    #[test]
+    fn step_batch_guards() {
+        let mut e = engine();
+        assert!(e.rewind_batch(0).is_err(), "no pending batch");
+        e.prefill(&[1, 2]).unwrap();
+        assert!(e.step_batch(&[]).is_err(), "empty batch");
+        assert!(e.step_batch(&[9999]).is_err(), "out-of-vocab token");
+        assert!(e.step_batch(&[0; 15]).is_err(), "batch past ctx (16)");
+        e.step_batch(&[3, 4]).unwrap();
+        assert!(e.rewind_batch(3).is_err(), "keep > rows");
+        e.rewind_batch(1).unwrap();
+        assert!(e.rewind_batch(1).is_err(), "batch already consumed");
+        // Restoring a snapshot invalidates any pending batch.
+        let snap = e.snapshot().unwrap();
+        e.step_batch(&[5]).unwrap();
+        e.restore(&snap).unwrap();
+        assert!(e.rewind_batch(0).is_err(), "restore must void the batch");
     }
 
     #[test]

@@ -78,6 +78,34 @@ pub trait Decoder {
     /// the next call on this decoder).
     fn step(&mut self, token: u32) -> Result<&[f32]>;
 
+    /// Score a block of tokens in one fused multi-row pass, returning
+    /// their logits row-major as `[tokens.len() * vocab]` (chunk by
+    /// `vocab`; borrow valid until the next call).  Bit-identical per
+    /// row to stepping the block sequentially, but each weight matrix
+    /// streams through cache once for the whole block — the speculative
+    /// verify pass.  Afterwards the state is as if every token was
+    /// stepped; [`rewind_batch`](Self::rewind_batch) keeps only an
+    /// accepted prefix.  The default errors — probe with
+    /// [`supports_step_batch`](Self::supports_step_batch) first.
+    fn step_batch(&mut self, tokens: &[u32]) -> Result<&[f32]> {
+        let _ = tokens;
+        bail!("this decoder does not support fused batch stepping")
+    }
+
+    /// Roll back the most recent [`step_batch`](Self::step_batch) so
+    /// that only its first `keep` tokens remain stepped, byte-exactly.
+    fn rewind_batch(&mut self, keep: usize) -> Result<()> {
+        let _ = keep;
+        bail!("this decoder does not support fused batch stepping")
+    }
+
+    /// Cheap capability probe for
+    /// [`step_batch`](Self::step_batch)/[`rewind_batch`](Self::rewind_batch)
+    /// (the serve scheduler's fused-verify gate).
+    fn supports_step_batch(&self) -> bool {
+        false
+    }
+
     /// Clear all sequence state (start a new sequence).
     fn reset(&mut self);
 
@@ -149,6 +177,18 @@ impl<D: Decoder + ?Sized> Decoder for &mut D {
 
     fn step(&mut self, token: u32) -> Result<&[f32]> {
         (**self).step(token)
+    }
+
+    fn step_batch(&mut self, tokens: &[u32]) -> Result<&[f32]> {
+        (**self).step_batch(tokens)
+    }
+
+    fn rewind_batch(&mut self, keep: usize) -> Result<()> {
+        (**self).rewind_batch(keep)
+    }
+
+    fn supports_step_batch(&self) -> bool {
+        (**self).supports_step_batch()
     }
 
     fn reset(&mut self) {

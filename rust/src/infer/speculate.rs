@@ -60,6 +60,21 @@ pub struct SpecCfg {
     /// zero-length draft" is plain decoding; disable with `None`
     /// instead.
     pub draft_len: usize,
+    /// Score each verify round's block with one fused
+    /// [`Decoder::step_batch`](crate::infer::Decoder::step_batch) pass
+    /// (default) instead of draft_len + 1 sequential steps with a
+    /// snapshot per position.  Byte-identical output either way; only
+    /// honoured when the decoder supports batched stepping (others fall
+    /// back to the sequential path automatically).  `false` exists for
+    /// before/after benching.
+    pub fused: bool,
+}
+
+impl Default for SpecCfg {
+    /// N-gram drafting (max n-gram 3), draft blocks of 4, fused verify.
+    fn default() -> Self {
+        SpecCfg { drafter: DrafterKind::NGram { max_ngram: 3 }, draft_len: 4, fused: true }
+    }
 }
 
 impl SpecCfg {
@@ -303,6 +318,12 @@ pub struct SpecStats {
     /// Tokens emitted across all rounds — accepted drafts plus the one
     /// corrective/bonus full-model sample each round ends with.
     pub emitted: u64,
+    /// Verify rounds scored with one fused multi-row `step_batch` pass
+    /// (≤ `rounds`; the rest used the sequential per-position path).
+    pub fused_passes: u64,
+    /// Positions scored across all fused passes — `fused_rows /
+    /// fused_passes` is the mean batch height the fused kernels ran at.
+    pub fused_rows: u64,
 }
 
 impl SpecStats {
@@ -325,12 +346,26 @@ impl SpecStats {
         }
     }
 
+    /// Mean positions scored per fused verify pass (0.0 when every
+    /// round used the sequential path) — the observable batch height of
+    /// the fused-verify optimisation, surfaced per request and on
+    /// `/healthz`.
+    pub fn rows_per_fused_pass(&self) -> f64 {
+        if self.fused_passes == 0 {
+            0.0
+        } else {
+            self.fused_rows as f64 / self.fused_passes as f64
+        }
+    }
+
     /// Accumulate another request's stats.
     pub fn add(&mut self, other: &SpecStats) {
         self.rounds += other.rounds;
         self.drafted += other.drafted;
         self.accepted += other.accepted;
         self.emitted += other.emitted;
+        self.fused_passes += other.fused_passes;
+        self.fused_rows += other.fused_rows;
     }
 }
 
@@ -342,6 +377,8 @@ pub struct SpecCounters {
     drafted: AtomicU64,
     accepted: AtomicU64,
     emitted: AtomicU64,
+    fused_passes: AtomicU64,
+    fused_rows: AtomicU64,
 }
 
 impl SpecCounters {
@@ -354,6 +391,8 @@ impl SpecCounters {
         self.drafted.fetch_add(s.drafted, Ordering::Relaxed);
         self.accepted.fetch_add(s.accepted, Ordering::Relaxed);
         self.emitted.fetch_add(s.emitted, Ordering::Relaxed);
+        self.fused_passes.fetch_add(s.fused_passes, Ordering::Relaxed);
+        self.fused_rows.fetch_add(s.fused_rows, Ordering::Relaxed);
     }
 
     /// Point-in-time snapshot.
@@ -363,6 +402,8 @@ impl SpecCounters {
             drafted: self.drafted.load(Ordering::Relaxed),
             accepted: self.accepted.load(Ordering::Relaxed),
             emitted: self.emitted.load(Ordering::Relaxed),
+            fused_passes: self.fused_passes.load(Ordering::Relaxed),
+            fused_rows: self.fused_rows.load(Ordering::Relaxed),
         }
     }
 }
@@ -481,24 +522,45 @@ mod tests {
 
     #[test]
     fn spec_cfg_validates() {
-        let ok = SpecCfg { drafter: DrafterKind::NGram { max_ngram: 3 }, draft_len: 4 };
+        let ok = SpecCfg::default();
+        assert!(ok.fused, "fused verify is the default");
         assert!(ok.validate().is_ok());
-        let zero = SpecCfg { drafter: DrafterKind::NGram { max_ngram: 3 }, draft_len: 0 };
+        let zero = SpecCfg { draft_len: 0, ..Default::default() };
         assert!(zero.validate().is_err());
-        let bad = SpecCfg { drafter: DrafterKind::NGram { max_ngram: 0 }, draft_len: 2 };
+        let bad = SpecCfg { drafter: DrafterKind::NGram { max_ngram: 0 }, ..Default::default() };
         assert!(bad.validate().is_err());
     }
 
     #[test]
     fn stats_and_counters_aggregate() {
-        let a = SpecStats { rounds: 2, drafted: 8, accepted: 6, emitted: 8 };
-        let mut b = SpecStats { rounds: 1, drafted: 4, accepted: 0, emitted: 1 };
+        let a = SpecStats {
+            rounds: 2,
+            drafted: 8,
+            accepted: 6,
+            emitted: 8,
+            fused_passes: 2,
+            fused_rows: 9,
+        };
+        let mut b =
+            SpecStats { rounds: 1, drafted: 4, accepted: 0, emitted: 1, ..Default::default() };
         b.add(&a);
-        assert_eq!(b, SpecStats { rounds: 3, drafted: 12, accepted: 6, emitted: 9 });
+        assert_eq!(
+            b,
+            SpecStats {
+                rounds: 3,
+                drafted: 12,
+                accepted: 6,
+                emitted: 9,
+                fused_passes: 2,
+                fused_rows: 9,
+            }
+        );
         assert!((a.acceptance_rate() - 0.75).abs() < 1e-12);
         assert!((a.emitted_per_round() - 4.0).abs() < 1e-12);
+        assert!((a.rows_per_fused_pass() - 4.5).abs() < 1e-12);
         assert_eq!(SpecStats::default().acceptance_rate(), 0.0);
         assert_eq!(SpecStats::default().emitted_per_round(), 0.0);
+        assert_eq!(SpecStats::default().rows_per_fused_pass(), 0.0);
 
         let c = SpecCounters::new();
         c.add(&a);
@@ -506,5 +568,7 @@ mod tests {
         let snap = c.snapshot();
         assert_eq!(snap.rounds, 5);
         assert_eq!(snap.emitted, 17);
+        assert_eq!(snap.fused_passes, 4);
+        assert_eq!(snap.fused_rows, 18);
     }
 }

@@ -1,31 +1,138 @@
 //! Minimal dense-math substrate for the native inference engine.
 //!
 //! Row-major `f32` throughout, shaped to the decoder's needs: vector ×
-//! matrix products (the hot path — one token at a time), LayerNorm, ReLU,
-//! tanh, and a numerically-stable softmax.  No external BLAS: the matvecs
-//! are cache-tiled over **four matrix rows per pass** on top of the
-//! contiguous axpy/dot forms the compiler already vectorizes — `y` (for
-//! [`matvec`]) or `x` (for [`matvec_t`]) is streamed once per four rows
-//! instead of once per row, and the four independent accumulator chains
-//! give the superscalar units something to overlap.  The per-element op
-//! sequence is **exactly** the naive forms' (row 0 first, same zero
-//! skips), so results are bit-identical to [`matvec_naive`] /
-//! [`matvec_t_naive`] in every case — non-finite weights and the sign
-//! of zero included — which keeps the decode parity suite exact.  The
-//! naive forms stay as the reference implementation and the
-//! before/after baseline in `benches/serve_throughput.rs`.
+//! matrix products (the single-token hot path), their batched m-row
+//! forms ([`matmul`] / [`matmul_t`] — the fused speculative-verify
+//! pass), LayerNorm, ReLU, tanh, and a numerically-stable softmax.  No
+//! external BLAS; instead a **three-tier kernel stack** where every
+//! tier is bit-identical to the one below it:
+//!
+//! 1. **naive** ([`matvec_naive`], [`matvec_t_naive`], [`matmul_naive`],
+//!    [`matmul_t_naive`]) — one matrix row per pass.  The semantic
+//!    reference: per-element op order, the `x == 0.0` row skip, and
+//!    non-finite / signed-zero behaviour are all *defined* by these.
+//! 2. **blocked** ([`matvec_blocked`], [`matvec_t_blocked`],
+//!    [`matmul_blocked`], [`matmul_t_blocked`]) — cache-tiled over four
+//!    matrix rows per pass with the per-element op sequence kept
+//!    **exactly** the naive forms' (row 0 first, same zero skips), so
+//!    results are bit-identical in every case.  This is the default
+//!    backend and the byte-parity reference for tier 3.
+//! 3. **simd** (the [`simd`] module, behind the `simd` cargo feature) —
+//!    explicit `std::arch` AVX2 kernels on x86_64 with a portable
+//!    fixed-width-chunk fallback, selected by **runtime CPU-feature
+//!    dispatch**.  Vectorization only ever runs *independent*
+//!    accumulation chains in parallel lanes (across output columns for
+//!    [`matvec`], across output rows for [`matvec_t`]) and never uses
+//!    FMA, so no sum is reassociated and no rounding changes: results
+//!    stay bit-identical to tiers 1–2, which keeps the decode parity
+//!    suites exact with the feature on or off.
+//!
+//! The public [`matvec`] / [`matvec_t`] / [`matmul`] / [`matmul_t`]
+//! entry points resolve to tier 3 when the `simd` feature is enabled
+//! (falling back per the runtime dispatch) and tier 2 otherwise.
+//! `rust/tests/tensor_props.rs` fuzzes every tier against the naive
+//! references, including NaN, ±0.0 and subnormal inputs.
 
 /// y = x @ W where `x: [k]`, `w: [k, n]` row-major → `y: [n]`.
 ///
-/// Blocked axpy: when all four of a block's `x` taps are nonzero (the
-/// common dense case — layernormed activations), four rows of `w`
-/// accumulate into `y` per pass, so each `y[j]` is loaded/stored once
-/// per four input elements.  Blocks with any zero tap (ReLU outputs on
-/// the FFN path are ~half zeros) fall back to the naive row-at-a-time
-/// form with its per-row zero skip — so the op sequence per `y[j]` is
-/// **exactly** [`matvec_naive`]'s in every case, including non-finite
-/// weights and the sign of zero.
+/// Dispatch: the SIMD tier when the `simd` feature is on, the scalar
+/// blocked tier otherwise — bit-identical either way.
 pub fn matvec(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    {
+        simd::matvec(x, w, n, y);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        matvec_blocked(x, w, n, y);
+    }
+}
+
+/// y = x @ Wᵀ where `x: [k]`, `w: [n, k]` row-major → `y: [n]`.
+/// (Used for the tied-embedding logit projection `h @ Eᵀ` — at small D
+/// the single most expensive op per generated token.)
+///
+/// Dispatch: the SIMD tier when the `simd` feature is on, the scalar
+/// blocked tier otherwise — bit-identical either way.
+pub fn matvec_t(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    {
+        simd::matvec_t(x, w, n, y);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        matvec_t_blocked(x, w, n, y);
+    }
+}
+
+/// ys = Xs @ W where `xs: [m, k]` (m activation rows), `w: [k, n]`
+/// row-major → `ys: [m, n]`.  Row r of `ys` is bit-identical to
+/// `matvec(&xs[r*k..], w, n, ..)` — the batch is a pure re-grouping
+/// that streams `w` through cache **once** for all m rows instead of
+/// once per row (the fused speculative-verify win: m = draft block
+/// + 1).
+pub fn matmul(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+    if m == 0 {
+        debug_assert!(ys.is_empty());
+        return;
+    }
+    #[cfg(feature = "simd")]
+    {
+        simd::matmul(xs, m, w, n, ys);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        matmul_blocked(xs, m, w, n, ys);
+    }
+}
+
+/// ys = Xs @ Wᵀ where `xs: [m, k]`, `w: [n, k]` row-major →
+/// `ys: [m, n]`.  Row r of `ys` is bit-identical to
+/// `matvec_t(&xs[r*k..], w, n, ..)`; each 4- (blocked) or 8-row (simd)
+/// block of `w` stays hot in cache across all m activation rows.
+pub fn matmul_t(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+    if m == 0 {
+        debug_assert!(ys.is_empty());
+        return;
+    }
+    #[cfg(feature = "simd")]
+    {
+        simd::matmul_t(xs, m, w, n, ys);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        matmul_t_blocked(xs, m, w, n, ys);
+    }
+}
+
+/// Which kernel backend the public entry points resolve to on this
+/// machine: `"scalar"` (no `simd` feature), `"avx2"`, or `"portable"`
+/// (the chunked fallback).  Benches record it next to their timings.
+pub fn kernel_backend() -> &'static str {
+    #[cfg(feature = "simd")]
+    {
+        simd::backend()
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        "scalar"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier 2: scalar blocked kernels (the default backend and the simd
+// tier's byte-parity reference)
+// ---------------------------------------------------------------------------
+
+/// Blocked-axpy [`matvec`]: when all four of a block's `x` taps are
+/// nonzero (the common dense case — layernormed activations), four rows
+/// of `w` accumulate into `y` per pass, so each `y[j]` is loaded/stored
+/// once per four input elements.  Blocks with any zero tap (ReLU
+/// outputs on the FFN path are ~half zeros) fall back to the naive
+/// row-at-a-time form with its per-row zero skip — so the op sequence
+/// per `y[j]` is **exactly** [`matvec_naive`]'s in every case,
+/// including non-finite weights and the sign of zero.
+pub fn matvec_blocked(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
     let k = x.len();
     debug_assert_eq!(w.len(), k * n, "matvec shape mismatch");
     debug_assert_eq!(y.len(), n);
@@ -70,32 +177,10 @@ pub fn matvec(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
     }
 }
 
-/// Reference (unblocked) [`matvec`]: one row of `w` per pass.
-pub fn matvec_naive(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
-    let k = x.len();
-    debug_assert_eq!(w.len(), k * n, "matvec shape mismatch");
-    debug_assert_eq!(y.len(), n);
-    y.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &w[i * n..(i + 1) * n];
-        for (yj, &wij) in y.iter_mut().zip(row) {
-            *yj += xi * wij;
-        }
-    }
-    let _ = k;
-}
-
-/// y = x @ Wᵀ where `x: [k]`, `w: [n, k]` row-major → `y: [n]`.
-/// (Used for the tied-embedding logit projection `h @ Eᵀ` — at small D
-/// the single most expensive op per generated token.)
-///
-/// Blocked dots: four output rows share one streaming pass over `x`,
-/// with four independent accumulators (each summed in the same order as
-/// [`matvec_t_naive`], so outputs are bit-identical).
-pub fn matvec_t(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+/// Blocked-dot [`matvec_t`]: four output rows share one streaming pass
+/// over `x`, with four independent accumulators (each summed in the
+/// same order as [`matvec_t_naive`], so outputs are bit-identical).
+pub fn matvec_t_blocked(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
     let k = x.len();
     debug_assert_eq!(w.len(), n * k, "matvec_t shape mismatch");
     debug_assert_eq!(y.len(), n);
@@ -129,6 +214,134 @@ pub fn matvec_t(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
     }
 }
 
+/// Blocked [`matmul`]: the i-block loop runs **outermost** and the
+/// activation-row loop inside it, so each four-row slab of `w` is
+/// loaded once for all m rows.  Per row the i-blocks arrive in the same
+/// order (with the same all-nonzero-taps check and zero skips) as
+/// [`matvec_blocked`], so every output row is bit-identical to the
+/// single-row call.
+pub fn matmul_blocked(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+    debug_assert!(m > 0);
+    debug_assert_eq!(xs.len() % m, 0, "matmul activation shape mismatch");
+    let k = xs.len() / m;
+    debug_assert_eq!(w.len(), k * n, "matmul shape mismatch");
+    debug_assert_eq!(ys.len(), m * n);
+    ys.fill(0.0);
+    let blocks = k / 4 * 4;
+    let mut i = 0;
+    while i < blocks {
+        for r in 0..m {
+            let x = &xs[r * k..(r + 1) * k];
+            let y = &mut ys[r * n..(r + 1) * n];
+            let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                let r0 = &w[i * n..(i + 1) * n];
+                let r1 = &w[(i + 1) * n..(i + 2) * n];
+                let r2 = &w[(i + 2) * n..(i + 3) * n];
+                let r3 = &w[(i + 3) * n..(i + 4) * n];
+                for j in 0..n {
+                    y[j] = y[j] + x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+                }
+            } else {
+                for ii in i..i + 4 {
+                    let xi = x[ii];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let row = &w[ii * n..(ii + 1) * n];
+                    for (yj, &wij) in y.iter_mut().zip(row) {
+                        *yj += xi * wij;
+                    }
+                }
+            }
+        }
+        i += 4;
+    }
+    for i in blocks..k {
+        let row = &w[i * n..(i + 1) * n];
+        for r in 0..m {
+            let xi = xs[r * k + i];
+            if xi == 0.0 {
+                continue;
+            }
+            let y = &mut ys[r * n..(r + 1) * n];
+            for (yj, &wij) in y.iter_mut().zip(row) {
+                *yj += xi * wij;
+            }
+        }
+    }
+}
+
+/// Blocked [`matmul_t`]: the output-row (j) block loop runs outermost
+/// and the activation-row loop inside it, so each four-row slab of `w`
+/// stays hot across all m rows.  Per activation row the j-blocks and
+/// their accumulation order match [`matvec_t_blocked`] exactly.
+pub fn matmul_t_blocked(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+    debug_assert!(m > 0);
+    debug_assert_eq!(xs.len() % m, 0, "matmul_t activation shape mismatch");
+    let k = xs.len() / m;
+    debug_assert_eq!(w.len(), n * k, "matmul_t shape mismatch");
+    debug_assert_eq!(ys.len(), m * n);
+    let blocks = n / 4 * 4;
+    let mut j = 0;
+    while j < blocks {
+        let r0 = &w[j * k..(j + 1) * k];
+        let r1 = &w[(j + 1) * k..(j + 2) * k];
+        let r2 = &w[(j + 2) * k..(j + 3) * k];
+        let r3 = &w[(j + 3) * k..(j + 4) * k];
+        for r in 0..m {
+            let x = &xs[r * k..(r + 1) * k];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (i, &xi) in x.iter().enumerate() {
+                a0 += xi * r0[i];
+                a1 += xi * r1[i];
+                a2 += xi * r2[i];
+                a3 += xi * r3[i];
+            }
+            let y = &mut ys[r * n..(r + 1) * n];
+            y[j] = a0;
+            y[j + 1] = a1;
+            y[j + 2] = a2;
+            y[j + 3] = a3;
+        }
+        j += 4;
+    }
+    for j in blocks..n {
+        let row = &w[j * k..(j + 1) * k];
+        for r in 0..m {
+            let x = &xs[r * k..(r + 1) * k];
+            let mut acc = 0.0f32;
+            for (xi, wji) in x.iter().zip(row) {
+                acc += xi * wji;
+            }
+            ys[r * n + j] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier 1: naive reference kernels
+// ---------------------------------------------------------------------------
+
+/// Reference (unblocked) [`matvec`]: one row of `w` per pass, skipping
+/// rows whose `x` tap is zero.  Defines the op order every faster tier
+/// must reproduce bit-for-bit.
+pub fn matvec_naive(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+    let k = x.len();
+    debug_assert_eq!(w.len(), k * n, "matvec shape mismatch");
+    debug_assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * n..(i + 1) * n];
+        for (yj, &wij) in y.iter_mut().zip(row) {
+            *yj += xi * wij;
+        }
+    }
+}
+
 /// Reference (unblocked) [`matvec_t`]: one dot product per output row.
 pub fn matvec_t_naive(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
     let k = x.len();
@@ -142,6 +355,432 @@ pub fn matvec_t_naive(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
         y[j] = acc;
     }
 }
+
+/// Reference [`matmul`]: m independent [`matvec_naive`] calls.
+pub fn matmul_naive(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+    if m == 0 {
+        debug_assert!(ys.is_empty());
+        return;
+    }
+    let k = xs.len() / m;
+    for r in 0..m {
+        matvec_naive(&xs[r * k..(r + 1) * k], w, n, &mut ys[r * n..(r + 1) * n]);
+    }
+}
+
+/// Reference [`matmul_t`]: m independent [`matvec_t_naive`] calls.
+pub fn matmul_t_naive(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+    if m == 0 {
+        debug_assert!(ys.is_empty());
+        return;
+    }
+    let k = xs.len() / m;
+    for r in 0..m {
+        matvec_t_naive(&xs[r * k..(r + 1) * k], w, n, &mut ys[r * n..(r + 1) * n]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier 3: explicit-SIMD kernels (feature `simd`)
+// ---------------------------------------------------------------------------
+
+/// Explicit-SIMD kernel tier: AVX2 `std::arch` intrinsics on x86_64,
+/// a portable fixed-width-chunk form elsewhere (or when the CPU lacks
+/// AVX2), chosen by **runtime feature detection** on every entry (the
+/// `is_x86_feature_detected!` result is cached by std).
+///
+/// **Bit-exactness strategy.**  The only parallelism used is across
+/// *independent* accumulation chains — output columns for `matvec` /
+/// `matmul` (each `y[j]` is its own chain), output rows for `matvec_t`
+/// / `matmul_t` (eight dot products side by side, each lane summing in
+/// ascending-i order).  No sum is ever split across lanes, and FMA is
+/// never used (a fused multiply-add rounds once where `mul` + `add`
+/// round twice, which would diverge from the scalar reference).  The
+/// zero-tap row skip is preserved verbatim, so non-finite weights and
+/// signed zeros behave exactly as in tier 1.
+#[cfg(feature = "simd")]
+pub mod simd {
+    /// The backend runtime dispatch resolves to here: `"avx2"` or
+    /// `"portable"`.
+    pub fn backend() -> &'static str {
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+        "portable"
+    }
+
+    pub fn matvec(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+        debug_assert_eq!(w.len(), x.len() * n, "matvec shape mismatch");
+        debug_assert_eq!(y.len(), n);
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability was just checked.
+            unsafe { x86::matvec(x, w, n, y) };
+            return;
+        }
+        portable::matvec(x, w, n, y);
+    }
+
+    pub fn matvec_t(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+        debug_assert_eq!(w.len(), n * x.len(), "matvec_t shape mismatch");
+        debug_assert_eq!(y.len(), n);
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability was just checked.
+            unsafe { x86::matmul_t(x, 1, w, n, y) };
+            return;
+        }
+        portable::matvec_t(x, w, n, y);
+    }
+
+    pub fn matmul(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+        debug_assert!(m > 0);
+        debug_assert_eq!(xs.len() % m, 0, "matmul activation shape mismatch");
+        debug_assert_eq!(w.len(), (xs.len() / m) * n, "matmul shape mismatch");
+        debug_assert_eq!(ys.len(), m * n);
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability was just checked.
+            unsafe { x86::matmul(xs, m, w, n, ys) };
+            return;
+        }
+        portable::matmul(xs, m, w, n, ys);
+    }
+
+    pub fn matmul_t(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+        debug_assert!(m > 0);
+        debug_assert_eq!(xs.len() % m, 0, "matmul_t activation shape mismatch");
+        debug_assert_eq!(w.len(), n * (xs.len() / m), "matmul_t shape mismatch");
+        debug_assert_eq!(ys.len(), m * n);
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability was just checked.
+            unsafe { x86::matmul_t(xs, m, w, n, ys) };
+            return;
+        }
+        portable::matmul_t(xs, m, w, n, ys);
+    }
+
+    /// Portable chunked fallback: the same loop structure as the AVX2
+    /// kernels, written over fixed-width `[f32; 8]` lane arrays so any
+    /// backend's autovectorizer can lift them — and so the accumulation
+    /// order is the scalar reference's whether or not it does.
+    mod portable {
+        use super::super::{matmul_blocked, matvec_blocked};
+
+        /// The axpy inner loops of the blocked form are already
+        /// element-independent (each `y[j]` its own chain), so tier 2
+        /// *is* the portable chunked form for `matvec`.
+        pub fn matvec(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+            matvec_blocked(x, w, n, y);
+        }
+
+        pub fn matmul(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+            matmul_blocked(xs, m, w, n, ys);
+        }
+
+        /// Eight output rows per pass, one lane-array slot per row;
+        /// each slot accumulates its dot in ascending-i order (the
+        /// naive order), so lanes never share a sum.
+        pub fn matvec_t(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+            let k = x.len();
+            let blocks = n / 8 * 8;
+            let mut j = 0;
+            while j < blocks {
+                let mut acc = [0.0f32; 8];
+                for (i, &xi) in x.iter().enumerate() {
+                    for (l, a) in acc.iter_mut().enumerate() {
+                        *a += xi * w[(j + l) * k + i];
+                    }
+                }
+                y[j..j + 8].copy_from_slice(&acc);
+                j += 8;
+            }
+            for j in blocks..n {
+                let row = &w[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (xi, wji) in x.iter().zip(row) {
+                    acc += xi * wji;
+                }
+                y[j] = acc;
+            }
+        }
+
+        /// [`matvec_t`] with the j-block loop outermost and the
+        /// activation-row loop inside, so each eight-row slab of `w`
+        /// stays hot across all m rows.
+        pub fn matmul_t(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+            let k = xs.len() / m;
+            let blocks = n / 8 * 8;
+            let mut j = 0;
+            while j < blocks {
+                for r in 0..m {
+                    let x = &xs[r * k..(r + 1) * k];
+                    let mut acc = [0.0f32; 8];
+                    for (i, &xi) in x.iter().enumerate() {
+                        for (l, a) in acc.iter_mut().enumerate() {
+                            *a += xi * w[(j + l) * k + i];
+                        }
+                    }
+                    ys[r * n + j..r * n + j + 8].copy_from_slice(&acc);
+                }
+                j += 8;
+            }
+            for j in blocks..n {
+                let row = &w[j * k..(j + 1) * k];
+                for r in 0..m {
+                    let x = &xs[r * k..(r + 1) * k];
+                    let mut acc = 0.0f32;
+                    for (xi, wji) in x.iter().zip(row) {
+                        acc += xi * wji;
+                    }
+                    ys[r * n + j] = acc;
+                }
+            }
+        }
+    }
+
+    /// AVX2 kernels.  Every function carries
+    /// `#[target_feature(enable = "avx2")]` and is only reached through
+    /// the runtime-dispatch gates above.
+    #[cfg(target_arch = "x86_64")]
+    mod x86 {
+        use std::arch::x86_64::*;
+
+        /// y += a · row, skipping a == 0 exactly like the naive form
+        /// (computing `0.0 * NaN` would differ).  mul + add, never FMA.
+        ///
+        /// # Safety
+        /// Caller must have verified AVX2 support; `row.len() == y.len()`.
+        #[target_feature(enable = "avx2")]
+        unsafe fn axpy(a: f32, row: &[f32], y: &mut [f32]) {
+            if a == 0.0 {
+                return;
+            }
+            let n = y.len();
+            let av = _mm256_set1_ps(a);
+            let lanes = n / 8 * 8;
+            let mut j = 0;
+            while j < lanes {
+                let acc = _mm256_add_ps(
+                    _mm256_loadu_ps(y.as_ptr().add(j)),
+                    _mm256_mul_ps(av, _mm256_loadu_ps(row.as_ptr().add(j))),
+                );
+                _mm256_storeu_ps(y.as_mut_ptr().add(j), acc);
+                j += 8;
+            }
+            for j in lanes..n {
+                y[j] += a * row[j];
+            }
+        }
+
+        /// One four-tap block of the blocked-axpy matvec: all-nonzero
+        /// blocks vectorize across output columns (each lane is one
+        /// `y[j]` chain, updated in the reference's left-to-right
+        /// order); any zero tap falls back to per-row [`axpy`] with its
+        /// skip.
+        ///
+        /// # Safety
+        /// Caller must have verified AVX2 support; `x.len() >= i + 4`
+        /// and `w` must hold rows `i..i+4` of length `y.len()`.
+        #[target_feature(enable = "avx2")]
+        unsafe fn axpy4(x: &[f32], i: usize, w: &[f32], n: usize, y: &mut [f32]) {
+            let (x0, x1, x2, x3) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+            if x0 != 0.0 && x1 != 0.0 && x2 != 0.0 && x3 != 0.0 {
+                let r0 = w.as_ptr().add(i * n);
+                let r1 = w.as_ptr().add((i + 1) * n);
+                let r2 = w.as_ptr().add((i + 2) * n);
+                let r3 = w.as_ptr().add((i + 3) * n);
+                let (v0, v1, v2, v3) = (
+                    _mm256_set1_ps(x0),
+                    _mm256_set1_ps(x1),
+                    _mm256_set1_ps(x2),
+                    _mm256_set1_ps(x3),
+                );
+                let lanes = n / 8 * 8;
+                let mut j = 0;
+                while j < lanes {
+                    let mut acc = _mm256_loadu_ps(y.as_ptr().add(j));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(v0, _mm256_loadu_ps(r0.add(j))));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(v1, _mm256_loadu_ps(r1.add(j))));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(v2, _mm256_loadu_ps(r2.add(j))));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(v3, _mm256_loadu_ps(r3.add(j))));
+                    _mm256_storeu_ps(y.as_mut_ptr().add(j), acc);
+                    j += 8;
+                }
+                for j in lanes..n {
+                    y[j] = y[j]
+                        + x0 * *r0.add(j)
+                        + x1 * *r1.add(j)
+                        + x2 * *r2.add(j)
+                        + x3 * *r3.add(j);
+                }
+            } else {
+                for ii in i..i + 4 {
+                    axpy(x[ii], &w[ii * n..(ii + 1) * n], y);
+                }
+            }
+        }
+
+        /// # Safety
+        /// Caller must have verified AVX2 support and the
+        /// `matvec` shape contract.
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn matvec(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+            y.fill(0.0);
+            let k = x.len();
+            let blocks = k / 4 * 4;
+            let mut i = 0;
+            while i < blocks {
+                axpy4(x, i, w, n, y);
+                i += 4;
+            }
+            for i in blocks..k {
+                axpy(x[i], &w[i * n..(i + 1) * n], y);
+            }
+        }
+
+        /// # Safety
+        /// Caller must have verified AVX2 support and the
+        /// `matmul` shape contract (`m > 0`).
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn matmul(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+            ys.fill(0.0);
+            let k = xs.len() / m;
+            let blocks = k / 4 * 4;
+            // i-blocks outermost: one pass over each four-row slab of
+            // `w` serves all m activation rows (per row, the block
+            // order matches the single-row kernel, so rows stay
+            // bit-identical to it).
+            let mut i = 0;
+            while i < blocks {
+                for r in 0..m {
+                    axpy4(&xs[r * k..(r + 1) * k], i, w, n, &mut ys[r * n..(r + 1) * n]);
+                }
+                i += 4;
+            }
+            for i in blocks..k {
+                let row = &w[i * n..(i + 1) * n];
+                for r in 0..m {
+                    axpy(xs[r * k + i], row, &mut ys[r * n..(r + 1) * n]);
+                }
+            }
+        }
+
+        /// Eight dot products at once: rows `j..j+8` of `w` against
+        /// `x`, each lane accumulating in ascending-i order (so every
+        /// lane reproduces the naive dot bit-for-bit).  Full 8×8 tiles
+        /// are loaded row-wise and transposed in registers; the i
+        /// remainder gathers one strided lane-load per row.
+        ///
+        /// # Safety
+        /// Caller must have verified AVX2 support; `w` must hold rows
+        /// `j..j+8` of length `k == x.len()`.
+        #[target_feature(enable = "avx2")]
+        unsafe fn dot8(x: &[f32], w: &[f32], k: usize, j: usize) -> __m256 {
+            let base = w.as_ptr().add(j * k);
+            let mut acc = _mm256_setzero_ps();
+            let blocks = k / 8 * 8;
+            let mut i = 0;
+            while i < blocks {
+                let r0 = _mm256_loadu_ps(base.add(i));
+                let r1 = _mm256_loadu_ps(base.add(k + i));
+                let r2 = _mm256_loadu_ps(base.add(2 * k + i));
+                let r3 = _mm256_loadu_ps(base.add(3 * k + i));
+                let r4 = _mm256_loadu_ps(base.add(4 * k + i));
+                let r5 = _mm256_loadu_ps(base.add(5 * k + i));
+                let r6 = _mm256_loadu_ps(base.add(6 * k + i));
+                let r7 = _mm256_loadu_ps(base.add(7 * k + i));
+                // 8×8 in-register transpose: c_m lane l = w[(j+l)*k + i+m].
+                let t0 = _mm256_unpacklo_ps(r0, r1);
+                let t1 = _mm256_unpackhi_ps(r0, r1);
+                let t2 = _mm256_unpacklo_ps(r2, r3);
+                let t3 = _mm256_unpackhi_ps(r2, r3);
+                let t4 = _mm256_unpacklo_ps(r4, r5);
+                let t5 = _mm256_unpackhi_ps(r4, r5);
+                let t6 = _mm256_unpacklo_ps(r6, r7);
+                let t7 = _mm256_unpackhi_ps(r6, r7);
+                let s0 = _mm256_shuffle_ps::<0x44>(t0, t2);
+                let s1 = _mm256_shuffle_ps::<0xEE>(t0, t2);
+                let s2 = _mm256_shuffle_ps::<0x44>(t1, t3);
+                let s3 = _mm256_shuffle_ps::<0xEE>(t1, t3);
+                let s4 = _mm256_shuffle_ps::<0x44>(t4, t6);
+                let s5 = _mm256_shuffle_ps::<0xEE>(t4, t6);
+                let s6 = _mm256_shuffle_ps::<0x44>(t5, t7);
+                let s7 = _mm256_shuffle_ps::<0xEE>(t5, t7);
+                let c0 = _mm256_permute2f128_ps::<0x20>(s0, s4);
+                let c1 = _mm256_permute2f128_ps::<0x20>(s1, s5);
+                let c2 = _mm256_permute2f128_ps::<0x20>(s2, s6);
+                let c3 = _mm256_permute2f128_ps::<0x20>(s3, s7);
+                let c4 = _mm256_permute2f128_ps::<0x31>(s0, s4);
+                let c5 = _mm256_permute2f128_ps::<0x31>(s1, s5);
+                let c6 = _mm256_permute2f128_ps::<0x31>(s2, s6);
+                let c7 = _mm256_permute2f128_ps::<0x31>(s3, s7);
+                // Ascending-i accumulation, one mul + one add per step.
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i]), c0));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i + 1]), c1));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i + 2]), c2));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i + 3]), c3));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i + 4]), c4));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i + 5]), c5));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i + 6]), c6));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i + 7]), c7));
+                i += 8;
+            }
+            for i in blocks..k {
+                let wv = _mm256_set_ps(
+                    *base.add(7 * k + i),
+                    *base.add(6 * k + i),
+                    *base.add(5 * k + i),
+                    *base.add(4 * k + i),
+                    *base.add(3 * k + i),
+                    *base.add(2 * k + i),
+                    *base.add(k + i),
+                    *base.add(i),
+                );
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(x[i]), wv));
+            }
+            acc
+        }
+
+        /// Transposed product, batched (m = 1 is `matvec_t`): j-blocks
+        /// of eight outermost so each eight-row slab of `w` is streamed
+        /// once for all m activation rows.
+        ///
+        /// # Safety
+        /// Caller must have verified AVX2 support and the
+        /// `matmul_t` shape contract (`m > 0`).
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn matmul_t(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32]) {
+            let k = xs.len() / m;
+            let blocks = n / 8 * 8;
+            let mut j = 0;
+            while j < blocks {
+                for r in 0..m {
+                    let acc = dot8(&xs[r * k..(r + 1) * k], w, k, j);
+                    _mm256_storeu_ps(ys.as_mut_ptr().add(r * n + j), acc);
+                }
+                j += 8;
+            }
+            for j in blocks..n {
+                let row = &w[j * k..(j + 1) * k];
+                for r in 0..m {
+                    let x = &xs[r * k..(r + 1) * k];
+                    let mut acc = 0.0f32;
+                    for (xi, wji) in x.iter().zip(row) {
+                        acc += xi * wji;
+                    }
+                    ys[r * n + j] = acc;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise ops
+// ---------------------------------------------------------------------------
 
 /// In-place y += x.
 pub fn add_assign(y: &mut [f32], x: &[f32]) {
@@ -203,28 +842,116 @@ mod tests {
         assert_eq!(y, [9.0, 12.0, 15.0]);
     }
 
-    #[test]
-    fn blocked_matches_naive_bit_for_bit() {
-        // Odd k and n exercise both the 4-wide blocks and the remainders;
-        // a sprinkled zero exercises the sparsity skip.
-        let (k, n) = (13, 11);
+    /// Deterministic awkward test shapes: remainders in every blocking
+    /// width (4 and 8), plus sprinkled zeros for the sparsity skip.
+    fn fixture(k: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let x: Vec<f32> = (0..k)
             .map(|i| if i % 5 == 2 { 0.0 } else { 0.37 * (i as f32) - 1.9 })
             .collect();
         let w: Vec<f32> = (0..k * n).map(|i| 0.11 * ((i * 7 % 23) as f32) - 1.2).collect();
-        let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
-        matvec(&x, &w, n, &mut fast);
-        matvec_naive(&x, &w, n, &mut slow);
-        for (a, b) in fast.iter().zip(&slow) {
-            assert_eq!(a.to_bits(), b.to_bits(), "matvec diverged from reference");
-        }
-
         let wt: Vec<f32> = (0..n * k).map(|i| 0.09 * ((i * 5 % 19) as f32) - 0.8).collect();
-        matvec_t(&x, &wt, n, &mut fast);
-        matvec_t_naive(&x, &wt, n, &mut slow);
-        for (a, b) in fast.iter().zip(&slow) {
-            assert_eq!(a.to_bits(), b.to_bits(), "matvec_t diverged from reference");
+        (x, w, wt)
+    }
+
+    fn assert_bits_eq(fast: &[f32], slow: &[f32], what: &str) {
+        for (i, (a, b)) in fast.iter().zip(slow).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{what} diverged from reference at {i}");
         }
+    }
+
+    #[test]
+    fn dispatched_and_blocked_match_naive_bit_for_bit() {
+        for (k, n) in [(13, 11), (16, 24), (7, 3), (29, 17), (8, 8)] {
+            let (x, w, wt) = fixture(k, n);
+            let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
+            matvec_naive(&x, &w, n, &mut slow);
+            matvec(&x, &w, n, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec");
+            matvec_blocked(&x, &w, n, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_blocked");
+
+            matvec_t_naive(&x, &wt, n, &mut slow);
+            matvec_t(&x, &wt, n, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_t");
+            matvec_t_blocked(&x, &wt, n, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_t_blocked");
+        }
+    }
+
+    #[test]
+    fn batched_rows_match_single_row_calls_bit_for_bit() {
+        for (m, k, n) in [(1, 13, 11), (5, 16, 24), (9, 7, 3), (3, 8, 8)] {
+            let xs: Vec<f32> = (0..m * k)
+                .map(|i| if i % 7 == 3 { 0.0 } else { 0.21 * (i as f32) - 1.4 })
+                .collect();
+            let (_, w, wt) = fixture(k, n);
+            let mut batch = vec![0.0f32; m * n];
+            let mut rows = vec![0.0f32; m * n];
+
+            matmul(&xs, m, &w, n, &mut batch);
+            matmul_naive(&xs, m, &w, n, &mut rows);
+            assert_bits_eq(&batch, &rows, "matmul");
+            matmul_blocked(&xs, m, &w, n, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_blocked");
+
+            matmul_t(&xs, m, &wt, n, &mut batch);
+            matmul_t_naive(&xs, m, &wt, n, &mut rows);
+            assert_bits_eq(&batch, &rows, "matmul_t");
+            matmul_t_blocked(&xs, m, &wt, n, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_t_blocked");
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_empty_shapes_are_noops() {
+        matmul(&[], 0, &[], 5, &mut []);
+        matmul_t(&[], 0, &[], 5, &mut []);
+        let mut y = [0.0f32; 0];
+        matvec(&[], &[], 0, &mut y);
+        matvec_t(&[], &[], 0, &mut y);
+        // k = 0 with outputs: matmul zeroes, matmul_t writes zero dots.
+        let mut ys = [7.0f32; 6];
+        matmul(&[], 2, &[], 3, &mut ys);
+        assert_eq!(ys, [0.0; 6]);
+        let mut ys = [7.0f32; 6];
+        matmul_t(&[], 2, &[], 3, &mut ys);
+        assert_eq!(ys, [0.0; 6]);
+    }
+
+    #[test]
+    fn non_finite_and_signed_zero_semantics_match_naive() {
+        // A zero tap against a NaN weight row must be *skipped* (0 * NaN
+        // is NaN — the skip is semantic, not just a fast path), and
+        // negative zero must count as zero.
+        let k = 9;
+        let n = 10;
+        let mut x: Vec<f32> = (0..k).map(|i| 0.3 * i as f32 - 1.0).collect();
+        x[2] = 0.0;
+        x[3] = -0.0;
+        x[7] = f32::NAN;
+        let mut w = vec![0.5f32; k * n];
+        for j in 0..n {
+            w[2 * n + j] = f32::NAN;
+            w[3 * n + j] = f32::INFINITY;
+        }
+        let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
+        matvec_naive(&x, &w, n, &mut slow);
+        matvec(&x, &w, n, &mut fast);
+        assert_bits_eq(&fast, &slow, "matvec with NaN/±0.0");
+        assert!(slow.iter().all(|v| v.is_nan()), "NaN tap must propagate");
+
+        let mut wt = vec![0.25f32; n * k];
+        wt[5] = f32::NEG_INFINITY;
+        matvec_t_naive(&x, &wt, n, &mut slow);
+        matvec_t(&x, &wt, n, &mut fast);
+        assert_bits_eq(&fast, &slow, "matvec_t with NaN/±0.0");
+    }
+
+    #[test]
+    fn kernel_backend_is_stable() {
+        let b = kernel_backend();
+        assert!(["scalar", "avx2", "portable"].contains(&b), "unknown backend {b}");
+        assert_eq!(b, kernel_backend());
     }
 
     #[test]

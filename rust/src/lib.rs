@@ -199,6 +199,33 @@
 //! `cargo bench --bench speculative` records accepted-tokens-per-round
 //! and end-to-end tok/s vs plain decoding into `BENCH_spec.json`.
 //!
+//! ## Performance: kernel tiers and the fused verify pass
+//!
+//! The native forward pass runs on a three-tier kernel stack in
+//! [`infer::tensor`]: a **naive** reference that defines the exact
+//! per-element operation order, cache-tiled **blocked** scalar kernels
+//! (the default hot path), and — behind `--features simd` — explicit
+//! `std::arch` **AVX2** kernels chosen by runtime CPU detection with a
+//! portable chunked fallback ([`infer::tensor::kernel_backend`] says
+//! which is live).  Every tier is **bit-identical** to naive: no FMA,
+//! vectorisation only across independent accumulation chains, and the
+//! zero-tap row skip preserved — so the byte-exactness contracts
+//! (decode/fork/stream/spec parity) hold under any tier, fuzzed by
+//! `rust/tests/tensor_props.rs` on NaN/±0.0/subnormal inputs and
+//! remainder-heavy shapes.
+//!
+//! Speculative verify rounds score the whole draft block + committed
+//! token in **one fused batched pass** per layer
+//! ([`infer::DecodeSession::step_batch`] /
+//! [`infer::Decoder::step_batch`], reusable slab-allocated scratch,
+//! [`infer::DecodeSession::rewind_batch`] to keep only the accepted
+//! prefix) instead of draft+1 sequential steps with a snapshot per
+//! position.  Same bytes; each weight matrix streams through cache
+//! once per round.  On by default ([`infer::SpecCfg`]'s `fused`);
+//! `fused: false` keeps the sequential path for A/B benching, and
+//! `cargo bench --bench serve_throughput` records the kernel-tier and
+//! batched-row timings into `BENCH_serve.json`.
+//!
 //! One-off generation keeps the simpler wrappers —
 //! [`generation::generate`] (single session) and
 //! [`generation::generate_batch`] (fixed membership) — which are thin

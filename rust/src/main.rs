@@ -326,7 +326,11 @@ fn speculation_from_args(a: &Args) -> Result<Option<SpecCfg>> {
     if draft_len == 0 {
         return Ok(None);
     }
-    Ok(Some(SpecCfg { drafter: DrafterKind::parse(&a.str("drafter"))?, draft_len }))
+    Ok(Some(SpecCfg {
+        drafter: DrafterKind::parse(&a.str("drafter"))?,
+        draft_len,
+        ..Default::default()
+    }))
 }
 
 /// One aggregate line of speculative-decoding accounting for a batch.
@@ -344,6 +348,13 @@ fn print_spec_summary(completions: &[hsm::serve::Completion]) {
             agg.emitted_per_round(),
             100.0 * agg.acceptance_rate()
         );
+        if agg.fused_passes > 0 {
+            println!(
+                "speculation: {} fused verify passes, {:.2} rows/pass",
+                agg.fused_passes,
+                agg.rows_per_fused_pass()
+            );
+        }
     }
 }
 

@@ -499,14 +499,22 @@ impl StreamOut {
 }
 
 /// Per-sequence speculative-decoding state: the drafter plus reusable
-/// round buffers (draft block, scored logit rows, per-position
-/// snapshots) and the request's acceptance accounting.
+/// round buffers (draft block, scored token block, logit rows,
+/// per-position snapshots for the sequential path) and the request's
+/// acceptance accounting.
 struct SpecRunner {
     drafter: Box<dyn Drafter>,
     draft_len: usize,
+    /// Score rounds with one fused `step_batch`/`rewind_batch` pass
+    /// ([`SpecCfg::fused`] ∧ the decoder supports it); otherwise step +
+    /// snapshot per position.
+    fused: bool,
     stats: SpecStats,
     draft: Vec<u32>,
+    /// Fused path: the scored block `[last, d_1..d_k]`.
+    block: Vec<u32>,
     logits: Vec<Vec<f32>>,
+    /// Sequential path only: the per-position restore targets.
     snaps: Vec<SessionState>,
 }
 
@@ -592,8 +600,10 @@ fn admit<D: Decoder>(
             dec.drafter(&sc.drafter).map(|drafter| SpecRunner {
                 drafter,
                 draft_len: sc.draft_len,
+                fused: sc.fused && dec.supports_step_batch(),
                 stats: SpecStats::default(),
                 draft: Vec::new(),
+                block: Vec::new(),
                 logits: Vec::new(),
                 snaps: Vec::new(),
             })
@@ -696,8 +706,11 @@ fn advance<D: Decoder>(
 /// steps.  Byte-exactness argument, inductively per round:
 ///
 /// * The full model scores the whole block `[last, d_1, .., d_k]` on
-///   the sequence's own decoder, snapshotting after every step — the
-///   logit row at position i is conditioned on `last, d_1..d_i`.
+///   the sequence's own decoder — the logit row at position i is
+///   conditioned on `last, d_1..d_i`.  Fused path: one multi-row
+///   `step_batch` whose rows are bit-identical to sequential steps by
+///   construction.  Sequential path (decoders without batch support,
+///   or [`SpecCfg::fused`] off): one step + snapshot per position.
 /// * The accept pass samples each scored row **with the request's RNG
 ///   stream, in emission order** ([`sample_logits`], exactly one draw
 ///   per emitted token — the same consumption plain decoding makes).
@@ -724,16 +737,15 @@ fn advance<D: Decoder>(
 /// a slice may overshoot by up to the block length — pure scheduling,
 /// which never changes text.
 ///
-/// **Cost shape (deliberate):** the scoring pass always spends k+1
-/// full-model steps, so on this sequential scalar backend a rejected
-/// suffix is wasted work and low-acceptance workloads decode *slower*
-/// than plain stepping — `benches/speculative.rs` quantifies exactly
-/// that trade.  Scoring the whole block up front (rather than
-/// interleaving sample-then-step, which would never waste a step but
-/// also never need forks) is the shape whose verify pass can be fused
-/// into one multi-token pass — the batched-verify backend the ROADMAP
-/// lists next — and it is what exercises the snapshot/rewind machinery
-/// this subsystem exists to prove out.
+/// **Cost shape:** the scoring pass always spends k+1 full-model
+/// positions, so a rejected suffix is wasted work — but scoring the
+/// whole block up front is exactly the shape that fuses: the fused
+/// path scores all k+1 positions in **one `step_batch` pass per
+/// round**, streaming each weight matrix through cache once for the
+/// block and replacing the per-position snapshot clones (O(pos · D)
+/// each for attention layers) with a single `rewind_batch`.
+/// `benches/speculative.rs` quantifies the fused-vs-sequential trade
+/// on the same workloads, byte parity asserted.
 fn advance_speculative<D: Decoder>(
     seq: &mut Active<D>,
     tok: &Tokenizer,
@@ -781,23 +793,47 @@ fn advance_speculative<D: Decoder>(
         spec.draft.truncate(k_max);
         let k = spec.draft.len();
 
-        // Scoring pass: feed `last, d_1..d_k`, recording the logit row
-        // and a state snapshot at every position (the restore targets).
-        spec.snaps.clear();
-        for i in 0..=k {
-            let t = if i == 0 { seq.last } else { spec.draft[i - 1] };
-            let logits = seq.dec.step(t)?;
-            if spec.logits.len() <= i {
-                spec.logits.push(logits.to_vec());
-            } else {
-                spec.logits[i].clear();
-                spec.logits[i].extend_from_slice(logits);
+        // Scoring pass: feed `last, d_1..d_k`.
+        let rows = k + 1;
+        let fused = spec.fused;
+        if fused {
+            // One fused multi-row pass for the whole block; rewind
+            // replaces the per-position snapshots.
+            let vocab = seq.dec.manifest().vocab;
+            spec.block.clear();
+            spec.block.push(seq.last);
+            spec.block.extend_from_slice(&spec.draft);
+            let logits = seq.dec.step_batch(&spec.block)?;
+            for i in 0..rows {
+                let row = &logits[i * vocab..(i + 1) * vocab];
+                if spec.logits.len() <= i {
+                    spec.logits.push(row.to_vec());
+                } else {
+                    spec.logits[i].clear();
+                    spec.logits[i].extend_from_slice(row);
+                }
             }
-            let snap = seq
-                .dec
-                .snapshot()
-                .ok_or_else(|| anyhow!("speculative decoding needs snapshot support"))?;
-            spec.snaps.push(snap);
+            spec.stats.fused_passes += 1;
+            spec.stats.fused_rows += rows as u64;
+        } else {
+            // Sequential fallback: record the logit row and a state
+            // snapshot at every position (the restore targets).
+            spec.snaps.clear();
+            for i in 0..=k {
+                let t = if i == 0 { seq.last } else { spec.draft[i - 1] };
+                let logits = seq.dec.step(t)?;
+                if spec.logits.len() <= i {
+                    spec.logits.push(logits.to_vec());
+                } else {
+                    spec.logits[i].clear();
+                    spec.logits[i].extend_from_slice(logits);
+                }
+                let snap = seq
+                    .dec
+                    .snapshot()
+                    .ok_or_else(|| anyhow!("speculative decoding needs snapshot support"))?;
+                spec.snaps.push(snap);
+            }
         }
 
         // Accept pass: emit full-model samples until one disagrees with
@@ -845,9 +881,18 @@ fn advance_speculative<D: Decoder>(
             // session is reset at its next admission).
             return Ok(Some(f));
         }
-        // Rewind to the snapshot whose consumed tokens are exactly the
-        // emitted history (`last, x_0..x_{m-2}`); x_{m-1} stays pending.
-        seq.dec.restore(&spec.snaps[emitted - 1])?;
+        // Rewind so the consumed tokens are exactly the emitted history
+        // (`last, x_0..x_{m-2}`); x_{m-1} stays pending.  Fused: keep
+        // the emitted prefix of the batch (a full-acceptance round
+        // needs no rewind at all).  Sequential: restore the matching
+        // snapshot.
+        if fused {
+            if emitted < rows {
+                seq.dec.rewind_batch(emitted)?;
+            }
+        } else {
+            seq.dec.restore(&spec.snaps[emitted - 1])?;
+        }
         if quantum > 0 && sliced >= quantum {
             return Ok(None);
         }
@@ -1712,7 +1757,7 @@ mod tests {
             ] {
                 let cfg = ServeCfg {
                     threads,
-                    speculation: Some(SpecCfg { drafter, draft_len: 3 }),
+                    speculation: Some(SpecCfg { drafter, draft_len: 3, ..Default::default() }),
                     ..base.clone()
                 };
                 let spec = serve(&model, &tok, reqs(), &cfg).unwrap();

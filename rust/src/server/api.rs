@@ -12,8 +12,11 @@
 //!   (+ `"error"` detail when `finish` is `"rejected"`;
 //!   `cached_prefix_len` counts prompt tokens served from the shared
 //!   prefix cache — 0 on a cold prefill; + `"spec": {"rounds": ..,
-//!   "drafted": .., "accepted": .., "emitted": ..}` when the server
-//!   decoded the request speculatively).
+//!   "drafted": .., "accepted": .., "emitted": .., "fused_passes": ..,
+//!   "fused_rows": .., "rows_per_fused_pass": ..}` when the server
+//!   decoded the request speculatively — the `fused_*` fields count
+//!   batched verify passes and the rows they scored, 0 when the
+//!   sequential verify path ran).
 //! * stream events (one SSE `data:` payload each):
 //!   `{"request_id": 7, "token": 512, "text_delta": "..."}` per token,
 //!   then `{"request_id": 7, "done": true, "text_delta": "...",
@@ -115,6 +118,9 @@ pub fn completion_to_json(c: &Completion) -> Value {
                 ("drafted", json::num(s.drafted as f64)),
                 ("accepted", json::num(s.accepted as f64)),
                 ("emitted", json::num(s.emitted as f64)),
+                ("fused_passes", json::num(s.fused_passes as f64)),
+                ("fused_rows", json::num(s.fused_rows as f64)),
+                ("rows_per_fused_pass", json::num(s.rows_per_fused_pass())),
             ]),
         ));
     }
@@ -136,6 +142,8 @@ pub fn completion_from_json(v: &Value) -> Result<Completion> {
             drafted: s.get("drafted").as_usize().unwrap_or(0) as u64,
             accepted: s.get("accepted").as_usize().unwrap_or(0) as u64,
             emitted: s.get("emitted").as_usize().unwrap_or(0) as u64,
+            fused_passes: s.get("fused_passes").as_usize().unwrap_or(0) as u64,
+            fused_rows: s.get("fused_rows").as_usize().unwrap_or(0) as u64,
         }),
     };
     Ok(Completion {
@@ -231,7 +239,14 @@ mod tests {
                 completion: "some text\nwith \"quotes\"".into(),
                 tokens_generated: 5,
                 cached_prefix_len: 4,
-                spec: Some(SpecStats { rounds: 2, drafted: 6, accepted: 4, emitted: 6 }),
+                spec: Some(SpecStats {
+                    rounds: 2,
+                    drafted: 6,
+                    accepted: 4,
+                    emitted: 6,
+                    fused_passes: 2,
+                    fused_rows: 8,
+                }),
                 finish: finish.clone(),
             };
             let text = completion_to_json(&c).to_string();

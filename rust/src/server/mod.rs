@@ -348,12 +348,16 @@ fn handle_health(inner: &ServerInner, w: &mut impl Write, keep_alive: bool) -> R
             json::obj(vec![
                 ("drafter", json::s(spec.drafter.label())),
                 ("draft_len", json::num(spec.draft_len as f64)),
+                ("fused", json::Value::Bool(spec.fused)),
                 ("rounds", json::num(s.rounds as f64)),
                 ("drafted", json::num(s.drafted as f64)),
                 ("accepted", json::num(s.accepted as f64)),
                 ("emitted", json::num(s.emitted as f64)),
                 ("acceptance_rate", json::num(s.acceptance_rate())),
                 ("tokens_per_round", json::num(s.emitted_per_round())),
+                ("fused_passes", json::num(s.fused_passes as f64)),
+                ("fused_rows", json::num(s.fused_rows as f64)),
+                ("rows_per_fused_pass", json::num(s.rows_per_fused_pass())),
             ]),
         ));
     }

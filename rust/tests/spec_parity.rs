@@ -67,31 +67,50 @@ fn requests() -> Vec<Request> {
 }
 
 /// Compare speculative and plain serving on completion text, finish
-/// reason and token counts, and sanity-check the acceptance stats.
+/// reason and token counts, and sanity-check the acceptance stats —
+/// with the verify pass both fused (one `step_batch` per round) and
+/// sequential (step + snapshot per position), which must be
+/// byte-identical to each other and to plain decoding.
 fn assert_spec_parity(model: &Arc<Model>, tok: &Tokenizer, base: &ServeCfg, what: &str) {
     let plain = serve(model, tok, requests(), base).unwrap();
     assert!(plain.iter().all(|c| c.spec.is_none()));
     for drafter in drafters() {
         for draft_len in [2usize, 5] {
-            let cfg = ServeCfg {
-                speculation: Some(SpecCfg { drafter, draft_len }),
-                ..base.clone()
-            };
-            let spec = serve(model, tok, requests(), &cfg).unwrap();
-            for (p, s) in plain.iter().zip(&spec) {
-                assert_eq!(
-                    p.completion, s.completion,
-                    "{what} {drafter:?} draft_len={draft_len}: speculation changed text"
-                );
-                assert_eq!(p.finish, s.finish, "{what} {drafter:?} draft_len={draft_len}");
-                assert_eq!(p.tokens_generated, s.tokens_generated);
-                let st = s.spec.expect("speculation on ⇒ per-request stats");
-                assert_eq!(st.emitted as usize, s.tokens_generated);
-                assert!(st.accepted <= st.drafted);
-                // Every round but the last emits at least one token (a
-                // final round may emit zero when its first sample is EOT).
-                assert!(st.rounds as usize <= s.tokens_generated + 1);
-                assert!(st.rounds >= 1);
+            for fused in [true, false] {
+                let cfg = ServeCfg {
+                    speculation: Some(SpecCfg { drafter, draft_len, fused }),
+                    ..base.clone()
+                };
+                let spec = serve(model, tok, requests(), &cfg).unwrap();
+                for (p, s) in plain.iter().zip(&spec) {
+                    assert_eq!(
+                        p.completion, s.completion,
+                        "{what} {drafter:?} draft_len={draft_len} fused={fused}: \
+                         speculation changed text"
+                    );
+                    assert_eq!(
+                        p.finish, s.finish,
+                        "{what} {drafter:?} draft_len={draft_len} fused={fused}"
+                    );
+                    assert_eq!(p.tokens_generated, s.tokens_generated);
+                    let st = s.spec.expect("speculation on ⇒ per-request stats");
+                    assert_eq!(st.emitted as usize, s.tokens_generated);
+                    assert!(st.accepted <= st.drafted);
+                    // Every round but the last emits at least one token (a
+                    // final round may emit zero when its first sample is EOT).
+                    assert!(st.rounds as usize <= s.tokens_generated + 1);
+                    assert!(st.rounds >= 1);
+                    if fused {
+                        // Native decoders honour the fused request: every
+                        // round is one batch pass of draft + 1 rows.
+                        assert_eq!(st.fused_passes, st.rounds, "{what} fused accounting");
+                        assert_eq!(st.fused_rows, st.drafted + st.rounds);
+                        assert!(st.rows_per_fused_pass() >= 1.0);
+                    } else {
+                        assert_eq!(st.fused_passes, 0, "{what} sequential ⇒ no fused passes");
+                        assert_eq!(st.fused_rows, 0);
+                    }
+                }
             }
         }
     }
@@ -171,6 +190,7 @@ fn mid_block_max_tokens_edges_stay_byte_exact() {
                 speculation: Some(SpecCfg {
                     drafter: DrafterKind::NGram { max_ngram: 3 },
                     draft_len,
+                    ..Default::default()
                 }),
                 ..base
             };
@@ -223,7 +243,11 @@ fn prop_random_speculation_parity() {
             };
             let plain = serve(&model, &tok, reqs(), &base).unwrap();
             let cfg = ServeCfg {
-                speculation: Some(SpecCfg { drafter, draft_len: 1 + rng.below(8) }),
+                speculation: Some(SpecCfg {
+                    drafter,
+                    draft_len: 1 + rng.below(8),
+                    fused: rng.chance(0.5),
+                }),
                 ..base
             };
             let spec = serve(&model, &tok, reqs(), &cfg).unwrap();
@@ -251,6 +275,7 @@ fn speculative_streams_cancel_cleanly_mid_block() {
         speculation: Some(SpecCfg {
             drafter: DrafterKind::NGram { max_ngram: 3 },
             draft_len: 4,
+            ..Default::default()
         }),
         sample: SampleCfg {
             max_new_tokens: 100,
@@ -295,6 +320,7 @@ fn streamed_speculation_matches_plain_and_reports_counters() {
         speculation: Some(SpecCfg {
             drafter: DrafterKind::NGram { max_ngram: 3 },
             draft_len: 3,
+            ..Default::default()
         }),
         threads: 2,
         ..plain_cfg
@@ -311,6 +337,8 @@ fn streamed_speculation_matches_plain_and_reports_counters() {
         assert_eq!(got.completion, want.completion, "HTTP speculative decode diverged");
         let st = got.spec.expect("speculative responses carry stats over the wire");
         assert_eq!(st.emitted as usize, got.tokens_generated);
+        assert_eq!(st.fused_passes, st.rounds, "fused verify is the default on native decode");
+        assert_eq!(st.fused_rows, st.drafted + st.rounds);
     }
 
     let agg = sched.spec_stats();
@@ -323,6 +351,9 @@ fn streamed_speculation_matches_plain_and_reports_counters() {
     assert_eq!(spec.get("draft_len").as_usize(), Some(3));
     assert_eq!(spec.get("rounds").as_usize(), Some(agg.rounds as usize));
     assert!(spec.get("tokens_per_round").as_f64().unwrap_or(0.0) > 0.0);
+    assert_eq!(spec.get("fused").as_bool(), Some(true));
+    assert_eq!(spec.get("fused_passes").as_usize(), Some(agg.fused_passes as usize));
+    assert!(spec.get("rows_per_fused_pass").as_f64().unwrap_or(0.0) >= 1.0);
     server.shutdown();
 }
 
@@ -364,6 +395,7 @@ fn ngram_drafter_accepts_multiple_tokens_on_repetitive_decode() {
             speculation: Some(SpecCfg {
                 drafter: DrafterKind::NGram { max_ngram: 4 },
                 draft_len: 6,
+                ..Default::default()
             }),
             sample: SampleCfg {
                 temperature: 0.0,

@@ -1,0 +1,174 @@
+//! Property tests for the tensor kernel stack: every tier (dispatched,
+//! blocked, and — when the `simd` feature is on — the explicit SIMD
+//! paths behind the dispatchers) must be **bit-identical** to the naive
+//! reference on arbitrary shapes and contents.
+//!
+//! The generator deliberately hits the shapes and values that break
+//! vectorised kernels: `k % 4 != 0` and `k % 8 != 0` (remainder
+//! handling), `n = 0` and `n = 1` (empty / degenerate outputs), `k = 0`
+//! (empty reduction), NaN and ±∞ (order-sensitive propagation), signed
+//! zeros (`-0.0 == 0.0` must still take the zero-skip path), and
+//! subnormals (no flush-to-zero allowed).  Comparison is on raw bits —
+//! `assert_eq!` on f32 would call NaN ≠ NaN and miss -0.0 vs 0.0.
+
+use hsm::infer::tensor::{
+    matmul, matmul_blocked, matmul_naive, matmul_t, matmul_t_blocked, matmul_t_naive, matvec,
+    matvec_blocked, matvec_naive, matvec_t, matvec_t_blocked, matvec_t_naive,
+};
+use hsm::util::prop;
+use hsm::util::rng::Rng;
+
+/// Uniform f32s with edge values (NaN, ±∞, ±0.0, subnormals) sprinkled
+/// in — roughly one slot in seven.
+fn arb_edge_f32s(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    let edges = [
+        0.0f32,
+        -0.0,
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE / 2.0, // subnormal
+        -1.0e-41,                // subnormal
+        1.0e37,                  // overflow bait under accumulation
+    ];
+    let mut v = prop::arb_f32s(rng, len, scale);
+    for x in v.iter_mut() {
+        if rng.chance(1.0 / 7.0) {
+            *x = *rng.pick(&edges);
+        }
+    }
+    v
+}
+
+/// Bit-exact comparison with a shape-carrying failure message.
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} diverged ({g:?} vs {w:?})"
+        );
+    }
+}
+
+/// Shapes biased toward the awkward cases: k not a multiple of the
+/// 4-wide block or 8-wide SIMD lane count, and tiny n.
+fn arb_shape(rng: &mut Rng) -> (usize, usize) {
+    let k = *rng.pick(&[0usize, 1, 3, 4, 7, 8, 9, 13, 16, 31, 33]);
+    let n = *rng.pick(&[0usize, 1, 2, 7, 8, 11, 24]);
+    (k, n)
+}
+
+#[test]
+fn prop_matvec_tiers_match_naive_bit_for_bit() {
+    prop::check_n("matvec-tiers", prop::default_cases(), |rng| {
+        let (k, n) = arb_shape(rng);
+        let x = arb_edge_f32s(rng, k, 2.0);
+        let w = arb_edge_f32s(rng, k * n, 2.0);
+
+        let mut want = vec![0.0f32; n];
+        matvec_naive(&x, &w, n, &mut want);
+
+        let mut got = vec![7.0f32; n]; // poison: kernels must overwrite
+        matvec_blocked(&x, &w, n, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_blocked k={k} n={n}"));
+
+        got.fill(7.0);
+        matvec(&x, &w, n, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec dispatched k={k} n={n}"));
+    });
+}
+
+#[test]
+fn prop_matvec_t_tiers_match_naive_bit_for_bit() {
+    prop::check_n("matvec-t-tiers", prop::default_cases(), |rng| {
+        // For the transposed kernel the *output* dimension n is the
+        // SIMD-vectorised axis, so make it hit lane remainders too.
+        let (n, k) = arb_shape(rng);
+        let x = arb_edge_f32s(rng, k, 2.0);
+        let w = arb_edge_f32s(rng, k * n, 2.0);
+
+        let mut want = vec![0.0f32; n];
+        matvec_t_naive(&x, &w, n, &mut want);
+
+        let mut got = vec![7.0f32; n];
+        matvec_t_blocked(&x, &w, n, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_t_blocked k={k} n={n}"));
+
+        got.fill(7.0);
+        matvec_t(&x, &w, n, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_t dispatched k={k} n={n}"));
+    });
+}
+
+#[test]
+fn prop_batched_kernels_match_per_row_naive_bit_for_bit() {
+    prop::check_n("matmul-tiers", prop::default_cases(), |rng| {
+        let (k, n) = arb_shape(rng);
+        let m = rng.below(5); // includes the empty batch
+        let xs = arb_edge_f32s(rng, m * k, 2.0);
+        let w = arb_edge_f32s(rng, k * n, 2.0);
+
+        let mut want = vec![0.0f32; m * n];
+        matmul_naive(&xs, m, &w, n, &mut want);
+        // The naive batched form must itself be m independent matvecs.
+        for r in 0..m {
+            let mut row = vec![0.0f32; n];
+            matvec_naive(&xs[r * k..(r + 1) * k], &w, n, &mut row);
+            assert_bits_eq(&row, &want[r * n..(r + 1) * n], &format!("matmul_naive row {r}"));
+        }
+
+        let mut got = vec![7.0f32; m * n];
+        matmul_blocked(&xs, m, &w, n, &mut got);
+        assert_bits_eq(&got, &want, &format!("matmul_blocked m={m} k={k} n={n}"));
+
+        got.fill(7.0);
+        matmul(&xs, m, &w, n, &mut got);
+        assert_bits_eq(&got, &want, &format!("matmul dispatched m={m} k={k} n={n}"));
+
+        // Transposed batched kernel against its own naive reference.
+        let mut want_t = vec![0.0f32; m * n];
+        matmul_t_naive(&xs, m, &w, n, &mut want_t);
+        for r in 0..m {
+            let mut row = vec![0.0f32; n];
+            matvec_t_naive(&xs[r * k..(r + 1) * k], &w, n, &mut row);
+            assert_bits_eq(&row, &want_t[r * n..(r + 1) * n], &format!("matmul_t_naive row {r}"));
+        }
+
+        let mut got_t = vec![7.0f32; m * n];
+        matmul_t_blocked(&xs, m, &w, n, &mut got_t);
+        assert_bits_eq(&got_t, &want_t, &format!("matmul_t_blocked m={m} k={k} n={n}"));
+
+        got_t.fill(7.0);
+        matmul_t(&xs, m, &w, n, &mut got_t);
+        assert_bits_eq(&got_t, &want_t, &format!("matmul_t dispatched m={m} k={k} n={n}"));
+    });
+}
+
+/// All-zero inputs must take the zero-skip fast path in every tier and
+/// still write exact (positive) zeros, even when weights hold NaN/∞
+/// (the skip is semantic: `0.0 * NaN` never happens because the naive
+/// reference skips it too).
+#[test]
+fn prop_zero_rows_skip_nan_weights_in_every_tier() {
+    prop::check_n("zero-row-skip", prop::default_cases(), |rng| {
+        let (k, n) = arb_shape(rng);
+        // x of zeros with random signs: -0.0 == 0.0 must also skip.
+        let x: Vec<f32> =
+            (0..k).map(|_| if rng.chance(0.5) { 0.0 } else { -0.0 }).collect();
+        let w = arb_edge_f32s(rng, k * n, 2.0);
+
+        let mut want = vec![0.0f32; n];
+        matvec_naive(&x, &w, n, &mut want);
+
+        for (tier, f) in [
+            ("blocked", matvec_blocked as fn(&[f32], &[f32], usize, &mut [f32])),
+            ("dispatched", matvec),
+        ] {
+            let mut got = vec![7.0f32; n];
+            f(&x, &w, n, &mut got);
+            assert_bits_eq(&got, &want, &format!("zero-skip {tier} k={k} n={n}"));
+        }
+    });
+}
