@@ -1,0 +1,226 @@
+//! Bench: int8 weight quantization — resident bytes and end-to-end
+//! serving tok/s for f32 vs int8 weights across model shapes, plus the
+//! quantized shallow drafter (`shallow-q`) vs its f32 twin, with **byte
+//! parity asserted** for every speculative run against plain f32
+//! decoding (drafts may come from int8 weights; served bytes may not
+//! move).
+//!
+//! Two workloads:
+//!
+//! 1. **Shape sweep** — the Table-3 prompt suite served at temperature
+//!    0.8 on the same seeded checkpoint loaded twice, once at each
+//!    precision: resident weight bytes (ratio asserted ≤ 0.30), tok/s,
+//!    and the int8/f32 speedup per shape.  The two precisions produce
+//!    different bytes by design; the tolerance suite pins how different.
+//! 2. **Drafter duel** — `shallow` vs `shallow-q` on the f32 serving
+//!    model: acceptance rate and accepted tokens per verify round, with
+//!    both digests asserted equal to the plain f32 digest (verification
+//!    always scores f32, so quantized drafts can cost acceptance but
+//!    never change output).
+//!
+//! Results land in `BENCH_quant.json` (override with `HSM_BENCH_OUT`);
+//! `HSM_BENCH_REQUESTS` scales the request count.
+//!
+//! Run: `cargo bench --bench quantized`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::{SampleCfg, TABLE3_PROMPTS};
+use hsm::infer::{weights, DrafterKind, Model, ModelWeights, Precision, SpecCfg, SpecStats};
+use hsm::serve::{serve, Request, ServeCfg};
+use hsm::tokenizer::Tokenizer;
+
+fn layers_for(kind: &str, layers: usize, ffn: usize) -> Vec<LayerInfo> {
+    (0..layers)
+        .map(|l| LayerInfo {
+            kind: kind.into(),
+            heads: 4,
+            shifts: if kind == "attn" { vec![1] } else { vec![1usize << l.min(5)] },
+            ffn,
+        })
+        .collect()
+}
+
+/// The same seeded checkpoint at both precisions.
+fn model_pair(
+    kind: &str,
+    dim: usize,
+    layers: usize,
+    ctx: usize,
+    vocab: usize,
+    seed: u64,
+) -> (Arc<Model>, Arc<Model>) {
+    let m = Manifest::synthetic(kind, layers_for(kind, layers, 2 * dim), dim, ctx, vocab, 1);
+    let flat = weights::seeded_flat(&m, seed);
+    let f = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap();
+    let w = ModelWeights::from_flat(&m, &flat).unwrap();
+    let q = Model::shared_with_precision(m, w, Precision::Int8).unwrap();
+    (f, q)
+}
+
+fn fnv(digest: &mut u64, s: &str) {
+    for b in s.as_bytes() {
+        *digest = (*digest ^ *b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+struct RunOut {
+    secs: f64,
+    tokens: usize,
+    digest: u64,
+    stats: SpecStats,
+}
+
+fn run(
+    model: &Arc<Model>,
+    tok: &Tokenizer,
+    prompts: &[String],
+    sample: &SampleCfg,
+    speculation: Option<SpecCfg>,
+) -> RunOut {
+    let cfg = ServeCfg {
+        max_active: 4,
+        threads: 2,
+        quantum: 8,
+        prefix_cache_size: 0,
+        speculation,
+        sample: sample.clone(),
+        precision: model.precision(),
+        ..Default::default()
+    };
+    let requests: Vec<Request> =
+        prompts.iter().enumerate().map(|(i, p)| Request::new(i as u64, p)).collect();
+    let t0 = Instant::now();
+    let completions = serve(model, tok, requests, &cfg).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    let mut tokens = 0usize;
+    let mut stats = SpecStats::default();
+    for c in &completions {
+        fnv(&mut digest, &c.completion);
+        tokens += c.tokens_generated;
+        if let Some(s) = &c.spec {
+            stats.add(s);
+        }
+    }
+    RunOut { secs, tokens, digest, stats }
+}
+
+fn main() {
+    let n: usize = std::env::var("HSM_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12)
+        .max(2);
+    let out_path =
+        std::env::var("HSM_BENCH_OUT").unwrap_or_else(|_| "BENCH_quant.json".to_string());
+
+    let text = hsm::corpus::generate(1234, 400);
+    let tok: Tokenizer = hsm::tokenizer::trainer::train(&text, 512).unwrap();
+    let ctx = 384;
+    let prompts: Vec<String> =
+        (0..n).map(|i| TABLE3_PROMPTS[i % TABLE3_PROMPTS.len()].to_string()).collect();
+    let sample = SampleCfg {
+        temperature: 0.8,
+        top_k: 40,
+        max_new_tokens: 32,
+        seed: 5,
+        stop_at_eot: true,
+    };
+
+    // Shape sweep: f32 vs int8 resident bytes + tok/s.  Larger dims
+    // favour int8 (a quarter of the weight traffic per matvec row);
+    // the smallest shape is where f32 may still win on overhead.
+    let mut shapes_json = Vec::new();
+    for (kind, dim, layers) in [("ab", 64usize, 2usize), ("ab", 192, 4), ("attn", 128, 3)] {
+        let (f, q) = model_pair(kind, dim, layers, ctx, tok.vocab_size(), 17);
+        let (fb, qb) = (f.resident_weight_bytes(), q.resident_weight_bytes());
+        let ratio = qb as f64 / fb as f64;
+        assert!(
+            ratio <= 0.30,
+            "[{kind} d{dim}] int8 resident ratio {ratio:.3} exceeds 0.30 ({qb} / {fb} bytes)"
+        );
+        let rf = run(&f, &tok, &prompts, &sample, None);
+        let rq = run(&q, &tok, &prompts, &sample, None);
+        assert!(rf.tokens > 0, "[{kind} d{dim}] f32 run produced no tokens");
+        let f_tps = rf.tokens as f64 / rf.secs.max(1e-9);
+        let q_tps = rq.tokens as f64 / rq.secs.max(1e-9);
+        println!(
+            "[{kind} d{dim} L{layers}] f32 {fb} B @ {f_tps:.0} tok/s — \
+             int8 {qb} B ({ratio:.3}×) @ {q_tps:.0} tok/s ({:.2}× f32)",
+            q_tps / f_tps.max(1e-9)
+        );
+        shapes_json.push(format!(
+            "    {{\"kind\": \"{kind}\", \"dim\": {dim}, \"layers\": {layers}, \
+             \"f32_resident_bytes\": {fb}, \"int8_resident_bytes\": {qb}, \
+             \"resident_ratio\": {ratio:.4}, \"f32_tok_per_s\": {f_tps:.1}, \
+             \"int8_tok_per_s\": {q_tps:.1}, \"int8_speedup\": {:.3}}}",
+            q_tps / f_tps.max(1e-9)
+        ));
+    }
+
+    // Drafter duel on the f32 serving model: quantized drafts must keep
+    // served bytes identical to plain f32 decoding — the whole point.
+    let (f, _) = model_pair("ab", 64, 2, ctx, tok.vocab_size(), 17);
+    let plain = run(&f, &tok, &prompts, &sample, None);
+    let plain_tps = plain.tokens as f64 / plain.secs.max(1e-9);
+    let mut drafters_json = Vec::new();
+    for drafter in [
+        DrafterKind::Shallow { layers: 1 },
+        DrafterKind::ShallowQuant { layers: 1 },
+    ] {
+        let spec = run(
+            &f,
+            &tok,
+            &prompts,
+            &sample,
+            Some(SpecCfg { drafter, draft_len: 4, fused: true }),
+        );
+        assert_eq!(
+            spec.digest,
+            plain.digest,
+            "{} drafting changed served bytes",
+            drafter.label()
+        );
+        assert_eq!(spec.tokens, plain.tokens);
+        let tps = spec.tokens as f64 / spec.secs.max(1e-9);
+        let per_round = spec.stats.emitted_per_round();
+        let accept = spec.stats.acceptance_rate();
+        println!(
+            "[draft] {:<9}  {tps:>6.0} tok/s ({:.2}× plain)  {per_round:.2} tok/round  \
+             {:.0}% drafts accepted",
+            drafter.label(),
+            tps / plain_tps.max(1e-9),
+            accept * 100.0
+        );
+        drafters_json.push(format!(
+            "    {{\"drafter\": \"{}\", \"draft_len\": 4, \"tok_per_s\": {tps:.1}, \
+             \"speedup\": {:.3}, \"tokens_per_round\": {per_round:.3}, \
+             \"acceptance_rate\": {accept:.3}, \"rounds\": {}, \"parity\": true}}",
+            drafter.label(),
+            tps / plain_tps.max(1e-9),
+            spec.stats.rounds
+        ));
+    }
+
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"quantized\",\n");
+    json.push_str(&format!(
+        "  \"requests\": {n}, \"ctx\": {ctx}, \"max_new_tokens\": {}, \
+         \"kernel_backend\": \"{}\",\n",
+        sample.max_new_tokens,
+        hsm::infer::tensor::kernel_backend()
+    ));
+    json.push_str("  \"shapes\": [\n");
+    json.push_str(&shapes_json.join(",\n"));
+    json.push_str("\n  ],\n");
+    json.push_str("  \"drafters\": [\n");
+    json.push_str(&drafters_json.join(",\n"));
+    json.push_str("\n  ],\n");
+    json.push_str("  \"resident_ratio_le_030\": true,\n  \"parity\": true\n");
+    json.push_str("}\n");
+    std::fs::write(&out_path, &json).expect("writing bench json");
+    println!("\nwrote {out_path}");
+}

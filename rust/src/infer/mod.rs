@@ -24,7 +24,9 @@
 //! Submodules:
 //! * [`tensor`] — the minimal dense-math substrate (matvec, layernorm,
 //!   softmax) used by both forward passes.
-//! * [`weights`] — typed per-layer weight views over a flat checkpoint.
+//! * [`weights`] — typed per-layer weight views over a flat checkpoint,
+//!   plus int8 per-row-scale quantization ([`QuantWeights`],
+//!   [`Precision`]) of the resident model.
 //! * [`engine`] — the incremental decoder itself.
 //! * [`window`] — the full-sequence reference forward.
 //! * [`speculate`] — drafters and configuration for speculative
@@ -42,7 +44,7 @@ pub use speculate::{
     DraftCtx, Drafter, DrafterKind, NGramDrafter, ShallowDrafter, SpecCfg, SpecCounters,
     SpecStats,
 };
-pub use weights::ModelWeights;
+pub use weights::{ModelWeights, Precision, QuantMatrix, QuantWeights};
 pub use window::WindowEngine;
 
 use anyhow::{bail, Result};
@@ -157,7 +159,7 @@ pub trait Decoder {
     fn drafter(&self, kind: &DrafterKind) -> Option<Box<dyn Drafter>> {
         match *kind {
             DrafterKind::NGram { max_ngram } => Some(Box::new(NGramDrafter::new(max_ngram))),
-            DrafterKind::Shallow { .. } => None,
+            DrafterKind::Shallow { .. } | DrafterKind::ShallowQuant { .. } => None,
         }
     }
 }

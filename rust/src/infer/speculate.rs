@@ -20,7 +20,7 @@
 //! `rust/tests/spec_parity.rs` pins this for every mixer kind, both
 //! drafters, and both sampling modes.
 //!
-//! Two drafters:
+//! The drafters:
 //!
 //! * [`ShallowDrafter`] — self-drafting through the first K layers of
 //!   the *same* `Arc<`[`Model`]`>` (no second model, no extra weights).
@@ -30,6 +30,12 @@
 //!   first K layers of a full-model [`SessionState`] snapshot *are* the
 //!   shallow state (layer l sees only layers below it), so restoring
 //!   the main session's snapshot is a complete catch-up.
+//! * `shallow-q` ([`ShallowDrafter::quantized`]) — the same shallow
+//!   self-draft, stepped through the model's int8 shadow weights
+//!   ([`Model::quant`]): the drafter pays quantized (memory-light)
+//!   matmuls while the verify pass keeps scoring at the model's own
+//!   precision.  Quantization error can only change *which tokens get
+//!   proposed* — acceptance may dip, bytes cannot change.
 //! * [`NGramDrafter`] — model-free prompt-lookup: propose the
 //!   continuation of the most recent earlier occurrence of the current
 //!   suffix n-gram in the request's own token history.  Free to run,
@@ -47,6 +53,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::engine::{DecodeSession, Model, SessionState};
+use super::weights::Precision;
 use crate::generation::argmax;
 
 /// Speculative-decoding configuration (per scheduler, off by default:
@@ -102,6 +109,10 @@ pub enum DrafterKind {
     /// model (0 = half the stack).  Needs a decoder that can fork
     /// shared-weight sessions (the native engine).
     Shallow { layers: usize },
+    /// [`Self::Shallow`], stepped on the model's int8 shadow weights
+    /// ([`Model::quant`]) while verification stays at the model's own
+    /// precision — served bytes are identical, only acceptance moves.
+    ShallowQuant { layers: usize },
     /// Prompt-lookup n-gram matching over the request's own history,
     /// trying suffix lengths `max_ngram` down to 1.  Model-free.
     NGram { max_ngram: usize },
@@ -112,13 +123,16 @@ impl DrafterKind {
     pub fn label(&self) -> &'static str {
         match self {
             DrafterKind::Shallow { .. } => "shallow",
+            DrafterKind::ShallowQuant { .. } => "shallow-q",
             DrafterKind::NGram { .. } => "ngram",
         }
     }
 
-    /// Parse a CLI spec: `ngram`, `ngram:N`, `shallow`, `shallow:K`
-    /// (N = max n-gram length, default 3; K = drafter layers, default
-    /// 0 = half the stack).
+    /// Parse a CLI/HTTP drafter spec — the **single** place drafter
+    /// specs are validated (`--drafter`, `ServeCfg`, tests all route
+    /// here): `ngram`, `ngram:N`, `shallow`, `shallow:K`,
+    /// `shallow-q`, `shallow-q:K` (N = max n-gram length, default 3;
+    /// K = drafter layers, default 0 = half the stack).
     pub fn parse(s: &str) -> Result<DrafterKind> {
         let (name, param) = match s.split_once(':') {
             Some((n, p)) => (n, Some(p)),
@@ -141,7 +155,10 @@ impl DrafterKind {
                 Ok(DrafterKind::NGram { max_ngram })
             }
             "shallow" => Ok(DrafterKind::Shallow { layers: num(param, 0)? }),
-            other => bail!("unknown drafter {other:?} (expected ngram[:N] or shallow[:K])"),
+            "shallow-q" => Ok(DrafterKind::ShallowQuant { layers: num(param, 0)? }),
+            other => bail!(
+                "unknown drafter {other:?} (expected ngram[:N], shallow[:K] or shallow-q[:K])"
+            ),
         }
     }
 }
@@ -247,11 +264,29 @@ pub struct ShallowDrafter {
     model: Arc<Model>,
     session: DecodeSession,
     layers: usize,
+    /// The precision drafting steps run at.  [`Self::new`] inherits the
+    /// model's own; [`Self::quantized`] forces [`Precision::Int8`]
+    /// (`shallow-q`), stepping through [`Model::quant`] while the
+    /// verify side keeps the model's precision.
+    precision: Precision,
 }
 
 impl ShallowDrafter {
     /// `layers` = 0 picks half the stack (at least 1).
     pub fn new(model: Arc<Model>, layers: usize) -> Self {
+        let precision = model.precision();
+        Self::at_precision(model, layers, precision)
+    }
+
+    /// The `shallow-q` drafter: same shallow self-draft, stepped on the
+    /// model's int8 shadow weights (built once, lazily, for f32
+    /// models).  Proposals may differ from f32 shallow drafting —
+    /// acceptance can move, served bytes cannot.
+    pub fn quantized(model: Arc<Model>, layers: usize) -> Self {
+        Self::at_precision(model, layers, Precision::Int8)
+    }
+
+    fn at_precision(model: Arc<Model>, layers: usize, precision: Precision) -> Self {
         let depth = model.manifest.layers.len().max(1);
         let layers = match layers {
             0 => depth.div_ceil(2),
@@ -259,18 +294,26 @@ impl ShallowDrafter {
         };
         let session = DecodeSession::new(&model.manifest, None)
             .expect("fresh session state is always valid for its own manifest");
-        ShallowDrafter { model, session, layers }
+        ShallowDrafter { model, session, layers, precision }
     }
 
     /// How many layers of the stack this drafter runs.
     pub fn layers(&self) -> usize {
         self.layers
     }
+
+    /// The precision drafting steps run at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
 }
 
 impl Drafter for ShallowDrafter {
     fn label(&self) -> &'static str {
-        "shallow"
+        match self.precision {
+            Precision::F32 => "shallow",
+            Precision::Int8 => "shallow-q",
+        }
     }
 
     fn wants_state(&self) -> bool {
@@ -292,7 +335,8 @@ impl Drafter for ShallowDrafter {
         // to the scored block.
         let cap = m.ctx.saturating_sub(self.session.position());
         for _ in 0..max.min(cap) {
-            let logits = self.session.step_shallow(&self.model, last, self.layers)?;
+            let logits =
+                self.session.step_shallow_at(&self.model, last, self.layers, self.precision)?;
             let next = argmax(logits);
             if ctx.eot == Some(next) {
                 break;
@@ -515,9 +559,58 @@ mod tests {
             DrafterKind::parse("shallow:2").unwrap(),
             DrafterKind::Shallow { layers: 2 }
         );
+        assert_eq!(
+            DrafterKind::parse("shallow-q").unwrap(),
+            DrafterKind::ShallowQuant { layers: 0 }
+        );
+        assert_eq!(
+            DrafterKind::parse("shallow-q:3").unwrap(),
+            DrafterKind::ShallowQuant { layers: 3 }
+        );
+        assert_eq!(DrafterKind::ShallowQuant { layers: 0 }.label(), "shallow-q");
         assert!(DrafterKind::parse("ngram:0").is_err());
         assert!(DrafterKind::parse("ngram:x").is_err());
+        assert!(DrafterKind::parse("shallow-q:x").is_err());
         assert!(DrafterKind::parse("magic").is_err());
+    }
+
+    /// `shallow-q` proposes by stepping the model's int8 shadow: a
+    /// full-depth quantized proposal equals greedy decoding on the same
+    /// checkpoint loaded as an int8 model, and re-proposing from the
+    /// same context is drift-free, exactly like the f32 drafter.
+    #[test]
+    fn shallow_q_drafter_drafts_on_the_int8_weights() {
+        let md = model();
+        let mut d = ShallowDrafter::quantized(Arc::clone(&md), 99);
+        assert_eq!(d.label(), "shallow-q");
+        assert_eq!(d.precision(), Precision::Int8);
+        assert_eq!(d.layers(), 2);
+        let ids = [5u32, 9, 3, 7];
+        let state = ctx_for(&md, &ids);
+        let mut a = Vec::new();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 4, &mut a).unwrap();
+        assert_eq!(a.len(), 4);
+        let mut b = Vec::new();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 4, &mut b).unwrap();
+        assert_eq!(a, b, "shallow-q must be deterministic across proposals");
+
+        // The proposal must track the int8 model's greedy continuation
+        // over the same restored context.
+        let flat = weights::seeded_flat(&md.manifest, 77);
+        let q = Model::shared_with_precision(
+            md.manifest.clone(),
+            ModelWeights::from_flat(&md.manifest, &flat).unwrap(),
+            Precision::Int8,
+        )
+        .unwrap();
+        let mut sess = DecodeSession::new(&q.manifest, None).unwrap();
+        sess.restore(&q.manifest, &state).unwrap();
+        let mut last = *ids.last().unwrap();
+        for (i, &want) in a.iter().enumerate() {
+            let got = argmax(sess.step(&q, last).unwrap());
+            assert_eq!(got, want, "shallow-q draft diverged from the int8 model at {i}");
+            last = got;
+        }
     }
 
     #[test]

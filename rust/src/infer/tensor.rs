@@ -4,8 +4,8 @@
 //! matrix products (the single-token hot path), their batched m-row
 //! forms ([`matmul`] / [`matmul_t`] — the fused speculative-verify
 //! pass), LayerNorm, ReLU, tanh, and a numerically-stable softmax.  No
-//! external BLAS; instead a **three-tier kernel stack** where every
-//! tier is bit-identical to the one below it:
+//! external BLAS; instead a layered kernel stack where every tier is
+//! bit-identical to the one below it:
 //!
 //! 1. **naive** ([`matvec_naive`], [`matvec_t_naive`], [`matmul_naive`],
 //!    [`matmul_t_naive`]) — one matrix row per pass.  The semantic
@@ -27,11 +27,26 @@
 //!    stay bit-identical to tiers 1–2, which keeps the decode parity
 //!    suites exact with the feature on or off.
 //!
+//! 4. **int8** ([`matvec_q`] / [`matvec_t_q`] / [`matmul_q`] /
+//!    [`matmul_t_q`], each with naive / blocked / AVX2 variants) — the
+//!    quantized-weight hot path.  Weights are stored **out-major**
+//!    (`[n, k]`: one `i8` row plus one `f32` scale per output) by
+//!    [`quantize_row`]; activations are quantized on the fly by the
+//!    same function.  Every variant accumulates in exact `i32` and
+//!    converts to `f32` through one shared `(sum as f32) * (sx * sw)`
+//!    expression, and integer sums are order-free, so all int8
+//!    variants are bit-identical *by construction* — including the
+//!    AVX2 `_mm256_maddubs_epi16` unsigned·signed form, which is exact
+//!    because [`quantize_row`] never emits −128 (pair sums stay below
+//!    `i16::MAX` and `|a|`/`sign` never overflow).
+//!
 //! The public [`matvec`] / [`matvec_t`] / [`matmul`] / [`matmul_t`]
 //! entry points resolve to tier 3 when the `simd` feature is enabled
-//! (falling back per the runtime dispatch) and tier 2 otherwise.
+//! (falling back per the runtime dispatch) and tier 2 otherwise; the
+//! `*_q` entry points dispatch the same way within tier 4.
 //! `rust/tests/tensor_props.rs` fuzzes every tier against the naive
-//! references, including NaN, ±0.0 and subnormal inputs.
+//! references, including NaN, ±0.0 and subnormal inputs for f32 and
+//! extreme-scale / saturated / degenerate shapes for int8.
 
 /// y = x @ W where `x: [k]`, `w: [k, n]` row-major → `y: [n]`.
 ///
@@ -381,6 +396,232 @@ pub fn matmul_t_naive(xs: &[f32], m: usize, w: &[f32], n: usize, ys: &mut [f32])
 }
 
 // ---------------------------------------------------------------------------
+// Tier 4: int8 quantized kernels (out-major weights, per-row scales)
+// ---------------------------------------------------------------------------
+
+/// Quantize one f32 row to int8 with a symmetric per-row scale:
+/// `q[i] = round(x[i] · 127 / max|x|)` and the returned scale is
+/// `max|x| / 127` (so `x ≈ q · scale`).  Quantized values land in
+/// `[-127, 127]` — **never −128**, which the AVX2 unsigned·signed
+/// multiply-add trick requires for exactness.  An all-zero row (or one
+/// whose max is non-finite) quantizes to zeros with scale 0; NaN
+/// entries under a finite max quantize to 0 (`as` casts saturate and
+/// map NaN to 0).  Pure scalar code shared by weight-load-time and
+/// on-the-fly activation quantization, so quantized inputs are
+/// identical no matter which backend runs the kernels.
+pub fn quantize_row(x: &[f32], q: &mut [i8]) -> f32 {
+    debug_assert_eq!(x.len(), q.len(), "quantize_row shape mismatch");
+    let mut maxabs = 0.0f32;
+    for &v in x {
+        let a = v.abs();
+        if a > maxabs {
+            maxabs = a;
+        }
+    }
+    if maxabs == 0.0 || !maxabs.is_finite() {
+        q.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / maxabs;
+    for (qi, &v) in q.iter_mut().zip(x) {
+        *qi = (v * inv).round() as i8;
+    }
+    maxabs / 127.0
+}
+
+/// The one place an int8 integer sum turns back into f32.  Every tier
+/// uses this exact expression — one rounding for `sx * sw`, one for
+/// the final product — so tier outputs are bit-identical as long as
+/// their integer sums agree (which exact i32 accumulation guarantees).
+#[inline]
+pub(crate) fn scale_out(sum: i32, sx: f32, sw: f32) -> f32 {
+    (sum as f32) * (sx * sw)
+}
+
+/// Exact i32 dot product of two int8 rows, ascending-index order.
+#[inline]
+fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    let mut sum = 0i32;
+    for (&ai, &bi) in a.iter().zip(b) {
+        sum += ai as i32 * bi as i32;
+    }
+    sum
+}
+
+/// Quantized [`matvec`]: `y = x @ W` where the logical `w: [k, n]` was
+/// quantized **transposed** into out-major rows (`wq: [n, k]` int8,
+/// `scales: [n]`), and the activation arrives pre-quantized (`qx: [k]`
+/// with scale `sx`, from [`quantize_row`]).  `y[j] = (Σᵢ qx[i]·wq[j,i])
+/// · sx · scales[j]`.  Out-major storage makes this the same row-dot
+/// core as [`matvec_t_q`]; the two names document the *logical*
+/// orientation at the call site.
+pub fn matvec_q(qx: &[i8], sx: f32, wq: &[i8], scales: &[f32], y: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    {
+        simd::matvec_q(qx, sx, wq, scales, y);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        matvec_q_blocked(qx, sx, wq, scales, y);
+    }
+}
+
+/// Quantized [`matvec_t`]: `y = x @ Wᵀ` with `w: [n, k]` already
+/// out-major — identical storage and kernel as [`matvec_q`] (the
+/// quantized representation is always out-major, so the transposed
+/// entry point is the same dot-product core).
+pub fn matvec_t_q(qx: &[i8], sx: f32, wq: &[i8], scales: &[f32], y: &mut [f32]) {
+    matvec_q(qx, sx, wq, scales, y);
+}
+
+/// Quantized [`matmul`]: m pre-quantized activation rows (`qxs: [m, k]`
+/// with per-row scales `sxs: [m]`) against one out-major quantized
+/// matrix.  Row r of `ys` is bit-identical to
+/// `matvec_q(&qxs[r*k..], sxs[r], ..)`; each weight row streams through
+/// cache once for all m activation rows.
+pub fn matmul_q(qxs: &[i8], m: usize, sxs: &[f32], wq: &[i8], scales: &[f32], ys: &mut [f32]) {
+    if m == 0 {
+        debug_assert!(ys.is_empty());
+        return;
+    }
+    #[cfg(feature = "simd")]
+    {
+        simd::matmul_q(qxs, m, sxs, wq, scales, ys);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        matmul_q_blocked(qxs, m, sxs, wq, scales, ys);
+    }
+}
+
+/// Quantized [`matmul_t`] — same storage and kernel as [`matmul_q`]
+/// (see [`matvec_t_q`]).
+pub fn matmul_t_q(qxs: &[i8], m: usize, sxs: &[f32], wq: &[i8], scales: &[f32], ys: &mut [f32]) {
+    matmul_q(qxs, m, sxs, wq, scales, ys);
+}
+
+/// Reference int8 kernel: one row-dot per output, ascending order.
+/// Because every tier accumulates the same exact i32 sum, this defines
+/// the (unique) answer rather than an op order the others must mimic.
+pub fn matvec_q_naive(qx: &[i8], sx: f32, wq: &[i8], scales: &[f32], y: &mut [f32]) {
+    let k = qx.len();
+    let n = scales.len();
+    debug_assert_eq!(wq.len(), n * k, "matvec_q shape mismatch");
+    debug_assert_eq!(y.len(), n);
+    for j in 0..n {
+        let row = &wq[j * k..(j + 1) * k];
+        y[j] = scale_out(dot_i8_scalar(qx, row), sx, scales[j]);
+    }
+}
+
+/// Blocked int8 kernel: four output rows share one streaming pass over
+/// the quantized activation, with four independent i32 accumulators.
+pub fn matvec_q_blocked(qx: &[i8], sx: f32, wq: &[i8], scales: &[f32], y: &mut [f32]) {
+    let k = qx.len();
+    let n = scales.len();
+    debug_assert_eq!(wq.len(), n * k, "matvec_q shape mismatch");
+    debug_assert_eq!(y.len(), n);
+    let blocks = n / 4 * 4;
+    let mut j = 0;
+    while j < blocks {
+        let r0 = &wq[j * k..(j + 1) * k];
+        let r1 = &wq[(j + 1) * k..(j + 2) * k];
+        let r2 = &wq[(j + 2) * k..(j + 3) * k];
+        let r3 = &wq[(j + 3) * k..(j + 4) * k];
+        let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+        for (i, &xi) in qx.iter().enumerate() {
+            let xi = xi as i32;
+            a0 += xi * r0[i] as i32;
+            a1 += xi * r1[i] as i32;
+            a2 += xi * r2[i] as i32;
+            a3 += xi * r3[i] as i32;
+        }
+        y[j] = scale_out(a0, sx, scales[j]);
+        y[j + 1] = scale_out(a1, sx, scales[j + 1]);
+        y[j + 2] = scale_out(a2, sx, scales[j + 2]);
+        y[j + 3] = scale_out(a3, sx, scales[j + 3]);
+        j += 4;
+    }
+    for j in blocks..n {
+        let row = &wq[j * k..(j + 1) * k];
+        y[j] = scale_out(dot_i8_scalar(qx, row), sx, scales[j]);
+    }
+}
+
+/// Reference batched int8 kernel: m independent [`matvec_q_naive`]s.
+pub fn matmul_q_naive(
+    qxs: &[i8],
+    m: usize,
+    sxs: &[f32],
+    wq: &[i8],
+    scales: &[f32],
+    ys: &mut [f32],
+) {
+    if m == 0 {
+        debug_assert!(ys.is_empty());
+        return;
+    }
+    debug_assert_eq!(sxs.len(), m);
+    let k = qxs.len() / m;
+    let n = scales.len();
+    for r in 0..m {
+        matvec_q_naive(&qxs[r * k..(r + 1) * k], sxs[r], wq, scales, &mut ys[r * n..(r + 1) * n]);
+    }
+}
+
+/// Blocked batched int8 kernel: output-row blocks outermost so each
+/// four-row weight slab stays hot across all m activation rows.
+pub fn matmul_q_blocked(
+    qxs: &[i8],
+    m: usize,
+    sxs: &[f32],
+    wq: &[i8],
+    scales: &[f32],
+    ys: &mut [f32],
+) {
+    debug_assert!(m > 0);
+    debug_assert_eq!(qxs.len() % m, 0, "matmul_q activation shape mismatch");
+    debug_assert_eq!(sxs.len(), m);
+    let k = qxs.len() / m;
+    let n = scales.len();
+    debug_assert_eq!(wq.len(), n * k, "matmul_q shape mismatch");
+    debug_assert_eq!(ys.len(), m * n);
+    let blocks = n / 4 * 4;
+    let mut j = 0;
+    while j < blocks {
+        let r0 = &wq[j * k..(j + 1) * k];
+        let r1 = &wq[(j + 1) * k..(j + 2) * k];
+        let r2 = &wq[(j + 2) * k..(j + 3) * k];
+        let r3 = &wq[(j + 3) * k..(j + 4) * k];
+        for r in 0..m {
+            let qx = &qxs[r * k..(r + 1) * k];
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            for (i, &xi) in qx.iter().enumerate() {
+                let xi = xi as i32;
+                a0 += xi * r0[i] as i32;
+                a1 += xi * r1[i] as i32;
+                a2 += xi * r2[i] as i32;
+                a3 += xi * r3[i] as i32;
+            }
+            let sx = sxs[r];
+            let y = &mut ys[r * n..(r + 1) * n];
+            y[j] = scale_out(a0, sx, scales[j]);
+            y[j + 1] = scale_out(a1, sx, scales[j + 1]);
+            y[j + 2] = scale_out(a2, sx, scales[j + 2]);
+            y[j + 3] = scale_out(a3, sx, scales[j + 3]);
+        }
+        j += 4;
+    }
+    for j in blocks..n {
+        let row = &wq[j * k..(j + 1) * k];
+        for r in 0..m {
+            let qx = &qxs[r * k..(r + 1) * k];
+            ys[r * n + j] = scale_out(dot_i8_scalar(qx, row), sxs[r], scales[j]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Tier 3: explicit-SIMD kernels (feature `simd`)
 // ---------------------------------------------------------------------------
 
@@ -460,6 +701,38 @@ pub mod simd {
             return;
         }
         portable::matmul_t(xs, m, w, n, ys);
+    }
+
+    /// Int8 tier-4 dispatch.  The portable fallback is the blocked
+    /// scalar kernel itself: integer accumulation is order-free, so
+    /// there is no separate chunked form to keep bit-parity with — the
+    /// blocked kernel *is* already the autovectorizer-friendly shape.
+    pub fn matvec_q(qx: &[i8], sx: f32, wq: &[i8], scales: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(wq.len(), scales.len() * qx.len(), "matvec_q shape mismatch");
+        debug_assert_eq!(y.len(), scales.len());
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability was just checked.
+            unsafe { x86::matvec_q(qx, sx, wq, scales, y) };
+            return;
+        }
+        super::matvec_q_blocked(qx, sx, wq, scales, y);
+    }
+
+    /// Batched int8 tier-4 dispatch (see [`matvec_q`] on the fallback).
+    pub fn matmul_q(qxs: &[i8], m: usize, sxs: &[f32], wq: &[i8], scales: &[f32], ys: &mut [f32]) {
+        debug_assert!(m > 0);
+        debug_assert_eq!(qxs.len() % m, 0, "matmul_q activation shape mismatch");
+        debug_assert_eq!(sxs.len(), m);
+        debug_assert_eq!(wq.len(), scales.len() * (qxs.len() / m), "matmul_q shape mismatch");
+        debug_assert_eq!(ys.len(), m * scales.len());
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability was just checked.
+            unsafe { x86::matmul_q(qxs, m, sxs, wq, scales, ys) };
+            return;
+        }
+        super::matmul_q_blocked(qxs, m, sxs, wq, scales, ys);
     }
 
     /// Portable chunked fallback: the same loop structure as the AVX2
@@ -775,6 +1048,85 @@ pub mod simd {
                 }
             }
         }
+
+        /// Exact int8 dot product, 32 bytes per step, via the
+        /// unsigned·signed multiply-add idiom: `|a| · sign(b, a)` feeds
+        /// `_mm256_maddubs_epi16` (u8 × i8 → pairwise i16 sums), then
+        /// `_mm256_madd_epi16` against ones widens to i32.  Exact
+        /// because quantized values never reach −128 (`quantize_row`
+        /// clamps to ±127): `|a| ≤ 127` fits u8 without the `abs(−128)`
+        /// wrap, `sign` never overflows, and each i16 pair sum is at
+        /// most `2·127·127 = 32258 < i16::MAX` — no saturation, and
+        /// i32 accumulation is order-free, so the result equals the
+        /// scalar reference bit-for-bit.
+        ///
+        /// # Safety
+        /// Caller must have verified AVX2 support; `a.len() == b.len()`.
+        #[target_feature(enable = "avx2")]
+        unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+            let k = a.len();
+            let ones = _mm256_set1_epi16(1);
+            let mut acc = _mm256_setzero_si256();
+            let blocks = k / 32 * 32;
+            let mut i = 0;
+            while i < blocks {
+                let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+                let abs_a = _mm256_sign_epi8(va, va);
+                let sb = _mm256_sign_epi8(vb, va);
+                let p16 = _mm256_maddubs_epi16(abs_a, sb);
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(p16, ones));
+                i += 32;
+            }
+            // Horizontal sum of the eight i32 lanes (exact: integers).
+            let s = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc));
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s));
+            let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s));
+            let mut sum = _mm_cvtsi128_si32(s);
+            for i in blocks..k {
+                sum += a[i] as i32 * b[i] as i32;
+            }
+            sum
+        }
+
+        /// # Safety
+        /// Caller must have verified AVX2 support and the `matvec_q`
+        /// shape contract (out-major `wq: [n, k]`, values in ±127).
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn matvec_q(qx: &[i8], sx: f32, wq: &[i8], scales: &[f32], y: &mut [f32]) {
+            let k = qx.len();
+            for (j, yj) in y.iter_mut().enumerate() {
+                let sum = dot_i8(qx, &wq[j * k..(j + 1) * k]);
+                *yj = super::super::scale_out(sum, sx, scales[j]);
+            }
+        }
+
+        /// Batched [`matvec_q`]: weight rows outermost so each int8 row
+        /// (and its scale) streams through cache once for all m
+        /// activation rows.
+        ///
+        /// # Safety
+        /// Caller must have verified AVX2 support and the `matmul_q`
+        /// shape contract (`m > 0`, values in ±127).
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn matmul_q(
+            qxs: &[i8],
+            m: usize,
+            sxs: &[f32],
+            wq: &[i8],
+            scales: &[f32],
+            ys: &mut [f32],
+        ) {
+            let k = qxs.len() / m;
+            let n = scales.len();
+            for (j, &sw) in scales.iter().enumerate() {
+                let row = &wq[j * k..(j + 1) * k];
+                for r in 0..m {
+                    let sum = dot_i8(&qxs[r * k..(r + 1) * k], row);
+                    ys[r * n + j] = super::super::scale_out(sum, sxs[r], sw);
+                }
+            }
+        }
     }
 }
 
@@ -994,5 +1346,126 @@ mod tests {
         let mut y = [0.0f32, 100.0];
         tanh_inplace(&mut y);
         assert!((y[0]).abs() < 1e-7 && (y[1] - 1.0).abs() < 1e-5);
+    }
+
+    /// Deterministic quantized fixture: f32 rows pushed through
+    /// [`quantize_row`] exactly as the engine does it.
+    fn qfixture(k: usize, n: usize) -> (Vec<i8>, f32, Vec<i8>, Vec<f32>) {
+        let x: Vec<f32> = (0..k).map(|i| 0.37 * (i as f32) - 1.9).collect();
+        let mut qx = vec![0i8; k];
+        let sx = quantize_row(&x, &mut qx);
+        let mut wq = vec![0i8; n * k];
+        let mut scales = vec![0.0f32; n];
+        for j in 0..n {
+            let row: Vec<f32> =
+                (0..k).map(|i| 0.11 * (((j * k + i) * 7 % 23) as f32) - 1.2).collect();
+            scales[j] = quantize_row(&row, &mut wq[j * k..(j + 1) * k]);
+        }
+        (qx, sx, wq, scales)
+    }
+
+    #[test]
+    fn quantize_row_bounds_and_roundtrip() {
+        let x: Vec<f32> = (0..33).map(|i| 0.4 * (i as f32) - 6.0).collect();
+        let mut q = vec![0i8; 33];
+        let s = quantize_row(&x, &mut q);
+        assert!(s > 0.0);
+        assert_eq!(q.iter().map(|v| v.abs()).max().unwrap(), 127, "max row value maps to ±127");
+        for (&xi, &qi) in x.iter().zip(&q) {
+            assert!(qi != i8::MIN, "−128 must never be emitted");
+            assert!(
+                (xi - qi as f32 * s).abs() <= 0.5 * s + 1e-6,
+                "round-trip error above half a step: {xi} vs {} (scale {s})",
+                qi as f32 * s
+            );
+        }
+        // Degenerate rows: all-zero and non-finite-max both quantize to
+        // zeros with scale 0.
+        let mut q = vec![7i8; 4];
+        assert_eq!(quantize_row(&[0.0, -0.0, 0.0, 0.0], &mut q), 0.0);
+        assert_eq!(q, vec![0i8; 4]);
+        let mut q = vec![7i8; 2];
+        assert_eq!(quantize_row(&[f32::NAN, 1.0], &mut q), 0.0);
+        assert_eq!(q, vec![0i8; 2]);
+        let mut q = vec![7i8; 2];
+        assert_eq!(quantize_row(&[f32::INFINITY, 1.0], &mut q), 0.0);
+        assert_eq!(q, vec![0i8; 2]);
+    }
+
+    #[test]
+    fn int8_tiers_match_naive_bit_for_bit() {
+        for (k, n) in [(13, 11), (16, 24), (7, 3), (33, 8), (64, 5), (1, 1)] {
+            let (qx, sx, wq, scales) = qfixture(k, n);
+            let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
+            matvec_q_naive(&qx, sx, &wq, &scales, &mut slow);
+            matvec_q_blocked(&qx, sx, &wq, &scales, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_q_blocked");
+            fast.fill(7.0);
+            matvec_q(&qx, sx, &wq, &scales, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_q dispatched");
+            fast.fill(7.0);
+            matvec_t_q(&qx, sx, &wq, &scales, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_t_q alias");
+        }
+    }
+
+    #[test]
+    fn int8_batched_rows_match_single_row_calls() {
+        for (m, k, n) in [(1, 13, 11), (5, 16, 24), (9, 7, 3), (3, 64, 8)] {
+            let (_, _, wq, scales) = qfixture(k, n);
+            let mut qxs = vec![0i8; m * k];
+            let mut sxs = vec![0.0f32; m];
+            for r in 0..m {
+                let x: Vec<f32> = (0..k).map(|i| 0.21 * ((r * k + i) as f32) - 1.4).collect();
+                sxs[r] = quantize_row(&x, &mut qxs[r * k..(r + 1) * k]);
+            }
+            let mut rows = vec![0.0f32; m * n];
+            for r in 0..m {
+                matvec_q_naive(
+                    &qxs[r * k..(r + 1) * k],
+                    sxs[r],
+                    &wq,
+                    &scales,
+                    &mut rows[r * n..(r + 1) * n],
+                );
+            }
+            let mut batch = vec![7.0f32; m * n];
+            matmul_q_naive(&qxs, m, &sxs, &wq, &scales, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_q_naive");
+            batch.fill(7.0);
+            matmul_q_blocked(&qxs, m, &sxs, &wq, &scales, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_q_blocked");
+            batch.fill(7.0);
+            matmul_q(&qxs, m, &sxs, &wq, &scales, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_q dispatched");
+            batch.fill(7.0);
+            matmul_t_q(&qxs, m, &sxs, &wq, &scales, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_t_q alias");
+        }
+        // Empty batch is a no-op for the dispatched forms.
+        matmul_q(&[], 0, &[], &[], &[0.5], &mut []);
+        matmul_t_q(&[], 0, &[], &[], &[0.5], &mut []);
+    }
+
+    #[test]
+    fn int8_saturated_values_stay_exact_across_tiers() {
+        // Hand-built ±127 saturation (the maddubs pair-sum worst case)
+        // with extreme scales: every tier must agree bit-for-bit.
+        let k = 35; // 32-lane AVX2 block + remainder
+        let n = 9;
+        let qx: Vec<i8> = (0..k).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect();
+        let wq: Vec<i8> = (0..n * k).map(|i| if i % 3 == 0 { -127 } else { 127 }).collect();
+        for sx in [1.0e-30f32, 1.0, 3.4e30] {
+            for sw in [1.0e-30f32, 0.7, 3.4e30] {
+                let scales = vec![sw; n];
+                let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
+                matvec_q_naive(&qx, sx, &wq, &scales, &mut slow);
+                matvec_q_blocked(&qx, sx, &wq, &scales, &mut fast);
+                assert_bits_eq(&fast, &slow, "saturated blocked");
+                fast.fill(7.0);
+                matvec_q(&qx, sx, &wq, &scales, &mut fast);
+                assert_bits_eq(&fast, &slow, "saturated dispatched");
+            }
+        }
     }
 }

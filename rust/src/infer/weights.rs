@@ -5,6 +5,15 @@
 //! like the math in the paper.  Weights can come from a live
 //! [`crate::runtime::StepEngine`] (`get_params`) or a saved
 //! [`crate::checkpoint::Checkpoint`].
+//!
+//! [`QuantWeights`] is the int8 companion representation: every weight
+//! *matrix* is quantized to one `i8` row + one `f32` scale per output
+//! ([`QuantMatrix`], built by [`crate::infer::tensor::quantize_row`]),
+//! stored **out-major** so the tier-4 kernels only ever walk contiguous
+//! rows; every weight *vector* (biases, LayerNorm gains, mixing taps)
+//! stays f32 — they are O(D) against the matrices' O(D²) and their
+//! precision is free.  Checkpoints stay f32: quantization happens once
+//! at model-load time ([`crate::infer::Model`]).
 
 use std::collections::HashMap;
 
@@ -12,6 +21,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::config::Manifest;
+use crate::infer::tensor::quantize_row;
 
 /// One layer's mixer weights (variant-dependent subset populated).
 #[derive(Debug, Clone, Default)]
@@ -186,6 +196,344 @@ impl ModelWeights {
         }
         h
     }
+
+    /// Bytes of weight data resident in memory (f32: 4 bytes/element,
+    /// same fixed traversal as [`Self::content_hash`]).
+    pub fn resident_bytes(&self) -> usize {
+        let mut elems =
+            self.tok_emb.len() + self.pos_emb.len() + self.lnf_g.len() + self.lnf_b.len();
+        for lw in &self.layers {
+            let mw = &lw.mixer;
+            for t in [
+                &lw.ln1_g, &lw.ln1_b, &lw.ln2_g, &lw.ln2_b, &lw.ffn_w1, &lw.ffn_b1,
+                &lw.ffn_w2, &lw.ffn_b2, &mw.mix_a, &mw.mix_b, &mw.mix_mat_a, &mw.mix_mat_b,
+                &mw.mix_bias, &mw.gate_w1, &mw.gate_b1, &mw.gate_w2, &mw.gate_b2, &mw.gate_w,
+                &mw.gate_b, &mw.fuse_w1, &mw.fuse_b1, &mw.fuse_w2, &mw.fuse_b2, &mw.wq,
+                &mw.bq, &mw.wk, &mw.bk, &mw.wv, &mw.bv, &mw.wo, &mw.bo,
+            ] {
+                elems += t.len();
+            }
+        }
+        elems * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8 per-row-scale quantized representation
+// ---------------------------------------------------------------------------
+
+/// Numeric precision of the resident weights on the native decode path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full-precision f32 weights (the checkpoint representation).
+    #[default]
+    F32,
+    /// Int8 per-row-scale quantized weights ([`QuantWeights`]).
+    Int8,
+}
+
+impl Precision {
+    /// Stable label for logs, `/healthz` and bench JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI spec (`f32` | `int8`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "int8" | "i8" => Ok(Precision::Int8),
+            other => bail!("unknown precision {other:?} (expected f32 or int8)"),
+        }
+    }
+}
+
+/// One int8-quantized weight matrix, stored **out-major** (`[rows,
+/// cols]`: row r holds every input tap of output r) with one f32 scale
+/// per row.  An absent f32 tensor (mixer kinds leave unused slots
+/// empty) quantizes to the empty default.
+#[derive(Debug, Clone, Default)]
+pub struct QuantMatrix {
+    /// Input (reduction) dimension of each row.
+    pub cols: usize,
+    /// `[rows, cols]` int8 values, row-major; values lie in ±127.
+    pub q: Vec<i8>,
+    /// Per-row dequantization scales (`w ≈ q · scale`), len = rows.
+    pub scale: Vec<f32>,
+}
+
+impl QuantMatrix {
+    pub fn rows(&self) -> usize {
+        self.scale.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Quantize an f32 matrix that is **already out-major** (`[rows,
+    /// cols]` — e.g. `tok_emb: [V, D]`), row by row.
+    pub fn from_rows(w: &[f32], cols: usize) -> Self {
+        if w.is_empty() {
+            return QuantMatrix::default();
+        }
+        debug_assert!(cols > 0 && w.len() % cols == 0, "quant shape mismatch");
+        let rows = w.len() / cols;
+        let mut q = vec![0i8; w.len()];
+        let mut scale = vec![0.0f32; rows];
+        for r in 0..rows {
+            scale[r] = quantize_row(&w[r * cols..(r + 1) * cols], &mut q[r * cols..(r + 1) * cols]);
+        }
+        QuantMatrix { cols, q, scale }
+    }
+
+    /// Quantize an **in-major** `[k, n]` f32 matrix (the `matvec`
+    /// orientation) transposed into out-major `[n, k]` rows, so the
+    /// tier-4 kernels walk contiguous int8 rows.
+    pub fn from_cols(w: &[f32], n: usize) -> Self {
+        if w.is_empty() {
+            return QuantMatrix::default();
+        }
+        debug_assert!(n > 0 && w.len() % n == 0, "quant shape mismatch");
+        let k = w.len() / n;
+        let mut row = vec![0.0f32; k];
+        let mut q = vec![0i8; w.len()];
+        let mut scale = vec![0.0f32; n];
+        for j in 0..n {
+            for i in 0..k {
+                row[i] = w[i * n + j];
+            }
+            scale[j] = quantize_row(&row, &mut q[j * k..(j + 1) * k]);
+        }
+        QuantMatrix { cols: k, q, scale }
+    }
+
+    /// Quantize `blocks` stacked in-major `[k, n]` matrices (per-head
+    /// weights like `gate_w: [H, 2hd, hd]`), each transposed, stacked
+    /// out-major — block b owns rows `b*n..(b+1)*n`.
+    pub fn from_col_blocks(w: &[f32], blocks: usize, k: usize, n: usize) -> Self {
+        if w.is_empty() {
+            return QuantMatrix::default();
+        }
+        debug_assert_eq!(w.len(), blocks * k * n, "quant block shape mismatch");
+        let mut out =
+            QuantMatrix { cols: k, q: vec![0i8; w.len()], scale: vec![0.0f32; blocks * n] };
+        let mut row = vec![0.0f32; k];
+        for b in 0..blocks {
+            let src = &w[b * k * n..(b + 1) * k * n];
+            for j in 0..n {
+                for i in 0..k {
+                    row[i] = src[i * n + j];
+                }
+                let r = b * n + j;
+                out.scale[r] = quantize_row(&row, &mut out.q[r * k..(r + 1) * k]);
+            }
+        }
+        out
+    }
+
+    /// Borrow rows `r0..r1` (a per-head block) as a sub-view.
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> (&[i8], &[f32]) {
+        (&self.q[r0 * self.cols..r1 * self.cols], &self.scale[r0..r1])
+    }
+
+    /// Dequantize row r into `out` (`out[i] = q[r,i] · scale[r]`) — the
+    /// embedding-lookup path.
+    pub fn dequant_row(&self, r: usize, out: &mut [f32]) {
+        let s = self.scale[r];
+        let row = &self.q[r * self.cols..(r + 1) * self.cols];
+        for (o, &qv) in out.iter_mut().zip(row) {
+            *o = qv as f32 * s;
+        }
+    }
+
+    /// Dequantize row r and add it into `out` (the position-embedding
+    /// add).
+    pub fn dequant_row_add(&self, r: usize, out: &mut [f32]) {
+        let s = self.scale[r];
+        let row = &self.q[r * self.cols..(r + 1) * self.cols];
+        for (o, &qv) in out.iter_mut().zip(row) {
+            *o += qv as f32 * s;
+        }
+    }
+
+    /// Bytes resident: one byte per int8 element + 4 per row scale.
+    pub fn resident_bytes(&self) -> usize {
+        self.q.len() + self.scale.len() * 4
+    }
+}
+
+/// One layer's quantized mixer weights (matrices int8, vectors f32).
+#[derive(Debug, Clone, Default)]
+pub struct QuantMixerWeights {
+    pub mix_a: Vec<f32>,
+    pub mix_b: Vec<f32>,
+    pub mix_mat_a: QuantMatrix,
+    pub mix_mat_b: QuantMatrix,
+    pub mix_bias: Vec<f32>,
+    pub gate_w1: QuantMatrix,
+    pub gate_b1: Vec<f32>,
+    pub gate_w2: QuantMatrix,
+    pub gate_b2: Vec<f32>,
+    pub gate_w: QuantMatrix, // per-head blocks: head h owns rows h*hd..(h+1)*hd
+    pub gate_b: Vec<f32>,
+    pub fuse_w1: QuantMatrix,
+    pub fuse_b1: Vec<f32>,
+    pub fuse_w2: QuantMatrix,
+    pub fuse_b2: Vec<f32>,
+    pub wq: QuantMatrix,
+    pub bq: Vec<f32>,
+    pub wk: QuantMatrix,
+    pub bk: Vec<f32>,
+    pub wv: QuantMatrix,
+    pub bv: Vec<f32>,
+    pub wo: QuantMatrix,
+    pub bo: Vec<f32>,
+}
+
+/// One transformer block's quantized weights.
+#[derive(Debug, Clone)]
+pub struct QuantLayerWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub ffn_w1: QuantMatrix, // out-major [F, D]
+    pub ffn_b1: Vec<f32>,
+    pub ffn_w2: QuantMatrix, // out-major [D, F]
+    pub ffn_b2: Vec<f32>,
+    pub mixer: QuantMixerWeights,
+}
+
+/// The full decoder's int8 representation: weight matrices quantized
+/// per output row, weight vectors carried in f32.  Built once from
+/// [`ModelWeights`] at model-load time; checkpoints are untouched.
+#[derive(Debug, Clone)]
+pub struct QuantWeights {
+    pub tok_emb: QuantMatrix, // [V, D], already out-major: logits AND embedding lookup
+    pub pos_emb: QuantMatrix, // [C, D] per-position rows (dequantized on lookup)
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub layers: Vec<QuantLayerWeights>,
+}
+
+impl QuantWeights {
+    /// Quantize a full f32 weight set.  Orientation per matrix follows
+    /// its use in `engine.rs`: `matvec`-direction matrices (`[k, n]`)
+    /// are transposed at quantization time, per-head tensors are
+    /// quantized block-per-head, and `tok_emb`/`pos_emb` are quantized
+    /// per vocabulary/position row.
+    pub fn from_weights(manifest: &Manifest, w: &ModelWeights) -> Self {
+        let d = manifest.dim;
+        let mut layers = Vec::with_capacity(w.layers.len());
+        for (lw, spec) in w.layers.iter().zip(&manifest.layers) {
+            let mw = &lw.mixer;
+            let heads = spec.heads.max(1);
+            let hd = d / heads;
+            let f = spec.ffn.max(1);
+            layers.push(QuantLayerWeights {
+                ln1_g: lw.ln1_g.clone(),
+                ln1_b: lw.ln1_b.clone(),
+                ln2_g: lw.ln2_g.clone(),
+                ln2_b: lw.ln2_b.clone(),
+                ffn_w1: QuantMatrix::from_cols(&lw.ffn_w1, f),
+                ffn_b1: lw.ffn_b1.clone(),
+                ffn_w2: QuantMatrix::from_cols(&lw.ffn_w2, d),
+                ffn_b2: lw.ffn_b2.clone(),
+                mixer: QuantMixerWeights {
+                    mix_a: mw.mix_a.clone(),
+                    mix_b: mw.mix_b.clone(),
+                    mix_mat_a: QuantMatrix::from_cols(&mw.mix_mat_a, d),
+                    mix_mat_b: QuantMatrix::from_cols(&mw.mix_mat_b, d),
+                    mix_bias: mw.mix_bias.clone(),
+                    gate_w1: QuantMatrix::from_cols(&mw.gate_w1, gate1_hidden(&mw.gate_w1, d)),
+                    gate_b1: mw.gate_b1.clone(),
+                    gate_w2: QuantMatrix::from_cols(&mw.gate_w2, d),
+                    gate_b2: mw.gate_b2.clone(),
+                    gate_w: QuantMatrix::from_col_blocks(&mw.gate_w, heads, 2 * hd, hd),
+                    gate_b: mw.gate_b.clone(),
+                    fuse_w1: QuantMatrix::from_col_blocks(
+                        &mw.fuse_w1,
+                        heads,
+                        2 * hd,
+                        fuse_hidden(&mw.fuse_w1, heads, hd),
+                    ),
+                    fuse_b1: mw.fuse_b1.clone(),
+                    fuse_w2: QuantMatrix::from_col_blocks(
+                        &mw.fuse_w2,
+                        heads,
+                        fuse_hidden(&mw.fuse_w1, heads, hd),
+                        hd,
+                    ),
+                    fuse_b2: mw.fuse_b2.clone(),
+                    wq: QuantMatrix::from_cols(&mw.wq, d),
+                    bq: mw.bq.clone(),
+                    wk: QuantMatrix::from_cols(&mw.wk, d),
+                    bk: mw.bk.clone(),
+                    wv: QuantMatrix::from_cols(&mw.wv, d),
+                    bv: mw.bv.clone(),
+                    wo: QuantMatrix::from_cols(&mw.wo, d),
+                    bo: mw.bo.clone(),
+                },
+            });
+        }
+        QuantWeights {
+            tok_emb: QuantMatrix::from_rows(&w.tok_emb, d),
+            pos_emb: QuantMatrix::from_rows(&w.pos_emb, d),
+            lnf_g: w.lnf_g.clone(),
+            lnf_b: w.lnf_b.clone(),
+            layers,
+        }
+    }
+
+    /// Bytes of weight data resident in memory: int8 matrices (+ their
+    /// f32 row scales) and the f32 vectors.
+    pub fn resident_bytes(&self) -> usize {
+        let mut bytes = self.tok_emb.resident_bytes()
+            + self.pos_emb.resident_bytes()
+            + (self.lnf_g.len() + self.lnf_b.len()) * 4;
+        for lw in &self.layers {
+            let mw = &lw.mixer;
+            for m in [
+                &lw.ffn_w1, &lw.ffn_w2, &mw.mix_mat_a, &mw.mix_mat_b, &mw.gate_w1, &mw.gate_w2,
+                &mw.gate_w, &mw.fuse_w1, &mw.fuse_w2, &mw.wq, &mw.wk, &mw.wv, &mw.wo,
+            ] {
+                bytes += m.resident_bytes();
+            }
+            for v in [
+                &lw.ln1_g, &lw.ln1_b, &lw.ln2_g, &lw.ln2_b, &lw.ffn_b1, &lw.ffn_b2, &mw.mix_a,
+                &mw.mix_b, &mw.mix_bias, &mw.gate_b1, &mw.gate_b2, &mw.gate_b, &mw.fuse_b1,
+                &mw.fuse_b2, &mw.bq, &mw.bk, &mw.bv, &mw.bo,
+            ] {
+                bytes += v.len() * 4;
+            }
+        }
+        bytes
+    }
+}
+
+/// Hidden width of the `gate1` MLP: `gate_w1` is `[D, G]` in-major, so
+/// G = len / D (0 for kinds without it).
+fn gate1_hidden(gate_w1: &[f32], d: usize) -> usize {
+    if gate_w1.is_empty() || d == 0 {
+        0
+    } else {
+        gate_w1.len() / d
+    }
+}
+
+/// Hidden width of the per-head fusion MLP: `fuse_w1` is
+/// `[H, 2hd, Fh]` in-major, so Fh = len / (H · 2hd).
+fn fuse_hidden(fuse_w1: &[f32], heads: usize, hd: usize) -> usize {
+    let denom = heads * 2 * hd;
+    if fuse_w1.is_empty() || denom == 0 {
+        0
+    } else {
+        fuse_w1.len() / denom
+    }
 }
 
 /// Deterministic plausible-init flat parameters for a manifest: LayerNorm
@@ -236,5 +584,97 @@ mod tests {
     fn rejects_wrong_tensor_count() {
         let m = test_manifest("hsm_ab", 2, 16, 300);
         assert!(ModelWeights::from_flat(&m, &[vec![0.0]]).is_err());
+    }
+
+    #[test]
+    fn precision_labels_and_parsing() {
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::F32.label(), "f32");
+        assert_eq!(Precision::Int8.label(), "int8");
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8);
+        assert_eq!(Precision::parse("i8").unwrap(), Precision::Int8);
+        assert!(Precision::parse("fp16").is_err());
+    }
+
+    #[test]
+    fn quant_from_cols_matches_transposed_from_rows() {
+        let (k, n) = (12, 5);
+        let w: Vec<f32> = (0..k * n).map(|i| 0.3 * (i as f32) - 7.0).collect(); // in-major [k, n]
+        let mut t = vec![0.0f32; k * n]; // out-major [n, k]
+        for i in 0..k {
+            for j in 0..n {
+                t[j * k + i] = w[i * n + j];
+            }
+        }
+        let a = QuantMatrix::from_cols(&w, n);
+        let b = QuantMatrix::from_rows(&t, k);
+        assert_eq!(a.cols, k);
+        assert_eq!(a.rows(), n);
+        assert_eq!(a.q, b.q);
+        let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.scale), bits(&b.scale));
+        assert!(QuantMatrix::from_cols(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn quant_col_blocks_match_per_block_from_cols() {
+        let (blocks, k, n) = (3, 8, 4);
+        let w: Vec<f32> =
+            (0..blocks * k * n).map(|i| (((i * 13) % 29) as f32) * 0.21 - 2.0).collect();
+        let all = QuantMatrix::from_col_blocks(&w, blocks, k, n);
+        assert_eq!(all.rows(), blocks * n);
+        assert_eq!(all.cols, k);
+        for b in 0..blocks {
+            let one = QuantMatrix::from_cols(&w[b * k * n..(b + 1) * k * n], n);
+            let (q, s) = all.rows_slice(b * n, (b + 1) * n);
+            assert_eq!(q, &one.q[..], "block {b} int8 rows diverged");
+            assert_eq!(s, &one.scale[..], "block {b} scales diverged");
+        }
+    }
+
+    #[test]
+    fn dequant_row_round_trips_within_half_scale() {
+        let d = 16;
+        let w: Vec<f32> = (0..3 * d).map(|i| 0.17 * (i as f32) - 4.0).collect();
+        let qm = QuantMatrix::from_rows(&w, d);
+        let mut out = vec![0.0f32; d];
+        for r in 0..3 {
+            qm.dequant_row(r, &mut out);
+            for (o, &x) in out.iter().zip(&w[r * d..(r + 1) * d]) {
+                assert!((o - x).abs() <= 0.5 * qm.scale[r] + 1e-6, "row {r}: {o} vs {x}");
+            }
+            let before = out.clone();
+            qm.dequant_row_add(r, &mut out);
+            for (a, b) in out.iter().zip(&before) {
+                assert_eq!(*a, 2.0 * b); // x + x is exact in f32
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_resident_bytes_are_at_most_30_percent_of_f32() {
+        use crate::config::LayerInfo;
+        // dim 64: one int8 row of a [·, 64]-col matrix costs 64 + 4
+        // bytes against 256 f32 bytes, so matrices land at ~0.27x and
+        // the f32-kept vectors stay a rounding error.
+        let layers = vec![
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![1, 2, 4, 8], ffn: 128 },
+            LayerInfo { kind: "attn".into(), heads: 4, shifts: vec![1], ffn: 128 },
+            LayerInfo { kind: "fusion".into(), heads: 4, shifts: vec![2], ffn: 128 },
+        ];
+        let m = Manifest::synthetic("hsm_ab", layers, 64, 64, 300, 1);
+        let w = ModelWeights::from_flat(&m, &seeded_flat(&m, 11)).unwrap();
+        let q = QuantWeights::from_weights(&m, &w);
+        let (fb, qb) = (w.resident_bytes(), q.resident_bytes());
+        assert!(qb * 10 <= fb * 3, "int8 resident {qb} bytes vs f32 {fb} — above 0.30x");
+        assert_eq!(q.layers.len(), 3);
+        assert_eq!(q.tok_emb.rows(), 300);
+        assert_eq!(q.tok_emb.cols, 64);
+        assert_eq!(q.layers[1].mixer.wq.rows(), 64);
+        // fusion per-head blocks: H heads of hd outputs each.
+        assert_eq!(q.layers[2].mixer.fuse_w1.rows(), 64);
+        assert_eq!(q.layers[2].mixer.fuse_w1.cols, 32);
+        assert_eq!(q.layers[2].mixer.fuse_w2.cols, 16);
     }
 }

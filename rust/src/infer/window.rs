@@ -87,7 +87,13 @@ impl StepEngine for WindowEngine {
 /// position, row-major `[tokens.len() * vocab]`.
 pub fn forward_full(model: &Model, tokens: &[i32]) -> Result<Vec<f32>> {
     let m = &model.manifest;
-    let w = &model.weights;
+    // The reference forward is deliberately f32-only: it exists to pin
+    // the incremental engine's numerics against an independent code
+    // path, and the incremental int8 path is pinned against f32 by the
+    // quant tolerance harness instead.
+    let Some(w) = model.weights() else {
+        bail!("the full-context reference forward needs resident f32 weights (model is int8)");
+    };
     let d = m.dim;
     let vocab = m.vocab;
     let n = tokens.len();

@@ -179,14 +179,17 @@
 //! state, and every scored position is sampled with the request's RNG
 //! stream — so the emitted bytes are **identical** to plain decoding
 //! (greedy trivially so), while accepted drafts emit several tokens
-//! per full-model verify round.  Two drafters ship: `ngram` (model-free
-//! prompt lookup — strong on repetitive/copy-heavy text) and `shallow`
-//! (the first K layers of the same shared-weight model).  Enable with
-//! [`serve::ServeCfg::speculation`] or the CLI:
+//! per full-model verify round.  Three drafters ship: `ngram`
+//! (model-free prompt lookup — strong on repetitive/copy-heavy text),
+//! `shallow` (the first K layers of the same shared-weight model), and
+//! `shallow-q` (the same K layers drafting on the **int8-quantized**
+//! shadow of those weights — cheaper drafts, identical served bytes,
+//! because verification always scores the full-precision model).
+//! Enable with [`serve::ServeCfg::speculation`] or the CLI:
 //!
 //! ```bash
 //! hsm serve --variant hsm_ab --checkpoint ck.bin --http 127.0.0.1:8080 \
-//!     --speculate 4 --drafter ngram        # or: --drafter shallow:2
+//!     --speculate 4 --drafter ngram   # or: shallow:2 | shallow-q:2
 //! hsm generate --variant hsm_ab --checkpoint ck.bin --speculate 4
 //! curl -s http://127.0.0.1:8080/healthz
 //! # → {..., "speculation": {"drafter": "ngram", "rounds": 12,
@@ -201,13 +204,15 @@
 //!
 //! ## Performance: kernel tiers and the fused verify pass
 //!
-//! The native forward pass runs on a three-tier kernel stack in
+//! The native forward pass runs on a tiered kernel stack in
 //! [`infer::tensor`]: a **naive** reference that defines the exact
 //! per-element operation order, cache-tiled **blocked** scalar kernels
-//! (the default hot path), and — behind `--features simd` — explicit
-//! `std::arch` **AVX2** kernels chosen by runtime CPU detection with a
-//! portable chunked fallback ([`infer::tensor::kernel_backend`] says
-//! which is live).  Every tier is **bit-identical** to naive: no FMA,
+//! (the default hot path), explicit `std::arch` **AVX2** kernels behind
+//! `--features simd` chosen by runtime CPU detection with a portable
+//! chunked fallback ([`infer::tensor::kernel_backend`] says
+//! which is live), and an **int8** tier (`matvec_q` & co.) with the
+//! same naive/blocked/AVX2 ladder for quantized weights.  Every tier
+//! is **bit-identical** to its naive reference: no FMA,
 //! vectorisation only across independent accumulation chains, and the
 //! zero-tap row skip preserved — so the byte-exactness contracts
 //! (decode/fork/stream/spec parity) hold under any tier, fuzzed by
@@ -225,6 +230,39 @@
 //! `fused: false` keeps the sequential path for A/B benching, and
 //! `cargo bench --bench serve_throughput` records the kernel-tier and
 //! batched-row timings into `BENCH_serve.json`.
+//!
+//! ## Performance: int8 weight quantization
+//!
+//! `--precision int8` (CLI) or
+//! [`infer::Model::shared_with_precision`] quantizes the resident
+//! weights to **int8 with one f32 scale per output row**
+//! ([`infer::QuantWeights`], [`infer::Precision`]) at load time —
+//! checkpoints stay f32 on disk — and decodes on the int8 kernel tier.
+//! A weight row costs `cols + 4` bytes instead of `4·cols`, so the
+//! resident set shrinks to ~0.26–0.28× of f32 (asserted ≤ 0.30 by
+//! `cargo bench --bench quantized`, which writes per-shape resident
+//! bytes and tok/s into `BENCH_quant.json`):
+//!
+//! | dim  | f32 row | int8 row | ratio |
+//! |------|---------|----------|-------|
+//! | 64   | 256 B   | 68 B     | 0.266 |
+//! | 192  | 768 B   | 196 B    | 0.255 |
+//! | 512  | 2048 B  | 516 B    | 0.252 |
+//!
+//! Quantized decoding is deterministic but **not** byte-identical to
+//! f32; `rust/tests/quant_tolerance.rs` pins the drift for every mixer
+//! kind (relative logit delta ≤ 0.15, perplexity ratio ≤ 1.30, greedy
+//! agreement ≥ 0.5 — healthy runs sit far inside all three) and proves
+//! the pins trip on a corrupted quantizer.  When served bytes must not
+//! move at all, keep the model f32 and put int8 on the **drafter**
+//! instead: `--drafter shallow-q:K` drafts on a lazily-quantized
+//! shadow of the first K layers while verification scores f32, so the
+//! output is byte-identical to plain decoding (pinned by
+//! `rust/tests/spec_parity.rs`) and quantization error can only cost
+//! acceptance rate.  A serving stack declares its precision in
+//! [`serve::ServeCfg`] (`precision`), cross-checked against the model
+//! at construction, and `GET /healthz` reports
+//! `model.{precision, kernel_backend, resident_weight_bytes}`.
 //!
 //! One-off generation keeps the simpler wrappers —
 //! [`generation::generate`] (single session) and
@@ -262,7 +300,8 @@ pub use config::{Manifest, TrainHp};
 pub use coordinator::{TrainOutcome, Trainer, TrainerOptions};
 pub use data::{Batch, Dataset};
 pub use infer::{
-    Decoder, DecodeSession, DrafterKind, Model, NativeDecoder, SessionState, SpecCfg, SpecStats,
+    Decoder, DecodeSession, DrafterKind, Model, NativeDecoder, Precision, SessionState, SpecCfg,
+    SpecStats,
 };
 pub use serve::{
     Completion, PrefixCache, PrefixCacheStats, Request, Scheduler, ServeCfg, StreamScheduler,

@@ -28,7 +28,7 @@ use hsm::config::{artifacts_root, Manifest, TABLE1_VARIANTS, VARIANTS};
 use hsm::coordinator::{Trainer, TrainerOptions};
 use hsm::corpus;
 use hsm::generation::{self, SampleCfg, TABLE3_PROMPTS};
-use hsm::infer::{DrafterKind, Model, ModelWeights, SpecCfg, SpecStats};
+use hsm::infer::{DrafterKind, Model, ModelWeights, Precision, SpecCfg, SpecStats};
 use hsm::report::{self, ExperimentCtx, PjrtFactory, FIG7_VARIANTS};
 use hsm::runtime::{PjrtEngine, StepEngine};
 use hsm::serve::{FinishReason, Request, Scheduler, ServeCfg, StreamScheduler};
@@ -190,7 +190,16 @@ fn cmd_evaluate(argv: &[String]) -> Result<()> {
 /// else the PJRT artifact engine (initialised or checkpoint-restored).
 /// Pre-snapshot checkpoints still work whenever artifacts are on disk;
 /// without them the error says exactly what is missing.
-fn native_model(preset: &str, variant: &str, ck_path: Option<String>) -> Result<Arc<Model>> {
+///
+/// `precision` is applied at load: checkpoints always stay f32 on disk;
+/// [`Precision::Int8`] quantizes the resident model
+/// ([`Model::shared_with_precision`]) and drops the f32 copy.
+fn native_model(
+    preset: &str,
+    variant: &str,
+    ck_path: Option<String>,
+    precision: Precision,
+) -> Result<Arc<Model>> {
     let ck = match &ck_path {
         Some(p) => {
             let ck = Checkpoint::load(&PathBuf::from(p))?;
@@ -202,7 +211,7 @@ fn native_model(preset: &str, variant: &str, ck_path: Option<String>) -> Result<
             }
             if let Some(m) = ck.manifest()? {
                 let w = ModelWeights::from_checkpoint(&m, &ck)?;
-                return Model::shared(m, w);
+                return Model::shared_with_precision(m, w, precision);
             }
             // Pre-snapshot checkpoint: the artifact manifest below
             // supplies the model shape; the weights come from `ck`.
@@ -220,7 +229,7 @@ fn native_model(preset: &str, variant: &str, ck_path: Option<String>) -> Result<
     match ck {
         Some(ck) => {
             let weights = ModelWeights::from_checkpoint(&manifest, &ck)?;
-            Model::shared(manifest, weights)
+            Model::shared_with_precision(manifest, weights, precision)
         }
         None => {
             // Fresh init: only the engine knows the init distribution.
@@ -228,7 +237,7 @@ fn native_model(preset: &str, variant: &str, ck_path: Option<String>) -> Result<
             engine.init(42)?;
             let manifest = engine.manifest().clone();
             let weights = ModelWeights::from_flat(&manifest, &engine.get_params()?)?;
-            Model::shared(manifest, weights)
+            Model::shared_with_precision(manifest, weights, precision)
         }
     }
 }
@@ -244,13 +253,15 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("max-new-tokens", "64", "maximum tokens to generate")
         .flag("samples", "1", "number of samples")
         .flag("speculate", "0", "speculative decoding: draft block length (0 = off; native engine only)")
-        .flag("drafter", "ngram", "draft proposer: ngram[:N] | shallow[:K]")
+        .flag("drafter", "ngram", "draft proposer: ngram[:N] | shallow[:K] | shallow-q[:K]")
+        .flag("precision", "f32", "weight precision: f32 | int8 (quantize at load; native engine only)")
         .parse(argv)
         .map_err(|e| anyhow!(e))?;
     let ctx = ctx_from_args(&a)?;
     let samples = a.usize("samples").map_err(|e| anyhow!(e))?;
     let prompt = a.str("prompt");
     let speculation = speculation_from_args(&a)?;
+    let precision = Precision::parse(&a.str("precision"))?;
     let cfg = SampleCfg {
         temperature: a.f64("temperature").map_err(|e| anyhow!(e))? as f32,
         top_k: a.usize("top-k").map_err(|e| anyhow!(e))?,
@@ -264,7 +275,8 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
             // embedded manifest when available — no artifacts needed),
             // `samples` concurrent sessions decoded round-robin.  Each
             // session samples from stream seed ^ i (same as sequential).
-            let model = native_model(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
+            let model =
+                native_model(&ctx.preset, &a.str("variant"), a.get("checkpoint"), precision)?;
             let (tok, _, _) = report::build_data(&ctx, &model.manifest)?;
             if speculation.is_some() {
                 // Speculative decoding rides the scheduler (same core,
@@ -277,6 +289,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
                     prefix_cache_size: 0,
                     speculation,
                     sample: cfg.clone(),
+                    precision,
                     ..Default::default()
                 };
                 let requests: Vec<Request> =
@@ -300,6 +313,13 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
                      cannot fork session state); drop --speculate or use --engine native"
                 );
             }
+            if precision != Precision::F32 {
+                bail!(
+                    "--precision {} needs the native engine (the full-context \
+                     window baseline runs f32 only)",
+                    precision.label()
+                );
+            }
             let mut engine =
                 load_engine_with_checkpoint(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
             let (tok, _, _) = report::build_data(&ctx, engine.manifest())?;
@@ -319,8 +339,9 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Shared `--speculate N` / `--drafter ngram[:N]|shallow[:K]` parsing
-/// for `serve` and `generate`.
+/// Shared `--speculate N` / `--drafter ngram[:N]|shallow[:K]|shallow-q[:K]`
+/// parsing for `serve` and `generate` (the spec grammar itself lives in
+/// [`DrafterKind::parse`]).
 fn speculation_from_args(a: &Args) -> Result<Option<SpecCfg>> {
     let draft_len = a.usize("speculate").map_err(|e| anyhow!(e))?;
     if draft_len == 0 {
@@ -370,15 +391,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("max-queue-wait-ms", "0", "finish requests queued longer than this as timed_out (0 = wait forever)")
         .flag("prefix-cache", "32", "shared prompt-prefix cache entries (0 = disabled)")
         .flag("speculate", "0", "speculative decoding: draft block length (0 = off)")
-        .flag("drafter", "ngram", "draft proposer: ngram[:N] (prompt lookup) | shallow[:K] (first K layers)")
+        .flag("drafter", "ngram", "draft proposer: ngram[:N] (prompt lookup) | shallow[:K] (first K layers) | shallow-q[:K] (first K layers on int8 weights)")
         .flag("temperature", "0.8", "sampling temperature (0 = greedy)")
         .flag("top-k", "40", "top-k filter (0 = off)")
         .flag("max-new-tokens", "48", "maximum tokens per request")
+        .flag("precision", "f32", "weight precision: f32 | int8 (quantize at load; checkpoints stay f32)")
         .parse(argv)
         .map_err(|e| anyhow!(e))?;
     let ctx = ctx_from_args(&a)?;
-    let model = native_model(&ctx.preset, &a.str("variant"), a.get("checkpoint"))?;
+    let precision = Precision::parse(&a.str("precision"))?;
+    let model = native_model(&ctx.preset, &a.str("variant"), a.get("checkpoint"), precision)?;
     let (tok, _, _) = report::build_data(&ctx, &model.manifest)?;
+    // Startup facts every deployment wants in the log: what the weights
+    // cost resident and which kernel tier this build dispatches to.
+    let resident = model.resident_weight_bytes();
+    let backend = hsm::infer::tensor::kernel_backend();
 
     let wait_ms = a.u64("max-queue-wait-ms").map_err(|e| anyhow!(e))?;
     let cfg = ServeCfg {
@@ -395,6 +422,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             seed: ctx.train_seed,
             stop_at_eot: true,
         },
+        precision,
     };
 
     if let Some(addr) = a.get("http") {
@@ -403,7 +431,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         let sched = Arc::new(StreamScheduler::start(model, tok, cfg)?);
         let server = HttpServer::bind(&addr, sched)?;
         let at = server.local_addr();
-        println!("serving {} over http://{at}", a.str("variant"));
+        println!(
+            "serving {} over http://{at} — {} weights ({resident} resident bytes), \
+             {backend} kernels",
+            a.str("variant"),
+            precision.label()
+        );
         println!("\ntry it:");
         println!(
             "  curl -s http://{at}/v1/generate -d '{{\"prompt\": \"Once upon a time\", \
@@ -426,6 +459,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .collect();
     let (max_active, threads) = (cfg.max_active, cfg.threads);
     let sched = Scheduler::new(model, cfg)?;
+    println!(
+        "serving a {n}-request batch — {} weights ({resident} resident bytes), \
+         {backend} kernels",
+        precision.label()
+    );
 
     let t0 = Instant::now();
     let completions = sched.serve(&tok, requests)?;

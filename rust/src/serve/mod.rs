@@ -94,7 +94,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::generation::{encode_prompt, sample_logits, SampleCfg};
 use crate::infer::speculate::{DraftCtx, Drafter, SpecCfg, SpecCounters, SpecStats};
-use crate::infer::{Decoder, Model, NativeDecoder, SessionState};
+use crate::infer::{Decoder, Model, NativeDecoder, Precision, SessionState};
 use crate::tokenizer::{StreamDecoder, Tokenizer};
 use crate::util::rng::Rng;
 
@@ -212,6 +212,13 @@ pub struct ServeCfg {
     pub speculation: Option<SpecCfg>,
     /// Sampling parameters shared by every request.
     pub sample: SampleCfg,
+    /// The weight precision this scheduler expects to serve at
+    /// ([`Precision::F32`] by default).  Precision is decided at model
+    /// *load* time ([`Model::shared_with_precision`]); the cfg names it
+    /// again so a serving stack wired for int8 fails loudly at
+    /// construction ([`ServeCfg::validate_model`]) instead of silently
+    /// decoding at the wrong precision after a bad reload.
+    pub precision: Precision,
 }
 
 impl Default for ServeCfg {
@@ -224,6 +231,7 @@ impl Default for ServeCfg {
             prefix_cache_size: 32,
             speculation: None,
             sample: SampleCfg::default(),
+            precision: Precision::F32,
         }
     }
 }
@@ -241,6 +249,21 @@ impl ServeCfg {
         }
         if let Some(spec) = &self.speculation {
             spec.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Cross-check against the model this scheduler will actually run:
+    /// [`ServeCfg::precision`] must match what the model was loaded as.
+    /// Called wherever a cfg meets its model ([`Scheduler::new`],
+    /// [`serve`], [`StreamScheduler::start`]).
+    pub fn validate_model(&self, model: &Model) -> Result<()> {
+        if self.precision != model.precision() {
+            bail!(
+                "serve: cfg expects {} weights but the model was loaded as {}",
+                self.precision.label(),
+                model.precision().label()
+            );
         }
         Ok(())
     }
@@ -350,6 +373,7 @@ impl Scheduler {
     /// error instead of hanging or degenerating at serve time.
     pub fn new(model: Arc<Model>, cfg: ServeCfg) -> Result<Self> {
         cfg.validate_resident()?;
+        cfg.validate_model(&model)?;
         let cache = (cfg.prefix_cache_size > 0)
             .then(|| Arc::new(PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size)));
         Ok(Scheduler { model, cfg, cache })
@@ -388,6 +412,7 @@ pub fn serve(
     requests: Vec<Request>,
     cfg: &ServeCfg,
 ) -> Result<Vec<Completion>> {
+    cfg.validate_model(model)?;
     let cache = (cfg.prefix_cache_size > 0)
         .then(|| PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size));
     serve_with_cache(model, tok, requests, cfg, cache.as_ref())
@@ -1230,6 +1255,7 @@ impl StreamScheduler {
     /// session pool, and spawn the worker threads.
     pub fn start(model: Arc<Model>, tok: Tokenizer, cfg: ServeCfg) -> Result<Self> {
         cfg.validate_resident()?;
+        cfg.validate_model(&model)?;
         let free = (0..cfg.max_active).map(|_| model.session()).collect();
         let cache = (cfg.prefix_cache_size > 0)
             .then(|| Arc::new(PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size)));
@@ -1455,6 +1481,36 @@ mod tests {
         let cfg = ServeCfg { quantum: 0, threads: 1, ..Default::default() };
         assert!(cfg.validate().is_ok());
         assert!(serve(&model, &tok, vec![Request::new(0, "hi there")], &cfg).is_ok());
+    }
+
+    /// [`ServeCfg::precision`] must name what the model was actually
+    /// loaded as: mismatches fail at construction in every scheduler
+    /// shape, and a matching int8 cfg serves deterministically.
+    #[test]
+    fn cfg_precision_must_match_the_loaded_model() {
+        let tok = tok();
+        let f32_model = model(tok.vocab_size(), 48);
+        let q_model = {
+            let layers = vec![
+                LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+                LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+            ];
+            let m = Manifest::synthetic("hsm_ab", layers, 8, 48, tok.vocab_size(), 1);
+            let flat = weights::seeded_flat(&m, 21);
+            let w = ModelWeights::from_flat(&m, &flat).unwrap();
+            Model::shared_with_precision(m, w, Precision::Int8).unwrap()
+        };
+        let f32_cfg = ServeCfg { threads: 1, ..Default::default() };
+        let int8_cfg = ServeCfg { threads: 1, precision: Precision::Int8, ..Default::default() };
+        let req = vec![Request::new(0, "Once upon a time")];
+        assert!(serve(&f32_model, &tok, req.clone(), &int8_cfg).is_err());
+        assert!(serve(&q_model, &tok, req.clone(), &f32_cfg).is_err());
+        assert!(Scheduler::new(Arc::clone(&f32_model), int8_cfg.clone()).is_err());
+        assert!(StreamScheduler::start(Arc::clone(&q_model), tok.clone(), f32_cfg).is_err());
+        let a = serve(&q_model, &tok, req.clone(), &int8_cfg).unwrap();
+        let b = serve(&q_model, &tok, req, &int8_cfg).unwrap();
+        assert_eq!(a[0].completion, b[0].completion, "int8 serving must be deterministic");
+        assert!(a[0].tokens_generated > 0 || a[0].finish == FinishReason::Eot);
     }
 
     #[test]

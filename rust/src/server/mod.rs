@@ -315,12 +315,24 @@ fn handle_stream(inner: &ServerInner, w: &mut impl Write, req: &http::HttpReques
 }
 
 fn handle_health(inner: &ServerInner, w: &mut impl Write, keep_alive: bool) -> Result<()> {
-    let m = &inner.sched.model().manifest;
+    let model = inner.sched.model();
+    let m = &model.manifest;
     let mut pairs = vec![
         ("status", json::s("ok")),
         ("variant", json::s(&m.variant)),
         ("ctx", json::num(m.ctx as f64)),
         ("vocab", json::num(m.vocab as f64)),
+        // Deployment observability: which kernel tier this build
+        // dispatches to, the serving precision, and what the resident
+        // weights actually cost in RAM (int8 ≈ 0.27× f32).
+        (
+            "model",
+            json::obj(vec![
+                ("precision", json::s(model.precision().label())),
+                ("kernel_backend", json::s(crate::infer::tensor::kernel_backend())),
+                ("resident_weight_bytes", json::num(model.resident_weight_bytes() as f64)),
+            ]),
+        ),
     ];
     // Prefix-cache observability: hit rate is the one number that says
     // whether shared-prompt-head traffic is actually being exploited.

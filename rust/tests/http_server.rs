@@ -169,10 +169,16 @@ fn bad_requests_and_routes_get_http_errors() {
 
 #[test]
 fn healthz_reports_the_model() {
-    let (server, tok, _model, addr) = start(sample(), ServeCfg::default());
+    let (server, tok, model, addr) = start(sample(), ServeCfg::default());
     let v = client::health(&addr).unwrap();
     assert_eq!(v.get("status").as_str(), Some("ok"));
     assert_eq!(v.get("vocab").as_usize(), Some(tok.vocab_size()));
+    // Deployment facts: precision, dispatched kernel tier, and the
+    // resident weight footprint of the serving model.
+    let info = v.get("model");
+    assert_eq!(info.get("precision").as_str(), Some(model.precision().label()));
+    assert_eq!(info.get("kernel_backend").as_str(), Some(hsm::infer::tensor::kernel_backend()));
+    assert_eq!(info.get("resident_weight_bytes").as_usize(), Some(model.resident_weight_bytes()));
     server.shutdown();
 }
 

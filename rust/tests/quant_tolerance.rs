@@ -1,0 +1,185 @@
+//! Quantization tolerance harness: pins how far int8 decoding may
+//! drift from f32 on the *same* checkpoint, for every mixer kind.
+//!
+//! Three pinned metrics, measured over a teacher-forced greedy decode
+//! (both models consume the f32 model's greedy continuation, so every
+//! position compares the same context):
+//!
+//! * **logit max-abs-delta**, relative to the f32 logit scale — the
+//!   rawest view of accumulated quantization error through the stack;
+//! * **perplexity ratio** `exp(|nll_int8 − nll_f32|)` of the decoded
+//!   continuation — the aggregate quality cost;
+//! * **greedy agreement rate** — how often int8 argmax equals f32
+//!   argmax, the number that predicts `shallow-q` draft acceptance.
+//!
+//! The pins are deliberately several× looser than the error a healthy
+//! per-row-scale int8 path produces (~1–5% relative), but orders of
+//! magnitude tighter than any real kernel/quantizer regression — and a
+//! companion test corrupts the quantized weights to prove the harness
+//! actually trips.  Both precisions share one `seeded_flat` checkpoint,
+//! so a failure here is quantization drift, never weight drift.
+
+use std::sync::Arc;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::argmax;
+use hsm::infer::{weights, DecodeSession, Model, ModelWeights, Precision};
+
+const KINDS: &[&str] = &["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"];
+
+fn layers_for(kind: &str) -> Vec<LayerInfo> {
+    match kind {
+        "ab" => vec![
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![1, 2, 4, 8], ffn: 24 },
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![2, 4, 8, 16], ffn: 24 },
+        ],
+        _ => vec![
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![1], ffn: 24 },
+            LayerInfo { kind: kind.into(), heads: 2, shifts: vec![3], ffn: 24 },
+        ],
+    }
+}
+
+fn manifest_for(kind: &str) -> Manifest {
+    Manifest::synthetic(kind, layers_for(kind), 16, 96, 300, 1)
+}
+
+/// f32 and int8 models over the identical flat checkpoint.
+fn pair_for(kind: &str) -> (Arc<Model>, Arc<Model>) {
+    let m = manifest_for(kind);
+    let flat = weights::seeded_flat(&m, 31);
+    let f = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap();
+    let w = ModelWeights::from_flat(&m, &flat).unwrap();
+    let q = Model::shared_with_precision(m, w, Precision::Int8).unwrap();
+    (f, q)
+}
+
+/// Negative log-likelihood of `target` under `logits` (f64 log-softmax:
+/// the metric must not add its own rounding story).
+fn nll(logits: &[f32], target: u32) -> f64 {
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&v| f64::from(v - mx).exp()).sum::<f64>().ln() + f64::from(mx);
+    lse - f64::from(logits[target as usize])
+}
+
+struct Tolerance {
+    /// max over positions of max-abs logit delta.
+    max_logit_delta: f32,
+    /// max over positions of max-abs f32 logit (the scale reference).
+    logit_scale: f32,
+    /// `exp(|mean nll_int8 − mean nll_f32|)` on the decoded tokens.
+    ppl_ratio: f64,
+    /// Fraction of positions where both argmaxes agree.
+    agreement: f64,
+}
+
+/// Teacher-forced comparison: both sessions consume the f32 model's
+/// greedy continuation (so int8 is always judged in the same context),
+/// accumulating the three pinned metrics over `steps` positions.
+fn measure(f32_model: &Arc<Model>, q_model: &Arc<Model>, steps: usize) -> Tolerance {
+    let mut a = DecodeSession::new(&f32_model.manifest, None).unwrap();
+    let mut b = DecodeSession::new(&q_model.manifest, None).unwrap();
+    let mut token = 7u32;
+    let (mut max_delta, mut scale) = (0.0f32, 0.0f32);
+    let (mut nll_f, mut nll_q) = (0.0f64, 0.0f64);
+    let mut agree = 0usize;
+    for _ in 0..steps {
+        let lf = a.step(f32_model, token).unwrap().to_vec();
+        let lq = b.step(q_model, token).unwrap();
+        let next = argmax(&lf);
+        if argmax(lq) == next {
+            agree += 1;
+        }
+        for (&f, &q) in lf.iter().zip(lq.iter()) {
+            max_delta = max_delta.max((f - q).abs());
+            scale = scale.max(f.abs());
+        }
+        nll_f += nll(&lf, next);
+        nll_q += nll(lq, next);
+        token = next;
+    }
+    let n = steps as f64;
+    Tolerance {
+        max_logit_delta: max_delta,
+        logit_scale: scale,
+        ppl_ratio: ((nll_q / n) - (nll_f / n)).abs().exp(),
+        agreement: agree as f64 / n,
+    }
+}
+
+const STEPS: usize = 48;
+/// Relative logit error pin (healthy: ~0.01–0.05).
+const MAX_REL_LOGIT_DELTA: f32 = 0.15;
+/// Perplexity-ratio pin (healthy: < 1.05).
+const MAX_PPL_RATIO: f64 = 1.30;
+/// Greedy agreement pin (healthy: > 0.8; chance: 1/300).
+const MIN_AGREEMENT: f64 = 0.5;
+
+#[test]
+fn quantized_decoding_stays_within_tolerance_for_every_mixer_kind() {
+    for kind in KINDS {
+        let (f, q) = pair_for(kind);
+        let t = measure(&f, &q, STEPS);
+        assert!(
+            t.max_logit_delta.is_finite() && t.logit_scale.is_finite() && t.logit_scale > 0.0,
+            "{kind}: degenerate logits (delta {} scale {})",
+            t.max_logit_delta,
+            t.logit_scale
+        );
+        let rel = t.max_logit_delta / t.logit_scale.max(1.0);
+        assert!(
+            rel <= MAX_REL_LOGIT_DELTA,
+            "{kind}: int8 logit drift {rel:.4} exceeds {MAX_REL_LOGIT_DELTA} \
+             (max delta {} at scale {})",
+            t.max_logit_delta,
+            t.logit_scale
+        );
+        assert!(
+            t.ppl_ratio <= MAX_PPL_RATIO,
+            "{kind}: perplexity ratio {:.4} exceeds {MAX_PPL_RATIO}",
+            t.ppl_ratio
+        );
+        assert!(
+            t.agreement >= MIN_AGREEMENT,
+            "{kind}: greedy agreement {:.3} below {MIN_AGREEMENT}",
+            t.agreement
+        );
+    }
+}
+
+/// Int8 decoding must be *exactly* reproducible: tolerance is about
+/// f32↔int8 distance, never about run-to-run noise — a second measure
+/// over fresh sessions yields bit-identical metrics.
+#[test]
+fn tolerance_metrics_are_deterministic() {
+    let (f, q) = pair_for("ab");
+    let x = measure(&f, &q, STEPS);
+    let y = measure(&f, &q, STEPS);
+    assert_eq!(x.max_logit_delta.to_bits(), y.max_logit_delta.to_bits());
+    assert_eq!(x.logit_scale.to_bits(), y.logit_scale.to_bits());
+    assert_eq!(x.ppl_ratio.to_bits(), y.ppl_ratio.to_bits());
+    assert_eq!(x.agreement.to_bits(), y.agreement.to_bits());
+}
+
+/// The harness must actually trip on a regression: decode against a
+/// deliberately corrupted quantized model (a 3× embedding blow-up — the
+/// kind of scale bug a broken quantizer produces) and require the logit
+/// pin to fire.  If loosening the pins ever silences this test, they no
+/// longer guard anything.
+#[test]
+fn tolerance_harness_detects_a_corrupted_quantization() {
+    let m = manifest_for("ab");
+    let flat = weights::seeded_flat(&m, 31);
+    let f = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap();
+    let mut w = ModelWeights::from_flat(&m, &flat).unwrap();
+    for v in w.tok_emb.iter_mut() {
+        *v *= 3.0;
+    }
+    let bad = Model::shared_with_precision(m, w, Precision::Int8).unwrap();
+    let t = measure(&f, &bad, STEPS);
+    let rel = t.max_logit_delta / t.logit_scale.max(1.0);
+    assert!(
+        rel > MAX_REL_LOGIT_DELTA,
+        "corrupted weights must exceed the logit pin (got {rel:.4})"
+    );
+}

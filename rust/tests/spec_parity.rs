@@ -1,6 +1,7 @@
 //! Speculative-decoding parity: decode with speculation on must be
-//! **byte-identical** to plain decode — for every mixer kind, both
-//! drafters, greedy and sampled paths — because the verify loop samples
+//! **byte-identical** to plain decode — for every mixer kind, every
+//! drafter (including the int8 `shallow-q` self-draft), greedy and
+//! sampled paths — because the verify loop samples
 //! every emitted token from the full model's logits with the request's
 //! own RNG stream (the drafter only decides how many tokens a round
 //! attempts).  Plus property tests that randomize draft-block length,
@@ -44,13 +45,17 @@ fn tok() -> Tokenizer {
     hsm::tokenizer::trainer::train(&text, 300).unwrap()
 }
 
-fn drafters() -> [DrafterKind; 3] {
+fn drafters() -> [DrafterKind; 4] {
     [
         DrafterKind::NGram { max_ngram: 3 },
         DrafterKind::Shallow { layers: 0 },
         // Full-depth self-draft: the drafter is the model, so greedy
         // acceptance is total — the strongest stress on the rewind path.
         DrafterKind::Shallow { layers: 2 },
+        // Quantized self-draft: proposals come from the int8 shadow
+        // weights while verification scores f32 — quantization error may
+        // move acceptance, but served bytes must not move.
+        DrafterKind::ShallowQuant { layers: 0 },
     ]
 }
 
@@ -116,8 +121,8 @@ fn assert_spec_parity(model: &Arc<Model>, tok: &Tokenizer, base: &ServeCfg, what
     }
 }
 
-/// Byte parity for all 7 mixer kinds × both drafters × greedy and
-/// sampled decoding, on both driver shapes.
+/// Byte parity for all 7 mixer kinds × every drafter (ngram, shallow,
+/// shallow-q) × greedy and sampled decoding, on both driver shapes.
 #[test]
 fn speculative_decode_is_byte_identical_for_every_mixer_kind() {
     let tok = tok();
@@ -233,10 +238,10 @@ fn prop_random_speculation_parity() {
                 sample,
                 ..Default::default()
             };
-            let drafter = if rng.chance(0.5) {
-                DrafterKind::NGram { max_ngram: 1 + rng.below(4) }
-            } else {
-                DrafterKind::Shallow { layers: rng.below(3) }
+            let drafter = match rng.below(3) {
+                0 => DrafterKind::NGram { max_ngram: 1 + rng.below(4) },
+                1 => DrafterKind::Shallow { layers: rng.below(3) },
+                _ => DrafterKind::ShallowQuant { layers: rng.below(3) },
             };
             let reqs = || {
                 vec![Request::new(0, &prompt), Request::new(1, &prompt)]

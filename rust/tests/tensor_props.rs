@@ -10,11 +10,21 @@
 //! zeros (`-0.0 == 0.0` must still take the zero-skip path), and
 //! subnormals (no flush-to-zero allowed).  Comparison is on raw bits —
 //! `assert_eq!` on f32 would call NaN ≠ NaN and miss -0.0 vs 0.0.
+//!
+//! The int8 tier gets the same treatment: every quantized kernel
+//! (blocked, dispatched, and the explicit `simd` entry points) against
+//! `matvec_q_naive`/`matmul_q_naive` bit-for-bit, across lane-remainder
+//! shapes, empty/degenerate outputs, saturated ±127 rows, zero rows,
+//! and extreme per-row scales.
 
 use hsm::infer::tensor::{
-    matmul, matmul_blocked, matmul_naive, matmul_t, matmul_t_blocked, matmul_t_naive, matvec,
-    matvec_blocked, matvec_naive, matvec_t, matvec_t_blocked, matvec_t_naive,
+    matmul, matmul_blocked, matmul_naive, matmul_q, matmul_q_blocked, matmul_q_naive, matmul_t,
+    matmul_t_blocked, matmul_t_naive, matmul_t_q, matvec, matvec_blocked, matvec_naive, matvec_q,
+    matvec_q_blocked, matvec_q_naive, matvec_t, matvec_t_blocked, matvec_t_naive, matvec_t_q,
+    quantize_row,
 };
+#[cfg(feature = "simd")]
+use hsm::infer::tensor::simd;
 use hsm::util::prop;
 use hsm::util::rng::Rng;
 
@@ -143,6 +153,169 @@ fn prop_batched_kernels_match_per_row_naive_bit_for_bit() {
         got_t.fill(7.0);
         matmul_t(&xs, m, &w, n, &mut got_t);
         assert_bits_eq(&got_t, &want_t, &format!("matmul_t dispatched m={m} k={k} n={n}"));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Int8 tier (quantized weights + activations)
+// ---------------------------------------------------------------------------
+
+/// Random int8 row in the quantizer's range `[-127, 127]` (never −128 —
+/// the AVX2 maddubs trick requires it), biased toward the saturation
+/// endpoints and zero.
+fn arb_qrow(rng: &mut Rng, len: usize) -> Vec<i8> {
+    (0..len)
+        .map(|_| {
+            if rng.chance(0.2) {
+                *rng.pick(&[-127i8, 127, 0])
+            } else {
+                (rng.below(255) as i32 - 127) as i8
+            }
+        })
+        .collect()
+}
+
+/// Per-row scales spanning ordinary magnitudes and the extremes that
+/// expose premature f32 scaling (1e-30 underflow bait, 3.4e30 overflow
+/// bait, exact-zero rows from degenerate quantization).
+fn arb_scales(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let extremes = [0.0f32, 1.0e-30, 3.4e30, 1.0, 7.25e-3];
+    (0..n)
+        .map(|_| if rng.chance(0.3) { *rng.pick(&extremes) } else { rng.f32() * 0.1 + 1.0e-3 })
+        .collect()
+}
+
+/// Every int8 tier must be bit-identical to the naive int8 reference:
+/// exact i32 accumulation makes the integer sum unique, and the shared
+/// `scale_out` expression makes the f32 conversion unique.  Activations
+/// arrive both pre-built and through the real `quantize_row`, so the
+/// fuzz covers exactly the values decode produces.
+#[test]
+fn prop_int8_matvec_tiers_match_naive_bit_for_bit() {
+    prop::check_n("int8-matvec-tiers", prop::default_cases(), |rng| {
+        let (k, n) = arb_shape(rng);
+        let (qx, sx) = if rng.chance(0.5) {
+            (arb_qrow(rng, k), *rng.pick(&[0.0f32, 1.0e-30, 3.4e30, 2.0e-2]))
+        } else {
+            let x = arb_edge_f32s(rng, k, 2.0);
+            let mut q = vec![0i8; k];
+            let s = quantize_row(&x, &mut q);
+            (q, s)
+        };
+        let wq = arb_qrow(rng, k * n);
+        let scales = arb_scales(rng, n);
+
+        let mut want = vec![0.0f32; n];
+        matvec_q_naive(&qx, sx, &wq, &scales, &mut want);
+
+        let mut got = vec![7.0f32; n]; // poison: kernels must overwrite
+        matvec_q_blocked(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_q_blocked k={k} n={n}"));
+
+        got.fill(7.0);
+        matvec_q(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_q dispatched k={k} n={n}"));
+
+        // The transposed entry point is documented as the same kernel
+        // (quantized storage is always out-major).
+        got.fill(7.0);
+        matvec_t_q(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_t_q k={k} n={n}"));
+
+        #[cfg(feature = "simd")]
+        {
+            got.fill(7.0);
+            simd::matvec_q(&qx, sx, &wq, &scales, &mut got);
+            assert_bits_eq(&got, &want, &format!("simd::matvec_q k={k} n={n}"));
+        }
+    });
+}
+
+/// Batched int8 tiers: row r of every tier must be bit-identical to a
+/// single-row `matvec_q_naive` call — the fused speculative verify pass
+/// depends on this (`rewind` + re-step must reproduce the same bits).
+#[test]
+fn prop_int8_batched_kernels_match_per_row_naive_bit_for_bit() {
+    prop::check_n("int8-matmul-tiers", prop::default_cases(), |rng| {
+        let (k, n) = arb_shape(rng);
+        let m = rng.below(5); // includes the empty batch
+        let qxs = arb_qrow(rng, m * k);
+        let sxs = arb_scales(rng, m);
+        let wq = arb_qrow(rng, k * n);
+        let scales = arb_scales(rng, n);
+
+        let mut want = vec![0.0f32; m * n];
+        matmul_q_naive(&qxs, m, &sxs, &wq, &scales, &mut want);
+        for r in 0..m {
+            let mut row = vec![0.0f32; n];
+            matvec_q_naive(&qxs[r * k..(r + 1) * k], sxs[r], &wq, &scales, &mut row);
+            assert_bits_eq(&row, &want[r * n..(r + 1) * n], &format!("matmul_q_naive row {r}"));
+        }
+
+        let mut got = vec![7.0f32; m * n];
+        if m > 0 {
+            // The blocked core itself (the dispatcher handles m = 0).
+            matmul_q_blocked(&qxs, m, &sxs, &wq, &scales, &mut got);
+            assert_bits_eq(&got, &want, &format!("matmul_q_blocked m={m} k={k} n={n}"));
+            got.fill(7.0);
+        }
+        matmul_q(&qxs, m, &sxs, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matmul_q dispatched m={m} k={k} n={n}"));
+
+        got.fill(7.0);
+        matmul_t_q(&qxs, m, &sxs, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matmul_t_q m={m} k={k} n={n}"));
+
+        #[cfg(feature = "simd")]
+        if m > 0 {
+            got.fill(7.0);
+            simd::matmul_q(&qxs, m, &sxs, &wq, &scales, &mut got);
+            assert_bits_eq(&got, &want, &format!("simd::matmul_q m={m} k={k} n={n}"));
+        }
+    });
+}
+
+/// Saturated rows (all entries ±127) push the AVX2 pairwise i16 sums to
+/// their ceiling (2·127² = 32258 < i16::MAX — the reason `quantize_row`
+/// never emits −128) and must stay exact in every tier; all-zero
+/// quantized rows must come out as exact zeros whatever the scales.
+#[test]
+fn prop_int8_saturated_and_zero_rows_stay_exact() {
+    prop::check_n("int8-saturation", prop::default_cases(), |rng| {
+        let k = *rng.pick(&[1usize, 31, 32, 33, 64, 257]);
+        let n = *rng.pick(&[1usize, 4, 5]);
+        let qx: Vec<i8> = (0..k).map(|_| if rng.chance(0.5) { 127i8 } else { -127 }).collect();
+        let wq: Vec<i8> = (0..k * n).map(|_| if rng.chance(0.5) { 127i8 } else { -127 }).collect();
+        let scales = arb_scales(rng, n);
+        let sx = 3.1e-2f32;
+
+        let mut want = vec![0.0f32; n];
+        matvec_q_naive(&qx, sx, &wq, &scales, &mut want);
+        // The reference itself must carry the exact integer dot (±k·127²
+        // fits i32 easily at these k).
+        for (j, &y) in want.iter().enumerate() {
+            let mut sum = 0i64;
+            for i in 0..k {
+                sum += qx[i] as i64 * wq[j * k + i] as i64;
+            }
+            assert_eq!(y.to_bits(), ((sum as i32 as f32) * (sx * scales[j])).to_bits());
+        }
+
+        let mut got = vec![7.0f32; n];
+        matvec_q_blocked(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("saturated blocked k={k} n={n}"));
+        got.fill(7.0);
+        matvec_q(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("saturated dispatched k={k} n={n}"));
+
+        // Degenerate quantization (all-zero row, scale 0) must produce
+        // exact zeros out of every tier, not tiny scaled noise.
+        let zeros = vec![0i8; k];
+        let mut zy = vec![7.0f32; n];
+        matvec_q(&zeros, 0.0, &wq, &scales, &mut zy);
+        for (j, y) in zy.iter().enumerate() {
+            assert_eq!(y.to_bits(), 0.0f32.to_bits(), "zero row must stay exactly zero (j={j})");
+        }
     });
 }
 
