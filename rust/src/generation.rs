@@ -257,10 +257,11 @@ pub fn generate<D: Decoder + ?Sized>(
         prompt: prompt.to_string(),
         ids,
         deadline: None,
+        submitted: std::time::Instant::now(),
         sink: None,
     };
     let mut out = vec![None];
-    serve::run_local(&mut [&mut *dec], tok, vec![job], cfg, 0, None, None, &mut out)?;
+    serve::run_local(&mut [&mut *dec], tok, vec![job], cfg, 0, None, None, None, &mut out)?;
     Ok(to_generation(out.pop().unwrap().expect("single sequence completed")))
 }
 
@@ -310,11 +311,12 @@ pub fn generate_batch<D: Decoder>(
             prompt: (*prompt).to_string(),
             ids,
             deadline: None,
+            submitted: std::time::Instant::now(),
             sink: None,
         });
     }
     let mut out = vec![None; prompts.len()];
-    serve::run_local(decoders, tok, jobs, cfg, 1, None, None, &mut out)?;
+    serve::run_local(decoders, tok, jobs, cfg, 1, None, None, None, &mut out)?;
     Ok(out
         .into_iter()
         .map(|c| to_generation(c.expect("every sequence completed")))

@@ -22,6 +22,7 @@
 //! token-for-token in `rust/tests/decode_parity.rs`.
 
 use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -35,6 +36,7 @@ use super::weights::{
 };
 use super::Decoder;
 use crate::config::{LayerInfo, Manifest};
+use crate::obs::{MetricsRegistry, Phase, StageObs};
 
 /// Ring buffer of the last `capacity` activation vectors.
 #[derive(Debug, Clone)]
@@ -828,6 +830,10 @@ pub struct DecodeSession {
     mix: MixScratch,
     /// Fused-batch arena; `None` until the first [`Self::step_batch`].
     batch: Option<Box<BatchScratch>>,
+    /// Per-stage timing handle (telemetry); `None` — the default — adds
+    /// a single branch per step, and even when attached only every
+    /// `sample_every`th step reads the clock.
+    obs: Option<Box<StageObs>>,
 }
 
 impl DecodeSession {
@@ -853,7 +859,15 @@ impl DecodeSession {
             logits: vec![0.0; m.vocab],
             mix: MixScratch::new(d, max_ffn),
             batch: None,
+            obs: None,
         })
+    }
+
+    /// Install (or remove) the per-stage timing handle.  Schedulers
+    /// attach one at admission when stage sampling is enabled; a plain
+    /// session never pays more than the `None` branch.
+    pub fn set_stage_obs(&mut self, obs: Option<Box<StageObs>>) {
+        self.obs = obs;
     }
 
     pub fn position(&self) -> usize {
@@ -955,12 +969,20 @@ impl DecodeSession {
             bail!("context window ({}) exhausted — call reset()", m.ctx);
         }
 
+        // Stage timing: the sampling countdown decides once per step;
+        // unsampled steps (and sessions without a handle) never read
+        // the clock.  Prefill steps skip logits, so the phase split
+        // keys off `want_logits`.
+        let timed = self.obs.as_mut().is_some_and(|o| o.tick());
+        let phase = if want_logits { Phase::Step } else { Phase::Prefill };
+
         // Embedding + learned position.
         w.embed(token as usize, self.state.pos, d, &mut self.x);
 
         for (l, spec) in m.layers.iter().enumerate().take(layers) {
             let lw = w.layer(l);
 
+            let mut t0 = timed.then(Instant::now);
             // h = LN1(x); y = mixer(h, state); x += y
             layer_norm(&self.x, lw.ln1_g, lw.ln1_b, &mut self.h);
             mixer_step(
@@ -973,6 +995,11 @@ impl DecodeSession {
                 &mut self.mix,
             );
             add_assign(&mut self.x, &self.y);
+            if let (Some(t), Some(o)) = (t0, &self.obs) {
+                let now = Instant::now();
+                o.cells(phase).mixer[l].record(now.duration_since(t).as_nanos() as u64);
+                t0 = Some(now);
+            }
 
             // FFN
             layer_norm(&self.x, lw.ln2_g, lw.ln2_b, &mut self.f2);
@@ -984,13 +1011,20 @@ impl DecodeSession {
             lin(f1, lw.ffn_w2, d, &mut self.mix.qx, &mut self.f2);
             add_assign(&mut self.f2, lw.ffn_b2);
             add_assign(&mut self.x, &self.f2);
+            if let (Some(t), Some(o)) = (t0, &self.obs) {
+                o.cells(phase).ffn[l].record(t.elapsed().as_nanos() as u64);
+            }
         }
 
         if want_logits {
+            let t0 = timed.then(Instant::now);
             // Final LN + tied-embedding projection.
             let (lnf_g, lnf_b) = w.lnf();
             layer_norm(&self.x, lnf_g, lnf_b, &mut self.h);
             lin_t(&self.h, w.tok_emb(), vocab, &mut self.mix.qx, &mut self.logits);
+            if let (Some(t), Some(o)) = (t0, &self.obs) {
+                o.cells(phase).logits.record(t.elapsed().as_nanos() as u64);
+            }
         }
         self.state.pos += 1;
         Ok(())
@@ -1035,6 +1069,9 @@ impl DecodeSession {
         let depth = m.layers.len();
         let max_ffn = m.layers.iter().map(|l| l.ffn).max().unwrap_or(d);
         let pre_pos = self.state.pos;
+        // One sampling decision per fused pass (it scores `rows`
+        // positions, so sampling is per-pass, like one verify round).
+        let timed = self.obs.as_mut().is_some_and(|o| o.tick());
         let bs = self.batch.get_or_insert_with(Box::default);
         bs.prepare(rows, pre_pos, depth, d, max_ffn, vocab);
 
@@ -1056,6 +1093,7 @@ impl DecodeSession {
                 LayerState::Attn { .. } => bs.saved[l] = None,
             }
 
+            let mut t0 = timed.then(Instant::now);
             // h = LN1(x); y = mixer(h, state); x += y.
             for r in 0..rows {
                 layer_norm(
@@ -1079,6 +1117,12 @@ impl DecodeSession {
             bs.h_hist[l].copy_from_slice(&bs.hs[..rows * d]);
             for r in 0..rows {
                 add_assign(&mut bs.xs[r * d..(r + 1) * d], &bs.ys[r * d..(r + 1) * d]);
+            }
+            if let (Some(t), Some(o)) = (t0, &self.obs) {
+                let now = Instant::now();
+                o.cells(Phase::VerifyFused).mixer[l]
+                    .record(now.duration_since(t).as_nanos() as u64);
+                t0 = Some(now);
             }
 
             // FFN: LN row-wise, both projections fused across rows.
@@ -1120,9 +1164,13 @@ impl DecodeSession {
             for r in 0..rows {
                 add_assign(&mut bs.xs[r * d..(r + 1) * d], &bs.f2s[r * d..(r + 1) * d]);
             }
+            if let (Some(t), Some(o)) = (t0, &self.obs) {
+                o.cells(Phase::VerifyFused).ffn[l].record(t.elapsed().as_nanos() as u64);
+            }
         }
 
         // Final LN + tied-embedding projection, fused across rows.
+        let t0 = timed.then(Instant::now);
         let (lnf_g, lnf_b) = w.lnf();
         for r in 0..rows {
             layer_norm(&bs.xs[r * d..(r + 1) * d], lnf_g, lnf_b, &mut bs.hs[r * d..(r + 1) * d]);
@@ -1136,6 +1184,9 @@ impl DecodeSession {
             &mut bs.sxs,
             &mut bs.logits[..rows * vocab],
         );
+        if let (Some(t), Some(o)) = (t0, &self.obs) {
+            o.cells(Phase::VerifyFused).logits.record(t.elapsed().as_nanos() as u64);
+        }
         self.state.pos += rows;
         Ok(&bs.logits[..rows * vocab])
     }
@@ -1295,6 +1346,26 @@ impl Decoder for NativeDecoder {
 
     fn fingerprint(&self) -> u64 {
         self.model.fingerprint()
+    }
+
+    fn precision(&self) -> Precision {
+        self.model.precision()
+    }
+
+    /// Resolve stage cells for this model's layer stack and install
+    /// them on the session; every subsequent step/prefill/fused-verify
+    /// pass samples its mixer/FFN/logits split into `registry`.
+    fn attach_stage_obs(&mut self, registry: &Arc<MetricsRegistry>, sample_every: usize) {
+        if sample_every == 0 {
+            self.session.set_stage_obs(None);
+            return;
+        }
+        self.session.set_stage_obs(Some(StageObs::attach(
+            registry,
+            &self.model.manifest,
+            self.model.precision().label(),
+            sample_every,
+        )));
     }
 
     /// The native engine supports every drafter: the model-free n-gram

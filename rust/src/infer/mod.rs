@@ -41,11 +41,12 @@ pub mod window;
 
 pub use engine::{DecodeSession, LayerState, Model, NativeDecoder, SessionState};
 pub use speculate::{
-    DraftCtx, Drafter, DrafterKind, NGramDrafter, ShallowDrafter, SpecCfg, SpecCounters,
-    SpecStats,
+    DraftCtx, Drafter, DrafterKind, NGramDrafter, ShallowDrafter, SpecCfg, SpecStats,
 };
 pub use weights::{ModelWeights, Precision, QuantMatrix, QuantWeights};
 pub use window::WindowEngine;
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -162,6 +163,22 @@ pub trait Decoder {
             DrafterKind::Shallow { .. } | DrafterKind::ShallowQuant { .. } => None,
         }
     }
+
+    /// Weight precision this decoder runs at — a telemetry label
+    /// ([`crate::obs`] stage timings, request logs).  The default claims
+    /// f32; implementations that can quantize report their actual mode.
+    fn precision(&self) -> Precision {
+        Precision::F32
+    }
+
+    /// Install per-stage timing ([`crate::obs::StageObs`]) on this
+    /// decoder's step path, sampling one step in `sample_every`.  The
+    /// default is a no-op: a decoder without stage hooks simply
+    /// contributes no `hsm_stage_seconds_total` samples, and every other
+    /// metric still works.
+    fn attach_stage_obs(&mut self, registry: &Arc<crate::obs::MetricsRegistry>, sample_every: usize) {
+        let _ = (registry, sample_every);
+    }
 }
 
 /// Forwarding impl: a `&mut D` decodes through the borrowed decoder, so
@@ -219,5 +236,13 @@ impl<D: Decoder + ?Sized> Decoder for &mut D {
 
     fn drafter(&self, kind: &DrafterKind) -> Option<Box<dyn Drafter>> {
         (**self).drafter(kind)
+    }
+
+    fn precision(&self) -> Precision {
+        (**self).precision()
+    }
+
+    fn attach_stage_obs(&mut self, registry: &Arc<crate::obs::MetricsRegistry>, sample_every: usize) {
+        (**self).attach_stage_obs(registry, sample_every)
     }
 }

@@ -45,9 +45,9 @@
 //! (`crate::serve`), where it threads through both scheduler shapes and
 //! the streaming surface; this module owns the drafter abstraction, the
 //! configuration ([`SpecCfg`], [`DrafterKind`]) and the acceptance
-//! accounting ([`SpecStats`], [`SpecCounters`]).
+//! accounting ([`SpecStats`]; schedulers aggregate across requests via
+//! [`crate::obs::MetricsRegistry`]).
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -349,7 +349,8 @@ impl Drafter for ShallowDrafter {
 }
 
 /// Per-request speculative-decoding accounting; also the aggregate
-/// shape reported by `GET /healthz` via [`SpecCounters`].
+/// shape reported by `GET /healthz` via
+/// [`crate::obs::SpecCounterGroup`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SpecStats {
     /// Verify rounds run (each scores one drafted block with the full
@@ -410,45 +411,6 @@ impl SpecStats {
         self.emitted += other.emitted;
         self.fused_passes += other.fused_passes;
         self.fused_rows += other.fused_rows;
-    }
-}
-
-/// Thread-safe aggregate of [`SpecStats`] across every request a
-/// scheduler has finished — the `GET /healthz` acceptance counters.
-#[derive(Debug, Default)]
-pub struct SpecCounters {
-    rounds: AtomicU64,
-    drafted: AtomicU64,
-    accepted: AtomicU64,
-    emitted: AtomicU64,
-    fused_passes: AtomicU64,
-    fused_rows: AtomicU64,
-}
-
-impl SpecCounters {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn add(&self, s: &SpecStats) {
-        self.rounds.fetch_add(s.rounds, Ordering::Relaxed);
-        self.drafted.fetch_add(s.drafted, Ordering::Relaxed);
-        self.accepted.fetch_add(s.accepted, Ordering::Relaxed);
-        self.emitted.fetch_add(s.emitted, Ordering::Relaxed);
-        self.fused_passes.fetch_add(s.fused_passes, Ordering::Relaxed);
-        self.fused_rows.fetch_add(s.fused_rows, Ordering::Relaxed);
-    }
-
-    /// Point-in-time snapshot.
-    pub fn snapshot(&self) -> SpecStats {
-        SpecStats {
-            rounds: self.rounds.load(Ordering::Relaxed),
-            drafted: self.drafted.load(Ordering::Relaxed),
-            accepted: self.accepted.load(Ordering::Relaxed),
-            emitted: self.emitted.load(Ordering::Relaxed),
-            fused_passes: self.fused_passes.load(Ordering::Relaxed),
-            fused_rows: self.fused_rows.load(Ordering::Relaxed),
-        }
     }
 }
 
@@ -655,7 +617,7 @@ mod tests {
         assert_eq!(SpecStats::default().emitted_per_round(), 0.0);
         assert_eq!(SpecStats::default().rows_per_fused_pass(), 0.0);
 
-        let c = SpecCounters::new();
+        let c = crate::obs::SpecCounterGroup::default();
         c.add(&a);
         c.add(&b);
         let snap = c.snapshot();

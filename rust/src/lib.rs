@@ -36,10 +36,11 @@
 //! | [`infer`]     | [`infer::Decoder`] trait, shared-weight [`infer::Model`], per-user [`infer::DecodeSession`]s with forkable [`infer::SessionState`] snapshots, [`infer::NativeDecoder`], full-context [`infer::WindowEngine`] |
 //! | [`generation`] | sampling + [`generation::generate`] / [`generation::generate_batch`] over any [`infer::Decoder`]; [`generation::WindowDecoder`] |
 //! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`, `max_queue_wait`), worker threads over disjoint sessions; shared [`serve::PrefixCache`] of prompt-head snapshots; byte-exact speculative decoding ([`serve::ServeCfg::speculation`], drafters in [`infer::speculate`]); resident [`serve::StreamScheduler`] emitting per-token [`serve::TokenEvent`]s, cancel-on-disconnect |
-//! | [`server`]    | **cross-process serving**: hand-rolled HTTP/1.1 front-end — `POST /v1/generate`, `POST /v1/stream` (SSE chunks), `GET /healthz`, blocking [`server::client`] |
+//! | [`server`]    | **cross-process serving**: hand-rolled HTTP/1.1 front-end — `POST /v1/generate`, `POST /v1/stream` (SSE chunks), `GET /healthz`, `GET /metrics`, blocking [`server::client`] |
+//! | [`obs`]       | **telemetry**: lock-free [`obs::MetricsRegistry`] (latency histograms, request/cache/spec counters, per-stage step timing), Prometheus text exposition, JSON-lines [`obs::RequestLog`] |
 //! | [`checkpoint`] | tensor (de)serialization (+ embedded manifest snapshot)    |
 //! | [`report`]    | Table 1/2/3, Figures 7/8 drivers                            |
-//! | [`metrics`]   | csv/markdown/stats helpers                                  |
+//! | [`report_sinks`] | csv/markdown/stats helpers for the report drivers        |
 //!
 //! ## Generation = prefill + step
 //!
@@ -264,6 +265,62 @@
 //! at construction, and `GET /healthz` reports
 //! `model.{precision, kernel_backend, resident_weight_bytes}`.
 //!
+//! ## Observability: `/metrics`, latency histograms, request logs
+//!
+//! The serving stack records its own telemetry through the [`obs`]
+//! subsystem ([`serve::ServeCfg`]'s `obs`, on by default): lock-free
+//! log-bucketed latency histograms (queue wait, TTFT, per-token gap,
+//! end-to-end, speculative verify rounds; ≤ 6.25% quantile error),
+//! request/token/prefix-cache/speculation counters, and sampled
+//! per-stage step timing (prefill vs step vs fused verify × mixer vs
+//! FFN vs logits, keyed by mixer kind and precision).  The HTTP
+//! front-end exposes the whole registry in Prometheus text format at
+//! `GET /metrics`, and `GET /healthz` reads the same cells.  A
+//! JSON-lines request-lifecycle log (`admitted` → `started` →
+//! `first_token` → `finished`) lands wherever
+//! `hsm serve --log-requests PATH` (or `ObsCfg::request_log`) points:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use hsm::obs::{MetricsRegistry, ObsCfg, RequestLog};
+//! use hsm::serve::{ServeCfg, StreamScheduler};
+//! use hsm::server::HttpServer;
+//! # use hsm::config::{LayerInfo, Manifest};
+//! # use hsm::infer::{weights, Model, ModelWeights};
+//! # use hsm::tokenizer::trainer as bpe;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! # let layers = vec![LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 64 }];
+//! # let tok = bpe::train(&hsm::corpus::generate(1234, 500), 300)?;
+//! # let m = Manifest::synthetic("hsm_ab", layers, 32, 128, tok.vocab_size(), 1);
+//! # let flat = weights::seeded_flat(&m, 42);
+//! # let model = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat)?)?;
+//! let registry = MetricsRegistry::new();
+//! let cfg = ServeCfg {
+//!     obs: ObsCfg {
+//!         metrics: Some(Arc::clone(&registry)),
+//!         request_log: Some(RequestLog::to_file("requests.jsonl".as_ref())?),
+//!         ..Default::default()
+//!     },
+//!     ..Default::default()
+//! };
+//! let sched = Arc::new(StreamScheduler::start(model, tok, cfg)?);
+//! let server = HttpServer::bind("127.0.0.1:8080", sched)?;
+//! // `curl -s localhost:8080/metrics` scrapes the registry; exact
+//! // quantiles are also available in-process:
+//! let p95_ttft_ns = registry.ttft.snapshot().quantile(0.95);
+//! # let _ = (server, p95_ttft_ns);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Telemetry never changes served bytes (`cargo bench --bench
+//! observability` asserts byte-parity and pins the overhead ≤ 3%,
+//! writing `BENCH_obs.json`), and the decode hot path stays
+//! allocation-free: counters are relaxed atomic adds, histograms are
+//! sharded per worker, and stage timing reads the clock only on
+//! sampled steps (`ObsCfg::stage_sample_every`).
+//!
 //! One-off generation keeps the simpler wrappers —
 //! [`generation::generate`] (single session) and
 //! [`generation::generate_batch`] (fixed membership) — which are thin
@@ -288,8 +345,9 @@ pub mod corpus;
 pub mod data;
 pub mod generation;
 pub mod infer;
-pub mod metrics;
+pub mod obs;
 pub mod report;
+pub mod report_sinks;
 pub mod runtime;
 pub mod serve;
 pub mod server;
@@ -303,6 +361,7 @@ pub use infer::{
     Decoder, DecodeSession, DrafterKind, Model, NativeDecoder, Precision, SessionState, SpecCfg,
     SpecStats,
 };
+pub use obs::{MetricsRegistry, ObsCfg, RequestLog};
 pub use serve::{
     Completion, PrefixCache, PrefixCacheStats, Request, Scheduler, ServeCfg, StreamScheduler,
     TokenEvent, TokenStream,

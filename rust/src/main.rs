@@ -396,6 +396,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("top-k", "40", "top-k filter (0 = off)")
         .flag("max-new-tokens", "48", "maximum tokens per request")
         .flag("precision", "f32", "weight precision: f32 | int8 (quantize at load; checkpoints stay f32)")
+        .optional("log-requests", "append one JSON line per request lifecycle event (admitted/started/first_token/finished) to this file")
         .parse(argv)
         .map_err(|e| anyhow!(e))?;
     let ctx = ctx_from_args(&a)?;
@@ -408,6 +409,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let backend = hsm::infer::tensor::kernel_backend();
 
     let wait_ms = a.u64("max-queue-wait-ms").map_err(|e| anyhow!(e))?;
+    // Telemetry is on by default (counters + histograms + stage timing);
+    // --log-requests additionally streams the request lifecycle as
+    // JSON lines.  Everything lands behind GET /metrics and /healthz.
+    let mut obs = hsm::obs::ObsCfg::default();
+    if let Some(path) = a.get("log-requests") {
+        obs.request_log = Some(
+            hsm::obs::RequestLog::to_file(std::path::Path::new(&path))
+                .with_context(|| format!("opening request log {path}"))?,
+        );
+    }
     let cfg = ServeCfg {
         max_active: a.usize("max-active").map_err(|e| anyhow!(e))?,
         threads: a.usize("threads").map_err(|e| anyhow!(e))?,
@@ -423,6 +434,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             stop_at_eot: true,
         },
         precision,
+        obs,
     };
 
     if let Some(addr) = a.get("http") {
@@ -447,6 +459,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              \"max_new_tokens\": 48}}'"
         );
         println!("  curl -s http://{at}/healthz");
+        println!("  curl -s http://{at}/metrics");
         println!("  hsm request --addr {at} --stream --prompt \"Once upon a time\"");
         server.join();
         return Ok(());

@@ -1,0 +1,325 @@
+//! Lock-free log-bucketed latency histograms.
+//!
+//! The recording side is built for the serving hot path: a
+//! [`Histogram`] is a fixed set of per-thread *shards*, each an array
+//! of relaxed `AtomicU64` buckets, so concurrent workers never contend
+//! on a lock and never allocate. Values are u64 nanoseconds.
+//!
+//! Bucketing is HdrHistogram-style: values below [`LINEAR_MAX`] get
+//! exact unit-width buckets; above that, each power-of-two octave is
+//! split into [`SUB_BUCKETS`] linear sub-buckets (4 significant
+//! mantissa bits), bounding the relative error of any reported
+//! quantile at `1/16 = 6.25%`. The full u64 range is covered — no
+//! clamping, no overflow.
+//!
+//! Reading is snapshot-based: [`Histogram::snapshot`] sums the shards
+//! into a plain [`HistSnapshot`], which supports exact rank arithmetic
+//! ([`HistSnapshot::quantile_bounds`] returns the bucket *containing*
+//! the true order statistic) and associative merging across histograms
+//! (e.g. one per backend process).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Sub-bucket resolution: each octave is split into `2^SUB_BITS`
+/// linear buckets.
+pub const SUB_BITS: u32 = 4;
+/// Sub-buckets per octave.
+pub const SUB_BUCKETS: usize = 1 << SUB_BITS;
+/// Values `< LINEAR_MAX` land in exact unit-width buckets.
+pub const LINEAR_MAX: u64 = SUB_BUCKETS as u64;
+/// Octaves above the linear region: top bit positions `SUB_BITS..64`.
+const OCTAVES: usize = 64 - SUB_BITS as usize;
+/// Total bucket count (`16 + 60*16 = 976` at `SUB_BITS = 4`).
+pub const N_BUCKETS: usize = SUB_BUCKETS + OCTAVES * SUB_BUCKETS;
+
+/// Recording shards; a small fixed pool keyed by thread.
+const N_SHARDS: usize = 8;
+
+/// Map a value to its bucket index. Monotonic in `v`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    // Top bit position h >= SUB_BITS; `v >> (h - SUB_BITS)` is in
+    // [16, 32), so subtracting 16 yields the sub-bucket.
+    let h = 63 - v.leading_zeros();
+    let octave = (h - SUB_BITS) as usize;
+    let sub = (v >> (h - SUB_BITS)) as usize - SUB_BUCKETS;
+    SUB_BUCKETS + octave * SUB_BUCKETS + sub
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    debug_assert!(i < N_BUCKETS);
+    if i < SUB_BUCKETS {
+        return (i as u64, i as u64);
+    }
+    let j = i - SUB_BUCKETS;
+    let octave = (j / SUB_BUCKETS) as u32;
+    let sub = (j % SUB_BUCKETS) as u64;
+    // hi = (base + 1) << octave - 1, written overflow-free so the last
+    // bucket tops out at exactly u64::MAX.
+    let lo = (LINEAR_MAX + sub) << octave;
+    let hi = lo + ((1u64 << octave) - 1);
+    (lo, hi)
+}
+
+thread_local! {
+    /// Shard slot for this thread, assigned round-robin on first use.
+    static SHARD: usize = {
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        NEXT.fetch_add(1, Ordering::Relaxed) % N_SHARDS
+    };
+}
+
+struct Shard {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: Box<[AtomicU64]>,
+}
+
+impl Shard {
+    fn new() -> Self {
+        let buckets: Vec<AtomicU64> = (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Shard { count: AtomicU64::new(0), sum: AtomicU64::new(0), buckets: buckets.into() }
+    }
+}
+
+/// A concurrent log-bucketed histogram of u64 values (nanoseconds by
+/// convention). `record` is lock-free and allocation-free.
+pub struct Histogram {
+    shards: Box<[Shard]>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { shards: (0..N_SHARDS).map(|_| Shard::new()).collect() }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one value into this thread's shard.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let shard = &self.shards[SHARD.with(|s| *s)];
+        shard.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        shard.count.fetch_add(1, Ordering::Relaxed);
+        shard.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Merge every shard into a point-in-time snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut out = HistSnapshot::empty();
+        for shard in self.shards.iter() {
+            out.count += shard.count.load(Ordering::Relaxed);
+            out.sum += shard.sum.load(Ordering::Relaxed);
+            for (acc, b) in out.buckets.iter_mut().zip(shard.buckets.iter()) {
+                *acc += b.load(Ordering::Relaxed);
+            }
+        }
+        out
+    }
+}
+
+/// A plain (non-atomic) copy of a histogram's state. Mergeable and
+/// queryable; merging is associative and commutative.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct HistSnapshot {
+    pub count: u64,
+    /// Sum of all recorded values (nanoseconds by convention).
+    pub sum: u64,
+    buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> Self {
+        HistSnapshot { count: 0, sum: 0, buckets: vec![0; N_BUCKETS] }
+    }
+
+    /// Record into a snapshot directly (single-threaded use: tests,
+    /// offline aggregation).
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Accumulate `other` into `self`.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    /// The `[lo, hi]` bounds of the bucket holding the `q`-quantile
+    /// (nearest-rank on the 0-based sorted order: rank
+    /// `round(q * (count - 1))`). `None` when empty. The true order
+    /// statistic is guaranteed to lie within the returned bounds.
+    pub fn quantile_bounds(&self, q: f64) -> Option<(u64, u64)> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = (q * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Some(bucket_bounds(i));
+            }
+        }
+        // Unreachable when count > 0; keep a defensive fallback.
+        Some(bucket_bounds(N_BUCKETS - 1))
+    }
+
+    /// Upper bound of the `q`-quantile bucket, or 0 when empty. This
+    /// is the value exposed as p50/p95/p99 (≤ 6.25% above the true
+    /// order statistic).
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.quantile_bounds(q).map(|(_, hi)| hi).unwrap_or(0)
+    }
+
+    /// Mean of recorded values, or 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Non-empty buckets as `(upper_bound, cumulative_count)` pairs,
+    /// in increasing bucket order — the Prometheus `le` series minus
+    /// its empty runs.
+    pub fn cumulative_nonzero(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((bucket_bounds(i).1, cum));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotonic_and_in_bounds() {
+        let probes = [
+            0u64,
+            1,
+            15,
+            16,
+            17,
+            31,
+            32,
+            33,
+            1000,
+            123_456_789,
+            u64::MAX / 2,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        let mut last = 0usize;
+        for &v in &probes {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS, "bucket {i} out of range for {v}");
+            assert!(i >= last, "bucket index not monotonic at {v}");
+            last = i;
+        }
+    }
+
+    #[test]
+    fn bounds_contain_their_values() {
+        let mut probe = 1u64;
+        while probe < u64::MAX / 3 {
+            for v in [probe.saturating_sub(1), probe, probe + 1] {
+                let (lo, hi) = bucket_bounds(bucket_index(v));
+                assert!(lo <= v && v <= hi, "value {v} outside bucket [{lo}, {hi}]");
+            }
+            probe = probe.saturating_mul(3) / 2 + 1;
+        }
+        let (_, hi) = bucket_bounds(bucket_index(u64::MAX));
+        assert_eq!(hi, u64::MAX);
+    }
+
+    #[test]
+    fn bounds_tile_the_u64_range() {
+        // Every bucket starts exactly one past the previous bucket's end.
+        let mut expect_lo = 0u64;
+        for i in 0..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, expect_lo, "gap/overlap at bucket {i}");
+            assert!(hi >= lo);
+            if i + 1 < N_BUCKETS {
+                expect_lo = hi + 1;
+            } else {
+                assert_eq!(hi, u64::MAX);
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        for i in SUB_BUCKETS..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            let width = (hi - lo) as f64;
+            assert!(width / lo as f64 <= 1.0 / SUB_BUCKETS as f64 + 1e-12, "bucket {i} too wide");
+        }
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1_000_000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4000);
+    }
+
+    #[test]
+    fn quantiles_bracket_exact_order_statistics() {
+        let mut s = HistSnapshot::empty();
+        let mut shadow: Vec<u64> = Vec::new();
+        let mut x = 0x9e3779b97f4a7c15u64;
+        for _ in 0..5000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = x % 50_000_000;
+            s.record(v);
+            shadow.push(v);
+        }
+        shadow.sort_unstable();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let rank = (q * (shadow.len() - 1) as f64).round() as usize;
+            let exact = shadow[rank];
+            let (lo, hi) = s.quantile_bounds(q).unwrap();
+            assert!(lo <= exact && exact <= hi, "q={q}: exact {exact} outside [{lo}, {hi}]");
+        }
+    }
+}

@@ -1,0 +1,787 @@
+//! `obs` — serving telemetry: metrics registry, latency histograms,
+//! per-stage step timing, and structured request logs.
+//!
+//! The subsystem has three layers:
+//!
+//! * [`MetricsRegistry`] — a lock-free registry of atomic counters,
+//!   gauges, and log-bucketed latency [`Histogram`]s (see [`hist`])
+//!   covering the whole request lifecycle: queue wait, TTFT,
+//!   per-token decode latency, end-to-end latency, speculative
+//!   verify-round latency, request/token/prefix-cache/speculation
+//!   counters, and per-stage step timing (prefill vs step vs fused
+//!   verify; mixer vs FFN vs logits, keyed by mixer kind and weight
+//!   precision). [`MetricsRegistry::render_prometheus`] serializes it
+//!   all in Prometheus text format for the HTTP server's
+//!   `GET /metrics` route; `GET /healthz` reads the same cells.
+//! * [`RequestLog`] (see [`reqlog`]) — a JSON-lines
+//!   request-lifecycle log (`admitted` → `started` → `first_token` →
+//!   `finished`).
+//! * [`ObsCfg`] / [`ObsRuntime`] — configuration on
+//!   `ServeCfg::obs` and the resolved runtime handle the schedulers
+//!   thread through the serving stack.
+//!
+//! Everything is hand-rolled on `std` — no Prometheus client crate,
+//! no logging framework. The recording side is gated so the
+//! zero-allocation decode hot path stays allocation-free: counters
+//! are single relaxed `fetch_add`s, histogram recording is lock-free
+//! sharded, per-stage timing only reads the clock on sampled steps
+//! (every [`ObsCfg::stage_sample_every`]th), and with telemetry off
+//! the schedulers skip the hooks entirely.
+
+pub mod hist;
+pub mod reqlog;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::Manifest;
+use crate::infer::SpecStats;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use reqlog::{RequestEvent, RequestLog};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Telemetry configuration, carried on `ServeCfg::obs`.
+#[derive(Clone)]
+pub struct ObsCfg {
+    /// Registry to record into; `None` gives the scheduler a private
+    /// one (reachable via its `metrics()` accessor). Share one
+    /// `Arc` to aggregate several schedulers into one scrape.
+    pub metrics: Option<Arc<MetricsRegistry>>,
+    /// Request/token/cache/speculation counters (single relaxed
+    /// atomic adds).
+    pub counters: bool,
+    /// Latency histograms: queue wait, TTFT, per-token, end-to-end,
+    /// verify rounds.
+    pub timing: bool,
+    /// Sample per-stage step timing (mixer/FFN/logits split) on every
+    /// Nth step per session; `0` disables stage timing entirely.
+    /// Sampling keeps the clock reads off most steps.
+    pub stage_sample_every: usize,
+    /// JSON-lines request-lifecycle log sink (see [`RequestLog`]).
+    pub request_log: Option<Arc<RequestLog>>,
+}
+
+impl Default for ObsCfg {
+    fn default() -> Self {
+        ObsCfg {
+            metrics: None,
+            counters: true,
+            timing: true,
+            stage_sample_every: 16,
+            request_log: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for ObsCfg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsCfg")
+            .field("metrics", &self.metrics.is_some())
+            .field("counters", &self.counters)
+            .field("timing", &self.timing)
+            .field("stage_sample_every", &self.stage_sample_every)
+            .field("request_log", &self.request_log.is_some())
+            .finish()
+    }
+}
+
+impl ObsCfg {
+    /// Telemetry fully disabled: no counters, no histograms, no
+    /// stage sampling, no log. The schedulers skip every hook.
+    pub fn off() -> Self {
+        ObsCfg {
+            metrics: None,
+            counters: false,
+            timing: false,
+            stage_sample_every: 0,
+            request_log: None,
+        }
+    }
+
+    /// True when no telemetry would be recorded at all.
+    pub fn is_off(&self) -> bool {
+        !self.counters
+            && !self.timing
+            && self.stage_sample_every == 0
+            && self.request_log.is_none()
+            && self.metrics.is_none()
+    }
+}
+
+/// The resolved telemetry handle the schedulers thread through the
+/// serving stack. Built once per scheduler from [`ObsCfg`].
+pub struct ObsRuntime {
+    pub registry: Arc<MetricsRegistry>,
+    pub counters: bool,
+    pub timing: bool,
+    pub stage_sample_every: usize,
+    pub log: Option<Arc<RequestLog>>,
+}
+
+impl ObsRuntime {
+    /// Resolve a config; `None` when telemetry is fully off (callers
+    /// then skip the hooks entirely).
+    pub fn from_cfg(cfg: &ObsCfg) -> Option<Arc<ObsRuntime>> {
+        if cfg.is_off() {
+            return None;
+        }
+        Some(Arc::new(ObsRuntime {
+            registry: cfg.metrics.clone().unwrap_or_default(),
+            counters: cfg.counters,
+            timing: cfg.timing,
+            stage_sample_every: cfg.stage_sample_every,
+            log: cfg.request_log.clone(),
+        }))
+    }
+
+    /// Read the clock only when latency histograms are on.
+    #[inline]
+    pub fn now(&self) -> Option<Instant> {
+        if self.timing {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Emit a request-log event (no-op without a sink).
+    #[inline]
+    pub fn emit(&self, ev: RequestEvent) {
+        if let Some(log) = &self.log {
+            log.log(&ev);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Counter groups
+// ---------------------------------------------------------------------------
+
+/// Prefix-cache event counters plus a resident-entry gauge. The
+/// `PrefixCache` holds one of these (its own by default, the
+/// registry's when a scheduler wires the cache in), so `/healthz` and
+/// `/metrics` read the very same cells.
+#[derive(Default)]
+pub struct CacheCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub insertions: AtomicU64,
+    pub evictions: AtomicU64,
+    /// Snapshots currently resident (gauge).
+    pub entries: AtomicU64,
+}
+
+impl CacheCounters {
+    #[inline]
+    pub fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn inserted(&self) {
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        self.entries.fetch_add(1, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn evicted(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        self.entries.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Aggregate speculative-decoding counters — the registry-backed
+/// successor of the old `SpecCounters`: per-request `SpecStats` are
+/// added here as requests finish, and `/healthz` + `/metrics` read
+/// the same cells.
+#[derive(Default)]
+pub struct SpecCounterGroup {
+    rounds: AtomicU64,
+    drafted: AtomicU64,
+    accepted: AtomicU64,
+    emitted: AtomicU64,
+    fused_passes: AtomicU64,
+    fused_rows: AtomicU64,
+}
+
+impl SpecCounterGroup {
+    pub fn add(&self, s: &SpecStats) {
+        self.rounds.fetch_add(s.rounds, Ordering::Relaxed);
+        self.drafted.fetch_add(s.drafted, Ordering::Relaxed);
+        self.accepted.fetch_add(s.accepted, Ordering::Relaxed);
+        self.emitted.fetch_add(s.emitted, Ordering::Relaxed);
+        self.fused_passes.fetch_add(s.fused_passes, Ordering::Relaxed);
+        self.fused_rows.fetch_add(s.fused_rows, Ordering::Relaxed);
+    }
+
+    /// Point-in-time aggregate across all finished requests.
+    pub fn snapshot(&self) -> SpecStats {
+        SpecStats {
+            rounds: self.rounds.load(Ordering::Relaxed),
+            drafted: self.drafted.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed),
+            emitted: self.emitted.load(Ordering::Relaxed),
+            fused_passes: self.fused_passes.load(Ordering::Relaxed),
+            fused_rows: self.fused_rows.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-stage step timing
+// ---------------------------------------------------------------------------
+
+/// Which step path a stage sample came from.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Phase {
+    /// Prompt ingestion (`step` without logits / prefill loops).
+    Prefill,
+    /// The plain one-token decode step.
+    Step,
+    /// The fused multi-row speculative verify pass (`step_batch`).
+    VerifyFused,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Step => "step",
+            Phase::VerifyFused => "verify_fused",
+        }
+    }
+}
+
+/// One labeled per-stage timing series.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct StageKey {
+    pub phase: &'static str,
+    /// `mixer` | `ffn` | `logits`.
+    pub stage: &'static str,
+    /// Mixer kind of the layer (`-` for the shared logits stage).
+    pub mixer: String,
+    /// Weight precision label (`f32` | `int8`).
+    pub precision: String,
+}
+
+/// Accumulated sampled wall time for one [`StageKey`].
+#[derive(Default)]
+pub struct StageCell {
+    pub ns: AtomicU64,
+    pub samples: AtomicU64,
+}
+
+impl StageCell {
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.ns.fetch_add(ns, Ordering::Relaxed);
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The per-phase stage cells a decode session records into,
+/// pre-resolved so the sampled path touches only `Arc`'d atomics.
+pub struct PhaseCells {
+    /// One cell per layer (layers of the same mixer kind share one).
+    pub mixer: Vec<Arc<StageCell>>,
+    pub ffn: Vec<Arc<StageCell>>,
+    pub logits: Arc<StageCell>,
+}
+
+/// Stage-timing handle attached to a `DecodeSession`. Holds resolved
+/// registry cells for every (phase, stage, layer) combination plus
+/// the sampling countdown; the engine's step paths call
+/// [`StageObs::tick`] and, on sampled steps, time each stage into
+/// [`PhaseCells`].
+pub struct StageObs {
+    sample_every: u64,
+    countdown: u64,
+    prefill: PhaseCells,
+    step: PhaseCells,
+    verify: PhaseCells,
+}
+
+impl StageObs {
+    /// Resolve cells for a model (one per layer/stage/phase) against
+    /// `registry`. `sample_every` must be > 0.
+    pub fn attach(
+        registry: &MetricsRegistry,
+        manifest: &Manifest,
+        precision: &str,
+        sample_every: usize,
+    ) -> Box<StageObs> {
+        let cells = |phase: Phase| {
+            let p = phase.label();
+            PhaseCells {
+                mixer: manifest
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        registry.stage_cell(StageKey {
+                            phase: p,
+                            stage: "mixer",
+                            mixer: l.kind.clone(),
+                            precision: precision.to_string(),
+                        })
+                    })
+                    .collect(),
+                ffn: manifest
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        registry.stage_cell(StageKey {
+                            phase: p,
+                            stage: "ffn",
+                            mixer: l.kind.clone(),
+                            precision: precision.to_string(),
+                        })
+                    })
+                    .collect(),
+                logits: registry.stage_cell(StageKey {
+                    phase: p,
+                    stage: "logits",
+                    mixer: "-".to_string(),
+                    precision: precision.to_string(),
+                }),
+            }
+        };
+        Box::new(StageObs {
+            sample_every: sample_every.max(1) as u64,
+            countdown: 0,
+            prefill: cells(Phase::Prefill),
+            step: cells(Phase::Step),
+            verify: cells(Phase::VerifyFused),
+        })
+    }
+
+    /// Advance the sampling countdown; true when this step should be
+    /// timed (every `sample_every`th call, starting with the first).
+    #[inline]
+    pub fn tick(&mut self) -> bool {
+        if self.countdown == 0 {
+            self.countdown = self.sample_every - 1;
+            true
+        } else {
+            self.countdown -= 1;
+            false
+        }
+    }
+
+    pub fn cells(&self, phase: Phase) -> &PhaseCells {
+        match phase {
+            Phase::Prefill => &self.prefill,
+            Phase::Step => &self.step,
+            Phase::VerifyFused => &self.verify,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------------
+
+/// Finish-reason labels, in render order (mirrors
+/// `serve::FinishReason::label`).
+const FINISH_LABELS: [&str; 6] =
+    ["eot", "max_tokens", "ctx_full", "timed_out", "cancelled", "rejected"];
+
+/// Lock-free registry of every serving metric. All recording methods
+/// are single relaxed atomic operations (histograms: one shard
+/// bucket add); the only lock is the stage-cell registration map,
+/// taken once per session attach, never per step.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    // Latency histograms (u64 nanoseconds).
+    pub queue_wait: Histogram,
+    pub ttft: Histogram,
+    pub token_latency: Histogram,
+    pub e2e: Histogram,
+    pub verify_round: Histogram,
+    // Request/token counters.
+    admitted: AtomicU64,
+    finished: [AtomicU64; FINISH_LABELS.len()],
+    tokens_generated: AtomicU64,
+    prompt_tokens: AtomicU64,
+    // Shared counter groups.
+    pub spec: SpecCounterGroup,
+    cache: OnceCacheCounters,
+    // Per-stage timing cells, registered on session attach.
+    stages: Mutex<BTreeMap<StageKey, Arc<StageCell>>>,
+}
+
+/// Lazily-shared cache counters (`Default` for `Arc` would give each
+/// registry clone path its own).
+struct OnceCacheCounters(Arc<CacheCounters>);
+
+impl Default for OnceCacheCounters {
+    fn default() -> Self {
+        OnceCacheCounters(Arc::new(CacheCounters::default()))
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    // -- recording ----------------------------------------------------------
+
+    #[inline]
+    pub fn record_queue_wait(&self, d: Duration) {
+        self.queue_wait.record(d.as_nanos() as u64);
+    }
+    #[inline]
+    pub fn record_ttft(&self, d: Duration) {
+        self.ttft.record(d.as_nanos() as u64);
+    }
+    #[inline]
+    pub fn record_token_latency(&self, d: Duration) {
+        self.token_latency.record(d.as_nanos() as u64);
+    }
+    #[inline]
+    pub fn record_e2e(&self, d: Duration) {
+        self.e2e.record(d.as_nanos() as u64);
+    }
+    #[inline]
+    pub fn record_verify_round(&self, d: Duration) {
+        self.verify_round.record(d.as_nanos() as u64);
+    }
+
+    #[inline]
+    pub fn inc_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a finished request under its finish-reason label (one of
+    /// `serve::FinishReason::label`'s values).
+    #[inline]
+    pub fn inc_finished(&self, label: &str) {
+        let ix = FINISH_LABELS.iter().position(|l| *l == label).unwrap_or(0);
+        self.finished[ix].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_tokens_generated(&self, n: u64) {
+        self.tokens_generated.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn add_prompt_tokens(&self, n: u64) {
+        self.prompt_tokens.fetch_add(n, Ordering::Relaxed);
+    }
+
+    // -- views --------------------------------------------------------------
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn finished_total(&self) -> u64 {
+        self.finished.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn tokens_generated(&self) -> u64 {
+        self.tokens_generated.load(Ordering::Relaxed)
+    }
+
+    /// The cache-counter cells; schedulers hand these to their
+    /// `PrefixCache` so `/metrics` and `cache.stats()` agree.
+    pub fn cache_counters(&self) -> Arc<CacheCounters> {
+        Arc::clone(&self.cache.0)
+    }
+
+    /// Resolve (or register) the cell for one stage-timing key.
+    pub fn stage_cell(&self, key: StageKey) -> Arc<StageCell> {
+        let mut map = match self.stages.lock() {
+            Ok(m) => m,
+            Err(p) => p.into_inner(),
+        };
+        Arc::clone(map.entry(key).or_default())
+    }
+
+    /// Snapshot of every registered stage cell.
+    pub fn stage_snapshot(&self) -> Vec<(StageKey, u64, u64)> {
+        let map = match self.stages.lock() {
+            Ok(m) => m,
+            Err(p) => p.into_inner(),
+        };
+        map.iter()
+            .map(|(k, c)| {
+                (k.clone(), c.ns.load(Ordering::Relaxed), c.samples.load(Ordering::Relaxed))
+            })
+            .collect()
+    }
+
+    // -- exposition ---------------------------------------------------------
+
+    /// Serialize the whole registry in Prometheus text exposition
+    /// format (`text/plain; version=0.0.4`). Every family is always
+    /// present (zero-valued when untouched) so scrapers see a stable
+    /// schema; histogram `le` series elide empty buckets.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+
+        let hists: [(&str, &str, &Histogram); 5] = [
+            ("hsm_queue_wait_seconds", "Queue wait before admission.", &self.queue_wait),
+            ("hsm_ttft_seconds", "Time from submit to first generated token.", &self.ttft),
+            (
+                "hsm_token_latency_seconds",
+                "Gap between consecutive generated tokens.",
+                &self.token_latency,
+            ),
+            ("hsm_request_seconds", "End-to-end request latency.", &self.e2e),
+            (
+                "hsm_spec_verify_round_seconds",
+                "Speculative verify-round latency (draft + score + accept).",
+                &self.verify_round,
+            ),
+        ];
+        for (name, help, h) in hists {
+            render_histogram(&mut out, name, help, &h.snapshot());
+        }
+
+        render_counter(
+            &mut out,
+            "hsm_requests_admitted_total",
+            "Requests admitted to a decode session.",
+            self.admitted(),
+        );
+        let _ = writeln!(out, "# HELP hsm_requests_finished_total Requests finished, by reason.");
+        let _ = writeln!(out, "# TYPE hsm_requests_finished_total counter");
+        for (label, c) in FINISH_LABELS.iter().zip(self.finished.iter()) {
+            let _ = writeln!(
+                out,
+                "hsm_requests_finished_total{{finish=\"{label}\"}} {}",
+                c.load(Ordering::Relaxed)
+            );
+        }
+        render_counter(
+            &mut out,
+            "hsm_tokens_generated_total",
+            "Tokens generated across all requests.",
+            self.tokens_generated(),
+        );
+        render_counter(
+            &mut out,
+            "hsm_prompt_tokens_total",
+            "Prompt tokens ingested (prefill, including cached prefixes).",
+            self.prompt_tokens.load(Ordering::Relaxed),
+        );
+
+        let cache = &self.cache.0;
+        let _ = writeln!(out, "# HELP hsm_prefix_cache_events_total Prefix-cache events.");
+        let _ = writeln!(out, "# TYPE hsm_prefix_cache_events_total counter");
+        for (ev, c) in [
+            ("hit", &cache.hits),
+            ("miss", &cache.misses),
+            ("insertion", &cache.insertions),
+            ("eviction", &cache.evictions),
+        ] {
+            let _ = writeln!(
+                out,
+                "hsm_prefix_cache_events_total{{event=\"{ev}\"}} {}",
+                c.load(Ordering::Relaxed)
+            );
+        }
+        let _ = writeln!(out, "# HELP hsm_prefix_cache_entries Prompt-head snapshots resident.");
+        let _ = writeln!(out, "# TYPE hsm_prefix_cache_entries gauge");
+        let _ =
+            writeln!(out, "hsm_prefix_cache_entries {}", cache.entries.load(Ordering::Relaxed));
+
+        let spec = self.spec.snapshot();
+        render_counter(
+            &mut out,
+            "hsm_spec_rounds_total",
+            "Speculative verify rounds.",
+            spec.rounds,
+        );
+        let _ = writeln!(out, "# HELP hsm_spec_tokens_total Speculative tokens, by outcome.");
+        let _ = writeln!(out, "# TYPE hsm_spec_tokens_total counter");
+        for (kind, v) in
+            [("drafted", spec.drafted), ("accepted", spec.accepted), ("emitted", spec.emitted)]
+        {
+            let _ = writeln!(out, "hsm_spec_tokens_total{{kind=\"{kind}\"}} {v}");
+        }
+        render_counter(
+            &mut out,
+            "hsm_spec_fused_passes_total",
+            "Verify rounds scored in one fused step_batch pass.",
+            spec.fused_passes,
+        );
+        render_counter(
+            &mut out,
+            "hsm_spec_fused_rows_total",
+            "Positions scored across all fused passes.",
+            spec.fused_rows,
+        );
+
+        let stages = self.stage_snapshot();
+        let _ = writeln!(
+            out,
+            "# HELP hsm_stage_seconds_total Sampled wall time per step stage, by phase, \
+             stage, mixer kind and precision."
+        );
+        let _ = writeln!(out, "# TYPE hsm_stage_seconds_total counter");
+        for (k, ns, _) in &stages {
+            let _ = writeln!(
+                out,
+                "hsm_stage_seconds_total{{phase=\"{}\",stage=\"{}\",mixer=\"{}\",\
+                 precision=\"{}\"}} {}",
+                k.phase,
+                k.stage,
+                escape_label(&k.mixer),
+                escape_label(&k.precision),
+                fmt_secs(*ns)
+            );
+        }
+        let _ = writeln!(out, "# HELP hsm_stage_samples_total Sampled steps per stage series.");
+        let _ = writeln!(out, "# TYPE hsm_stage_samples_total counter");
+        for (k, _, samples) in &stages {
+            let _ = writeln!(
+                out,
+                "hsm_stage_samples_total{{phase=\"{}\",stage=\"{}\",mixer=\"{}\",\
+                 precision=\"{}\"}} {samples}",
+                k.phase,
+                k.stage,
+                escape_label(&k.mixer),
+                escape_label(&k.precision),
+            );
+        }
+        out
+    }
+}
+
+fn fmt_secs(ns: u64) -> String {
+    // Plain decimal (never scientific) keeps the output parseable by
+    // the simplest scrapers; trim trailing zeros for compactness.
+    let mut s = format!("{:.9}", ns as f64 / 1e9);
+    while s.ends_with('0') {
+        s.pop();
+    }
+    if s.ends_with('.') {
+        s.push('0');
+    }
+    s
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn render_counter(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+fn render_histogram(out: &mut String, name: &str, help: &str, s: &HistSnapshot) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (hi_ns, cum) in s.cumulative_nonzero() {
+        let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", fmt_secs(hi_ns));
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", s.count);
+    let _ = writeln!(out, "{name}_sum {}", fmt_secs(s.sum));
+    let _ = writeln!(out, "{name}_count {}", s.count);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_family_renders_when_untouched() {
+        let r = MetricsRegistry::default();
+        let text = r.render_prometheus();
+        for family in [
+            "hsm_queue_wait_seconds",
+            "hsm_ttft_seconds",
+            "hsm_token_latency_seconds",
+            "hsm_request_seconds",
+            "hsm_spec_verify_round_seconds",
+            "hsm_requests_admitted_total",
+            "hsm_requests_finished_total",
+            "hsm_tokens_generated_total",
+            "hsm_prompt_tokens_total",
+            "hsm_prefix_cache_events_total",
+            "hsm_prefix_cache_entries",
+            "hsm_spec_rounds_total",
+            "hsm_spec_tokens_total",
+            "hsm_spec_fused_passes_total",
+            "hsm_spec_fused_rows_total",
+            "hsm_stage_seconds_total",
+            "hsm_stage_samples_total",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
+        }
+    }
+
+    #[test]
+    fn histogram_render_is_cumulative_and_consistent() {
+        let r = MetricsRegistry::default();
+        for ms in [1u64, 5, 5, 20, 100] {
+            r.record_ttft(Duration::from_millis(ms));
+        }
+        let text = r.render_prometheus();
+        let mut last = 0u64;
+        let mut inf = None;
+        for line in text.lines().filter(|l| l.starts_with("hsm_ttft_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+            if line.contains("+Inf") {
+                inf = Some(v);
+            }
+        }
+        assert_eq!(inf, Some(5));
+        assert!(text.contains("hsm_ttft_seconds_count 5"));
+    }
+
+    #[test]
+    fn finished_labels_cover_every_reason() {
+        let r = MetricsRegistry::default();
+        for l in FINISH_LABELS {
+            r.inc_finished(l);
+        }
+        assert_eq!(r.finished_total(), FINISH_LABELS.len() as u64);
+        let text = r.render_prometheus();
+        for l in FINISH_LABELS {
+            assert!(text.contains(&format!("finish=\"{l}\"}} 1")), "missing label {l}");
+        }
+    }
+
+    #[test]
+    fn stage_cells_are_shared_per_key() {
+        let r = MetricsRegistry::default();
+        let key = StageKey {
+            phase: "step",
+            stage: "mixer",
+            mixer: "hsm".into(),
+            precision: "f32".into(),
+        };
+        let a = r.stage_cell(key.clone());
+        let b = r.stage_cell(key);
+        a.record(100);
+        b.record(50);
+        let snap = r.stage_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].1, 150);
+        assert_eq!(snap[0].2, 2);
+    }
+
+    #[test]
+    fn obs_runtime_resolves_off_to_none() {
+        assert!(ObsRuntime::from_cfg(&ObsCfg::off()).is_none());
+        let rt = ObsRuntime::from_cfg(&ObsCfg::default()).unwrap();
+        assert!(rt.counters && rt.timing);
+        assert!(rt.now().is_some());
+    }
+}

@@ -1,0 +1,302 @@
+//! Structured JSON-lines request-lifecycle log.
+//!
+//! One [`RequestEvent`] per line, in arrival order: `admitted` (left
+//! the queue) → `started` (prefill done, decode loop entered) →
+//! `first_token` → `finished`. Cancelled / timed-out / rejected
+//! requests end with a `finished` event whose `finish` label says why
+//! — the same labels [`crate::serve::FinishReason`] exposes over the
+//! API.
+//!
+//! The sink is any `Write + Send` behind a mutex; the hot path only
+//! takes it when an event fires (a handful of times per request, never
+//! per token). Enable from the CLI with `hsm serve --log-requests
+//! PATH` or programmatically via `ServeCfg::obs.request_log`.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// A single request-lifecycle event. Serialized as one JSON object
+/// per line; `event` discriminates the variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestEvent {
+    /// Request left the queue and was admitted to a decode session.
+    Admitted { request_id: u64, prompt_tokens: u64, queue_wait_ms: f64 },
+    /// Prefill finished (possibly partly served from the prefix
+    /// cache) and the decode loop started.
+    Started { request_id: u64, cached_prefix_len: u64, prefill_ms: f64 },
+    /// First generated token emitted.
+    FirstToken { request_id: u64, ttft_ms: f64 },
+    /// Terminal event, for every finish reason (eot, max_tokens,
+    /// ctx_full, timed_out, cancelled, rejected).
+    Finished {
+        request_id: u64,
+        finish: String,
+        tokens_generated: u64,
+        e2e_ms: f64,
+        /// Model variant label (the mixer-stack name, e.g. `hsm_ab`).
+        mixer: String,
+        /// Weight precision label (`f32` | `int8`).
+        precision: String,
+        /// Drafter label when speculation ran (e.g. `ngram:3`).
+        drafter: Option<String>,
+        /// Speculative verify rounds (0 without speculation).
+        spec_rounds: u64,
+        /// Draft tokens proposed / accepted.
+        spec_drafted: u64,
+        spec_accepted: u64,
+        cached_prefix_len: u64,
+    },
+}
+
+fn ms(v: f64) -> Value {
+    // Microsecond resolution keeps lines compact and stable.
+    json::num((v * 1000.0).round() / 1000.0)
+}
+
+impl RequestEvent {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequestEvent::Admitted { .. } => "admitted",
+            RequestEvent::Started { .. } => "started",
+            RequestEvent::FirstToken { .. } => "first_token",
+            RequestEvent::Finished { .. } => "finished",
+        }
+    }
+
+    pub fn request_id(&self) -> u64 {
+        match self {
+            RequestEvent::Admitted { request_id, .. }
+            | RequestEvent::Started { request_id, .. }
+            | RequestEvent::FirstToken { request_id, .. }
+            | RequestEvent::Finished { request_id, .. } => *request_id,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("event", json::s(self.label())),
+            ("request_id", json::num(self.request_id() as f64)),
+        ];
+        match self {
+            RequestEvent::Admitted { prompt_tokens, queue_wait_ms, .. } => {
+                pairs.push(("prompt_tokens", json::num(*prompt_tokens as f64)));
+                pairs.push(("queue_wait_ms", ms(*queue_wait_ms)));
+            }
+            RequestEvent::Started { cached_prefix_len, prefill_ms, .. } => {
+                pairs.push(("cached_prefix_len", json::num(*cached_prefix_len as f64)));
+                pairs.push(("prefill_ms", ms(*prefill_ms)));
+            }
+            RequestEvent::FirstToken { ttft_ms, .. } => {
+                pairs.push(("ttft_ms", ms(*ttft_ms)));
+            }
+            RequestEvent::Finished {
+                finish,
+                tokens_generated,
+                e2e_ms,
+                mixer,
+                precision,
+                drafter,
+                spec_rounds,
+                spec_drafted,
+                spec_accepted,
+                cached_prefix_len,
+                ..
+            } => {
+                pairs.push(("finish", json::s(finish)));
+                pairs.push(("tokens_generated", json::num(*tokens_generated as f64)));
+                pairs.push(("e2e_ms", ms(*e2e_ms)));
+                pairs.push(("mixer", json::s(mixer)));
+                pairs.push(("precision", json::s(precision)));
+                if let Some(d) = drafter {
+                    pairs.push(("drafter", json::s(d)));
+                    pairs.push(("spec_rounds", json::num(*spec_rounds as f64)));
+                    pairs.push(("spec_drafted", json::num(*spec_drafted as f64)));
+                    pairs.push(("spec_accepted", json::num(*spec_accepted as f64)));
+                }
+                pairs.push(("cached_prefix_len", json::num(*cached_prefix_len as f64)));
+            }
+        }
+        json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let event = v.get("event").as_str().ok_or_else(|| anyhow!("missing event field"))?;
+        let id = |key: &str| -> Result<u64> {
+            v.get(key).as_f64().map(|n| n as u64).ok_or_else(|| anyhow!("missing {key}"))
+        };
+        let msf = |key: &str| -> Result<f64> {
+            v.get(key).as_f64().ok_or_else(|| anyhow!("missing {key}"))
+        };
+        let request_id = id("request_id")?;
+        Ok(match event {
+            "admitted" => RequestEvent::Admitted {
+                request_id,
+                prompt_tokens: id("prompt_tokens")?,
+                queue_wait_ms: msf("queue_wait_ms")?,
+            },
+            "started" => RequestEvent::Started {
+                request_id,
+                cached_prefix_len: id("cached_prefix_len")?,
+                prefill_ms: msf("prefill_ms")?,
+            },
+            "first_token" => {
+                RequestEvent::FirstToken { request_id, ttft_ms: msf("ttft_ms")? }
+            }
+            "finished" => {
+                let drafter = v.get("drafter").as_str().map(str::to_string);
+                let spec = drafter.is_some();
+                RequestEvent::Finished {
+                    request_id,
+                    finish: v
+                        .get("finish")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("missing finish"))?
+                        .to_string(),
+                    tokens_generated: id("tokens_generated")?,
+                    e2e_ms: msf("e2e_ms")?,
+                    mixer: v
+                        .get("mixer")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("missing mixer"))?
+                        .to_string(),
+                    precision: v
+                        .get("precision")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("missing precision"))?
+                        .to_string(),
+                    drafter,
+                    spec_rounds: if spec { id("spec_rounds")? } else { 0 },
+                    spec_drafted: if spec { id("spec_drafted")? } else { 0 },
+                    spec_accepted: if spec { id("spec_accepted")? } else { 0 },
+                    cached_prefix_len: id("cached_prefix_len")?,
+                }
+            }
+            other => return Err(anyhow!("unknown request-log event {other:?}")),
+        })
+    }
+}
+
+/// A JSON-lines sink for [`RequestEvent`]s. Thread-safe; write errors
+/// are counted but never surfaced to the serving path (telemetry must
+/// not fail a request).
+pub struct RequestLog {
+    sink: Mutex<Box<dyn Write + Send>>,
+    errors: std::sync::atomic::AtomicU64,
+}
+
+impl RequestLog {
+    /// Log to a file (created/truncated), line-buffered per event.
+    pub fn to_file(path: &Path) -> Result<Arc<Self>> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating request log {}", path.display()))?;
+        Ok(Self::to_writer(Box::new(std::io::BufWriter::new(f))))
+    }
+
+    /// Log to any writer (tests inject a shared buffer here).
+    pub fn to_writer(w: Box<dyn Write + Send>) -> Arc<Self> {
+        Arc::new(RequestLog { sink: Mutex::new(w), errors: std::sync::atomic::AtomicU64::new(0) })
+    }
+
+    /// Append one event as a JSON line and flush it.
+    pub fn log(&self, ev: &RequestEvent) {
+        let line = ev.to_json().to_string();
+        let mut sink = match self.sink.lock() {
+            Ok(s) => s,
+            Err(p) => p.into_inner(),
+        };
+        let ok = writeln!(sink, "{line}").and_then(|_| sink.flush());
+        if ok.is_err() {
+            self.errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
+    /// Number of events dropped on write errors.
+    pub fn write_errors(&self) -> u64 {
+        self.errors.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_round_trip_through_json() {
+        let events = vec![
+            RequestEvent::Admitted { request_id: 7, prompt_tokens: 12, queue_wait_ms: 1.25 },
+            RequestEvent::Started { request_id: 7, cached_prefix_len: 8, prefill_ms: 3.5 },
+            RequestEvent::FirstToken { request_id: 7, ttft_ms: 4.75 },
+            RequestEvent::Finished {
+                request_id: 7,
+                finish: "eot".into(),
+                tokens_generated: 42,
+                e2e_ms: 100.5,
+                mixer: "hsm_ab".into(),
+                precision: "f32".into(),
+                drafter: Some("ngram:3".into()),
+                spec_rounds: 9,
+                spec_drafted: 36,
+                spec_accepted: 30,
+                cached_prefix_len: 8,
+            },
+        ];
+        for ev in events {
+            let text = ev.to_json().to_string();
+            let back = RequestEvent::from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, ev);
+        }
+    }
+
+    #[test]
+    fn finished_without_drafter_omits_spec_fields() {
+        let ev = RequestEvent::Finished {
+            request_id: 1,
+            finish: "max_tokens".into(),
+            tokens_generated: 5,
+            e2e_ms: 2.0,
+            mixer: "gpt".into(),
+            precision: "int8".into(),
+            drafter: None,
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            cached_prefix_len: 0,
+        };
+        let text = ev.to_json().to_string();
+        assert!(!text.contains("spec_rounds"));
+        let back = RequestEvent::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn log_writes_one_line_per_event() {
+        use std::sync::{Arc as A, Mutex as M};
+        #[derive(Clone)]
+        struct Buf(A<M<Vec<u8>>>);
+        impl Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Buf(A::new(M::new(Vec::new())));
+        let log = RequestLog::to_writer(Box::new(buf.clone()));
+        log.log(&RequestEvent::FirstToken { request_id: 3, ttft_ms: 1.0 });
+        log.log(&RequestEvent::FirstToken { request_id: 4, ttft_ms: 2.0 });
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            json::parse(line).unwrap();
+        }
+        assert_eq!(log.write_errors(), 0);
+    }
+}

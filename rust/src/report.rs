@@ -25,7 +25,7 @@ use crate::corpus;
 use crate::data::Dataset;
 use crate::generation::{self, SampleCfg, TABLE3_PROMPTS};
 use crate::infer::{Model, ModelWeights};
-use crate::metrics;
+use crate::report_sinks;
 use crate::serve;
 #[cfg(feature = "pjrt")]
 use crate::runtime::PjrtEngine;
@@ -227,7 +227,7 @@ pub fn table1_markdown(outcomes: &[TrainOutcome], manifests: &[Manifest]) -> Str
             ]
         })
         .collect();
-    metrics::markdown_table(
+    report_sinks::markdown_table(
         &["Version", "FFN size", "# Heads", "Loss", "sec/epoch", "time vs GPT"],
         &rows,
     )
@@ -252,8 +252,8 @@ pub fn run_table1(
 }
 
 fn write_outcomes_csv(ctx: &ExperimentCtx, outcomes: &[TrainOutcome]) -> Result<()> {
-    let rows = metrics::fig8_rows(outcomes);
-    metrics::write_csv(
+    let rows = report_sinks::fig8_rows(outcomes);
+    report_sinks::write_csv(
         &ctx.reports_dir.join("epochs.csv"),
         &["variant", "epoch", "val_loss", "val_acc"],
         &rows,
@@ -285,7 +285,7 @@ pub fn table2_markdown(engine: &dyn StepEngine) -> Result<String> {
     let mut header = vec!["".to_string()];
     header.extend((0..m.layers.len()).map(|l| format!("Layer {l}")));
     let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
-    Ok(metrics::markdown_table(&header_refs, &[row_a, row_b]))
+    Ok(report_sinks::markdown_table(&header_refs, &[row_a, row_b]))
 }
 
 pub fn run_table2(factory: &dyn EngineFactory, ctx: &ExperimentCtx) -> Result<String> {
@@ -396,7 +396,7 @@ pub fn run_table3(
             row
         })
         .collect();
-    let md = metrics::markdown_table(&header_refs, &rows);
+    let md = report_sinks::markdown_table(&header_refs, &rows);
     std::fs::create_dir_all(&ctx.reports_dir).ok();
     std::fs::write(ctx.reports_dir.join("table3.md"), &md)?;
     Ok(md)
@@ -422,10 +422,10 @@ pub fn run_fig7(
     variants: &[&str],
 ) -> Result<PathBuf> {
     let outcomes = sweep(factory, ctx, variants)?;
-    let (header, rows) = metrics::fig7_rows(&outcomes);
+    let (header, rows) = report_sinks::fig7_rows(&outcomes);
     let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
     let path = ctx.reports_dir.join("fig7.csv");
-    metrics::write_csv(&path, &header_refs, &rows)?;
+    report_sinks::write_csv(&path, &header_refs, &rows)?;
     Ok(path)
 }
 
@@ -435,9 +435,9 @@ pub fn run_fig8(
     variants: &[&str],
 ) -> Result<(PathBuf, f64)> {
     let outcomes = sweep(factory, ctx, variants)?;
-    let rows = metrics::fig8_rows(&outcomes);
+    let rows = report_sinks::fig8_rows(&outcomes);
     let path = ctx.reports_dir.join("fig8.csv");
-    metrics::write_csv(&path, &["variant", "epoch", "val_loss", "val_acc"], &rows)?;
+    report_sinks::write_csv(&path, &["variant", "epoch", "val_loss", "val_acc"], &rows)?;
     // The paper's headline observation: strong anti-correlation.
     let losses: Vec<f64> = outcomes
         .iter()
@@ -447,7 +447,7 @@ pub fn run_fig8(
         .iter()
         .flat_map(|o| o.epochs.iter().map(|e| e.val_acc as f64))
         .collect();
-    let r = metrics::pearson(&losses, &accs);
+    let r = report_sinks::pearson(&losses, &accs);
     Ok((path, r))
 }
 
@@ -525,17 +525,17 @@ pub fn run_all(
             row
         })
         .collect();
-    let t3 = metrics::markdown_table(&header_refs, &rows);
+    let t3 = report_sinks::markdown_table(&header_refs, &rows);
     std::fs::write(ctx.reports_dir.join("table3.md"), &t3)?;
     summary.push_str("\n## Table 3\n\n");
     summary.push_str(&t3);
 
     // Figures 7 & 8.
-    let (h7, r7) = metrics::fig7_rows(&outcomes);
+    let (h7, r7) = report_sinks::fig7_rows(&outcomes);
     let h7r: Vec<&str> = h7.iter().map(String::as_str).collect();
-    metrics::write_csv(&ctx.reports_dir.join("fig7.csv"), &h7r, &r7)?;
-    let r8 = metrics::fig8_rows(&outcomes);
-    metrics::write_csv(
+    report_sinks::write_csv(&ctx.reports_dir.join("fig7.csv"), &h7r, &r7)?;
+    let r8 = report_sinks::fig8_rows(&outcomes);
+    report_sinks::write_csv(
         &ctx.reports_dir.join("fig8.csv"),
         &["variant", "epoch", "val_loss", "val_acc"],
         &r8,
@@ -548,7 +548,7 @@ pub fn run_all(
         .iter()
         .flat_map(|o| o.epochs.iter().map(|e| e.val_acc as f64))
         .collect();
-    let r = metrics::pearson(&losses, &accs);
+    let r = report_sinks::pearson(&losses, &accs);
     summary.push_str(&format!(
         "\n## Figures\n\nfig7.csv and fig8.csv written; pearson(val_loss, val_acc) = {r:.4}\n"
     ));

@@ -93,8 +93,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::generation::{encode_prompt, sample_logits, SampleCfg};
-use crate::infer::speculate::{DraftCtx, Drafter, SpecCfg, SpecCounters, SpecStats};
+use crate::infer::speculate::{DraftCtx, Drafter, SpecCfg, SpecStats};
 use crate::infer::{Decoder, Model, NativeDecoder, Precision, SessionState};
+use crate::obs::{MetricsRegistry, ObsCfg, ObsRuntime, RequestEvent};
 use crate::tokenizer::{StreamDecoder, Tokenizer};
 use crate::util::rng::Rng;
 
@@ -219,6 +220,12 @@ pub struct ServeCfg {
     /// construction ([`ServeCfg::validate_model`]) instead of silently
     /// decoding at the wrong precision after a bad reload.
     pub precision: Precision,
+    /// Telemetry ([`crate::obs`]): counters + latency histograms on by
+    /// default (overhead pinned ≤ 3% by `benches/observability.rs`;
+    /// never changes sampled text).  [`ObsCfg::off`] disables every
+    /// hook; [`ObsCfg::metrics`] shares a registry across schedulers;
+    /// [`ObsCfg::request_log`] adds a JSON-lines lifecycle log.
+    pub obs: ObsCfg,
 }
 
 impl Default for ServeCfg {
@@ -232,6 +239,7 @@ impl Default for ServeCfg {
             speculation: None,
             sample: SampleCfg::default(),
             precision: Precision::F32,
+            obs: ObsCfg::default(),
         }
     }
 }
@@ -365,6 +373,9 @@ pub struct Scheduler {
     /// [`serve`](Scheduler::serve) calls, so requests in *later* batches
     /// still hit the heads earlier batches paid for.
     cache: Option<Arc<PrefixCache>>,
+    /// Telemetry runtime (None with [`ObsCfg::off`]); persists across
+    /// calls so histograms aggregate the scheduler's whole lifetime.
+    obs: Option<Arc<ObsRuntime>>,
 }
 
 impl Scheduler {
@@ -374,9 +385,20 @@ impl Scheduler {
     pub fn new(model: Arc<Model>, cfg: ServeCfg) -> Result<Self> {
         cfg.validate_resident()?;
         cfg.validate_model(&model)?;
-        let cache = (cfg.prefix_cache_size > 0)
-            .then(|| Arc::new(PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size)));
-        Ok(Scheduler { model, cfg, cache })
+        let obs = ObsRuntime::from_cfg(&cfg.obs);
+        let cache = (cfg.prefix_cache_size > 0).then(|| {
+            Arc::new(match &obs {
+                // Cache events feed the metrics registry directly, so
+                // /healthz and /metrics read one set of counters.
+                Some(o) => PrefixCache::with_counters(
+                    model.fingerprint(),
+                    cfg.prefix_cache_size,
+                    o.registry.cache_counters(),
+                ),
+                None => PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size),
+            })
+        });
+        Ok(Scheduler { model, cfg, cache, obs })
     }
 
     pub fn model(&self) -> &Arc<Model> {
@@ -393,12 +415,26 @@ impl Scheduler {
         self.cache.as_ref()
     }
 
+    /// The metrics registry this scheduler records into (None with
+    /// [`ObsCfg::off`]).  Render it with
+    /// [`MetricsRegistry::render_prometheus`].
+    pub fn metrics(&self) -> Option<&Arc<MetricsRegistry>> {
+        self.obs.as_ref().map(|o| &o.registry)
+    }
+
     /// Serve a batch of requests to completion; results come back in
     /// request order.  Invalid prompts are rejected per-request
     /// ([`FinishReason::Rejected`]) without failing the batch; engine
     /// errors (a model/session fault) abort the whole call.
     pub fn serve(&self, tok: &Tokenizer, requests: Vec<Request>) -> Result<Vec<Completion>> {
-        serve_with_cache(&self.model, tok, requests, &self.cfg, self.cache.as_deref())
+        serve_with_cache(
+            &self.model,
+            tok,
+            requests,
+            &self.cfg,
+            self.cache.as_deref(),
+            self.obs.as_deref(),
+        )
     }
 }
 
@@ -413,9 +449,16 @@ pub fn serve(
     cfg: &ServeCfg,
 ) -> Result<Vec<Completion>> {
     cfg.validate_model(model)?;
-    let cache = (cfg.prefix_cache_size > 0)
-        .then(|| PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size));
-    serve_with_cache(model, tok, requests, cfg, cache.as_ref())
+    let obs = ObsRuntime::from_cfg(&cfg.obs);
+    let cache = (cfg.prefix_cache_size > 0).then(|| match &obs {
+        Some(o) => PrefixCache::with_counters(
+            model.fingerprint(),
+            cfg.prefix_cache_size,
+            o.registry.cache_counters(),
+        ),
+        None => PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size),
+    });
+    serve_with_cache(model, tok, requests, cfg, cache.as_ref(), obs.as_deref())
 }
 
 /// The batch core behind [`Scheduler::serve`] and [`serve`].
@@ -425,6 +468,7 @@ fn serve_with_cache(
     requests: Vec<Request>,
     cfg: &ServeCfg,
     cache: Option<&PrefixCache>,
+    obs: Option<&ObsRuntime>,
 ) -> Result<Vec<Completion>> {
     cfg.validate()?;
 
@@ -433,6 +477,7 @@ fn serve_with_cache(
     let deadline = cfg.max_queue_wait.map(|d| Instant::now() + d);
     let mut out: Vec<Option<Completion>> = vec![None; requests.len()];
     let mut jobs: Vec<Job> = Vec::with_capacity(requests.len());
+    let submitted = Instant::now();
     for (ix, req) in requests.into_iter().enumerate() {
         match encode_prompt(&model.manifest, tok, &req.prompt) {
             Ok(ids) => jobs.push(Job {
@@ -442,9 +487,11 @@ fn serve_with_cache(
                 prompt: req.prompt,
                 ids,
                 deadline,
+                submitted,
                 sink: None,
             }),
             Err(e) => {
+                note_rejected(obs, req.id, submitted);
                 out[ix] = Some(Completion {
                     request_id: req.id,
                     prompt: req.prompt,
@@ -471,10 +518,11 @@ fn serve_with_cache(
                 cfg.quantum,
                 cache,
                 cfg.speculation.as_ref(),
+                obs,
                 &mut out,
             )?;
         } else {
-            run_parallel(model, tok, jobs, cfg, n_sessions, cache, &mut out)?;
+            run_parallel(model, tok, jobs, cfg, n_sessions, cache, obs, &mut out)?;
         }
     }
 
@@ -501,6 +549,8 @@ pub(crate) struct Job {
     /// popped past it finishes as [`FinishReason::TimedOut`] without
     /// ever touching a decoder.
     pub(crate) deadline: Option<Instant>,
+    /// Intake time — queue-wait and end-to-end latency baseline.
+    pub(crate) submitted: Instant,
     /// Streaming event sink (None on the batch path).
     pub(crate) sink: Option<Sender<TokenEvent>>,
 }
@@ -529,6 +579,8 @@ impl StreamOut {
 /// acceptance accounting.
 struct SpecRunner {
     drafter: Box<dyn Drafter>,
+    /// Drafter label for the request log (e.g. `ngram:3`).
+    drafter_label: String,
     draft_len: usize,
     /// Score rounds with one fused `step_batch`/`rewind_batch` pass
     /// ([`SpecCfg::fused`] ∧ the decoder supports it); otherwise step +
@@ -563,6 +615,12 @@ struct Active<D> {
     /// decoder cannot snapshot/fork, e.g. the window baseline).
     spec: Option<SpecRunner>,
     stream: Option<StreamOut>,
+    /// Intake time (copied from [`Job::submitted`]) — e2e latency base.
+    submitted: Instant,
+    /// When the previous token was emitted; None until the first, so
+    /// [`note_token`] can split TTFT from inter-token latency.  Only
+    /// written when telemetry timing is on.
+    last_token_at: Option<Instant>,
 }
 
 /// Bind a decoder to a job: reset, prefill all but the last prompt token
@@ -582,10 +640,32 @@ fn admit<D: Decoder>(
     cfg: &SampleCfg,
     cache: Option<&PrefixCache>,
     spec: Option<&SpecCfg>,
+    obs: Option<&ObsRuntime>,
 ) -> Result<Active<D>> {
     let prompt_len = job.ids.len();
+    if let Some(o) = obs {
+        if o.counters {
+            o.registry.inc_admitted();
+            o.registry.add_prompt_tokens(prompt_len as u64);
+        }
+        if let Some(now) = o.now() {
+            let wait = now.duration_since(job.submitted);
+            o.registry.record_queue_wait(wait);
+            o.emit(RequestEvent::Admitted {
+                request_id: job.id,
+                prompt_tokens: prompt_len as u64,
+                queue_wait_ms: wait.as_secs_f64() * 1e3,
+            });
+        }
+    }
+    let prefill_t0 = obs.and_then(|o| o.now());
     let head = &job.ids[..prompt_len - 1];
     dec.reset();
+    if let Some(o) = obs {
+        if o.timing && o.stage_sample_every > 0 {
+            dec.attach_stage_obs(&o.registry, o.stage_sample_every);
+        }
+    }
     let mut cached_prefix_len = 0;
     match cache {
         Some(cache) if !head.is_empty() => {
@@ -624,6 +704,7 @@ fn admit<D: Decoder>(
         .and_then(|sc| {
             dec.drafter(&sc.drafter).map(|drafter| SpecRunner {
                 drafter,
+                drafter_label: sc.drafter.label().to_string(),
                 draft_len: sc.draft_len,
                 fused: sc.fused && dec.supports_step_batch(),
                 stats: SpecStats::default(),
@@ -633,6 +714,13 @@ fn admit<D: Decoder>(
                 snaps: Vec::new(),
             })
         });
+    if let (Some(o), Some(t0)) = (obs, prefill_t0) {
+        o.emit(RequestEvent::Started {
+            request_id: job.id,
+            cached_prefix_len: cached_prefix_len as u64,
+            prefill_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+    }
     Ok(Active {
         last: job.ids[prompt_len - 1],
         dec,
@@ -646,7 +734,36 @@ fn admit<D: Decoder>(
         cached_prefix_len,
         spec,
         stream: job.sink.map(|tx| StreamOut { tx, sd: StreamDecoder::new(), dead: false }),
+        submitted: job.submitted,
+        last_token_at: None,
     })
+}
+
+/// Telemetry for a request rejected at intake (bad prompt): it never
+/// touches a decoder, so it finishes here with zero tokens and no
+/// model/drafter labels.
+fn note_rejected(obs: Option<&ObsRuntime>, id: u64, submitted: Instant) {
+    let Some(o) = obs else { return };
+    if o.counters {
+        o.registry.inc_finished("rejected");
+    }
+    if let Some(now) = o.now() {
+        let e2e = now.duration_since(submitted);
+        o.registry.record_e2e(e2e);
+        o.emit(RequestEvent::Finished {
+            request_id: id,
+            finish: "rejected".into(),
+            tokens_generated: 0,
+            e2e_ms: e2e.as_secs_f64() * 1e3,
+            mixer: "-".into(),
+            precision: "-".into(),
+            drafter: None,
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            cached_prefix_len: 0,
+        });
+    }
 }
 
 /// Has this queued job outlived its admission budget?
@@ -657,7 +774,29 @@ fn expired(job: &Job) -> bool {
 /// Finish a queued job as TimedOut without decoding.  Streaming jobs
 /// deliver the completion through their sink (returns None); batch jobs
 /// hand it back for the output slot.
-fn expire(job: Job) -> Option<(usize, Completion)> {
+fn expire(job: Job, obs: Option<&ObsRuntime>) -> Option<(usize, Completion)> {
+    if let Some(o) = obs {
+        if o.counters {
+            o.registry.inc_finished("timed_out");
+        }
+        if let Some(now) = o.now() {
+            let e2e = now.duration_since(job.submitted);
+            o.registry.record_e2e(e2e);
+            o.emit(RequestEvent::Finished {
+                request_id: job.id,
+                finish: "timed_out".into(),
+                tokens_generated: 0,
+                e2e_ms: e2e.as_secs_f64() * 1e3,
+                mixer: "-".into(),
+                precision: "-".into(),
+                drafter: None,
+                spec_rounds: 0,
+                spec_drafted: 0,
+                spec_accepted: 0,
+                cached_prefix_len: 0,
+            });
+        }
+    }
     let Job { ix, id, prompt, sink, .. } = job;
     let completion = Completion {
         request_id: id,
@@ -680,6 +819,30 @@ fn expire(job: Job) -> Option<(usize, Completion)> {
     }
 }
 
+/// Telemetry tap after each emitted token: a generated-token count
+/// bump, then (only when timing or a request log is on) one clock read
+/// that feeds either TTFT (first token) or the inter-token latency
+/// histogram.  With telemetry off the caller skips this entirely, so
+/// the decode loop stays clock-free and allocation-free.
+fn note_token(id: u64, submitted: Instant, last_token_at: &mut Option<Instant>, obs: &ObsRuntime) {
+    if obs.counters {
+        obs.registry.add_tokens_generated(1);
+    }
+    let Some(now) = obs.now() else { return };
+    match *last_token_at {
+        None => {
+            let ttft = now.duration_since(submitted);
+            obs.registry.record_ttft(ttft);
+            obs.emit(RequestEvent::FirstToken {
+                request_id: id,
+                ttft_ms: ttft.as_secs_f64() * 1e3,
+            });
+        }
+        Some(prev) => obs.registry.record_token_latency(now.duration_since(prev)),
+    }
+    *last_token_at = Some(now);
+}
+
 /// Decode up to `quantum` tokens (0 = until finished).  Returns
 /// `Some(reason)` when the sequence is done, `None` when its time slice
 /// expired.  The stop conditions and sampling order mirror the original
@@ -689,9 +852,10 @@ fn advance<D: Decoder>(
     tok: &Tokenizer,
     cfg: &SampleCfg,
     quantum: usize,
+    obs: Option<&ObsRuntime>,
 ) -> Result<Option<FinishReason>> {
     if seq.spec.is_some() {
-        return advance_speculative(seq, tok, cfg, quantum);
+        return advance_speculative(seq, tok, cfg, quantum, obs);
     }
     let ctx = seq.dec.manifest().ctx;
     let mut sliced = 0usize;
@@ -709,6 +873,9 @@ fn advance<D: Decoder>(
         }
         seq.ids.push(next);
         seq.last = next;
+        if let Some(o) = obs {
+            note_token(seq.id, seq.submitted, &mut seq.last_token_at, o);
+        }
         if let Some(out) = seq.stream.as_mut() {
             let text_delta = out.sd.push(tok, next);
             out.emit(TokenEvent::Token { request_id: seq.id, token: next, text_delta });
@@ -776,6 +943,7 @@ fn advance_speculative<D: Decoder>(
     tok: &Tokenizer,
     cfg: &SampleCfg,
     quantum: usize,
+    obs: Option<&ObsRuntime>,
 ) -> Result<Option<FinishReason>> {
     let ctx = seq.dec.manifest().ctx;
     let mut sliced = 0usize;
@@ -787,6 +955,7 @@ fn advance_speculative<D: Decoder>(
         if generated >= seq.budget {
             return Ok(Some(FinishReason::MaxTokens));
         }
+        let round_t0 = obs.and_then(|o| o.now());
         let spec = seq.spec.as_mut().expect("speculative advance without a runner");
         // Block sizing: a round emits at most k+1 tokens, so k ≤
         // budget-remaining − 1 wastes nothing on unreachable drafts; and
@@ -882,6 +1051,9 @@ fn advance_speculative<D: Decoder>(
             seq.last = next;
             emitted += 1;
             sliced += 1;
+            if let Some(o) = obs {
+                note_token(seq.id, seq.submitted, &mut seq.last_token_at, o);
+            }
             if let Some(out) = seq.stream.as_mut() {
                 let text_delta = out.sd.push(tok, next);
                 out.emit(TokenEvent::Token { request_id: seq.id, token: next, text_delta });
@@ -900,6 +1072,9 @@ fn advance_speculative<D: Decoder>(
         spec.stats.drafted += k as u64;
         spec.stats.accepted += matched;
         spec.stats.emitted += emitted as u64;
+        if let (Some(o), Some(t0)) = (obs, round_t0) {
+            o.registry.record_verify_round(t0.elapsed());
+        }
         if let Some(f) = finish {
             // Terminal: the decoder's state is past the emitted history,
             // but a finished sequence's state is never read again (the
@@ -928,8 +1103,41 @@ fn advance_speculative<D: Decoder>(
 /// decoder for the free pool.  A streaming sequence emits its terminal
 /// [`TokenEvent::Done`] here (with the detokenizer's final flush), so
 /// consumers always see the completion on the stream itself.
-fn complete<D>(seq: Active<D>, tok: &Tokenizer, finish: FinishReason) -> (D, usize, Completion) {
-    let Active { dec, ix, id, prompt, ids, prompt_len, cached_prefix_len, spec, stream, .. } = seq;
+fn complete<D: Decoder>(
+    seq: Active<D>,
+    tok: &Tokenizer,
+    finish: FinishReason,
+    obs: Option<&ObsRuntime>,
+) -> (D, usize, Completion) {
+    let Active {
+        dec, ix, id, prompt, ids, prompt_len, cached_prefix_len, spec, stream, submitted, ..
+    } = seq;
+    if let Some(o) = obs {
+        if o.counters {
+            o.registry.inc_finished(finish.label());
+            if let Some(s) = spec.as_ref() {
+                o.registry.spec.add(&s.stats);
+            }
+        }
+        if let Some(now) = o.now() {
+            let e2e = now.duration_since(submitted);
+            o.registry.record_e2e(e2e);
+            let st = spec.as_ref().map(|s| &s.stats);
+            o.emit(RequestEvent::Finished {
+                request_id: id,
+                finish: finish.label().into(),
+                tokens_generated: (ids.len() - prompt_len) as u64,
+                e2e_ms: e2e.as_secs_f64() * 1e3,
+                mixer: dec.manifest().variant.clone(),
+                precision: dec.precision().label().into(),
+                drafter: spec.as_ref().map(|s| s.drafter_label.clone()),
+                spec_rounds: st.map_or(0, |s| s.rounds),
+                spec_drafted: st.map_or(0, |s| s.drafted),
+                spec_accepted: st.map_or(0, |s| s.accepted),
+                cached_prefix_len: cached_prefix_len as u64,
+            });
+        }
+    }
     let completion = Completion {
         request_id: id,
         prompt,
@@ -962,6 +1170,7 @@ pub(crate) fn run_local<D: Decoder>(
     quantum: usize,
     cache: Option<&PrefixCache>,
     spec: Option<&SpecCfg>,
+    obs: Option<&ObsRuntime>,
     out: &mut [Option<Completion>],
 ) -> Result<()> {
     if decoders.is_empty() && !jobs.is_empty() {
@@ -978,19 +1187,19 @@ pub(crate) fn run_local<D: Decoder>(
         // consuming no session.
         while !pending.is_empty() {
             if expired(pending.front().unwrap()) {
-                if let Some((ix, completion)) = expire(pending.pop_front().unwrap()) {
+                if let Some((ix, completion)) = expire(pending.pop_front().unwrap(), obs) {
                     out[ix] = Some(completion);
                 }
                 continue;
             }
             let Some(dec) = free.pop_front() else { break };
             let job = pending.pop_front().unwrap();
-            ready.push_back(admit(dec, job, cfg, cache, spec)?);
+            ready.push_back(admit(dec, job, cfg, cache, spec, obs)?);
         }
         let Some(mut seq) = ready.pop_front() else { break };
-        match advance(&mut seq, tok, cfg, quantum)? {
+        match advance(&mut seq, tok, cfg, quantum, obs)? {
             Some(finish) => {
-                let (dec, ix, completion) = complete(seq, tok, finish);
+                let (dec, ix, completion) = complete(seq, tok, finish, obs);
                 out[ix] = Some(completion);
                 free.push_back(dec);
             }
@@ -1048,6 +1257,7 @@ fn run_parallel(
     cfg: &ServeCfg,
     n_sessions: usize,
     cache: Option<&PrefixCache>,
+    obs: Option<&ObsRuntime>,
     out: &mut [Option<Completion>],
 ) -> Result<()> {
     let workers = cfg.threads.min(jobs.len()).max(1);
@@ -1064,7 +1274,7 @@ fn run_parallel(
 
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| worker(&shared, &wake, tok, cfg, cache, None));
+            s.spawn(|| worker(&shared, &wake, tok, cfg, cache, obs));
         }
     });
 
@@ -1115,7 +1325,7 @@ fn worker(
     tok: &Tokenizer,
     cfg: &ServeCfg,
     cache: Option<&PrefixCache>,
-    counters: Option<&SpecCounters>,
+    obs: Option<&ObsRuntime>,
 ) {
     let _guard = PanicGuard { shared, wake };
     loop {
@@ -1131,7 +1341,7 @@ fn worker(
                 // (ready never empty) still honors the budget instead of
                 // delivering the timeout only when a session frees.
                 while g.pending.front().is_some_and(expired) {
-                    if let Some(done) = expire(g.pending.pop_front().unwrap()) {
+                    if let Some(done) = expire(g.pending.pop_front().unwrap(), obs) {
                         g.done.push(done);
                     }
                 }
@@ -1159,12 +1369,15 @@ fn worker(
 
         // Heavy work (prefill / quantum of decode steps) off the lock.
         let stepped = match work {
-            Work::Admit(job, dec) => admit(dec, job, &cfg.sample, cache, cfg.speculation.as_ref())
-                .and_then(|mut seq| {
-                    advance(&mut seq, tok, &cfg.sample, cfg.quantum).map(|f| (seq, f))
-                }),
+            Work::Admit(job, dec) => {
+                admit(dec, job, &cfg.sample, cache, cfg.speculation.as_ref(), obs).and_then(
+                    |mut seq| {
+                        advance(&mut seq, tok, &cfg.sample, cfg.quantum, obs).map(|f| (seq, f))
+                    },
+                )
+            }
             Work::Step(mut seq) => {
-                advance(&mut seq, tok, &cfg.sample, cfg.quantum).map(|f| (seq, f))
+                advance(&mut seq, tok, &cfg.sample, cfg.quantum, obs).map(|f| (seq, f))
             }
         };
 
@@ -1183,11 +1396,7 @@ fn worker(
                 // through the sink inside `complete`; only batch slots
                 // collect into `done`.
                 let streamed = seq.stream.is_some();
-                let (dec, ix, completion) = complete(seq, tok, finish);
-                // Scheduler-wide acceptance counters (GET /healthz).
-                if let (Some(c), Some(st)) = (counters, completion.spec.as_ref()) {
-                    c.add(st);
-                }
+                let (dec, ix, completion) = complete(seq, tok, finish, obs);
                 let mut g = shared.lock().expect("scheduler lock poisoned");
                 if !streamed {
                     g.done.push((ix, completion));
@@ -1226,9 +1435,10 @@ struct ResidentInner {
     /// long as the scheduler, so every submission can hit heads earlier
     /// submissions paid for.
     cache: Option<Arc<PrefixCache>>,
-    /// Aggregate speculative-decoding counters across every finished
-    /// request (zeros while speculation is off) — `GET /healthz`.
-    spec_counters: Arc<SpecCounters>,
+    /// Telemetry runtime (None with [`ObsCfg::off`]): the metrics
+    /// registry behind `GET /healthz` and `GET /metrics`, plus the
+    /// optional request log.
+    obs: Option<Arc<ObsRuntime>>,
 }
 
 /// A resident continuous-batching scheduler: the worker pool stays up
@@ -1257,9 +1467,17 @@ impl StreamScheduler {
         cfg.validate_resident()?;
         cfg.validate_model(&model)?;
         let free = (0..cfg.max_active).map(|_| model.session()).collect();
-        let cache = (cfg.prefix_cache_size > 0)
-            .then(|| Arc::new(PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size)));
-        let spec_counters = Arc::new(SpecCounters::new());
+        let obs = ObsRuntime::from_cfg(&cfg.obs);
+        let cache = (cfg.prefix_cache_size > 0).then(|| {
+            Arc::new(match &obs {
+                Some(o) => PrefixCache::with_counters(
+                    model.fingerprint(),
+                    cfg.prefix_cache_size,
+                    o.registry.cache_counters(),
+                ),
+                None => PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size),
+            })
+        });
         let inner = Arc::new(ResidentInner {
             shared: Mutex::new(Shared {
                 pending: VecDeque::new(),
@@ -1275,7 +1493,7 @@ impl StreamScheduler {
             cfg,
             model,
             cache,
-            spec_counters,
+            obs,
         });
         let workers = (0..inner.cfg.threads)
             .map(|_| {
@@ -1287,7 +1505,7 @@ impl StreamScheduler {
                         &inner.tok,
                         &inner.cfg,
                         inner.cache.as_deref(),
-                        Some(&inner.spec_counters),
+                        inner.obs.as_deref(),
                     )
                 })
             })
@@ -1315,9 +1533,17 @@ impl StreamScheduler {
 
     /// Aggregate speculative-decoding acceptance counters across every
     /// request this scheduler has finished (all zeros while
-    /// [`ServeCfg::speculation`] is off) — `GET /healthz`.
+    /// [`ServeCfg::speculation`] is off, or with telemetry disabled) —
+    /// `GET /healthz`.  A view over the metrics registry.
     pub fn spec_stats(&self) -> SpecStats {
-        self.inner.spec_counters.snapshot()
+        self.inner.obs.as_ref().map(|o| o.registry.spec.snapshot()).unwrap_or_default()
+    }
+
+    /// The metrics registry this scheduler records into (None with
+    /// [`ObsCfg::off`]) — `GET /metrics` renders it via
+    /// [`MetricsRegistry::render_prometheus`].
+    pub fn metrics(&self) -> Option<&Arc<MetricsRegistry>> {
+        self.inner.obs.as_ref().map(|o| &o.registry)
     }
 
     /// Submit one request; its events stream back on the returned
@@ -1329,6 +1555,7 @@ impl StreamScheduler {
     pub fn submit(&self, req: Request) -> Result<TokenStream> {
         let (tx, rx) = channel();
         let stream = TokenStream { request_id: req.id, rx };
+        let submitted = Instant::now();
         let job = match encode_prompt(&self.inner.model.manifest, &self.inner.tok, &req.prompt) {
             Ok(ids) => Job {
                 ix: 0, // unused: streaming completions travel by sink
@@ -1336,10 +1563,12 @@ impl StreamScheduler {
                 budget: req.max_new_tokens.unwrap_or(self.inner.cfg.sample.max_new_tokens),
                 prompt: req.prompt,
                 ids,
-                deadline: self.inner.cfg.max_queue_wait.map(|d| Instant::now() + d),
+                deadline: self.inner.cfg.max_queue_wait.map(|d| submitted + d),
+                submitted,
                 sink: Some(tx),
             },
             Err(e) => {
+                note_rejected(self.inner.obs.as_deref(), req.id, submitted);
                 let completion = Completion {
                     request_id: req.id,
                     prompt: req.prompt,
@@ -1539,6 +1768,7 @@ mod tests {
             prompt: "Once upon a time".to_string(),
             ids: tok.encode("Once upon a time"),
             deadline,
+            submitted: Instant::now(),
             sink: None,
         };
         let jobs = vec![
@@ -1548,7 +1778,7 @@ mod tests {
         ];
         let mut out = vec![None, None, None];
         let mut sessions = vec![model.session()]; // max_active = 1: saturated
-        run_local(&mut sessions, &tok, jobs, &sample, 2, None, None, &mut out).unwrap();
+        run_local(&mut sessions, &tok, jobs, &sample, 2, None, None, None, &mut out).unwrap();
         let out: Vec<Completion> = out.into_iter().map(Option::unwrap).collect();
         assert_ne!(out[0].finish, FinishReason::TimedOut);
         assert!(out[0].tokens_generated > 0);
@@ -1699,11 +1929,12 @@ mod tests {
             prompt: "Once upon a time".to_string(),
             ids: tok.encode("Once upon a time"),
             deadline: None,
+            submitted: Instant::now(),
             sink: Some(tx),
         };
         let mut out = vec![None];
         let mut sessions = vec![model.session()];
-        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, None, &mut out).unwrap();
+        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, None, None, &mut out).unwrap();
         let c = out.pop().unwrap().unwrap();
         assert_eq!(c.finish, FinishReason::Cancelled);
         assert_eq!(c.tokens_generated, 1, "dead sink is noticed after one token");
@@ -1717,11 +1948,12 @@ mod tests {
             prompt: "Once upon a time".to_string(),
             ids: tok.encode("Once upon a time"),
             deadline: None,
+            submitted: Instant::now(),
             sink: None,
         };
         let mut out = vec![None];
         let mut sessions = vec![model.session()];
-        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, None, &mut out).unwrap();
+        run_local(&mut sessions, &tok, vec![job], &sample, 4, None, None, None, &mut out).unwrap();
         let c = out.pop().unwrap().unwrap();
         assert_ne!(c.finish, FinishReason::Cancelled);
         assert!(c.tokens_generated > 1);

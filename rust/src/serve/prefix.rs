@@ -27,10 +27,11 @@
 //! eviction counters feed `GET /healthz` and the serve benches.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 
 use crate::infer::SessionState;
+use crate::obs::CacheCounters;
 
 /// Snapshot stride during prefill: admission publishes a snapshot every
 /// this many tokens of the prompt head (at absolute positions — every
@@ -88,25 +89,30 @@ pub struct PrefixCache {
     fingerprint: u64,
     capacity: usize,
     inner: Mutex<Inner>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    insertions: AtomicU64,
-    evictions: AtomicU64,
+    /// Event counters — private by default, the metrics registry's
+    /// cells when a scheduler wires the cache into its telemetry
+    /// ([`PrefixCache::with_counters`]), so `GET /healthz` and
+    /// `GET /metrics` read the very same atomics.
+    counters: Arc<CacheCounters>,
 }
 
 impl PrefixCache {
     /// A cache for one model (`fingerprint` from
     /// [`crate::infer::Model::fingerprint`]), holding at most `capacity`
-    /// snapshots (clamped to ≥ 1).
+    /// snapshots (clamped to ≥ 1), counting into a private
+    /// [`CacheCounters`].
     pub fn new(fingerprint: u64, capacity: usize) -> Self {
+        Self::with_counters(fingerprint, capacity, Arc::new(CacheCounters::default()))
+    }
+
+    /// [`PrefixCache::new`] recording into shared counter cells —
+    /// typically [`crate::obs::MetricsRegistry::cache_counters`].
+    pub fn with_counters(fingerprint: u64, capacity: usize, counters: Arc<CacheCounters>) -> Self {
         PrefixCache {
             fingerprint,
             capacity: capacity.max(1),
             inner: Mutex::new(Inner { entries: HashMap::new(), lens: BTreeMap::new(), tick: 0 }),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            insertions: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            counters,
         }
     }
 
@@ -134,7 +140,7 @@ impl PrefixCache {
     /// fall back to a cold prefill.
     pub fn lookup(&self, fingerprint: u64, tokens: &[u32]) -> Option<(usize, SessionState)> {
         if fingerprint != self.fingerprint || tokens.is_empty() {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.counters.miss();
             return None;
         }
         let mut g = self.inner.lock().expect("prefix cache lock");
@@ -147,12 +153,12 @@ impl PrefixCache {
                 e.stamp = tick;
                 let state = e.state.clone();
                 drop(g);
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.counters.hit();
                 return Some((len, state));
             }
         }
         drop(g);
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.counters.miss();
         None
     }
 
@@ -191,24 +197,30 @@ impl PrefixCache {
                         g.lens.remove(&victim.len());
                     }
                 }
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+                self.counters.evicted();
             }
         }
         *g.lens.entry(tokens.len()).or_insert(0) += 1;
         g.entries.insert(tokens.to_vec(), Entry { state, stamp: tick });
         drop(g);
-        self.insertions.fetch_add(1, Ordering::Relaxed);
+        self.counters.inserted();
     }
 
-    /// Point-in-time counter snapshot.
+    /// The shared counter cells this cache records into.
+    pub fn counters(&self) -> &Arc<CacheCounters> {
+        &self.counters
+    }
+
+    /// Point-in-time counter snapshot — a view over the same cells
+    /// `GET /metrics` renders.
     pub fn stats(&self) -> PrefixCacheStats {
         PrefixCacheStats {
             entries: self.len(),
             capacity: self.capacity,
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            insertions: self.insertions.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            insertions: self.counters.insertions.load(Ordering::Relaxed),
+            evictions: self.counters.evictions.load(Ordering::Relaxed),
         }
     }
 }

@@ -10,7 +10,12 @@
 //!   `Transfer-Encoding: chunked`, one chunk per [`TokenEvent`], so
 //!   time-to-first-token is one prefill + one decode step, not a whole
 //!   completion.
-//! * `GET /healthz` — model/ctx/vocab liveness probe.
+//! * `GET /healthz` — model/ctx/vocab liveness probe (JSON).
+//! * `GET /metrics` — Prometheus text exposition of the scheduler's
+//!   [`crate::obs::MetricsRegistry`]: latency histograms (queue wait,
+//!   TTFT, per-token, end-to-end, verify rounds), request/token
+//!   counters, prefix-cache and speculation totals, and sampled
+//!   per-stage step timings.
 //!
 //! Concurrency model: one accept-loop thread, one thread per connection
 //! (connections are long-lived streams, cheap at the concurrency a
@@ -210,6 +215,10 @@ fn handle_connection(inner: &ServerInner, stream: TcpStream) -> Result<()> {
                 handle_health(inner, &mut writer, keep_alive)?;
                 keep_alive
             }
+            ("GET", "/metrics") => {
+                handle_metrics(inner, &mut writer, keep_alive)?;
+                keep_alive
+            }
             (_, "/v1/generate" | "/v1/stream") => {
                 return respond_error(&mut writer, 405, "use POST")
             }
@@ -217,7 +226,7 @@ fn handle_connection(inner: &ServerInner, stream: TcpStream) -> Result<()> {
                 return respond_error(
                     &mut writer,
                     404,
-                    "unknown route (have: POST /v1/generate, POST /v1/stream, GET /healthz)",
+                    "unknown route (have: POST /v1/generate, POST /v1/stream, GET /healthz, GET /metrics)",
                 )
             }
         };
@@ -312,6 +321,26 @@ fn handle_stream(inner: &ServerInner, w: &mut impl Write, req: &http::HttpReques
         }
     }
     http::finish_chunks(w)
+}
+
+/// Serve `GET /metrics`: Prometheus text exposition (v0.0.4) rendered
+/// straight from the scheduler's [`crate::obs::MetricsRegistry`].  A
+/// scheduler running with telemetry fully off (`ObsCfg::off`) still
+/// answers — with every family present and zero — so scrape configs
+/// never see the route flap with server configuration.
+fn handle_metrics(inner: &ServerInner, w: &mut impl Write, keep_alive: bool) -> Result<()> {
+    let body = match inner.sched.metrics() {
+        Some(reg) => reg.render_prometheus(),
+        None => crate::obs::MetricsRegistry::default().render_prometheus(),
+    };
+    http::write_response(
+        w,
+        200,
+        "OK",
+        "text/plain; version=0.0.4; charset=utf-8",
+        body.as_bytes(),
+        keep_alive,
+    )
 }
 
 fn handle_health(inner: &ServerInner, w: &mut impl Write, keep_alive: bool) -> Result<()> {

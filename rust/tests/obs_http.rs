@@ -1,0 +1,290 @@
+//! Loopback integration tests for the observability surface: the
+//! `GET /metrics` Prometheus route, its agreement with the request
+//! traffic actually served, the request-lifecycle log, and the
+//! telemetry-off determinism guarantee. PJRT-free (synthetic
+//! weights), so it runs under both feature sets.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use hsm::config::{LayerInfo, Manifest};
+use hsm::generation::SampleCfg;
+use hsm::infer::{weights, Model, ModelWeights};
+use hsm::obs::{ObsCfg, RequestEvent, RequestLog};
+use hsm::serve::{ServeCfg, StreamScheduler};
+use hsm::server::api::GenerateRequest;
+use hsm::server::{client, HttpServer};
+use hsm::tokenizer::Tokenizer;
+use hsm::util::json;
+
+fn tok() -> Tokenizer {
+    let text = hsm::corpus::generate(9, 80);
+    hsm::tokenizer::trainer::train(&text, 300).unwrap()
+}
+
+fn model(vocab: usize, ctx: usize) -> Arc<Model> {
+    let layers = vec![
+        LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+        LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+    ];
+    let m = Manifest::synthetic("hsm_ab", layers, 8, ctx, vocab, 1);
+    let flat = weights::seeded_flat(&m, 21);
+    Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap()
+}
+
+fn sample() -> SampleCfg {
+    SampleCfg { temperature: 0.8, top_k: 8, max_new_tokens: 8, seed: 9, stop_at_eot: true }
+}
+
+fn start(cfg: ServeCfg) -> (HttpServer, Tokenizer, Arc<Model>, String) {
+    let tok = tok();
+    let model = model(tok.vocab_size(), 64);
+    let cfg = ServeCfg { sample: sample(), ..cfg };
+    let sched =
+        Arc::new(StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).unwrap());
+    let server = HttpServer::bind("127.0.0.1:0", sched).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, tok, model, addr)
+}
+
+/// Raw close-framed GET; returns (head, body).
+fn http_get(addr: &str, path: &str) -> (String, String) {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let (head, body) = resp.split_once("\r\n\r\n").expect("response must have a header block");
+    (head.to_string(), body.to_string())
+}
+
+/// Parse a Prometheus text body into `name{labels} -> value`, keeping
+/// the label block verbatim, plus the set of `# TYPE`d family names.
+fn parse_prometheus(body: &str) -> (HashMap<String, f64>, Vec<String>) {
+    let mut series = HashMap::new();
+    let mut families = Vec::new();
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            families.push(rest.split_whitespace().next().unwrap().to_string());
+            continue;
+        }
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').expect("sample line must have a value");
+        let value: f64 = value.parse().unwrap_or_else(|_| panic!("unparseable value: {line}"));
+        series.insert(name.to_string(), value);
+    }
+    (series, families)
+}
+
+#[test]
+fn metrics_route_exposes_every_family_and_counts_the_traffic() {
+    let (server, _tok, _model, addr) = start(ServeCfg::default());
+
+    // Serve some known traffic first (same prompt three times: the
+    // later requests hit the prefix cache).
+    let mut generated = 0u64;
+    let mut nonempty = 0u64; // requests that emitted at least one token
+    for id in [1u64, 2, 3] {
+        let mut req = GenerateRequest::new("Once upon a time");
+        req.id = Some(id);
+        let n = client::generate(&addr, &req).unwrap().tokens_generated as u64;
+        generated += n;
+        nonempty += u64::from(n > 0);
+    }
+
+    let (head, body) = http_get(&addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "got: {head}");
+    assert!(
+        head.to_ascii_lowercase().contains("content-type: text/plain; version=0.0.4"),
+        "metrics must use the Prometheus text content type: {head}"
+    );
+
+    let (series, families) = parse_prometheus(&body);
+    for family in [
+        "hsm_queue_wait_seconds",
+        "hsm_ttft_seconds",
+        "hsm_token_latency_seconds",
+        "hsm_request_seconds",
+        "hsm_spec_verify_round_seconds",
+        "hsm_requests_admitted_total",
+        "hsm_requests_finished_total",
+        "hsm_tokens_generated_total",
+        "hsm_prompt_tokens_total",
+        "hsm_prefix_cache_events_total",
+        "hsm_prefix_cache_entries",
+        "hsm_spec_rounds_total",
+        "hsm_spec_tokens_total",
+        "hsm_spec_fused_passes_total",
+        "hsm_spec_fused_rows_total",
+        "hsm_stage_seconds_total",
+        "hsm_stage_samples_total",
+    ] {
+        assert!(families.iter().any(|f| f == family), "family {family} missing from scrape");
+    }
+
+    // The counters reflect the traffic we just served.
+    assert_eq!(series["hsm_requests_admitted_total"], 3.0);
+    assert_eq!(series["hsm_requests_finished_total{finish=\"eot\"}"]
+        + series["hsm_requests_finished_total{finish=\"max_tokens\"}"]
+        + series["hsm_requests_finished_total{finish=\"ctx_full\"}"], 3.0);
+    assert_eq!(series["hsm_tokens_generated_total"], generated as f64);
+    assert_eq!(series["hsm_request_seconds_count"], 3.0);
+    // One TTFT sample per request that emitted anything; every further
+    // token lands in the inter-token latency histogram.
+    assert_eq!(series["hsm_ttft_seconds_count"], nonempty as f64);
+    assert_eq!(series["hsm_token_latency_seconds_count"], (generated - nonempty) as f64);
+    assert!(series["hsm_prefix_cache_events_total{event=\"hit\"}"] >= 1.0);
+    // No speculation configured: those families render but stay zero.
+    assert_eq!(series["hsm_spec_rounds_total"], 0.0);
+
+    // Histogram bucket series are cumulative and end at the count.
+    for name in ["hsm_ttft_seconds", "hsm_request_seconds"] {
+        let mut cum = Vec::new();
+        for line in body.lines() {
+            if let Some(rest) = line.strip_prefix(&format!("{name}_bucket{{le=\"")) {
+                let (_, count) = rest.split_once("\"} ").unwrap();
+                cum.push(count.parse::<u64>().unwrap());
+            }
+        }
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "{name} buckets must be cumulative");
+        assert_eq!(*cum.last().unwrap() as f64, series[&format!("{name}_count")]);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn metrics_stage_timing_appears_once_steps_are_sampled() {
+    // stage_sample_every = 1: every step is timed, so even a short run
+    // must produce stage series for both phases and all three stages.
+    let cfg = ServeCfg {
+        obs: ObsCfg { stage_sample_every: 1, ..ObsCfg::default() },
+        ..ServeCfg::default()
+    };
+    let (server, _tok, _model, addr) = start(cfg);
+    let mut req = GenerateRequest::new("Lily likes cats");
+    req.id = Some(4);
+    client::generate(&addr, &req).unwrap();
+
+    let (_, body) = http_get(&addr, "/metrics");
+    let (series, _) = parse_prometheus(&body);
+    // Prefill skips logit computation entirely (the native decoder's
+    // whole point), so that cell must exist but stay at zero samples.
+    for (phase, stage, mixer, expect_samples) in [
+        ("prefill", "mixer", "ab", true),
+        ("prefill", "ffn", "ab", true),
+        ("prefill", "logits", "-", false),
+        ("step", "mixer", "ab", true),
+        ("step", "ffn", "ab", true),
+        ("step", "logits", "-", true),
+    ] {
+        let key = format!(
+            "hsm_stage_samples_total{{phase=\"{phase}\",stage=\"{stage}\",\
+             mixer=\"{mixer}\",precision=\"f32\"}}"
+        );
+        let samples = *series.get(&key).unwrap_or_else(|| panic!("missing series {key}"));
+        if expect_samples {
+            assert!(samples > 0.0, "{key} recorded no samples");
+        } else {
+            assert_eq!(samples, 0.0, "{key} must not be sampled");
+        }
+        let secs_key = format!(
+            "hsm_stage_seconds_total{{phase=\"{phase}\",stage=\"{stage}\",\
+             mixer=\"{mixer}\",precision=\"f32\"}}"
+        );
+        assert!(series.contains_key(&secs_key), "missing series {secs_key}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn metrics_route_answers_even_with_telemetry_off() {
+    let cfg = ServeCfg { obs: ObsCfg::off(), ..ServeCfg::default() };
+    let (server, _tok, _model, addr) = start(cfg);
+    let mut req = GenerateRequest::new("Once upon a time");
+    req.id = Some(1);
+    client::generate(&addr, &req).unwrap();
+    let (head, body) = http_get(&addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "got: {head}");
+    let (series, families) = parse_prometheus(&body);
+    assert!(families.iter().any(|f| f == "hsm_requests_admitted_total"));
+    // Nothing recorded: the schema is stable, the values are zero.
+    assert_eq!(series["hsm_requests_admitted_total"], 0.0);
+    assert_eq!(series["hsm_ttft_seconds_count"], 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn telemetry_never_changes_sampled_bytes() {
+    let prompts = ["Once upon a time", "Lily likes cats", "Jack went to"];
+    let run = |obs: ObsCfg| -> Vec<String> {
+        let cfg = ServeCfg { obs, ..ServeCfg::default() };
+        let (server, _tok, _model, addr) = start(cfg);
+        let out = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut req = GenerateRequest::new(p);
+                req.id = Some(i as u64);
+                client::generate(&addr, &req).unwrap().completion
+            })
+            .collect();
+        server.shutdown();
+        out
+    };
+    let with_obs = run(ObsCfg { stage_sample_every: 1, ..ObsCfg::default() });
+    let without = run(ObsCfg::off());
+    assert_eq!(with_obs, without, "telemetry must be a pure tap on the decode loop");
+}
+
+#[test]
+fn request_log_records_the_full_lifecycle() {
+    let path = std::env::temp_dir().join(format!("hsm_obs_reqlog_{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let obs = ObsCfg {
+        request_log: Some(RequestLog::to_file(&path).unwrap()),
+        ..ObsCfg::default()
+    };
+    let cfg = ServeCfg { obs, ..ServeCfg::default() };
+    let (server, _tok, _model, addr) = start(cfg);
+    let ids = [31u64, 32];
+    let mut tokens = HashMap::new();
+    for id in ids {
+        let mut req = GenerateRequest::new("Once upon a time");
+        req.id = Some(id);
+        let c = client::generate(&addr, &req).unwrap();
+        tokens.insert(id, c.tokens_generated as u64);
+    }
+    server.shutdown();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let mut by_request: HashMap<u64, Vec<RequestEvent>> = HashMap::new();
+    for line in text.lines() {
+        let ev = RequestEvent::from_json(&json::parse(line).unwrap()).unwrap();
+        by_request.entry(ev.request_id()).or_default().push(ev);
+    }
+    for id in ids {
+        let evs = &by_request[&id];
+        let labels: Vec<&str> = evs.iter().map(|e| e.label()).collect();
+        // A request that samples EOT on its very first step emits no
+        // tokens, hence no first_token event — still a valid lifecycle.
+        let expected: &[&str] = if tokens[&id] > 0 {
+            &["admitted", "started", "first_token", "finished"]
+        } else {
+            &["admitted", "started", "finished"]
+        };
+        assert_eq!(labels, expected, "request {id} lifecycle out of order: {labels:?}");
+        match evs.last().unwrap() {
+            RequestEvent::Finished { tokens_generated, mixer, precision, drafter, .. } => {
+                assert_eq!(*tokens_generated, tokens[&id]);
+                assert_eq!(mixer, "hsm_ab");
+                assert_eq!(precision, "f32");
+                assert!(drafter.is_none(), "no speculation configured");
+            }
+            other => panic!("last event must be finished, got {other:?}"),
+        }
+    }
+    server.shutdown();
+}

@@ -1,0 +1,298 @@
+//! Property tests for the telemetry subsystem: histogram bucketing and
+//! quantile math against a sorted shadow array, snapshot-merge algebra,
+//! request-log schema round-trips, and the Prometheus rendering's
+//! structural invariants. Pure CPU, PJRT-free — runs under both
+//! feature sets.
+
+use std::time::Duration;
+
+use hsm::obs::hist::{bucket_bounds, bucket_index, HistSnapshot, Histogram, N_BUCKETS, SUB_BUCKETS};
+use hsm::obs::{MetricsRegistry, RequestEvent};
+use hsm::util::json;
+
+fn xorshift(x: &mut u64) -> u64 {
+    *x ^= *x << 13;
+    *x ^= *x >> 7;
+    *x ^= *x << 17;
+    *x
+}
+
+/// Every family the registry renders, scraped or not.
+const FAMILIES: [&str; 17] = [
+    "hsm_queue_wait_seconds",
+    "hsm_ttft_seconds",
+    "hsm_token_latency_seconds",
+    "hsm_request_seconds",
+    "hsm_spec_verify_round_seconds",
+    "hsm_requests_admitted_total",
+    "hsm_requests_finished_total",
+    "hsm_tokens_generated_total",
+    "hsm_prompt_tokens_total",
+    "hsm_prefix_cache_events_total",
+    "hsm_prefix_cache_entries",
+    "hsm_spec_rounds_total",
+    "hsm_spec_tokens_total",
+    "hsm_spec_fused_passes_total",
+    "hsm_spec_fused_rows_total",
+    "hsm_stage_seconds_total",
+    "hsm_stage_samples_total",
+];
+
+#[test]
+fn quantiles_bracket_order_statistics_across_distributions() {
+    // Uniform, heavy-tailed, constant, and bimodal value streams: the
+    // reported quantile bucket must contain the exact order statistic,
+    // and the bucket's upper bound is at most 6.25% above it (for
+    // values past the unit-resolution region).
+    let gen_uniform = |x: &mut u64| xorshift(x) % 50_000_000;
+    let gen_tail = |x: &mut u64| {
+        let v = xorshift(x);
+        (v % 1000) * ((v >> 32) % 1_000_000 + 1)
+    };
+    let gen_const = |_: &mut u64| 123_456u64;
+    let gen_bimodal =
+        |x: &mut u64| if xorshift(x) % 2 == 0 { 100 } else { 10_000_000 };
+    let distributions: [(&str, &dyn Fn(&mut u64) -> u64); 4] = [
+        ("uniform", &gen_uniform),
+        ("tail", &gen_tail),
+        ("const", &gen_const),
+        ("bimodal", &gen_bimodal),
+    ];
+    for (name, gen) in distributions {
+        let mut seed = 0x9e37_79b9_7f4a_7c15u64;
+        let mut s = HistSnapshot::empty();
+        let mut shadow = Vec::with_capacity(4000);
+        for _ in 0..4000 {
+            let v = gen(&mut seed);
+            s.record(v);
+            shadow.push(v);
+        }
+        shadow.sort_unstable();
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            let rank = (q * (shadow.len() - 1) as f64).round() as usize;
+            let exact = shadow[rank];
+            let (lo, hi) = s.quantile_bounds(q).unwrap();
+            assert!(
+                lo <= exact && exact <= hi,
+                "{name} q={q}: exact {exact} outside [{lo}, {hi}]"
+            );
+            let reported = s.quantile(q);
+            if exact >= SUB_BUCKETS as u64 {
+                let err = (reported - exact) as f64 / exact as f64;
+                assert!(err <= 1.0 / SUB_BUCKETS as f64 + 1e-12, "{name} q={q}: err {err}");
+            } else {
+                assert_eq!(reported, exact, "{name} q={q}: unit region must be exact");
+            }
+        }
+    }
+}
+
+#[test]
+fn snapshot_merge_is_associative_commutative_and_matches_union() {
+    let mut seed = 7u64;
+    let parts: Vec<HistSnapshot> = (0..3)
+        .map(|_| {
+            let mut s = HistSnapshot::empty();
+            for _ in 0..500 {
+                s.record(xorshift(&mut seed) % 1_000_000);
+            }
+            s
+        })
+        .collect();
+    // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) and a ⊕ b == b ⊕ a.
+    let mut left = parts[0].clone();
+    left.merge(&parts[1]);
+    left.merge(&parts[2]);
+    let mut right_tail = parts[1].clone();
+    right_tail.merge(&parts[2]);
+    let mut right = parts[0].clone();
+    right.merge(&right_tail);
+    assert_eq!(left, right, "merge must be associative");
+    let mut ab = parts[0].clone();
+    ab.merge(&parts[1]);
+    let mut ba = parts[1].clone();
+    ba.merge(&parts[0]);
+    assert_eq!(ab, ba, "merge must be commutative");
+    // Merging equals recording the union stream directly.
+    seed = 7;
+    let mut union = HistSnapshot::empty();
+    for _ in 0..1500 {
+        union.record(xorshift(&mut seed) % 1_000_000);
+    }
+    assert_eq!(left, union, "merged parts must equal the union stream");
+}
+
+#[test]
+fn bucket_edges_tile_and_contain() {
+    // Edge values around the linear/log boundary, octave boundaries,
+    // and the extremes.
+    let mut probes = vec![0u64, 1, 15, 16, 17, 31, 32, 33, u64::MAX - 1, u64::MAX];
+    for p in 4..63u32 {
+        let v = 1u64 << p;
+        probes.extend([v - 1, v, v + 1]);
+    }
+    let mut last_ix = 0usize;
+    let mut sorted = probes.clone();
+    sorted.sort_unstable();
+    for v in sorted {
+        let i = bucket_index(v);
+        assert!(i < N_BUCKETS);
+        assert!(i >= last_ix, "index not monotonic at {v}");
+        last_ix = i;
+        let (lo, hi) = bucket_bounds(i);
+        assert!(lo <= v && v <= hi, "{v} outside its bucket [{lo}, {hi}]");
+    }
+    // Below the linear max every value is its own bucket.
+    for v in 0..SUB_BUCKETS as u64 {
+        assert_eq!(bucket_bounds(bucket_index(v)), (v, v));
+    }
+}
+
+#[test]
+fn concurrent_recording_with_more_threads_than_shards_loses_nothing() {
+    use std::sync::Arc;
+    let h = Arc::new(Histogram::new());
+    let threads = 16usize; // > the 8 internal shards: slots must share.
+    let per = 2_000u64;
+    std::thread::scope(|s| {
+        for t in 0..threads as u64 {
+            let h = Arc::clone(&h);
+            s.spawn(move || {
+                for i in 0..per {
+                    h.record(t * 1_000 + i);
+                }
+            });
+        }
+    });
+    let snap = h.snapshot();
+    assert_eq!(snap.count, threads as u64 * per);
+    let total: u64 = (0..threads as u64).map(|t| (0..per).map(|i| t * 1_000 + i).sum::<u64>()).sum();
+    assert_eq!(snap.sum, total);
+}
+
+#[test]
+fn request_events_round_trip_through_json_lines() {
+    let events = vec![
+        RequestEvent::Admitted { request_id: 0, prompt_tokens: 0, queue_wait_ms: 0.0 },
+        RequestEvent::Admitted {
+            request_id: (1 << 53) - 1, // f64-exact ceiling of the id space
+            prompt_tokens: 4096,
+            queue_wait_ms: 12345.678,
+        },
+        RequestEvent::Started { request_id: 3, cached_prefix_len: 0, prefill_ms: 0.001 },
+        RequestEvent::FirstToken { request_id: 3, ttft_ms: 9000.25 },
+        RequestEvent::Finished {
+            request_id: 3,
+            finish: "eot".into(),
+            tokens_generated: 48,
+            e2e_ms: 77.5,
+            mixer: "hsm_ab".into(),
+            precision: "f32".into(),
+            drafter: None,
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            cached_prefix_len: 5,
+        },
+        RequestEvent::Finished {
+            request_id: 9,
+            finish: "max_tokens".into(),
+            tokens_generated: 32,
+            e2e_ms: 150.125,
+            mixer: "attn".into(),
+            precision: "int8".into(),
+            drafter: Some("shallow-q:2".into()),
+            spec_rounds: 11,
+            spec_drafted: 44,
+            spec_accepted: 40,
+            cached_prefix_len: 0,
+        },
+    ];
+    for ev in &events {
+        let line = ev.to_json().to_string();
+        assert!(!line.contains('\n'), "one event must be one line");
+        let back = RequestEvent::from_json(&json::parse(&line).unwrap()).unwrap();
+        assert_eq!(&back, ev, "round-trip changed the event");
+    }
+    // Unknown event names are rejected, not silently misparsed.
+    let bogus = json::parse("{\"event\": \"nope\", \"request_id\": 1}").unwrap();
+    assert!(RequestEvent::from_json(&bogus).is_err());
+}
+
+#[test]
+fn prometheus_rendering_is_structurally_sound() {
+    let reg = MetricsRegistry::new();
+    // An untouched registry still renders every family (stable scrape
+    // schema)...
+    let empty = reg.render_prometheus();
+    for family in FAMILIES {
+        assert!(
+            empty.contains(&format!("# TYPE {family} ")),
+            "family {family} missing from empty render"
+        );
+    }
+    // ...and zero-valued histograms are well-formed.
+    assert!(empty.contains("hsm_ttft_seconds_bucket{le=\"+Inf\"} 0"));
+    assert!(empty.contains("hsm_ttft_seconds_count 0"));
+
+    // Populate and re-check: bucket series must be cumulative and agree
+    // with _count; counters must reflect the recorded values.
+    for ns in [5_000u64, 40_000, 40_000, 1_000_000, 25_000_000_000] {
+        reg.record_ttft(Duration::from_nanos(ns));
+    }
+    reg.inc_admitted();
+    reg.inc_admitted();
+    reg.inc_finished("eot");
+    reg.inc_finished("cancelled");
+    reg.add_tokens_generated(96);
+    let text = reg.render_prometheus();
+    assert!(text.contains("hsm_requests_admitted_total 2"));
+    assert!(text.contains("hsm_requests_finished_total{finish=\"eot\"} 1"));
+    assert!(text.contains("hsm_requests_finished_total{finish=\"cancelled\"} 1"));
+    assert!(text.contains("hsm_requests_finished_total{finish=\"timed_out\"} 0"));
+    assert!(text.contains("hsm_tokens_generated_total 96"));
+
+    let mut cum = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("hsm_ttft_seconds_bucket{le=\"") {
+            let (le, count) = rest.split_once("\"} ").unwrap();
+            let count: u64 = count.parse().unwrap();
+            if le != "+Inf" {
+                let le: f64 = le.parse().expect("le must be plain decimal");
+                assert!(le.is_finite() && le >= 0.0);
+            }
+            cum.push(count);
+        }
+    }
+    assert!(cum.len() >= 2, "expected bucket series plus +Inf");
+    assert!(cum.windows(2).all(|w| w[0] <= w[1]), "bucket series must be cumulative");
+    assert_eq!(*cum.last().unwrap(), 5, "+Inf bucket must equal the count");
+    assert!(text.contains("hsm_ttft_seconds_count 5"));
+}
+
+#[test]
+fn stage_cells_register_once_per_key_and_accumulate() {
+    use hsm::obs::StageKey;
+    let reg = MetricsRegistry::new();
+    let key = StageKey {
+        phase: "step",
+        stage: "mixer",
+        mixer: "hsm_ab".into(),
+        precision: "f32".into(),
+    };
+    let a = reg.stage_cell(key.clone());
+    let b = reg.stage_cell(key.clone());
+    a.record(1_000);
+    b.record(2_000);
+    let snap = reg.stage_snapshot();
+    let (_, ns, samples) = snap.iter().find(|(k, _, _)| *k == key).expect("key registered");
+    assert_eq!(*ns, 3_000, "both handles must hit the same cell");
+    assert_eq!(*samples, 2);
+    let text = reg.render_prometheus();
+    assert!(text.contains(
+        "hsm_stage_seconds_total{phase=\"step\",stage=\"mixer\",mixer=\"hsm_ab\",precision=\"f32\"}"
+    ));
+    assert!(text.contains(
+        "hsm_stage_samples_total{phase=\"step\",stage=\"mixer\",mixer=\"hsm_ab\",precision=\"f32\"} 2"
+    ));
+}
