@@ -1,18 +1,26 @@
-//! Bench: int8 weight quantization — resident bytes and end-to-end
-//! serving tok/s for f32 vs int8 weights across model shapes, plus the
+//! Bench: weight quantization — resident bytes and end-to-end serving
+//! tok/s for f32 vs int8 vs int4 weights across model shapes, plus the
 //! quantized shallow drafter (`shallow-q`) vs its f32 twin, with **byte
 //! parity asserted** for every speculative run against plain f32
-//! decoding (drafts may come from int8 weights; served bytes may not
-//! move).
+//! decoding (drafts may come from quantized weights; served bytes may
+//! not move).
 //!
-//! Two workloads:
+//! Four workloads:
 //!
 //! 1. **Shape sweep** — the Table-3 prompt suite served at temperature
-//!    0.8 on the same seeded checkpoint loaded twice, once at each
-//!    precision: resident weight bytes (ratio asserted ≤ 0.30), tok/s,
-//!    and the int8/f32 speedup per shape.  The two precisions produce
-//!    different bytes by design; the tolerance suite pins how different.
-//! 2. **Drafter duel** — `shallow` vs `shallow-q` on the f32 serving
+//!    0.8 on the same seeded checkpoint loaded three times, once at
+//!    each precision: resident weight bytes (int8 ratio asserted
+//!    ≤ 0.30, int4 ≤ 0.20), tok/s, and each precision's speedup per
+//!    shape.  The precisions produce different bytes by design; the
+//!    tolerance suite pins how different.
+//! 2. **Hoist A/B** — quantized decoding with the hoisted activation
+//!    quantization on vs off (per-call), int8 and int4, **digest
+//!    parity asserted**: hoisting reuses the one `(q, scale)` image a
+//!    layer's consumers share, so it may only change speed, never bits.
+//! 3. **Prefix-cache footprint** — hydrated vs at-rest snapshot bytes
+//!    per precision: quantized models store ring history as int8
+//!    images at rest, f32 models store full rows.
+//! 4. **Drafter duel** — `shallow` vs `shallow-q` on the f32 serving
 //!    model: acceptance rate and accepted tokens per verify round, with
 //!    both digests asserted equal to the plain f32 digest (verification
 //!    always scores f32, so quantized drafts can cost acceptance but
@@ -27,9 +35,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use hsm::config::{LayerInfo, Manifest};
-use hsm::generation::{SampleCfg, TABLE3_PROMPTS};
-use hsm::infer::{weights, DrafterKind, Model, ModelWeights, Precision, SpecCfg, SpecStats};
-use hsm::serve::{serve, Request, ServeCfg};
+use hsm::generation::{argmax, SampleCfg, TABLE3_PROMPTS};
+use hsm::infer::{
+    weights, DecodeSession, DrafterKind, Model, ModelWeights, Precision, SpecCfg, SpecStats,
+};
+use hsm::serve::{serve, PrefixCache, Request, ServeCfg};
 use hsm::tokenizer::Tokenizer;
 
 fn layers_for(kind: &str, layers: usize, ffn: usize) -> Vec<LayerInfo> {
@@ -43,21 +53,23 @@ fn layers_for(kind: &str, layers: usize, ffn: usize) -> Vec<LayerInfo> {
         .collect()
 }
 
-/// The same seeded checkpoint at both precisions.
-fn model_pair(
+/// The same seeded checkpoint at all three precisions.
+fn model_triple(
     kind: &str,
     dim: usize,
     layers: usize,
     ctx: usize,
     vocab: usize,
     seed: u64,
-) -> (Arc<Model>, Arc<Model>) {
+) -> (Arc<Model>, Arc<Model>, Arc<Model>) {
     let m = Manifest::synthetic(kind, layers_for(kind, layers, 2 * dim), dim, ctx, vocab, 1);
     let flat = weights::seeded_flat(&m, seed);
     let f = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap();
-    let w = ModelWeights::from_flat(&m, &flat).unwrap();
-    let q = Model::shared_with_precision(m, w, Precision::Int8).unwrap();
-    (f, q)
+    let w8 = ModelWeights::from_flat(&m, &flat).unwrap();
+    let q8 = Model::shared_with_precision(m.clone(), w8, Precision::Int8).unwrap();
+    let w4 = ModelWeights::from_flat(&m, &flat).unwrap();
+    let q4 = Model::shared_with_precision(m, w4, Precision::Int4).unwrap();
+    (f, q8, q4)
 }
 
 fn fnv(digest: &mut u64, s: &str) {
@@ -130,40 +142,148 @@ fn main() {
         stop_at_eot: true,
     };
 
-    // Shape sweep: f32 vs int8 resident bytes + tok/s.  Larger dims
-    // favour int8 (a quarter of the weight traffic per matvec row);
-    // the smallest shape is where f32 may still win on overhead.
+    // Shape sweep: f32 vs int8 vs int4 resident bytes + tok/s.  Larger
+    // dims favour the quantized tiers (a quarter / an eighth of the
+    // weight traffic per matvec row); the smallest shape is where f32
+    // may still win on overhead.
     let mut shapes_json = Vec::new();
     for (kind, dim, layers) in [("ab", 64usize, 2usize), ("ab", 192, 4), ("attn", 128, 3)] {
-        let (f, q) = model_pair(kind, dim, layers, ctx, tok.vocab_size(), 17);
-        let (fb, qb) = (f.resident_weight_bytes(), q.resident_weight_bytes());
-        let ratio = qb as f64 / fb as f64;
+        let (f, q8, q4) = model_triple(kind, dim, layers, ctx, tok.vocab_size(), 17);
+        let (fb, q8b, q4b) = (
+            f.resident_weight_bytes(),
+            q8.resident_weight_bytes(),
+            q4.resident_weight_bytes(),
+        );
+        let ratio8 = q8b as f64 / fb as f64;
+        let ratio4 = q4b as f64 / fb as f64;
         assert!(
-            ratio <= 0.30,
-            "[{kind} d{dim}] int8 resident ratio {ratio:.3} exceeds 0.30 ({qb} / {fb} bytes)"
+            ratio8 <= 0.30,
+            "[{kind} d{dim}] int8 resident ratio {ratio8:.3} exceeds 0.30 ({q8b} / {fb} bytes)"
+        );
+        assert!(
+            ratio4 <= 0.20,
+            "[{kind} d{dim}] int4 resident ratio {ratio4:.3} exceeds 0.20 ({q4b} / {fb} bytes)"
         );
         let rf = run(&f, &tok, &prompts, &sample, None);
-        let rq = run(&q, &tok, &prompts, &sample, None);
+        let r8 = run(&q8, &tok, &prompts, &sample, None);
+        let r4 = run(&q4, &tok, &prompts, &sample, None);
         assert!(rf.tokens > 0, "[{kind} d{dim}] f32 run produced no tokens");
         let f_tps = rf.tokens as f64 / rf.secs.max(1e-9);
-        let q_tps = rq.tokens as f64 / rq.secs.max(1e-9);
+        let q8_tps = r8.tokens as f64 / r8.secs.max(1e-9);
+        let q4_tps = r4.tokens as f64 / r4.secs.max(1e-9);
         println!(
             "[{kind} d{dim} L{layers}] f32 {fb} B @ {f_tps:.0} tok/s — \
-             int8 {qb} B ({ratio:.3}×) @ {q_tps:.0} tok/s ({:.2}× f32)",
-            q_tps / f_tps.max(1e-9)
+             int8 {q8b} B ({ratio8:.3}×) @ {q8_tps:.0} tok/s ({:.2}× f32) — \
+             int4 {q4b} B ({ratio4:.3}×) @ {q4_tps:.0} tok/s ({:.2}× f32)",
+            q8_tps / f_tps.max(1e-9),
+            q4_tps / f_tps.max(1e-9)
         );
         shapes_json.push(format!(
             "    {{\"kind\": \"{kind}\", \"dim\": {dim}, \"layers\": {layers}, \
-             \"f32_resident_bytes\": {fb}, \"int8_resident_bytes\": {qb}, \
-             \"resident_ratio\": {ratio:.4}, \"f32_tok_per_s\": {f_tps:.1}, \
-             \"int8_tok_per_s\": {q_tps:.1}, \"int8_speedup\": {:.3}}}",
-            q_tps / f_tps.max(1e-9)
+             \"f32_resident_bytes\": {fb}, \"int8_resident_bytes\": {q8b}, \
+             \"int4_resident_bytes\": {q4b}, \"resident_ratio\": {ratio8:.4}, \
+             \"int4_resident_ratio\": {ratio4:.4}, \"f32_tok_per_s\": {f_tps:.1}, \
+             \"int8_tok_per_s\": {q8_tps:.1}, \"int8_speedup\": {:.3}, \
+             \"int4_tok_per_s\": {q4_tps:.1}, \"int4_speedup\": {:.3}}}",
+            q8_tps / f_tps.max(1e-9),
+            q4_tps / f_tps.max(1e-9)
         ));
+    }
+
+    // Hoist A/B: the hoisted activation-quantization slab on vs off
+    // (per-call re-quantization), driven through a raw DecodeSession so
+    // nothing but the decode loop is timed.  Hoisting shares one
+    // `(q, scale)` image across a layer's consumers (attn Q/K/V: 3 → 1
+    // quantize_row per layer; mat/gate1: 2 → 1 with the ring push) and
+    // must be bit-identical — the digest folds every logit of every
+    // step.
+    let hoist_steps = 256usize.min(ctx - 8);
+    let mut hoist_json = Vec::new();
+    for (label, kind, dim, layers) in [("int8", "attn", 128usize, 3usize), ("int4", "attn", 128, 3)]
+    {
+        let (_, q8, q4) = model_triple(kind, dim, layers, ctx, tok.vocab_size(), 17);
+        let m = if label == "int4" { q4 } else { q8 };
+        let mut outs = Vec::new();
+        for hoist in [true, false] {
+            let mut sess = DecodeSession::new(&m.manifest, None).unwrap();
+            sess.set_quant_hoist(hoist);
+            let mut token = 7u32;
+            let mut digest = 0xcbf2_9ce4_8422_2325u64;
+            let t0 = Instant::now();
+            for _ in 0..hoist_steps {
+                let logits = sess.step(&m, token).unwrap();
+                token = argmax(logits);
+                for v in logits {
+                    digest = (digest ^ u64::from(v.to_bits())).wrapping_mul(0x100_0000_01b3);
+                }
+            }
+            outs.push((t0.elapsed().as_secs_f64(), digest));
+        }
+        let ((on_secs, on_digest), (off_secs, off_digest)) = (outs[0], outs[1]);
+        assert_eq!(
+            on_digest, off_digest,
+            "[{label} {kind} d{dim}] hoisted activation quantization changed decoded bits"
+        );
+        let on_tps = hoist_steps as f64 / on_secs.max(1e-9);
+        let off_tps = hoist_steps as f64 / off_secs.max(1e-9);
+        println!(
+            "[hoist] {label} {kind} d{dim}: per-call {off_tps:.0} tok/s — \
+             hoisted {on_tps:.0} tok/s ({:.3}×, parity ok)",
+            on_tps / off_tps.max(1e-9)
+        );
+        hoist_json.push(format!(
+            "    {{\"precision\": \"{label}\", \"kind\": \"{kind}\", \"dim\": {dim}, \
+             \"layers\": {layers}, \"steps\": {hoist_steps}, \
+             \"per_call_tok_per_s\": {off_tps:.1}, \"hoisted_tok_per_s\": {on_tps:.1}, \
+             \"hoist_speedup\": {:.3}, \"parity\": true}}",
+            on_tps / off_tps.max(1e-9)
+        ));
+    }
+
+    // Prefix-cache footprint: hydrated vs at-rest snapshot bytes per
+    // precision.  Quantized models compact ring history down to the
+    // int8 images at rest (restores are byte-exact); f32 snapshots are
+    // stored as-is.
+    let mut cache_json = Vec::new();
+    {
+        let (f, q8, q4) = model_triple("ab", 192, 4, ctx, tok.vocab_size(), 17);
+        for (label, m) in [("f32", &f), ("int8", &q8), ("int4", &q4)] {
+            let mut sess = DecodeSession::new(&m.manifest, None).unwrap();
+            let mut toks = Vec::new();
+            let mut token = 7u32;
+            for _ in 0..48 {
+                toks.push(token);
+                token = argmax(sess.step(m, token).unwrap());
+            }
+            let snap = sess.snapshot();
+            let hydrated = snap.resident_bytes();
+            let cache = PrefixCache::new(m.fingerprint(), 4);
+            cache.insert(m.fingerprint(), &toks, snap);
+            let s = cache.stats();
+            let at_rest = s.resident_bytes;
+            let (len, restored) =
+                cache.lookup(m.fingerprint(), &toks).expect("inserted prefix must hit");
+            assert_eq!(len, toks.len());
+            assert!(!restored.is_compacted(), "lookup must hand out hydrated state");
+            let ratio = at_rest as f64 / (hydrated as f64).max(1e-9);
+            println!(
+                "[cache] {label}: hydrated {hydrated} B — at rest {at_rest} B ({ratio:.3}×), \
+                 {} quantized entries",
+                s.quantized_entries
+            );
+            cache_json.push(format!(
+                "    {{\"precision\": \"{label}\", \"prefix_tokens\": {}, \
+                 \"hydrated_bytes\": {hydrated}, \"at_rest_bytes\": {at_rest}, \
+                 \"at_rest_ratio\": {ratio:.4}, \"quantized_entries\": {}}}",
+                toks.len(),
+                s.quantized_entries
+            ));
+        }
     }
 
     // Drafter duel on the f32 serving model: quantized drafts must keep
     // served bytes identical to plain f32 decoding — the whole point.
-    let (f, _) = model_pair("ab", 64, 2, ctx, tok.vocab_size(), 17);
+    let (f, _, _) = model_triple("ab", 64, 2, ctx, tok.vocab_size(), 17);
     let plain = run(&f, &tok, &prompts, &sample, None);
     let plain_tps = plain.tokens as f64 / plain.secs.max(1e-9);
     let mut drafters_json = Vec::new();
@@ -216,10 +336,19 @@ fn main() {
     json.push_str("  \"shapes\": [\n");
     json.push_str(&shapes_json.join(",\n"));
     json.push_str("\n  ],\n");
+    json.push_str("  \"hoist\": [\n");
+    json.push_str(&hoist_json.join(",\n"));
+    json.push_str("\n  ],\n");
+    json.push_str("  \"prefix_cache\": [\n");
+    json.push_str(&cache_json.join(",\n"));
+    json.push_str("\n  ],\n");
     json.push_str("  \"drafters\": [\n");
     json.push_str(&drafters_json.join(",\n"));
     json.push_str("\n  ],\n");
-    json.push_str("  \"resident_ratio_le_030\": true,\n  \"parity\": true\n");
+    json.push_str(
+        "  \"resident_ratio_le_030\": true,\n  \"int4_resident_ratio_le_020\": true,\n  \
+         \"hoist_parity\": true,\n  \"parity\": true\n",
+    );
     json.push_str("}\n");
     std::fs::write(&out_path, &json).expect("writing bench json");
     println!("\nwrote {out_path}");

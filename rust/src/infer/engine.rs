@@ -28,23 +28,42 @@ use anyhow::{bail, Result};
 
 use super::speculate::{Drafter, DrafterKind, NGramDrafter, ShallowDrafter};
 use super::tensor::{
-    add_assign, layer_norm, matmul, matmul_q, matmul_t, matmul_t_q, matvec, matvec_q, matvec_t,
-    matvec_t_q, quantize_row, relu_inplace, softmax_inplace, tanh_inplace,
+    add_assign, layer_norm, matmul, matmul_q, matmul_q4, matmul_t, matmul_t_q, matmul_t_q4,
+    matvec, matvec_q, matvec_q4, matvec_t, matvec_t_q, matvec_t_q4, quantize_row, relu_inplace,
+    softmax_inplace, tanh_inplace,
 };
 use super::weights::{
-    LayerWeights, ModelWeights, Precision, QuantLayerWeights, QuantMatrix, QuantWeights,
+    LayerWeights, ModelWeights, Precision, Quant4LayerWeights, Quant4Weights, QuantLayerWeights,
+    QuantMatrix, QuantMatrix4, QuantWeights,
 };
 use super::Decoder;
 use crate::config::{LayerInfo, Manifest};
 use crate::obs::{MetricsRegistry, Phase, StageObs};
 
 /// Ring buffer of the last `capacity` activation vectors.
+///
+/// Quantized stepping additionally stores each row's int8 image
+/// ([`Self::push_q`]): the f32 row is then **defined as** the
+/// dequantization `q·s` of that image, so downstream quantized matvecs
+/// can reuse `(q, s)` directly ([`Self::back_q`]) and a snapshot can
+/// drop the f32 rows entirely ([`Self::compact`]) and rebuild them
+/// byte-exactly ([`Self::hydrate`]) — the prefix cache's at-rest form.
+/// F32 stepping never touches the quantized side, so its rings (and
+/// their bytes) are exactly as before.
 #[derive(Debug, Clone)]
 pub struct Ring {
     buf: Vec<Vec<f32>>,
     capacity: usize,
     next: usize,
     filled: usize,
+    /// Per-slot int8 activation rows; empty until the first
+    /// [`Self::push_q`] (f32 stepping allocates nothing).
+    qrow: Vec<Vec<i8>>,
+    /// Per-slot activation scales (pairs with `qrow`).
+    qscale: Vec<f32>,
+    /// Per-slot validity: a plain [`Self::push`] invalidates the slot's
+    /// quantized image instead of recomputing it.
+    qok: Vec<bool>,
 }
 
 impl Ring {
@@ -54,11 +73,41 @@ impl Ring {
             capacity: capacity.max(1),
             next: 0,
             filled: 0,
+            qrow: Vec::new(),
+            qscale: Vec::new(),
+            qok: Vec::new(),
         }
     }
 
     fn push(&mut self, v: &[f32]) {
         self.buf[self.next].copy_from_slice(v);
+        if !self.qok.is_empty() {
+            self.qok[self.next] = false;
+        }
+        self.next = (self.next + 1) % self.capacity;
+        self.filled = (self.filled + 1).min(self.capacity);
+    }
+
+    fn alloc_q(&mut self, dim: usize) {
+        self.qrow = vec![vec![0i8; dim]; self.capacity];
+        self.qscale = vec![0.0; self.capacity];
+        self.qok = vec![false; self.capacity];
+    }
+
+    /// Push a row given as its int8 quantization: the slot's f32
+    /// content becomes the dequantization `q·s` (NOT the pre-quantized
+    /// row), which makes the stored image canonical — compacting and
+    /// rehydrating reproduces the f32 bytes exactly.
+    fn push_q(&mut self, q: &[i8], s: f32) {
+        if self.qrow.is_empty() {
+            self.alloc_q(q.len());
+        }
+        for (o, &qi) in self.buf[self.next].iter_mut().zip(q) {
+            *o = qi as f32 * s;
+        }
+        self.qrow[self.next].copy_from_slice(q);
+        self.qscale[self.next] = s;
+        self.qok[self.next] = true;
         self.next = (self.next + 1) % self.capacity;
         self.filled = (self.filled + 1).min(self.capacity);
     }
@@ -72,20 +121,93 @@ impl Ring {
         Some(&self.buf[idx])
     }
 
+    /// The int8 image of the row pushed `age` steps ago, when that row
+    /// arrived via [`Self::push_q`].
+    fn back_q(&self, age: usize) -> Option<(&[i8], f32)> {
+        if age == 0 || age > self.filled || age > self.capacity || self.qok.is_empty() {
+            return None;
+        }
+        let idx = (self.next + self.capacity - age) % self.capacity;
+        if !self.qok[idx] {
+            return None;
+        }
+        Some((&self.qrow[idx], self.qscale[idx]))
+    }
+
     /// Forget everything (stale contents become unreadable).
     fn clear(&mut self) {
         self.next = 0;
         self.filled = 0;
+        self.qok.fill(false);
+    }
+
+    /// True when [`Self::compact`] dropped the f32 rows.
+    fn is_compacted(&self) -> bool {
+        !self.qrow.is_empty() && self.buf.iter().any(Vec::is_empty)
+    }
+
+    /// Drop the f32 rows when every *readable* slot (ages `1..=filled`)
+    /// carries a quantized image — roughly quarters a cached snapshot's
+    /// ring bytes.  No-op otherwise (f32 stepping, partial images), so
+    /// callers can invoke it unconditionally.
+    fn compact(&mut self) {
+        if self.qrow.is_empty() || self.is_compacted() || self.qrow.first().map_or(0, Vec::len) == 0
+        {
+            return;
+        }
+        for age in 1..=self.filled.min(self.capacity) {
+            let idx = (self.next + self.capacity - age) % self.capacity;
+            if !self.qok[idx] {
+                return;
+            }
+        }
+        for row in &mut self.buf {
+            *row = Vec::new();
+        }
+    }
+
+    /// Rebuild the f32 rows of a compacted ring from the int8 images —
+    /// the exact bytes [`Self::push_q`] wrote (same `q·s` expression),
+    /// so a hydrate-after-compact round trip is lossless.  Unreadable
+    /// slots rehydrate to zeros, matching a fresh ring.
+    fn hydrate(&mut self) {
+        if !self.is_compacted() {
+            return;
+        }
+        let dim = self.qrow.first().map_or(0, Vec::len);
+        for (((row, q), &s), &ok) in
+            self.buf.iter_mut().zip(&self.qrow).zip(&self.qscale).zip(&self.qok)
+        {
+            row.clear();
+            if ok {
+                row.extend(q.iter().map(|&qi| qi as f32 * s));
+            } else {
+                row.resize(dim, 0.0);
+            }
+        }
     }
 
     /// Copy another ring's contents into this one without reallocating
     /// (the derived `Clone::clone_from` would rebuild the row vecs).
     /// Both rings must share capacity and dim — always true for rings
-    /// of the same session layer.
+    /// of the same session layer — and neither side is compacted
+    /// (session rings always carry their f32 rows).
     fn copy_from(&mut self, other: &Ring) {
         debug_assert_eq!(self.capacity, other.capacity);
         for (dst, src) in self.buf.iter_mut().zip(&other.buf) {
             dst.copy_from_slice(src);
+        }
+        if other.qrow.is_empty() {
+            self.qok.fill(false);
+        } else {
+            if self.qrow.is_empty() {
+                self.alloc_q(other.qrow.first().map_or(0, Vec::len));
+            }
+            for (dst, src) in self.qrow.iter_mut().zip(&other.qrow) {
+                dst.copy_from_slice(src);
+            }
+            self.qscale.copy_from_slice(&other.qscale);
+            self.qok.copy_from_slice(&other.qok);
         }
         self.next = other.next;
         self.filled = other.filled;
@@ -182,6 +304,55 @@ impl SessionState {
             .sum()
     }
 
+    /// Approximate heap bytes this state holds: f32 ring rows + int8
+    /// ring images + KV caches.  The prefix cache's byte accounting —
+    /// a [`Self::compact`]ed quantized snapshot reports roughly a
+    /// quarter of its hydrated self.
+    pub fn resident_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LayerState::Hsm(r) => {
+                    r.buf.iter().map(|b| b.len() * 4).sum::<usize>()
+                        + r.qrow.iter().map(Vec::len).sum::<usize>()
+                        + r.qscale.len() * 4
+                        + r.qok.len()
+                }
+                LayerState::Attn { k, v } => (k.len() + v.len()) * 4,
+            })
+            .sum()
+    }
+
+    /// True when at least one ring dropped its f32 rows in favour of
+    /// the int8 images — how the prefix cache classifies an entry's
+    /// at-rest precision.
+    pub fn is_compacted(&self) -> bool {
+        self.layers.iter().any(|l| matches!(l, LayerState::Hsm(r) if r.is_compacted()))
+    }
+
+    /// Drop the f32 ring rows wherever a complete int8 image exists
+    /// (quantized-precision decoding records one per pushed row).  A
+    /// no-op for f32-decoded state, so the prefix cache calls it
+    /// unconditionally before storing a snapshot.  A compacted state
+    /// fails [`Self::validate`] — [`Self::hydrate`] before use.
+    pub fn compact(&mut self) {
+        for l in &mut self.layers {
+            if let LayerState::Hsm(r) = l {
+                r.compact();
+            }
+        }
+    }
+
+    /// Rebuild the f32 ring rows of a compacted state — byte-exact, as
+    /// dequantization is the same `q·s` every [`Ring::push_q`] wrote.
+    pub fn hydrate(&mut self) {
+        for l in &mut self.layers {
+            if let LayerState::Hsm(r) = l {
+                r.hydrate();
+            }
+        }
+    }
+
     /// Structural compatibility with a manifest: layer count, kinds and
     /// dimensions must match, and internal invariants (ring fill, KV
     /// row count vs position) must hold.  Structure alone cannot tell
@@ -247,20 +418,26 @@ impl SessionState {
 ///
 /// Weights are resident at one [`Precision`], chosen at construction:
 /// * [`Precision::F32`] — the checkpoint representation, byte-exact
-///   decoding.  An int8 [`QuantWeights`] shadow is built lazily the
-///   first time something asks for it (the `shallow-q` drafter).
+///   decoding.  A quantized shadow ([`QuantWeights`] or
+///   [`Quant4Weights`]) is built lazily the first time something asks
+///   for it (the `shallow-q` drafter).
 /// * [`Precision::Int8`] — weights are quantized once at load time and
 ///   the f32 copy is **dropped**, so the resident footprint really is
 ///   the quantized one (≈0.27x at dim 64); decoding dispatches to the
 ///   int8 kernel tier.
+/// * [`Precision::Int4`] — as int8, but group-wise 4-bit (group 32,
+///   ≈0.16x resident); decoding dispatches to the int4 kernel tier.
 pub struct Model {
     pub manifest: Manifest,
-    /// F32 weights; `None` for pure-int8 models (dropped after
+    /// F32 weights; `None` for pure-quantized models (dropped after
     /// quantization so the memory saving is real).
     weights: Option<ModelWeights>,
     /// Int8 shadow: pre-built for int8 models, lazily built from the
     /// f32 weights otherwise (the quantized drafter's weight set).
     quant: OnceLock<QuantWeights>,
+    /// Int4 shadow: pre-built for int4 models, lazily built from the
+    /// f32 weights otherwise.
+    quant4: OnceLock<Quant4Weights>,
     precision: Precision,
     /// Lazily computed content fingerprint (manifest shape + weight
     /// bits + precision); keys the serving stack's prefix cache and
@@ -276,9 +453,10 @@ impl Model {
         Self::with_precision(manifest, weights, Precision::F32)
     }
 
-    /// Validate weight/manifest consistency; for [`Precision::Int8`],
-    /// quantize at load time and drop the f32 copy (checkpoints on disk
-    /// are untouched — quantization is a load-time representation).
+    /// Validate weight/manifest consistency; for [`Precision::Int8`] /
+    /// [`Precision::Int4`], quantize at load time and drop the f32 copy
+    /// (checkpoints on disk are untouched — quantization is a load-time
+    /// representation).
     pub fn with_precision(
         manifest: Manifest,
         weights: ModelWeights,
@@ -312,6 +490,7 @@ impl Model {
             }
         }
         let quant = OnceLock::new();
+        let quant4 = OnceLock::new();
         let fingerprint = OnceLock::new();
         let weights = match precision {
             Precision::F32 => Some(weights),
@@ -326,8 +505,17 @@ impl Model {
                     .expect("fresh OnceLock");
                 None
             }
+            Precision::Int4 => {
+                fingerprint
+                    .set(Self::fingerprint_of(&manifest, &weights, precision))
+                    .expect("fresh OnceLock");
+                quant4
+                    .set(Quant4Weights::from_weights(&manifest, &weights))
+                    .expect("fresh OnceLock");
+                None
+            }
         };
-        Ok(Model { manifest, weights, quant, precision, fingerprint })
+        Ok(Model { manifest, weights, quant, quant4, precision, fingerprint })
     }
 
     /// `new`, wrapped for sharing.
@@ -342,6 +530,42 @@ impl Model {
         precision: Precision,
     ) -> Result<Arc<Self>> {
         Ok(Arc::new(Self::with_precision(manifest, weights, precision)?))
+    }
+
+    /// Wrap a **pre-built** int4 weight set directly — no f32 weights
+    /// are ever resident.  The tolerance harness's injection path: it
+    /// corrupts group scales *after* quantization to prove its pins
+    /// trip on exactly the failure class a broken quantizer produces.
+    /// The fingerprint folds the quantized bytes themselves
+    /// ([`Quant4Weights::content_hash`]), so two injected models differ
+    /// whenever any packed nibble or group scale does.
+    pub fn from_quant4(manifest: Manifest, q4: Quant4Weights) -> Result<Arc<Self>> {
+        if q4.layers.len() != manifest.layers.len() {
+            bail!(
+                "int4 weights have {} layers, manifest {}",
+                q4.layers.len(),
+                manifest.layers.len()
+            );
+        }
+        let fingerprint = OnceLock::new();
+        {
+            use crate::util::hash;
+            let mut h = hash::FNV_OFFSET;
+            hash::fold_bytes(&mut h, manifest.to_json().to_string().as_bytes());
+            hash::fold(&mut h, q4.content_hash());
+            hash::fold_bytes(&mut h, Precision::Int4.label().as_bytes());
+            fingerprint.set(h).expect("fresh OnceLock");
+        }
+        let quant4 = OnceLock::new();
+        quant4.set(q4).expect("fresh OnceLock");
+        Ok(Arc::new(Model {
+            manifest,
+            weights: None,
+            quant: OnceLock::new(),
+            quant4,
+            precision: Precision::Int4,
+            fingerprint,
+        }))
     }
 
     fn fingerprint_of(manifest: &Manifest, weights: &ModelWeights, precision: Precision) -> u64 {
@@ -364,11 +588,12 @@ impl Model {
     /// Computed lazily on first use for f32 models (an FNV-1a pass over
     /// the manifest's canonical JSON and every weight bit is
     /// O(parameters) — paths that never snapshot never pay it), then
-    /// cached for the model's lifetime.  Int8 models stamp it eagerly at
-    /// load time, before the f32 weights are dropped.
+    /// cached for the model's lifetime.  Quantized models stamp it
+    /// eagerly at load time, before the f32 weights are dropped.
     pub fn fingerprint(&self) -> u64 {
         *self.fingerprint.get_or_init(|| {
-            let w = self.weights.as_ref().expect("int8 models stamp their fingerprint at load");
+            let w =
+                self.weights.as_ref().expect("quantized models stamp their fingerprint at load");
             Self::fingerprint_of(&self.manifest, w, self.precision)
         })
     }
@@ -386,10 +611,27 @@ impl Model {
     /// The int8 weight set: resident for int8 models, built (once) from
     /// the f32 weights on first use otherwise — the `shallow-q`
     /// drafter's path, which drafts on int8 while verify stays f32.
+    /// Panics for int4 models (no f32 weights to quantize from).
     pub fn quant(&self) -> &QuantWeights {
         self.quant.get_or_init(|| {
-            let w = self.weights.as_ref().expect("a model holds f32 or pre-built int8 weights");
+            let w = self
+                .weights
+                .as_ref()
+                .expect("an int8 shadow needs resident f32 or pre-built int8 weights");
             QuantWeights::from_weights(&self.manifest, w)
+        })
+    }
+
+    /// The int4 weight set: resident for int4 models, built (once) from
+    /// the f32 weights on first use otherwise.  Panics for int8 models
+    /// (no f32 weights to quantize from).
+    pub fn quant4(&self) -> &Quant4Weights {
+        self.quant4.get_or_init(|| {
+            let w = self
+                .weights
+                .as_ref()
+                .expect("an int4 shadow needs resident f32 or pre-built int4 weights");
+            Quant4Weights::from_weights(&self.manifest, w)
         })
     }
 
@@ -399,6 +641,7 @@ impl Model {
         match self.precision {
             Precision::F32 => self.weights.as_ref().map_or(0, ModelWeights::resident_bytes),
             Precision::Int8 => self.quant().resident_bytes(),
+            Precision::Int4 => self.quant4().resident_bytes(),
         }
     }
 
@@ -409,6 +652,7 @@ impl Model {
                 self.weights.as_ref().expect("f32 stepping needs resident f32 weights"),
             ),
             Precision::Int8 => WeightsRef::I8(self.quant()),
+            Precision::Int4 => WeightsRef::I4(self.quant4()),
         }
     }
 
@@ -437,14 +681,16 @@ impl Model {
 // mix scalars) are f32 in both representations, so everything outside
 // the matmuls is untouched.
 
-/// One weight matrix at either precision.  Orientation is the call
+/// One weight matrix at any precision.  Orientation is the call
 /// site's contract, as with the raw slices before: `lin` expects the
 /// f32 form in-major (`[k, n]`, the [`matvec`] layout) and `lin_t`
-/// out-major (`[n, k]`); the int8 form is always out-major.
+/// out-major (`[n, k]`); the quantized forms are always out-major
+/// (int4 rows packed two nibbles per byte, one scale per 32-group).
 #[derive(Clone, Copy)]
 enum MatRef<'a> {
     F32(&'a [f32]),
     I8 { q: &'a [i8], scale: &'a [f32] },
+    I4 { q: &'a [u8], scale: &'a [f32] },
 }
 
 impl<'a> MatRef<'a> {
@@ -452,9 +698,15 @@ impl<'a> MatRef<'a> {
         MatRef::I8 { q: &m.q, scale: &m.scale }
     }
 
+    fn i4(m: &'a QuantMatrix4) -> Self {
+        MatRef::I4 { q: &m.q, scale: &m.scale }
+    }
+
     /// Sub-view of per-head block `hix` when heads are stacked along
-    /// the weight tensor (`[H, k, n]` f32 in-major / `[H·n, k]` int8
-    /// rows): the gate2/fusion per-head matmuls.
+    /// the weight tensor (`[H, k, n]` f32 in-major / `[H·n, k]`
+    /// quantized rows): the gate2/fusion per-head matmuls.  Int4 rows
+    /// are byte-aligned (`⌈k/2⌉` bytes, `⌈k/32⌉` scales per row), so
+    /// the block boundaries stay clean for any k.
     fn head(self, hix: usize, k: usize, n: usize) -> MatRef<'a> {
         match self {
             MatRef::F32(w) => MatRef::F32(&w[hix * k * n..(hix + 1) * k * n]),
@@ -462,6 +714,14 @@ impl<'a> MatRef<'a> {
                 q: &q[hix * n * k..(hix + 1) * n * k],
                 scale: &scale[hix * n..(hix + 1) * n],
             },
+            MatRef::I4 { q, scale } => {
+                let kb = super::tensor::q4_row_bytes(k);
+                let groups = super::tensor::q4_row_groups(k);
+                MatRef::I4 {
+                    q: &q[hix * n * kb..(hix + 1) * n * kb],
+                    scale: &scale[hix * n * groups..(hix + 1) * n * groups],
+                }
+            }
         }
     }
 }
@@ -575,6 +835,43 @@ impl<'a> LayerRef<'a> {
             bo: &mw.bo,
         }
     }
+
+    fn i4(lw: &'a Quant4LayerWeights) -> Self {
+        let mw = &lw.mixer;
+        LayerRef {
+            ln1_g: &lw.ln1_g,
+            ln1_b: &lw.ln1_b,
+            ln2_g: &lw.ln2_g,
+            ln2_b: &lw.ln2_b,
+            ffn_w1: MatRef::i4(&lw.ffn_w1),
+            ffn_b1: &lw.ffn_b1,
+            ffn_w2: MatRef::i4(&lw.ffn_w2),
+            ffn_b2: &lw.ffn_b2,
+            mix_a: &mw.mix_a,
+            mix_b: &mw.mix_b,
+            mix_mat_a: MatRef::i4(&mw.mix_mat_a),
+            mix_mat_b: MatRef::i4(&mw.mix_mat_b),
+            mix_bias: &mw.mix_bias,
+            gate_w1: MatRef::i4(&mw.gate_w1),
+            gate_b1: &mw.gate_b1,
+            gate_w2: MatRef::i4(&mw.gate_w2),
+            gate_b2: &mw.gate_b2,
+            gate_w: MatRef::i4(&mw.gate_w),
+            gate_b: &mw.gate_b,
+            fuse_w1: MatRef::i4(&mw.fuse_w1),
+            fuse_b1: &mw.fuse_b1,
+            fuse_w2: MatRef::i4(&mw.fuse_w2),
+            fuse_b2: &mw.fuse_b2,
+            wq: MatRef::i4(&mw.wq),
+            bq: &mw.bq,
+            wk: MatRef::i4(&mw.wk),
+            bk: &mw.bk,
+            wv: MatRef::i4(&mw.wv),
+            bv: &mw.bv,
+            wo: MatRef::i4(&mw.wo),
+            bo: &mw.bo,
+        }
+    }
 }
 
 /// The full weight set at the precision a step decodes at.
@@ -582,6 +879,7 @@ impl<'a> LayerRef<'a> {
 enum WeightsRef<'a> {
     F32(&'a ModelWeights),
     I8(&'a QuantWeights),
+    I4(&'a Quant4Weights),
 }
 
 impl<'a> WeightsRef<'a> {
@@ -589,6 +887,7 @@ impl<'a> WeightsRef<'a> {
         match *self {
             WeightsRef::F32(w) => LayerRef::f32(&w.layers[l]),
             WeightsRef::I8(w) => LayerRef::i8(&w.layers[l]),
+            WeightsRef::I4(w) => LayerRef::i4(&w.layers[l]),
         }
     }
 
@@ -596,20 +895,23 @@ impl<'a> WeightsRef<'a> {
         match *self {
             WeightsRef::F32(w) => (&w.lnf_g, &w.lnf_b),
             WeightsRef::I8(w) => (&w.lnf_g, &w.lnf_b),
+            WeightsRef::I4(w) => (&w.lnf_g, &w.lnf_b),
         }
     }
 
     /// The `[V, D]` tied embedding as seen by the logit projection
-    /// (out-major in both representations — pair with `lin_t`).
+    /// (out-major in every representation — pair with `lin_t`).
     fn tok_emb(&self) -> MatRef<'a> {
         match *self {
             WeightsRef::F32(w) => MatRef::F32(&w.tok_emb),
             WeightsRef::I8(w) => MatRef::i8(&w.tok_emb),
+            WeightsRef::I4(w) => MatRef::i4(&w.tok_emb),
         }
     }
 
-    /// `x = tok_emb[token] + pos_emb[pos]` (int8 rows dequantize on the
-    /// fly — two rows per token, a rounding error next to the matmuls).
+    /// `x = tok_emb[token] + pos_emb[pos]` (quantized rows dequantize
+    /// on the fly — two rows per token, a rounding error next to the
+    /// matmuls).
     fn embed(&self, token: usize, pos: usize, d: usize, x: &mut [f32]) {
         match *self {
             WeightsRef::F32(w) => {
@@ -623,12 +925,17 @@ impl<'a> WeightsRef<'a> {
                 w.tok_emb.dequant_row(token, x);
                 w.pos_emb.dequant_row_add(pos, x);
             }
+            WeightsRef::I4(w) => {
+                w.tok_emb.dequant_row(token, x);
+                w.pos_emb.dequant_row_add(pos, x);
+            }
         }
     }
 }
 
-/// `y = W·x` in the [`matvec`] orientation; the int8 side quantizes `x`
-/// into `qx` scratch first.
+/// `y = W·x` in the [`matvec`] orientation; the quantized sides
+/// quantize `x` into `qx` scratch first (activations are int8 at both
+/// weight precisions).
 fn lin(x: &[f32], w: MatRef, n: usize, qx: &mut [i8], y: &mut [f32]) {
     match w {
         MatRef::F32(w) => matvec(x, w, n, y),
@@ -637,6 +944,43 @@ fn lin(x: &[f32], w: MatRef, n: usize, qx: &mut [i8], y: &mut [f32]) {
             let sx = quantize_row(x, qx);
             matvec_q(qx, sx, q, scale, &mut y[..n]);
         }
+        MatRef::I4 { q, scale } => {
+            let qx = &mut qx[..x.len()];
+            let sx = quantize_row(x, qx);
+            matvec_q4(qx, sx, q, scale, &mut y[..n]);
+        }
+    }
+}
+
+/// [`lin`] with the activation **already quantized** — the hoisted
+/// path, and the ring-image path (`prev` rows whose int8 image is
+/// stored alongside).  Only ever called with quantized weights.
+fn lin_q(qx: &[i8], sx: f32, w: MatRef, n: usize, y: &mut [f32]) {
+    match w {
+        MatRef::F32(_) => unreachable!("pre-quantized activations never pair with f32 weights"),
+        MatRef::I8 { q, scale } => matvec_q(qx, sx, q, scale, &mut y[..n]),
+        MatRef::I4 { q, scale } => matvec_q4(qx, sx, q, scale, &mut y[..n]),
+    }
+}
+
+/// [`lin`] that reuses a hoisted activation quantization when one is
+/// available: `hq` is the post-LN1 row `h` quantized **once** per layer
+/// ([`DecodeSession`] slab), shared by every quantized matvec whose
+/// input is `h`.  Bit-identical to quantizing per call —
+/// [`quantize_row`] is deterministic, so the per-call path would
+/// produce the same `(q, s)` bits — pinned by
+/// `hoisted_activation_quantization_is_bit_identical_per_call` below.
+fn lin_hoisted(
+    x: &[f32],
+    hq: Option<(&[i8], f32)>,
+    w: MatRef,
+    n: usize,
+    qx: &mut [i8],
+    y: &mut [f32],
+) {
+    match (hq, w) {
+        (Some((q, s)), MatRef::I8 { .. } | MatRef::I4 { .. }) => lin_q(q, s, w, n, y),
+        _ => lin(x, w, n, qx, y),
     }
 }
 
@@ -649,6 +993,11 @@ fn lin_t(x: &[f32], w: MatRef, n: usize, qx: &mut [i8], y: &mut [f32]) {
             let qx = &mut qx[..x.len()];
             let sx = quantize_row(x, qx);
             matvec_t_q(qx, sx, q, scale, &mut y[..n]);
+        }
+        MatRef::I4 { q, scale } => {
+            let qx = &mut qx[..x.len()];
+            let sx = quantize_row(x, qx);
+            matvec_t_q4(qx, sx, q, scale, &mut y[..n]);
         }
     }
 }
@@ -673,6 +1022,13 @@ fn lin_batch(
             }
             matmul_q(&qxs[..m * k], m, &sxs[..m], q, scale, &mut ys[..m * n]);
         }
+        MatRef::I4 { q, scale } => {
+            let k = if m == 0 { 0 } else { xs.len() / m };
+            for r in 0..m {
+                sxs[r] = quantize_row(&xs[r * k..(r + 1) * k], &mut qxs[r * k..(r + 1) * k]);
+            }
+            matmul_q4(&qxs[..m * k], m, &sxs[..m], q, scale, &mut ys[..m * n]);
+        }
     }
 }
 
@@ -694,6 +1050,13 @@ fn lin_t_batch(
                 sxs[r] = quantize_row(&xs[r * k..(r + 1) * k], &mut qxs[r * k..(r + 1) * k]);
             }
             matmul_t_q(&qxs[..m * k], m, &sxs[..m], q, scale, &mut ys[..m * n]);
+        }
+        MatRef::I4 { q, scale } => {
+            let k = if m == 0 { 0 } else { xs.len() / m };
+            for r in 0..m {
+                sxs[r] = quantize_row(&xs[r * k..(r + 1) * k], &mut qxs[r * k..(r + 1) * k]);
+            }
+            matmul_t_q4(&qxs[..m * k], m, &sxs[..m], q, scale, &mut ys[..m * n]);
         }
     }
 }
@@ -828,6 +1191,15 @@ pub struct DecodeSession {
     f2: Vec<f32>,
     logits: Vec<f32>,
     mix: MixScratch,
+    /// Hoisted activation quantization: the post-LN1 row `h` quantized
+    /// once per layer, fed to every quantized matvec that consumes `h`
+    /// (attention q/k/v, the `mat`/`gate1` first projections) and to
+    /// the ring push — instead of re-running [`quantize_row`] per call.
+    qh: Vec<i8>,
+    /// Hoist toggle (default on).  Off forces per-call re-quantization
+    /// — bit-identical by construction, kept for the A/B bench and the
+    /// parity tests that pin it.
+    hoist: bool,
     /// Fused-batch arena; `None` until the first [`Self::step_batch`].
     batch: Option<Box<BatchScratch>>,
     /// Per-stage timing handle (telemetry); `None` — the default — adds
@@ -858,9 +1230,20 @@ impl DecodeSession {
             f2: vec![0.0; d],
             logits: vec![0.0; m.vocab],
             mix: MixScratch::new(d, max_ffn),
+            qh: vec![0; d],
+            hoist: true,
             batch: None,
             obs: None,
         })
+    }
+
+    /// Toggle the hoisted activation quantization (on by default).
+    /// Both settings produce bit-identical logits — per-call
+    /// quantization just redoes identical [`quantize_row`] work — so
+    /// this exists for the hoisted-vs-per-call A/B bench, not as a
+    /// numerics knob.
+    pub fn set_quant_hoist(&mut self, on: bool) {
+        self.hoist = on;
     }
 
     /// Install (or remove) the per-stage timing handle.  Schedulers
@@ -983,12 +1366,22 @@ impl DecodeSession {
             let lw = w.layer(l);
 
             let mut t0 = timed.then(Instant::now);
-            // h = LN1(x); y = mixer(h, state); x += y
+            // h = LN1(x); y = mixer(h, state); x += y.  Quantized
+            // stepping quantizes h once, here — the mixer and the ring
+            // push reuse the same (q, s).
             layer_norm(&self.x, lw.ln1_g, lw.ln1_b, &mut self.h);
+            let hq = if precision.is_quantized() {
+                let sh = quantize_row(&self.h, &mut self.qh[..d]);
+                Some((&self.qh[..d], sh))
+            } else {
+                None
+            };
             mixer_step(
                 spec,
                 &lw,
                 &self.h,
+                hq,
+                self.hoist,
                 &mut self.state.layers[l],
                 &mut self.y,
                 d,
@@ -1068,6 +1461,7 @@ impl DecodeSession {
         }
         let depth = m.layers.len();
         let max_ffn = m.layers.iter().map(|l| l.ffn).max().unwrap_or(d);
+        let quantized = model.precision().is_quantized();
         let pre_pos = self.state.pos;
         // One sampling decision per fused pass (it scores `rows`
         // positions, so sampling is per-pass, like one verify round).
@@ -1104,10 +1498,23 @@ impl DecodeSession {
                 );
             }
             for r in 0..rows {
+                let h = &bs.hs[r * d..(r + 1) * d];
+                // Same hoist as the sequential step: one quantize_row
+                // per row per layer, shared by the mixer and its ring
+                // push — so batched rows stay bit-identical to
+                // sequential steps.
+                let hq = if quantized {
+                    let sh = quantize_row(h, &mut self.qh[..d]);
+                    Some((&self.qh[..d], sh))
+                } else {
+                    None
+                };
                 mixer_step(
                     spec,
                     &lw,
-                    &bs.hs[r * d..(r + 1) * d],
+                    h,
+                    hq,
+                    self.hoist,
                     &mut self.state.layers[l],
                     &mut bs.ys[r * d..(r + 1) * d],
                     d,
@@ -1215,13 +1622,24 @@ impl DecodeSession {
                 bs.pre_pos + bs.rows
             );
         }
+        let quantized = model.precision().is_quantized();
         for (l, st) in self.state.layers.iter_mut().enumerate() {
             match st {
                 LayerState::Hsm(ring) => {
                     let saved = bs.saved[l].as_ref().expect("HSM layer saved its ring");
                     ring.copy_from(saved);
                     for r in 0..keep {
-                        ring.push(&bs.h_hist[l][r * d..(r + 1) * d]);
+                        let row = &bs.h_hist[l][r * d..(r + 1) * d];
+                        if quantized {
+                            // Replay the quantized push: quantize_row is
+                            // deterministic, so this reproduces the exact
+                            // (q, s) — and the exact dequantized f32 row —
+                            // the batch pushed.
+                            let sh = quantize_row(row, &mut self.qh[..d]);
+                            ring.push_q(&self.qh[..d], sh);
+                        } else {
+                            ring.push(row);
+                        }
                     }
                 }
                 LayerState::Attn { k, v } => {
@@ -1280,6 +1698,14 @@ impl NativeDecoder {
     /// The shared model (clone the `Arc` to open more sessions).
     pub fn model(&self) -> &Arc<Model> {
         &self.model
+    }
+
+    /// Toggle hoisted activation quantization on the underlying session
+    /// (on by default; see [`DecodeSession::set_quant_hoist`]).  Output
+    /// bytes are identical either way — this exists so benches can A/B
+    /// the hoist and tests can pin that parity.
+    pub fn set_quant_hoist(&mut self, on: bool) {
+        self.session.set_quant_hoist(on);
     }
 
     /// Fork: a new decoder over the same shared weights, continuing
@@ -1387,17 +1813,30 @@ impl Decoder for NativeDecoder {
 }
 
 /// One mixer application at the current position.  Weights arrive as a
-/// [`LayerRef`], so every matmul dispatches to the f32 or int8 kernel
-/// tier through [`lin`] — one body serves both precisions.
+/// [`LayerRef`], so every matmul dispatches to the f32, int8 or int4
+/// kernel tier through [`lin`] — one body serves every precision.
+///
+/// `hq` is the hoisted int8 quantization of `h` (always present for
+/// quantized stepping): consumers of `h` reuse it when `hoist` is on,
+/// and the ring push always records it, making the stored image — and
+/// therefore a compacted snapshot — canonical.  The previous-row reads
+/// likewise reuse the ring's stored image ([`Ring::back_q`]) instead of
+/// re-quantizing the dequantized row, which both saves the work and
+/// keeps hoist-on/off bit-identical (`quantize_row` over a dequantized
+/// row is *not* guaranteed to reproduce the stored scale).
+#[allow(clippy::too_many_arguments)]
 fn mixer_step(
     spec: &LayerInfo,
     lw: &LayerRef,
     h: &[f32],
+    hq: Option<(&[i8], f32)>,
+    hoist: bool,
     state: &mut LayerState,
     y: &mut [f32],
     d: usize,
     mix: &mut MixScratch,
 ) {
+    let hq_lin = if hoist { hq } else { None };
     let heads = spec.heads;
     let hd = d / heads;
     let MixScratch { zeros, tmp, gate, aux, acc, cat, mid, head_out, scores, qx } = mix;
@@ -1426,16 +1865,21 @@ fn mixer_step(
                 }
                 "mat" => {
                     let s = spec.shifts[0];
-                    let prev = ring.back(s).unwrap_or(zeros);
-                    lin(h, lw.mix_mat_a, d, qx, y);
-                    lin(prev, lw.mix_mat_b, d, qx, tmp);
+                    lin_hoisted(h, hq_lin, lw.mix_mat_a, d, qx, y);
+                    // Reuse the ring's stored int8 image for the shifted
+                    // row when present: re-quantizing the dequantized row
+                    // is redundant work and not guaranteed bit-stable.
+                    match ring.back_q(s) {
+                        Some((pq, ps)) => lin_q(pq, ps, lw.mix_mat_b, d, tmp),
+                        None => lin(ring.back(s).unwrap_or(zeros), lw.mix_mat_b, d, qx, tmp),
+                    }
                     add_assign(y, tmp);
                     add_assign(y, lw.mix_bias);
                 }
                 "gate1" => {
                     let s = spec.shifts[0];
                     let prev = ring.back(s).unwrap_or(zeros);
-                    lin(h, lw.gate_w1, d, qx, tmp);
+                    lin_hoisted(h, hq_lin, lw.gate_w1, d, qx, tmp);
                     add_assign(tmp, lw.gate_b1);
                     relu_inplace(tmp);
                     lin(tmp, lw.gate_w2, d, qx, gate);
@@ -1483,15 +1927,21 @@ fn mixer_step(
             }
             // NOTE ordering: reads used ages relative to the ring BEFORE this
             // push, so back(s) was the activation at position p − s. Push now.
-            ring.push(h);
+            // Under a quantized precision the push also records the int8
+            // image, so later back_q reads and compacted cache snapshots
+            // see exactly the bytes this step computed with.
+            match hq {
+                Some((q, s)) => ring.push_q(q, s),
+                None => ring.push(h),
+            }
         }
         LayerState::Attn { k, v } => {
             // Project q (tmp), k-row (gate), v-row (aux) for this position.
-            lin(h, lw.wq, d, qx, tmp);
+            lin_hoisted(h, hq_lin, lw.wq, d, qx, tmp);
             add_assign(tmp, lw.bq);
-            lin(h, lw.wk, d, qx, gate);
+            lin_hoisted(h, hq_lin, lw.wk, d, qx, gate);
             add_assign(gate, lw.bk);
-            lin(h, lw.wv, d, qx, aux);
+            lin_hoisted(h, hq_lin, lw.wv, d, qx, aux);
             add_assign(aux, lw.bv);
             k.extend_from_slice(gate);
             v.extend_from_slice(aux);
@@ -1963,6 +2413,222 @@ mod tests {
                 "{kind}: int8 decode after rewind diverged"
             );
         }
+    }
+
+    fn quant4_model_of_kind(kind: &str) -> Arc<Model> {
+        let md = model_of_kind(kind);
+        let flat = super::super::weights::seeded_flat(&md.manifest, 31);
+        let w = ModelWeights::from_flat(&md.manifest, &flat).unwrap();
+        Model::shared_with_precision(md.manifest.clone(), w, Precision::Int4).unwrap()
+    }
+
+    #[test]
+    fn int4_model_drops_f32_weights_and_shrinks_residency() {
+        let f = model_of_kind("ab");
+        let q8 = quant_model_of_kind("ab");
+        let q4 = quant4_model_of_kind("ab");
+        assert_eq!(q4.precision(), Precision::Int4);
+        assert!(q4.weights().is_none(), "int4 models must not keep the f32 copy");
+        assert!(
+            q4.resident_weight_bytes() < q8.resident_weight_bytes(),
+            "int4 residency {} vs int8 {}",
+            q4.resident_weight_bytes(),
+            q8.resident_weight_bytes()
+        );
+        assert!(
+            q4.resident_weight_bytes() * 3 < f.resident_weight_bytes(),
+            "int4 residency {} vs f32 {}",
+            q4.resident_weight_bytes(),
+            f.resident_weight_bytes()
+        );
+        // Same checkpoint at three precisions: three distinct
+        // fingerprints (snapshots must never cross over).
+        assert_ne!(q4.fingerprint(), f.fingerprint());
+        assert_ne!(q4.fingerprint(), q8.fingerprint());
+    }
+
+    #[test]
+    fn int4_decoding_is_deterministic_and_finite() {
+        for kind in ["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"] {
+            let q = quant4_model_of_kind(kind);
+            let mut a = q.session();
+            let mut b = q.session();
+            for t in [5u32, 9, 3, 7, 2] {
+                let la = a.step(t).unwrap().to_vec();
+                let lb = b.step(t).unwrap().to_vec();
+                assert!(la.iter().all(|x| x.is_finite()), "{kind}: non-finite int4 logits");
+                assert_eq!(bits(&la), bits(&lb), "{kind}: int4 decode must be deterministic");
+            }
+        }
+    }
+
+    /// Full-depth shallow stepping at `Precision::Int4` on an f32 model
+    /// (through its lazily built [`Model::quant4`] shadow) is
+    /// bit-identical to decoding the same checkpoint loaded as an int4
+    /// model — the int4 drafter path really runs on the int4 weights.
+    #[test]
+    fn quantized_shallow_int4_steps_match_the_int4_model() {
+        for kind in ["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"] {
+            let f = model_of_kind(kind);
+            let q = quant4_model_of_kind(kind);
+            let mut a = DecodeSession::new(&f.manifest, None).unwrap();
+            let mut b = q.session();
+            for t in [5u32, 9, 3, 7] {
+                let la = a.step_shallow_at(&f, t, 0, Precision::Int4).unwrap().to_vec();
+                let lb = b.step(t).unwrap().to_vec();
+                assert_eq!(bits(&la), bits(&lb), "{kind}: shallow-int4 diverged from int4 model");
+            }
+        }
+    }
+
+    /// The fused verify pass stays a pure re-grouping at int4: batched
+    /// rows are bit-identical to sequential int4 steps for every mixer
+    /// kind.
+    #[test]
+    fn int4_step_batch_matches_sequential_int4_steps() {
+        let prompt = [5u32, 9, 3, 7];
+        let block = [2u32, 11, 6, 4, 8];
+        for kind in ["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"] {
+            let md = quant4_model_of_kind(kind);
+            let mut seq = md.session();
+            seq.prefill(&prompt).unwrap();
+            let want: Vec<Vec<f32>> =
+                block.iter().map(|&t| seq.step(t).unwrap().to_vec()).collect();
+
+            let mut fused = md.session();
+            fused.prefill(&prompt).unwrap();
+            let logits = fused.step_batch(&block).unwrap();
+            for (r, row) in want.iter().enumerate() {
+                assert_eq!(
+                    bits(&logits[r * 300..(r + 1) * 300]),
+                    bits(row),
+                    "{kind}: int4 fused logits row {r} diverged from sequential"
+                );
+            }
+            fused.rewind_batch(2).unwrap();
+            let mut r2 = md.session();
+            r2.prefill(&prompt).unwrap();
+            r2.step(block[0]).unwrap();
+            r2.step(block[1]).unwrap();
+            assert_eq!(
+                bits(fused.step(1).unwrap()),
+                bits(r2.step(1).unwrap()),
+                "{kind}: int4 decode after rewind diverged"
+            );
+        }
+    }
+
+    /// The contract [`lin_hoisted`]'s doc points at: hoisting the
+    /// activation quantization (quantize `h` once per layer, reuse the
+    /// image everywhere) is a pure work saving — logits are bit-equal
+    /// to per-call quantization, sequential and fused, at int8 and
+    /// int4, for every mixer kind.
+    #[test]
+    fn hoisted_activation_quantization_is_bit_identical_per_call() {
+        for precision in [Precision::Int8, Precision::Int4] {
+            for kind in ["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"] {
+                let md = match precision {
+                    Precision::Int8 => quant_model_of_kind(kind),
+                    _ => quant4_model_of_kind(kind),
+                };
+                let mut on = md.session();
+                let mut off = md.session();
+                off.set_quant_hoist(false);
+                for t in [5u32, 9, 3, 7, 2] {
+                    assert_eq!(
+                        bits(on.step(t).unwrap()),
+                        bits(off.step(t).unwrap()),
+                        "{kind}@{precision:?}: hoist changed sequential step bytes"
+                    );
+                }
+                let a = on.step_batch(&[4, 8, 1]).unwrap().to_vec();
+                let b = off.step_batch(&[4, 8, 1]).unwrap();
+                assert_eq!(
+                    bits(&a),
+                    bits(b),
+                    "{kind}@{precision:?}: hoist changed fused-batch bytes"
+                );
+            }
+        }
+    }
+
+    /// [`Ring`] quantized-image bookkeeping: `push_q` stores a
+    /// reusable `(q, s)` whose dequantization IS the f32 row, a plain
+    /// `push` invalidates the slot's image, and `copy_from` carries
+    /// images across rings (allocating or invalidating as needed).
+    #[test]
+    fn ring_quantized_images_track_pushes() {
+        let mut r = Ring::new(3, 4);
+        assert!(r.back_q(1).is_none(), "fresh ring has no images");
+        let q1 = [1i8, -2, 3, -4];
+        r.push_q(&q1, 0.5);
+        let (q, s) = r.back_q(1).unwrap();
+        assert_eq!(q, &q1);
+        assert_eq!(s, 0.5);
+        assert_eq!(r.back(1).unwrap(), &[0.5, -1.0, 1.5, -2.0]);
+
+        r.push(&[1.0; 4]);
+        assert!(r.back_q(1).is_none(), "plain push must invalidate the image");
+        assert!(r.back_q(2).is_some(), "older image survives");
+
+        r.clear();
+        assert!(r.back_q(1).is_none(), "clear must drop all images");
+
+        r.push_q(&q1, 2.0);
+        let mut dst = Ring::new(3, 4);
+        dst.copy_from(&r);
+        assert_eq!(dst.back_q(1).unwrap(), (&q1[..], 2.0));
+        assert_eq!(bits(dst.back(1).unwrap()), bits(r.back(1).unwrap()));
+
+        let mut plain = Ring::new(3, 4);
+        plain.push(&[9.0; 4]);
+        dst.copy_from(&plain);
+        assert!(dst.back_q(1).is_none(), "copying an unquantized ring must invalidate");
+        assert_eq!(dst.back(1).unwrap(), &[9.0; 4]);
+    }
+
+    /// Compact → hydrate is lossless for quantized snapshots (the f32
+    /// rows are *defined as* `q·s`), shrinks resident bytes while
+    /// compacted, and is a no-op for f32 state.  A compacted state must
+    /// not validate — the cache hydrates before handing it out.
+    #[test]
+    fn compact_hydrate_round_trips_quantized_snapshots() {
+        let md = quant4_model_of_kind("mat");
+        let mut s = md.session();
+        s.prefill(&[5, 9, 3, 7]).unwrap();
+        let full = s.snapshot().unwrap();
+        let mut packed = full.clone();
+        packed.compact();
+        assert!(packed.is_compacted());
+        assert!(!full.is_compacted());
+        assert!(
+            packed.resident_bytes() < full.resident_bytes(),
+            "compacted {} vs full {}",
+            packed.resident_bytes(),
+            full.resident_bytes()
+        );
+        assert!(packed.validate(&md.manifest).is_err(), "compacted state must not validate");
+        packed.hydrate();
+        assert!(!packed.is_compacted());
+        assert_eq!(packed.resident_bytes(), full.resident_bytes());
+        let mut a = md.session_from(full).unwrap();
+        let mut b = md.session_from(packed).unwrap();
+        assert_eq!(
+            bits(a.step(2).unwrap()),
+            bits(b.step(2).unwrap()),
+            "decode after compact+hydrate diverged"
+        );
+
+        // F32 decoding records no images, so compact must refuse.
+        let fd = model_of_kind("mat");
+        let mut fs = fd.session();
+        fs.prefill(&[5, 9]).unwrap();
+        let mut snap = fs.snapshot().unwrap();
+        let rb = snap.resident_bytes();
+        snap.compact();
+        assert!(!snap.is_compacted(), "f32 state must not compact");
+        assert_eq!(snap.resident_bytes(), rb);
+        assert!(snap.validate(&fd.manifest).is_ok());
     }
 
     #[test]

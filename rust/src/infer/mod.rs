@@ -25,8 +25,9 @@
 //! * [`tensor`] — the minimal dense-math substrate (matvec, layernorm,
 //!   softmax) used by both forward passes.
 //! * [`weights`] — typed per-layer weight views over a flat checkpoint,
-//!   plus int8 per-row-scale quantization ([`QuantWeights`],
-//!   [`Precision`]) of the resident model.
+//!   plus quantization of the resident model: int8 per-row-scale
+//!   ([`QuantWeights`]) and int4 group-wise ([`Quant4Weights`], group
+//!   32), selected by [`Precision`].
 //! * [`engine`] — the incremental decoder itself.
 //! * [`window`] — the full-sequence reference forward.
 //! * [`speculate`] — drafters and configuration for speculative
@@ -43,7 +44,9 @@ pub use engine::{DecodeSession, LayerState, Model, NativeDecoder, SessionState};
 pub use speculate::{
     DraftCtx, Drafter, DrafterKind, NGramDrafter, ShallowDrafter, SpecCfg, SpecStats,
 };
-pub use weights::{ModelWeights, Precision, QuantMatrix, QuantWeights};
+pub use weights::{
+    ModelWeights, Precision, Quant4Weights, QuantMatrix, QuantMatrix4, QuantWeights,
+};
 pub use window::WindowEngine;
 
 use std::sync::Arc;

@@ -278,12 +278,18 @@ impl ShallowDrafter {
         Self::at_precision(model, layers, precision)
     }
 
-    /// The `shallow-q` drafter: same shallow self-draft, stepped on the
-    /// model's int8 shadow weights (built once, lazily, for f32
-    /// models).  Proposals may differ from f32 shallow drafting —
-    /// acceptance can move, served bytes cannot.
+    /// The `shallow-q` drafter: same shallow self-draft, stepped on
+    /// quantized weights (built once, lazily, for f32 models).
+    /// Proposals may differ from f32 shallow drafting — acceptance can
+    /// move, served bytes cannot.  Int4 models draft on their own int4
+    /// weights (they hold no f32 copy to build an int8 shadow from);
+    /// everything else drafts on the int8 shadow.
     pub fn quantized(model: Arc<Model>, layers: usize) -> Self {
-        Self::at_precision(model, layers, Precision::Int8)
+        let precision = match model.precision() {
+            Precision::Int4 => Precision::Int4,
+            _ => Precision::Int8,
+        };
+        Self::at_precision(model, layers, precision)
     }
 
     fn at_precision(model: Arc<Model>, layers: usize, precision: Precision) -> Self {
@@ -312,7 +318,7 @@ impl Drafter for ShallowDrafter {
     fn label(&self) -> &'static str {
         match self.precision {
             Precision::F32 => "shallow",
-            Precision::Int8 => "shallow-q",
+            Precision::Int8 | Precision::Int4 => "shallow-q",
         }
     }
 
@@ -571,6 +577,40 @@ mod tests {
         for (i, &want) in a.iter().enumerate() {
             let got = argmax(sess.step(&q, last).unwrap());
             assert_eq!(got, want, "shallow-q draft diverged from the int8 model at {i}");
+            last = got;
+        }
+    }
+
+    /// On an int4 model the quantized drafter must draft at int4 (it
+    /// holds no f32 weights, so an int8 shadow cannot be built) and
+    /// its proposals must track the model's own greedy continuation.
+    #[test]
+    fn shallow_q_drafter_on_an_int4_model_drafts_at_int4() {
+        let md = model();
+        let flat = weights::seeded_flat(&md.manifest, 77);
+        let q4 = Model::shared_with_precision(
+            md.manifest.clone(),
+            ModelWeights::from_flat(&md.manifest, &flat).unwrap(),
+            Precision::Int4,
+        )
+        .unwrap();
+        let mut d = ShallowDrafter::quantized(Arc::clone(&q4), 99);
+        assert_eq!(d.label(), "shallow-q");
+        assert_eq!(d.precision(), Precision::Int4);
+        assert_eq!(d.layers(), 2);
+        let ids = [5u32, 9, 3, 7];
+        let state = ctx_for(&q4, &ids);
+        let mut a = Vec::new();
+        d.propose(&DraftCtx { ids: &ids, state: Some(&state), eot: None }, 4, &mut a).unwrap();
+        assert_eq!(a.len(), 4);
+
+        // Full-depth int4 drafting == greedy decoding on the int4 model.
+        let mut sess = DecodeSession::new(&q4.manifest, None).unwrap();
+        sess.restore(&q4.manifest, &state).unwrap();
+        let mut last = *ids.last().unwrap();
+        for (i, &want) in a.iter().enumerate() {
+            let got = argmax(sess.step(&q4, last).unwrap());
+            assert_eq!(got, want, "int4 shallow-q draft diverged from the int4 model at {i}");
             last = got;
         }
     }

@@ -40,13 +40,27 @@
 //!    because [`quantize_row`] never emits −128 (pair sums stay below
 //!    `i16::MAX` and `|a|`/`sign` never overflow).
 //!
+//! 5. **int4** ([`matvec_q4`] / [`matvec_t_q4`] / [`matmul_q4`] /
+//!    [`matmul_t_q4`], each with naive / blocked / AVX2 variants) —
+//!    group-wise 4-bit weights: [`quantize_row_q4`] packs two values
+//!    per byte (even element in the low nibble) with one `f32` scale
+//!    per [`Q4_GROUP`] (= 32) elements.  Activations stay int8 (the
+//!    same [`quantize_row`] as tier 4).  Each group's integer dot is
+//!    an exact order-free i32 sum, but the per-group sums cross into
+//!    f32 one at a time, so the **ascending-group f32 accumulation
+//!    order** through the shared `scale_out` expression is part of the
+//!    contract every variant reproduces — naive, blocked and AVX2 stay
+//!    bit-identical by construction.  One 32-element group is exactly
+//!    one 16-byte packed lane-load in the AVX2 kernel; the maddubs
+//!    pair sums stay ≤ 2·127·7 = 1778, far from i16 saturation.
+//!
 //! The public [`matvec`] / [`matvec_t`] / [`matmul`] / [`matmul_t`]
 //! entry points resolve to tier 3 when the `simd` feature is enabled
 //! (falling back per the runtime dispatch) and tier 2 otherwise; the
-//! `*_q` entry points dispatch the same way within tier 4.
+//! `*_q` / `*_q4` entry points dispatch the same way within tiers 4–5.
 //! `rust/tests/tensor_props.rs` fuzzes every tier against the naive
 //! references, including NaN, ±0.0 and subnormal inputs for f32 and
-//! extreme-scale / saturated / degenerate shapes for int8.
+//! extreme-scale / saturated / degenerate shapes for int8 and int4.
 
 /// y = x @ W where `x: [k]`, `w: [k, n]` row-major → `y: [n]`.
 ///
@@ -622,6 +636,308 @@ pub fn matmul_q_blocked(
 }
 
 // ---------------------------------------------------------------------------
+// Tier 5: int4 group-wise quantized kernels (out-major nibble-packed
+// weights, per-group scales)
+// ---------------------------------------------------------------------------
+
+/// Elements per int4 quantization group: one f32 scale per 32 weights.
+/// 32 packs to 16 bytes — exactly one 128-bit lane-load (32 sign-
+/// extended i8 lanes) per group in the AVX2 kernel.
+pub const Q4_GROUP: usize = 32;
+
+/// Packed bytes per int4 row of `k` elements (two nibbles per byte).
+#[inline]
+pub fn q4_row_bytes(k: usize) -> usize {
+    k.div_ceil(2)
+}
+
+/// Scale groups per int4 row of `k` elements.
+#[inline]
+pub fn q4_row_groups(k: usize) -> usize {
+    k.div_ceil(Q4_GROUP)
+}
+
+/// Sign-extended int4 element `i` of a packed row: even elements live
+/// in the low nibble, odd elements in the high nibble of byte `i / 2`.
+#[inline]
+pub(crate) fn q4_get(row: &[u8], i: usize) -> i32 {
+    let b = row[i / 2];
+    if i % 2 == 0 {
+        (((b << 4) as i8) >> 4) as i32
+    } else {
+        ((b as i8) >> 4) as i32
+    }
+}
+
+/// Quantize one f32 row to packed int4 with symmetric per-group scales
+/// ([`Q4_GROUP`] elements per group): within each group,
+/// `q[i] = round(x[i] · 7 / max|group|)` packed two to a byte (even
+/// element in the low nibble) and the group's scale is `max|group| / 7`
+/// (so `x ≈ q · scale` groupwise).  Quantized values land in `[-7, 7]`
+/// — **never −8**.  An all-zero group (or one whose max is non-finite)
+/// quantizes to zero nibbles with scale 0; NaN entries under a finite
+/// max quantize to 0 — the same degenerate contract as
+/// [`quantize_row`], applied per group.
+pub fn quantize_row_q4(x: &[f32], q: &mut [u8], scales: &mut [f32]) {
+    debug_assert_eq!(q.len(), q4_row_bytes(x.len()), "quantize_row_q4 byte shape mismatch");
+    debug_assert_eq!(scales.len(), q4_row_groups(x.len()), "quantize_row_q4 scale shape mismatch");
+    q.fill(0);
+    for (g, sg) in scales.iter_mut().enumerate() {
+        let lo = g * Q4_GROUP;
+        let group = &x[lo..(lo + Q4_GROUP).min(x.len())];
+        let mut maxabs = 0.0f32;
+        for &v in group {
+            let a = v.abs();
+            if a > maxabs {
+                maxabs = a;
+            }
+        }
+        if maxabs == 0.0 || !maxabs.is_finite() {
+            *sg = 0.0;
+            continue;
+        }
+        let inv = 7.0 / maxabs;
+        for (j, &v) in group.iter().enumerate() {
+            let i = lo + j;
+            let nib = ((v * inv).round() as i8 as u8) & 0x0F;
+            q[i / 2] |= if i % 2 == 0 { nib } else { nib << 4 };
+        }
+        *sg = maxabs / 7.0;
+    }
+}
+
+/// One output element of the int4 kernel: an exact i32 dot per scale
+/// group, folded into f32 in ascending-group order through
+/// [`scale_out`].  This is the semantic core every tier shares.
+#[inline]
+fn q4_dot_scalar(qx: &[i8], row: &[u8], srow: &[f32], sx: f32) -> f32 {
+    let k = qx.len();
+    let mut acc = 0.0f32;
+    for (g, &sw) in srow.iter().enumerate() {
+        let lo = g * Q4_GROUP;
+        let hi = (lo + Q4_GROUP).min(k);
+        let mut sum = 0i32;
+        for i in lo..hi {
+            sum += qx[i] as i32 * q4_get(row, i);
+        }
+        acc += scale_out(sum, sx, sw);
+    }
+    acc
+}
+
+/// Int4 [`matvec`]: `y = x @ W` with the logical `w: [k, n]` quantized
+/// **transposed** into out-major packed rows (`wq: [n, ⌈k/2⌉]` bytes,
+/// `scales: [n, ⌈k/32⌉]`), the activation pre-quantized to int8
+/// (`qx: [k]`, scale `sx`, from [`quantize_row`]).  As with the int8
+/// tier, out-major storage makes this the same row-dot core as
+/// [`matvec_t_q4`].
+pub fn matvec_q4(qx: &[i8], sx: f32, wq: &[u8], scales: &[f32], y: &mut [f32]) {
+    #[cfg(feature = "simd")]
+    {
+        simd::matvec_q4(qx, sx, wq, scales, y);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        matvec_q4_blocked(qx, sx, wq, scales, y);
+    }
+}
+
+/// Int4 [`matvec_t`] — identical storage and kernel as [`matvec_q4`]
+/// (the quantized representation is always out-major).
+pub fn matvec_t_q4(qx: &[i8], sx: f32, wq: &[u8], scales: &[f32], y: &mut [f32]) {
+    matvec_q4(qx, sx, wq, scales, y);
+}
+
+/// Int4 [`matmul`]: m pre-quantized int8 activation rows against one
+/// out-major packed int4 matrix.  Row r of `ys` is bit-identical to
+/// `matvec_q4(&qxs[r*k..], sxs[r], ..)`.
+pub fn matmul_q4(qxs: &[i8], m: usize, sxs: &[f32], wq: &[u8], scales: &[f32], ys: &mut [f32]) {
+    if m == 0 {
+        debug_assert!(ys.is_empty());
+        return;
+    }
+    #[cfg(feature = "simd")]
+    {
+        simd::matmul_q4(qxs, m, sxs, wq, scales, ys);
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        matmul_q4_blocked(qxs, m, sxs, wq, scales, ys);
+    }
+}
+
+/// Int4 [`matmul_t`] — same storage and kernel as [`matmul_q4`].
+pub fn matmul_t_q4(qxs: &[i8], m: usize, sxs: &[f32], wq: &[u8], scales: &[f32], ys: &mut [f32]) {
+    matmul_q4(qxs, m, sxs, wq, scales, ys);
+}
+
+/// Reference int4 kernel: one [`q4_dot_scalar`] per output row.  The
+/// ascending-group f32 accumulation order it uses *defines* the tier's
+/// answer; blocked and AVX2 variants reproduce it exactly.
+pub fn matvec_q4_naive(qx: &[i8], sx: f32, wq: &[u8], scales: &[f32], y: &mut [f32]) {
+    let k = qx.len();
+    let kb = q4_row_bytes(k);
+    let groups = q4_row_groups(k);
+    let n = y.len();
+    debug_assert_eq!(wq.len(), n * kb, "matvec_q4 byte shape mismatch");
+    debug_assert_eq!(scales.len(), n * groups, "matvec_q4 scale shape mismatch");
+    for j in 0..n {
+        let row = &wq[j * kb..(j + 1) * kb];
+        let srow = &scales[j * groups..(j + 1) * groups];
+        y[j] = q4_dot_scalar(qx, row, srow, sx);
+    }
+}
+
+/// Blocked int4 kernel: four output rows share one streaming pass over
+/// the quantized activation; within each group the four i32 sums are
+/// independent, and each output's f32 chain still folds its groups in
+/// ascending order — bit-identical to [`matvec_q4_naive`].
+pub fn matvec_q4_blocked(qx: &[i8], sx: f32, wq: &[u8], scales: &[f32], y: &mut [f32]) {
+    let k = qx.len();
+    let kb = q4_row_bytes(k);
+    let groups = q4_row_groups(k);
+    let n = y.len();
+    debug_assert_eq!(wq.len(), n * kb, "matvec_q4 byte shape mismatch");
+    debug_assert_eq!(scales.len(), n * groups, "matvec_q4 scale shape mismatch");
+    let blocks = n / 4 * 4;
+    let mut j = 0;
+    while j < blocks {
+        let r0 = &wq[j * kb..(j + 1) * kb];
+        let r1 = &wq[(j + 1) * kb..(j + 2) * kb];
+        let r2 = &wq[(j + 2) * kb..(j + 3) * kb];
+        let r3 = &wq[(j + 3) * kb..(j + 4) * kb];
+        let s0 = &scales[j * groups..(j + 1) * groups];
+        let s1 = &scales[(j + 1) * groups..(j + 2) * groups];
+        let s2 = &scales[(j + 2) * groups..(j + 3) * groups];
+        let s3 = &scales[(j + 3) * groups..(j + 4) * groups];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for g in 0..groups {
+            let lo = g * Q4_GROUP;
+            let hi = (lo + Q4_GROUP).min(k);
+            let (mut t0, mut t1, mut t2, mut t3) = (0i32, 0i32, 0i32, 0i32);
+            for i in lo..hi {
+                let xi = qx[i] as i32;
+                t0 += xi * q4_get(r0, i);
+                t1 += xi * q4_get(r1, i);
+                t2 += xi * q4_get(r2, i);
+                t3 += xi * q4_get(r3, i);
+            }
+            a0 += scale_out(t0, sx, s0[g]);
+            a1 += scale_out(t1, sx, s1[g]);
+            a2 += scale_out(t2, sx, s2[g]);
+            a3 += scale_out(t3, sx, s3[g]);
+        }
+        y[j] = a0;
+        y[j + 1] = a1;
+        y[j + 2] = a2;
+        y[j + 3] = a3;
+        j += 4;
+    }
+    for j in blocks..n {
+        let row = &wq[j * kb..(j + 1) * kb];
+        let srow = &scales[j * groups..(j + 1) * groups];
+        y[j] = q4_dot_scalar(qx, row, srow, sx);
+    }
+}
+
+/// Reference batched int4 kernel: m independent [`matvec_q4_naive`]s.
+pub fn matmul_q4_naive(
+    qxs: &[i8],
+    m: usize,
+    sxs: &[f32],
+    wq: &[u8],
+    scales: &[f32],
+    ys: &mut [f32],
+) {
+    if m == 0 {
+        debug_assert!(ys.is_empty());
+        return;
+    }
+    debug_assert_eq!(sxs.len(), m);
+    debug_assert_eq!(ys.len() % m, 0);
+    let k = qxs.len() / m;
+    let n = ys.len() / m;
+    for r in 0..m {
+        matvec_q4_naive(
+            &qxs[r * k..(r + 1) * k],
+            sxs[r],
+            wq,
+            scales,
+            &mut ys[r * n..(r + 1) * n],
+        );
+    }
+}
+
+/// Blocked batched int4 kernel: output-row blocks outermost so each
+/// four-row packed slab stays hot across all m activation rows.
+pub fn matmul_q4_blocked(
+    qxs: &[i8],
+    m: usize,
+    sxs: &[f32],
+    wq: &[u8],
+    scales: &[f32],
+    ys: &mut [f32],
+) {
+    debug_assert!(m > 0);
+    debug_assert_eq!(qxs.len() % m, 0, "matmul_q4 activation shape mismatch");
+    debug_assert_eq!(sxs.len(), m);
+    debug_assert_eq!(ys.len() % m, 0);
+    let k = qxs.len() / m;
+    let kb = q4_row_bytes(k);
+    let groups = q4_row_groups(k);
+    let n = ys.len() / m;
+    debug_assert_eq!(wq.len(), n * kb, "matmul_q4 byte shape mismatch");
+    debug_assert_eq!(scales.len(), n * groups, "matmul_q4 scale shape mismatch");
+    let blocks = n / 4 * 4;
+    let mut j = 0;
+    while j < blocks {
+        let r0 = &wq[j * kb..(j + 1) * kb];
+        let r1 = &wq[(j + 1) * kb..(j + 2) * kb];
+        let r2 = &wq[(j + 2) * kb..(j + 3) * kb];
+        let r3 = &wq[(j + 3) * kb..(j + 4) * kb];
+        let s0 = &scales[j * groups..(j + 1) * groups];
+        let s1 = &scales[(j + 1) * groups..(j + 2) * groups];
+        let s2 = &scales[(j + 2) * groups..(j + 3) * groups];
+        let s3 = &scales[(j + 3) * groups..(j + 4) * groups];
+        for r in 0..m {
+            let qx = &qxs[r * k..(r + 1) * k];
+            let sx = sxs[r];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for g in 0..groups {
+                let lo = g * Q4_GROUP;
+                let hi = (lo + Q4_GROUP).min(k);
+                let (mut t0, mut t1, mut t2, mut t3) = (0i32, 0i32, 0i32, 0i32);
+                for i in lo..hi {
+                    let xi = qx[i] as i32;
+                    t0 += xi * q4_get(r0, i);
+                    t1 += xi * q4_get(r1, i);
+                    t2 += xi * q4_get(r2, i);
+                    t3 += xi * q4_get(r3, i);
+                }
+                a0 += scale_out(t0, sx, s0[g]);
+                a1 += scale_out(t1, sx, s1[g]);
+                a2 += scale_out(t2, sx, s2[g]);
+                a3 += scale_out(t3, sx, s3[g]);
+            }
+            let y = &mut ys[r * n..(r + 1) * n];
+            y[j] = a0;
+            y[j + 1] = a1;
+            y[j + 2] = a2;
+            y[j + 3] = a3;
+        }
+        j += 4;
+    }
+    for j in blocks..n {
+        let row = &wq[j * kb..(j + 1) * kb];
+        let srow = &scales[j * groups..(j + 1) * groups];
+        for r in 0..m {
+            let qx = &qxs[r * k..(r + 1) * k];
+            ys[r * n + j] = q4_dot_scalar(qx, row, srow, sxs[r]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Tier 3: explicit-SIMD kernels (feature `simd`)
 // ---------------------------------------------------------------------------
 
@@ -733,6 +1049,45 @@ pub mod simd {
             return;
         }
         super::matmul_q_blocked(qxs, m, sxs, wq, scales, ys);
+    }
+
+    /// Int4 tier-5 dispatch.  As with [`matvec_q`], the portable
+    /// fallback is the blocked scalar kernel itself: group sums are
+    /// exact i32 and the f32 group fold is ascending-order in every
+    /// variant, so there is nothing to chunk differently.
+    pub fn matvec_q4(qx: &[i8], sx: f32, wq: &[u8], scales: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(
+            wq.len(),
+            y.len() * super::q4_row_bytes(qx.len()),
+            "matvec_q4 byte shape mismatch"
+        );
+        debug_assert_eq!(
+            scales.len(),
+            y.len() * super::q4_row_groups(qx.len()),
+            "matvec_q4 scale shape mismatch"
+        );
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability was just checked.
+            unsafe { x86::matvec_q4(qx, sx, wq, scales, y) };
+            return;
+        }
+        super::matvec_q4_blocked(qx, sx, wq, scales, y);
+    }
+
+    /// Batched int4 tier-5 dispatch (see [`matvec_q4`] on the fallback).
+    pub fn matmul_q4(qxs: &[i8], m: usize, sxs: &[f32], wq: &[u8], scales: &[f32], ys: &mut [f32]) {
+        debug_assert!(m > 0);
+        debug_assert_eq!(qxs.len() % m, 0, "matmul_q4 activation shape mismatch");
+        debug_assert_eq!(sxs.len(), m);
+        debug_assert_eq!(ys.len() % m, 0);
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability was just checked.
+            unsafe { x86::matmul_q4(qxs, m, sxs, wq, scales, ys) };
+            return;
+        }
+        super::matmul_q4_blocked(qxs, m, sxs, wq, scales, ys);
     }
 
     /// Portable chunked fallback: the same loop structure as the AVX2
@@ -1127,6 +1482,110 @@ pub mod simd {
                 }
             }
         }
+
+        /// Exact int4 group-dot row core: each full 32-element group is
+        /// one 16-byte packed load, nibble-split (`& 0x0F` / logical
+        /// shift then mask), interleaved back to element order with
+        /// `unpacklo/hi_epi8` (even elements come from low nibbles),
+        /// sign-extended from 4-bit two's complement via `(n ^ 8) − 8`,
+        /// then fed through the same unsigned·signed maddubs idiom as
+        /// [`dot_i8`].  Pair sums stay ≤ 2·127·7 = 1778 (exact), each
+        /// group's i32 sum is horizontally reduced (exact), and group
+        /// sums fold into f32 in ascending order through `scale_out` —
+        /// bit-identical to the scalar reference.  A partial tail group
+        /// (k % 32 ≠ 0) runs the scalar core.
+        ///
+        /// # Safety
+        /// Caller must have verified AVX2 support; `row` must hold
+        /// `⌈k/2⌉` packed bytes and `srow` one scale per group.
+        #[target_feature(enable = "avx2")]
+        unsafe fn q4_dot(qx: &[i8], row: &[u8], srow: &[f32], sx: f32) -> f32 {
+            let k = qx.len();
+            let ones = _mm256_set1_epi16(1);
+            let nib_mask = _mm_set1_epi8(0x0F);
+            let sign_bit = _mm256_set1_epi8(8);
+            let full = k / super::super::Q4_GROUP;
+            let mut acc = 0.0f32;
+            for g in 0..full {
+                let packed = _mm_loadu_si128(row.as_ptr().add(g * 16) as *const __m128i);
+                let lo = _mm_and_si128(packed, nib_mask);
+                let hi = _mm_and_si128(_mm_srli_epi16::<4>(packed), nib_mask);
+                // Interleave to element order: byte b holds elements
+                // (2b, 2b+1) as (low, high) nibble.
+                let b0 = _mm_unpacklo_epi8(lo, hi);
+                let b1 = _mm_unpackhi_epi8(lo, hi);
+                let w = _mm256_set_m128i(b1, b0);
+                let w = _mm256_sub_epi8(_mm256_xor_si256(w, sign_bit), sign_bit);
+                let vx = _mm256_loadu_si256(qx.as_ptr().add(g * 32) as *const __m256i);
+                let abs_x = _mm256_sign_epi8(vx, vx);
+                let sw = _mm256_sign_epi8(w, vx);
+                let p16 = _mm256_maddubs_epi16(abs_x, sw);
+                let s32 = _mm256_madd_epi16(p16, ones);
+                // Horizontal sum of the eight i32 lanes (exact).
+                let s = _mm_add_epi32(
+                    _mm256_castsi256_si128(s32),
+                    _mm256_extracti128_si256::<1>(s32),
+                );
+                let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s));
+                let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s));
+                let sum = _mm_cvtsi128_si32(s);
+                acc += super::super::scale_out(sum, sx, srow[g]);
+            }
+            let lo_i = full * super::super::Q4_GROUP;
+            if lo_i < k {
+                let mut sum = 0i32;
+                for i in lo_i..k {
+                    sum += qx[i] as i32 * super::super::q4_get(row, i);
+                }
+                acc += super::super::scale_out(sum, sx, srow[full]);
+            }
+            acc
+        }
+
+        /// # Safety
+        /// Caller must have verified AVX2 support and the `matvec_q4`
+        /// shape contract (out-major packed `wq: [n, ⌈k/2⌉]`,
+        /// `scales: [n, ⌈k/32⌉]`, activation values in ±127).
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn matvec_q4(qx: &[i8], sx: f32, wq: &[u8], scales: &[f32], y: &mut [f32]) {
+            let kb = super::super::q4_row_bytes(qx.len());
+            let groups = super::super::q4_row_groups(qx.len());
+            for (j, yj) in y.iter_mut().enumerate() {
+                let row = &wq[j * kb..(j + 1) * kb];
+                let srow = &scales[j * groups..(j + 1) * groups];
+                *yj = q4_dot(qx, row, srow, sx);
+            }
+        }
+
+        /// Batched [`matvec_q4`]: weight rows outermost so each packed
+        /// row (and its scale group) streams through cache once for
+        /// all m activation rows.
+        ///
+        /// # Safety
+        /// Caller must have verified AVX2 support and the `matmul_q4`
+        /// shape contract (`m > 0`).
+        #[target_feature(enable = "avx2")]
+        pub unsafe fn matmul_q4(
+            qxs: &[i8],
+            m: usize,
+            sxs: &[f32],
+            wq: &[u8],
+            scales: &[f32],
+            ys: &mut [f32],
+        ) {
+            let k = qxs.len() / m;
+            let kb = super::super::q4_row_bytes(k);
+            let groups = super::super::q4_row_groups(k);
+            let n = ys.len() / m;
+            for j in 0..n {
+                let row = &wq[j * kb..(j + 1) * kb];
+                let srow = &scales[j * groups..(j + 1) * groups];
+                for r in 0..m {
+                    let sum = q4_dot(&qxs[r * k..(r + 1) * k], row, srow, sxs[r]);
+                    ys[r * n + j] = sum;
+                }
+            }
+        }
     }
 }
 
@@ -1385,11 +1844,14 @@ mod tests {
         assert_eq!(quantize_row(&[0.0, -0.0, 0.0, 0.0], &mut q), 0.0);
         assert_eq!(q, vec![0i8; 4]);
         let mut q = vec![7i8; 2];
-        assert_eq!(quantize_row(&[f32::NAN, 1.0], &mut q), 0.0);
-        assert_eq!(q, vec![0i8; 2]);
-        let mut q = vec![7i8; 2];
         assert_eq!(quantize_row(&[f32::INFINITY, 1.0], &mut q), 0.0);
         assert_eq!(q, vec![0i8; 2]);
+        // NaN never wins the max scan (`NaN > maxabs` is false), so a
+        // NaN entry under a finite max quantizes to 0 with the scale
+        // set by the finite values.
+        let mut q = vec![7i8; 2];
+        assert_eq!(quantize_row(&[f32::NAN, 1.0], &mut q), 1.0 / 127.0);
+        assert_eq!(q, vec![0i8, 127]);
     }
 
     #[test]
@@ -1467,5 +1929,186 @@ mod tests {
                 assert_bits_eq(&fast, &slow, "saturated dispatched");
             }
         }
+    }
+
+    /// Deterministic int4 fixture: f32 rows pushed through
+    /// [`quantize_row_q4`] exactly as weight load does it, activation
+    /// through [`quantize_row`] exactly as the engine does it.
+    fn q4fixture(k: usize, n: usize) -> (Vec<i8>, f32, Vec<u8>, Vec<f32>) {
+        let x: Vec<f32> = (0..k).map(|i| 0.37 * (i as f32) - 1.9).collect();
+        let mut qx = vec![0i8; k];
+        let sx = quantize_row(&x, &mut qx);
+        let kb = q4_row_bytes(k);
+        let groups = q4_row_groups(k);
+        let mut wq = vec![0u8; n * kb];
+        let mut scales = vec![0.0f32; n * groups];
+        for j in 0..n {
+            let row: Vec<f32> =
+                (0..k).map(|i| 0.11 * (((j * k + i) * 7 % 23) as f32) - 1.2).collect();
+            quantize_row_q4(
+                &row,
+                &mut wq[j * kb..(j + 1) * kb],
+                &mut scales[j * groups..(j + 1) * groups],
+            );
+        }
+        (qx, sx, wq, scales)
+    }
+
+    #[test]
+    fn quantize_row_q4_bounds_and_roundtrip() {
+        // 65 elements: two full groups plus a one-element tail group.
+        let x: Vec<f32> = (0..65).map(|i| 0.4 * (i as f32) - 6.0).collect();
+        let mut q = vec![0u8; q4_row_bytes(65)];
+        let mut s = vec![0.0f32; q4_row_groups(65)];
+        quantize_row_q4(&x, &mut q, &mut s);
+        assert_eq!(s.len(), 3);
+        for (g, &sg) in s.iter().enumerate() {
+            assert!(sg > 0.0, "group {g} scale");
+        }
+        let mut max_nib = 0i32;
+        for (i, &xi) in x.iter().enumerate() {
+            let v = super::q4_get(&q, i);
+            assert!((-7..=7).contains(&v), "−8 must never be emitted (got {v})");
+            max_nib = max_nib.max(v.abs());
+            let back = v as f32 * s[i / Q4_GROUP];
+            assert!(
+                (xi - back).abs() <= 0.5 * s[i / Q4_GROUP] + 1e-6,
+                "round-trip error above half a step: {xi} vs {back}"
+            );
+        }
+        assert_eq!(max_nib, 7, "each group's max maps to ±7");
+        // Degenerate groups: all-zero and non-finite-max both quantize
+        // to zero nibbles with scale 0; NaN never wins the max scan, so
+        // a NaN under a finite max quantizes to 0 with the finite
+        // values' scale — all per group, matching [`quantize_row`]'s
+        // per-row contract.
+        let mut q = vec![0xFFu8; q4_row_bytes(4)];
+        let mut s = vec![7.0f32; 1];
+        quantize_row_q4(&[0.0, -0.0, 0.0, 0.0], &mut q, &mut s);
+        assert_eq!((q, s), (vec![0u8; 2], vec![0.0f32]));
+        let mut q = vec![0xFFu8; 1];
+        let mut s = vec![7.0f32; 1];
+        quantize_row_q4(&[f32::INFINITY, 1.0], &mut q, &mut s);
+        assert_eq!((q, s), (vec![0u8; 1], vec![0.0f32]));
+        let mut q = vec![0u8; 1];
+        let mut s = vec![0.0f32; 1];
+        quantize_row_q4(&[f32::NAN, 3.0], &mut q, &mut s);
+        assert_eq!(super::q4_get(&q, 0), 0, "NaN under a finite max quantizes to 0");
+        assert_eq!(super::q4_get(&q, 1), 7);
+        assert_eq!(s, vec![3.0 / 7.0]);
+    }
+
+    #[test]
+    fn int4_tiers_match_naive_bit_for_bit() {
+        // Shapes straddle group boundaries: k % 32 ∈ {0, 1, 31, ±1 of
+        // a boundary} plus odd k (half-filled final byte).
+        for (k, n) in [(13, 11), (31, 8), (32, 8), (33, 8), (64, 5), (65, 3), (96, 4), (1, 1)] {
+            let (qx, sx, wq, scales) = q4fixture(k, n);
+            let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
+            matvec_q4_naive(&qx, sx, &wq, &scales, &mut slow);
+            matvec_q4_blocked(&qx, sx, &wq, &scales, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_q4_blocked");
+            fast.fill(7.0);
+            matvec_q4(&qx, sx, &wq, &scales, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_q4 dispatched");
+            fast.fill(7.0);
+            matvec_t_q4(&qx, sx, &wq, &scales, &mut fast);
+            assert_bits_eq(&fast, &slow, "matvec_t_q4 alias");
+        }
+    }
+
+    #[test]
+    fn int4_batched_rows_match_single_row_calls() {
+        for (m, k, n) in [(1, 13, 11), (5, 33, 24), (9, 7, 3), (3, 64, 8), (2, 96, 5)] {
+            let kb = q4_row_bytes(k);
+            let groups = q4_row_groups(k);
+            let (_, _, wq, scales) = q4fixture(k, n);
+            let mut qxs = vec![0i8; m * k];
+            let mut sxs = vec![0.0f32; m];
+            for r in 0..m {
+                let x: Vec<f32> = (0..k).map(|i| 0.21 * ((r * k + i) as f32) - 1.4).collect();
+                sxs[r] = quantize_row(&x, &mut qxs[r * k..(r + 1) * k]);
+            }
+            let mut rows = vec![0.0f32; m * n];
+            for r in 0..m {
+                matvec_q4_naive(
+                    &qxs[r * k..(r + 1) * k],
+                    sxs[r],
+                    &wq,
+                    &scales,
+                    &mut rows[r * n..(r + 1) * n],
+                );
+            }
+            assert_eq!(wq.len(), n * kb);
+            assert_eq!(scales.len(), n * groups);
+            let mut batch = vec![7.0f32; m * n];
+            matmul_q4_naive(&qxs, m, &sxs, &wq, &scales, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_q4_naive");
+            batch.fill(7.0);
+            matmul_q4_blocked(&qxs, m, &sxs, &wq, &scales, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_q4_blocked");
+            batch.fill(7.0);
+            matmul_q4(&qxs, m, &sxs, &wq, &scales, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_q4 dispatched");
+            batch.fill(7.0);
+            matmul_t_q4(&qxs, m, &sxs, &wq, &scales, &mut batch);
+            assert_bits_eq(&batch, &rows, "matmul_t_q4 alias");
+        }
+        // Empty batch is a no-op for the dispatched forms.
+        matmul_q4(&[], 0, &[], &[], &[0.5], &mut []);
+        matmul_t_q4(&[], 0, &[], &[], &[0.5], &mut []);
+    }
+
+    #[test]
+    fn int4_saturated_groups_stay_exact_across_tiers() {
+        // Hand-built ±7 nibbles against ±127 activations (the maddubs
+        // pair-sum worst case for this tier) with extreme scales:
+        // every tier must agree bit-for-bit, including the mixed-sign
+        // group-fold in f32.
+        let k = 35; // one full 32-element group + a 3-element tail
+        let n = 9;
+        let qx: Vec<i8> = (0..k).map(|i| if i % 2 == 0 { 127 } else { -127 }).collect();
+        let kb = q4_row_bytes(k);
+        let groups = q4_row_groups(k);
+        let mut wq = vec![0u8; n * kb];
+        for (i, b) in wq.iter_mut().enumerate() {
+            // low nibble 7, high nibble −7 (0b1001), alternating.
+            *b = if i % 3 == 0 { 0x97 } else { 0x79 };
+        }
+        for sx in [1.0e-30f32, 1.0, 3.4e30] {
+            for sw in [1.0e-30f32, 0.7, 3.4e30] {
+                let scales = vec![sw; n * groups];
+                let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
+                matvec_q4_naive(&qx, sx, &wq, &scales, &mut slow);
+                matvec_q4_blocked(&qx, sx, &wq, &scales, &mut fast);
+                assert_bits_eq(&fast, &slow, "int4 saturated blocked");
+                fast.fill(7.0);
+                matvec_q4(&qx, sx, &wq, &scales, &mut fast);
+                assert_bits_eq(&fast, &slow, "int4 saturated dispatched");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_zero_scale_groups_contribute_nothing() {
+        // A group with scale 0 (degenerate at quantization time) must
+        // contribute exactly +0.0 in every tier, even when its nibbles
+        // are nonzero garbage.
+        let k = 64;
+        let n = 4;
+        let qx = vec![64i8; k];
+        let wq = vec![0x57u8; n * q4_row_bytes(k)];
+        let groups = q4_row_groups(k);
+        let mut scales = vec![0.5f32; n * groups];
+        for j in 0..n {
+            scales[j * groups] = 0.0; // first group of every row dead
+        }
+        let (mut fast, mut slow) = (vec![0.0f32; n], vec![0.0f32; n]);
+        matvec_q4_naive(&qx, 0.25, &wq, &scales, &mut slow);
+        matvec_q4(&qx, 0.25, &wq, &scales, &mut fast);
+        assert_bits_eq(&fast, &slow, "zero-scale group");
+        let all_dead = vec![0.0f32; n * groups];
+        matvec_q4_naive(&qx, 0.25, &wq, &all_dead, &mut slow);
+        assert!(slow.iter().all(|v| v.to_bits() == 0), "all-dead rows give +0.0");
     }
 }

@@ -14,6 +14,16 @@
 //! stays f32 — they are O(D) against the matrices' O(D²) and their
 //! precision is free.  Checkpoints stay f32: quantization happens once
 //! at model-load time ([`crate::infer::Model`]).
+//!
+//! [`Quant4Weights`] is the int4 group-wise companion: same layout
+//! decisions, but each matrix row packs two values per byte with one
+//! `f32` scale per [`crate::infer::tensor::Q4_GROUP`] (= 32) input taps
+//! ([`QuantMatrix4`], built by
+//! [`crate::infer::tensor::quantize_row_q4`]) — ~0.16× the f32 resident
+//! bytes against int8's ~0.27×.  Both representations share one
+//! generic skeleton ([`QWeights`] over the [`QuantStore`] trait), so
+//! layer/mixer field names and quantization *orientation* are identical
+//! by construction.
 
 use std::collections::HashMap;
 
@@ -21,7 +31,9 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::config::Manifest;
-use crate::infer::tensor::quantize_row;
+use crate::infer::tensor::{
+    q4_get, q4_row_bytes, q4_row_groups, quantize_row, quantize_row_q4,
+};
 
 /// One layer's mixer weights (variant-dependent subset populated).
 #[derive(Debug, Clone, Default)]
@@ -223,13 +235,15 @@ impl ModelWeights {
 // ---------------------------------------------------------------------------
 
 /// Numeric precision of the resident weights on the native decode path.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Precision {
     /// Full-precision f32 weights (the checkpoint representation).
     #[default]
     F32,
     /// Int8 per-row-scale quantized weights ([`QuantWeights`]).
     Int8,
+    /// Int4 group-wise quantized weights ([`Quant4Weights`]).
+    Int4,
 }
 
 impl Precision {
@@ -238,16 +252,25 @@ impl Precision {
         match self {
             Precision::F32 => "f32",
             Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
         }
     }
 
-    /// Parse a CLI spec (`f32` | `int8`).
+    /// Parse a CLI spec (`f32` | `int8` | `int4`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "f32" => Ok(Precision::F32),
             "int8" | "i8" => Ok(Precision::Int8),
-            other => bail!("unknown precision {other:?} (expected f32 or int8)"),
+            "int4" | "i4" => Ok(Precision::Int4),
+            other => bail!("unknown precision {other:?} (expected f32, int8 or int4)"),
         }
+    }
+
+    /// True for the quantized-weight modes (int8 / int4) — the modes
+    /// whose decode path quantizes activations and whose ring state
+    /// carries an int8 image ([`crate::infer::engine::Ring`]).
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, Precision::F32)
     }
 }
 
@@ -366,61 +389,284 @@ impl QuantMatrix {
     }
 }
 
-/// One layer's quantized mixer weights (matrices int8, vectors f32).
+/// One int4 group-wise quantized weight matrix, stored **out-major**
+/// like [`QuantMatrix`] but with two values packed per byte (even
+/// element in the low nibble) and one f32 scale per
+/// [`crate::infer::tensor::Q4_GROUP`] (= 32) input taps of each row.
+/// Rows are byte-aligned (`⌈cols/2⌉` bytes each), so per-head row
+/// blocks slice cleanly.  An absent f32 tensor quantizes to the empty
+/// default.
 #[derive(Debug, Clone, Default)]
-pub struct QuantMixerWeights {
+pub struct QuantMatrix4 {
+    /// Input (reduction) dimension of each row.
+    pub cols: usize,
+    /// Output rows.
+    pub rows: usize,
+    /// `[rows, ⌈cols/2⌉]` packed int4 values; nibbles lie in ±7.
+    pub q: Vec<u8>,
+    /// `[rows, ⌈cols/32⌉]` per-group dequantization scales.
+    pub scale: Vec<f32>,
+}
+
+impl QuantMatrix4 {
+    /// Packed bytes per row.
+    pub fn row_bytes(&self) -> usize {
+        q4_row_bytes(self.cols)
+    }
+
+    /// Scale groups per row.
+    pub fn row_groups(&self) -> usize {
+        q4_row_groups(self.cols)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Quantize an f32 matrix that is **already out-major**, row by row
+    /// (see [`QuantMatrix::from_rows`]).
+    pub fn from_rows(w: &[f32], cols: usize) -> Self {
+        if w.is_empty() {
+            return QuantMatrix4::default();
+        }
+        debug_assert!(cols > 0 && w.len() % cols == 0, "quant4 shape mismatch");
+        let rows = w.len() / cols;
+        let kb = q4_row_bytes(cols);
+        let groups = q4_row_groups(cols);
+        let mut q = vec![0u8; rows * kb];
+        let mut scale = vec![0.0f32; rows * groups];
+        for r in 0..rows {
+            quantize_row_q4(
+                &w[r * cols..(r + 1) * cols],
+                &mut q[r * kb..(r + 1) * kb],
+                &mut scale[r * groups..(r + 1) * groups],
+            );
+        }
+        QuantMatrix4 { cols, rows, q, scale }
+    }
+
+    /// Quantize an **in-major** `[k, n]` f32 matrix transposed into
+    /// out-major packed rows (see [`QuantMatrix::from_cols`]).
+    pub fn from_cols(w: &[f32], n: usize) -> Self {
+        if w.is_empty() {
+            return QuantMatrix4::default();
+        }
+        debug_assert!(n > 0 && w.len() % n == 0, "quant4 shape mismatch");
+        let k = w.len() / n;
+        let mut t = vec![0.0f32; w.len()];
+        for i in 0..k {
+            for j in 0..n {
+                t[j * k + i] = w[i * n + j];
+            }
+        }
+        Self::from_rows(&t, k)
+    }
+
+    /// Quantize `blocks` stacked in-major `[k, n]` matrices, each
+    /// transposed, stacked out-major (see
+    /// [`QuantMatrix::from_col_blocks`]).
+    pub fn from_col_blocks(w: &[f32], blocks: usize, k: usize, n: usize) -> Self {
+        if w.is_empty() {
+            return QuantMatrix4::default();
+        }
+        debug_assert_eq!(w.len(), blocks * k * n, "quant4 block shape mismatch");
+        let mut t = vec![0.0f32; w.len()];
+        for b in 0..blocks {
+            let src = &w[b * k * n..(b + 1) * k * n];
+            let dst = &mut t[b * n * k..(b + 1) * n * k];
+            for i in 0..k {
+                for j in 0..n {
+                    dst[j * k + i] = src[i * n + j];
+                }
+            }
+        }
+        Self::from_rows(&t, k)
+    }
+
+    /// Borrow rows `r0..r1` (a per-head block) as a sub-view of packed
+    /// bytes and group scales.
+    pub fn rows_slice(&self, r0: usize, r1: usize) -> (&[u8], &[f32]) {
+        let kb = self.row_bytes();
+        let groups = self.row_groups();
+        (&self.q[r0 * kb..r1 * kb], &self.scale[r0 * groups..r1 * groups])
+    }
+
+    /// Dequantize row r into `out` (`out[i] = q4[r,i] · scale[r, i/32]`).
+    pub fn dequant_row(&self, r: usize, out: &mut [f32]) {
+        let kb = self.row_bytes();
+        let groups = self.row_groups();
+        let row = &self.q[r * kb..(r + 1) * kb];
+        let srow = &self.scale[r * groups..(r + 1) * groups];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = q4_get(row, i) as f32 * srow[i / crate::infer::tensor::Q4_GROUP];
+        }
+    }
+
+    /// Dequantize row r and add it into `out`.
+    pub fn dequant_row_add(&self, r: usize, out: &mut [f32]) {
+        let kb = self.row_bytes();
+        let groups = self.row_groups();
+        let row = &self.q[r * kb..(r + 1) * kb];
+        let srow = &self.scale[r * groups..(r + 1) * groups];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o += q4_get(row, i) as f32 * srow[i / crate::infer::tensor::Q4_GROUP];
+        }
+    }
+
+    /// Bytes resident: one packed byte per element pair + 4 per group
+    /// scale — ~0.156× the f32 bytes at 32-wide groups (0.5 B/element
+    /// + 0.125 B/element of scales vs 4 B/element).
+    pub fn resident_bytes(&self) -> usize {
+        self.q.len() + self.scale.len() * 4
+    }
+}
+
+/// The storage contract a quantized weight *matrix* representation
+/// fulfils, so [`QWeights`] can assemble a whole model generically:
+/// the three quantization orientations used at load time (already
+/// out-major rows; in-major transposed; per-head stacked blocks), the
+/// embedding dequantization hooks, and resident-byte accounting.
+pub trait QuantStore: Clone + std::fmt::Debug + Default {
+    fn from_rows(w: &[f32], cols: usize) -> Self;
+    fn from_cols(w: &[f32], n: usize) -> Self;
+    fn from_col_blocks(w: &[f32], blocks: usize, k: usize, n: usize) -> Self;
+    fn dequant_row(&self, r: usize, out: &mut [f32]);
+    fn dequant_row_add(&self, r: usize, out: &mut [f32]);
+    fn resident_bytes(&self) -> usize;
+    /// Fold this matrix's quantized bytes and scale bits into an FNV-1a
+    /// accumulator (the injected-weights fingerprint path).
+    fn fold_content(&self, h: &mut u64);
+}
+
+impl QuantStore for QuantMatrix {
+    fn from_rows(w: &[f32], cols: usize) -> Self {
+        QuantMatrix::from_rows(w, cols)
+    }
+    fn from_cols(w: &[f32], n: usize) -> Self {
+        QuantMatrix::from_cols(w, n)
+    }
+    fn from_col_blocks(w: &[f32], blocks: usize, k: usize, n: usize) -> Self {
+        QuantMatrix::from_col_blocks(w, blocks, k, n)
+    }
+    fn dequant_row(&self, r: usize, out: &mut [f32]) {
+        QuantMatrix::dequant_row(self, r, out)
+    }
+    fn dequant_row_add(&self, r: usize, out: &mut [f32]) {
+        QuantMatrix::dequant_row_add(self, r, out)
+    }
+    fn resident_bytes(&self) -> usize {
+        QuantMatrix::resident_bytes(self)
+    }
+    fn fold_content(&self, h: &mut u64) {
+        use crate::util::hash;
+        for &q in &self.q {
+            hash::fold(h, q as u8 as u64);
+        }
+        for &s in &self.scale {
+            hash::fold(h, s.to_bits() as u64);
+        }
+        hash::fold(h, 0xff); // separator
+    }
+}
+
+impl QuantStore for QuantMatrix4 {
+    fn from_rows(w: &[f32], cols: usize) -> Self {
+        QuantMatrix4::from_rows(w, cols)
+    }
+    fn from_cols(w: &[f32], n: usize) -> Self {
+        QuantMatrix4::from_cols(w, n)
+    }
+    fn from_col_blocks(w: &[f32], blocks: usize, k: usize, n: usize) -> Self {
+        QuantMatrix4::from_col_blocks(w, blocks, k, n)
+    }
+    fn dequant_row(&self, r: usize, out: &mut [f32]) {
+        QuantMatrix4::dequant_row(self, r, out)
+    }
+    fn dequant_row_add(&self, r: usize, out: &mut [f32]) {
+        QuantMatrix4::dequant_row_add(self, r, out)
+    }
+    fn resident_bytes(&self) -> usize {
+        QuantMatrix4::resident_bytes(self)
+    }
+    fn fold_content(&self, h: &mut u64) {
+        use crate::util::hash;
+        hash::fold_bytes(h, &self.q);
+        for &s in &self.scale {
+            hash::fold(h, s.to_bits() as u64);
+        }
+        hash::fold(h, 0xff); // separator
+    }
+}
+
+/// One layer's quantized mixer weights, generic over the matrix store
+/// (matrices quantized, vectors f32).
+#[derive(Debug, Clone, Default)]
+pub struct QMixerWeights<M> {
     pub mix_a: Vec<f32>,
     pub mix_b: Vec<f32>,
-    pub mix_mat_a: QuantMatrix,
-    pub mix_mat_b: QuantMatrix,
+    pub mix_mat_a: M,
+    pub mix_mat_b: M,
     pub mix_bias: Vec<f32>,
-    pub gate_w1: QuantMatrix,
+    pub gate_w1: M,
     pub gate_b1: Vec<f32>,
-    pub gate_w2: QuantMatrix,
+    pub gate_w2: M,
     pub gate_b2: Vec<f32>,
-    pub gate_w: QuantMatrix, // per-head blocks: head h owns rows h*hd..(h+1)*hd
+    pub gate_w: M, // per-head blocks: head h owns rows h*hd..(h+1)*hd
     pub gate_b: Vec<f32>,
-    pub fuse_w1: QuantMatrix,
+    pub fuse_w1: M,
     pub fuse_b1: Vec<f32>,
-    pub fuse_w2: QuantMatrix,
+    pub fuse_w2: M,
     pub fuse_b2: Vec<f32>,
-    pub wq: QuantMatrix,
+    pub wq: M,
     pub bq: Vec<f32>,
-    pub wk: QuantMatrix,
+    pub wk: M,
     pub bk: Vec<f32>,
-    pub wv: QuantMatrix,
+    pub wv: M,
     pub bv: Vec<f32>,
-    pub wo: QuantMatrix,
+    pub wo: M,
     pub bo: Vec<f32>,
 }
 
 /// One transformer block's quantized weights.
 #[derive(Debug, Clone)]
-pub struct QuantLayerWeights {
+pub struct QLayerWeights<M> {
     pub ln1_g: Vec<f32>,
     pub ln1_b: Vec<f32>,
     pub ln2_g: Vec<f32>,
     pub ln2_b: Vec<f32>,
-    pub ffn_w1: QuantMatrix, // out-major [F, D]
+    pub ffn_w1: M, // out-major [F, D]
     pub ffn_b1: Vec<f32>,
-    pub ffn_w2: QuantMatrix, // out-major [D, F]
+    pub ffn_w2: M, // out-major [D, F]
     pub ffn_b2: Vec<f32>,
-    pub mixer: QuantMixerWeights,
+    pub mixer: QMixerWeights<M>,
 }
 
-/// The full decoder's int8 representation: weight matrices quantized
-/// per output row, weight vectors carried in f32.  Built once from
+/// The full decoder's quantized representation: weight matrices in the
+/// store `M`, weight vectors carried in f32.  Built once from
 /// [`ModelWeights`] at model-load time; checkpoints are untouched.
 #[derive(Debug, Clone)]
-pub struct QuantWeights {
-    pub tok_emb: QuantMatrix, // [V, D], already out-major: logits AND embedding lookup
-    pub pos_emb: QuantMatrix, // [C, D] per-position rows (dequantized on lookup)
+pub struct QWeights<M> {
+    pub tok_emb: M, // [V, D], already out-major: logits AND embedding lookup
+    pub pos_emb: M, // [C, D] per-position rows (dequantized on lookup)
     pub lnf_g: Vec<f32>,
     pub lnf_b: Vec<f32>,
-    pub layers: Vec<QuantLayerWeights>,
+    pub layers: Vec<QLayerWeights<M>>,
 }
 
-impl QuantWeights {
+/// The int8 per-row-scale model representation.
+pub type QuantMixerWeights = QMixerWeights<QuantMatrix>;
+/// The int8 per-row-scale model representation.
+pub type QuantLayerWeights = QLayerWeights<QuantMatrix>;
+/// The int8 per-row-scale model representation.
+pub type QuantWeights = QWeights<QuantMatrix>;
+/// The int4 group-wise model representation.
+pub type Quant4MixerWeights = QMixerWeights<QuantMatrix4>;
+/// The int4 group-wise model representation.
+pub type Quant4LayerWeights = QLayerWeights<QuantMatrix4>;
+/// The int4 group-wise model representation.
+pub type Quant4Weights = QWeights<QuantMatrix4>;
+
+impl<M: QuantStore> QWeights<M> {
     /// Quantize a full f32 weight set.  Orientation per matrix follows
     /// its use in `engine.rs`: `matvec`-direction matrices (`[k, n]`)
     /// are transposed at quantization time, per-head tensors are
@@ -434,63 +680,101 @@ impl QuantWeights {
             let heads = spec.heads.max(1);
             let hd = d / heads;
             let f = spec.ffn.max(1);
-            layers.push(QuantLayerWeights {
+            layers.push(QLayerWeights {
                 ln1_g: lw.ln1_g.clone(),
                 ln1_b: lw.ln1_b.clone(),
                 ln2_g: lw.ln2_g.clone(),
                 ln2_b: lw.ln2_b.clone(),
-                ffn_w1: QuantMatrix::from_cols(&lw.ffn_w1, f),
+                ffn_w1: M::from_cols(&lw.ffn_w1, f),
                 ffn_b1: lw.ffn_b1.clone(),
-                ffn_w2: QuantMatrix::from_cols(&lw.ffn_w2, d),
+                ffn_w2: M::from_cols(&lw.ffn_w2, d),
                 ffn_b2: lw.ffn_b2.clone(),
-                mixer: QuantMixerWeights {
+                mixer: QMixerWeights {
                     mix_a: mw.mix_a.clone(),
                     mix_b: mw.mix_b.clone(),
-                    mix_mat_a: QuantMatrix::from_cols(&mw.mix_mat_a, d),
-                    mix_mat_b: QuantMatrix::from_cols(&mw.mix_mat_b, d),
+                    mix_mat_a: M::from_cols(&mw.mix_mat_a, d),
+                    mix_mat_b: M::from_cols(&mw.mix_mat_b, d),
                     mix_bias: mw.mix_bias.clone(),
-                    gate_w1: QuantMatrix::from_cols(&mw.gate_w1, gate1_hidden(&mw.gate_w1, d)),
+                    gate_w1: M::from_cols(&mw.gate_w1, gate1_hidden(&mw.gate_w1, d)),
                     gate_b1: mw.gate_b1.clone(),
-                    gate_w2: QuantMatrix::from_cols(&mw.gate_w2, d),
+                    gate_w2: M::from_cols(&mw.gate_w2, d),
                     gate_b2: mw.gate_b2.clone(),
-                    gate_w: QuantMatrix::from_col_blocks(&mw.gate_w, heads, 2 * hd, hd),
+                    gate_w: M::from_col_blocks(&mw.gate_w, heads, 2 * hd, hd),
                     gate_b: mw.gate_b.clone(),
-                    fuse_w1: QuantMatrix::from_col_blocks(
+                    fuse_w1: M::from_col_blocks(
                         &mw.fuse_w1,
                         heads,
                         2 * hd,
                         fuse_hidden(&mw.fuse_w1, heads, hd),
                     ),
                     fuse_b1: mw.fuse_b1.clone(),
-                    fuse_w2: QuantMatrix::from_col_blocks(
+                    fuse_w2: M::from_col_blocks(
                         &mw.fuse_w2,
                         heads,
                         fuse_hidden(&mw.fuse_w1, heads, hd),
                         hd,
                     ),
                     fuse_b2: mw.fuse_b2.clone(),
-                    wq: QuantMatrix::from_cols(&mw.wq, d),
+                    wq: M::from_cols(&mw.wq, d),
                     bq: mw.bq.clone(),
-                    wk: QuantMatrix::from_cols(&mw.wk, d),
+                    wk: M::from_cols(&mw.wk, d),
                     bk: mw.bk.clone(),
-                    wv: QuantMatrix::from_cols(&mw.wv, d),
+                    wv: M::from_cols(&mw.wv, d),
                     bv: mw.bv.clone(),
-                    wo: QuantMatrix::from_cols(&mw.wo, d),
+                    wo: M::from_cols(&mw.wo, d),
                     bo: mw.bo.clone(),
                 },
             });
         }
-        QuantWeights {
-            tok_emb: QuantMatrix::from_rows(&w.tok_emb, d),
-            pos_emb: QuantMatrix::from_rows(&w.pos_emb, d),
+        QWeights {
+            tok_emb: M::from_rows(&w.tok_emb, d),
+            pos_emb: M::from_rows(&w.pos_emb, d),
             lnf_g: w.lnf_g.clone(),
             lnf_b: w.lnf_b.clone(),
             layers,
         }
     }
 
-    /// Bytes of weight data resident in memory: int8 matrices (+ their
-    /// f32 row scales) and the f32 vectors.
+    /// FNV-1a over the quantized representation itself (packed bytes,
+    /// scales, f32 vectors) in a fixed traversal order — the
+    /// fingerprint source for weight sets **injected** pre-quantized
+    /// ([`crate::infer::Model::from_quant4`]), where no f32 checkpoint
+    /// exists to hash.  Any quantized-bit difference (a corrupted group
+    /// scale included) yields a different hash.
+    pub fn content_hash(&self) -> u64 {
+        use crate::util::hash;
+        let mut h = hash::FNV_OFFSET;
+        let vector = |h: &mut u64, t: &[f32]| {
+            for &x in t {
+                hash::fold(h, x.to_bits() as u64);
+            }
+            hash::fold(h, 0xff); // separator
+        };
+        self.tok_emb.fold_content(&mut h);
+        self.pos_emb.fold_content(&mut h);
+        vector(&mut h, &self.lnf_g);
+        vector(&mut h, &self.lnf_b);
+        for lw in &self.layers {
+            let mw = &lw.mixer;
+            for m in [
+                &lw.ffn_w1, &lw.ffn_w2, &mw.mix_mat_a, &mw.mix_mat_b, &mw.gate_w1, &mw.gate_w2,
+                &mw.gate_w, &mw.fuse_w1, &mw.fuse_w2, &mw.wq, &mw.wk, &mw.wv, &mw.wo,
+            ] {
+                m.fold_content(&mut h);
+            }
+            for v in [
+                &lw.ln1_g, &lw.ln1_b, &lw.ln2_g, &lw.ln2_b, &lw.ffn_b1, &lw.ffn_b2, &mw.mix_a,
+                &mw.mix_b, &mw.mix_bias, &mw.gate_b1, &mw.gate_b2, &mw.gate_b, &mw.fuse_b1,
+                &mw.fuse_b2, &mw.bq, &mw.bk, &mw.bv, &mw.bo,
+            ] {
+                vector(&mut h, v);
+            }
+        }
+        h
+    }
+
+    /// Bytes of weight data resident in memory: quantized matrices (+
+    /// their f32 scales) and the f32 vectors.
     pub fn resident_bytes(&self) -> usize {
         let mut bytes = self.tok_emb.resident_bytes()
             + self.pos_emb.resident_bytes()
@@ -674,6 +958,102 @@ mod tests {
         assert_eq!(q.layers[1].mixer.wq.rows(), 64);
         // fusion per-head blocks: H heads of hd outputs each.
         assert_eq!(q.layers[2].mixer.fuse_w1.rows(), 64);
+        assert_eq!(q.layers[2].mixer.fuse_w1.cols, 32);
+        assert_eq!(q.layers[2].mixer.fuse_w2.cols, 16);
+    }
+
+    #[test]
+    fn int4_precision_labels_and_parsing() {
+        assert_eq!(Precision::Int4.label(), "int4");
+        assert_eq!(Precision::parse("int4").unwrap(), Precision::Int4);
+        assert_eq!(Precision::parse("i4").unwrap(), Precision::Int4);
+        assert!(!Precision::F32.is_quantized());
+        assert!(Precision::Int8.is_quantized());
+        assert!(Precision::Int4.is_quantized());
+    }
+
+    #[test]
+    fn quant4_from_cols_matches_transposed_from_rows() {
+        let (k, n) = (45, 5); // k%32 != 0 and k%2 != 0: tail group + tail nibble
+        let w: Vec<f32> = (0..k * n).map(|i| 0.3 * (i as f32) - 7.0).collect(); // in-major [k, n]
+        let mut t = vec![0.0f32; k * n]; // out-major [n, k]
+        for i in 0..k {
+            for j in 0..n {
+                t[j * k + i] = w[i * n + j];
+            }
+        }
+        let a = QuantMatrix4::from_cols(&w, n);
+        let b = QuantMatrix4::from_rows(&t, k);
+        assert_eq!(a.cols, k);
+        assert_eq!(a.rows, n);
+        assert_eq!(a.row_bytes(), 23);
+        assert_eq!(a.row_groups(), 2);
+        assert_eq!(a.q, b.q);
+        let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.scale), bits(&b.scale));
+        assert!(QuantMatrix4::from_cols(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn quant4_col_blocks_match_per_block_from_cols() {
+        let (blocks, k, n) = (3, 40, 4);
+        let w: Vec<f32> =
+            (0..blocks * k * n).map(|i| (((i * 13) % 29) as f32) * 0.21 - 2.0).collect();
+        let all = QuantMatrix4::from_col_blocks(&w, blocks, k, n);
+        assert_eq!(all.rows, blocks * n);
+        assert_eq!(all.cols, k);
+        for b in 0..blocks {
+            let one = QuantMatrix4::from_cols(&w[b * k * n..(b + 1) * k * n], n);
+            let (q, s) = all.rows_slice(b * n, (b + 1) * n);
+            assert_eq!(q, &one.q[..], "block {b} int4 rows diverged");
+            assert_eq!(s, &one.scale[..], "block {b} group scales diverged");
+        }
+    }
+
+    #[test]
+    fn quant4_dequant_row_round_trips_within_half_group_scale() {
+        let d = 48; // one full group + one half group per row
+        let w: Vec<f32> = (0..3 * d).map(|i| 0.17 * (i as f32) - 4.0).collect();
+        let qm = QuantMatrix4::from_rows(&w, d);
+        let mut out = vec![0.0f32; d];
+        for r in 0..3 {
+            qm.dequant_row(r, &mut out);
+            for (i, (o, &x)) in out.iter().zip(&w[r * d..(r + 1) * d]).enumerate() {
+                let s = qm.scale[r * qm.row_groups() + i / crate::infer::tensor::Q4_GROUP];
+                assert!((o - x).abs() <= 0.5 * s + 1e-6, "row {r} tap {i}: {o} vs {x}");
+            }
+            let before = out.clone();
+            qm.dequant_row_add(r, &mut out);
+            for (a, b) in out.iter().zip(&before) {
+                assert_eq!(*a, 2.0 * b); // x + x is exact in f32
+            }
+        }
+    }
+
+    #[test]
+    fn int4_resident_bytes_are_at_most_20_percent_of_f32() {
+        use crate::config::LayerInfo;
+        // Packed nibbles cost 0.5 B/element + 4 B per 32-wide group
+        // (0.125 B/element of scales): matrices land at ~0.156x and the
+        // f32-kept vectors stay a rounding error.
+        let layers = vec![
+            LayerInfo { kind: "ab".into(), heads: 4, shifts: vec![1, 2, 4, 8], ffn: 128 },
+            LayerInfo { kind: "attn".into(), heads: 4, shifts: vec![1], ffn: 128 },
+            LayerInfo { kind: "fusion".into(), heads: 4, shifts: vec![2], ffn: 128 },
+        ];
+        let m = Manifest::synthetic("hsm_ab", layers, 64, 64, 300, 1);
+        let w = ModelWeights::from_flat(&m, &seeded_flat(&m, 11)).unwrap();
+        let q = Quant4Weights::from_weights(&m, &w);
+        let q8 = QuantWeights::from_weights(&m, &w);
+        let (fb, qb) = (w.resident_bytes(), q.resident_bytes());
+        assert!(qb * 5 <= fb, "int4 resident {qb} bytes vs f32 {fb} — above 0.20x");
+        let q8b = q8.resident_bytes();
+        assert!(qb * 3 <= q8b * 2, "int4 resident {qb} bytes vs int8 {q8b} — above 0.67x");
+        assert_eq!(q.layers.len(), 3);
+        assert_eq!(q.tok_emb.rows, 300);
+        assert_eq!(q.tok_emb.cols, 64);
+        // Same per-head blocking as the int8 representation.
+        assert_eq!(q.layers[2].mixer.fuse_w1.rows, 64);
         assert_eq!(q.layers[2].mixer.fuse_w1.cols, 32);
         assert_eq!(q.layers[2].mixer.fuse_w2.cols, 16);
     }

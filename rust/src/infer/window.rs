@@ -92,7 +92,10 @@ pub fn forward_full(model: &Model, tokens: &[i32]) -> Result<Vec<f32>> {
     // path, and the incremental int8 path is pinned against f32 by the
     // quant tolerance harness instead.
     let Some(w) = model.weights() else {
-        bail!("the full-context reference forward needs resident f32 weights (model is int8)");
+        bail!(
+            "the full-context reference forward needs resident f32 weights (model is {})",
+            model.precision().label()
+        );
     };
     let d = m.dim;
     let vocab = m.vocab;

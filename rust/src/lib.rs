@@ -183,9 +183,10 @@
 //! per full-model verify round.  Three drafters ship: `ngram`
 //! (model-free prompt lookup — strong on repetitive/copy-heavy text),
 //! `shallow` (the first K layers of the same shared-weight model), and
-//! `shallow-q` (the same K layers drafting on the **int8-quantized**
-//! shadow of those weights — cheaper drafts, identical served bytes,
-//! because verification always scores the full-precision model).
+//! `shallow-q` (the same K layers drafting on a **quantized** shadow
+//! of those weights — int8, or int4 when the serving model is int4 —
+//! cheaper drafts, identical served bytes, because verification
+//! always scores the serving model).
 //! Enable with [`serve::ServeCfg::speculation`] or the CLI:
 //!
 //! ```bash
@@ -211,8 +212,11 @@
 //! (the default hot path), explicit `std::arch` **AVX2** kernels behind
 //! `--features simd` chosen by runtime CPU detection with a portable
 //! chunked fallback ([`infer::tensor::kernel_backend`] says
-//! which is live), and an **int8** tier (`matvec_q` & co.) with the
-//! same naive/blocked/AVX2 ladder for quantized weights.  Every tier
+//! which is live), an **int8** tier (`matvec_q` & co.) with the
+//! same naive/blocked/AVX2 ladder for quantized weights, and an
+//! **int4** tier (`matvec_q4` & co.) packing two weights per byte
+//! with one f32 scale per 32-element group
+//! ([`infer::tensor::Q4_GROUP`]).  Every tier
 //! is **bit-identical** to its naive reference: no FMA,
 //! vectorisation only across independent accumulation chains, and the
 //! zero-tap row skip preserved — so the byte-exactness contracts
@@ -232,38 +236,63 @@
 //! `cargo bench --bench serve_throughput` records the kernel-tier and
 //! batched-row timings into `BENCH_serve.json`.
 //!
-//! ## Performance: int8 weight quantization
+//! ## Performance: weight quantization (int8 / int4)
 //!
-//! `--precision int8` (CLI) or
+//! `--precision int8 | int4` (CLI) or
 //! [`infer::Model::shared_with_precision`] quantizes the resident
-//! weights to **int8 with one f32 scale per output row**
-//! ([`infer::QuantWeights`], [`infer::Precision`]) at load time —
-//! checkpoints stay f32 on disk — and decodes on the int8 kernel tier.
-//! A weight row costs `cols + 4` bytes instead of `4·cols`, so the
-//! resident set shrinks to ~0.26–0.28× of f32 (asserted ≤ 0.30 by
+//! weights at load time — to **int8 with one f32 scale per output
+//! row** ([`infer::QuantWeights`]) or to **packed int4 with one f32
+//! scale per 32-weight group** ([`infer::Quant4Weights`],
+//! [`infer::Precision`]) — checkpoints stay f32 on disk — and decodes
+//! on the matching kernel tier.  A weight row costs `cols + 4` bytes
+//! (int8) or `⌈cols/2⌉ + 4·⌈cols/32⌉` bytes (int4) instead of
+//! `4·cols`, so the resident set shrinks to ~0.26–0.28× (int8) and
+//! ~0.16× (int4) of f32 (asserted ≤ 0.30 / ≤ 0.20 by
 //! `cargo bench --bench quantized`, which writes per-shape resident
 //! bytes and tok/s into `BENCH_quant.json`):
 //!
-//! | dim  | f32 row | int8 row | ratio |
-//! |------|---------|----------|-------|
-//! | 64   | 256 B   | 68 B     | 0.266 |
-//! | 192  | 768 B   | 196 B    | 0.255 |
-//! | 512  | 2048 B  | 516 B    | 0.252 |
+//! | dim  | f32 row | int8 row | ratio | int4 row | ratio |
+//! |------|---------|----------|-------|----------|-------|
+//! | 64   | 256 B   | 68 B     | 0.266 | 40 B     | 0.156 |
+//! | 192  | 768 B   | 196 B    | 0.255 | 120 B    | 0.156 |
+//! | 512  | 2048 B  | 516 B    | 0.252 | 320 B    | 0.156 |
+//!
+//! Activations stay int8 (one scale per row) at either precision, and
+//! their quantization is **hoisted**: each post-LN row is quantized
+//! once per layer into a reusable `(q, scale)` slab shared by every
+//! quantized matvec that consumes it (attention's Q/K/V drop from
+//! three `quantize_row` calls to one), on both the sequential `step`
+//! and fused `step_batch` paths — bit-identical to per-call
+//! quantization, A/B-timed with digest parity by the quantized bench.
 //!
 //! Quantized decoding is deterministic but **not** byte-identical to
 //! f32; `rust/tests/quant_tolerance.rs` pins the drift for every mixer
-//! kind (relative logit delta ≤ 0.15, perplexity ratio ≤ 1.30, greedy
-//! agreement ≥ 0.5 — healthy runs sit far inside all three) and proves
-//! the pins trip on a corrupted quantizer.  When served bytes must not
-//! move at all, keep the model f32 and put int8 on the **drafter**
-//! instead: `--drafter shallow-q:K` drafts on a lazily-quantized
-//! shadow of the first K layers while verification scores f32, so the
-//! output is byte-identical to plain decoding (pinned by
+//! kind (int8: relative logit delta ≤ 0.15, perplexity ratio ≤ 1.30,
+//! greedy agreement ≥ 0.5 — healthy runs sit far inside all three;
+//! int4 carries looser pins, 0.75 / 4.0 / 0.10) and proves both pin
+//! sets trip on a corrupted quantizer.  When served bytes must not
+//! move at all, keep the model f32 and put quantization on the
+//! **drafter** instead: `--drafter shallow-q:K` drafts on a
+//! lazily-quantized shadow of the first K layers (int4 models draft at
+//! int4) while verification scores the serving model, so the output is
+//! byte-identical to plain decoding (pinned by
 //! `rust/tests/spec_parity.rs`) and quantization error can only cost
 //! acceptance rate.  A serving stack declares its precision in
 //! [`serve::ServeCfg`] (`precision`), cross-checked against the model
 //! at construction, and `GET /healthz` reports
 //! `model.{precision, kernel_backend, resident_weight_bytes}`.
+//!
+//! At a quantized serving precision the prefix cache stores snapshots
+//! **in serving precision**: ring rows produced by quantized decoding
+//! carry int8 activation images, and [`serve::PrefixCache`] compacts
+//! a snapshot to those images at insert
+//! ([`infer::SessionState::compact`]) and re-expands on lookup
+//! ([`infer::SessionState::hydrate`]) — byte-exact restores, the
+//! precision folded into the cache key, with resident bytes and
+//! quantized-entry counts on `GET /healthz` and `GET /metrics`
+//! (`hsm_prefix_cache_resident_bytes`,
+//! `hsm_prefix_cache_quantized_entries`,
+//! `hsm_model_resident_weight_bytes`).
 //!
 //! ## Observability: `/metrics`, latency histograms, request logs
 //!

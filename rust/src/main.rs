@@ -192,8 +192,8 @@ fn cmd_evaluate(argv: &[String]) -> Result<()> {
 /// without them the error says exactly what is missing.
 ///
 /// `precision` is applied at load: checkpoints always stay f32 on disk;
-/// [`Precision::Int8`] quantizes the resident model
-/// ([`Model::shared_with_precision`]) and drops the f32 copy.
+/// [`Precision::Int8`] / [`Precision::Int4`] quantize the resident
+/// model ([`Model::shared_with_precision`]) and drop the f32 copy.
 fn native_model(
     preset: &str,
     variant: &str,
@@ -254,7 +254,7 @@ fn cmd_generate(argv: &[String]) -> Result<()> {
         .flag("samples", "1", "number of samples")
         .flag("speculate", "0", "speculative decoding: draft block length (0 = off; native engine only)")
         .flag("drafter", "ngram", "draft proposer: ngram[:N] | shallow[:K] | shallow-q[:K]")
-        .flag("precision", "f32", "weight precision: f32 | int8 (quantize at load; native engine only)")
+        .flag("precision", "f32", "weight precision: f32 | int8 | int4 (quantize at load; native engine only)")
         .parse(argv)
         .map_err(|e| anyhow!(e))?;
     let ctx = ctx_from_args(&a)?;
@@ -391,11 +391,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("max-queue-wait-ms", "0", "finish requests queued longer than this as timed_out (0 = wait forever)")
         .flag("prefix-cache", "32", "shared prompt-prefix cache entries (0 = disabled)")
         .flag("speculate", "0", "speculative decoding: draft block length (0 = off)")
-        .flag("drafter", "ngram", "draft proposer: ngram[:N] (prompt lookup) | shallow[:K] (first K layers) | shallow-q[:K] (first K layers on int8 weights)")
+        .flag("drafter", "ngram", "draft proposer: ngram[:N] (prompt lookup) | shallow[:K] (first K layers) | shallow-q[:K] (first K layers on quantized weights)")
         .flag("temperature", "0.8", "sampling temperature (0 = greedy)")
         .flag("top-k", "40", "top-k filter (0 = off)")
         .flag("max-new-tokens", "48", "maximum tokens per request")
-        .flag("precision", "f32", "weight precision: f32 | int8 (quantize at load; checkpoints stay f32)")
+        .flag("precision", "f32", "weight precision: f32 | int8 | int4 (quantize at load; checkpoints stay f32)")
         .optional("log-requests", "append one JSON line per request lifecycle event (admitted/started/first_token/finished) to this file")
         .parse(argv)
         .map_err(|e| anyhow!(e))?;

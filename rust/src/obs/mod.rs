@@ -176,6 +176,13 @@ pub struct CacheCounters {
     pub evictions: AtomicU64,
     /// Snapshots currently resident (gauge).
     pub entries: AtomicU64,
+    /// Approximate heap bytes of all resident snapshots (gauge) —
+    /// compacted int8-image entries report roughly a quarter of their
+    /// f32 size.
+    pub resident_bytes: AtomicU64,
+    /// Resident snapshots stored compacted at a quantized serving
+    /// precision (gauge; `entries - quantized_entries` are f32).
+    pub quantized_entries: AtomicU64,
 }
 
 impl CacheCounters {
@@ -188,14 +195,22 @@ impl CacheCounters {
         self.misses.fetch_add(1, Ordering::Relaxed);
     }
     #[inline]
-    pub fn inserted(&self) {
+    pub fn inserted(&self, bytes: u64, quantized: bool) {
         self.insertions.fetch_add(1, Ordering::Relaxed);
         self.entries.fetch_add(1, Ordering::Relaxed);
+        self.resident_bytes.fetch_add(bytes, Ordering::Relaxed);
+        if quantized {
+            self.quantized_entries.fetch_add(1, Ordering::Relaxed);
+        }
     }
     #[inline]
-    pub fn evicted(&self) {
+    pub fn evicted(&self, bytes: u64, quantized: bool) {
         self.evictions.fetch_add(1, Ordering::Relaxed);
         self.entries.fetch_sub(1, Ordering::Relaxed);
+        self.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        if quantized {
+            self.quantized_entries.fetch_sub(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -414,6 +429,9 @@ pub struct MetricsRegistry {
     // Shared counter groups.
     pub spec: SpecCounterGroup,
     cache: OnceCacheCounters,
+    /// Resident model-weight bytes by precision label, set once at
+    /// scheduler construction (`"-"`/0 until a model is registered).
+    model_resident: Mutex<(String, u64)>,
     // Per-stage timing cells, registered on session attach.
     stages: Mutex<BTreeMap<StageKey, Arc<StageCell>>>,
 }
@@ -496,6 +514,32 @@ impl MetricsRegistry {
     /// `PrefixCache` so `/metrics` and `cache.stats()` agree.
     pub fn cache_counters(&self) -> Arc<CacheCounters> {
         Arc::clone(&self.cache.0)
+    }
+
+    /// Register the served model's resident weight footprint (bytes at
+    /// its serving precision — `Model::resident_weight_bytes`), shown
+    /// as the `hsm_model_resident_weight_bytes{precision=...}` gauge.
+    /// Schedulers call this once at construction.
+    pub fn set_model_resident(&self, precision: &str, bytes: u64) {
+        let mut g = match self.model_resident.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        *g = (precision.to_string(), bytes);
+    }
+
+    /// The registered (precision label, resident weight bytes), or
+    /// `("-", 0)` before any model registered.
+    pub fn model_resident(&self) -> (String, u64) {
+        let g = match self.model_resident.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if g.0.is_empty() {
+            ("-".to_string(), 0)
+        } else {
+            g.clone()
+        }
     }
 
     /// Resolve (or register) the cell for one stage-timing key.
@@ -595,6 +639,40 @@ impl MetricsRegistry {
         let _ = writeln!(out, "# TYPE hsm_prefix_cache_entries gauge");
         let _ =
             writeln!(out, "hsm_prefix_cache_entries {}", cache.entries.load(Ordering::Relaxed));
+        let _ = writeln!(
+            out,
+            "# HELP hsm_prefix_cache_resident_bytes Approximate heap bytes of resident snapshots."
+        );
+        let _ = writeln!(out, "# TYPE hsm_prefix_cache_resident_bytes gauge");
+        let _ = writeln!(
+            out,
+            "hsm_prefix_cache_resident_bytes {}",
+            cache.resident_bytes.load(Ordering::Relaxed)
+        );
+        let _ = writeln!(
+            out,
+            "# HELP hsm_prefix_cache_quantized_entries Resident snapshots stored compacted at a \
+             quantized precision."
+        );
+        let _ = writeln!(out, "# TYPE hsm_prefix_cache_quantized_entries gauge");
+        let _ = writeln!(
+            out,
+            "hsm_prefix_cache_quantized_entries {}",
+            cache.quantized_entries.load(Ordering::Relaxed)
+        );
+
+        let (precision, bytes) = self.model_resident();
+        let _ = writeln!(
+            out,
+            "# HELP hsm_model_resident_weight_bytes Weight bytes resident at the serving \
+             precision."
+        );
+        let _ = writeln!(out, "# TYPE hsm_model_resident_weight_bytes gauge");
+        let _ = writeln!(
+            out,
+            "hsm_model_resident_weight_bytes{{precision=\"{}\"}} {bytes}",
+            escape_label(&precision)
+        );
 
         let spec = self.spec.snapshot();
         render_counter(
@@ -713,6 +791,9 @@ mod tests {
             "hsm_prompt_tokens_total",
             "hsm_prefix_cache_events_total",
             "hsm_prefix_cache_entries",
+            "hsm_prefix_cache_resident_bytes",
+            "hsm_prefix_cache_quantized_entries",
+            "hsm_model_resident_weight_bytes",
             "hsm_spec_rounds_total",
             "hsm_spec_tokens_total",
             "hsm_spec_fused_passes_total",
@@ -722,6 +803,31 @@ mod tests {
         ] {
             assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
         }
+    }
+
+    /// The PR-9 gauges: resident model weights render with their
+    /// precision label (`-`/0 before registration), and cache
+    /// byte/precision gauges track insert/evict symmetrically.
+    #[test]
+    fn resident_gauges_render_and_track() {
+        let r = MetricsRegistry::default();
+        let text = r.render_prometheus();
+        assert!(text.contains("hsm_model_resident_weight_bytes{precision=\"-\"} 0"));
+        r.set_model_resident("int4", 12345);
+        let text = r.render_prometheus();
+        assert!(text.contains("hsm_model_resident_weight_bytes{precision=\"int4\"} 12345"));
+
+        let c = r.cache_counters();
+        c.inserted(1000, true);
+        c.inserted(400, false);
+        let text = r.render_prometheus();
+        assert!(text.contains("hsm_prefix_cache_resident_bytes 1400"));
+        assert!(text.contains("hsm_prefix_cache_quantized_entries 1"));
+        assert!(text.contains("hsm_prefix_cache_entries 2"));
+        c.evicted(1000, true);
+        let text = r.render_prometheus();
+        assert!(text.contains("hsm_prefix_cache_resident_bytes 400"));
+        assert!(text.contains("hsm_prefix_cache_quantized_entries 0"));
     }
 
     #[test]

@@ -386,6 +386,10 @@ impl Scheduler {
         cfg.validate_resident()?;
         cfg.validate_model(&model)?;
         let obs = ObsRuntime::from_cfg(&cfg.obs);
+        if let Some(o) = &obs {
+            o.registry
+                .set_model_resident(model.precision().label(), model.resident_weight_bytes() as u64);
+        }
         let cache = (cfg.prefix_cache_size > 0).then(|| {
             Arc::new(match &obs {
                 // Cache events feed the metrics registry directly, so
@@ -450,6 +454,10 @@ pub fn serve(
 ) -> Result<Vec<Completion>> {
     cfg.validate_model(model)?;
     let obs = ObsRuntime::from_cfg(&cfg.obs);
+    if let Some(o) = &obs {
+        o.registry
+            .set_model_resident(model.precision().label(), model.resident_weight_bytes() as u64);
+    }
     let cache = (cfg.prefix_cache_size > 0).then(|| match &obs {
         Some(o) => PrefixCache::with_counters(
             model.fingerprint(),
@@ -1468,6 +1476,10 @@ impl StreamScheduler {
         cfg.validate_model(&model)?;
         let free = (0..cfg.max_active).map(|_| model.session()).collect();
         let obs = ObsRuntime::from_cfg(&cfg.obs);
+        if let Some(o) = &obs {
+            o.registry
+                .set_model_resident(model.precision().label(), model.resident_weight_bytes() as u64);
+        }
         let cache = (cfg.prefix_cache_size > 0).then(|| {
             Arc::new(match &obs {
                 Some(o) => PrefixCache::with_counters(

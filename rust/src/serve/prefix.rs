@@ -25,6 +25,20 @@
 //! scheduler workers behind one `Mutex` (lookups clone the snapshot out,
 //! so the lock is never held across a prefill).  Hit/miss/insertion/
 //! eviction counters feed `GET /healthz` and the serve benches.
+//!
+//! **Quantization-aware storage:** snapshots taken under a quantized
+//! serving precision carry an int8 image per ring row (the f32 row is
+//! *defined as* its dequantization), so [`PrefixCache::insert`]
+//! [`SessionState::compact`]s every snapshot before storing — dropping
+//! the f32 ring rows and roughly quartering the entry's ring bytes —
+//! and [`PrefixCache::lookup`] [`SessionState::hydrate`]s the clone it
+//! hands out, byte-exactly.  F32 snapshots have no images, compact is a
+//! no-op, and nothing changes.  The serving precision is part of the
+//! model fingerprint, so the precision is folded into the cache key by
+//! construction: an int8 server's snapshots can never hit an f32 (or
+//! int4) server's cache.  Per-entry byte and precision accounting feeds
+//! the `hsm_prefix_cache_resident_bytes` /
+//! `hsm_prefix_cache_quantized_entries` gauges.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::Ordering;
@@ -53,6 +67,11 @@ pub struct PrefixCacheStats {
     pub misses: u64,
     pub insertions: u64,
     pub evictions: u64,
+    /// Approximate heap bytes of all resident snapshots (compacted
+    /// quantized entries count their at-rest size).
+    pub resident_bytes: u64,
+    /// Resident entries stored compacted at a quantized precision.
+    pub quantized_entries: u64,
 }
 
 impl PrefixCacheStats {
@@ -68,9 +87,16 @@ impl PrefixCacheStats {
 }
 
 struct Entry {
+    /// Stored at rest: compacted when the snapshot carries a complete
+    /// quantized ring image (see [`SessionState::compact`]).
     state: SessionState,
     /// Recency stamp (global tick at last touch) — the LRU ordering.
     stamp: u64,
+    /// At-rest heap bytes (for the resident-bytes gauge; recorded at
+    /// insert so the evict-side decrement always balances).
+    bytes: u64,
+    /// Whether the entry is stored compacted (quantized image only).
+    quantized: bool,
 }
 
 struct Inner {
@@ -138,6 +164,11 @@ impl PrefixCache {
     /// A hit refreshes the entry's recency.  A fingerprint mismatch (or
     /// empty `tokens`) is a plain miss — never an error — so callers
     /// fall back to a cold prefill.
+    ///
+    /// Entries stored compacted (quantized precision) are
+    /// [`SessionState::hydrate`]d on the clone, outside the lock — the
+    /// caller always receives a ready-to-restore state, byte-identical
+    /// to the one inserted.
     pub fn lookup(&self, fingerprint: u64, tokens: &[u32]) -> Option<(usize, SessionState)> {
         if fingerprint != self.fingerprint || tokens.is_empty() {
             self.counters.miss();
@@ -151,8 +182,9 @@ impl PrefixCache {
         for &len in lens.iter().rev() {
             if let Some(e) = g.entries.get_mut(&tokens[..len]) {
                 e.stamp = tick;
-                let state = e.state.clone();
+                let mut state = e.state.clone();
                 drop(g);
+                state.hydrate();
                 self.counters.hit();
                 return Some((len, state));
             }
@@ -167,7 +199,7 @@ impl PrefixCache {
     /// be taken exactly at the prefix boundary.  At capacity, the
     /// least-recently-used entry is evicted.  Fingerprint mismatches and
     /// empty prefixes are ignored.
-    pub fn insert(&self, fingerprint: u64, tokens: &[u32], state: SessionState) {
+    pub fn insert(&self, fingerprint: u64, tokens: &[u32], mut state: SessionState) {
         if fingerprint != self.fingerprint || tokens.is_empty() {
             return;
         }
@@ -176,6 +208,12 @@ impl PrefixCache {
             tokens.len(),
             "snapshot position must sit at the prefix boundary"
         );
+        // Store at the serving precision: a quantized-precision snapshot
+        // drops its f32 ring rows here (no-op for f32 snapshots), and
+        // lookup() rehydrates byte-exactly.  Done outside the lock.
+        state.compact();
+        let quantized = state.is_compacted();
+        let bytes = state.resident_bytes() as u64;
         let mut g = self.inner.lock().expect("prefix cache lock");
         g.tick += 1;
         let tick = g.tick;
@@ -190,20 +228,21 @@ impl PrefixCache {
             if let Some(victim) =
                 g.entries.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
             {
-                g.entries.remove(&victim);
-                if let Some(n) = g.lens.get_mut(&victim.len()) {
-                    *n -= 1;
-                    if *n == 0 {
-                        g.lens.remove(&victim.len());
+                if let Some(evicted) = g.entries.remove(&victim) {
+                    if let Some(n) = g.lens.get_mut(&victim.len()) {
+                        *n -= 1;
+                        if *n == 0 {
+                            g.lens.remove(&victim.len());
+                        }
                     }
+                    self.counters.evicted(evicted.bytes, evicted.quantized);
                 }
-                self.counters.evicted();
             }
         }
         *g.lens.entry(tokens.len()).or_insert(0) += 1;
-        g.entries.insert(tokens.to_vec(), Entry { state, stamp: tick });
+        g.entries.insert(tokens.to_vec(), Entry { state, stamp: tick, bytes, quantized });
         drop(g);
-        self.counters.inserted();
+        self.counters.inserted(bytes, quantized);
     }
 
     /// The shared counter cells this cache records into.
@@ -221,6 +260,8 @@ impl PrefixCache {
             misses: self.counters.misses.load(Ordering::Relaxed),
             insertions: self.counters.insertions.load(Ordering::Relaxed),
             evictions: self.counters.evictions.load(Ordering::Relaxed),
+            resident_bytes: self.counters.resident_bytes.load(Ordering::Relaxed),
+            quantized_entries: self.counters.quantized_entries.load(Ordering::Relaxed),
         }
     }
 }
@@ -298,6 +339,67 @@ mod tests {
         cache.insert(other.fingerprint(), &[7, 8], snap(&other, &[7, 8]));
         assert_eq!(cache.len(), 1, "foreign-model insert must be ignored");
         assert!(cache.lookup(md.fingerprint(), &[1, 2]).is_some());
+    }
+
+    /// Quantized-precision snapshots are stored compacted (at-rest
+    /// bytes well below the hydrated size), hits hand back a hydrated,
+    /// restore-ready state whose continued decode is byte-identical,
+    /// and the resident-bytes/quantized-entries gauges balance across
+    /// insert and evict.
+    #[test]
+    fn quantized_snapshots_are_stored_compacted_and_restore_byte_exact() {
+        use crate::infer::Precision;
+        let f32_md = model(1);
+        let flat = weights::seeded_flat(&f32_md.manifest, 1);
+        let md = Model::shared_with_precision(
+            f32_md.manifest.clone(),
+            ModelWeights::from_flat(&f32_md.manifest, &flat).unwrap(),
+            Precision::Int4,
+        )
+        .unwrap();
+        let fp = md.fingerprint();
+        assert_ne!(fp, f32_md.fingerprint(), "precision must be folded into the cache key");
+        let cache = PrefixCache::new(fp, 2);
+
+        let prefix = [5u32, 9, 3, 7];
+        let full = snap(&md, &prefix);
+        let hydrated_bytes = full.resident_bytes() as u64;
+        cache.insert(fp, &prefix, full);
+        let s = cache.stats();
+        assert_eq!(s.quantized_entries, 1, "int4 snapshot must be stored compacted");
+        assert!(
+            s.resident_bytes < hydrated_bytes,
+            "at-rest bytes {} must undercut hydrated {}",
+            s.resident_bytes,
+            hydrated_bytes
+        );
+
+        // The hit is hydrated and decodes byte-identically to a cold
+        // session that stepped the same prefix.
+        let (len, state) = cache.lookup(fp, &[5, 9, 3, 7, 2]).expect("hit");
+        assert_eq!(len, 4);
+        assert!(!state.is_compacted(), "lookup must hand out hydrated state");
+        let mut warm = md.session_from(state).unwrap();
+        let mut cold = md.session();
+        cold.prefill(&prefix).unwrap();
+        let a: Vec<u32> = warm.step(2).unwrap().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = cold.step(2).unwrap().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "decode from a quantized cache hit diverged");
+
+        // Evicting returns the gauges to a consistent state.
+        cache.insert(fp, &[1], snap(&md, &[1]));
+        cache.insert(fp, &[2], snap(&md, &[2])); // evicts the LRU entry
+        let s = cache.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.quantized_entries, 2);
+
+        // F32 snapshots are stored as-is: no quantized entries.
+        let fcache = PrefixCache::new(f32_md.fingerprint(), 2);
+        fcache.insert(f32_md.fingerprint(), &[1, 2], snap(&f32_md, &[1, 2]));
+        let s = fcache.stats();
+        assert_eq!(s.quantized_entries, 0);
+        assert!(s.resident_bytes > 0);
     }
 
     #[test]

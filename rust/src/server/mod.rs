@@ -377,6 +377,10 @@ fn handle_health(inner: &ServerInner, w: &mut impl Write, keep_alive: bool) -> R
                 ("insertions", json::num(s.insertions as f64)),
                 ("evictions", json::num(s.evictions as f64)),
                 ("hit_rate", json::num(s.hit_rate())),
+                // Quantization-aware storage: at-rest snapshot bytes and
+                // how many entries sit compacted at the serving precision.
+                ("resident_bytes", json::num(s.resident_bytes as f64)),
+                ("quantized_entries", json::num(s.quantized_entries as f64)),
             ]),
         ));
     }

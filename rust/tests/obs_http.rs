@@ -114,6 +114,9 @@ fn metrics_route_exposes_every_family_and_counts_the_traffic() {
         "hsm_prompt_tokens_total",
         "hsm_prefix_cache_events_total",
         "hsm_prefix_cache_entries",
+        "hsm_prefix_cache_resident_bytes",
+        "hsm_prefix_cache_quantized_entries",
+        "hsm_model_resident_weight_bytes",
         "hsm_spec_rounds_total",
         "hsm_spec_tokens_total",
         "hsm_spec_fused_passes_total",
@@ -136,6 +139,12 @@ fn metrics_route_exposes_every_family_and_counts_the_traffic() {
     assert_eq!(series["hsm_ttft_seconds_count"], nonempty as f64);
     assert_eq!(series["hsm_token_latency_seconds_count"], (generated - nonempty) as f64);
     assert!(series["hsm_prefix_cache_events_total{event=\"hit\"}"] >= 1.0);
+    // An f32 model: the resident-weight gauge carries the precision
+    // label and the cache holds unquantized snapshots with a real
+    // byte footprint.
+    assert!(series["hsm_model_resident_weight_bytes{precision=\"f32\"}"] > 0.0);
+    assert!(series["hsm_prefix_cache_resident_bytes"] > 0.0);
+    assert_eq!(series["hsm_prefix_cache_quantized_entries"], 0.0);
     // No speculation configured: those families render but stay zero.
     assert_eq!(series["hsm_spec_rounds_total"], 0.0);
 

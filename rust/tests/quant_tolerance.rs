@@ -1,5 +1,5 @@
-//! Quantization tolerance harness: pins how far int8 decoding may
-//! drift from f32 on the *same* checkpoint, for every mixer kind.
+//! Quantization tolerance harness: pins how far int8 and int4 decoding
+//! may drift from f32 on the *same* checkpoint, for every mixer kind.
 //!
 //! Three pinned metrics, measured over a teacher-forced greedy decode
 //! (both models consume the f32 model's greedy continuation, so every
@@ -16,14 +16,21 @@
 //! per-row-scale int8 path produces (~1–5% relative), but orders of
 //! magnitude tighter than any real kernel/quantizer regression — and a
 //! companion test corrupts the quantized weights to prove the harness
-//! actually trips.  Both precisions share one `seeded_flat` checkpoint,
+//! actually trips.  All precisions share one `seeded_flat` checkpoint,
 //! so a failure here is quantization drift, never weight drift.
+//!
+//! The int4 tier gets its own (much looser) pins: at d = 16 every
+//! weight row is a single 32-element scale group, so per-weight error
+//! runs ~7% and compounds through two layers — int4 on a tiny random
+//! checkpoint is expected to disagree with f32 often, and the pins
+//! only guard against the step change a kernel or group-scale bug
+//! produces (the int4 trip test corrupts group scales to prove it).
 
 use std::sync::Arc;
 
 use hsm::config::{LayerInfo, Manifest};
 use hsm::generation::argmax;
-use hsm::infer::{weights, DecodeSession, Model, ModelWeights, Precision};
+use hsm::infer::{weights, DecodeSession, Model, ModelWeights, Precision, Quant4Weights};
 
 const KINDS: &[&str] = &["ab", "vec", "mat", "gate1", "gate2", "fusion", "attn"];
 
@@ -46,11 +53,20 @@ fn manifest_for(kind: &str) -> Manifest {
 
 /// f32 and int8 models over the identical flat checkpoint.
 fn pair_for(kind: &str) -> (Arc<Model>, Arc<Model>) {
+    pair_at(kind, Precision::Int8)
+}
+
+/// f32 and int4 models over the identical flat checkpoint.
+fn pair4_for(kind: &str) -> (Arc<Model>, Arc<Model>) {
+    pair_at(kind, Precision::Int4)
+}
+
+fn pair_at(kind: &str, precision: Precision) -> (Arc<Model>, Arc<Model>) {
     let m = manifest_for(kind);
     let flat = weights::seeded_flat(&m, 31);
     let f = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap();
     let w = ModelWeights::from_flat(&m, &flat).unwrap();
-    let q = Model::shared_with_precision(m, w, Precision::Int8).unwrap();
+    let q = Model::shared_with_precision(m, w, precision).unwrap();
     (f, q)
 }
 
@@ -181,5 +197,87 @@ fn tolerance_harness_detects_a_corrupted_quantization() {
     assert!(
         rel > MAX_REL_LOGIT_DELTA,
         "corrupted weights must exceed the logit pin (got {rel:.4})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Int4 tier
+// ---------------------------------------------------------------------------
+
+/// Relative logit error pin for int4 (healthy on this checkpoint:
+/// ~0.1–0.4 — one scale group per row at d = 16 means ~7% per-weight
+/// error before compounding).
+const MAX_REL_LOGIT_DELTA_I4: f32 = 0.75;
+/// Perplexity-ratio pin for int4 (healthy: < 2).
+const MAX_PPL_RATIO_I4: f64 = 4.0;
+/// Greedy agreement pin for int4 (healthy: > 0.3; chance: 1/300).
+const MIN_AGREEMENT_I4: f64 = 0.10;
+
+#[test]
+fn int4_decoding_stays_within_tolerance_for_every_mixer_kind() {
+    for kind in KINDS {
+        let (f, q) = pair4_for(kind);
+        let t = measure(&f, &q, STEPS);
+        assert!(
+            t.max_logit_delta.is_finite() && t.logit_scale.is_finite() && t.logit_scale > 0.0,
+            "{kind}: degenerate int4 logits (delta {} scale {})",
+            t.max_logit_delta,
+            t.logit_scale
+        );
+        let rel = t.max_logit_delta / t.logit_scale.max(1.0);
+        assert!(
+            rel <= MAX_REL_LOGIT_DELTA_I4,
+            "{kind}: int4 logit drift {rel:.4} exceeds {MAX_REL_LOGIT_DELTA_I4} \
+             (max delta {} at scale {})",
+            t.max_logit_delta,
+            t.logit_scale
+        );
+        assert!(
+            t.ppl_ratio <= MAX_PPL_RATIO_I4,
+            "{kind}: int4 perplexity ratio {:.4} exceeds {MAX_PPL_RATIO_I4}",
+            t.ppl_ratio
+        );
+        assert!(
+            t.agreement >= MIN_AGREEMENT_I4,
+            "{kind}: int4 greedy agreement {:.3} below {MIN_AGREEMENT_I4}",
+            t.agreement
+        );
+    }
+}
+
+/// Int4 decoding must be exactly reproducible, same as int8: the loose
+/// pins bound f32↔int4 distance, never run-to-run noise.
+#[test]
+fn int4_tolerance_metrics_are_deterministic() {
+    let (f, q) = pair4_for("ab");
+    let x = measure(&f, &q, STEPS);
+    let y = measure(&f, &q, STEPS);
+    assert_eq!(x.max_logit_delta.to_bits(), y.max_logit_delta.to_bits());
+    assert_eq!(x.logit_scale.to_bits(), y.logit_scale.to_bits());
+    assert_eq!(x.ppl_ratio.to_bits(), y.ppl_ratio.to_bits());
+    assert_eq!(x.agreement.to_bits(), y.agreement.to_bits());
+}
+
+/// The int4 pins must actually trip on a group-scale regression: blow
+/// up the already-quantized embedding group scales 4× (the int4
+/// analogue of a broken group quantizer — the corruption happens
+/// *after* quantization, so only the dequantization story changes) and
+/// require the int4 logit pin to fire.
+#[test]
+fn int4_tolerance_harness_detects_corrupted_group_scales() {
+    let m = manifest_for("ab");
+    let flat = weights::seeded_flat(&m, 31);
+    let f = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat).unwrap()).unwrap();
+    let w = ModelWeights::from_flat(&m, &flat).unwrap();
+    let mut q4 = Quant4Weights::from_weights(&m, &w);
+    for s in q4.tok_emb.scale.iter_mut() {
+        *s *= 4.0;
+    }
+    let bad = Model::from_quant4(m, q4).unwrap();
+    let t = measure(&f, &bad, STEPS);
+    let rel = t.max_logit_delta / t.logit_scale.max(1.0);
+    assert!(
+        rel > MAX_REL_LOGIT_DELTA_I4,
+        "corrupted group scales must exceed the int4 logit pin (got {rel:.4})"
     );
 }

@@ -16,12 +16,19 @@
 //! `matvec_q_naive`/`matmul_q_naive` bit-for-bit, across lane-remainder
 //! shapes, empty/degenerate outputs, saturated ±127 rows, zero rows,
 //! and extreme per-row scales.
+//!
+//! The int4 tier adds the group axis: shapes straddling `Q4_GROUP`
+//! boundaries (`k % 32 != 0`, including 31/33/64/65), saturated ±7
+//! nibbles, all-zero groups (scale 0), degenerate quantization of
+//! NaN/∞-bearing rows, and extreme per-group scales — every tier
+//! bit-for-bit against `matvec_q4_naive`/`matmul_q4_naive`.
 
 use hsm::infer::tensor::{
-    matmul, matmul_blocked, matmul_naive, matmul_q, matmul_q_blocked, matmul_q_naive, matmul_t,
-    matmul_t_blocked, matmul_t_naive, matmul_t_q, matvec, matvec_blocked, matvec_naive, matvec_q,
-    matvec_q_blocked, matvec_q_naive, matvec_t, matvec_t_blocked, matvec_t_naive, matvec_t_q,
-    quantize_row,
+    matmul, matmul_blocked, matmul_naive, matmul_q, matmul_q4, matmul_q4_blocked, matmul_q4_naive,
+    matmul_q_blocked, matmul_q_naive, matmul_t, matmul_t_blocked, matmul_t_naive, matmul_t_q,
+    matmul_t_q4, matvec, matvec_blocked, matvec_naive, matvec_q, matvec_q4, matvec_q4_blocked,
+    matvec_q4_naive, matvec_q_blocked, matvec_q_naive, matvec_t, matvec_t_blocked, matvec_t_naive,
+    matvec_t_q, matvec_t_q4, q4_row_bytes, q4_row_groups, quantize_row, quantize_row_q4, Q4_GROUP,
 };
 #[cfg(feature = "simd")]
 use hsm::infer::tensor::simd;
@@ -342,6 +349,290 @@ fn prop_zero_rows_skip_nan_weights_in_every_tier() {
             let mut got = vec![7.0f32; n];
             f(&x, &w, n, &mut got);
             assert_bits_eq(&got, &want, &format!("zero-skip {tier} k={k} n={n}"));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Int4 tier (packed group-wise weights, int8 activations)
+// ---------------------------------------------------------------------------
+
+/// Shapes biased toward `Q4_GROUP` boundaries: k one off either side of
+/// a group edge (31/33/64/65) as well as the sub-group and exact-group
+/// sizes the int8 shapes cover.
+fn arb_shape4(rng: &mut Rng) -> (usize, usize) {
+    let k = *rng.pick(&[0usize, 1, 3, 7, 8, 13, 16, 31, 32, 33, 64, 65, 96]);
+    let n = *rng.pick(&[0usize, 1, 2, 7, 8, 11, 24]);
+    (k, n)
+}
+
+/// An out-major packed int4 matrix (`[n, ⌈k/2⌉]` bytes, `[n, ⌈k/32⌉]`
+/// group scales).  Half the time the rows come from the real
+/// `quantize_row_q4` on edge-valued f32s — exactly what
+/// `Quant4Weights` stores, including scale-0 degenerate groups — and
+/// half the time from adversarial nibbles in `[-7, 7]` (the quantizer
+/// never emits −8) biased toward saturation and zero, under extreme
+/// group scales.
+fn arb_q4matrix(rng: &mut Rng, k: usize, n: usize) -> (Vec<u8>, Vec<f32>) {
+    let kb = q4_row_bytes(k);
+    let groups = q4_row_groups(k);
+    let mut wq = vec![0u8; n * kb];
+    let mut scales = vec![0.0f32; n * groups];
+    if rng.chance(0.5) {
+        for j in 0..n {
+            let row = arb_edge_f32s(rng, k, 2.0);
+            quantize_row_q4(
+                &row,
+                &mut wq[j * kb..(j + 1) * kb],
+                &mut scales[j * groups..(j + 1) * groups],
+            );
+        }
+    } else {
+        for j in 0..n {
+            for i in 0..k {
+                let v: i8 = if rng.chance(0.25) {
+                    *rng.pick(&[-7i8, 7, 0])
+                } else {
+                    (rng.below(15) as i32 - 7) as i8
+                };
+                let nib = (v as u8) & 0x0F;
+                wq[j * kb + i / 2] |= if i % 2 == 0 { nib } else { nib << 4 };
+            }
+        }
+        let s = arb_scales(rng, n * groups);
+        scales.copy_from_slice(&s);
+    }
+    (wq, scales)
+}
+
+/// Every int4 tier must be bit-identical to the naive int4 reference:
+/// the per-group i32 dot is exact, and the ascending-group f32 fold
+/// through the shared `scale_out` expression makes the conversion
+/// unique.  Activations arrive both pre-built and through the real
+/// `quantize_row`, matching what decode feeds the kernels.
+#[test]
+fn prop_int4_matvec_tiers_match_naive_bit_for_bit() {
+    prop::check_n("int4-matvec-tiers", prop::default_cases(), |rng| {
+        let (k, n) = arb_shape4(rng);
+        let (qx, sx) = if rng.chance(0.5) {
+            (arb_qrow(rng, k), *rng.pick(&[0.0f32, 1.0e-30, 3.4e30, 2.0e-2]))
+        } else {
+            let x = arb_edge_f32s(rng, k, 2.0);
+            let mut q = vec![0i8; k];
+            let s = quantize_row(&x, &mut q);
+            (q, s)
+        };
+        let (wq, scales) = arb_q4matrix(rng, k, n);
+
+        let mut want = vec![0.0f32; n];
+        matvec_q4_naive(&qx, sx, &wq, &scales, &mut want);
+
+        let mut got = vec![7.0f32; n]; // poison: kernels must overwrite
+        matvec_q4_blocked(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_q4_blocked k={k} n={n}"));
+
+        got.fill(7.0);
+        matvec_q4(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_q4 dispatched k={k} n={n}"));
+
+        // The transposed entry point is documented as the same kernel
+        // (packed int4 storage is always out-major).
+        got.fill(7.0);
+        matvec_t_q4(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matvec_t_q4 k={k} n={n}"));
+
+        #[cfg(feature = "simd")]
+        {
+            got.fill(7.0);
+            simd::matvec_q4(&qx, sx, &wq, &scales, &mut got);
+            assert_bits_eq(&got, &want, &format!("simd::matvec_q4 k={k} n={n}"));
+        }
+    });
+}
+
+/// Batched int4 tiers: row r of every tier must be bit-identical to a
+/// single-row `matvec_q4_naive` call — the fused speculative verify
+/// pass and `rewind` + re-step depend on this.
+#[test]
+fn prop_int4_batched_kernels_match_per_row_naive_bit_for_bit() {
+    prop::check_n("int4-matmul-tiers", prop::default_cases(), |rng| {
+        let (k, n) = arb_shape4(rng);
+        let m = rng.below(5); // includes the empty batch
+        let qxs = arb_qrow(rng, m * k);
+        let sxs = arb_scales(rng, m);
+        let (wq, scales) = arb_q4matrix(rng, k, n);
+
+        let mut want = vec![0.0f32; m * n];
+        matmul_q4_naive(&qxs, m, &sxs, &wq, &scales, &mut want);
+        for r in 0..m {
+            let mut row = vec![0.0f32; n];
+            matvec_q4_naive(&qxs[r * k..(r + 1) * k], sxs[r], &wq, &scales, &mut row);
+            assert_bits_eq(&row, &want[r * n..(r + 1) * n], &format!("matmul_q4_naive row {r}"));
+        }
+
+        let mut got = vec![7.0f32; m * n];
+        if m > 0 {
+            // The blocked core itself (the dispatcher handles m = 0).
+            matmul_q4_blocked(&qxs, m, &sxs, &wq, &scales, &mut got);
+            assert_bits_eq(&got, &want, &format!("matmul_q4_blocked m={m} k={k} n={n}"));
+            got.fill(7.0);
+        }
+        matmul_q4(&qxs, m, &sxs, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matmul_q4 dispatched m={m} k={k} n={n}"));
+
+        got.fill(7.0);
+        matmul_t_q4(&qxs, m, &sxs, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("matmul_t_q4 m={m} k={k} n={n}"));
+
+        #[cfg(feature = "simd")]
+        if m > 0 {
+            got.fill(7.0);
+            simd::matmul_q4(&qxs, m, &sxs, &wq, &scales, &mut got);
+            assert_bits_eq(&got, &want, &format!("simd::matmul_q4 m={m} k={k} n={n}"));
+        }
+    });
+}
+
+/// Saturated int4 groups (all nibbles ±7 against ±127 activations)
+/// peak each group's i32 dot at 32·127·7 = 28 448 — comfortably exact
+/// — and every tier must reproduce the reference's per-group
+/// `(sum as f32) * (sx * scale)` ascending-group fold bit-for-bit,
+/// including on k that straddles a group boundary.  All-zero groups
+/// (scale 0, zero nibbles) must contribute nothing in every tier.
+#[test]
+fn prop_int4_saturated_and_zero_groups_stay_exact() {
+    prop::check_n("int4-saturation", prop::default_cases(), |rng| {
+        let k = *rng.pick(&[1usize, 31, 32, 33, 64, 65, 96, 257]);
+        let n = *rng.pick(&[1usize, 4, 5]);
+        let kb = q4_row_bytes(k);
+        let groups = q4_row_groups(k);
+        let qx: Vec<i8> = (0..k).map(|_| if rng.chance(0.5) { 127i8 } else { -127 }).collect();
+        let mut wq = vec![0u8; n * kb];
+        for j in 0..n {
+            for i in 0..k {
+                let v: i8 = if rng.chance(0.5) { 7 } else { -7 };
+                let nib = (v as u8) & 0x0F;
+                wq[j * kb + i / 2] |= if i % 2 == 0 { nib } else { nib << 4 };
+            }
+        }
+        // Knock a random group per row down to the degenerate contract:
+        // zero nibbles, scale 0 — the shape an all-zero f32 group takes.
+        let mut scales = arb_scales(rng, n * groups);
+        for j in 0..n {
+            let g = rng.below(groups);
+            let lo = g * Q4_GROUP;
+            let hi = (lo + Q4_GROUP).min(k);
+            for i in lo..hi {
+                let mask = if i % 2 == 0 { 0xF0u8 } else { 0x0F };
+                wq[j * kb + i / 2] &= mask;
+            }
+            scales[j * groups + g] = 0.0;
+        }
+        let sx = 3.1e-2f32;
+
+        let mut want = vec![0.0f32; n];
+        matvec_q4_naive(&qx, sx, &wq, &scales, &mut want);
+        // The reference itself must carry the exact per-group integer
+        // dot, folded in ascending group order.
+        for (j, &y) in want.iter().enumerate() {
+            let row = &wq[j * kb..(j + 1) * kb];
+            let mut acc = 0.0f32;
+            for g in 0..groups {
+                let lo = g * Q4_GROUP;
+                let hi = (lo + Q4_GROUP).min(k);
+                let mut sum = 0i64;
+                for i in lo..hi {
+                    let b = row[i / 2];
+                    let nib =
+                        if i % 2 == 0 { ((b << 4) as i8 >> 4) as i64 } else { (b as i8 >> 4) as i64 };
+                    sum += qx[i] as i64 * nib;
+                }
+                acc += (sum as i32 as f32) * (sx * scales[j * groups + g]);
+            }
+            assert_eq!(y.to_bits(), acc.to_bits(), "reference group fold diverged (j={j})");
+        }
+
+        let mut got = vec![7.0f32; n];
+        matvec_q4_blocked(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("saturated q4 blocked k={k} n={n}"));
+        got.fill(7.0);
+        matvec_q4(&qx, sx, &wq, &scales, &mut got);
+        assert_bits_eq(&got, &want, &format!("saturated q4 dispatched k={k} n={n}"));
+
+        // A fully degenerate activation (zero row, scale 0) must come
+        // out as exact zeros from every tier, not tiny scaled noise.
+        let zeros = vec![0i8; k];
+        let mut zy = vec![7.0f32; n];
+        matvec_q4(&zeros, 0.0, &wq, &scales, &mut zy);
+        for (j, y) in zy.iter().enumerate() {
+            assert_eq!(y.to_bits(), 0.0f32.to_bits(), "zero q4 row must stay exactly zero (j={j})");
+        }
+    });
+}
+
+/// `quantize_row_q4`'s degenerate contract, fuzzed: an all-zero group
+/// (or one whose max is non-finite) must produce scale 0 and zero
+/// nibbles; NaN entries under a finite group max must quantize to 0;
+/// finite entries must round-trip within half a quantization step of
+/// their group's scale.
+#[test]
+fn prop_quantize_row_q4_degenerate_groups_follow_the_contract() {
+    prop::check_n("q4-quantizer-contract", prop::default_cases(), |rng| {
+        let k = *rng.pick(&[31usize, 32, 33, 64, 65, 96]);
+        let groups = q4_row_groups(k);
+        let mut x = prop::arb_f32s(rng, k, 2.0);
+        // Group 0 all zeros; one group gets an ∞ (non-finite max); one
+        // finite-max group gets a NaN entry.
+        for v in x.iter_mut().take(Q4_GROUP.min(k)) {
+            *v = 0.0;
+        }
+        let ginf = rng.below(groups);
+        if ginf != 0 {
+            x[ginf * Q4_GROUP] = f32::INFINITY;
+        }
+        let gnan = rng.below(groups);
+        if gnan != 0 && gnan != ginf {
+            let lo = gnan * Q4_GROUP;
+            x[lo] = f32::NAN;
+            if lo + 1 < k {
+                x[lo + 1] = 1.5; // keep the group max finite and nonzero
+            }
+        }
+
+        let mut q = vec![0xAAu8; q4_row_bytes(k)]; // poison
+        let mut scales = vec![7.0f32; groups];
+        quantize_row_q4(&x, &mut q, &mut scales);
+
+        let nib_at = |i: usize| -> i32 {
+            let b = q[i / 2];
+            if i % 2 == 0 { ((b << 4) as i8 >> 4) as i32 } else { (b as i8 >> 4) as i32 }
+        };
+        for (g, &sg) in scales.iter().enumerate() {
+            let lo = g * Q4_GROUP;
+            let hi = (lo + Q4_GROUP).min(k);
+            let maxabs = x[lo..hi].iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if maxabs == 0.0 || !maxabs.is_finite() {
+                assert_eq!(sg, 0.0, "degenerate group {g} must get scale 0");
+                for i in lo..hi {
+                    assert_eq!(nib_at(i), 0, "degenerate group {g} must pack zero nibbles");
+                }
+                continue;
+            }
+            assert!((sg - maxabs / 7.0).abs() <= f32::EPSILON * maxabs, "group {g} scale");
+            for i in lo..hi {
+                let v = nib_at(i);
+                assert!((-7..=7).contains(&v), "nibble out of range in group {g}");
+                if x[i].is_nan() {
+                    assert_eq!(v, 0, "NaN under a finite max must quantize to 0");
+                } else {
+                    let back = v as f32 * sg;
+                    assert!(
+                        (x[i] - back).abs() <= 0.5 * sg + 1e-6,
+                        "round-trip out of tolerance at {i}: {} vs {back}",
+                        x[i]
+                    );
+                }
+            }
         }
     });
 }
