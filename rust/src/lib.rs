@@ -37,6 +37,7 @@
 //! | [`generation`] | sampling + [`generation::generate`] / [`generation::generate_batch`] over any [`infer::Decoder`]; [`generation::WindowDecoder`] |
 //! | [`serve`]     | **serving**: continuous-batching [`serve::Scheduler`] — [`serve::Request`]→[`serve::Completion`] lifecycle, admission control (`max_active`, `max_queue_wait`), worker threads over disjoint sessions; shared [`serve::PrefixCache`] of prompt-head snapshots; byte-exact speculative decoding ([`serve::ServeCfg::speculation`], drafters in [`infer::speculate`]); resident [`serve::StreamScheduler`] emitting per-token [`serve::TokenEvent`]s, cancel-on-disconnect |
 //! | [`server`]    | **cross-process serving**: hand-rolled HTTP/1.1 front-end — `POST /v1/generate`, `POST /v1/stream` (SSE chunks), `GET /healthz`, `GET /metrics`, blocking [`server::client`] |
+//! | [`loadgen`]   | **open-loop load harness**: seeded Poisson arrivals + Zipf prompt reuse, `/metrics` differencing for TTFT/queue-wait quantiles, `BENCH_load.json` |
 //! | [`obs`]       | **telemetry**: lock-free [`obs::MetricsRegistry`] (latency histograms, request/cache/spec counters, per-stage step timing), Prometheus text exposition, JSON-lines [`obs::RequestLog`] |
 //! | [`checkpoint`] | tensor (de)serialization (+ embedded manifest snapshot)    |
 //! | [`report`]    | Table 1/2/3, Figures 7/8 drivers                            |
@@ -350,6 +351,59 @@
 //! sharded per worker, and stage timing reads the clock only on
 //! sampled steps (`ObsCfg::stage_sample_every`).
 //!
+//! ## Load testing & SLOs: `hsm loadgen`, backpressure, quotas
+//!
+//! The serving stack enforces SLOs at admission — all off by default,
+//! so served bytes are untouched until an operator opts in
+//! ([`serve::ServeCfg`]):
+//!
+//! * **queue-depth backpressure** (`max_queue_depth`, CLI
+//!   `--max-queue-depth`): when the resident scheduler's wait queue is
+//!   full, [`serve::StreamScheduler::try_submit`] refuses with
+//!   [`serve::AdmissionError::QueueFull`] and the HTTP front-end
+//!   answers **429 Too Many Requests** with a `Retry-After` header
+//!   sized from queue pressure — load sheds at the door instead of
+//!   letting queue latency collapse for everyone;
+//! * **per-user quotas** ([`serve::QuotaCfg`], CLI `--quota-requests` /
+//!   `--quota-tokens` / `--quota-window-ms`): fixed-window request and
+//!   token budgets keyed by the optional `user` field on
+//!   [`serve::Request`] and the JSON API (`{"user": "alice", ...}`),
+//!   charged pessimistically (prompt + budget) at admission and
+//!   refused as 429 with `Retry-After` = the window remainder;
+//! * **deadline-aware scheduling** (`edf`, CLI `--edf`): the wait queue
+//!   orders earliest-deadline-first (per-request `deadline_ms`, else
+//!   `max_queue_wait`), and expired jobs are reaped from anywhere in
+//!   the queue at submit/poll time — not only when a worker pops them.
+//!
+//! Completion statuses say what actually happened: client errors
+//! finish `rejected` (HTTP 400), capacity refusals `throttled` (429 +
+//! `Retry-After`), queue-deadline expiries `timed_out` (503).
+//! [`server::client::try_generate`] / [`server::client::try_stream`]
+//! surface refusals as [`server::client::ApiOutcome::Throttled`] with
+//! the parsed backoff.  Scheduling order never changes sampled bytes
+//! (request ids fix the RNG streams), so EDF and backpressure are
+//! text-safe; with every knob off the serving path is byte-identical
+//! to previous releases.
+//!
+//! The open-loop [`loadgen`] harness measures all of it end to end:
+//!
+//! ```bash
+//! hsm loadgen --seed 42 --requests 24 --rate 30 --out BENCH_load.json
+//! hsm loadgen --addr 127.0.0.1:8080 --scenario streaming  # external server
+//! ```
+//!
+//! Seeded Poisson arrivals, Zipf-distributed prompt reuse (exercising
+//! the prefix cache), per-request `user`s (exercising quotas), three
+//! scenarios (`short_chat` / `long_generation` / `streaming`).
+//! p50/p95/p99 TTFT and queue wait plus tok/s come from differencing
+//! the server's own `GET /metrics` around each run, and each
+//! scenario's offered traffic is fingerprinted
+//! ([`loadgen::schedule_digest`] — byte-deterministic per seed) so two
+//! runs are provably comparable.  Admission control lands on
+//! `/metrics` as `hsm_requests_throttled_total{cause=...}`,
+//! `hsm_queue_depth` and `hsm_quota_tokens_charged_total`, and
+//! `GET /healthz` reports the active SLO configuration.
+//!
 //! One-off generation keeps the simpler wrappers —
 //! [`generation::generate`] (single session) and
 //! [`generation::generate_batch`] (fixed membership) — which are thin
@@ -374,6 +428,7 @@ pub mod corpus;
 pub mod data;
 pub mod generation;
 pub mod infer;
+pub mod loadgen;
 pub mod obs;
 pub mod report;
 pub mod report_sinks;
@@ -392,8 +447,8 @@ pub use infer::{
 };
 pub use obs::{MetricsRegistry, ObsCfg, RequestLog};
 pub use serve::{
-    Completion, PrefixCache, PrefixCacheStats, Request, Scheduler, ServeCfg, StreamScheduler,
-    TokenEvent, TokenStream,
+    AdmissionError, Completion, PrefixCache, PrefixCacheStats, QuotaCfg, Request, Scheduler,
+    ServeCfg, StreamScheduler, SubmitError, TokenEvent, TokenStream,
 };
 pub use server::HttpServer;
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,642 @@
+//! Open-loop load generator for the HTTP serving front-end — the
+//! `hsm loadgen` subcommand.
+//!
+//! The generator drives a running `hsm serve --http` server (or a
+//! self-hosted loopback instance with synthetic weights) with a
+//! **seeded, deterministic** request schedule:
+//!
+//! * arrivals are Poisson — exponential inter-arrival gaps
+//!   `-ln(1-u)/rate`, accumulated into absolute millisecond offsets —
+//!   fired *open-loop*: one thread per request sleeps until its arrival
+//!   time, so a slow server never throttles the offered load (that is
+//!   the difference between measuring latency and measuring the
+//!   generator);
+//! * prompts are drawn Zipf-distributed from a small pool, so popular
+//!   prompt heads repeat and the scheduler's [`PrefixCache`] sees
+//!   realistic reuse;
+//! * each request carries a `user` drawn uniformly from a small user
+//!   set, exercising per-user quota enforcement when the server has it
+//!   on.
+//!
+//! Three built-in scenarios cover the serving envelope: `short_chat`
+//! (many small completions), `long_generation` (fewer, larger budgets),
+//! and `streaming` (per-token SSE delivery).  For a fixed seed the
+//! schedule is byte-deterministic — [`schedule_digest`] fingerprints it
+//! and lands in the report so two runs are provably driving identical
+//! traffic.  Latency quantiles (TTFT, queue wait) and token throughput
+//! come from differencing the server's own `GET /metrics` exposition
+//! around the run, not from client-side clocks — the numbers in
+//! `BENCH_load.json` are the same ones an operator's scraper would see.
+//!
+//! [`PrefixCache`]: crate::serve::PrefixCache
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{LayerInfo, Manifest};
+use crate::corpus;
+use crate::infer::{weights, Model, ModelWeights};
+use crate::serve::{FinishReason, ServeCfg, StreamScheduler};
+use crate::server::api::GenerateRequest;
+use crate::server::{client, HttpServer};
+use crate::tokenizer::trainer as tok_trainer;
+use crate::util::hash;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Schedule synthesis.
+
+/// One traffic scenario: how many requests, at what rate, with what
+/// prompt-reuse skew and token budgets.
+#[derive(Clone, Debug)]
+pub struct ScenarioCfg {
+    pub name: String,
+    /// Total requests fired.
+    pub requests: usize,
+    /// Poisson arrival rate (requests per second).
+    pub rate_per_s: f64,
+    /// Zipf exponent for prompt selection (larger → more reuse of the
+    /// most popular prompts; 0 → uniform).
+    pub zipf_s: f64,
+    /// Distinct prompts in the pool.
+    pub pool_size: usize,
+    /// Distinct `user` identities cycling through the traffic.
+    pub users: usize,
+    /// Per-request `max_new_tokens`, drawn uniformly from this
+    /// inclusive range.
+    pub min_new_tokens: usize,
+    pub max_new_tokens: usize,
+    /// `/v1/stream` (SSE) instead of `/v1/generate`.
+    pub stream: bool,
+}
+
+/// One scheduled request: fire at `at_ms` after the scenario starts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    pub at_ms: u64,
+    pub id: u64,
+    pub user: String,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub stream: bool,
+}
+
+/// The default scenario grid: short interactive chat, long-form
+/// generation at half the rate, and streaming delivery.
+pub fn builtin_scenarios(requests: usize, rate_per_s: f64) -> Vec<ScenarioCfg> {
+    let base = ScenarioCfg {
+        name: String::new(),
+        requests: requests.max(1),
+        rate_per_s: rate_per_s.max(0.1),
+        zipf_s: 1.1,
+        pool_size: 12,
+        users: 4,
+        min_new_tokens: 4,
+        max_new_tokens: 8,
+        stream: false,
+    };
+    vec![
+        ScenarioCfg { name: "short_chat".into(), ..base.clone() },
+        ScenarioCfg {
+            name: "long_generation".into(),
+            requests: requests.div_ceil(2).max(1),
+            rate_per_s: (rate_per_s / 2.0).max(0.1),
+            zipf_s: 0.9,
+            pool_size: 6,
+            users: 2,
+            min_new_tokens: 24,
+            max_new_tokens: 40,
+            ..base.clone()
+        },
+        ScenarioCfg {
+            name: "streaming".into(),
+            pool_size: 8,
+            min_new_tokens: 8,
+            max_new_tokens: 16,
+            stream: true,
+            ..base
+        },
+    ]
+}
+
+/// Normalised Zipf CDF over ranks `1..=n`: `P(rank r) ∝ 1/r^s`.
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut acc = 0.0;
+    let mut cdf: Vec<f64> = (1..=n.max(1))
+        .map(|r| {
+            acc += 1.0 / (r as f64).powf(s);
+            acc
+        })
+        .collect();
+    for c in &mut cdf {
+        *c /= acc;
+    }
+    cdf
+}
+
+/// Invert the CDF at `u ∈ [0, 1)`.
+fn zipf_pick(cdf: &[f64], u: f64) -> usize {
+    cdf.iter().position(|&c| u < c).unwrap_or(cdf.len() - 1)
+}
+
+/// Draw `n` prompts from the synthetic corpus: word windows, so every
+/// byte is in-distribution for a corpus-trained tokenizer.
+fn prompt_pool(n: usize, rng: &mut Rng) -> Vec<String> {
+    let text = corpus::generate(rng.next_u64(), 16);
+    let words: Vec<&str> = text.split_whitespace().collect();
+    (0..n.max(1))
+        .map(|_| {
+            let len = 3 + rng.below(5);
+            let start = rng.below(words.len().saturating_sub(len).max(1));
+            words[start..(start + len).min(words.len())].join(" ")
+        })
+        .collect()
+}
+
+/// Synthesise the full arrival schedule for one scenario.  Pure
+/// function of `(cfg, seed)` — same inputs, byte-identical output.
+pub fn schedule(cfg: &ScenarioCfg, seed: u64) -> Vec<Arrival> {
+    let mut tag = hash::FNV_OFFSET;
+    hash::fold_bytes(&mut tag, cfg.name.as_bytes());
+    let mut rng = Rng::new(seed ^ tag);
+    let pool = prompt_pool(cfg.pool_size, &mut rng);
+    let cdf = zipf_cdf(pool.len(), cfg.zipf_s);
+    let span = cfg.max_new_tokens.saturating_sub(cfg.min_new_tokens);
+    let mut at = 0.0f64;
+    (0..cfg.requests)
+        .map(|i| {
+            // Exponential inter-arrival gap: -ln(1-u)/λ, u ∈ [0, 1).
+            at += -(1.0 - rng.f64()).ln() / cfg.rate_per_s * 1e3;
+            Arrival {
+                at_ms: at as u64,
+                id: i as u64,
+                user: format!("user-{}", rng.below(cfg.users.max(1))),
+                prompt: pool[zipf_pick(&cdf, rng.f64())].clone(),
+                max_new_tokens: cfg.min_new_tokens + rng.below(span + 1),
+                stream: cfg.stream,
+            }
+        })
+        .collect()
+}
+
+/// FNV-1a fingerprint of a schedule — every field of every arrival.
+/// Lands in the report so two runs can prove they offered identical
+/// traffic even though measured latencies differ.
+pub fn schedule_digest(arrivals: &[Arrival]) -> u64 {
+    let mut h = hash::FNV_OFFSET;
+    for a in arrivals {
+        hash::fold(&mut h, a.at_ms);
+        hash::fold(&mut h, a.id);
+        hash::fold_bytes(&mut h, a.user.as_bytes());
+        hash::fold_bytes(&mut h, a.prompt.as_bytes());
+        hash::fold(&mut h, a.max_new_tokens as u64);
+        hash::fold(&mut h, a.stream as u64);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus scraping: parse, difference, extract quantiles.
+
+/// A parsed `/metrics` exposition: plain samples by full series name,
+/// histogram buckets by family (cumulative, sorted by `le`, `+Inf`
+/// included).
+#[derive(Debug, Default, Clone)]
+pub struct MetricsSnapshot {
+    counters: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Vec<(f64, u64)>>,
+}
+
+/// The value of `key` in a `{k="v",...}` label suffix.
+fn label_value<'a>(labels: &'a str, key: &str) -> Option<&'a str> {
+    let rest = labels.strip_suffix('}')?;
+    for part in rest.split(',') {
+        let (k, v) = part.split_once('=')?;
+        if k.trim() == key {
+            return Some(v.trim().trim_matches('"'));
+        }
+    }
+    None
+}
+
+impl MetricsSnapshot {
+    /// Parse Prometheus text exposition.  Unparseable lines are
+    /// skipped — the scraper needs a few well-formed families, not a
+    /// validator.
+    pub fn parse(text: &str) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((series, value)) = line.rsplit_once(' ') else { continue };
+            let Ok(value) = value.trim().parse::<f64>() else { continue };
+            if let Some((base, labels)) = series.split_once('{') {
+                if let (Some(family), Some(le)) =
+                    (base.strip_suffix("_bucket"), label_value(labels, "le"))
+                {
+                    let le =
+                        if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap_or(f64::NAN) };
+                    if !le.is_nan() {
+                        snap.hists.entry(family.to_string()).or_default().push((le, value as u64));
+                        continue;
+                    }
+                }
+            }
+            snap.counters.insert(series.to_string(), value);
+        }
+        for buckets in snap.hists.values_mut() {
+            buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+        }
+        snap
+    }
+
+    /// Scrape and parse `GET /metrics` from a running server.
+    pub fn scrape(addr: &str) -> Result<MetricsSnapshot> {
+        Ok(MetricsSnapshot::parse(&client::metrics_text(addr)?))
+    }
+
+    /// A plain sample by its full series name (0 when absent).
+    pub fn counter(&self, series: &str) -> f64 {
+        self.counters.get(series).copied().unwrap_or(0.0)
+    }
+
+    /// Cumulative histogram count at upper bound `le`.  The renderer
+    /// elides buckets no observation has reached, so absent buckets
+    /// inherit the count of the nearest rendered bound below.
+    fn cum_at(&self, family: &str, le: f64) -> u64 {
+        let Some(buckets) = self.hists.get(family) else { return 0 };
+        buckets.iter().rev().find(|&&(b, _)| b <= le).map(|&(_, c)| c).unwrap_or(0)
+    }
+}
+
+/// Quantiles (in seconds) of the observations a histogram family gained
+/// between two snapshots: per-bucket cumulative subtraction, then
+/// `q`-quantile = upper bound of the first bucket whose cumulative
+/// delta reaches `ceil(q · total)`.  Returns one value per requested
+/// `q` (0 when nothing landed; the largest finite bound when the mass
+/// sits in the `+Inf` bucket).
+pub fn delta_quantiles(
+    before: &MetricsSnapshot,
+    after: &MetricsSnapshot,
+    family: &str,
+    qs: &[f64],
+) -> Vec<f64> {
+    let empty = Vec::new();
+    let buckets = after.hists.get(family).unwrap_or(&empty);
+    let deltas: Vec<(f64, u64)> = buckets
+        .iter()
+        .map(|&(le, cum)| (le, cum.saturating_sub(before.cum_at(family, le))))
+        .collect();
+    let total = deltas.last().map(|&(_, c)| c).unwrap_or(0);
+    let largest_finite =
+        deltas.iter().rev().map(|&(le, _)| le).find(|le| le.is_finite()).unwrap_or(0.0);
+    qs.iter()
+        .map(|&q| {
+            if total == 0 {
+                return 0.0;
+            }
+            let target = (q * total as f64).ceil().max(1.0) as u64;
+            match deltas.iter().find(|&&(_, c)| c >= target) {
+                Some(&(le, _)) if le.is_finite() => le,
+                _ => largest_finite,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Execution.
+
+/// What one fired request came back as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fired {
+    Ok,
+    Throttled,
+    Rejected,
+    TimedOut,
+    Error,
+}
+
+fn fire(addr: &str, a: &Arrival) -> Fired {
+    let mut req = GenerateRequest::new(&a.prompt);
+    req.max_new_tokens = Some(a.max_new_tokens);
+    req.user = Some(a.user.clone());
+    let outcome = if a.stream {
+        client::try_stream(addr, &req, |_, _| {})
+    } else {
+        client::try_generate(addr, &req)
+    };
+    match outcome {
+        Ok(client::ApiOutcome::Done(c)) => match c.finish {
+            FinishReason::TimedOut => Fired::TimedOut,
+            FinishReason::Rejected(_) => Fired::Rejected,
+            FinishReason::Throttled(_) => Fired::Throttled,
+            _ => Fired::Ok,
+        },
+        Ok(client::ApiOutcome::Throttled { .. }) => Fired::Throttled,
+        Err(_) => Fired::Error,
+    }
+}
+
+/// Measured outcome of one scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    /// [`schedule_digest`] of the traffic this run offered.
+    pub digest: u64,
+    pub sent: usize,
+    pub completed: usize,
+    pub throttled: usize,
+    pub rejected: usize,
+    pub timed_out: usize,
+    pub errors: usize,
+    pub wall_seconds: f64,
+    pub tokens_generated: u64,
+    pub tok_per_s: f64,
+    /// p50/p95/p99 time-to-first-token, milliseconds.
+    pub ttft_ms: [f64; 3],
+    /// p50/p95/p99 admission queue wait, milliseconds.
+    pub queue_wait_ms: [f64; 3],
+}
+
+const QS: [f64; 3] = [0.50, 0.95, 0.99];
+
+/// Run one scenario against `addr`: synthesise the schedule, fire it
+/// open-loop (one thread per arrival, each sleeping to its offset), and
+/// difference the server's `/metrics` around the run.
+pub fn run_scenario(addr: &str, cfg: &ScenarioCfg, seed: u64) -> Result<ScenarioOutcome> {
+    let arrivals = schedule(cfg, seed);
+    let digest = schedule_digest(&arrivals);
+    let before = MetricsSnapshot::scrape(addr)?;
+    let t0 = Instant::now();
+    let fired: Vec<Fired> = std::thread::scope(|s| {
+        let handles: Vec<_> = arrivals
+            .iter()
+            .map(|a| {
+                s.spawn(move || {
+                    let dt = Duration::from_millis(a.at_ms).saturating_sub(t0.elapsed());
+                    if !dt.is_zero() {
+                        std::thread::sleep(dt);
+                    }
+                    fire(addr, a)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap_or(Fired::Error)).collect()
+    });
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    let after = MetricsSnapshot::scrape(addr)?;
+
+    let count = |want: Fired| fired.iter().filter(|&&f| f == want).count();
+    let tokens = (after.counter("hsm_tokens_generated_total")
+        - before.counter("hsm_tokens_generated_total"))
+        .max(0.0) as u64;
+    let to_ms = |v: Vec<f64>| [v[0] * 1e3, v[1] * 1e3, v[2] * 1e3];
+    Ok(ScenarioOutcome {
+        name: cfg.name.clone(),
+        digest,
+        sent: fired.len(),
+        completed: count(Fired::Ok),
+        throttled: count(Fired::Throttled),
+        rejected: count(Fired::Rejected),
+        timed_out: count(Fired::TimedOut),
+        errors: count(Fired::Error),
+        wall_seconds,
+        tokens_generated: tokens,
+        tok_per_s: tokens as f64 / wall_seconds.max(1e-9),
+        ttft_ms: to_ms(delta_quantiles(&before, &after, "hsm_ttft_seconds", &QS)),
+        queue_wait_ms: to_ms(delta_quantiles(&before, &after, "hsm_queue_wait_seconds", &QS)),
+    })
+}
+
+/// Run every scenario in order against one server.
+pub fn run(addr: &str, scenarios: &[ScenarioCfg], seed: u64) -> Result<Vec<ScenarioOutcome>> {
+    scenarios.iter().map(|cfg| run_scenario(addr, cfg, seed)).collect()
+}
+
+/// Render outcomes as the `BENCH_load.json` document.
+pub fn report_json(seed: u64, outcomes: &[ScenarioOutcome]) -> Value {
+    let r3 = |x: f64| (x * 1e3).round() / 1e3;
+    let quant = |v: &[f64; 3]| {
+        json::obj(vec![
+            ("p50", json::num(r3(v[0]))),
+            ("p95", json::num(r3(v[1]))),
+            ("p99", json::num(r3(v[2]))),
+        ])
+    };
+    json::obj(vec![
+        ("bench", json::s("load")),
+        ("seed", json::num(seed as f64)),
+        (
+            "scenarios",
+            json::arr(
+                outcomes
+                    .iter()
+                    .map(|o| {
+                        json::obj(vec![
+                            ("name", json::s(&o.name)),
+                            ("schedule_digest", json::s(&format!("{:016x}", o.digest))),
+                            ("requests", json::num(o.sent as f64)),
+                            ("completed", json::num(o.completed as f64)),
+                            ("throttled", json::num(o.throttled as f64)),
+                            ("rejected", json::num(o.rejected as f64)),
+                            ("timed_out", json::num(o.timed_out as f64)),
+                            ("errors", json::num(o.errors as f64)),
+                            ("wall_seconds", json::num(r3(o.wall_seconds))),
+                            ("tokens_generated", json::num(o.tokens_generated as f64)),
+                            ("tok_per_s", json::num(r3(o.tok_per_s))),
+                            ("ttft_ms", quant(&o.ttft_ms)),
+                            ("queue_wait_ms", quant(&o.queue_wait_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Self-hosted loopback target.
+
+/// A loopback serving target the generator owns: synthetic two-layer
+/// HSM weights, corpus-trained tokenizer, real accept loop on an
+/// OS-assigned port.  Artifact-free and deterministic — `hsm loadgen`
+/// without `--addr` measures this.
+pub struct SelfHosted {
+    server: HttpServer,
+    addr: String,
+}
+
+impl SelfHosted {
+    /// Spin up the loopback server with `cfg`'s scheduling/SLO knobs
+    /// (sampling defaults are filled in if left at zero).
+    pub fn start(cfg: ServeCfg) -> Result<SelfHosted> {
+        let text = corpus::generate(9, 80);
+        let tok = tok_trainer::train(&text, 300).map_err(|e| anyhow!("{e}"))?;
+        let layers = vec![
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![1, 2], ffn: 16 },
+            LayerInfo { kind: "ab".into(), heads: 2, shifts: vec![2, 4], ffn: 16 },
+        ];
+        let m = Manifest::synthetic("hsm_ab", layers, 8, 256, tok.vocab_size(), 1);
+        let flat = weights::seeded_flat(&m, 21);
+        let model = Model::shared(m.clone(), ModelWeights::from_flat(&m, &flat)?)?;
+        let sched = Arc::new(StreamScheduler::start(model, tok, cfg)?);
+        let server = HttpServer::bind("127.0.0.1:0", sched)?;
+        let addr = server.local_addr().to_string();
+        Ok(SelfHosted { server, addr })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn shutdown(&self) {
+        self.server.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ScenarioCfg {
+        ScenarioCfg {
+            name: "unit".into(),
+            requests: 40,
+            rate_per_s: 25.0,
+            zipf_s: 1.1,
+            pool_size: 8,
+            users: 3,
+            min_new_tokens: 4,
+            max_new_tokens: 8,
+            stream: false,
+        }
+    }
+
+    /// Property: for any seed the schedule is a pure function of
+    /// `(cfg, seed)` — regenerating it gives byte-identical arrivals
+    /// and the same digest; distinct seeds give distinct schedules.
+    #[test]
+    fn schedule_is_byte_deterministic_for_a_fixed_seed() {
+        let cfg = cfg();
+        let mut digests = Vec::new();
+        for seed in 0..16u64 {
+            let a = schedule(&cfg, seed);
+            let b = schedule(&cfg, seed);
+            assert_eq!(a, b, "seed {seed}: schedule must be reproducible");
+            assert_eq!(schedule_digest(&a), schedule_digest(&b));
+            digests.push(schedule_digest(&a));
+        }
+        digests.sort_unstable();
+        digests.dedup();
+        assert_eq!(digests.len(), 16, "distinct seeds must give distinct schedules");
+    }
+
+    #[test]
+    fn schedule_respects_scenario_bounds() {
+        let cfg = cfg();
+        let arrivals = schedule(&cfg, 7);
+        assert_eq!(arrivals.len(), cfg.requests);
+        let mut prev = 0u64;
+        for a in &arrivals {
+            assert!(a.at_ms >= prev, "arrivals must be time-ordered");
+            prev = a.at_ms;
+            assert!((cfg.min_new_tokens..=cfg.max_new_tokens).contains(&a.max_new_tokens));
+            assert!(!a.prompt.is_empty());
+            let user_ix: usize = a.user.strip_prefix("user-").unwrap().parse().unwrap();
+            assert!(user_ix < cfg.users);
+        }
+    }
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_skewed_toward_low_ranks() {
+        let cdf = zipf_cdf(10, 1.1);
+        assert_eq!(cdf.len(), 10);
+        assert!(cdf.windows(2).all(|w| w[0] < w[1]));
+        assert!((cdf.last().unwrap() - 1.0).abs() < 1e-12);
+        // Rank 1 carries more mass than rank 10 by construction.
+        assert!(cdf[0] > cdf[9] - cdf[8]);
+        // Inversion: u below the first step picks rank 0, u near 1 the tail.
+        assert_eq!(zipf_pick(&cdf, 0.0), 0);
+        assert_eq!(zipf_pick(&cdf, 0.999_999), 9);
+    }
+
+    const BEFORE: &str = "\
+# HELP hsm_ttft_seconds x
+# TYPE hsm_ttft_seconds histogram
+hsm_ttft_seconds_bucket{le=\"0.005\"} 2
+hsm_ttft_seconds_bucket{le=\"+Inf\"} 2
+hsm_ttft_seconds_sum 0.004
+hsm_ttft_seconds_count 2
+hsm_tokens_generated_total 10
+";
+
+    const AFTER: &str = "\
+hsm_ttft_seconds_bucket{le=\"0.005\"} 3
+hsm_ttft_seconds_bucket{le=\"0.05\"} 6
+hsm_ttft_seconds_bucket{le=\"+Inf\"} 7
+hsm_ttft_seconds_sum 0.4
+hsm_ttft_seconds_count 7
+hsm_tokens_generated_total 50
+";
+
+    /// Bucket elision across snapshots: `le="0.05"` is absent before
+    /// (nothing had reached it), so its before-count is inherited from
+    /// the bound below, and the deltas come out right.
+    #[test]
+    fn metrics_delta_quantiles_handle_elided_buckets() {
+        let before = MetricsSnapshot::parse(BEFORE);
+        let after = MetricsSnapshot::parse(AFTER);
+        assert_eq!(before.cum_at("hsm_ttft_seconds", 0.05), 2);
+        // Deltas: ≤5ms → 1, ≤50ms → 4, total 5.
+        let q = delta_quantiles(&before, &after, "hsm_ttft_seconds", &[0.2, 0.5, 0.99]);
+        assert_eq!(q[0], 0.005, "p20 target is the 1st observation");
+        assert_eq!(q[1], 0.05, "p50 target is the 3rd observation");
+        // p99 lands in the +Inf bucket → clamped to the largest finite bound.
+        assert_eq!(q[2], 0.05);
+        let tokens = after.counter("hsm_tokens_generated_total")
+            - before.counter("hsm_tokens_generated_total");
+        assert_eq!(tokens, 40.0);
+    }
+
+    #[test]
+    fn delta_quantiles_of_an_idle_family_are_zero() {
+        let snap = MetricsSnapshot::parse(BEFORE);
+        assert_eq!(delta_quantiles(&snap, &snap, "hsm_ttft_seconds", &QS), vec![0.0, 0.0, 0.0]);
+        assert_eq!(delta_quantiles(&snap, &snap, "hsm_absent_seconds", &QS), vec![0.0, 0.0, 0.0]);
+    }
+
+    /// The report document serializes the digest as fixed-width hex (a
+    /// u64 does not survive an f64 round-trip) and keeps scenario order.
+    #[test]
+    fn report_json_carries_digests_and_quantiles() {
+        let o = ScenarioOutcome {
+            name: "short_chat".into(),
+            digest: 0xdead_beef_0000_0001,
+            sent: 10,
+            completed: 8,
+            throttled: 2,
+            rejected: 0,
+            timed_out: 0,
+            errors: 0,
+            wall_seconds: 1.25,
+            tokens_generated: 64,
+            tok_per_s: 51.2,
+            ttft_ms: [5.0, 25.0, 100.0],
+            queue_wait_ms: [1.0, 10.0, 50.0],
+        };
+        let v = report_json(42, &[o]);
+        let text = v.to_string();
+        assert!(text.contains("\"schedule_digest\":\"deadbeef00000001\""), "got: {text}");
+        let sc = &v.get("scenarios").as_arr().unwrap()[0];
+        assert_eq!(sc.get("ttft_ms").get("p95").as_f64(), Some(25.0));
+        assert_eq!(sc.get("throttled").as_usize(), Some(2));
+        assert_eq!(v.get("seed").as_usize(), Some(42));
+    }
+}

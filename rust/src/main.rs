@@ -9,6 +9,8 @@
 //!   a streaming HTTP front-end with `--http ADDR`.
 //! * `request`   — client for a running `serve --http` server
 //!   (`/v1/generate`, or `--stream` for per-token deltas).
+//! * `loadgen`   — open-loop load generator: seeded Poisson/Zipf
+//!   traffic against a serving front-end, `BENCH_load.json` report.
 //! * `report`    — regenerate a paper table/figure (table1|table2|table3|fig7|fig8).
 //! * `corpus`    — synthesise the TinyStories-like corpus to a file.
 //! * `tokenizer` — train / inspect a BPE tokenizer.
@@ -29,9 +31,10 @@ use hsm::coordinator::{Trainer, TrainerOptions};
 use hsm::corpus;
 use hsm::generation::{self, SampleCfg, TABLE3_PROMPTS};
 use hsm::infer::{DrafterKind, Model, ModelWeights, Precision, SpecCfg, SpecStats};
+use hsm::loadgen;
 use hsm::report::{self, ExperimentCtx, PjrtFactory, FIG7_VARIANTS};
 use hsm::runtime::{PjrtEngine, StepEngine};
-use hsm::serve::{FinishReason, Request, Scheduler, ServeCfg, StreamScheduler};
+use hsm::serve::{FinishReason, QuotaCfg, Request, Scheduler, ServeCfg, StreamScheduler};
 use hsm::server::{api::GenerateRequest, client as http_client, HttpServer};
 use hsm::tokenizer::{trainer as tok_trainer, Tokenizer};
 use hsm::util::cli::Args;
@@ -48,6 +51,7 @@ fn main() -> ExitCode {
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
         "request" => cmd_request(rest),
+        "loadgen" => cmd_loadgen(rest),
         "report" => cmd_report(rest),
         "corpus" => cmd_corpus(rest),
         "tokenizer" => cmd_tokenizer(rest),
@@ -78,6 +82,7 @@ fn top_usage() -> String {
        generate   sample text from a model\n\
        serve      continuous-batching serving (one-shot batch, or --http ADDR front-end)\n\
        request    client for a running `serve --http` server (--stream for per-token deltas)\n\
+       loadgen    open-loop load generator against a serving front-end (writes BENCH_load.json)\n\
        report     regenerate a paper table/figure (table1|table2|table3|fig7|fig8)\n\
        corpus     synthesise the TinyStories-like corpus\n\
        tokenizer  train / inspect the byte-level BPE tokenizer\n\
@@ -389,6 +394,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .flag("threads", "4", "worker threads stepping sessions in parallel")
         .flag("quantum", "16", "tokens per scheduling slice")
         .flag("max-queue-wait-ms", "0", "finish requests queued longer than this as timed_out (0 = wait forever)")
+        .flag("max-queue-depth", "0", "refuse admissions beyond this many queued jobs: HTTP 429 + Retry-After (0 = unbounded)")
+        .flag("quota-requests", "0", "per-user requests per quota window (0 = unlimited)")
+        .flag("quota-tokens", "0", "per-user tokens (prompt + budget) per quota window (0 = unlimited)")
+        .flag("quota-window-ms", "60000", "per-user quota window length")
+        .switch("edf", "earliest-deadline-first queue ordering (per-request deadline_ms, else max-queue-wait-ms)")
         .flag("prefix-cache", "32", "shared prompt-prefix cache entries (0 = disabled)")
         .flag("speculate", "0", "speculative decoding: draft block length (0 = off)")
         .flag("drafter", "ngram", "draft proposer: ngram[:N] (prompt lookup) | shallow[:K] (first K layers) | shallow-q[:K] (first K layers on quantized weights)")
@@ -424,6 +434,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         threads: a.usize("threads").map_err(|e| anyhow!(e))?,
         quantum: a.usize("quantum").map_err(|e| anyhow!(e))?,
         max_queue_wait: (wait_ms > 0).then(|| std::time::Duration::from_millis(wait_ms)),
+        max_queue_depth: a.usize("max-queue-depth").map_err(|e| anyhow!(e))?,
+        quota: quota_from_args(&a)?,
+        edf: a.bool("edf"),
         prefix_cache_size: a.usize("prefix-cache").map_err(|e| anyhow!(e))?,
         speculation: speculation_from_args(&a)?,
         sample: SampleCfg {
@@ -493,6 +506,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             FinishReason::TimedOut => "timed out in queue".to_string(),
             FinishReason::Cancelled => "cancelled by consumer".to_string(),
             FinishReason::Rejected(e) => format!("rejected: {e}"),
+            FinishReason::Throttled(e) => format!("throttled: {e}"),
         };
         let cached = if c.cached_prefix_len > 0 {
             format!(" ({} prefix tok cached)", c.cached_prefix_len)
@@ -511,6 +525,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Shared `--quota-requests` / `--quota-tokens` / `--quota-window-ms`
+/// parsing for `serve` and `loadgen`'s self-hosted target: `None`
+/// (quotas off) until at least one cap is set.
+fn quota_from_args(a: &Args) -> Result<Option<QuotaCfg>> {
+    let requests = a.u64("quota-requests").map_err(|e| anyhow!(e))?;
+    let tokens = a.u64("quota-tokens").map_err(|e| anyhow!(e))?;
+    if requests == 0 && tokens == 0 {
+        return Ok(None);
+    }
+    Ok(Some(QuotaCfg {
+        max_requests: requests,
+        max_tokens: tokens,
+        window: std::time::Duration::from_millis(a.u64("quota-window-ms").map_err(|e| anyhow!(e))?),
+    }))
+}
+
 fn cmd_request(argv: &[String]) -> Result<()> {
     let a = Args::new("request")
         .flag("addr", "127.0.0.1:8080", "address of a running `hsm serve --http` server")
@@ -518,6 +548,8 @@ fn cmd_request(argv: &[String]) -> Result<()> {
         .switch("stream", "use /v1/stream and print per-token deltas as they arrive")
         .optional("id", "request id (fixes the sampling stream; default: server-assigned)")
         .optional("max-new-tokens", "per-request token cap (default: server's)")
+        .optional("user", "user identity for per-user quota accounting")
+        .optional("deadline-ms", "queue-wait deadline: the server finishes the request timed_out past this")
         .parse(argv)
         .map_err(|e| anyhow!(e))?;
     let addr = a.str("addr");
@@ -528,6 +560,11 @@ fn cmd_request(argv: &[String]) -> Result<()> {
     if let Some(m) = a.get("max-new-tokens") {
         req.max_new_tokens =
             Some(m.parse().map_err(|_| anyhow!("--max-new-tokens expects an integer"))?);
+    }
+    req.user = a.get("user");
+    if let Some(d) = a.get("deadline-ms") {
+        req.deadline_ms =
+            Some(d.parse().map_err(|_| anyhow!("--deadline-ms expects an integer"))?);
     }
 
     let completion = if a.bool("stream") {
@@ -541,11 +578,15 @@ fn cmd_request(argv: &[String]) -> Result<()> {
         println!();
         c
     } else {
-        // Keep-alive client: one `hsm request` is a single call, but the
-        // connection-reuse path is the same one the benches exercise.
-        let c = http_client::Client::new(&addr).generate(&req)?;
-        println!("{}{}", c.prompt, c.completion);
-        c
+        match http_client::try_generate(&addr, &req)? {
+            http_client::ApiOutcome::Done(c) => {
+                println!("{}{}", c.prompt, c.completion);
+                c
+            }
+            http_client::ApiOutcome::Throttled { retry_after, message } => {
+                bail!("{message} — retry after {}s", retry_after.as_secs());
+            }
+        }
     };
     println!(
         "\n#{} — {} tokens, finish: {}{}",
@@ -558,8 +599,96 @@ fn cmd_request(argv: &[String]) -> Result<()> {
             String::new()
         }
     );
-    if let FinishReason::Rejected(why) = &completion.finish {
-        println!("rejected: {why}");
+    match &completion.finish {
+        FinishReason::Rejected(why) => println!("rejected: {why}"),
+        FinishReason::Throttled(why) => println!("throttled: {why}"),
+        _ => {}
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(argv: &[String]) -> Result<()> {
+    let a = Args::new("loadgen")
+        .optional("addr", "drive a running `hsm serve --http` server (default: self-hosted loopback on synthetic weights)")
+        .flag("seed", "42", "schedule seed — fixes arrivals, prompts, users and token budgets")
+        .flag("requests", "24", "requests per scenario")
+        .flag("rate", "30", "offered load, requests per second (open loop: a slow server never throttles the generator)")
+        .flag("scenario", "all", "short_chat | long_generation | streaming | all")
+        .flag("out", "BENCH_load.json", "report path")
+        .flag("max-active", "4", "self-host: concurrent decode sessions")
+        .flag("threads", "2", "self-host: worker threads")
+        .flag("max-queue-depth", "0", "self-host: refuse admissions beyond this many queued jobs (429 + Retry-After; 0 = unbounded)")
+        .flag("quota-requests", "0", "self-host: per-user requests per quota window (0 = unlimited)")
+        .flag("quota-tokens", "0", "self-host: per-user tokens per quota window (0 = unlimited)")
+        .flag("quota-window-ms", "60000", "self-host: per-user quota window length")
+        .switch("edf", "self-host: earliest-deadline-first queue ordering")
+        .parse(argv)
+        .map_err(|e| anyhow!(e))?;
+    let seed = a.u64("seed").map_err(|e| anyhow!(e))?;
+    let all = loadgen::builtin_scenarios(
+        a.usize("requests").map_err(|e| anyhow!(e))?,
+        a.f64("rate").map_err(|e| anyhow!(e))?,
+    );
+    let scenarios: Vec<_> = match a.str("scenario").as_str() {
+        "all" => all,
+        name => {
+            let picked: Vec<_> = all.into_iter().filter(|s| s.name == name).collect();
+            if picked.is_empty() {
+                bail!("unknown --scenario {name:?} (expected short_chat, long_generation, streaming or all)");
+            }
+            picked
+        }
+    };
+
+    // Without --addr, host the target in-process: the same resident
+    // scheduler + HTTP front-end `hsm serve --http` runs, on synthetic
+    // weights and an OS-assigned loopback port.
+    let (hosted, addr) = match a.get("addr") {
+        Some(addr) => (None, addr),
+        None => {
+            let cfg = ServeCfg {
+                max_active: a.usize("max-active").map_err(|e| anyhow!(e))?,
+                threads: a.usize("threads").map_err(|e| anyhow!(e))?,
+                max_queue_depth: a.usize("max-queue-depth").map_err(|e| anyhow!(e))?,
+                quota: quota_from_args(&a)?,
+                edf: a.bool("edf"),
+                sample: SampleCfg { seed, ..SampleCfg::default() },
+                ..Default::default()
+            };
+            let hosted = loadgen::SelfHosted::start(cfg)?;
+            let addr = hosted.addr().to_string();
+            println!("self-hosted loopback target at http://{addr}");
+            (Some(hosted), addr)
+        }
+    };
+
+    let outcomes = loadgen::run(&addr, &scenarios, seed)?;
+    for o in &outcomes {
+        println!(
+            "{:<16} {:>3} sent: {:>3} ok, {:>2} throttled, {:>2} rejected, {:>2} timed_out, \
+             {:>2} errors — ttft p50/p95/p99 {:.1}/{:.1}/{:.1} ms, queue p99 {:.1} ms, \
+             {:.1} tok/s (schedule {:016x})",
+            o.name,
+            o.sent,
+            o.completed,
+            o.throttled,
+            o.rejected,
+            o.timed_out,
+            o.errors,
+            o.ttft_ms[0],
+            o.ttft_ms[1],
+            o.ttft_ms[2],
+            o.queue_wait_ms[2],
+            o.tok_per_s,
+            o.digest,
+        );
+    }
+    let out = a.str("out");
+    std::fs::write(&out, format!("{}\n", loadgen::report_json(seed, &outcomes)))
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+    if let Some(h) = hosted {
+        h.shutdown();
     }
     Ok(())
 }

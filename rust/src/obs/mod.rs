@@ -404,10 +404,13 @@ impl StageObs {
 // The registry
 // ---------------------------------------------------------------------------
 
-/// Finish-reason labels, in render order (mirrors
-/// `serve::FinishReason::label`).
-const FINISH_LABELS: [&str; 6] =
-    ["eot", "max_tokens", "ctx_full", "timed_out", "cancelled", "rejected"];
+/// Finish-reason labels, in render order — one per
+/// `serve::FinishReason` variant, mirroring
+/// `serve::FinishReason::label`.  Public so the serve-side
+/// exhaustiveness test can pin that every variant has exactly one
+/// entry here (the registry would otherwise miscount a drifted label).
+pub const FINISH_LABELS: [&str; 7] =
+    ["eot", "max_tokens", "ctx_full", "timed_out", "cancelled", "rejected", "throttled"];
 
 /// Lock-free registry of every serving metric. All recording methods
 /// are single relaxed atomic operations (histograms: one shard
@@ -423,9 +426,17 @@ pub struct MetricsRegistry {
     pub verify_round: Histogram,
     // Request/token counters.
     admitted: AtomicU64,
-    finished: [AtomicU64; FINISH_LABELS.len()],
+    /// One cell per [`FINISH_LABELS`] entry, plus a final `unknown`
+    /// cell so a label outside the table lands somewhere visible
+    /// instead of corrupting the first family's count.
+    finished: [AtomicU64; FINISH_LABELS.len() + 1],
     tokens_generated: AtomicU64,
     prompt_tokens: AtomicU64,
+    // Admission-control counters (SLO backpressure + quotas).
+    throttled_queue_full: AtomicU64,
+    throttled_quota: AtomicU64,
+    queue_depth: AtomicU64,
+    quota_tokens: AtomicU64,
     // Shared counter groups.
     pub spec: SpecCounterGroup,
     cache: OnceCacheCounters,
@@ -480,11 +491,42 @@ impl MetricsRegistry {
     }
 
     /// Count a finished request under its finish-reason label (one of
-    /// `serve::FinishReason::label`'s values).
+    /// `serve::FinishReason::label`'s values).  The mapping is total:
+    /// a label outside [`FINISH_LABELS`] counts under the dedicated
+    /// `unknown` cell (and fails a debug assertion) rather than
+    /// silently inflating the first family.
     #[inline]
     pub fn inc_finished(&self, label: &str) {
-        let ix = FINISH_LABELS.iter().position(|l| *l == label).unwrap_or(0);
+        let ix = FINISH_LABELS.iter().position(|l| *l == label).unwrap_or_else(|| {
+            debug_assert!(false, "unknown finish label {label:?} — update obs::FINISH_LABELS");
+            FINISH_LABELS.len()
+        });
         self.finished[ix].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count a request refused by admission control, by cause
+    /// (`serve::AdmissionError::cause`: `"queue_full"` or `"quota"`).
+    #[inline]
+    pub fn inc_throttled(&self, cause: &str) {
+        let c = match cause {
+            "quota" => &self.throttled_quota,
+            _ => &self.throttled_queue_full,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the pending-queue depth observed after a scheduling or
+    /// admission pass (`hsm_queue_depth` gauge).
+    #[inline]
+    pub fn set_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Add tokens charged against a per-user quota window (prompt +
+    /// generation budget, charged at admission).
+    #[inline]
+    pub fn add_quota_tokens(&self, n: u64) {
+        self.quota_tokens.fetch_add(n, Ordering::Relaxed);
     }
 
     #[inline]
@@ -504,6 +546,22 @@ impl MetricsRegistry {
 
     pub fn finished_total(&self) -> u64 {
         self.finished.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Requests refused by admission control (queue depth + quotas).
+    pub fn throttled_total(&self) -> u64 {
+        self.throttled_queue_full.load(Ordering::Relaxed)
+            + self.throttled_quota.load(Ordering::Relaxed)
+    }
+
+    /// Pending-queue depth at the last scheduling/admission pass.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Tokens charged against per-user quota windows.
+    pub fn quota_tokens_charged(&self) -> u64 {
+        self.quota_tokens.load(Ordering::Relaxed)
     }
 
     pub fn tokens_generated(&self) -> u64 {
@@ -607,6 +665,40 @@ impl MetricsRegistry {
                 c.load(Ordering::Relaxed)
             );
         }
+        // The overflow cell renders only when something actually landed
+        // in it (a drifted label) — the stable schema stays 1:1 with
+        // FINISH_LABELS.
+        let unknown = self.finished[FINISH_LABELS.len()].load(Ordering::Relaxed);
+        if unknown > 0 {
+            let _ =
+                writeln!(out, "hsm_requests_finished_total{{finish=\"unknown\"}} {unknown}");
+        }
+        let _ = writeln!(
+            out,
+            "# HELP hsm_requests_throttled_total Requests refused by admission control, by cause."
+        );
+        let _ = writeln!(out, "# TYPE hsm_requests_throttled_total counter");
+        for (cause, c) in
+            [("queue_full", &self.throttled_queue_full), ("quota", &self.throttled_quota)]
+        {
+            let _ = writeln!(
+                out,
+                "hsm_requests_throttled_total{{cause=\"{cause}\"}} {}",
+                c.load(Ordering::Relaxed)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP hsm_queue_depth Jobs waiting for admission at the last scheduling pass."
+        );
+        let _ = writeln!(out, "# TYPE hsm_queue_depth gauge");
+        let _ = writeln!(out, "hsm_queue_depth {}", self.queue_depth.load(Ordering::Relaxed));
+        render_counter(
+            &mut out,
+            "hsm_quota_tokens_charged_total",
+            "Tokens (prompt + budget) charged against per-user quota windows at admission.",
+            self.quota_tokens.load(Ordering::Relaxed),
+        );
         render_counter(
             &mut out,
             "hsm_tokens_generated_total",
@@ -800,6 +892,9 @@ mod tests {
             "hsm_spec_fused_rows_total",
             "hsm_stage_seconds_total",
             "hsm_stage_samples_total",
+            "hsm_requests_throttled_total",
+            "hsm_queue_depth",
+            "hsm_quota_tokens_charged_total",
         ] {
             assert!(text.contains(&format!("# TYPE {family} ")), "missing family {family}");
         }
@@ -862,6 +957,51 @@ mod tests {
         for l in FINISH_LABELS {
             assert!(text.contains(&format!("finish=\"{l}\"}} 1")), "missing label {l}");
         }
+        assert!(!text.contains("finish=\"unknown\""), "no drifted labels were recorded");
+    }
+
+    /// A label outside FINISH_LABELS must not inflate the first family
+    /// (release builds): it lands in the dedicated overflow cell and
+    /// renders as `finish="unknown"`.  (Debug builds catch the drift
+    /// earlier with an assertion — exercised here only when
+    /// debug_assertions are off.)
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn unknown_finish_label_counts_as_unknown() {
+        let r = MetricsRegistry::default();
+        r.inc_finished("not-a-real-label");
+        assert_eq!(r.finished_total(), 1);
+        let text = r.render_prometheus();
+        assert!(text.contains("finish=\"unknown\"} 1"));
+        assert!(text.contains(&format!("finish=\"{}\"}} 0", FINISH_LABELS[0])));
+    }
+
+    /// The admission-control families: throttle causes count
+    /// independently, the queue-depth gauge overwrites, and quota
+    /// token charges accumulate.
+    #[test]
+    fn throttle_families_render_and_count() {
+        let r = MetricsRegistry::default();
+        let text = r.render_prometheus();
+        assert!(text.contains("hsm_requests_throttled_total{cause=\"queue_full\"} 0"));
+        assert!(text.contains("hsm_requests_throttled_total{cause=\"quota\"} 0"));
+        assert!(text.contains("hsm_queue_depth 0"));
+        assert!(text.contains("hsm_quota_tokens_charged_total 0"));
+        r.inc_throttled("queue_full");
+        r.inc_throttled("quota");
+        r.inc_throttled("quota");
+        r.set_queue_depth(7);
+        r.set_queue_depth(3);
+        r.add_quota_tokens(40);
+        r.add_quota_tokens(2);
+        assert_eq!(r.throttled_total(), 3);
+        assert_eq!(r.queue_depth(), 3);
+        assert_eq!(r.quota_tokens_charged(), 42);
+        let text = r.render_prometheus();
+        assert!(text.contains("hsm_requests_throttled_total{cause=\"queue_full\"} 1"));
+        assert!(text.contains("hsm_requests_throttled_total{cause=\"quota\"} 2"));
+        assert!(text.contains("hsm_queue_depth 3"));
+        assert!(text.contains("hsm_quota_tokens_charged_total 42"));
     }
 
     #[test]

@@ -85,7 +85,7 @@ pub mod prefix;
 
 pub use prefix::{PrefixCache, PrefixCacheStats};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -109,11 +109,31 @@ pub struct Request {
     pub prompt: String,
     /// Per-request cap on generated tokens (None = `cfg.sample`'s cap).
     pub max_new_tokens: Option<usize>,
+    /// Quota accounting key ([`ServeCfg::quota`]).  None = anonymous:
+    /// the request bypasses per-user quotas.  Never affects sampled
+    /// text — the RNG stream stays keyed by `id` alone.
+    pub user: Option<String>,
+    /// Per-request admission budget in milliseconds, overriding
+    /// [`ServeCfg::max_queue_wait`]; also the ordering key under
+    /// [`ServeCfg::edf`].  None = the cfg-wide budget.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: &str) -> Self {
-        Request { id, prompt: prompt.to_string(), max_new_tokens: None }
+        Request {
+            id,
+            prompt: prompt.to_string(),
+            max_new_tokens: None,
+            user: None,
+            deadline_ms: None,
+        }
+    }
+
+    /// Builder-style quota key (see [`Request::user`]).
+    pub fn with_user(mut self, user: &str) -> Self {
+        self.user = Some(user.to_string());
+        self
     }
 }
 
@@ -137,6 +157,13 @@ pub enum FinishReason {
     /// Never admitted — the prompt failed validation (empty encoding,
     /// vocab mismatch, or longer than the context window).
     Rejected(String),
+    /// Never admitted — refused by SLO backpressure (queue over
+    /// [`ServeCfg::max_queue_depth`]) or a per-user quota
+    /// ([`ServeCfg::quota`]).  Unlike [`FinishReason::Rejected`] this
+    /// is a *capacity* disposition, not a client error: the same
+    /// request retried later may succeed (HTTP answers 429 +
+    /// `Retry-After`).
+    Throttled(String),
 }
 
 impl FinishReason {
@@ -149,6 +176,7 @@ impl FinishReason {
             FinishReason::TimedOut => "timed_out",
             FinishReason::Cancelled => "cancelled",
             FinishReason::Rejected(_) => "rejected",
+            FinishReason::Throttled(_) => "throttled",
         }
     }
 }
@@ -226,6 +254,25 @@ pub struct ServeCfg {
     /// hook; [`ObsCfg::metrics`] shares a registry across schedulers;
     /// [`ObsCfg::request_log`] adds a JSON-lines lifecycle log.
     pub obs: ObsCfg,
+    /// SLO backpressure for resident schedulers: once this many jobs
+    /// are already queued, [`StreamScheduler::try_submit`] refuses with
+    /// [`SubmitError::Throttled`] (HTTP answers 429 + `Retry-After`)
+    /// instead of queueing without bound (0 = unbounded, the
+    /// pre-backpressure behavior).  Pure admission control — never
+    /// changes sampled text.
+    pub max_queue_depth: usize,
+    /// Per-user request/token quotas over a fixed window (None = off).
+    /// Only requests carrying [`Request::user`] are accounted;
+    /// anonymous requests bypass quotas.  An over-quota request is
+    /// refused at admission ([`FinishReason::Throttled`] on the batch
+    /// path, [`SubmitError::Throttled`] on the resident path).
+    pub quota: Option<QuotaCfg>,
+    /// Earliest-deadline-first ordering among *queued* jobs (false =
+    /// FIFO).  Deadlines come from [`Request::deadline_ms`] or
+    /// [`ServeCfg::max_queue_wait`]; jobs without one sort last.  Pure
+    /// scheduling: per-request RNG streams mean admission order never
+    /// changes sampled text — only who times out under saturation.
+    pub edf: bool,
 }
 
 impl Default for ServeCfg {
@@ -240,8 +287,171 @@ impl Default for ServeCfg {
             sample: SampleCfg::default(),
             precision: Precision::F32,
             obs: ObsCfg::default(),
+            max_queue_depth: 0,
+            quota: None,
+            edf: false,
         }
     }
+}
+
+/// Per-user admission quotas ([`ServeCfg::quota`]): fixed windows of at
+/// most `max_requests` requests and `max_tokens` tokens per user.
+/// Tokens are charged pessimistically at admission (prompt length +
+/// generation budget), so a user cannot oversubscribe a window by
+/// submitting before earlier requests finish.  Either cap can be 0 =
+/// unlimited.
+#[derive(Debug, Clone)]
+pub struct QuotaCfg {
+    /// Requests a user may admit per window (0 = unlimited).
+    pub max_requests: u64,
+    /// Tokens (prompt + budget) a user may admit per window (0 = unlimited).
+    pub max_tokens: u64,
+    /// Accounting window; usage resets when it elapses.
+    pub window: Duration,
+}
+
+impl Default for QuotaCfg {
+    fn default() -> Self {
+        QuotaCfg { max_requests: 0, max_tokens: 0, window: Duration::from_secs(60) }
+    }
+}
+
+impl QuotaCfg {
+    pub fn validate(&self) -> Result<()> {
+        if self.window.is_zero() {
+            bail!("serve: quota window must be positive (a zero window can never admit anything)");
+        }
+        Ok(())
+    }
+}
+
+/// Why admission refused a request ([`SubmitError::Throttled`], HTTP
+/// 429).  Carries everything a client needs to back off sensibly.
+#[derive(Debug, Clone)]
+pub enum AdmissionError {
+    /// The pending queue is at [`ServeCfg::max_queue_depth`].
+    QueueFull { depth: usize, limit: usize, retry_after: Duration },
+    /// The request's user is over a [`QuotaCfg`] cap this window.
+    QuotaExceeded { user: String, what: &'static str, retry_after: Duration },
+}
+
+impl AdmissionError {
+    /// Suggested client backoff — the HTTP front-end's `Retry-After`.
+    pub fn retry_after(&self) -> Duration {
+        match self {
+            AdmissionError::QueueFull { retry_after, .. }
+            | AdmissionError::QuotaExceeded { retry_after, .. } => *retry_after,
+        }
+    }
+
+    /// Stable cause label for `hsm_requests_throttled_total{cause=...}`.
+    pub fn cause(&self) -> &'static str {
+        match self {
+            AdmissionError::QueueFull { .. } => "queue_full",
+            AdmissionError::QuotaExceeded { .. } => "quota",
+        }
+    }
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull { depth, limit, .. } => {
+                write!(f, "queue full ({depth} waiting, limit {limit})")
+            }
+            AdmissionError::QuotaExceeded { user, what, .. } => {
+                write!(f, "user {user:?} is over its {what} quota this window")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Typed error surface of [`StreamScheduler::try_submit`]:
+/// backpressure/quota refusals (retryable, HTTP 429) are
+/// distinguishable from a scheduler that cannot take work at all
+/// (HTTP 503).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Refused by admission control; retry after
+    /// [`AdmissionError::retry_after`].
+    Throttled(AdmissionError),
+    /// The scheduler is shut down or a worker failed.
+    Unavailable(anyhow::Error),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Throttled(adm) => write!(f, "throttled: {adm}"),
+            SubmitError::Unavailable(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+/// Per-user fixed-window usage ledger behind [`ServeCfg::quota`].
+/// Shared by every submission path of one scheduler; the mutex is held
+/// only for a map lookup + compare, never across decoding.
+pub(crate) struct QuotaState {
+    cfg: QuotaCfg,
+    users: Mutex<HashMap<String, UserWindow>>,
+}
+
+struct UserWindow {
+    window_start: Instant,
+    requests: u64,
+    tokens: u64,
+}
+
+impl QuotaState {
+    pub(crate) fn new(cfg: QuotaCfg) -> Self {
+        QuotaState { cfg, users: Mutex::new(HashMap::new()) }
+    }
+
+    /// Atomically charge one request + `tokens` tokens to `user`, or
+    /// refuse without charging anything.  The refusal's `retry_after`
+    /// is the time left in the user's current window.
+    pub(crate) fn try_charge(&self, user: &str, tokens: u64) -> Result<(), AdmissionError> {
+        let now = Instant::now();
+        let mut users = self.users.lock().expect("quota lock poisoned");
+        let w = users
+            .entry(user.to_string())
+            .or_insert(UserWindow { window_start: now, requests: 0, tokens: 0 });
+        if now.duration_since(w.window_start) >= self.cfg.window {
+            w.window_start = now;
+            w.requests = 0;
+            w.tokens = 0;
+        }
+        let retry_after = self
+            .cfg
+            .window
+            .saturating_sub(now.duration_since(w.window_start))
+            .max(Duration::from_secs(1));
+        if self.cfg.max_requests > 0 && w.requests + 1 > self.cfg.max_requests {
+            return Err(AdmissionError::QuotaExceeded {
+                user: user.to_string(),
+                what: "request",
+                retry_after,
+            });
+        }
+        if self.cfg.max_tokens > 0 && w.tokens + tokens > self.cfg.max_tokens {
+            return Err(AdmissionError::QuotaExceeded {
+                user: user.to_string(),
+                what: "token",
+                retry_after,
+            });
+        }
+        w.requests += 1;
+        w.tokens += tokens;
+        Ok(())
+    }
+}
+
+/// `Retry-After` estimate for a full queue: roughly how long until the
+/// backlog drains one admission slot's worth, clamped to [1s, 60s].
+fn queue_retry_after(depth: usize, max_active: usize) -> Duration {
+    Duration::from_secs((depth / max_active.max(1)).clamp(1, 60) as u64)
 }
 
 impl ServeCfg {
@@ -257,6 +467,9 @@ impl ServeCfg {
         }
         if let Some(spec) = &self.speculation {
             spec.validate()?;
+        }
+        if let Some(quota) = &self.quota {
+            quota.validate()?;
         }
         Ok(())
     }
@@ -376,6 +589,10 @@ pub struct Scheduler {
     /// Telemetry runtime (None with [`ObsCfg::off`]); persists across
     /// calls so histograms aggregate the scheduler's whole lifetime.
     obs: Option<Arc<ObsRuntime>>,
+    /// Per-user quota ledger (None with [`ServeCfg::quota`] off);
+    /// persists across [`serve`](Scheduler::serve) calls so windows
+    /// span batches.
+    quota: Option<QuotaState>,
 }
 
 impl Scheduler {
@@ -402,7 +619,8 @@ impl Scheduler {
                 None => PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size),
             })
         });
-        Ok(Scheduler { model, cfg, cache, obs })
+        let quota = cfg.quota.clone().map(QuotaState::new);
+        Ok(Scheduler { model, cfg, cache, obs, quota })
     }
 
     pub fn model(&self) -> &Arc<Model> {
@@ -438,6 +656,7 @@ impl Scheduler {
             &self.cfg,
             self.cache.as_deref(),
             self.obs.as_deref(),
+            self.quota.as_ref(),
         )
     }
 }
@@ -466,10 +685,12 @@ pub fn serve(
         ),
         None => PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size),
     });
-    serve_with_cache(model, tok, requests, cfg, cache.as_ref(), obs.as_deref())
+    let quota = cfg.quota.clone().map(QuotaState::new);
+    serve_with_cache(model, tok, requests, cfg, cache.as_ref(), obs.as_deref(), quota.as_ref())
 }
 
 /// The batch core behind [`Scheduler::serve`] and [`serve`].
+#[allow(clippy::too_many_arguments)]
 fn serve_with_cache(
     model: &Arc<Model>,
     tok: &Tokenizer,
@@ -477,40 +698,72 @@ fn serve_with_cache(
     cfg: &ServeCfg,
     cache: Option<&PrefixCache>,
     obs: Option<&ObsRuntime>,
+    quota: Option<&QuotaState>,
 ) -> Result<Vec<Completion>> {
     cfg.validate()?;
 
     // Validate at admission: a bad prompt becomes a Rejected completion
-    // (one user's malformed request must not fail everyone else's).
-    let deadline = cfg.max_queue_wait.map(|d| Instant::now() + d);
+    // (one user's malformed request must not fail everyone else's), and
+    // an over-quota user's request a Throttled one.
+    let submitted = Instant::now();
     let mut out: Vec<Option<Completion>> = vec![None; requests.len()];
     let mut jobs: Vec<Job> = Vec::with_capacity(requests.len());
-    let submitted = Instant::now();
     for (ix, req) in requests.into_iter().enumerate() {
-        match encode_prompt(&model.manifest, tok, &req.prompt) {
-            Ok(ids) => jobs.push(Job {
-                ix,
-                id: req.id,
-                budget: req.max_new_tokens.unwrap_or(cfg.sample.max_new_tokens),
-                prompt: req.prompt,
-                ids,
-                deadline,
-                submitted,
-                sink: None,
-            }),
+        let unadmitted = |finish: FinishReason| Completion {
+            request_id: req.id,
+            prompt: req.prompt.clone(),
+            completion: String::new(),
+            tokens_generated: 0,
+            cached_prefix_len: 0,
+            spec: None,
+            finish,
+        };
+        let ids = match encode_prompt(&model.manifest, tok, &req.prompt) {
+            Ok(ids) => ids,
             Err(e) => {
                 note_rejected(obs, req.id, submitted);
-                out[ix] = Some(Completion {
-                    request_id: req.id,
-                    prompt: req.prompt,
-                    completion: String::new(),
-                    tokens_generated: 0,
-                    cached_prefix_len: 0,
-                    spec: None,
-                    finish: FinishReason::Rejected(format!("{e:#}")),
-                });
+                out[ix] = Some(unadmitted(FinishReason::Rejected(format!("{e:#}"))));
+                continue;
+            }
+        };
+        let budget = req.max_new_tokens.unwrap_or(cfg.sample.max_new_tokens);
+        if let (Some(q), Some(user)) = (quota, req.user.as_deref()) {
+            let tokens = (ids.len() + budget) as u64;
+            if let Err(adm) = q.try_charge(user, tokens) {
+                note_throttled(obs, req.id, submitted, &adm);
+                out[ix] = Some(unadmitted(FinishReason::Throttled(adm.to_string())));
+                continue;
+            }
+            if let Some(o) = obs {
+                if o.counters {
+                    o.registry.add_quota_tokens(tokens);
+                }
             }
         }
+        let deadline = req
+            .deadline_ms
+            .map(|ms| submitted + Duration::from_millis(ms))
+            .or_else(|| cfg.max_queue_wait.map(|d| submitted + d));
+        jobs.push(Job {
+            ix,
+            id: req.id,
+            budget,
+            prompt: req.prompt,
+            ids,
+            deadline,
+            submitted,
+            sink: None,
+        });
+    }
+    if cfg.edf {
+        // Earliest deadline first among admitted jobs; the stable sort
+        // keeps submission order for ties and deadline-free jobs.
+        jobs.sort_by(|a, b| match (a.deadline, b.deadline) {
+            (Some(x), Some(y)) => x.cmp(&y),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => std::cmp::Ordering::Equal,
+        });
     }
 
     if !jobs.is_empty() {
@@ -774,9 +1027,83 @@ fn note_rejected(obs: Option<&ObsRuntime>, id: u64, submitted: Instant) {
     }
 }
 
+/// Telemetry for a request refused by admission control (queue depth or
+/// quota): like a rejection it never touches a decoder, but it counts
+/// under its own `throttled` families so capacity refusals are
+/// distinguishable from client errors on `/metrics`.
+fn note_throttled(obs: Option<&ObsRuntime>, id: u64, submitted: Instant, err: &AdmissionError) {
+    let Some(o) = obs else { return };
+    if o.counters {
+        o.registry.inc_throttled(err.cause());
+        o.registry.inc_finished("throttled");
+    }
+    if let Some(now) = o.now() {
+        let e2e = now.duration_since(submitted);
+        o.registry.record_e2e(e2e);
+        o.emit(RequestEvent::Finished {
+            request_id: id,
+            finish: "throttled".into(),
+            tokens_generated: 0,
+            e2e_ms: e2e.as_secs_f64() * 1e3,
+            mixer: "-".into(),
+            precision: "-".into(),
+            drafter: None,
+            spec_rounds: 0,
+            spec_drafted: 0,
+            spec_accepted: 0,
+            cached_prefix_len: 0,
+        });
+    }
+}
+
 /// Has this queued job outlived its admission budget?
 fn expired(job: &Job) -> bool {
     job.deadline.is_some_and(|d| Instant::now() > d)
+}
+
+/// Reap every expired job *anywhere* in the pending queue (not just the
+/// front), delivering each TimedOut completion to `emit` (batch slots)
+/// or its stream sink.  Called on every submit and every worker
+/// scheduling pass, so under full saturation a queued request learns it
+/// timed out within one scheduling quantum instead of whenever it
+/// happens to reach the queue head — the front-only check let a stale
+/// job hide behind a live one arbitrarily long.
+fn reap_expired_queue<F: FnMut(usize, Completion)>(
+    pending: &mut VecDeque<Job>,
+    obs: Option<&ObsRuntime>,
+    mut emit: F,
+) {
+    let mut i = 0;
+    while i < pending.len() {
+        if expired(&pending[i]) {
+            let job = pending.remove(i).expect("reap index in bounds");
+            if let Some((ix, completion)) = expire(job, obs) {
+                emit(ix, completion);
+            }
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Queue insertion honoring [`ServeCfg::edf`]: earliest deadline first
+/// (no deadline sorts last), FIFO among equals — the scan inserts
+/// strictly before the first *later* deadline, so equal deadlines keep
+/// submission order.
+fn enqueue(pending: &mut VecDeque<Job>, job: Job, edf: bool) {
+    if !edf {
+        pending.push_back(job);
+        return;
+    }
+    let pos = pending.iter().position(|q| match (q.deadline, job.deadline) {
+        (None, Some(_)) => true,
+        (Some(a), Some(b)) => a > b,
+        _ => false,
+    });
+    match pos {
+        Some(p) => pending.insert(p, job),
+        None => pending.push_back(job),
+    }
 }
 
 /// Finish a queued job as TimedOut without decoding.  Streaming jobs
@@ -1190,16 +1517,12 @@ pub(crate) fn run_local<D: Decoder>(
     loop {
         // Admission: fill every free session before stepping (job order
         // meets decoder order, so fixed-membership callers get the same
-        // decoder↔prompt pairing the old round-robin loop had).  A job
-        // past its queue-wait deadline finishes as TimedOut right here,
-        // consuming no session.
+        // decoder↔prompt pairing the old round-robin loop had).  Jobs
+        // past their queue-wait deadline finish as TimedOut right here —
+        // anywhere in the queue, not just the front — consuming no
+        // session.
+        reap_expired_queue(&mut pending, obs, |ix, completion| out[ix] = Some(completion));
         while !pending.is_empty() {
-            if expired(pending.front().unwrap()) {
-                if let Some((ix, completion)) = expire(pending.pop_front().unwrap(), obs) {
-                    out[ix] = Some(completion);
-                }
-                continue;
-            }
             let Some(dec) = free.pop_front() else { break };
             let job = pending.pop_front().unwrap();
             ready.push_back(admit(dec, job, cfg, cache, spec, obs)?);
@@ -1347,10 +1670,18 @@ fn worker(
                 // finish as TimedOut inline, consuming no session.  This
                 // runs before the ready-pop so a saturated scheduler
                 // (ready never empty) still honors the budget instead of
-                // delivering the timeout only when a session frees.
-                while g.pending.front().is_some_and(expired) {
-                    if let Some(done) = expire(g.pending.pop_front().unwrap(), obs) {
-                        g.done.push(done);
+                // delivering the timeout only when a session frees — and
+                // it sweeps the whole queue, so (with EDF or mixed
+                // deadlines) an expired job cannot hide behind a live
+                // one: notification latency is one scheduling pass.
+                {
+                    let s = &mut *g;
+                    let (pending, done) = (&mut s.pending, &mut s.done);
+                    reap_expired_queue(pending, obs, |ix, c| done.push((ix, c)));
+                }
+                if let Some(o) = obs {
+                    if o.counters {
+                        o.registry.set_queue_depth(g.pending.len() as u64);
                     }
                 }
                 if let Some(seq) = g.ready.pop_front() {
@@ -1447,6 +1778,10 @@ struct ResidentInner {
     /// registry behind `GET /healthz` and `GET /metrics`, plus the
     /// optional request log.
     obs: Option<Arc<ObsRuntime>>,
+    /// Per-user fixed-window admission quotas (None when
+    /// [`ServeCfg::quota`] is unset): charged in [`StreamScheduler::try_submit`]
+    /// before a job is queued.
+    quota: Option<QuotaState>,
 }
 
 /// A resident continuous-batching scheduler: the worker pool stays up
@@ -1490,6 +1825,7 @@ impl StreamScheduler {
                 None => PrefixCache::new(model.fingerprint(), cfg.prefix_cache_size),
             })
         });
+        let quota = cfg.quota.clone().map(QuotaState::new);
         let inner = Arc::new(ResidentInner {
             shared: Mutex::new(Shared {
                 pending: VecDeque::new(),
@@ -1506,6 +1842,7 @@ impl StreamScheduler {
             model,
             cache,
             obs,
+            quota,
         });
         let workers = (0..inner.cfg.threads)
             .map(|_| {
@@ -1563,27 +1900,39 @@ impl StreamScheduler {
     /// [`TokenEvent::Done`] with [`FinishReason::Rejected`] (mirroring
     /// batch semantics — one user's bad prompt is data, not an error);
     /// `Err` means the scheduler itself is not accepting (shut down, or
-    /// a worker failed).
+    /// a worker failed).  Admission-control refusals (queue depth,
+    /// quota — see [`try_submit`](Self::try_submit)) surface here as a
+    /// plain error; front-ends that need the `Retry-After` hint call
+    /// `try_submit` directly.
     pub fn submit(&self, req: Request) -> Result<TokenStream> {
+        self.try_submit(req).map_err(|e| match e {
+            SubmitError::Unavailable(err) => err,
+            SubmitError::Throttled(adm) => anyhow!("serve: throttled: {adm}"),
+        })
+    }
+
+    /// [`submit`](Self::submit) with a structured error: a refusal by
+    /// admission control — pending queue at [`ServeCfg::max_queue_depth`],
+    /// or the request's `user` over its [`QuotaCfg`] window — comes back
+    /// as [`SubmitError::Throttled`] carrying a [`Retry-After`
+    /// hint](AdmissionError::retry_after), so an HTTP front-end can
+    /// answer 429 instead of a generic 503.  Nothing is queued or
+    /// charged on a throttled submit.  With `max_queue_depth == 0` and
+    /// no quota configured (the defaults), behavior is byte-identical
+    /// to the pre-backpressure path.
+    pub fn try_submit(&self, req: Request) -> std::result::Result<TokenStream, SubmitError> {
+        let Request { id, prompt, max_new_tokens, user, deadline_ms } = req;
         let (tx, rx) = channel();
-        let stream = TokenStream { request_id: req.id, rx };
+        let stream = TokenStream { request_id: id, rx };
         let submitted = Instant::now();
-        let job = match encode_prompt(&self.inner.model.manifest, &self.inner.tok, &req.prompt) {
-            Ok(ids) => Job {
-                ix: 0, // unused: streaming completions travel by sink
-                id: req.id,
-                budget: req.max_new_tokens.unwrap_or(self.inner.cfg.sample.max_new_tokens),
-                prompt: req.prompt,
-                ids,
-                deadline: self.inner.cfg.max_queue_wait.map(|d| submitted + d),
-                submitted,
-                sink: Some(tx),
-            },
+        let obs = self.inner.obs.as_deref();
+        let ids = match encode_prompt(&self.inner.model.manifest, &self.inner.tok, &prompt) {
+            Ok(ids) => ids,
             Err(e) => {
-                note_rejected(self.inner.obs.as_deref(), req.id, submitted);
+                note_rejected(obs, id, submitted);
                 let completion = Completion {
-                    request_id: req.id,
-                    prompt: req.prompt,
+                    request_id: id,
+                    prompt,
                     completion: String::new(),
                     tokens_generated: 0,
                     cached_prefix_len: 0,
@@ -1594,15 +1943,66 @@ impl StreamScheduler {
                 return Ok(stream);
             }
         };
+        let budget = max_new_tokens.unwrap_or(self.inner.cfg.sample.max_new_tokens);
+        let deadline = deadline_ms
+            .map(|ms| submitted + Duration::from_millis(ms))
+            .or_else(|| self.inner.cfg.max_queue_wait.map(|d| submitted + d));
+        let job = Job {
+            ix: 0, // unused: streaming completions travel by sink
+            id,
+            budget,
+            prompt,
+            ids,
+            deadline,
+            submitted,
+            sink: Some(tx),
+        };
         {
             let mut g = self.inner.shared.lock().expect("scheduler lock poisoned");
             if g.shutdown {
-                bail!("serve: scheduler is shut down");
+                return Err(SubmitError::Unavailable(anyhow!("serve: scheduler is shut down")));
             }
             if let Some(e) = &g.failed {
-                bail!("serve: scheduler failed: {e:#}");
+                return Err(SubmitError::Unavailable(anyhow!("serve: scheduler failed: {e:#}")));
             }
-            g.pending.push_back(job);
+            // Reap before measuring depth: expired jobs should never
+            // count against a live submitter's admission budget.
+            {
+                let s = &mut *g;
+                let (pending, done) = (&mut s.pending, &mut s.done);
+                reap_expired_queue(pending, obs, |ix, c| done.push((ix, c)));
+            }
+            let limit = self.inner.cfg.max_queue_depth;
+            if limit > 0 && g.pending.len() >= limit {
+                let depth = g.pending.len();
+                let adm = AdmissionError::QueueFull {
+                    depth,
+                    limit,
+                    retry_after: queue_retry_after(depth, self.inner.cfg.max_active),
+                };
+                drop(g);
+                note_throttled(obs, id, submitted, &adm);
+                return Err(SubmitError::Throttled(adm));
+            }
+            if let (Some(q), Some(user)) = (&self.inner.quota, user.as_deref()) {
+                let tokens = (job.ids.len() + budget) as u64;
+                if let Err(adm) = q.try_charge(user, tokens) {
+                    drop(g);
+                    note_throttled(obs, id, submitted, &adm);
+                    return Err(SubmitError::Throttled(adm));
+                }
+                if let Some(o) = obs {
+                    if o.counters {
+                        o.registry.add_quota_tokens(tokens);
+                    }
+                }
+            }
+            enqueue(&mut g.pending, job, self.inner.cfg.edf);
+            if let Some(o) = obs {
+                if o.counters {
+                    o.registry.set_queue_depth(g.pending.len() as u64);
+                }
+            }
         }
         self.inner.wake.notify_one();
         Ok(stream)
@@ -2097,4 +2497,223 @@ mod tests {
         assert!(matches!(completion.finish, FinishReason::Rejected(_)));
         assert_eq!(completion.tokens_generated, 0);
     }
-}
+
+    /// Every [`FinishReason`] variant has exactly one entry in
+    /// [`crate::obs::FINISH_LABELS`] — so `inc_finished` can never see a
+    /// label it doesn't know.  The no-wildcard match makes adding a
+    /// variant without updating this list a compile error.
+    #[test]
+    fn every_finish_reason_has_a_metrics_label() {
+        let all = [
+            FinishReason::Eot,
+            FinishReason::MaxTokens,
+            FinishReason::CtxFull,
+            FinishReason::TimedOut,
+            FinishReason::Cancelled,
+            FinishReason::Rejected(String::new()),
+            FinishReason::Throttled(String::new()),
+        ];
+        for f in &all {
+            match f {
+                FinishReason::Eot
+                | FinishReason::MaxTokens
+                | FinishReason::CtxFull
+                | FinishReason::TimedOut
+                | FinishReason::Cancelled
+                | FinishReason::Rejected(_)
+                | FinishReason::Throttled(_) => {}
+            }
+            assert!(
+                crate::obs::FINISH_LABELS.contains(&f.label()),
+                "label {:?} missing from obs::FINISH_LABELS",
+                f.label()
+            );
+        }
+        assert_eq!(
+            crate::obs::FINISH_LABELS.len(),
+            all.len(),
+            "FINISH_LABELS and FinishReason must stay 1:1"
+        );
+    }
+
+    /// The reap sweeps the *whole* queue: an expired job behind a live
+    /// one is collected, order among survivors is preserved, and
+    /// nothing is decoded for the expired slot.
+    #[test]
+    fn reap_collects_expired_jobs_anywhere_in_the_queue() {
+        let tok = tok();
+        let long_ago =
+            Instant::now().checked_sub(Duration::from_secs(60)).unwrap_or_else(Instant::now);
+        let job = |ix: usize, deadline: Option<Instant>| Job {
+            ix,
+            id: ix as u64,
+            budget: 4,
+            prompt: "Once upon a time".to_string(),
+            ids: tok.encode("Once upon a time"),
+            deadline,
+            submitted: Instant::now(),
+            sink: None,
+        };
+        let far = Some(Instant::now() + Duration::from_secs(3600));
+        let mut pending: VecDeque<Job> =
+            vec![job(0, far), job(1, Some(long_ago)), job(2, None), job(3, Some(long_ago))]
+                .into();
+        let mut reaped = Vec::new();
+        reap_expired_queue(&mut pending, None, |ix, c| reaped.push((ix, c)));
+        assert_eq!(reaped.iter().map(|(ix, _)| *ix).collect::<Vec<_>>(), vec![1, 3]);
+        for (_, c) in &reaped {
+            assert_eq!(c.finish, FinishReason::TimedOut);
+            assert_eq!(c.tokens_generated, 0);
+        }
+        assert_eq!(pending.iter().map(|j| j.ix).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    /// EDF insertion: earliest deadline first, deadline-free jobs last,
+    /// FIFO among equals; off = plain FIFO.
+    #[test]
+    fn edf_enqueue_orders_by_deadline() {
+        let tok = tok();
+        let base = Instant::now() + Duration::from_secs(100);
+        let job = |ix: usize, deadline: Option<Instant>| Job {
+            ix,
+            id: ix as u64,
+            budget: 4,
+            prompt: "hi there".to_string(),
+            ids: tok.encode("hi there"),
+            deadline,
+            submitted: Instant::now(),
+            sink: None,
+        };
+        let mut q: VecDeque<Job> = VecDeque::new();
+        enqueue(&mut q, job(0, None), true);
+        enqueue(&mut q, job(1, Some(base + Duration::from_secs(30))), true);
+        enqueue(&mut q, job(2, Some(base)), true);
+        enqueue(&mut q, job(3, Some(base + Duration::from_secs(30))), true);
+        enqueue(&mut q, job(4, None), true);
+        assert_eq!(q.iter().map(|j| j.ix).collect::<Vec<_>>(), vec![2, 1, 3, 0, 4]);
+        let mut fifo: VecDeque<Job> = VecDeque::new();
+        enqueue(&mut fifo, job(0, None), false);
+        enqueue(&mut fifo, job(1, Some(base)), false);
+        assert_eq!(fifo.iter().map(|j| j.ix).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    /// EDF is pure scheduling: with generous deadlines, completions are
+    /// byte-identical to FIFO (per-request RNG streams make admission
+    /// order irrelevant to sampled text).
+    #[test]
+    fn edf_never_changes_sampled_text() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let reqs = || {
+            let mut a = Request::new(0, "Once upon a time");
+            a.deadline_ms = Some(3_600_000);
+            let mut b = Request::new(1, "Lily likes cats");
+            b.deadline_ms = Some(1_800_000);
+            vec![a, b, Request::new(2, "Jack went to")]
+        };
+        let base = ServeCfg {
+            max_active: 2,
+            quantum: 2,
+            sample: SampleCfg { max_new_tokens: 6, seed: 4, ..Default::default() },
+            ..Default::default()
+        };
+        for threads in [1usize, 2] {
+            let fifo = serve(&model, &tok, reqs(), &ServeCfg { threads, ..base.clone() }).unwrap();
+            let edf =
+                serve(&model, &tok, reqs(), &ServeCfg { threads, edf: true, ..base.clone() })
+                    .unwrap();
+            for (x, y) in fifo.iter().zip(&edf) {
+                assert_eq!(x.request_id, y.request_id, "results stay in request order");
+                assert_eq!(x.completion, y.completion, "threads={threads}: EDF changed text");
+                assert_eq!(x.finish, y.finish);
+            }
+        }
+    }
+
+    /// Per-user quotas on the batch path: the first request charges the
+    /// window, the same user's second request is Throttled, another
+    /// user and an anonymous request pass.
+    #[test]
+    fn batch_quota_throttles_per_user() {
+        let tok = tok();
+        let model = model(tok.vocab_size(), 48);
+        let cfg = ServeCfg {
+            threads: 1,
+            quota: Some(QuotaCfg { max_requests: 1, ..Default::default() }),
+            sample: SampleCfg { max_new_tokens: 4, seed: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let reqs = vec![
+            Request::new(0, "Once upon a time").with_user("alice"),
+            Request::new(1, "Lily likes cats").with_user("alice"),
+            Request::new(2, "Jack went to").with_user("bob"),
+            Request::new(3, "hi there"),
+        ];
+        let comps = serve(&model, &tok, reqs, &cfg).unwrap();
+        assert_ne!(comps[0].finish.label(), "throttled");
+        assert!(matches!(comps[1].finish, FinishReason::Throttled(_)), "{:?}", comps[1].finish);
+        assert_eq!(comps[1].tokens_generated, 0);
+        assert_ne!(comps[2].finish.label(), "throttled", "other users have their own window");
+        assert_ne!(comps[3].finish.label(), "throttled", "anonymous requests bypass quotas");
+    }
+
+    /// Token quotas charge prompt + budget pessimistically at admission
+    /// and refuse without charging: a refused request does not consume
+    /// window budget a later, smaller one could use.
+    #[test]
+    fn quota_state_charges_tokens_pessimistically() {
+        let q = QuotaState::new(QuotaCfg { max_tokens: 10, ..Default::default() });
+        assert!(q.try_charge("u", 6).is_ok());
+        let err = q.try_charge("u", 6).unwrap_err();
+        assert!(matches!(err, AdmissionError::QuotaExceeded { what: "token", .. }));
+        assert!(err.retry_after() >= Duration::from_secs(1));
+        // The refusal charged nothing: 4 more tokens still fit.
+        assert!(q.try_charge("u", 4).is_ok());
+        assert!(q.try_charge("v", 10).is_ok(), "windows are per-user");
+    }
+
+    /// Resident backpressure: with max_queue_depth=1 on a saturated
+    /// max_active=1 scheduler, the queue accepts one waiter and
+    /// throttles the next with a Retry-After hint — never an unbounded
+    /// queue.  Plain submit() surfaces the same refusal as an error.
+    #[test]
+    fn stream_scheduler_throttles_at_queue_depth() {
+        let tok = tok();
+        // A large context + no-EOT sampling keeps request 0 decoding for
+        // thousands of steps, so it reliably holds the single session
+        // while we probe admission.
+        let model = model(tok.vocab_size(), 4096);
+        let cfg = ServeCfg {
+            max_active: 1,
+            threads: 1,
+            quantum: 1,
+            max_queue_depth: 1,
+            prefix_cache_size: 0,
+            sample: SampleCfg {
+                max_new_tokens: 4000,
+                seed: 5,
+                stop_at_eot: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let sched = StreamScheduler::start(Arc::clone(&model), tok.clone(), cfg).unwrap();
+        let first = sched.try_submit(Request::new(0, "Once upon a time")).unwrap();
+        // Wait until request 0 holds the session (first token arrives),
+        // so the next submissions are guaranteed to queue.
+        let mut first_it = first.into_iter();
+        let _ = first_it.next().expect("request 0 produces at least one event");
+        let _queued = sched.try_submit(Request::new(1, "Lily likes cats")).unwrap();
+        match sched.try_submit(Request::new(2, "Jack went to")) {
+            Err(SubmitError::Throttled(adm)) => {
+                assert!(matches!(adm, AdmissionError::QueueFull { depth: 1, limit: 1, .. }));
+                assert!(adm.retry_after() >= Duration::from_secs(1));
+            }
+            other => panic!("expected Throttled, got {:?}", other.map(|s| s.request_id)),
+        }
+        let err = sched.submit(Request::new(3, "hi there")).unwrap_err();
+        assert!(format!("{err:#}").contains("throttled"), "{err:#}");
+        drop(first_it);
+        drop(_queued);
+        sched.shutdown();
+    }

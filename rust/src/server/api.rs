@@ -4,12 +4,15 @@
 //! Shapes:
 //!
 //! * request (`POST /v1/generate`, `POST /v1/stream`):
-//!   `{"prompt": "...", "id": 7, "max_new_tokens": 32}` — `id` and
-//!   `max_new_tokens` optional.  `id` fixes the sampling RNG stream
-//!   (`seed ^ id`); omit it and the server assigns a fresh one.
+//!   `{"prompt": "...", "id": 7, "max_new_tokens": 32, "user": "alice",
+//!   "deadline_ms": 1500}` — everything but `prompt` optional.  `id`
+//!   fixes the sampling RNG stream (`seed ^ id`); omit it and the
+//!   server assigns a fresh one.  `user` keys per-user quotas;
+//!   `deadline_ms` overrides the server's queue-wait budget and orders
+//!   the queue under EDF.
 //! * completion: `{"request_id": 7, "prompt": "...", "completion": "...",
 //!   "tokens_generated": 32, "cached_prefix_len": 12, "finish": "eot"}`
-//!   (+ `"error"` detail when `finish` is `"rejected"`;
+//!   (+ `"error"` detail when `finish` is `"rejected"` or `"throttled"`;
 //!   `cached_prefix_len` counts prompt tokens served from the shared
 //!   prefix cache — 0 on a cold prefill; + `"spec": {"rounds": ..,
 //!   "drafted": .., "accepted": .., "emitted": .., "fused_passes": ..,
@@ -37,11 +40,23 @@ pub struct GenerateRequest {
     pub prompt: String,
     /// Per-request cap on generated tokens (None = server default).
     pub max_new_tokens: Option<usize>,
+    /// Quota accounting key (None = anonymous, bypasses per-user
+    /// quotas).  Never affects sampled text.
+    pub user: Option<String>,
+    /// Admission deadline in milliseconds, overriding the server's
+    /// `max_queue_wait`; also the EDF ordering key.
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenerateRequest {
     pub fn new(prompt: &str) -> Self {
-        GenerateRequest { id: None, prompt: prompt.to_string(), max_new_tokens: None }
+        GenerateRequest {
+            id: None,
+            prompt: prompt.to_string(),
+            max_new_tokens: None,
+            user: None,
+            deadline_ms: None,
+        }
     }
 
     pub fn to_json(&self) -> Value {
@@ -51,6 +66,12 @@ impl GenerateRequest {
         }
         if let Some(m) = self.max_new_tokens {
             pairs.push(("max_new_tokens", json::num(m as f64)));
+        }
+        if let Some(u) = &self.user {
+            pairs.push(("user", json::s(u)));
+        }
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", json::num(d as f64)));
         }
         json::obj(pairs)
     }
@@ -83,7 +104,23 @@ impl GenerateRequest {
                     .ok_or_else(|| anyhow!("'max_new_tokens' must be a number"))?,
             ),
         };
-        Ok(GenerateRequest { id, prompt, max_new_tokens })
+        let user = match v.get("user") {
+            Value::Null => None,
+            x => Some(
+                x.as_str().ok_or_else(|| anyhow!("'user' must be a string"))?.to_string(),
+            ),
+        };
+        let deadline_ms = match v.get("deadline_ms") {
+            Value::Null => None,
+            x => {
+                let f = x.as_f64().ok_or_else(|| anyhow!("'deadline_ms' must be a number"))?;
+                if f < 0.0 || f.fract() != 0.0 {
+                    bail!("'deadline_ms' must be a non-negative integer (got {f})");
+                }
+                Some(f as u64)
+            }
+        };
+        Ok(GenerateRequest { id, prompt, max_new_tokens, user, deadline_ms })
     }
 }
 
@@ -97,6 +134,7 @@ pub fn finish_from_label(label: &str, error: Option<&str>) -> Result<FinishReaso
         "timed_out" => FinishReason::TimedOut,
         "cancelled" => FinishReason::Cancelled,
         "rejected" => FinishReason::Rejected(error.unwrap_or("").to_string()),
+        "throttled" => FinishReason::Throttled(error.unwrap_or("").to_string()),
         other => bail!("unknown finish reason {other:?}"),
     })
 }
@@ -124,8 +162,11 @@ pub fn completion_to_json(c: &Completion) -> Value {
             ]),
         ));
     }
-    if let FinishReason::Rejected(why) = &c.finish {
-        pairs.push(("error", json::s(why)));
+    match &c.finish {
+        FinishReason::Rejected(why) | FinishReason::Throttled(why) => {
+            pairs.push(("error", json::s(why)));
+        }
+        _ => {}
     }
     json::obj(pairs)
 }
@@ -203,15 +244,27 @@ mod tests {
         let mut req = GenerateRequest::new("Once upon a time");
         req.id = Some(42);
         req.max_new_tokens = Some(8);
+        req.user = Some("alice".into());
+        req.deadline_ms = Some(1500);
         let back = GenerateRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back.id, Some(42));
         assert_eq!(back.prompt, "Once upon a time");
         assert_eq!(back.max_new_tokens, Some(8));
+        assert_eq!(back.user.as_deref(), Some("alice"));
+        assert_eq!(back.deadline_ms, Some(1500));
 
         let bare = GenerateRequest::from_json(&json::parse(r#"{"prompt":"hi"}"#).unwrap()).unwrap();
         assert_eq!(bare.id, None);
         assert_eq!(bare.max_new_tokens, None);
+        assert_eq!(bare.user, None);
+        assert_eq!(bare.deadline_ms, None);
         assert!(GenerateRequest::from_json(&json::parse(r#"{"id":1}"#).unwrap()).is_err());
+        for bad in [r#"{"prompt":"x","user":7}"#, r#"{"prompt":"x","deadline_ms":-5}"#] {
+            assert!(
+                GenerateRequest::from_json(&json::parse(bad).unwrap()).is_err(),
+                "should reject {bad}"
+            );
+        }
 
         // Ids that would corrupt through f64 are rejected, not rounded.
         for bad in [r#"{"prompt":"x","id":-1}"#, r#"{"prompt":"x","id":1.5}"#,
@@ -232,6 +285,7 @@ mod tests {
             FinishReason::TimedOut,
             FinishReason::Cancelled,
             FinishReason::Rejected("prompt encodes to zero tokens".into()),
+            FinishReason::Throttled("queue full (3 waiting, limit 3)".into()),
         ] {
             let c = Completion {
                 request_id: 3,

@@ -158,28 +158,84 @@ fn status_error(status: u16, v: &json::Value) -> anyhow::Error {
     anyhow!("server returned {status}: {}", v.get("error").as_str().unwrap_or("(no detail)"))
 }
 
-/// `POST /v1/generate`: block until the whole completion is back.
-pub fn generate(addr: &str, req: &GenerateRequest) -> Result<Completion> {
-    let (head, mut r) = send(addr, "POST", "/v1/generate", Some(&req.to_json().to_string()))?;
-    let v = parse_json_body(&head, &mut r)?;
-    if head.status != 200 {
-        return Err(status_error(head.status, &v));
-    }
-    api::completion_from_json(&v)
+/// The server's `Retry-After` backoff hint (seconds), defaulting to 1s
+/// when the header is missing or unparseable.
+fn retry_after_hint(head: &ResponseHead) -> Duration {
+    head.header("retry-after")
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(Duration::from_secs)
+        .unwrap_or(Duration::from_secs(1))
 }
 
-/// `POST /v1/stream`: invoke `on_delta(token, text)` for every event as
-/// it arrives (`token` is `None` for the final mid-character flush), and
-/// return the finished [`Completion`].  Concatenating every `text`
-/// argument reconstructs the completion byte-for-byte.
-pub fn stream<F: FnMut(Option<u32>, &str)>(
+/// Outcome of [`try_generate`]: a finished completion (whatever its
+/// finish reason — the server now grades completions with real HTTP
+/// statuses, but the body still travels), or an admission refusal (429)
+/// carrying the server's backoff hint.
+#[derive(Debug)]
+pub enum ApiOutcome {
+    Done(Completion),
+    /// The server refused the request at admission (queue depth or
+    /// per-user quota); retry no sooner than `retry_after`.
+    Throttled { retry_after: Duration, message: String },
+}
+
+/// Map a parsed response to an [`ApiOutcome`].  Any body carrying
+/// `"finish"` is a completion document — 400 (rejected), 429
+/// (throttled), and 503 (timed out) completions all still deliver their
+/// detail; a 429 *without* a completion is an admission refusal.
+fn outcome(head: &ResponseHead, v: &json::Value) -> Result<ApiOutcome> {
+    if v.get("finish").as_str().is_some() {
+        return api::completion_from_json(v).map(ApiOutcome::Done);
+    }
+    if head.status == 429 {
+        return Ok(ApiOutcome::Throttled {
+            retry_after: retry_after_hint(head),
+            message: v.get("error").as_str().unwrap_or("throttled").to_string(),
+        });
+    }
+    Err(status_error(head.status, v))
+}
+
+/// `POST /v1/generate` with the admission-control surface exposed:
+/// backpressure/quota refusals come back as [`ApiOutcome::Throttled`]
+/// with the server's `Retry-After`, instead of a stringly error.
+pub fn try_generate(addr: &str, req: &GenerateRequest) -> Result<ApiOutcome> {
+    let (head, mut r) = send(addr, "POST", "/v1/generate", Some(&req.to_json().to_string()))?;
+    let v = parse_json_body(&head, &mut r)?;
+    outcome(&head, &v)
+}
+
+/// `POST /v1/generate`: block until the whole completion is back.
+/// Completions always return `Ok` whatever their finish reason (the
+/// body says `"timed_out"`, `"rejected"`, …); a throttled admission
+/// surfaces as an error naming the backoff.
+pub fn generate(addr: &str, req: &GenerateRequest) -> Result<Completion> {
+    match try_generate(addr, req)? {
+        ApiOutcome::Done(c) => Ok(c),
+        ApiOutcome::Throttled { retry_after, message } => Err(anyhow!(
+            "server throttled the request ({message}); retry after {}s",
+            retry_after.as_secs()
+        )),
+    }
+}
+
+/// `POST /v1/stream` with the admission-control surface exposed, like
+/// [`try_generate`]: a 429 before the stream head comes back as
+/// [`ApiOutcome::Throttled`] instead of an error.
+pub fn try_stream<F: FnMut(Option<u32>, &str)>(
     addr: &str,
     req: &GenerateRequest,
     mut on_delta: F,
-) -> Result<Completion> {
+) -> Result<ApiOutcome> {
     let (head, mut r) = send(addr, "POST", "/v1/stream", Some(&req.to_json().to_string()))?;
     if head.status != 200 {
         let v = parse_json_body(&head, &mut r)?;
+        if head.status == 429 {
+            return Ok(ApiOutcome::Throttled {
+                retry_after: retry_after_hint(&head),
+                message: v.get("error").as_str().unwrap_or("throttled").to_string(),
+            });
+        }
         return Err(status_error(head.status, &v));
     }
 
@@ -209,7 +265,39 @@ pub fn stream<F: FnMut(Option<u32>, &str)>(
         }
         Ok(())
     })?;
-    done.ok_or_else(|| anyhow!("stream ended without a done event (server failure mid-request?)"))
+    done.map(ApiOutcome::Done)
+        .ok_or_else(|| anyhow!("stream ended without a done event (server failure mid-request?)"))
+}
+
+/// `POST /v1/stream`: invoke `on_delta(token, text)` for every event as
+/// it arrives (`token` is `None` for the final mid-character flush), and
+/// return the finished [`Completion`].  Concatenating every `text`
+/// argument reconstructs the completion byte-for-byte.  A throttled
+/// admission surfaces as an error naming the backoff.
+pub fn stream<F: FnMut(Option<u32>, &str)>(
+    addr: &str,
+    req: &GenerateRequest,
+    on_delta: F,
+) -> Result<Completion> {
+    match try_stream(addr, req, on_delta)? {
+        ApiOutcome::Done(c) => Ok(c),
+        ApiOutcome::Throttled { retry_after, message } => Err(anyhow!(
+            "server throttled the request ({message}); retry after {}s",
+            retry_after.as_secs()
+        )),
+    }
+}
+
+/// `GET /metrics` — the raw Prometheus text exposition.  The load
+/// generator differences two of these around a run to extract latency
+/// quantiles and token throughput.
+pub fn metrics_text(addr: &str) -> Result<String> {
+    let (head, mut r) = send(addr, "GET", "/metrics", None)?;
+    let body = read_body(&head, &mut r)?;
+    if head.status != 200 {
+        bail!("server returned {} for /metrics", head.status);
+    }
+    String::from_utf8(body).map_err(|_| anyhow!("metrics body is not UTF-8"))
 }
 
 /// `GET /healthz` — returns the parsed health document.
@@ -316,7 +404,11 @@ impl Client {
                     let text = std::str::from_utf8(&bytes)
                         .map_err(|_| anyhow!("response body is not UTF-8"))?;
                     let v = json::parse(text).map_err(|e| anyhow!("{e}"))?;
-                    if head.status != 200 {
+                    // Completion documents keep flowing whatever their
+                    // status (the server grades rejected/timed-out/
+                    // throttled completions with real codes now);
+                    // everything else non-200 is an error.
+                    if head.status != 200 && v.get("finish").as_str().is_none() {
                         return Err(status_error(head.status, &v));
                     }
                     return Ok(v);

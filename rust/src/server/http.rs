@@ -135,13 +135,32 @@ pub fn write_response<W: Write>(
     body: &[u8],
     keep_alive: bool,
 ) -> Result<()> {
+    write_response_with(w, status, reason, content_type, &[], body, keep_alive)
+}
+
+/// [`write_response`] plus extra headers (e.g. `Retry-After` on a 429).
+/// Each `(name, value)` pair is emitted verbatim between the standard
+/// headers and the blank line.
+pub fn write_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+    keep_alive: bool,
+) -> Result<()> {
     write!(
         w,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+         Content-Length: {}\r\nConnection: {}\r\n",
         body.len(),
         if keep_alive { "keep-alive" } else { "close" }
     )?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
     w.write_all(body)?;
     w.flush()?;
     Ok(())
@@ -251,6 +270,27 @@ mod tests {
         write_response(&mut buf, 200, "OK", "application/json", b"{}", true).unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.contains("Connection: keep-alive\r\n"));
+    }
+
+    #[test]
+    fn extra_headers_land_before_the_blank_line() {
+        let mut buf = Vec::new();
+        write_response_with(
+            &mut buf,
+            429,
+            "Too Many Requests",
+            "application/json",
+            &[("Retry-After", "7".to_string())],
+            b"{}",
+            false,
+        )
+        .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        let head_end = text.find("\r\n\r\n").unwrap();
+        assert!(text[..head_end].ends_with("Retry-After: 7"), "header inside the head: {text}");
+        assert!(text[..head_end].contains("Connection: close"));
+        assert!(text.ends_with("\r\n\r\n{}"));
     }
 
     #[test]

@@ -44,7 +44,9 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::serve::{Request, StreamScheduler, TokenEvent};
+use crate::serve::{
+    AdmissionError, Completion, FinishReason, Request, StreamScheduler, SubmitError, TokenEvent,
+};
 use crate::util::json;
 
 /// Per-connection socket read timeout: a client that connects and never
@@ -245,6 +247,7 @@ fn respond_error<W: Write>(w: &mut W, status: u16, msg: &str) -> Result<()> {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Error",
@@ -255,6 +258,41 @@ fn respond_error<W: Write>(w: &mut W, status: u16, msg: &str) -> Result<()> {
     http::write_response(w, status, reason, "application/json", body.as_bytes(), false)
 }
 
+/// 429 for a request refused by admission control, with the scheduler's
+/// backoff hint as both a `Retry-After` header and a machine-readable
+/// body field.
+fn respond_throttled<W: Write>(w: &mut W, adm: &AdmissionError) -> Result<()> {
+    let secs = adm.retry_after().as_secs().max(1);
+    let body = json::obj(vec![
+        ("error", json::s(&format!("throttled: {adm}"))),
+        ("cause", json::s(adm.cause())),
+        ("retry_after_seconds", json::num(secs as f64)),
+    ])
+    .to_string();
+    http::write_response_with(
+        w,
+        429,
+        "Too Many Requests",
+        "application/json",
+        &[("Retry-After", secs.to_string())],
+        body.as_bytes(),
+        false,
+    )
+}
+
+/// HTTP disposition of a *finished* completion: client-caused
+/// rejections are 400, capacity refusals 429, queue-wait timeouts 503
+/// (retryable — the request was valid, the server just couldn't get to
+/// it in budget); everything else is a 200 with generated text.
+fn completion_status(c: &Completion) -> (u16, &'static str) {
+    match &c.finish {
+        FinishReason::Rejected(_) => (400, "Bad Request"),
+        FinishReason::Throttled(_) => (429, "Too Many Requests"),
+        FinishReason::TimedOut => (503, "Service Unavailable"),
+        _ => (200, "OK"),
+    }
+}
+
 /// Parse the JSON body into a scheduler [`Request`], assigning a fresh
 /// id when the client did not pick one.
 fn parse_generate(inner: &ServerInner, req: &http::HttpRequest) -> Result<Request> {
@@ -263,6 +301,8 @@ fn parse_generate(inner: &ServerInner, req: &http::HttpRequest) -> Result<Reques
     let id = g.id.unwrap_or_else(|| inner.next_id.fetch_add(1, Ordering::Relaxed));
     let mut r = Request::new(id, &g.prompt);
     r.max_new_tokens = g.max_new_tokens;
+    r.user = g.user;
+    r.deadline_ms = g.deadline_ms;
     Ok(r)
 }
 
@@ -278,20 +318,35 @@ fn handle_generate(
         Ok(r) => r,
         Err(e) => return respond_error(w, 400, &format!("{e:#}")).map(|()| false),
     };
-    let stream = match inner.sched.submit(request) {
+    let stream = match inner.sched.try_submit(request) {
         Ok(s) => s,
-        Err(e) => return respond_error(w, 503, &format!("{e:#}")).map(|()| false),
+        Err(SubmitError::Throttled(adm)) => return respond_throttled(w, &adm).map(|()| false),
+        Err(SubmitError::Unavailable(e)) => {
+            return respond_error(w, 503, &format!("{e:#}")).map(|()| false)
+        }
     };
     match stream.wait(|_| {}) {
-        Some(completion) => http::write_response(
-            w,
-            200,
-            "OK",
-            "application/json",
-            api::completion_to_json(&completion).to_string().as_bytes(),
-            keep_alive,
-        )
-        .map(|()| keep_alive),
+        Some(completion) => {
+            let (status, reason) = completion_status(&completion);
+            // Non-200 dispositions close (mirroring respond_error); the
+            // completion body still travels so clients see the detail.
+            let reuse = status == 200 && keep_alive;
+            let extra: &[(&str, String)] = &if matches!(status, 429 | 503) {
+                vec![("Retry-After", "1".to_string())]
+            } else {
+                Vec::new()
+            };
+            http::write_response_with(
+                w,
+                status,
+                reason,
+                "application/json",
+                extra,
+                api::completion_to_json(&completion).to_string().as_bytes(),
+                reuse,
+            )
+            .map(|()| reuse)
+        }
         None => respond_error(w, 500, "scheduler dropped the request before it finished")
             .map(|()| false),
     }
@@ -302,9 +357,13 @@ fn handle_stream(inner: &ServerInner, w: &mut impl Write, req: &http::HttpReques
         Ok(r) => r,
         Err(e) => return respond_error(w, 400, &format!("{e:#}")),
     };
-    let stream = match inner.sched.submit(request) {
+    // Admission errors resolve *before* the stream head: the client
+    // gets a real status line (429/503) it can branch on, instead of a
+    // 200 whose first event is a failure.
+    let stream = match inner.sched.try_submit(request) {
         Ok(s) => s,
-        Err(e) => return respond_error(w, 503, &format!("{e:#}")),
+        Err(SubmitError::Throttled(adm)) => return respond_throttled(w, &adm),
+        Err(SubmitError::Unavailable(e)) => return respond_error(w, 503, &format!("{e:#}")),
     };
     http::write_stream_head(w)?;
     for ev in stream {
@@ -383,6 +442,31 @@ fn handle_health(inner: &ServerInner, w: &mut impl Write, keep_alive: bool) -> R
                 ("quantized_entries", json::num(s.quantized_entries as f64)),
             ]),
         ));
+    }
+    // SLO observability: the admission-control configuration plus live
+    // queue depth and throttle totals, so an operator (or the loadgen
+    // harness) can see backpressure without scraping /metrics.
+    let cfg = inner.sched.cfg();
+    if cfg.max_queue_depth > 0 || cfg.quota.is_some() || cfg.edf {
+        let mut slo = vec![
+            ("max_queue_depth", json::num(cfg.max_queue_depth as f64)),
+            ("edf", json::Value::Bool(cfg.edf)),
+        ];
+        if let Some(q) = &cfg.quota {
+            slo.push((
+                "quota",
+                json::obj(vec![
+                    ("max_requests", json::num(q.max_requests as f64)),
+                    ("max_tokens", json::num(q.max_tokens as f64)),
+                    ("window_seconds", json::num(q.window.as_secs_f64())),
+                ]),
+            ));
+        }
+        if let Some(reg) = inner.sched.metrics() {
+            slo.push(("queue_depth", json::num(reg.queue_depth() as f64)));
+            slo.push(("throttled_total", json::num(reg.throttled_total() as f64)));
+        }
+        pairs.push(("slo", json::obj(slo)));
     }
     // Speculative-decoding observability: accepted tokens per verify
     // round is the number that says whether drafting is paying off.

@@ -159,7 +159,9 @@ fn bad_requests_and_routes_get_http_errors() {
         assert!(resp.starts_with("HTTP/1.1 405 "), "got: {resp}");
     }
 
-    // A rejected prompt is data, not a transport error: 200 + finish.
+    // A rejected prompt still delivers its completion document (now
+    // graded 400 on the wire — pinned in tests/slo.rs); the client
+    // parses it whatever the status.
     let rejected = client::generate(&addr, &GenerateRequest::new("")).unwrap();
     assert!(matches!(rejected.finish, FinishReason::Rejected(_)));
     assert_eq!(rejected.tokens_generated, 0);

@@ -110,6 +110,9 @@ fn metrics_route_exposes_every_family_and_counts_the_traffic() {
         "hsm_spec_verify_round_seconds",
         "hsm_requests_admitted_total",
         "hsm_requests_finished_total",
+        "hsm_requests_throttled_total",
+        "hsm_queue_depth",
+        "hsm_quota_tokens_charged_total",
         "hsm_tokens_generated_total",
         "hsm_prompt_tokens_total",
         "hsm_prefix_cache_events_total",
